@@ -1,0 +1,96 @@
+//! End-to-end driver (the mandated full-system validation): train a GPT2
+//! transformer with zero-layer progressive training for several hundred
+//! steps on the synthetic Markov-Zipf corpus, against a fixed-size baseline,
+//! and report loss curves, the FLOP ledger, the compute saving, and the
+//! mixing diagnosis. All three layers compose: Pallas flash-attention +
+//! Newton-Schulz kernels (L1) inside the JAX train step (L2), AOT'd to HLO
+//! and dispatched by the rust coordinator (L3) — Python is not running.
+//!
+//! Scale note (DESIGN.md §Substitutions): the testbed is a single CPU core,
+//! so the default model is GPT2-micro (12-layer, d=64). `--wide` selects the
+//! d=128 8-layer variant. The run is recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_progressive_gpt2 -- [--steps N] [--wide]`
+
+use deep_progressive::cli::Args;
+use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::expansion::ExpandSpec;
+use deep_progressive::metrics::mixing_point;
+use deep_progressive::runtime::{Engine, Manifest};
+use deep_progressive::schedule::Schedule;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    // `Args::parse` treats the first token as the command; restore it.
+    let wide = args.command == "--wide" || args.has("wide");
+    let steps = args.get_usize("steps", 400);
+    let (small, large, label) = if wide {
+        ("gpt2w.l0", "gpt2w.l8", "GPT2-wide (d=128, 8-layer)")
+    } else {
+        ("gpt2.l0", "gpt2.l12", "GPT2-micro (d=64, 12-layer)")
+    };
+
+    let t0 = std::time::Instant::now();
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let trainer = Trainer::new(&engine, &manifest, &corpus);
+    let large_entry = manifest.get(large)?;
+    println!("=== e2e progressive training: {label} ===");
+    println!(
+        "target: {} params ({} layers) | corpus: {} train tokens, floor {:.3} nats",
+        large_entry.param_count,
+        large_entry.model.n_layer,
+        corpus.train.len(),
+        corpus.entropy_floor
+    );
+
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.1 };
+    // τ/T defaults to 0.6 at the smoke horizon: the mixing time is a fixed
+    // token count (§C.4), so short horizons need earlier expansion; pass
+    // --tau-frac 0.8 with a longer --steps for the paper's operating point.
+    let tau = (steps as f32 * args.get_f32("tau-frac", 0.6)) as usize;
+
+    let fixed = trainer.run(&RunSpec::fixed("e2e-fixed", large, steps, sched))?;
+    let prog = trainer.run(&RunSpec::progressive(
+        "e2e-progressive",
+        small,
+        large,
+        tau,
+        steps,
+        sched,
+        ExpandSpec::default(),
+    ))?;
+
+    let out = std::path::Path::new("results/e2e");
+    fixed.curve.write_csv(out)?;
+    prog.curve.write_csv(out)?;
+
+    println!("\nloss curves (val):");
+    println!("{:>6} {:>12} {:>12}", "step", "fixed", "progressive");
+    for p in &prog.curve.points {
+        let f = fixed
+            .curve
+            .points
+            .iter()
+            .min_by_key(|q| q.step.abs_diff(p.step))
+            .map(|q| q.val_loss)
+            .unwrap_or(f32::NAN);
+        println!("{:>6} {:>12.4} {:>12.4}", p.step, f, p.val_loss);
+    }
+
+    let gap = (prog.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss;
+    let saving = 1.0 - prog.ledger.total / fixed.ledger.total;
+    let mixed = mixing_point(&prog.curve, &fixed.curve, 0.04, 2);
+    println!("\n=== summary ===");
+    println!("fixed:       val {:.4} | {:.3e} FLOPs", fixed.final_val_loss, fixed.ledger.total);
+    println!("progressive: val {:.4} | {:.3e} FLOPs", prog.final_val_loss, prog.ledger.total);
+    println!("final-loss gap: {:+.2}% (paper: <0.5%)", gap * 100.0);
+    println!("compute saving: {:.0}% (paper: ≈80% at 60× depth ratio; depth ratio here {}×)",
+             saving * 100.0, large_entry.model.n_layer.max(1));
+    println!("mixing point: {:?} tokens", mixed);
+    println!("ledger stages: {:?}", prog.ledger.stages.iter().map(|(c, s, _)| format!("{c}×{s}")).collect::<Vec<_>>());
+    println!("wall time: {:.1}s (curves in results/e2e/)", t0.elapsed().as_secs_f32());
+    Ok(())
+}

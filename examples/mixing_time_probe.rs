@@ -1,0 +1,56 @@
+//! The paper's production recipe, step 4 (§7): pick the expansion timing τ
+//! for a long run from two *early-stopped* small probes — one fixed-size,
+//! one progressive expanding at the end of warmup — stopped when they mix.
+//!
+//! Under WSD, the mixing time transfers across τ within the stable phase
+//! (Takeaway 6), so τ = stable_end − t_mix.
+//!
+//! Run: `cargo run --release --example mixing_time_probe -- [--probe-steps N]`
+
+use deep_progressive::cli::Args;
+use deep_progressive::coordinator::{recipe, Trainer};
+use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::expansion::ExpandSpec;
+use deep_progressive::runtime::{Engine, Manifest};
+use deep_progressive::schedule::Schedule;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let probe_steps = args.get_usize("probe-steps", 300);
+    let production_steps = args.get_usize("production-steps", 4000);
+
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let trainer = Trainer::new(&engine, &manifest, &corpus);
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.1 };
+
+    println!("probing mixing time: gpt2.l0 → gpt2.l6, {probe_steps}-step probes");
+    let outcome = recipe::probe_mixing_time(
+        &trainer,
+        "gpt2.l0",
+        "gpt2.l6",
+        probe_steps,
+        production_steps,
+        sched,
+        ExpandSpec::default(),
+        0.04,
+    )?;
+
+    match outcome.t_mix_tokens {
+        Some(tokens) => {
+            println!("mixing time: {} tokens (≈{} steps post-expansion)",
+                     tokens, outcome.t_mix_steps.unwrap_or(0));
+            let tau = outcome.suggested_tau.unwrap();
+            println!(
+                "production horizon {production_steps} steps, WSD stable phase ends at {} \
+                 ⇒ expand at τ = {} ({:.0}% of training)",
+                sched.stable_end(production_steps),
+                tau,
+                tau as f32 / production_steps as f32 * 100.0
+            );
+        }
+        None => println!("probes did not mix within {probe_steps} steps — lengthen the probe"),
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts + manifest.json for Rust (L3).
+
+HLO *text* is the interchange format, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact functions per config (all shapes static; batch/seq from the config):
+
+  train        [*params, *opt, x i32[B,S], y i32[B,S], lr f32] -> (*params', *opt', loss)
+  train_chunk  [*params, *opt, xs i32[K,B,S], ys, lrs f32[K]] -> (*params', *opt', losses f32[K])
+               (lax.scan over K micro-steps — the L3 hot-path dispatch unit;
+               amortizes the per-call host<->device literal round-trip K-fold)
+  eval         [*params, x, y] -> (loss,)
+  probe        [*params, x, y] -> (loss, group_grad_norms, act_scales)
+               (Table 1's trainability / feature-learning measurements)
+
+Python runs exactly once per bundle: ``make artifacts`` is a no-op when the
+outputs are newer than this package.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import ArtifactSpec, ModelConfig, OptConfig, default_bundle
+from .model import build_params, eval_loss_fn, forward, loss_fn
+from .optimizers import apply_update, init_opt_state, opt_state_specs
+from .params import ParamSet
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_specs(cfg: ModelConfig, ps: ParamSet, opt: OptConfig):
+    p_specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in ps.specs]
+    o_specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+               for _, shape in opt_state_specs(ps, opt)]
+    if cfg.family == "resnet":
+        x = jax.ShapeDtypeStruct((cfg.batch, cfg.image_size, cfg.image_size, 3), jnp.float32)
+        y = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        y = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    return p_specs, o_specs, x, y
+
+
+def make_train(cfg: ModelConfig, opt: OptConfig, ps: ParamSet):
+    names = [s.name for s in ps.specs]
+    os_names = [n for n, _ in opt_state_specs(ps, opt)]
+    specs = ps.by_name()
+    lf = loss_fn(cfg)
+
+    def step(*args):
+        np_, no = len(names), len(os_names)
+        params = dict(zip(names, args[:np_]))
+        state = dict(zip(os_names, args[np_:np_ + no]))
+        x, y, lr = args[np_ + no:]
+        loss, grads = jax.value_and_grad(lf)(params, x, y)
+        new_p, new_s = apply_update(cfg, opt, specs, params, grads, state, lr)
+        return tuple(new_p[n] for n in names) + tuple(new_s[n] for n in os_names) + (loss,)
+
+    return step
+
+
+def make_train_chunk(cfg: ModelConfig, opt: OptConfig, ps: ParamSet, k: int):
+    names = [s.name for s in ps.specs]
+    os_names = [n for n, _ in opt_state_specs(ps, opt)]
+    specs = ps.by_name()
+    lf = loss_fn(cfg)
+
+    def chunk(*args):
+        np_, no = len(names), len(os_names)
+        params = dict(zip(names, args[:np_]))
+        state = dict(zip(os_names, args[np_:np_ + no]))
+        xs, ys, lrs = args[np_ + no:]
+
+        def body(carry, inp):
+            p, s = carry
+            x, y, lr = inp
+            loss, grads = jax.value_and_grad(lf)(p, x, y)
+            new_p, new_s = apply_update(cfg, opt, specs, p, grads, s, lr)
+            return (new_p, new_s), loss
+
+        (params, state), losses = jax.lax.scan(body, (params, state), (xs, ys, lrs))
+        return tuple(params[n] for n in names) + tuple(state[n] for n in os_names) + (losses,)
+
+    return chunk
+
+
+def make_eval(cfg: ModelConfig, ps: ParamSet):
+    names = [s.name for s in ps.specs]
+    lf = eval_loss_fn(cfg)
+
+    def ev(*args):
+        params = dict(zip(names, args[:len(names)]))
+        x, y = args[len(names):]
+        return (lf(params, x, y),)
+
+    return ev
+
+
+def param_groups(ps: ParamSet) -> List[str]:
+    """Expansion/probe grouping: embed, each layer, tail (norm+head)."""
+    groups = []
+    for s in ps.specs:
+        g = ("layer." + s.name.split(".")[1]) if s.name.startswith("layer.") else (
+            "embed" if s.name.startswith("embed.") else "tail")
+        if g not in groups:
+            groups.append(g)
+    return groups
+
+
+def make_probe(cfg: ModelConfig, ps: ParamSet):
+    """Loss + per-group grad norms + per-layer activation RMS (Table 1)."""
+    names = [s.name for s in ps.specs]
+    groups = param_groups(ps)
+
+    def pr(*args):
+        params = dict(zip(names, args[:len(names)]))
+        x, y = args[len(names):]
+
+        def lf(p):
+            logits, aux, act = forward(p, cfg, x, collect_act=True)
+            from .model import cross_entropy
+            return cross_entropy(logits, y) + aux, act
+
+        (loss, act), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        gnorms = []
+        for g in groups:
+            sq = 0.0
+            for s in ps.specs:
+                member = (s.name.startswith("embed.") and g == "embed") or \
+                         (s.name.startswith("layer.") and g == "layer." + s.name.split(".")[1]) or \
+                         (not s.name.startswith(("embed.", "layer.")) and g == "tail")
+                if member:
+                    sq = sq + (grads[s.name].astype(jnp.float32) ** 2).sum()
+            gnorms.append(jnp.sqrt(sq))
+        return loss, jnp.stack(gnorms), act
+
+    return pr
+
+
+def count_params(cfg: ModelConfig, ps: ParamSet):
+    total = sum(int(jnp.prod(jnp.asarray(s.shape))) if s.shape else 1 for s in ps.specs)
+    active = total
+    if cfg.moe is not None:
+        expert = 0
+        for s in ps.specs:
+            if len(s.shape) == 3 and s.shape[0] == cfg.moe.n_experts:
+                expert += int(jnp.prod(jnp.asarray(s.shape)))
+        active = total - expert + expert * cfg.moe.top_k // cfg.moe.n_experts
+    return total, active
+
+
+def lower_spec(spec: ArtifactSpec, out_dir: str, force: bool = False) -> Dict:
+    cfg, opt = spec.model, spec.opt
+    ps = build_params(cfg)
+    p_specs, o_specs, x, y = _shape_specs(cfg, ps, opt)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    total, active = count_params(cfg, ps)
+
+    entry = {
+        "cfg_id": spec.cfg_id,
+        "model": dataclasses.asdict(cfg),
+        "opt": dataclasses.asdict(opt),
+        "params": [dataclasses.asdict(s) for s in ps.specs],
+        "opt_state": [{"name": n, "shape": list(shape)} for n, shape in opt_state_specs(ps, opt)],
+        "param_count": total,
+        "active_param_count": active,
+        "chunk": spec.chunk,
+        "groups": param_groups(ps),
+        "artifacts": {},
+    }
+
+    def emit(fn_name, fn, shapes):
+        path = f"{spec.cfg_id}.{fn_name}.hlo.txt"
+        full = os.path.join(out_dir, path)
+        entry["artifacts"][fn_name] = path
+        if os.path.exists(full) and not force:
+            return
+        text = to_hlo_text(jax.jit(fn).lower(*shapes))
+        with open(full, "w") as f:
+            f.write(text)
+        print(f"  {path}: {len(text) / 1e6:.2f} MB")
+
+    base = p_specs + o_specs
+    if "train" in spec.fns:
+        emit("train", make_train(cfg, opt, ps), base + [x, y, lr])
+        k = spec.chunk
+        xs = jax.ShapeDtypeStruct((k,) + tuple(x.shape), x.dtype)
+        ys = jax.ShapeDtypeStruct((k,) + tuple(y.shape), y.dtype)
+        lrs = jax.ShapeDtypeStruct((k,), jnp.float32)
+        emit(f"train_chunk{k}", make_train_chunk(cfg, opt, ps, k), base + [xs, ys, lrs])
+    if "eval" in spec.fns:
+        emit("eval", make_eval(cfg, ps), p_specs + [x, y])
+    if spec.probe and cfg.family != "resnet":
+        emit("probe", make_probe(cfg, ps), p_specs + [x, y])
+    return entry
+
+
+def build_bundle(out_dir: str, only: str = "", force: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"configs": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    bundle = [s for s in default_bundle() if s.cfg_id.startswith(only)]
+    for i, spec in enumerate(bundle):
+        print(f"[{i + 1}/{len(bundle)}] {spec.cfg_id}")
+        manifest["configs"][spec.cfg_id] = lower_spec(spec, out_dir, force=force)
+        # Persist incrementally: lowering is the slow step, keep progress.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['configs'])} configs)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--only", default="", help="cfg_id prefix filter")
+    ap.add_argument("--force", action="store_true", help="re-lower existing artifacts")
+    ap.add_argument("--list", action="store_true", help="list bundle and exit")
+    args = ap.parse_args()
+    if args.list:
+        for s in default_bundle():
+            print(s.cfg_id, s.fns, "probe" if s.probe else "")
+        return
+    build_bundle(args.out, only=args.only, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Model / optimizer / artifact-bundle configuration (build-time).
+
+Every experiment in the paper sweeps some subset of: architecture design
+axes (§2), depth, optimizer, and schedule. Schedules live in Rust (L3); this
+module owns everything that must be known at trace time: model dims, design
+axes, optimizer kind, batch/sequence shape, and which artifacts to emit.
+
+The bundle lowered by ``aot.py`` is driven by ``default_bundle()`` below;
+each entry becomes ``artifacts/<id>.<fn>.hlo.txt`` plus a manifest record
+that the Rust coordinator reads (parameter layout, init specs, FLOP
+metadata). Config ids are the join key between L3 run specs and artifacts.
+"""
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (token-choice top-k routing)."""
+    n_experts: int = 4
+    top_k: int = 2
+    aux_coef: float = 0.01  # load-balance auxiliary loss coefficient
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One transformer (or ResNet) variant.
+
+    The design axes mirror §2 of the paper: weight tying, sparsity,
+    attention (mha/gqa/mla), position embedding (abs/rope), normalization
+    (layernorm/rmsnorm), activation (gelu/swiglu).
+    """
+    family: str            # gpt2 | llama3 | qwen3 | deepseekv3 | mixtral | resnet
+    n_layer: int
+    d_model: int = 64
+    n_head: int = 4
+    n_kv_head: Optional[int] = None   # None => = n_head (MHA)
+    d_ff: Optional[int] = None        # None => 4*d_model (gelu) or 8/3 rounded (swiglu)
+    vocab: int = 512
+    seq_len: int = 64
+    batch: int = 8
+    tie_embeddings: bool = True
+    attention: str = "mha"            # mha | gqa | mla
+    pos_embed: str = "abs"            # abs | rope
+    norm: str = "layernorm"           # layernorm | rmsnorm
+    activation: str = "gelu"          # gelu | swiglu
+    moe: Optional[MoEConfig] = None
+    mla_d_c: Optional[int] = None     # MLA KV compression dim (deepseekv3)
+    kernels: str = "pallas"           # pallas | ref (numerically identical; ref lowers faster)
+    # ResNet only:
+    stages: Optional[Tuple[int, ...]] = None  # blocks per stage
+    widths: Tuple[int, ...] = (16, 32, 64, 128)
+    image_size: int = 32
+    n_classes: int = 10
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_head if self.n_kv_head is not None else self.n_head
+
+    @property
+    def ff_dim(self) -> int:
+        if self.d_ff is not None:
+            return self.d_ff
+        if self.activation == "swiglu":
+            # 8/3 * d rounded to a multiple of 16, the LLAMA convention.
+            return max(16, int(round(self.d_model * 8 / 3 / 16)) * 16)
+        return 4 * self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    """In-graph optimizer settings. LR and schedule are runtime inputs (L3)."""
+    kind: str = "muon_nsgd"   # muon_nsgd | adamw | sgd | nsgd
+    momentum: float = 0.95
+    beta1: float = 0.9        # adamw
+    beta2: float = 0.95       # adamw
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    ns_steps: int = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """One artifact bundle entry: a (model, optimizer) pair and which
+    functions to lower. ``train_chunk`` emits a fused K-step artifact
+    (lax.scan over K micro-steps; the L3 hot-path dispatch unit)."""
+    cfg_id: str
+    model: ModelConfig
+    opt: OptConfig = OptConfig()
+    fns: Tuple[str, ...] = ("train", "eval")
+    chunk: int = 8            # K for the fused train artifact
+    probe: bool = False       # emit grad-norm/activation-scale probe (Table 1)
+
+
+# ---------------------------------------------------------------------------
+# Family presets (micro-scaled: the testbed is a single-core CPU PJRT; the
+# design axes and depth topology match the paper, dims are scaled — see
+# DESIGN.md §Substitutions).
+# ---------------------------------------------------------------------------
+
+def gpt2(n_layer: int, d_model: int = 64, n_head: int = 4, **kw) -> ModelConfig:
+    """GPT2: dense, MHA, absolute pos, LayerNorm, GeLU, tied embeddings."""
+    return ModelConfig(family="gpt2", n_layer=n_layer, d_model=d_model, n_head=n_head,
+                       attention="mha", pos_embed="abs", norm="layernorm",
+                       activation="gelu", tie_embeddings=True, **kw)
+
+
+def llama3(n_layer: int, d_model: int = 64, n_head: int = 4, **kw) -> ModelConfig:
+    """LLAMA3: dense, GQA, RoPE, RMSNorm, SwiGLU, untied."""
+    return ModelConfig(family="llama3", n_layer=n_layer, d_model=d_model, n_head=n_head,
+                       n_kv_head=max(1, n_head // 2), attention="gqa", pos_embed="rope",
+                       norm="rmsnorm", activation="swiglu", tie_embeddings=False, **kw)
+
+
+def qwen3(n_layer: int, d_model: int = 64, n_head: int = 4, **kw) -> ModelConfig:
+    """Qwen3: dense, GQA, RoPE, RMSNorm, SwiGLU, tied embeddings."""
+    return ModelConfig(family="qwen3", n_layer=n_layer, d_model=d_model, n_head=n_head,
+                       n_kv_head=max(1, n_head // 2), attention="gqa", pos_embed="rope",
+                       norm="rmsnorm", activation="swiglu", tie_embeddings=True, **kw)
+
+
+def deepseekv3(n_layer: int, d_model: int = 64, n_head: int = 4, **kw) -> ModelConfig:
+    """DeepSeekV3: MoE, MLA, RoPE, RMSNorm, SwiGLU, untied."""
+    return ModelConfig(family="deepseekv3", n_layer=n_layer, d_model=d_model, n_head=n_head,
+                       n_kv_head=max(1, n_head // 2), attention="mla", pos_embed="rope",
+                       norm="rmsnorm", activation="swiglu", tie_embeddings=False,
+                       moe=MoEConfig(n_experts=4, top_k=2), mla_d_c=d_model // 2, **kw)
+
+
+def mixtral(n_layer: int, d_model: int = 64, n_head: int = 4, **kw) -> ModelConfig:
+    """Mixtral: MoE, GQA, RoPE, RMSNorm, SwiGLU, untied."""
+    return ModelConfig(family="mixtral", n_layer=n_layer, d_model=d_model, n_head=n_head,
+                       n_kv_head=max(1, n_head // 2), attention="gqa", pos_embed="rope",
+                       norm="rmsnorm", activation="swiglu", tie_embeddings=False,
+                       moe=MoEConfig(n_experts=4, top_k=2), **kw)
+
+
+def resnet(stages: Tuple[int, ...], **kw) -> ModelConfig:
+    """Stage-structured ResNet on synthetic 32x32 images.
+
+    Paper footnote 1: zero-layer analogue = [1,1,1,1] (ResNet14), one-layer
+    analogue = [2,2,2,2] (ResNet26); target [3,4,6,3] (ResNet50).
+    """
+    return ModelConfig(family="resnet", n_layer=sum(stages), stages=stages,
+                       batch=kw.pop("batch", 16), **kw)
+
+
+def default_bundle() -> Tuple[ArtifactSpec, ...]:
+    """The artifact set `make artifacts` lowers; covers every bench target.
+
+    Depth grid for GPT2-micro is the reproduction's workhorse (Figs 1, 4-11,
+    13-22 all draw from it); the other families back Figs 2, 3, 12.
+    ``kernels="pallas"`` on the GPT2 line keeps the L1 kernels on the real
+    training path; other families use the (test-identical) ref path to bound
+    lowering time.
+    """
+    specs = []
+    # GPT2-micro depth family (sources and targets share dims => expansion valid).
+    for n in (0, 1, 2, 3, 6, 12):
+        specs.append(ArtifactSpec(
+            cfg_id=f"gpt2.l{n}", model=gpt2(n),
+            fns=("train", "eval"), probe=(n in (0, 1, 12))))
+    # Wider GPT2 for scaling/e2e (Fig 1 "larger model" analogue).
+    for n in (0, 1, 8):
+        specs.append(ArtifactSpec(cfg_id=f"gpt2w.l{n}", model=gpt2(n, d_model=128, n_head=8)))
+    # Alternate optimizers on the gpt2-micro line (Figs 18, 19).
+    for okind in ("adamw", "sgd", "nsgd"):
+        for n in (0, 1, 12):
+            specs.append(ArtifactSpec(
+                cfg_id=f"gpt2.l{n}.{okind}", model=gpt2(n),
+                opt=OptConfig(kind=okind), fns=("train", "eval")))
+    # Architecture families (Figs 2, 3, 12): zero/one-layer sources + 4-layer target.
+    for name, mk in (("llama3", llama3), ("qwen3", qwen3),
+                     ("deepseekv3", deepseekv3), ("mixtral", mixtral)):
+        for n in (0, 1, 4):
+            specs.append(ArtifactSpec(
+                cfg_id=f"{name}.l{n}", model=mk(n, kernels="ref"),
+                fns=("train", "eval")))
+    # LLAMA3 + DeepSeekV3 size sweep for the scaling laws (Fig 2).
+    for i, d in enumerate((32, 64, 96)):
+        specs.append(ArtifactSpec(cfg_id=f"llama3.s{i}.l0", model=llama3(0, d_model=d, n_head=max(2, d // 16), kernels="ref")))
+        specs.append(ArtifactSpec(cfg_id=f"llama3.s{i}.l4", model=llama3(4, d_model=d, n_head=max(2, d // 16), kernels="ref")))
+        specs.append(ArtifactSpec(cfg_id=f"deepseekv3.s{i}.l0", model=deepseekv3(0, d_model=d, n_head=max(2, d // 16), kernels="ref")))
+        specs.append(ArtifactSpec(cfg_id=f"deepseekv3.s{i}.l4", model=deepseekv3(4, d_model=d, n_head=max(2, d // 16), kernels="ref")))
+    # ResNet stage family (Fig 7's vision panel, §A.3 intermittent insertion).
+    for sid, st in (("r14", (1, 1, 1, 1)), ("r26", (2, 2, 2, 2)), ("r50", (3, 4, 6, 3))):
+        specs.append(ArtifactSpec(cfg_id=f"resnet.{sid}", model=resnet(st, kernels="ref")))
+    return tuple(specs)

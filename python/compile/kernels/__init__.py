@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp oracles."""
+from .flash_attention import flash_attention
+from .newton_schulz import newton_schulz
+from .ref import attention_ref, newton_schulz_ref, NS_COEFFS, NS_STEPS

@@ -1,0 +1,282 @@
+"""L1 Pallas kernel: blocked causal flash attention (online softmax).
+
+TPU adaptation of the paper's GPU training stack (see DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging K/V tiles through
+shared memory, the HBM↔VMEM schedule is expressed with a Pallas grid +
+BlockSpec. The grid iterates (batch*heads, q_blocks); each program holds one
+``(block_q, d)`` query tile plus the running online-softmax state
+``(m, l, acc)`` in registers/VMEM while it marches over K/V tiles of shape
+``(block_k, d)``.
+
+VMEM budget per program (f32):
+    q tile        block_q * d * 4
+    k/v tiles     2 * block_k * d * 4
+    m, l, acc     block_q * (2 + d) * 4
+With the default block_q = block_k = 64 and d = 64 this is ~100 KiB, far
+inside a TPU core's ~16 MiB VMEM; on real hardware block sizes would be
+raised to 128/256 to feed the 128x128 MXU (the utilization model lives in
+EXPERIMENTS.md §Perf).
+
+Lowered with ``interpret=True`` — mandatory for CPU PJRT execution; the
+interpret path lowers to plain HLO (fori_loop over K/V tiles), which is what
+ends up in the AOT artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+# Pallas kernels (even in interpret mode) define no automatic VJP, so the
+# public entry point is a jax.custom_vjp whose forward emits the logsumexp
+# residual and whose backward is a second pair of Pallas kernels (dq; dk/dv)
+# that recompute the probabilities tile-by-tile — the standard
+# FlashAttention-2 backward, restated as a VMEM BlockSpec schedule.
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int, causal: bool, scale: float):
+    """One (batch*head, q_block) program of the flash-attention grid.
+
+    q_ref: [block_q, d] query tile.
+    k_ref/v_ref: [S, d] — the full K/V for this head; tiles of ``block_k``
+      rows are sliced inside the loop (the BlockSpec keeps the head resident,
+      the loop expresses the VMEM tile schedule).
+    o_ref: [block_q, d] output tile.
+    """
+    block_q, d = q_ref.shape
+    seq_len = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_block_idx = pl.program_id(1)
+    q_offset = q_block_idx * block_q
+
+    num_k_blocks = pl.cdiv(seq_len, block_k)
+    if causal:
+        # Causal: key block j is only needed while j*block_k <= q_offset+block_q-1.
+        num_k_blocks_live = pl.cdiv(q_offset + block_q, block_k)
+    else:
+        num_k_blocks_live = num_k_blocks
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_off = j * block_k
+        k = lax.dynamic_slice_in_dim(k_ref[...], k_off, block_k, axis=0).astype(jnp.float32)
+        v = lax.dynamic_slice_in_dim(v_ref[...], k_off, block_k, axis=0).astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k]
+        if causal:
+            q_ids = q_offset + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_ids = k_off + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m_i = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = lax.fori_loop(0, num_k_blocks_live, body, (acc, m_i, l_i))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                         *, block_k: int, causal: bool, scale: float):
+    """dq tile: grid (batch*head, q_block); marches over K/V tiles.
+
+    ds = p * (do @ v^T - delta);  dq = scale * ds @ k   (recomputed p from lse).
+    """
+    block_q, d = q_ref.shape
+    seq_len = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    q_offset = pl.program_id(1) * block_q
+    num_live = pl.cdiv(q_offset + block_q, block_k) if causal else pl.cdiv(seq_len, block_k)
+
+    def body(j, dq):
+        k_off = j * block_k
+        k = lax.dynamic_slice_in_dim(k_ref[...], k_off, block_k, axis=0).astype(jnp.float32)
+        v = lax.dynamic_slice_in_dim(v_ref[...], k_off, block_k, axis=0).astype(jnp.float32)
+        s = (q @ k.T) * scale
+        if causal:
+            q_ids = q_offset + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_ids = k_off + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + scale * (ds @ k)
+
+    dq = lax.fori_loop(0, num_live, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, *, block_q: int, causal: bool, scale: float):
+    """dk/dv tile: grid (batch*head, k_block); marches over Q tiles.
+
+    dv = p^T @ do;  dk = scale * ds^T @ q."""
+    block_k, d = k_ref.shape
+    seq_len = q_ref.shape[0]
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    k_offset = pl.program_id(1) * block_k
+    num_q_blocks = pl.cdiv(seq_len, block_q)
+    # Causal: q block i only attends to k rows <= its last query; k tile j is
+    # touched by q blocks with i*block_q + block_q - 1 >= k_offset.
+    first_live = (k_offset // block_q) if causal else 0
+
+    def body(i, carry):
+        dk, dv = carry
+        q_off = i * block_q
+        q = lax.dynamic_slice_in_dim(q_ref[...], q_off, block_q, axis=0).astype(jnp.float32)
+        do = lax.dynamic_slice_in_dim(do_ref[...], q_off, block_q, axis=0).astype(jnp.float32)
+        lse = lax.dynamic_slice_in_dim(lse_ref[...], q_off, block_q, axis=0)
+        delta = lax.dynamic_slice_in_dim(delta_ref[...], q_off, block_q, axis=0)
+        s = (q @ k.T) * scale
+        if causal:
+            q_ids = q_off + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_ids = k_offset + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk = dk + scale * (ds.T @ q)
+        return dk, dv
+
+    init = (jnp.zeros((block_k, d), jnp.float32), jnp.zeros((block_k, d), jnp.float32))
+    dk, dv = lax.fori_loop(first_live, num_q_blocks, body, init)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_impl(q, k, v, causal, block_q, block_k, interpret):
+    bh, s, d = q.shape
+    grid = (bh, s // block_q)
+    kernel = functools.partial(_flash_attention_kernel, block_k=block_k,
+                               causal=causal, scale=1.0 / (d ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh_, i: (bh_, i, 0)),
+            pl.BlockSpec((None, s, d), lambda bh_, i: (bh_, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh_, i: (bh_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh_, i: (bh_, i, 0)),
+            pl.BlockSpec((None, block_q), lambda bh_, i: (bh_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _bwd_impl(q, k, v, o, do, lse, causal, block_q, block_k, interpret):
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(axis=-1)  # [bh, s]
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, block_k=block_k, causal=causal, scale=scale),
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((None, block_q), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, block_q=block_q, causal=causal, scale=scale),
+        grid=(bh, s // block_k),
+        in_specs=[
+            pl.BlockSpec((None, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, s), lambda b, j: (b, 0)),
+            pl.BlockSpec((None, s), lambda b, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(q, k, v, causal, block_q, block_k, interpret):
+    o, _ = _fwd_impl(q, k, v, causal, block_q, block_k, interpret)
+    return o
+
+
+def _flash_core_fwd(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _fwd_impl(q, k, v, causal, block_q, block_k, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_core_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    return _bwd_impl(q, k, v, o, do, lse, causal, block_q, block_k, interpret)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """Blocked causal attention via Pallas, differentiable (custom VJP).
+
+    Args:
+      q: [B, H, S, D]; k, v: [B, Hkv, S, D] with Hkv | H (GQA broadcast done
+        here — jnp.repeat is differentiable, so head-grouped dk/dv gradients
+        sum correctly outside the kernel).
+      causal: apply a causal mask.
+      block_q/block_k: VMEM tile sizes (clamped to S).
+      interpret: must stay True for CPU-PJRT artifacts (see module doc).
+
+    Returns: [B, H, S, D] attention output, dtype of q.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(f"seq_len {s} must be divisible by block sizes ({block_q},{block_k})")
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = _flash_core(qf, kf, vf, causal, block_q, block_k, interpret)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused Newton-Schulz orthogonalization (Muon hot-spot).
+
+The Muon optimizer orthogonalizes each 2D momentum matrix with a quintic
+Newton-Schulz iteration — on the paper's GPU testbed this is a chain of
+cuBLAS GEMMs with the iterate bouncing through HBM. The TPU rethink (DESIGN.md
+§Hardware-Adaptation) fuses all ``steps`` iterations into a single kernel so
+the iterate X stays in VMEM end-to-end: for a hidden layer of width n, X is
+[n, n] f32 = 4n² bytes; with the Gram matrix and polynomial temporary, the
+working set is ~3·4n², i.e. a 1024-wide layer fits in ~12 MiB VMEM — inside
+one core's budget, so the kernel needs no HBM round-trips between iterations.
+Every FLOP inside is an MXU-shaped [n,n]x[n,n] matmul.
+
+Larger-than-VMEM matrices would tile the Gram/polynomial products with an
+outer BlockSpec grid; at the paper's model widths (≤ 2048 with f32) the
+single-block fused form is the right schedule and is what we ship.
+
+Lowered with ``interpret=True`` (CPU PJRT; plain-HLO lowering).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NS_COEFFS, NS_STEPS
+
+
+def _newton_schulz_kernel(g_ref, o_ref, *, steps: int, eps: float):
+    """Single-program fused NS iteration; requires rows <= cols (arranged by wrapper)."""
+    a, b, c = NS_COEFFS
+    x = g_ref[...].astype(jnp.float32)
+    # Frobenius normalization puts all singular values in (0, 1], the basin
+    # of the quintic iteration.
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    for _ in range(steps):
+        gram = x @ x.T                       # [m, m] — stays in VMEM
+        poly = b * gram + c * (gram @ gram)  # quintic polynomial in the Gram
+        x = a * x + poly @ x
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def newton_schulz(g, *, steps: int = NS_STEPS, eps: float = 1e-7, interpret: bool = True):
+    """Fused Newton-Schulz orthogonalization of a 2D matrix.
+
+    Matches ``ref.newton_schulz_ref`` within f32 tolerance (pytest enforced).
+
+    Args:
+      g: [M, N] matrix (any float dtype; computed in f32).
+      steps: NS iterations (5 = Muon default).
+      eps: normalization floor.
+      interpret: must stay True for CPU-PJRT artifacts.
+
+    Returns: [M, N] float32 approximately semi-orthogonal matrix.
+    """
+    if g.ndim != 2:
+        raise ValueError(f"newton_schulz expects 2D, got {g.shape}")
+    m, n = g.shape
+    transpose = m > n
+    x = g.T if transpose else g
+    kernel = functools.partial(_newton_schulz_kernel, steps=steps, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out.T if transpose else out

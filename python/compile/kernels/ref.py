@@ -1,0 +1,72 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+These are the ground-truth implementations that the Pallas kernels in
+``flash_attention.py`` and ``newton_schulz.py`` must match within float32
+tolerance. They are also usable as a drop-in fast path when lowering
+artifacts for architectures where the Pallas interpret-mode HLO would blow up
+compile time (config flag ``kernels="ref"``) — numerics are identical by test.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q: [B, H, S, D] queries.
+      k: [B, Hkv, S, D] keys (Hkv divides H for GQA; broadcast if Hkv < H).
+      v: [B, Hkv, S, D] values.
+      causal: apply a causal mask.
+
+    Returns:
+      [B, H, S, D] attention output, same dtype as q.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# Muon's quintic Newton-Schulz coefficients (Jordan et al., 2024). The
+# iteration X <- a X + b (XX^T) X + c (XX^T)^2 X drives the singular values
+# of X toward 1 without needing an SVD; 5 steps suffice at these coefficients.
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+
+
+def newton_schulz_ref(g, steps: int = NS_STEPS, eps: float = 1e-7):
+    """Reference Newton-Schulz orthogonalization (the Muon hot-spot).
+
+    Args:
+      g: [M, N] gradient/momentum matrix.
+      steps: number of NS iterations.
+      eps: normalization floor.
+
+    Returns:
+      [M, N] approximately semi-orthogonal matrix, float32.
+    """
+    a, b, c = NS_COEFFS
+    x = g.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    if transpose:
+        x = x.T
+    return x

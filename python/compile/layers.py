@@ -1,0 +1,198 @@
+"""L2 building blocks: norms, activations, RoPE, attention variants, MLP/MoE.
+
+All functions are pure and operate on a flat ``dict[str, array]`` of
+parameters addressed by name prefix (see ``params.py``). Covering the
+paper's §2 design axes: layernorm/rmsnorm, gelu/swiglu, abs/rope,
+mha/gqa/mla, dense/MoE.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import flash_attention, attention_ref
+from .params import ParamSet
+
+
+# ---------------------------------------------------------------------- norms
+
+def build_norm(ps: ParamSet, cfg: ModelConfig, prefix: str) -> None:
+    ps.ones(f"{prefix}.g", (cfg.d_model,))
+    if cfg.norm == "layernorm":
+        ps.zeros(f"{prefix}.b", (cfg.d_model,))
+
+
+def apply_norm(p: Dict, cfg: ModelConfig, prefix: str, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(axis=-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+        y = (xf - mu) / jnp.sqrt(var + 1e-5)
+        return y * p[f"{prefix}.g"] + p[f"{prefix}.b"]
+    # rmsnorm
+    ms = (xf ** 2).mean(axis=-1, keepdims=True)
+    return xf / jnp.sqrt(ms + 1e-5) * p[f"{prefix}.g"]
+
+
+# ----------------------------------------------------------------- activation
+
+def activation(cfg: ModelConfig, x):
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x)
+    raise AssertionError("swiglu is applied inside mlp (gated)")
+
+
+# ----------------------------------------------------------------------- rope
+
+def rope_cache(seq_len: int, head_dim: int, base: float = 10000.0):
+    half = head_dim // 2
+    inv = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)                      # [S, half]
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, S, D]; rotate-half RoPE."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ------------------------------------------------------------------ attention
+
+def build_attention(ps: ParamSet, cfg: ModelConfig, prefix: str) -> None:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, hkv = cfg.n_head, cfg.kv_heads
+    ps.matrix(f"{prefix}.wq", d, h * hd)
+    if cfg.attention == "mla":
+        # Multi-head latent attention: KV compressed through a d_c bottleneck.
+        d_c = cfg.mla_d_c or d // 2
+        ps.matrix(f"{prefix}.wdkv", d, d_c)
+        ps.matrix(f"{prefix}.wuk", d_c, h * hd)
+        ps.matrix(f"{prefix}.wuv", d_c, h * hd)
+    else:
+        ps.matrix(f"{prefix}.wk", d, hkv * hd)
+        ps.matrix(f"{prefix}.wv", d, hkv * hd)
+    ps.matrix(f"{prefix}.wo", h * hd, d)
+
+
+def apply_attention(p: Dict, cfg: ModelConfig, prefix: str, x, rope):
+    """x: [B, S, D] -> [B, S, D]. Causal self-attention (mha/gqa/mla)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+
+    def split(t, nh):
+        return t.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q = split(x @ p[f"{prefix}.wq"], h)
+    if cfg.attention == "mla":
+        c = x @ p[f"{prefix}.wdkv"]
+        k = split(c @ p[f"{prefix}.wuk"], h)
+        v = split(c @ p[f"{prefix}.wuv"], h)
+        # Simplification vs DeepSeekV3's decoupled-RoPE: rope is applied to
+        # the full up-projected key (documented in DESIGN.md).
+        hkv = h
+    else:
+        hkv = cfg.kv_heads
+        k = split(x @ p[f"{prefix}.wk"], hkv)
+        v = split(x @ p[f"{prefix}.wv"], hkv)
+    if cfg.pos_embed == "rope":
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if cfg.kernels == "pallas":
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        o = attention_ref(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ p[f"{prefix}.wo"]
+
+
+# -------------------------------------------------------------------- mlp/moe
+
+def build_mlp(ps: ParamSet, cfg: ModelConfig, prefix: str) -> None:
+    d, ff = cfg.d_model, cfg.ff_dim
+    if cfg.moe is not None:
+        e = cfg.moe.n_experts
+        std1 = 1.0 / jnp.sqrt(d).item()
+        std2 = 1.0 / jnp.sqrt(ff).item()
+        ps.matrix(f"{prefix}.router", d, e)
+        ps.tensor(f"{prefix}.w1", (e, d, ff), std1)
+        if cfg.activation == "swiglu":
+            ps.tensor(f"{prefix}.w3", (e, d, ff), std1)
+        ps.tensor(f"{prefix}.w2", (e, ff, d), std2)
+        return
+    ps.matrix(f"{prefix}.w1", d, ff)
+    if cfg.activation == "swiglu":
+        ps.matrix(f"{prefix}.w3", d, ff)
+    ps.matrix(f"{prefix}.w2", ff, d)
+
+
+def _ffn(cfg: ModelConfig, x, w1, w2, w3):
+    if cfg.activation == "swiglu":
+        return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def apply_mlp(p: Dict, cfg: ModelConfig, prefix: str, x):
+    """x: [B, S, D] -> (y, aux_loss). Dense FFN or token-choice top-k MoE.
+
+    MoE uses the dense-compute formulation: every expert runs on every token
+    and a top-k-masked renormalized gate mixes them. Loss dynamics are
+    identical to sparse dispatch (same function); the FLOP ledger on the Rust
+    side counts *active* parameters only (DESIGN.md §Substitutions).
+    """
+    if cfg.moe is None:
+        w3 = p.get(f"{prefix}.w3")
+        return _ffn(cfg, x, p[f"{prefix}.w1"], p[f"{prefix}.w2"], w3), 0.0
+    moe = cfg.moe
+    logits = x @ p[f"{prefix}.router"]                  # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    # Top-k threshold via iterative max (k is tiny). NOT lax.top_k: jax
+    # lowers that to a `topk(..., largest=true)` HLO attribute the image's
+    # XLA 0.5.1 text parser rejects (see DESIGN.md).
+    masked = probs
+    thresh = None
+    for _ in range(moe.top_k):
+        thresh = masked.max(axis=-1, keepdims=True)
+        masked = jnp.where(masked >= thresh, -jnp.inf, masked)
+    gates = jnp.where(probs >= thresh, probs, 0.0)
+    gates = gates / (gates.sum(axis=-1, keepdims=True) + 1e-9)
+
+    # Switch-style load-balance auxiliary loss: E * sum_e f_e * P_e.
+    frac = (gates > 0).astype(jnp.float32).mean(axis=(0, 1))   # tokens routed to e
+    imp = probs.mean(axis=(0, 1))                              # router mass on e
+    aux = moe.n_experts * jnp.sum(frac * imp) * moe.aux_coef
+
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p[f"{prefix}.w1"]))
+        h = h * jnp.einsum("bsd,edf->bsef", x, p[f"{prefix}.w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,edf->bsef", x, p[f"{prefix}.w1"]))
+    y = jnp.einsum("bsef,efd->bsed", h, p[f"{prefix}.w2"])
+    y = jnp.einsum("bsed,bse->bsd", y, gates.astype(y.dtype))
+    return y, aux
+
+
+# -------------------------------------------------------------- block builder
+
+def build_block(ps: ParamSet, cfg: ModelConfig, i: int) -> None:
+    prefix = f"layer.{i}"
+    build_norm(ps, cfg, f"{prefix}.norm1")
+    build_attention(ps, cfg, f"{prefix}.attn")
+    build_norm(ps, cfg, f"{prefix}.norm2")
+    build_mlp(ps, cfg, f"{prefix}.mlp")
+
+
+def apply_block(p: Dict, cfg: ModelConfig, i: int, x, rope):
+    prefix = f"layer.{i}"
+    h = apply_norm(p, cfg, f"{prefix}.norm1", x).astype(x.dtype)
+    x = x + apply_attention(p, cfg, f"{prefix}.attn", h, rope)
+    h = apply_norm(p, cfg, f"{prefix}.norm2", x).astype(x.dtype)
+    y, aux = apply_mlp(p, cfg, f"{prefix}.mlp", h)
+    return x + y, aux

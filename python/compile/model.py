@@ -1,0 +1,163 @@
+"""L2: model forward/loss for the transformer family and ResNet.
+
+``build_params(cfg)`` returns the ordered ParamSet (the manifest contract);
+``loss_fn(cfg)`` returns a pure ``f(params, x, y) -> (loss, aux)`` suitable
+for ``jax.value_and_grad``. Layer iteration is unrolled (named parameters
+per layer are what the Rust expansion engine remaps).
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layers import (apply_block, apply_norm, build_block, build_norm, rope_cache)
+from .params import ParamSet
+
+
+# ----------------------------------------------------------------- transformer
+
+def build_params(cfg: ModelConfig) -> ParamSet:
+    if cfg.family == "resnet":
+        return build_resnet_params(cfg)
+    ps = ParamSet()
+    ps.embedding("embed.tok", cfg.vocab, cfg.d_model)
+    if cfg.pos_embed == "abs":
+        ps.embedding("embed.pos", cfg.seq_len, cfg.d_model)
+    for i in range(cfg.n_layer):
+        build_block(ps, cfg, i)
+    build_norm(ps, cfg, "final_norm")
+    if not cfg.tie_embeddings:
+        ps.matrix("head.w", cfg.d_model, cfg.vocab)
+    return ps
+
+
+def forward(p: Dict, cfg: ModelConfig, x, collect_act: bool = False):
+    """x: int32 [B, S] -> logits f32 [B, S, V] (+ aux losses, act scales)."""
+    h = p["embed.tok"][x]                          # [B, S, D]
+    if cfg.pos_embed == "abs":
+        h = h + p["embed.pos"][None, :, :]
+    rope = rope_cache(cfg.seq_len, cfg.head_dim) if cfg.pos_embed == "rope" else None
+    aux_total = 0.0
+    act_scales = [jnp.sqrt((h.astype(jnp.float32) ** 2).mean())] if collect_act else None
+    for i in range(cfg.n_layer):
+        h, aux = apply_block(p, cfg, i, h, rope)
+        aux_total = aux_total + aux
+        if collect_act:
+            act_scales.append(jnp.sqrt((h.astype(jnp.float32) ** 2).mean()))
+    h = apply_norm(p, cfg, "final_norm", h)
+    w_head = p["embed.tok"].T if cfg.tie_embeddings else p["head.w"]
+    logits = (h @ w_head).astype(jnp.float32)
+    if collect_act:
+        return logits, aux_total, jnp.stack(act_scales)
+    return logits, aux_total
+
+
+def cross_entropy(logits, y):
+    """Mean token-level CE. logits: [B, S, V] f32; y: int32 [B, S]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "resnet":
+        return resnet_loss_fn(cfg)
+
+    def f(p: Dict, x, y):
+        logits, aux = forward(p, cfg, x)
+        return cross_entropy(logits, y) + aux
+    return f
+
+
+def eval_loss_fn(cfg: ModelConfig):
+    """Validation loss: CE only (no MoE aux term), matching the paper's
+    validation-loss curves."""
+    if cfg.family == "resnet":
+        def f(p, x, y):
+            logits = resnet_forward(p, cfg, x)
+            return cross_entropy(logits[:, None, :], y[:, None])
+        return f
+
+    def f(p: Dict, x, y):
+        logits, _ = forward(p, cfg, x)
+        return cross_entropy(logits, y)
+    return f
+
+
+# --------------------------------------------------------------------- resnet
+
+def build_resnet_params(cfg: ModelConfig) -> ParamSet:
+    """Stage-structured residual CNN (paper footnote 1 analogy).
+
+    Names: ``stage.{s}.block.{b}.*``. Block 0 of each stage changes
+    width/stride (the "first layer with one shape"); blocks >= 1 are the
+    same-shape residual blocks that depth expansion inserts.
+    """
+    ps = ParamSet()
+    w = cfg.widths
+
+    def conv(name, kh, kw, cin, cout):
+        ps.tensor(name, (kh, kw, cin, cout), std=(1.0 / (kh * kw * cin)) ** 0.5)
+
+    def cnorm(name, c):
+        ps.ones(f"{name}.g", (c,))
+        ps.zeros(f"{name}.b", (c,))
+
+    conv("stem.conv", 3, 3, 3, w[0])
+    cnorm("stem.norm", w[0])
+    for s, nblocks in enumerate(cfg.stages):
+        cin = w[max(0, s - 1)] if s > 0 else w[0]
+        for b in range(nblocks):
+            pre = f"stage.{s}.block.{b}"
+            c_in = cin if b == 0 else w[s]
+            cnorm(f"{pre}.norm1", c_in)
+            conv(f"{pre}.conv1", 3, 3, c_in, w[s])
+            cnorm(f"{pre}.norm2", w[s])
+            conv(f"{pre}.conv2", 3, 3, w[s], w[s])
+            if b == 0 and (c_in != w[s] or s > 0):
+                conv(f"{pre}.proj", 1, 1, c_in, w[s])
+    cnorm("final_norm", w[-1])
+    ps.matrix("head.w", w[-1], cfg.n_classes)
+    return ps
+
+
+def _conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _channel_norm(p, name, x):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) / jnp.sqrt(var + 1e-5)) * p[f"{name}.g"] + p[f"{name}.b"]
+
+
+def resnet_forward(p: Dict, cfg: ModelConfig, x):
+    """x: f32 [B, H, W, 3] -> logits f32 [B, n_classes]."""
+    h = _conv2d(x, p["stem.conv"])
+    h = jax.nn.relu(_channel_norm(p, "stem.norm", h))
+    for s, nblocks in enumerate(cfg.stages):
+        for b in range(nblocks):
+            pre = f"stage.{s}.block.{b}"
+            stride = 2 if (b == 0 and s > 0) else 1
+            y = _channel_norm(p, f"{pre}.norm1", h)
+            y = _conv2d(jax.nn.relu(y), p[f"{pre}.conv1"], stride=stride)
+            y = _channel_norm(p, f"{pre}.norm2", y)
+            y = _conv2d(jax.nn.relu(y), p[f"{pre}.conv2"])
+            skip = h
+            if f"{pre}.proj" in p:
+                skip = _conv2d(h, p[f"{pre}.proj"], stride=stride)
+            h = skip + y
+    h = _channel_norm(p, "final_norm", h).mean(axis=(1, 2))
+    return (h @ p["head.w"]).astype(jnp.float32)
+
+
+def resnet_loss_fn(cfg: ModelConfig):
+    def f(p: Dict, x, y):
+        logits = resnet_forward(p, cfg, x)          # [B, C]
+        return cross_entropy(logits[:, None, :], y[:, None])
+    return f

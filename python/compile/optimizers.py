@@ -1,0 +1,92 @@
+"""In-graph optimizers: Muon-NSGD (the paper's main optimizer), AdamW, SGD,
+NSGD.
+
+The whole update rule lives inside the AOT'd ``train_step`` so the Rust hot
+loop only supplies (params, opt_state, batch, lr) and receives the updated
+state — Python is never on the training path.
+
+Muon-NSGD (paper §B): all 2D tensors are optimized with Muon (momentum +
+Newton-Schulz orthogonalization), everything else with normalized SGD, under
+a *single* learning rate. Decoupled weight decay (1 - lr*wd) multiplies the
+weights first. Muon's update is rescaled by sqrt(max(1, fan_out/fan_in)) —
+the muP-consistent scale behind the paper's hyperparameter transfer (Fig 4).
+"""
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig, OptConfig
+from .kernels import newton_schulz, newton_schulz_ref
+from .params import ParamSet, ParamSpec
+
+
+def opt_state_specs(ps: ParamSet, opt: OptConfig) -> List[Tuple[str, tuple]]:
+    """Ordered (name, shape) of optimizer-state tensors for the manifest."""
+    out = []
+    if opt.kind in ("muon_nsgd", "sgd", "nsgd"):
+        for s in ps.specs:
+            out.append((f"mom.{s.name}", s.shape))
+    elif opt.kind == "adamw":
+        for s in ps.specs:
+            out.append((f"m.{s.name}", s.shape))
+        for s in ps.specs:
+            out.append((f"v.{s.name}", s.shape))
+        out.append(("t", ()))
+    else:
+        raise ValueError(f"unknown optimizer {opt.kind}")
+    return out
+
+
+def init_opt_state(ps: ParamSet, opt: OptConfig) -> Dict[str, jnp.ndarray]:
+    return {name: jnp.zeros(shape, jnp.float32) for name, shape in opt_state_specs(ps, opt)}
+
+
+def _muon_scale(spec: ParamSpec) -> float:
+    import math
+    return math.sqrt(max(1.0, spec.fan_out / max(1, spec.fan_in)))
+
+
+def apply_update(cfg: ModelConfig, opt: OptConfig, specs: Dict[str, ParamSpec],
+                 params: Dict, grads: Dict, state: Dict, lr):
+    """One optimizer step. Returns (new_params, new_state). ``lr`` is a traced
+    scalar so the Rust-side schedule drives it without retracing."""
+    ns = newton_schulz if cfg.kernels == "pallas" else newton_schulz_ref
+    new_p, new_s = {}, {}
+    wd = opt.weight_decay
+
+    if opt.kind in ("muon_nsgd", "sgd", "nsgd"):
+        for name, p in params.items():
+            spec = specs[name]
+            g = grads[name]
+            m = opt.momentum * state[f"mom.{name}"] + g
+            new_s[f"mom.{name}"] = m
+            if opt.kind == "muon_nsgd" and spec.muon and len(spec.shape) == 2:
+                upd = ns(m, steps=opt.ns_steps) * _muon_scale(spec)
+            elif opt.kind in ("muon_nsgd", "nsgd"):
+                upd = m / (jnp.linalg.norm(m) + opt.eps)
+            else:  # sgd (heavy-ball)
+                upd = m
+            decay = (1.0 - lr * wd) if spec.decay else 1.0
+            new_p[name] = decay * p - lr * upd
+        return new_p, new_s
+
+    if opt.kind == "adamw":
+        t = state["t"] + 1.0
+        new_s["t"] = t
+        b1, b2 = opt.beta1, opt.beta2
+        for name, p in params.items():
+            spec = specs[name]
+            g = grads[name]
+            m = b1 * state[f"m.{name}"] + (1 - b1) * g
+            v = b2 * state[f"v.{name}"] + (1 - b2) * g * g
+            new_s[f"m.{name}"] = m
+            new_s[f"v.{name}"] = v
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            upd = mhat / (jnp.sqrt(vhat) + opt.eps)
+            decay = (1.0 - lr * wd) if spec.decay else 1.0
+            new_p[name] = decay * p - lr * upd
+        return new_p, new_s
+
+    raise ValueError(f"unknown optimizer {opt.kind}")

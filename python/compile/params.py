@@ -1,0 +1,85 @@
+"""Parameter specification: the contract between L2 (JAX) and L3 (Rust).
+
+Every model variant is described by an ordered list of ``ParamSpec``s. The
+same list (serialized into ``artifacts/manifest.json``) tells the Rust
+coordinator how to initialize parameters, how to remap them across depths
+during expansion (layer-indexed names), which optimizer state accompanies
+each parameter, and the muP metadata (fan_in/fan_out) behind hyperparameter
+transfer. JAX never sees a pytree: models work on a flat ``dict[str, array]``
+whose iteration order *is* the artifact's input order.
+"""
+
+import dataclasses
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str                 # e.g. "layer.3.attn.wq"; layer-indexed names drive expansion
+    shape: tuple
+    init: str                 # "normal" | "zeros" | "ones"
+    std: float = 0.0          # for init == "normal"
+    muon: bool = False        # 2D tensor optimized by Muon (else NSGD branch)
+    decay: bool = False       # weight decay applies
+    fan_in: int = 0
+    fan_out: int = 0
+
+
+class ParamSet:
+    """Ordered parameter-spec builder with muP-consistent init defaults."""
+
+    def __init__(self):
+        self.specs: List[ParamSpec] = []
+
+    def matrix(self, name: str, fan_in: int, fan_out: int, std_scale: float = 1.0) -> None:
+        """A dense 2D weight. muP/spectral init: std = scale / sqrt(fan_in),
+        which keeps per-element activation size O(1) across widths (§3.2)."""
+        self.specs.append(ParamSpec(
+            name=name, shape=(fan_in, fan_out), init="normal",
+            std=std_scale / np.sqrt(fan_in), muon=True, decay=True,
+            fan_in=fan_in, fan_out=fan_out))
+
+    def embedding(self, name: str, vocab: int, dim: int, std: float = 0.02) -> None:
+        # Embeddings are lookups, not matmuls: O(1)-std init per muP; still a
+        # 2D tensor, so the paper's Muon-NSGD routes it through Muon.
+        self.specs.append(ParamSpec(
+            name=name, shape=(vocab, dim), init="normal", std=std, muon=True,
+            decay=False, fan_in=vocab, fan_out=dim))
+
+    def tensor(self, name: str, shape: tuple, std: float, decay: bool = True) -> None:
+        """A >2D tensor (conv kernels, stacked experts): NSGD branch."""
+        self.specs.append(ParamSpec(
+            name=name, shape=tuple(shape), init="normal", std=std, muon=False,
+            decay=decay, fan_in=int(np.prod(shape[:-1])), fan_out=shape[-1]))
+
+    def ones(self, name: str, shape: tuple) -> None:
+        self.specs.append(ParamSpec(name=name, shape=tuple(shape), init="ones",
+                                    muon=False, decay=False))
+
+    def zeros(self, name: str, shape: tuple) -> None:
+        self.specs.append(ParamSpec(name=name, shape=tuple(shape), init="zeros",
+                                    muon=False, decay=False))
+
+    def init(self, seed: int = 0) -> Dict[str, jnp.ndarray]:
+        """Materialize initial parameters (numpy RNG; deterministic).
+
+        Build-time only — the Rust side re-implements this from the manifest
+        (same distribution family, per-param seeds) for sweep replicates.
+        """
+        rng = np.random.default_rng(seed)
+        out = {}
+        for s in self.specs:
+            if s.init == "normal":
+                v = rng.normal(0.0, s.std, size=s.shape).astype(np.float32)
+            elif s.init == "ones":
+                v = np.ones(s.shape, np.float32)
+            else:
+                v = np.zeros(s.shape, np.float32)
+            out[s.name] = jnp.asarray(v)
+        return out
+
+    def by_name(self) -> Dict[str, ParamSpec]:
+        return {s.name: s for s in self.specs}

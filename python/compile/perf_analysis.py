@@ -1,0 +1,112 @@
+"""L1/L2 performance analysis (build-time; feeds EXPERIMENTS.md §Perf).
+
+L1: VMEM footprint + MXU utilization *estimates* from the kernels' BlockSpec
+structure (interpret=True wallclock is CPU-numpy, explicitly not a TPU proxy
+— we optimize structure: tile residency, MXU-shaped matmuls, HBM traffic).
+
+L2: HLO audit of the lowered train step — op histogram, fusion opportunities
+left on the table, and the arithmetic-intensity profile.
+
+Usage: python -m compile.perf_analysis [--cfg gpt2.l12] [--artifacts ../artifacts]
+"""
+
+import argparse
+import collections
+import json
+import os
+import re
+
+
+def l1_attention_table(seq_lens=(64, 512, 2048), head_dim=64,
+                       blocks=((16, 16), (64, 64), (128, 128), (256, 512))):
+    """VMEM bytes + MXU-shape quality per (block_q, block_k) config.
+
+    Per-program residency (f32): q tile, one k/v tile pair, the online-softmax
+    state (m, l, acc). MXU utilization proxy: fraction of matmul dims that
+    fill the 128-lane systolic array (dims < 128 underfill proportionally).
+    """
+    rows = []
+    for s in seq_lens:
+        for bq, bk in blocks:
+            bq_, bk_ = min(bq, s), min(bk, s)
+            vmem = 4 * (bq_ * head_dim          # q tile
+                        + 2 * bk_ * head_dim    # k/v tiles
+                        + bq_ * (2 + head_dim)) # m, l, acc
+            # Two MXU matmuls per tile: [bq,d]x[d,bk] and [bq,bk]x[bk,d].
+            def fill(m, n, k):
+                return min(m, 128) / 128 * min(n, 128) / 128 * min(k, 128) / 128
+            mxu = 0.5 * (fill(bq_, bk_, head_dim) + fill(bq_, head_dim, bk_))
+            # HBM traffic per output element (lower = better): K/V re-fetched
+            # once per q-block ⇒ amplification S/bq over the minimal 1.
+            amplification = s / bq_
+            rows.append((s, f"{bq_}x{bk_}", vmem, mxu, amplification))
+    return rows
+
+
+def l1_newton_schulz_table(widths=(64, 256, 1024, 2048)):
+    """Fused-NS VMEM residency: X + gram + poly temp, all f32."""
+    rows = []
+    for n in widths:
+        vmem = 4 * (n * n * 3)
+        fits = vmem <= 16 * 2**20
+        # All matmuls are [n,n]x[n,n]: MXU fill = (min(n,128)/128)^3.
+        mxu = (min(n, 128) / 128) ** 3
+        rows.append((n, vmem, fits, mxu))
+    return rows
+
+
+def l2_hlo_audit(path):
+    """Op histogram + fusion stats of an HLO-text artifact."""
+    ops = collections.Counter()
+    fusions = 0
+    with open(path) as f:
+        for line in f:
+            m = re.search(r"=\s+\S+\s+([a-z][a-z0-9-]*)\(", line)
+            if m:
+                op = m.group(1)
+                ops[op] += 1
+                if op == "fusion":
+                    fusions += 1
+    return ops, fusions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cfg", default="gpt2.l12")
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print("== L1 flash-attention BlockSpec table (f32) ==")
+    print(f"{'S':>6} {'block':>9} {'VMEM/prog':>12} {'MXU fill':>9} {'KV refetch xS/bq':>17}")
+    for s, blk, vmem, mxu, amp in l1_attention_table():
+        flag = " <-- shipped default" if blk == "64x64" and s == 512 else ""
+        print(f"{s:>6} {blk:>9} {vmem/1024:>10.1f}Ki {mxu:>9.3f} {amp:>17.1f}{flag}")
+
+    print("\n== L1 fused Newton-Schulz residency ==")
+    print(f"{'width':>6} {'VMEM':>10} {'fits 16Mi':>10} {'MXU fill':>9}")
+    for n, vmem, fits, mxu in l1_newton_schulz_table():
+        print(f"{n:>6} {vmem/2**20:>8.1f}Mi {str(fits):>10} {mxu:>9.3f}")
+
+    man_path = os.path.join(args.artifacts, "manifest.json")
+    if not os.path.exists(man_path):
+        print("\n(artifacts not built; skipping L2 audit)")
+        return
+    with open(man_path) as f:
+        manifest = json.load(f)
+    entry = manifest["configs"][args.cfg]
+    print(f"\n== L2 HLO audit: {args.cfg} ==")
+    for fn in ("train", f"train_chunk{entry['chunk']}", "eval"):
+        if fn not in entry["artifacts"]:
+            continue
+        path = os.path.join(args.artifacts, entry["artifacts"][fn])
+        ops, fusions = l2_hlo_audit(path)
+        total = sum(ops.values())
+        heavy = ops["dot"] + ops.get("convolution", 0)
+        print(f"  {fn}: {total} ops | dot/conv {heavy} | fusion {fusions} | "
+              f"top: {ops.most_common(6)}")
+        size = os.path.getsize(path)
+        print(f"    text {size/1e6:.2f} MB")
+
+
+if __name__ == "__main__":
+    main()

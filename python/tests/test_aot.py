@@ -1,0 +1,135 @@
+"""AOT contract tests: manifest consistency, HLO-text emission, train-step
+semantics of the lowered functions (executed via jax.jit as the local stand-in
+for the PJRT path the rust tests cover)."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import (count_params, make_eval, make_probe, make_train,
+                         make_train_chunk, param_groups, to_hlo_text)
+from compile.configs import ArtifactSpec, OptConfig, default_bundle, deepseekv3, gpt2
+from compile.model import build_params
+from compile.optimizers import init_opt_state, opt_state_specs
+
+
+def test_bundle_ids_unique_and_cover_benches():
+    bundle = default_bundle()
+    ids = [s.cfg_id for s in bundle]
+    assert len(ids) == len(set(ids))
+    # The bench suite depends on these configs existing in the default bundle.
+    for needed in ["gpt2.l0", "gpt2.l1", "gpt2.l2", "gpt2.l3", "gpt2.l6", "gpt2.l12",
+                   "gpt2.l0.adamw", "gpt2.l12.adamw", "gpt2.l0.nsgd",
+                   "llama3.l0", "llama3.l4", "qwen3.l4", "deepseekv3.l4", "mixtral.l4",
+                   "llama3.s0.l0", "deepseekv3.s2.l4",
+                   "resnet.r14", "resnet.r50"]:
+        assert needed in ids, needed
+
+
+def test_param_groups_ordering():
+    ps = build_params(gpt2(3))
+    groups = param_groups(ps)
+    assert groups == ["embed", "layer.0", "layer.1", "layer.2", "tail"]
+
+
+def test_count_params_moe_active():
+    cfg = deepseekv3(2, kernels="ref")
+    total, active = count_params(cfg, build_params(cfg))
+    assert active < total
+    # Expert params scale by top_k/n_experts = 1/2.
+    assert total - active > 0
+
+
+def test_train_step_executes_and_descends():
+    cfg = gpt2(1, kernels="ref")
+    opt = OptConfig()
+    ps = build_params(cfg)
+    step = jax.jit(make_train(cfg, opt, ps))
+    params = [ps.init(0)[s.name] for s in ps.specs]
+    state = [jnp.zeros(shape, jnp.float32) for _, shape in opt_state_specs(ps, opt)]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(np.int32))
+    y = (x * 5 + 1) % cfg.vocab
+    losses = []
+    for _ in range(12):
+        out = step(*params, *state, x, y, jnp.float32(0.02))
+        params = list(out[: len(params)])
+        state = list(out[len(params):-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0]
+
+
+def test_chunk_equals_singles():
+    cfg = gpt2(0, kernels="ref")
+    opt = OptConfig()
+    ps = build_params(cfg)
+    k = 4
+    single = jax.jit(make_train(cfg, opt, ps))
+    chunk = jax.jit(make_train_chunk(cfg, opt, ps, k))
+    params0 = [ps.init(3)[s.name] for s in ps.specs]
+    state0 = [jnp.zeros(shape, jnp.float32) for _, shape in opt_state_specs(ps, opt)]
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.integers(0, cfg.vocab, size=(k, cfg.batch, cfg.seq_len)).astype(np.int32))
+    ys = jnp.asarray(rng.integers(0, cfg.vocab, size=(k, cfg.batch, cfg.seq_len)).astype(np.int32))
+    lrs = jnp.asarray([0.01, 0.02, 0.01, 0.005], jnp.float32)
+
+    out = chunk(*params0, *state0, xs, ys, lrs)
+    chunk_params = out[: len(params0)]
+    chunk_losses = np.asarray(out[-1])
+
+    params, state = list(params0), list(state0)
+    single_losses = []
+    for i in range(k):
+        o = single(*params, *state, xs[i], ys[i], lrs[i])
+        params = list(o[: len(params)])
+        state = list(o[len(params):-1])
+        single_losses.append(float(o[-1]))
+    np.testing.assert_allclose(chunk_losses, single_losses, atol=1e-5)
+    for a, b in zip(chunk_params, params):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_probe_outputs():
+    cfg = gpt2(2, kernels="ref")
+    ps = build_params(cfg)
+    probe = jax.jit(make_probe(cfg, ps))
+    params = [ps.init(0)[s.name] for s in ps.specs]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(np.int32))
+    y = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(np.int32))
+    loss, gnorms, act = probe(*params, x, y)
+    assert gnorms.shape == (4,)  # embed, layer.0, layer.1, tail
+    assert act.shape == (3,)     # embedding + 2 residual positions
+    assert float(loss) > 0
+    assert np.all(np.asarray(gnorms) >= 0)
+
+
+def test_hlo_text_emission_smoke():
+    cfg = gpt2(0, kernels="ref")
+    ps = build_params(cfg)
+    ev = make_eval(cfg, ps)
+    shapes = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in ps.specs]
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    text = to_hlo_text(jax.jit(ev).lower(*shapes, x, x))
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts/manifest.json"),
+                    reason="artifacts not built")
+def test_manifest_matches_configs():
+    with open("../artifacts/manifest.json") as f:
+        manifest = json.load(f)
+    bundle = {s.cfg_id: s for s in default_bundle()}
+    for cfg_id, entry in manifest["configs"].items():
+        assert cfg_id in bundle, cfg_id
+        spec = bundle[cfg_id]
+        ps = build_params(spec.model)
+        assert [p["name"] for p in entry["params"]] == [s.name for s in ps.specs]
+        assert entry["param_count"] == count_params(spec.model, ps)[0]
+        for fn, path in entry["artifacts"].items():
+            assert os.path.exists(os.path.join("../artifacts", path)), path

@@ -1,0 +1,141 @@
+//! Coordinator hot-path micro-benchmarks (hand-rolled harness: the offline
+//! crate set has no criterion; `cargo bench` runs this binary).
+//!
+//! Measures, per paper table: the end-to-end step dispatch (Fig 1's
+//! workhorse), the single-step vs fused-chunk ratio (the §Perf lever), the
+//! expansion engine, batch assembly, and the convex simulator.
+
+use std::time::Instant;
+
+use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
+use deep_progressive::expansion::{expand, ExpandSpec};
+use deep_progressive::runtime::{Engine, IntTensor, Manifest, ModelState};
+use deep_progressive::schedule::Schedule;
+
+struct Bench {
+    rows: Vec<(String, f64, f64, usize)>, // name, mean ms, std ms, iters
+}
+
+impl Bench {
+    fn time(&mut self, name: &str, iters: usize, mut f: impl FnMut()) {
+        // Warmup.
+        f();
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+        self.rows.push((name.to_string(), mean, var.sqrt(), iters));
+    }
+
+    fn report(&self) {
+        println!("\n{:<44} {:>12} {:>10} {:>7}", "benchmark", "mean (ms)", "std", "iters");
+        for (n, m, s, i) in &self.rows {
+            println!("{n:<44} {m:>12.3} {s:>10.3} {i:>7}");
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench { rows: Vec::new() };
+
+    // Pure-rust substrates first (always available).
+    let corpus = Corpus::generate(CorpusConfig { train_tokens: 500_000, ..Default::default() });
+    b.time("corpus/generate-500k-tokens", 3, || {
+        let c = Corpus::generate(CorpusConfig { train_tokens: 500_000, ..Default::default() });
+        std::hint::black_box(c.train.len());
+    });
+    let mut batcher = Batcher::new(&corpus.train, 64, 1);
+    b.time("data/batch-assembly-8x64", 1000, || {
+        let (x, y) = batcher.next_batch(8);
+        std::hint::black_box((x.len(), y.len()));
+    });
+    b.time("convex/simulate-800-steps-dim32", 5, || {
+        let p = deep_progressive::convex::ConvexProblem::new(32, 128, 1);
+        let (f, g) = deep_progressive::convex::simulate(
+            &p, 16,
+            Schedule::wsd(0.1),
+            640, 800,
+            deep_progressive::convex::Teleport::Zero, 1,
+        );
+        std::hint::black_box((f.final_loss, g.final_loss));
+    });
+
+    // PJRT-dependent benches (skipped without artifacts).
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts not built — PJRT benches skipped (run `make artifacts`)");
+        b.report();
+        return Ok(());
+    };
+    let engine = Engine::cpu()?;
+
+    for cfg_id in ["gpt2.l0", "gpt2.l1", "gpt2.l12"] {
+        let entry = manifest.get(cfg_id)?;
+        let mut state = ModelState::init(entry, 0);
+        let bsz = entry.model.batch;
+        let s = entry.model.seq_len;
+        let mut batcher = Batcher::new(&corpus.train, s, 2);
+
+        // Compile cost (first load) measured once.
+        let t0 = Instant::now();
+        engine.load(&entry.artifact_path(&manifest.root, "train")?)?;
+        println!("compile {cfg_id}/train: {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+        let (x, y) = batcher.next_batch(bsz);
+        let x = IntTensor::from_vec(&[bsz, s], x)?;
+        let y = IntTensor::from_vec(&[bsz, s], y)?;
+        b.time(&format!("step/{cfg_id}/single"), 20, || {
+            let l = engine.train_step(entry, &manifest.root, &mut state, &x, &y, 0.01, None).unwrap();
+            std::hint::black_box(l);
+        });
+
+        let k = entry.chunk;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..k {
+            let (a, c) = batcher.next_batch(bsz);
+            xs.extend(a);
+            ys.extend(c);
+        }
+        let xs = IntTensor::from_vec(&[k, bsz, s], xs)?;
+        let ys = IntTensor::from_vec(&[k, bsz, s], ys)?;
+        let lrs = vec![0.01f32; k];
+        b.time(&format!("step/{cfg_id}/chunk{k}-per-step"), 8, || {
+            let l = engine.train_chunk(entry, &manifest.root, &mut state, &xs, &ys, &lrs, None).unwrap();
+            std::hint::black_box(l);
+        });
+        // Normalize the chunk row to per-step cost for direct comparison.
+        if let Some(last) = b.rows.last_mut() {
+            last.1 /= k as f64;
+            last.2 /= k as f64;
+        }
+    }
+
+    // Expansion engine (host-side remap of the l1→l12 state).
+    let src = manifest.get("gpt2.l1")?;
+    let dst = manifest.get("gpt2.l12")?;
+    let state = ModelState::init(src, 0);
+    b.time("expansion/l1-to-l12-random", 50, || {
+        let big = expand(src, dst, &state, &ExpandSpec::default()).unwrap();
+        std::hint::black_box(big.params.len());
+    });
+
+    // End-to-end: a 48-step progressive mini-run (Fig 1's inner loop).
+    let trainer = Trainer::new(&engine, &manifest, &corpus);
+    b.time("e2e/progressive-48-steps-l0-l3", 3, || {
+        let spec = RunSpec::progressive(
+            "bench-prog", "gpt2.l0", "gpt2.l3", 32, 48,
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.0 },
+            ExpandSpec::default(),
+        );
+        let r = trainer.run(&spec).unwrap();
+        std::hint::black_box(r.final_val_loss);
+    });
+
+    b.report();
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Fig 4 (LR transfer), Fig 5 (copy orderings), Fig 6 (equal-compute
+//! comparison), Figs 7/8 (WSD vs cosine τ sweep and its re-plots).
+
+use anyhow::Result;
+
+use crate::coordinator::RunSpec;
+use crate::expansion::{CopyOrder, ExpandSpec, Strategy};
+use crate::metrics::{mixing_point, Table};
+use crate::schedule::Schedule;
+
+use super::Ctx;
+
+/// Fig 4: validation/train loss vs learning rate for Muon-NSGD across two
+/// model sizes — muP transfer means the optimum LR is shared.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let target = "fig4";
+    let total = ctx.steps;
+    let lrs = [0.002f32, 0.005, 0.01, 0.02, 0.05];
+    let mut table = Table::new(&["model", "lr", "train loss", "val loss"]);
+    let mut best: Vec<(String, f32)> = Vec::new();
+    for cfg in ["gpt2.l1", "gpt2.l6"] {
+        let mut best_lr = (0.0f32, f32::INFINITY);
+        for &lr in &lrs {
+            let sched = Schedule::Wsd { peak: lr, warmup_frac: 0.02, decay_frac: 0.2 };
+            let res = ctx.run_logged(target, &RunSpec::fixed(format!("{cfg}-lr{lr}"), cfg, total, sched))?;
+            let train = res.curve.points.last().map(|p| p.train_loss).unwrap_or(f32::NAN);
+            table.row(vec![cfg.into(), format!("{lr}"), format!("{train:.4}"), format!("{:.4}", res.final_val_loss)]);
+            if res.final_val_loss < best_lr.1 {
+                best_lr = (lr, res.final_val_loss);
+            }
+        }
+        best.push((cfg.to_string(), best_lr.0));
+    }
+    println!(
+        "optimal LR per size: {:?}  (muP transfer ⇒ expected equal)",
+        best.iter().map(|(c, l)| format!("{c}:{l}")).collect::<Vec<_>>()
+    );
+    ctx.emit(target, &table)
+}
+
+/// Fig 5: multi-layer expansion orderings — copying_last vs copying_stack vs
+/// copying_inter, 3-layer → 6-layer GPT2.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let target = "fig5";
+    let total = ctx.steps;
+    let tau = total / 4;
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l6", "gpt2.l6", total, sched))?;
+    let mut table = Table::new(&["ordering", "final val loss", "gap vs fixed %"]);
+    for (name, order) in [("copying_last", CopyOrder::Last), ("copying_stack", CopyOrder::Stack), ("copying_inter", CopyOrder::Inter)] {
+        let spec = RunSpec::progressive(
+            format!("l3-l6-{name}"),
+            "gpt2.l3",
+            "gpt2.l6",
+            tau,
+            total,
+            sched,
+            ExpandSpec { strategy: Strategy::Copying(order), ..Default::default() },
+        );
+        let res = ctx.run_logged(target, &spec)?;
+        let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
+        table.row(vec![name.into(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}")]);
+    }
+    table.row(vec!["fixed".into(), format!("{:.4}", fixed.final_val_loss), "0.00".into()]);
+    ctx.emit(target, &table)
+}
+
+/// Fig 6: is progressive training effective, or just a point on the
+/// loss-compute tradeoff? Compare against a *shorter* fixed-size run with the
+/// same post-expansion step count (and also the same-compute run).
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let target = "fig6";
+    let total = ctx.steps * 2;
+    let tau = (total as f32 * 0.6) as usize;
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+    let prog = ctx.run_logged(
+        target,
+        &RunSpec::progressive("prog-l0-l6", "gpt2.l0", "gpt2.l6", tau, total, sched, ExpandSpec::default()),
+    )?;
+    // Fixed-size run for the same steps the grown model got.
+    let grown_steps = total - tau;
+    let short = ctx.run_logged(target, &RunSpec::fixed("fixed-short", "gpt2.l6", grown_steps, sched))?;
+    // Fixed-size run with the same FLOPs as the whole progressive run.
+    let l6 = ctx.manifest.get("gpt2.l6")?;
+    let equal_steps = (prog.ledger.total / crate::flops::flops_per_step(l6)) as usize;
+    let equal = ctx.run_logged(target, &RunSpec::fixed("fixed-equal-compute", "gpt2.l6", equal_steps.max(10), sched))?;
+
+    let mut table = Table::new(&["run", "steps", "FLOPs", "final val loss"]);
+    for (name, res, steps) in [
+        ("progressive (full)", &prog, total),
+        ("fixed, grown-horizon", &short, grown_steps),
+        ("fixed, equal-compute", &equal, equal_steps),
+    ] {
+        table.row(vec![name.into(), steps.to_string(), format!("{:.2e}", res.ledger.total), format!("{:.4}", res.final_val_loss)]);
+    }
+    println!(
+        "progressive inherits small-model progress: beats grown-horizon fixed run by {:+.2}%",
+        (short.final_val_loss - prog.final_val_loss) / short.final_val_loss * 100.0
+    );
+    ctx.emit(target, &table)
+}
+
+/// Figs 7+8 (and the ResNet panel): τ sweep × {WSD, cosine}. `replot=true`
+/// additionally emits the Fig-8 perspectives (grown-vs-target alignment).
+pub fn fig7_8(ctx: &Ctx, replot: bool) -> Result<()> {
+    let target = if replot { "fig8" } else { "fig7" };
+    let total = ctx.steps * 2;
+    let taus: Vec<usize> = (1..=8).map(|i| total * i / 10).collect();
+    let mut table = Table::new(&["model", "schedule", "τ/T", "final val loss", "mixed"]);
+
+    for (small, large, label) in [("gpt2.l1", "gpt2.l12", "gpt"), ("resnet.r14", "resnet.r50", "resnet")] {
+        for (sname, sched) in [
+            ("wsd", Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 }),
+            ("cosine", Schedule::cosine(0.02)),
+        ] {
+            let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{label}-{sname}-fixed"), large, total, sched))?;
+            table.row(vec![label.into(), sname.into(), "fixed".into(), format!("{:.4}", fixed.final_val_loss), "—".into()]);
+            for &tau in &taus {
+                let spec = RunSpec::progressive(
+                    format!("{label}-{sname}-tau{}", tau * 10 / total),
+                    small,
+                    large,
+                    tau,
+                    total,
+                    sched,
+                    ExpandSpec::default(),
+                );
+                let res = ctx.run_logged(target, &spec)?;
+                let mixed = mixing_point(&res.curve, &fixed.curve, 0.04, 2).is_some();
+                table.row(vec![
+                    label.into(),
+                    sname.into(),
+                    format!("{:.1}", tau as f32 / total as f32),
+                    format!("{:.4}", res.final_val_loss),
+                    format!("{mixed}"),
+                ]);
+                if replot && tau == taus[taus.len() / 2] {
+                    // Fig 8 left: grown-vs-target only.
+                    let expand_step = res.boundaries[0].0;
+                    let mut t8 = Table::new(&["steps after growth", "grown", "target"]);
+                    for p in res.curve.points.iter().filter(|p| p.step >= expand_step).take(10) {
+                        let aligned = p.step - expand_step;
+                        let scratch = fixed
+                            .curve
+                            .points
+                            .iter()
+                            .min_by_key(|q| q.step.abs_diff(aligned))
+                            .map(|q| q.val_loss)
+                            .unwrap_or(f32::NAN);
+                        t8.row(vec![aligned.to_string(), format!("{:.4}", p.val_loss), format!("{scratch:.4}")]);
+                    }
+                    ctx.emit(&format!("{target}-{label}-{sname}-grown-vs-target"), &t8)?;
+                }
+            }
+            if label == "resnet" {
+                break; // one schedule for the vision panel keeps smoke scale sane
+            }
+        }
+    }
+    ctx.emit(target, &table)
+}

@@ -1,0 +1,130 @@
+//! Fig 10 (loss-compute Pareto grid), Fig 11 (multi-stage vs single-stage),
+//! Fig 12 (MoE expansion).
+
+use anyhow::Result;
+
+use crate::coordinator::{RunSpec, Stage};
+use crate::expansion::ExpandSpec;
+use crate::metrics::Table;
+use crate::schedule::Schedule;
+
+use super::Ctx;
+
+/// Fig 10: depth-expansion grid — sources {0,1,2,3,6} × targets {6,12} ×
+/// expansion times; report (FLOPs, loss) Pareto points. The paper's takeaway:
+/// zero/one-layer sources trace the Pareto frontier.
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let target = "fig10";
+    let total = ctx.steps;
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+    let sources = [0usize, 1, 2, 3, 6];
+    let targets = ["gpt2.l6", "gpt2.l12"];
+    let taus = [total * 3 / 10, total * 6 / 10];
+
+    let mut table = Table::new(&["target", "source", "τ/T", "FLOPs", "final val loss"]);
+    let mut pareto: Vec<(String, f64, f32)> = Vec::new();
+    for tgt in targets {
+        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{tgt}-fixed"), tgt, total, sched))?;
+        table.row(vec![tgt.into(), "fixed".into(), "—".into(), format!("{:.2e}", fixed.ledger.total), format!("{:.4}", fixed.final_val_loss)]);
+        pareto.push((format!("{tgt}-fixed"), fixed.ledger.total, fixed.final_val_loss));
+        for &src_n in &sources {
+            let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
+            if src_n >= tgt_n {
+                continue;
+            }
+            for &tau in &taus {
+                let small = format!("gpt2.l{src_n}");
+                let spec = RunSpec::progressive(
+                    format!("{tgt}-from-l{src_n}-tau{}", tau * 10 / total),
+                    &small,
+                    tgt,
+                    tau,
+                    total,
+                    sched,
+                    ExpandSpec::default(),
+                );
+                let res = ctx.run_logged(target, &spec)?;
+                table.row(vec![
+                    tgt.into(),
+                    format!("l{src_n}"),
+                    format!("{:.1}", tau as f32 / total as f32),
+                    format!("{:.2e}", res.ledger.total),
+                    format!("{:.4}", res.final_val_loss),
+                ]);
+                pareto.push((spec.name.clone(), res.ledger.total, res.final_val_loss));
+            }
+        }
+    }
+    // Pareto membership: a run is dominated if another has ≤ FLOPs and ≤ loss.
+    let frontier: Vec<&str> = pareto
+        .iter()
+        .filter(|(_, c, l)| {
+            !pareto.iter().any(|(_, c2, l2)| (c2 < c && l2 <= l) || (c2 <= c && l2 < l))
+        })
+        .map(|(n, _, _)| n.as_str())
+        .collect();
+    println!("Pareto frontier runs: {frontier:?}");
+    ctx.emit(target, &table)
+}
+
+/// Fig 11: multi-stage (0→2→12) vs single-stage (0→12) vs fixed — the mixing
+/// behavior predicts no benefit from multi-stage (Takeaway 7).
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let target = "fig11";
+    let total = ctx.steps * 2;
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+
+    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l12", "gpt2.l12", total, sched))?;
+    let single = ctx.run_logged(
+        target,
+        &RunSpec::progressive("single-0-12", "gpt2.l0", "gpt2.l12", total / 2, total, sched, ExpandSpec::default()),
+    )?;
+    let multi = ctx.run_logged(
+        target,
+        &RunSpec {
+            name: "multi-0-2-12".into(),
+            stages: vec![
+                Stage { cfg_id: "gpt2.l0".into(), from_step: 0, expand: ExpandSpec::default() },
+                Stage { cfg_id: "gpt2.l2".into(), from_step: total / 4, expand: ExpandSpec::default() },
+                Stage { cfg_id: "gpt2.l12".into(), from_step: total / 2, expand: ExpandSpec::default() },
+            ],
+            total_steps: total,
+            schedule: sched,
+            eval_every: (total / 40).max(1),
+            eval_batches: 4,
+            seed: ctx.seed,
+        },
+    )?;
+
+    let mut table = Table::new(&["run", "FLOPs", "final val loss"]);
+    for (n, r) in [("fixed l12", &fixed), ("single-stage 0→12", &single), ("multi-stage 0→2→12", &multi)] {
+        table.row(vec![n.into(), format!("{:.2e}", r.ledger.total), format!("{:.4}", r.final_val_loss)]);
+    }
+    println!(
+        "multi-stage advantage over single-stage: {:+.2}% (mixing ⇒ expected ≈0)",
+        (single.final_val_loss - multi.final_val_loss) / single.final_val_loss * 100.0
+    );
+    ctx.emit(target, &table)
+}
+
+/// Fig 12: MoE (DeepSeekV3-style) zero/one-layer progressive training with
+/// random init — same mixing pattern as dense (Takeaway 8).
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let target = "fig12";
+    let total = ctx.steps;
+    let tau = total / 3;
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let fixed = ctx.run_logged(target, &RunSpec::fixed("dsv3-fixed-l4", "deepseekv3.l4", total, sched))?;
+    let mut table = Table::new(&["run", "final val loss", "gap %", "mixed"]);
+    for src in ["deepseekv3.l0", "deepseekv3.l1"] {
+        let res = ctx.run_logged(
+            target,
+            &RunSpec::progressive(format!("dsv3-prog-{src}"), src, "deepseekv3.l4", tau, total, sched, ExpandSpec::default()),
+        )?;
+        let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
+        let mixed = crate::metrics::mixing_point(&res.curve, &fixed.curve, 0.04, 2).is_some();
+        table.row(vec![src.into(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}"), format!("{mixed}")]);
+    }
+    table.row(vec!["fixed".into(), format!("{:.4}", fixed.final_val_loss), "0.00".into(), "—".into()]);
+    ctx.emit(target, &table)
+}

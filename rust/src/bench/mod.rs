@@ -1,0 +1,119 @@
+//! Figure/table reproduction harness: one target per table AND figure in the
+//! paper's evaluation (DESIGN.md §3 maps each to its modules).
+//!
+//! Every target prints the paper's rows/series as a markdown table and
+//! writes per-run CSV curves to `results/<target>/`. Scale is testbed-aware:
+//! `--steps` overrides the default smoke horizon (single-core CPU PJRT; the
+//! reproduction targets the *shape* of each result — who wins, crossovers,
+//! mixing — with FLOP ratios exact by the 6BTN ledger).
+
+pub mod figs_core;
+pub mod figs_sched;
+pub mod figs_tradeoff;
+pub mod figs_appendix;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{RunResult, RunSpec, Trainer};
+use crate::data::{Corpus, CorpusConfig};
+use crate::metrics::Table;
+use crate::runtime::{Engine, Manifest};
+
+/// Shared bench context.
+pub struct Ctx {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub corpus: Corpus,
+    pub out_dir: PathBuf,
+    /// Default horizon for one run (smoke scale).
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &str, out_dir: &str, steps: usize, seed: u64) -> Result<Ctx> {
+        Ok(Ctx {
+            engine: Engine::cpu()?,
+            manifest: Manifest::load(artifacts)?,
+            corpus: Corpus::generate(CorpusConfig::default()),
+            out_dir: PathBuf::from(out_dir),
+            steps,
+            seed,
+        })
+    }
+
+    pub fn trainer(&self) -> Trainer<'_> {
+        Trainer::new(&self.engine, &self.manifest, &self.corpus)
+    }
+
+    /// Run and persist the curve CSV under `results/<target>/<run>.csv`.
+    pub fn run_logged(&self, target: &str, spec: &RunSpec) -> Result<RunResult> {
+        let t0 = std::time::Instant::now();
+        let res = self.trainer().run(spec)?;
+        let dir = self.out_dir.join(target);
+        res.curve.write_csv(&dir)?;
+        eprintln!(
+            "  [{}] {}: final val {:.4}, {:.2e} FLOPs, {:.1}s",
+            target,
+            spec.name,
+            res.final_val_loss,
+            res.ledger.total,
+            t0.elapsed().as_secs_f32()
+        );
+        Ok(res)
+    }
+
+    pub fn emit(&self, target: &str, table: &Table) -> Result<()> {
+        let text = table.render();
+        println!("\n== {target} ==\n{text}");
+        let dir = self.out_dir.join(target);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("table.md"), text)?;
+        Ok(())
+    }
+}
+
+/// Dispatch a bench target by name.
+pub fn run_target(ctx: &Ctx, target: &str) -> Result<()> {
+    match target {
+        "fig1" => figs_core::fig1(ctx),
+        "fig2" => figs_core::fig2(ctx),
+        "fig3" => figs_core::fig3(ctx),
+        "fig4" => figs_sched::fig4(ctx),
+        "fig5" => figs_sched::fig5(ctx),
+        "fig6" => figs_sched::fig6(ctx),
+        "fig7" => figs_sched::fig7_8(ctx, false),
+        "fig8" => figs_sched::fig7_8(ctx, true),
+        "fig9" => figs_core::fig9(ctx),
+        "fig10" => figs_tradeoff::fig10(ctx),
+        "fig11" => figs_tradeoff::fig11(ctx),
+        "fig12" => figs_tradeoff::fig12(ctx),
+        "fig13" => figs_appendix::fig13(ctx),
+        "fig14" => figs_appendix::fig14(ctx),
+        "fig15" | "fig16" => figs_appendix::fig15_16(ctx),
+        "fig17" => figs_appendix::fig17(ctx),
+        "fig18" => figs_appendix::fig18(ctx),
+        "fig19" => figs_appendix::fig19(ctx),
+        "fig20" => figs_appendix::fig20(ctx),
+        "fig21" | "fig22" => figs_appendix::fig21_22(ctx),
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "theory" => tables::theory(ctx),
+        "all" => {
+            for t in ALL_TARGETS {
+                run_target(ctx, t)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench target '{other}' (see `repro list-benches`)"),
+    }
+}
+
+pub const ALL_TARGETS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "fig17", "fig18", "fig19", "fig20",
+    "fig21", "table1", "table2", "theory",
+];

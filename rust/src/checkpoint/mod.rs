@@ -1,0 +1,173 @@
+//! Checkpointing: params + optimizer state in a simple self-describing
+//! binary format (magic, version, per-tensor name/shape/f32-LE payload).
+//!
+//! Used by the launcher's `train --save/--resume` and by long bench sweeps
+//! to reuse source-model training across expansion variants (the paper's
+//! Fig-3 grid trains the small model once per family).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ConfigEntry, ModelState, Tensor};
+
+const MAGIC: &[u8; 8] = b"DPTCKPT1";
+
+pub fn save(path: &Path, cfg_id: &str, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    write_str(&mut f, cfg_id)?;
+    write_u64(&mut f, entry.params.len() as u64)?;
+    for (spec, t) in entry.params.iter().zip(&state.params) {
+        write_tensor(&mut f, &spec.name, t)?;
+    }
+    write_u64(&mut f, entry.opt_state.len() as u64)?;
+    for (spec, t) in entry.opt_state.iter().zip(&state.opt) {
+        write_tensor(&mut f, &spec.name, t)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path, entry: &ConfigEntry) -> Result<ModelState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a DPT checkpoint: {path:?}");
+    }
+    let cfg_id = read_str(&mut f)?;
+    if cfg_id != entry.cfg_id {
+        bail!("checkpoint is for config '{cfg_id}', expected '{}'", entry.cfg_id);
+    }
+    let np = read_u64(&mut f)? as usize;
+    if np != entry.params.len() {
+        bail!("checkpoint has {np} params, manifest wants {}", entry.params.len());
+    }
+    let mut params = Vec::with_capacity(np);
+    for spec in &entry.params {
+        let (name, t) = read_tensor(&mut f)?;
+        if name != spec.name || t.shape != spec.shape {
+            bail!("checkpoint param mismatch: {name} vs {}", spec.name);
+        }
+        params.push(t);
+    }
+    let no = read_u64(&mut f)? as usize;
+    if no != entry.opt_state.len() {
+        bail!("checkpoint has {no} opt tensors, manifest wants {}", entry.opt_state.len());
+    }
+    let mut opt = Vec::with_capacity(no);
+    for spec in &entry.opt_state {
+        let (name, t) = read_tensor(&mut f)?;
+        if name != spec.name || t.shape != spec.shape {
+            bail!("checkpoint OS mismatch: {name} vs {}", spec.name);
+        }
+        opt.push(t);
+    }
+    Ok(ModelState { params, opt })
+}
+
+fn write_u64(f: &mut impl Write, v: u64) -> Result<()> {
+    f.write_all(&v.to_le_bytes()).map_err(Into::into)
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(f, s.len() as u64)?;
+    f.write_all(s.as_bytes()).map_err(Into::into)
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let n = read_u64(f)? as usize;
+    if n > 1 << 20 {
+        bail!("implausible string length {n}");
+    }
+    let mut b = vec![0u8; n];
+    f.read_exact(&mut b)?;
+    String::from_utf8(b).context("checkpoint string not utf-8")
+}
+
+fn write_tensor(f: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
+    write_str(f, name)?;
+    write_u64(f, t.shape.len() as u64)?;
+    for &d in &t.shape {
+        write_u64(f, d as u64)?;
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
+    let name = read_str(f)?;
+    let rank = read_u64(f)? as usize;
+    if rank > 8 {
+        bail!("implausible rank {rank}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(f)? as usize);
+    }
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((name, Tensor::from_vec(&shape, data)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn fake_entry() -> ConfigEntry {
+        let text = r#"{"configs":{"t":{
+            "model":{"family":"gpt2","n_layer":0,"batch":1,"seq_len":4,"moe":null},
+            "opt":{"kind":"muon_nsgd"},
+            "params":[{"name":"embed.tok","shape":[4,2],"init":"normal","std":0.02,
+                       "muon":true,"decay":false,"fan_in":4,"fan_out":2}],
+            "opt_state":[{"name":"mom.embed.tok","shape":[4,2]}],
+            "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{}}}}"#;
+        Manifest::parse(text, PathBuf::from("/tmp")).unwrap().get("t").unwrap().clone()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let entry = fake_entry();
+        let state = ModelState::init(&entry, 5);
+        let dir = std::env::temp_dir().join("dpt_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&path, "t", &state, &entry).unwrap();
+        let loaded = load(&path, &entry).unwrap();
+        assert_eq!(state.params[0].data, loaded.params[0].data);
+        assert_eq!(state.opt[0].data, loaded.opt[0].data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_config() {
+        let entry = fake_entry();
+        let state = ModelState::init(&entry, 5);
+        let dir = std::env::temp_dir().join("dpt_ckpt_test2");
+        let path = dir.join("a.ckpt");
+        save(&path, "other", &state, &entry).unwrap();
+        assert!(load(&path, &entry).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,101 @@
+//! The paper's §7 recipe, step 4: determine the expansion timing τ from two
+//! *early-stopped* small-scale probe runs.
+//!
+//! 1. Run fixed-size training of the target config.
+//! 2. Run progressive training with τ at the end of warmup.
+//! 3. Early-stop both when their validation curves mix; the token count at
+//!    the mixing point is the mixing time t_mix.
+//! 4. Takeaway 6: under WSD the mixing time transfers across τ within the
+//!    stable phase, so for the real run set τ = stable_end − t_mix.
+
+use anyhow::Result;
+
+use crate::expansion::ExpandSpec;
+use crate::metrics::mixing_point;
+use crate::schedule::Schedule;
+
+use super::{RunSpec, Trainer};
+
+#[derive(Debug, Clone)]
+pub struct ProbeOutcome {
+    /// Mixing time in steps of the probe horizon (None: did not mix).
+    pub t_mix_steps: Option<usize>,
+    /// Mixing time in tokens (the transferable quantity, §C.4).
+    pub t_mix_tokens: Option<u64>,
+    /// Suggested τ for a production horizon.
+    pub suggested_tau: Option<usize>,
+}
+
+/// Run the two probes and derive τ for a `production_steps` horizon.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_mixing_time(
+    trainer: &Trainer,
+    small: &str,
+    large: &str,
+    probe_steps: usize,
+    production_steps: usize,
+    schedule: Schedule,
+    expand_spec: ExpandSpec,
+    rel_tol: f32,
+) -> Result<ProbeOutcome> {
+    // Probe runs use a constant-LR schedule at the same peak: we only care
+    // about the stable-phase mixing time, which WSD transfers (Takeaway 6).
+    let probe_sched = Schedule::Constant { peak: schedule.peak(), warmup_frac: 0.02 };
+    let warmup_end = (probe_steps as f32 * 0.02).ceil() as usize;
+
+    let fixed = trainer.run(&RunSpec::fixed("probe-fixed", large, probe_steps, probe_sched))?;
+    let prog = trainer.run(&RunSpec::progressive(
+        "probe-prog",
+        small,
+        large,
+        warmup_end.max(1),
+        probe_steps,
+        probe_sched,
+        expand_spec,
+    ))?;
+
+    let t_mix_tokens = mixing_point(&prog.curve, &fixed.curve, rel_tol, 2);
+    let large_entry = trainer.manifest.get(large)?;
+    let tokens_per_step = large_entry.tokens_per_step() as u64;
+    // Steps elapsed after expansion until mixing.
+    let t_mix_steps = t_mix_tokens.map(|tok| {
+        let expand_tokens = prog
+            .boundaries
+            .first()
+            .map(|(s, _)| *s as u64 * tokens_per_step)
+            .unwrap_or(0);
+        ((tok.saturating_sub(expand_tokens)) / tokens_per_step) as usize
+    });
+    let suggested_tau = t_mix_steps.map(|m| {
+        let stable_end = schedule.stable_end(production_steps);
+        stable_end.saturating_sub(m).max(1)
+    });
+    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Curve, CurvePoint};
+
+    #[test]
+    fn tau_derivation_from_mixing() {
+        // Pure-curve check of the τ arithmetic (no engine needed).
+        let mk = |vals: &[(u64, f32)]| {
+            let mut c = Curve::new("c");
+            for (i, &(t, v)) in vals.iter().enumerate() {
+                c.push(CurvePoint { step: i, tokens: t, flops: 0.0, train_loss: v, val_loss: v, lr: 0.01 });
+            }
+            c
+        };
+        let fixed = mk(&[(0, 4.0), (1000, 3.0), (2000, 2.5), (3000, 2.3)]);
+        let prog = mk(&[(0, 5.0), (1000, 3.6), (2000, 2.51), (3000, 2.31)]);
+        let t = mixing_point(&prog, &fixed, 0.02, 2).unwrap();
+        assert_eq!(t, 2000);
+        // stable_end(10_000) under WSD(20% decay) = 8000; τ = 8000 − t_mix.
+        let sched = Schedule::wsd(0.01);
+        let t_mix_steps = (t / 512) as usize;
+        let tau = sched.stable_end(10_000) - t_mix_steps;
+        assert_eq!(tau, 8000 - 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Class-conditional synthetic images for the ResNet experiments
+//! (ImageNet substitution, DESIGN.md §Substitutions).
+//!
+//! Each class c has a fixed smooth template T_c (random low-frequency
+//! pattern); a sample is `T_c + σ·noise`. Classes are separable but noisy
+//! enough that deeper stacks improve the fit — which is all the paper's
+//! ResNet panels measure (stage-wise expansion behavior, Fig 7 / §A.3).
+
+use crate::util::rng::Rng;
+
+pub struct ImageGen {
+    pub n_classes: usize,
+    pub size: usize,
+    templates: Vec<Vec<f32>>, // [class][H*W*3]
+    noise: f32,
+    rng: Rng,
+}
+
+impl ImageGen {
+    pub fn new(n_classes: usize, size: usize, noise: f32, seed: u64) -> ImageGen {
+        let mut rng = Rng::new(seed);
+        let mut templates = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            // Low-frequency template: sum of a few random sinusoids per channel.
+            let mut t = vec![0.0f32; size * size * 3];
+            for ch in 0..3 {
+                for _ in 0..4 {
+                    let fx = rng.uniform() * 3.0 + 0.5;
+                    let fy = rng.uniform() * 3.0 + 0.5;
+                    let phase = rng.uniform() * std::f64::consts::TAU;
+                    let amp = (rng.uniform() * 0.5 + 0.25) as f32;
+                    for y in 0..size {
+                        for x in 0..size {
+                            let v = ((x as f64 / size as f64 * fx
+                                + y as f64 / size as f64 * fy)
+                                * std::f64::consts::TAU
+                                + phase)
+                                .sin() as f32;
+                            t[(y * size + x) * 3 + ch] += amp * v;
+                        }
+                    }
+                }
+            }
+            templates.push(t);
+        }
+        ImageGen { n_classes, size, templates, noise, rng }
+    }
+
+    /// Fill a batch: returns (images [B,H,W,3] flattened, labels [B]).
+    pub fn next_batch(&mut self, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let px = self.size * self.size * 3;
+        let mut imgs = Vec::with_capacity(batch * px);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = self.rng.below(self.n_classes);
+            labels.push(c as i32);
+            let t = &self.templates[c];
+            for &v in t {
+                imgs.push(v + self.rng.normal() as f32 * self.noise);
+            }
+        }
+        (imgs, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut g = ImageGen::new(10, 8, 0.3, 1);
+        let (imgs, labels) = g.next_batch(4);
+        assert_eq!(imgs.len(), 4 * 8 * 8 * 3);
+        assert_eq!(labels.len(), 4);
+        assert!(labels.iter().all(|&l| (l as usize) < 10));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-template classification on clean templates must be exact.
+        let g = ImageGen::new(6, 8, 0.0, 2);
+        for c in 0..6 {
+            let t = &g.templates[c];
+            let best = (0..6)
+                .min_by(|&a, &b| {
+                    let da: f32 = g.templates[a].iter().zip(t).map(|(x, y)| (x - y).powi(2)).sum();
+                    let db: f32 = g.templates[b].iter().zip(t).map(|(x, y)| (x - y).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            assert_eq!(best, c);
+        }
+    }
+}

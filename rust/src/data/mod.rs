@@ -1,0 +1,16 @@
+//! Synthetic data substrate (paper: OpenWebText / ImageNet — substituted per
+//! DESIGN.md: a Markov-Zipf language corpus with a *known entropy floor*, and
+//! class-conditional synthetic images).
+//!
+//! Why a Markov source: progressive-training dynamics (mixing, loss spikes,
+//! schedule sensitivity) require a learnable non-trivial distribution. A
+//! k-order Markov chain with Zipfian emissions gives (a) structure a deeper
+//! model exploits, (b) an analytically computable optimal loss, so "the
+//! progressive run mixed with the fixed-size run" is measurable against an
+//! absolute reference.
+
+pub mod corpus;
+pub mod images;
+
+pub use corpus::{Batcher, Corpus, CorpusConfig};
+pub use images::ImageGen;

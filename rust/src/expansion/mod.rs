@@ -1,0 +1,496 @@
+//! Depth-expansion engine: §3's initialization strategies, §A.3's insertion
+//! orders, and §C.2's optimizer-state policies.
+//!
+//! Given a source model's state and a (deeper) target config from the same
+//! family/width, produce the target's initial state. Layer-indexed parameter
+//! names (`layer.{i}.*`, `stage.{s}.block.{b}.*`) drive the remapping; the
+//! target manifest's init specs drive muP-consistent random initialization
+//! of new layers (hyperparameter transfer depends on this, §3.2).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ConfigEntry, InitKind, ParamSpec};
+use crate::runtime::{ModelState, Tensor};
+use crate::util::rng::Rng;
+
+/// §3.1 / §A: how new layers are initialized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// New layers drawn from the target's init distribution (the winning
+    /// strategy for zero/one-layer sources — Takeaway 1).
+    Random,
+    /// New layers copied from source layers under an ordering.
+    Copying(CopyOrder),
+    /// New layers all-zero: function-preserving but kills feature learning
+    /// (Takeaway 2).
+    Zero,
+    /// Copy, but zero the *norm gains* of new layers (Shen et al. 2022).
+    CopyingZeroN,
+    /// Copy, but zero the *last linear* of each new block (LEMON/G_zero):
+    /// function-preserving AND trainable (§A.2).
+    CopyingZeroL,
+}
+
+/// §3.3: ordering for multi-layer copying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyOrder {
+    /// [1,2,3] -> [1,2,3,1,2,3]
+    Stack,
+    /// [1,2,3] -> [1,1,2,2,3,3]
+    Inter,
+    /// [1,2,3] -> [1,2,3,3,3,3]
+    Last,
+}
+
+/// §A.3: where newly *random* layers are inserted relative to old ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insertion {
+    /// Old layers keep indices 0..n_src; new layers appended after
+    /// ([1..6, R..R] — the paper's empirically-best choice).
+    Bottom,
+    /// New layers first, old layers shifted up ([R..R, 1..6]).
+    Top,
+}
+
+/// §C.2: optimizer-state handling at expansion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OsPolicy {
+    /// Keep non-layer OS; zero all hidden-layer OS ([E,H,L] -> [E,0×12,L]).
+    Inherit,
+    /// Keep non-layer OS; map hidden-layer OS like the parameters
+    /// ([E,H,L] -> [E,H×12,L]).
+    Copy,
+    /// Reset everything to zero.
+    Reset,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ExpandSpec {
+    pub strategy: Strategy,
+    pub insertion: Insertion,
+    pub os_policy: OsPolicy,
+    pub seed: u64,
+}
+
+impl Default for ExpandSpec {
+    fn default() -> Self {
+        // The paper's recipe (§7): random init, bottom insertion, inherit OS.
+        ExpandSpec { strategy: Strategy::Random, insertion: Insertion::Bottom, os_policy: OsPolicy::Inherit, seed: 7 }
+    }
+}
+
+/// Where a target layer's content comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LayerSource {
+    Src(usize),
+    /// Fresh random from manifest init.
+    Fresh,
+    /// All-zero.
+    ZeroLayer,
+    /// Copy of Src(i) with norm gains zeroed.
+    SrcZeroN(usize),
+    /// Copy of Src(i) with last-linear zeroed.
+    SrcZeroL(usize),
+}
+
+/// Table 2's applicability matrix: is (strategy, n_src) valid?
+pub fn applicable(strategy: Strategy, n_src: usize) -> bool {
+    match strategy {
+        Strategy::Random | Strategy::Zero => true,
+        Strategy::Copying(_) | Strategy::CopyingZeroN | Strategy::CopyingZeroL => n_src >= 1,
+    }
+}
+
+/// Compute the target-layer -> source mapping for a homogeneous layer stack.
+fn layer_map(n_src: usize, n_dst: usize, spec: &ExpandSpec) -> Result<Vec<LayerSource>> {
+    if n_dst < n_src {
+        bail!("cannot shrink: {n_src} -> {n_dst}");
+    }
+    if !applicable(spec.strategy, n_src) {
+        bail!("strategy {:?} not applicable to a {n_src}-layer source (Table 2)", spec.strategy);
+    }
+    let n_new = n_dst - n_src;
+    let mut map = vec![LayerSource::Fresh; n_dst];
+    match spec.strategy {
+        Strategy::Random | Strategy::Zero => {
+            let fresh = if spec.strategy == Strategy::Random { LayerSource::Fresh } else { LayerSource::ZeroLayer };
+            match spec.insertion {
+                Insertion::Bottom => {
+                    for i in 0..n_src {
+                        map[i] = LayerSource::Src(i);
+                    }
+                    for i in n_src..n_dst {
+                        map[i] = fresh;
+                    }
+                }
+                Insertion::Top => {
+                    for i in 0..n_new {
+                        map[i] = fresh;
+                    }
+                    for i in 0..n_src {
+                        map[n_new + i] = LayerSource::Src(i);
+                    }
+                }
+            }
+        }
+        Strategy::Copying(order) => {
+            for (j, slot) in map.iter_mut().enumerate() {
+                let src = match order {
+                    CopyOrder::Stack => j % n_src,
+                    CopyOrder::Inter => j * n_src / n_dst,
+                    CopyOrder::Last => j.min(n_src - 1),
+                };
+                *slot = LayerSource::Src(src);
+            }
+        }
+        Strategy::CopyingZeroN | Strategy::CopyingZeroL => {
+            // Old layers keep position; new layers are stack-copies with the
+            // designated sub-layer zeroed (function-preserving variants).
+            for i in 0..n_src {
+                map[i] = LayerSource::Src(i);
+            }
+            for j in n_src..n_dst {
+                let src = (j - n_src) % n_src;
+                map[j] = if spec.strategy == Strategy::CopyingZeroN {
+                    LayerSource::SrcZeroN(src)
+                } else {
+                    LayerSource::SrcZeroL(src)
+                };
+            }
+        }
+    }
+    Ok(map)
+}
+
+fn is_norm_gain(name: &str) -> bool {
+    name.ends_with(".g")
+}
+
+/// Last linear of each transformer block / resnet block: the sub-layer whose
+/// zeroing makes the block's residual branch output zero.
+fn is_last_linear(name: &str) -> bool {
+    name.ends_with(".attn.wo") || name.ends_with(".mlp.w2") || name.ends_with(".conv2")
+}
+
+fn fresh_tensor(spec: &ParamSpec, seed: u64) -> Tensor {
+    match spec.init {
+        InitKind::Zeros => Tensor::zeros(&spec.shape),
+        InitKind::Ones => Tensor::ones(&spec.shape),
+        InitKind::Normal { std } => {
+            let mut t = Tensor::zeros(&spec.shape);
+            Rng::for_param(seed, &spec.name).fill_normal(&mut t.data, std);
+            t
+        }
+    }
+}
+
+/// Expand a transformer state from `src` to `dst`. Both configs must share
+/// family and width (the manifest shapes enforce this — mismatches error).
+pub fn expand(
+    src_entry: &ConfigEntry,
+    dst_entry: &ConfigEntry,
+    src_state: &ModelState,
+    spec: &ExpandSpec,
+) -> Result<ModelState> {
+    if src_entry.is_resnet() != dst_entry.is_resnet() {
+        bail!("family mismatch: {} -> {}", src_entry.model.family, dst_entry.model.family);
+    }
+    if src_entry.is_resnet() {
+        return expand_resnet(src_entry, dst_entry, src_state, spec);
+    }
+    let map = layer_map(src_entry.model.n_layer, dst_entry.model.n_layer, spec)?;
+
+    let src_param = |name: &str| -> Result<&Tensor> {
+        src_entry
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .map(|i| &src_state.params[i])
+            .ok_or_else(|| anyhow::anyhow!("source missing param {name}"))
+    };
+
+    let mut params = Vec::with_capacity(dst_entry.params.len());
+    for pspec in &dst_entry.params {
+        let t = match pspec.layer_index() {
+            None => {
+                // Non-layer params carry over verbatim (same dims by family).
+                let s = src_param(&pspec.name)?;
+                if s.shape != pspec.shape {
+                    bail!("shape mismatch for {}: {:?} vs {:?}", pspec.name, s.shape, pspec.shape);
+                }
+                s.clone()
+            }
+            Some(j) => match map[j] {
+                LayerSource::Fresh => fresh_tensor(pspec, spec.seed),
+                LayerSource::ZeroLayer => Tensor::zeros(&pspec.shape),
+                LayerSource::Src(i) => src_param(&pspec.renamed_to_layer(i))?.clone(),
+                LayerSource::SrcZeroN(i) => {
+                    if is_norm_gain(&pspec.name) {
+                        Tensor::zeros(&pspec.shape)
+                    } else {
+                        src_param(&pspec.renamed_to_layer(i))?.clone()
+                    }
+                }
+                LayerSource::SrcZeroL(i) => {
+                    if is_last_linear(&pspec.name) {
+                        Tensor::zeros(&pspec.shape)
+                    } else {
+                        src_param(&pspec.renamed_to_layer(i))?.clone()
+                    }
+                }
+            },
+        };
+        if t.shape != pspec.shape {
+            bail!("expansion produced wrong shape for {}", pspec.name);
+        }
+        params.push(t);
+    }
+
+    let opt = expand_opt_state(src_entry, dst_entry, src_state, &map, spec)?;
+    Ok(ModelState { params, opt })
+}
+
+/// Split an optimizer-state name into (slot prefix, parameter name).
+fn split_os_name(name: &str) -> (&str, &str) {
+    match name.split_once('.') {
+        Some((pre, rest)) if matches!(pre, "mom" | "m" | "v") => (pre, rest),
+        _ => ("", name), // e.g. adamw's "t" counter
+    }
+}
+
+fn expand_opt_state(
+    src_entry: &ConfigEntry,
+    dst_entry: &ConfigEntry,
+    src_state: &ModelState,
+    map: &[LayerSource],
+    spec: &ExpandSpec,
+) -> Result<Vec<Tensor>> {
+    let src_os = |name: &str| -> Option<&Tensor> {
+        src_entry.opt_state.iter().position(|o| o.name == name).map(|i| &src_state.opt[i])
+    };
+    let mut out = Vec::with_capacity(dst_entry.opt_state.len());
+    for ospec in &dst_entry.opt_state {
+        if spec.os_policy == OsPolicy::Reset {
+            out.push(Tensor::zeros(&ospec.shape));
+            continue;
+        }
+        let (slot, pname) = split_os_name(&ospec.name);
+        // Which layer does this OS tensor belong to?
+        let layer = pname
+            .strip_prefix("layer.")
+            .and_then(|r| r.split('.').next())
+            .and_then(|s| s.parse::<usize>().ok())
+            .or_else(|| {
+                // resnet: stage.s.block.b -> flat index handled by caller map
+                None
+            });
+        let t = match layer {
+            None => src_os(&ospec.name).cloned().unwrap_or_else(|| Tensor::zeros(&ospec.shape)),
+            Some(j) => match spec.os_policy {
+                OsPolicy::Inherit => Tensor::zeros(&ospec.shape),
+                OsPolicy::Copy => match map.get(j).copied() {
+                    Some(LayerSource::Src(i))
+                    | Some(LayerSource::SrcZeroN(i))
+                    | Some(LayerSource::SrcZeroL(i)) => {
+                        let rest: Vec<&str> = pname.split('.').skip(2).collect();
+                        let src_name = if slot.is_empty() {
+                            format!("layer.{i}.{}", rest.join("."))
+                        } else {
+                            format!("{slot}.layer.{i}.{}", rest.join("."))
+                        };
+                        src_os(&src_name).cloned().unwrap_or_else(|| Tensor::zeros(&ospec.shape))
+                    }
+                    _ => Tensor::zeros(&ospec.shape),
+                },
+                OsPolicy::Reset => unreachable!(),
+            },
+        };
+        if t.shape != ospec.shape {
+            bail!("OS shape mismatch for {}", ospec.name);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// ResNet stage-wise expansion (§A.3's intermittent insertion): block 0 of
+/// each stage carries over; blocks >= 1 expand within the stage.
+fn expand_resnet(
+    src_entry: &ConfigEntry,
+    dst_entry: &ConfigEntry,
+    src_state: &ModelState,
+    spec: &ExpandSpec,
+) -> Result<ModelState> {
+    let src_stages = src_entry.model.stages.clone().unwrap_or_default();
+    let dst_stages = dst_entry.model.stages.clone().unwrap_or_default();
+    if src_stages.len() != dst_stages.len() {
+        bail!("stage count mismatch");
+    }
+    // Per stage: same-shape blocks are 1..n; block 0 maps to block 0.
+    // Validity: copying needs at least one same-shape source block.
+    for (s, (&a, &b)) in src_stages.iter().zip(&dst_stages).enumerate() {
+        if b < a {
+            bail!("stage {s} shrinks: {a} -> {b}");
+        }
+        let needs_copy_src = matches!(
+            spec.strategy,
+            Strategy::Copying(_) | Strategy::CopyingZeroN | Strategy::CopyingZeroL
+        );
+        if needs_copy_src && b > a && a < 2 {
+            bail!("stage {s}: copying needs a same-shape source block (paper zero-layer analogy)");
+        }
+    }
+
+    let src_param = |name: &str| -> Option<&Tensor> {
+        src_entry.params.iter().position(|p| p.name == name).map(|i| &src_state.params[i])
+    };
+
+    // Map dst (stage, block) -> source block within the same stage.
+    let block_src = |stage: usize, block: usize| -> LayerSource {
+        let a = src_stages[stage];
+        let b = dst_stages[stage];
+        if block == 0 {
+            return LayerSource::Src(0);
+        }
+        if block < a {
+            return LayerSource::Src(block);
+        }
+        match spec.strategy {
+            Strategy::Random => LayerSource::Fresh,
+            Strategy::Zero => LayerSource::ZeroLayer,
+            Strategy::Copying(order) => {
+                // Same-shape source blocks are 1..a.
+                let k = a - 1; // count of same-shape sources (>=1, validated)
+                let j = block - 1;
+                let idx = match order {
+                    CopyOrder::Stack => j % k,
+                    CopyOrder::Inter => j * k / (b - 1).max(1),
+                    CopyOrder::Last => j.min(k - 1),
+                };
+                LayerSource::Src(1 + idx.min(k - 1))
+            }
+            Strategy::CopyingZeroN => LayerSource::SrcZeroN(1 + (block - 1) % (a - 1)),
+            Strategy::CopyingZeroL => LayerSource::SrcZeroL(1 + (block - 1) % (a - 1)),
+        }
+    };
+
+    let mut params = Vec::with_capacity(dst_entry.params.len());
+    for pspec in &dst_entry.params {
+        let t = match pspec.stage_block() {
+            None => src_param(&pspec.name)
+                .ok_or_else(|| anyhow::anyhow!("source missing {}", pspec.name))?
+                .clone(),
+            Some((s, b)) => {
+                let rest: Vec<&str> = pspec.name.split('.').skip(4).collect();
+                let rename = |i: usize| format!("stage.{s}.block.{i}.{}", rest.join("."));
+                match block_src(s, b) {
+                    LayerSource::Fresh => fresh_tensor(pspec, spec.seed),
+                    LayerSource::ZeroLayer => Tensor::zeros(&pspec.shape),
+                    LayerSource::Src(i) => src_param(&rename(i))
+                        .filter(|t| t.shape == pspec.shape)
+                        .cloned()
+                        .unwrap_or_else(|| fresh_tensor(pspec, spec.seed)),
+                    LayerSource::SrcZeroN(i) => {
+                        if is_norm_gain(&pspec.name) {
+                            Tensor::zeros(&pspec.shape)
+                        } else {
+                            src_param(&rename(i)).cloned().unwrap_or_else(|| fresh_tensor(pspec, spec.seed))
+                        }
+                    }
+                    LayerSource::SrcZeroL(i) => {
+                        if is_last_linear(&pspec.name) {
+                            Tensor::zeros(&pspec.shape)
+                        } else {
+                            src_param(&rename(i)).cloned().unwrap_or_else(|| fresh_tensor(pspec, spec.seed))
+                        }
+                    }
+                }
+            }
+        };
+        if t.shape != pspec.shape {
+            bail!("resnet expansion produced wrong shape for {}", pspec.name);
+        }
+        params.push(t);
+    }
+    // ResNet OS: inherit non-block state, zero block state (Inherit), or
+    // reset — Copy across stages is not meaningful with shape changes.
+    let opt = dst_entry
+        .opt_state
+        .iter()
+        .map(|ospec| {
+            if spec.os_policy == OsPolicy::Reset {
+                return Tensor::zeros(&ospec.shape);
+            }
+            let (_, pname) = split_os_name(&ospec.name);
+            if pname.starts_with("stage.") {
+                Tensor::zeros(&ospec.shape)
+            } else {
+                src_entry
+                    .opt_state
+                    .iter()
+                    .position(|o| o.name == ospec.name)
+                    .map(|i| src_state.opt[i].clone())
+                    .unwrap_or_else(|| Tensor::zeros(&ospec.shape))
+            }
+        })
+        .collect();
+    Ok(ModelState { params, opt })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_applicability() {
+        // Table 2: copying-family invalid from zero-layer sources.
+        assert!(applicable(Strategy::Random, 0));
+        assert!(applicable(Strategy::Zero, 0));
+        assert!(!applicable(Strategy::Copying(CopyOrder::Stack), 0));
+        assert!(!applicable(Strategy::CopyingZeroL, 0));
+        assert!(applicable(Strategy::Copying(CopyOrder::Inter), 1));
+    }
+
+    #[test]
+    fn copy_orders() {
+        let spec = ExpandSpec { strategy: Strategy::Copying(CopyOrder::Stack), ..Default::default() };
+        let m = layer_map(3, 6, &spec).unwrap();
+        let idx: Vec<_> = m.iter().map(|s| match s { LayerSource::Src(i) => *i, _ => 99 }).collect();
+        assert_eq!(idx, vec![0, 1, 2, 0, 1, 2]);
+
+        let spec = ExpandSpec { strategy: Strategy::Copying(CopyOrder::Inter), ..Default::default() };
+        let m = layer_map(3, 6, &spec).unwrap();
+        let idx: Vec<_> = m.iter().map(|s| match s { LayerSource::Src(i) => *i, _ => 99 }).collect();
+        assert_eq!(idx, vec![0, 0, 1, 1, 2, 2]);
+
+        let spec = ExpandSpec { strategy: Strategy::Copying(CopyOrder::Last), ..Default::default() };
+        let m = layer_map(3, 6, &spec).unwrap();
+        let idx: Vec<_> = m.iter().map(|s| match s { LayerSource::Src(i) => *i, _ => 99 }).collect();
+        assert_eq!(idx, vec![0, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn one_layer_stack_equals_inter() {
+        // Takeaway 3: for one-layer sources the orderings coincide.
+        let a = layer_map(1, 6, &ExpandSpec { strategy: Strategy::Copying(CopyOrder::Stack), ..Default::default() }).unwrap();
+        let b = layer_map(1, 6, &ExpandSpec { strategy: Strategy::Copying(CopyOrder::Inter), ..Default::default() }).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn insertion_orders() {
+        let bottom = layer_map(2, 5, &ExpandSpec::default()).unwrap();
+        assert_eq!(bottom[0], LayerSource::Src(0));
+        assert_eq!(bottom[1], LayerSource::Src(1));
+        assert_eq!(bottom[4], LayerSource::Fresh);
+        let top = layer_map(2, 5, &ExpandSpec { insertion: Insertion::Top, ..Default::default() }).unwrap();
+        assert_eq!(top[0], LayerSource::Fresh);
+        assert_eq!(top[3], LayerSource::Src(0));
+        assert_eq!(top[4], LayerSource::Src(1));
+    }
+
+    #[test]
+    fn shrink_rejected() {
+        assert!(layer_map(6, 3, &ExpandSpec::default()).is_err());
+    }
+}

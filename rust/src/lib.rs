@@ -1,0 +1,27 @@
+//! Deep Progressive Training: zero/one-layer depth expansion for efficient
+//! pre-training — a rust + JAX + Pallas reproduction (AOT via PJRT).
+//!
+//! Layering (see DESIGN.md):
+//! - [`runtime`]: loads AOT'd HLO-text artifacts and executes them (PJRT CPU).
+//! - [`coordinator`]: the paper's contribution — progressive-training
+//!   orchestration: expansion timing, mixing detection, multi-stage schedules.
+//! - [`expansion`]: depth-expansion engine (random/copying/zero/... of §3).
+//! - [`schedule`]: WSD / cosine learning-rate schedules (§4's key lever).
+//! - [`data`]: synthetic Markov-Zipf corpus with a known entropy floor.
+//! - [`flops`]: 6·B·T·N compute ledger (paper Eq. 1.1 accounting).
+//! - [`convex`]: §4 convergence-theory simulator.
+//! - [`scaling`]: power-law fits for the Fig-2 scaling laws.
+//! - [`metrics`]: loss curves, the §5 mixing detector, table/CSV writers.
+pub mod util;
+pub mod runtime;
+pub mod schedule;
+pub mod data;
+pub mod flops;
+pub mod expansion;
+pub mod metrics;
+pub mod coordinator;
+pub mod convex;
+pub mod scaling;
+pub mod checkpoint;
+pub mod bench;
+pub mod cli;

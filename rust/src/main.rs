@@ -1,0 +1,227 @@
+//! `repro` — launcher for the Deep Progressive Training reproduction.
+//!
+//! Commands:
+//!   train <cfg_id> [--steps N] [--sched wsd|cosine|constant] [--lr F]
+//!         [--seed N]                                fixed-size training
+//!   progressive <small> <large> [--tau N|--tau-frac F] [--steps N] ...
+//!         [--strategy random|copying|zero|zero_n|zero_l] [--insertion top|bottom]
+//!   probe-mixing <small> <large> [--probe-steps N] [--steps N]
+//!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
+//!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
+//!   bench-<target>  (fig1..fig22, table1, table2, theory, all)
+//!   list / list-benches / inspect <cfg_id>
+//!
+//! Python never runs here: artifacts are AOT'd once by `make artifacts`.
+
+use anyhow::Result;
+use deep_progressive::bench::{run_target, Ctx, ALL_TARGETS};
+use deep_progressive::checkpoint;
+use deep_progressive::cli::Args;
+use deep_progressive::convex::{simulate, ConvexProblem, Teleport};
+use deep_progressive::coordinator::{recipe, RunSpec, Trainer};
+use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, Strategy};
+use deep_progressive::runtime::{Engine, Manifest};
+use deep_progressive::schedule::Schedule;
+
+fn schedule_from(args: &Args) -> Schedule {
+    let lr = args.get_f32("lr", 0.01);
+    match args.get_str("sched", "wsd") {
+        "cosine" => Schedule::cosine(lr),
+        "constant" => Schedule::Constant { peak: lr, warmup_frac: 0.02 },
+        "linear" => Schedule::Linear { peak: lr, warmup_frac: 0.02 },
+        _ => Schedule::Wsd { peak: lr, warmup_frac: 0.02, decay_frac: args.get_f32("decay-frac", 0.2) },
+    }
+}
+
+fn expand_from(args: &Args) -> ExpandSpec {
+    let strategy = match args.get_str("strategy", "random") {
+        "copying" | "copying_stack" => Strategy::Copying(CopyOrder::Stack),
+        "copying_inter" => Strategy::Copying(CopyOrder::Inter),
+        "copying_last" => Strategy::Copying(CopyOrder::Last),
+        "zero" => Strategy::Zero,
+        "zero_n" | "copying_zero_n" => Strategy::CopyingZeroN,
+        "zero_l" | "copying_zero_l" => Strategy::CopyingZeroL,
+        _ => Strategy::Random,
+    };
+    ExpandSpec {
+        strategy,
+        insertion: if args.get_str("insertion", "bottom") == "top" { Insertion::Top } else { Insertion::Bottom },
+        os_policy: match args.get_str("os", "inherit") {
+            "copy" => deep_progressive::expansion::OsPolicy::Copy,
+            "reset" => deep_progressive::expansion::OsPolicy::Reset,
+            _ => deep_progressive::expansion::OsPolicy::Inherit,
+        },
+        seed: args.get_u64("expand-seed", 7),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_str("artifacts", "artifacts").to_string();
+    let out = args.get_str("out", "results").to_string();
+    let steps = args.get_usize("steps", 240);
+    let seed = args.get_u64("seed", 17);
+
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "list" => {
+            let m = Manifest::load(&artifacts)?;
+            for (id, c) in &m.configs {
+                println!(
+                    "{id:24} {} n_layer={:<3} params={:<9} active={:<9} artifacts={:?}",
+                    c.model.family,
+                    c.model.n_layer,
+                    c.param_count,
+                    c.active_param_count,
+                    c.artifacts.keys().collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "list-benches" => {
+            for t in ALL_TARGETS {
+                println!("bench-{t}");
+            }
+            Ok(())
+        }
+        "inspect" => {
+            let m = Manifest::load(&artifacts)?;
+            let c = m.get(&args.positional[0])?;
+            println!("config {}: {} params, {} active", c.cfg_id, c.param_count, c.active_param_count);
+            for p in &c.params {
+                println!("  {:32} {:?} init={:?} muon={}", p.name, p.shape, p.init, p.muon);
+            }
+            Ok(())
+        }
+        "train" => {
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let cfg_id = args.positional.first().expect("usage: train <cfg_id>").clone();
+            let mut spec = RunSpec::fixed(format!("train-{cfg_id}"), &cfg_id, steps, schedule_from(&args));
+            spec.seed = seed;
+            let res = trainer.run(&spec)?;
+            res.curve.write_csv(std::path::Path::new(&out))?;
+            println!(
+                "final val loss {:.4} | {:.2e} FLOPs | {} tokens | entropy floor {:.3}",
+                res.final_val_loss, res.ledger.total, res.ledger.tokens, corpus.entropy_floor
+            );
+            Ok(())
+        }
+        "progressive" => {
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let small = args.positional.first().expect("usage: progressive <small> <large>").clone();
+            let large = args.positional.get(1).expect("usage: progressive <small> <large>").clone();
+            let tau = args
+                .get("tau")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(((steps as f32) * args.get_f32("tau-frac", 0.8)) as usize);
+            let mut spec = RunSpec::progressive(
+                format!("prog-{small}-{large}"),
+                &small,
+                &large,
+                tau,
+                steps,
+                schedule_from(&args),
+                expand_from(&args),
+            );
+            spec.seed = seed;
+            let res = trainer.run(&spec)?;
+            res.curve.write_csv(std::path::Path::new(&out))?;
+            let fixed_flops = trainer.fixed_flops(&large, steps)?;
+            println!(
+                "final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed) | expansion at step {tau}",
+                res.final_val_loss,
+                res.ledger.total,
+                (1.0 - res.ledger.total / fixed_flops) * 100.0
+            );
+            Ok(())
+        }
+        "probe-mixing" => {
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let small = args.positional.first().expect("usage: probe-mixing <small> <large>").clone();
+            let large = args.positional.get(1).expect("usage: probe-mixing <small> <large>").clone();
+            let probe_steps = args.get_usize("probe-steps", steps);
+            let production = args.get_usize("production-steps", steps * 10);
+            let outcome = recipe::probe_mixing_time(
+                &trainer,
+                &small,
+                &large,
+                probe_steps,
+                production,
+                schedule_from(&args),
+                expand_from(&args),
+                args.get_f32("tol", 0.04),
+            )?;
+            println!("{outcome:?}");
+            Ok(())
+        }
+        "convex" => {
+            let dim = args.get_usize("dim", 32);
+            let p = ConvexProblem::new(dim, dim * 4, seed);
+            let total = args.get_usize("steps", 800);
+            let tau = (total as f32 * args.get_f32("tau-frac", 0.8)) as usize;
+            let sched = schedule_from(&args);
+            let (fixed, prog) = simulate(&p, dim / 2, sched, tau, total, Teleport::Zero, seed);
+            println!("fixed:       loss {:.5}  bound {:.5}", fixed.final_loss, fixed.bound);
+            println!("progressive: loss {:.5}  bound {:.5}", prog.final_loss, prog.bound);
+            Ok(())
+        }
+        "expand-ckpt" => {
+            // Offline expansion of a checkpoint (library checkpoint format).
+            let manifest = Manifest::load(&artifacts)?;
+            let src_id = args.positional.first().expect("usage: expand-ckpt <src> <dst> --in a --out-ckpt b").clone();
+            let dst_id = args.positional.get(1).expect("usage: expand-ckpt <src> <dst>").clone();
+            let src = manifest.get(&src_id)?;
+            let dst = manifest.get(&dst_id)?;
+            let state = checkpoint::load(std::path::Path::new(args.get("in").expect("--in")), src)?;
+            let big = deep_progressive::expansion::expand(src, dst, &state, &expand_from(&args))?;
+            checkpoint::save(std::path::Path::new(args.get("out-ckpt").expect("--out-ckpt")), &dst_id, &big, dst)?;
+            println!("expanded {src_id} -> {dst_id}");
+            Ok(())
+        }
+        cmd if cmd.starts_with("bench-") => {
+            let ctx = Ctx::new(&artifacts, &out, steps, seed)?;
+            run_target(&ctx, &cmd[6..])
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = r#"repro — Deep Progressive Training reproduction launcher
+
+USAGE: repro <command> [args]
+
+  train <cfg_id>                    fixed-size training run
+  progressive <small> <large>       zero/one-layer progressive training
+  probe-mixing <small> <large>      derive τ from two early-stopped probes (§7)
+  convex                            §4 convex-theory simulator
+  expand-ckpt <src> <dst>           offline checkpoint depth expansion
+  bench-fig1 .. bench-fig22         reproduce each paper figure
+  bench-table1 bench-table2         reproduce the paper tables
+  bench-theory                      §4 bound verification
+  bench-all                         everything
+  list | list-benches | inspect <cfg_id>
+
+COMMON FLAGS
+  --steps N          horizon (default 240; figures scale internally)
+  --lr F --sched wsd|cosine|constant --decay-frac F
+  --strategy random|copying|copying_inter|copying_last|zero|zero_n|zero_l
+  --insertion bottom|top   --os inherit|copy|reset
+  --tau N | --tau-frac F   --seed N
+  --artifacts DIR (default artifacts)   --out DIR (default results)
+"#;

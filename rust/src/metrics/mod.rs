@@ -1,0 +1,220 @@
+//! Run metrics: loss curves keyed by (step, tokens, flops), CSV/JSONL
+//! writers, and the mixing detector.
+//!
+//! "Mixing" (§5) is the paper's central observable: the progressive run's
+//! loss curve merging into the fixed-size run's. The detector compares two
+//! curves on a common x-axis (tokens — §C.4 shows mixing is data-, not
+//! iteration-counted) and reports the first point after which the gap stays
+//! within tolerance.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One logged evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub tokens: u64,
+    pub flops: f64,
+    pub train_loss: f32,
+    pub val_loss: f32,
+    pub lr: f32,
+}
+
+/// A named loss curve (one run).
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>) -> Curve {
+        Curve { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_val_loss(&self) -> Option<f32> {
+        self.points.last().map(|p| p.val_loss)
+    }
+
+    /// Linear interpolation of val loss at a token count.
+    pub fn val_at_tokens(&self, tokens: u64) -> Option<f32> {
+        let pts = &self.points;
+        if pts.is_empty() || tokens < pts[0].tokens {
+            return None;
+        }
+        for w in pts.windows(2) {
+            if tokens >= w[0].tokens && tokens <= w[1].tokens {
+                let span = (w[1].tokens - w[0].tokens).max(1) as f32;
+                let t = (tokens - w[0].tokens) as f32 / span;
+                return Some(w[0].val_loss * (1.0 - t) + w[1].val_loss * t);
+            }
+        }
+        pts.last().map(|p| p.val_loss)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,tokens,flops,train_loss,val_loss,lr\n");
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6e},{:.6},{:.6},{:.6e}",
+                p.step, p.tokens, p.flops, p.train_loss, p.val_loss, p.lr
+            );
+        }
+        s
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.csv", self.name)), self.to_csv())
+    }
+}
+
+/// Mixing detector (§5): first token count after which
+/// |progressive − fixed| / fixed ≤ `rel_tol` for `holdout` consecutive
+/// progressive eval points through the end of the overlap.
+pub fn mixing_point(progressive: &Curve, fixed: &Curve, rel_tol: f32, holdout: usize) -> Option<u64> {
+    let pts = &progressive.points;
+    if pts.is_empty() {
+        return None;
+    }
+    let ok = |i: usize| -> bool {
+        let p = pts[i];
+        match fixed.val_at_tokens(p.tokens) {
+            Some(f) => (p.val_loss - f).abs() / f.max(1e-6) <= rel_tol,
+            None => false,
+        }
+    };
+    let mut run = 0usize;
+    let mut candidate: Option<u64> = None;
+    for i in 0..pts.len() {
+        if ok(i) {
+            if run == 0 {
+                candidate = Some(pts[i].tokens);
+            }
+            run += 1;
+        } else {
+            run = 0;
+            candidate = None;
+        }
+    }
+    if run >= holdout {
+        candidate
+    } else {
+        None
+    }
+}
+
+/// Monotone helper: once mixed at the end, mixing_point is stable under
+/// appending more in-tolerance points (invariant under test + proptest).
+pub fn is_mixed(progressive: &Curve, fixed: &Curve, rel_tol: f32, holdout: usize) -> bool {
+    mixing_point(progressive, fixed, rel_tol, holdout).is_some()
+}
+
+/// Markdown table writer for bench outputs (the "paper rows" printer).
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, width) in cells.iter().zip(w) {
+                let _ = write!(out, " {c:width$} |");
+            }
+            out.push('\n');
+        };
+        line(&self.header, &w, &mut out);
+        out.push('|');
+        for width in &w {
+            let _ = write!(out, "{:-<1$}|", "", width + 2);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &w, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(name: &str, vals: &[(u64, f32)]) -> Curve {
+        let mut c = Curve::new(name);
+        for (i, &(tokens, v)) in vals.iter().enumerate() {
+            c.push(CurvePoint { step: i, tokens, flops: 0.0, train_loss: v, val_loss: v, lr: 0.01 });
+        }
+        c
+    }
+
+    #[test]
+    fn interpolation() {
+        let c = curve("a", &[(0, 4.0), (100, 2.0)]);
+        assert_eq!(c.val_at_tokens(50), Some(3.0));
+        assert_eq!(c.val_at_tokens(100), Some(2.0));
+    }
+
+    #[test]
+    fn detects_mixing() {
+        let fixed = curve("f", &[(0, 4.0), (100, 3.0), (200, 2.5), (300, 2.2), (400, 2.0)]);
+        let prog = curve("p", &[(0, 6.0), (100, 4.0), (200, 2.55), (300, 2.21), (400, 2.01)]);
+        let m = mixing_point(&prog, &fixed, 0.03, 2).unwrap();
+        assert_eq!(m, 200);
+    }
+
+    #[test]
+    fn no_mixing_when_gap_persists() {
+        let fixed = curve("f", &[(0, 4.0), (200, 2.5), (400, 2.0)]);
+        let prog = curve("p", &[(0, 6.0), (200, 3.5), (400, 3.0)]);
+        assert!(mixing_point(&prog, &fixed, 0.03, 2).is_none());
+    }
+
+    #[test]
+    fn unmixing_resets_detector() {
+        // Dips into tolerance then leaves again: not mixed.
+        let fixed = curve("f", &[(0, 4.0), (100, 3.0), (200, 2.5), (300, 2.2)]);
+        let prog = curve("p", &[(0, 4.0), (100, 3.0), (200, 3.2), (300, 3.4)]);
+        assert!(mixing_point(&prog, &fixed, 0.03, 2).is_none());
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["run", "loss"]);
+        t.row(vec!["fixed".into(), "2.01".into()]);
+        let s = t.render();
+        assert!(s.contains("| run   | loss |"));
+    }
+
+    #[test]
+    fn csv_roundtrip_columns() {
+        let c = curve("x", &[(0, 1.0)]);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,tokens,flops,train_loss,val_loss,lr"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once per
+//! process (keyed cache), and dispatches train/eval/probe steps.
+//!
+//! Execution contract (see python/compile/aot.py):
+//!   train:       [*params, *opt, x, y, lr]        -> tuple(params', opt', loss)
+//!   train_chunkK:[*params, *opt, xs, ys, lrs]     -> tuple(params', opt', losses[K])
+//!   eval:        [*params, x, y]                  -> tuple(loss)
+//!   probe:       [*params, x, y]                  -> tuple(loss, grad_norms, act_rms)
+//!
+//! Multi-output executables return ONE tuple buffer on this PJRT build, so
+//! each dispatch downloads the tuple literal, decomposes it, and re-uploads
+//! next call. The fused train_chunk artifact amortizes that round-trip K-fold
+//! — it is the hot-path dispatch unit (EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ConfigEntry, InitKind};
+use super::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+/// Model + optimizer state, ordered exactly as the manifest's layouts.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: Vec<Tensor>,
+    pub opt: Vec<Tensor>,
+}
+
+impl ModelState {
+    /// Fresh state: manifest init specs for params, zeros for optimizer.
+    /// Per-parameter RNG substreams make init independent of layout order.
+    pub fn init(entry: &ConfigEntry, seed: u64) -> ModelState {
+        let params = entry
+            .params
+            .iter()
+            .map(|spec| match spec.init {
+                InitKind::Zeros => Tensor::zeros(&spec.shape),
+                InitKind::Ones => Tensor::ones(&spec.shape),
+                InitKind::Normal { std } => {
+                    let mut t = Tensor::zeros(&spec.shape);
+                    Rng::for_param(seed, &spec.name).fill_normal(&mut t.data, std);
+                    t
+                }
+            })
+            .collect();
+        let opt = entry.opt_state.iter().map(|o| Tensor::zeros(&o.shape)).collect();
+        ModelState { params, opt }
+    }
+
+    pub fn param(&self, entry: &ConfigEntry, name: &str) -> Option<&Tensor> {
+        entry.params.iter().position(|p| p.name == name).map(|i| &self.params[i])
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()?, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile-or-fetch an executable for an artifact path.
+    pub fn load(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// One fused K-step dispatch. `xs`/`ys` are [K,B,S] (or [K,B,...] for
+    /// resnet), `lrs` has K entries. Returns the K per-micro-step losses.
+    pub fn train_chunk(
+        &self,
+        entry: &ConfigEntry,
+        root: &Path,
+        state: &mut ModelState,
+        xs: &IntTensor,
+        ys: &IntTensor,
+        lrs: &[f32],
+        images: Option<&Tensor>,
+    ) -> Result<Vec<f32>> {
+        let func = format!("train_chunk{}", entry.chunk);
+        let exe = self.load(&entry.artifact_path(root, &func)?)?;
+        let mut args = Vec::with_capacity(state.params.len() + state.opt.len() + 3);
+        for t in state.params.iter().chain(state.opt.iter()) {
+            args.push(t.to_literal()?);
+        }
+        match images {
+            Some(img) => args.push(img.to_literal()?),
+            None => args.push(xs.to_literal()?),
+        }
+        args.push(ys.to_literal()?);
+        args.push(Tensor::from_vec(&[lrs.len()], lrs.to_vec())?.to_literal()?);
+        let outs = self.run(&exe, &args)?;
+        self.unpack_state(entry, state, &outs)?;
+        let losses = outs.last().unwrap().to_vec::<f32>()?;
+        Ok(losses)
+    }
+
+    /// One single-step dispatch (used by ablations that need per-step control
+    /// the chunk unit can't express, e.g. optimizer switching mid-chunk).
+    pub fn train_step(
+        &self,
+        entry: &ConfigEntry,
+        root: &Path,
+        state: &mut ModelState,
+        x: &IntTensor,
+        y: &IntTensor,
+        lr: f32,
+        images: Option<&Tensor>,
+    ) -> Result<f32> {
+        let exe = self.load(&entry.artifact_path(root, "train")?)?;
+        let mut args = Vec::with_capacity(state.params.len() + state.opt.len() + 3);
+        for t in state.params.iter().chain(state.opt.iter()) {
+            args.push(t.to_literal()?);
+        }
+        match images {
+            Some(img) => args.push(img.to_literal()?),
+            None => args.push(x.to_literal()?),
+        }
+        args.push(y.to_literal()?);
+        args.push(Tensor::scalar(lr).to_literal()?);
+        let outs = self.run(&exe, &args)?;
+        self.unpack_state(entry, state, &outs)?;
+        outs.last().unwrap().to_vec::<f32>().map(|v| v[0]).map_err(Into::into)
+    }
+
+    fn unpack_state(&self, entry: &ConfigEntry, state: &mut ModelState, outs: &[xla::Literal]) -> Result<()> {
+        let np = state.params.len();
+        let no = state.opt.len();
+        if outs.len() != np + no + 1 {
+            bail!("artifact returned {} outputs, expected {}", outs.len(), np + no + 1);
+        }
+        for (i, lit) in outs[..np].iter().enumerate() {
+            state.params[i] = Tensor::from_literal(lit, &entry.params[i].shape)?;
+        }
+        for (i, lit) in outs[np..np + no].iter().enumerate() {
+            state.opt[i] = Tensor::from_literal(lit, &entry.opt_state[i].shape)?;
+        }
+        Ok(())
+    }
+
+    /// Validation loss on one batch.
+    pub fn eval_step(
+        &self,
+        entry: &ConfigEntry,
+        root: &Path,
+        state: &ModelState,
+        x: &IntTensor,
+        y: &IntTensor,
+        images: Option<&Tensor>,
+    ) -> Result<f32> {
+        let exe = self.load(&entry.artifact_path(root, "eval")?)?;
+        let mut args = Vec::with_capacity(state.params.len() + 2);
+        for t in &state.params {
+            args.push(t.to_literal()?);
+        }
+        match images {
+            Some(img) => args.push(img.to_literal()?),
+            None => args.push(x.to_literal()?),
+        }
+        args.push(y.to_literal()?);
+        let outs = self.run(&exe, &args)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Table-1 probe: (loss, per-group grad norms, per-layer activation RMS).
+    pub fn probe(
+        &self,
+        entry: &ConfigEntry,
+        root: &Path,
+        state: &ModelState,
+        x: &IntTensor,
+        y: &IntTensor,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let exe = self.load(&entry.artifact_path(root, "probe")?)?;
+        let mut args = Vec::with_capacity(state.params.len() + 2);
+        for t in &state.params {
+            args.push(t.to_literal()?);
+        }
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        let outs = self.run(&exe, &args)?;
+        if outs.len() != 3 {
+            bail!("probe returned {} outputs", outs.len());
+        }
+        Ok((
+            outs[0].to_vec::<f32>()?[0],
+            outs[1].to_vec::<f32>()?,
+            outs[2].to_vec::<f32>()?,
+        ))
+    }
+}

@@ -1,0 +1,312 @@
+//! Typed view of `artifacts/manifest.json` — the L2→L3 contract.
+//!
+//! The manifest pins, per config id: the ordered parameter layout (names,
+//! shapes, init distribution, muP fans), the optimizer-state layout, the
+//! artifact filenames per lowered function, and the FLOP metadata
+//! (param/active-param counts). Everything the coordinator does — init,
+//! expansion remapping, step dispatch, FLOP accounting — keys off this.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    pub muon: bool,
+    pub decay: bool,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitKind {
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Layer index for `layer.{i}.*` / `stage.{s}.block.{b}.*` names.
+    pub fn layer_index(&self) -> Option<usize> {
+        let mut it = self.name.split('.');
+        match it.next()? {
+            "layer" => it.next()?.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// (stage, block) for ResNet `stage.{s}.block.{b}.*` names.
+    pub fn stage_block(&self) -> Option<(usize, usize)> {
+        let parts: Vec<&str> = self.name.split('.').collect();
+        if parts.len() >= 4 && parts[0] == "stage" && parts[2] == "block" {
+            Some((parts[1].parse().ok()?, parts[3].parse().ok()?))
+        } else {
+            None
+        }
+    }
+
+    /// Name with the layer index replaced (identity for non-layer params).
+    pub fn renamed_to_layer(&self, new_idx: usize) -> String {
+        if self.layer_index().is_some() {
+            let rest: Vec<&str> = self.name.split('.').skip(2).collect();
+            format!("layer.{new_idx}.{}", rest.join("."))
+        } else {
+            self.name.clone()
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OptStateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeInfo {
+    pub n_experts: usize,
+    pub top_k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub family: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub image_size: usize,
+    pub n_classes: usize,
+    pub stages: Option<Vec<usize>>,
+    pub moe: Option<MoeInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub cfg_id: String,
+    pub model: ModelInfo,
+    pub opt_kind: String,
+    pub params: Vec<ParamSpec>,
+    pub opt_state: Vec<OptStateSpec>,
+    pub param_count: usize,
+    pub active_param_count: usize,
+    pub chunk: usize,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ConfigEntry {
+    pub fn is_resnet(&self) -> bool {
+        self.model.family == "resnet"
+    }
+
+    /// Tokens (or images) consumed per train step.
+    pub fn tokens_per_step(&self) -> usize {
+        if self.is_resnet() {
+            self.model.batch
+        } else {
+            self.model.batch * self.model.seq_len
+        }
+    }
+
+    pub fn artifact_path(&self, root: &Path, func: &str) -> Result<PathBuf> {
+        let rel = self
+            .artifacts
+            .get(func)
+            .ok_or_else(|| anyhow!("config {} has no artifact '{func}'", self.cfg_id))?;
+        Ok(root.join(rel))
+    }
+
+    pub fn param_spec(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+fn parse_param(j: &Json) -> Result<ParamSpec> {
+    let name = j.req("name")?.as_str().ok_or_else(|| anyhow!("param name"))?.to_string();
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("param shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("shape dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let init = match j.req("init")?.as_str() {
+        Some("normal") => InitKind::Normal {
+            std: j.req("std")?.as_f64().unwrap_or(0.0) as f32,
+        },
+        Some("zeros") => InitKind::Zeros,
+        Some("ones") => InitKind::Ones,
+        other => bail!("unknown init {:?}", other),
+    };
+    Ok(ParamSpec {
+        name,
+        shape,
+        init,
+        muon: j.get("muon").and_then(Json::as_bool).unwrap_or(false),
+        decay: j.get("decay").and_then(Json::as_bool).unwrap_or(false),
+        fan_in: j.get("fan_in").and_then(Json::as_usize).unwrap_or(0),
+        fan_out: j.get("fan_out").and_then(Json::as_usize).unwrap_or(0),
+    })
+}
+
+fn parse_model(j: &Json) -> Result<ModelInfo> {
+    let stages = j.get("stages").and_then(|s| {
+        s.as_arr()
+            .map(|a| a.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+    });
+    let moe = j.get("moe").and_then(|m| {
+        if matches!(m, Json::Null) {
+            None
+        } else {
+            Some(MoeInfo {
+                n_experts: m.get("n_experts").and_then(Json::as_usize).unwrap_or(1),
+                top_k: m.get("top_k").and_then(Json::as_usize).unwrap_or(1),
+            })
+        }
+    });
+    Ok(ModelInfo {
+        family: j.req("family")?.as_str().unwrap_or("").to_string(),
+        n_layer: j.req("n_layer")?.as_usize().unwrap_or(0),
+        d_model: j.get("d_model").and_then(Json::as_usize).unwrap_or(0),
+        n_head: j.get("n_head").and_then(Json::as_usize).unwrap_or(0),
+        vocab: j.get("vocab").and_then(Json::as_usize).unwrap_or(0),
+        seq_len: j.get("seq_len").and_then(Json::as_usize).unwrap_or(0),
+        batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
+        image_size: j.get("image_size").and_then(Json::as_usize).unwrap_or(32),
+        n_classes: j.get("n_classes").and_then(Json::as_usize).unwrap_or(10),
+        stages,
+        moe,
+    })
+}
+
+impl Manifest {
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text, root)
+    }
+
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut configs = BTreeMap::new();
+        let cfgs = j.req("configs")?.as_obj().ok_or_else(|| anyhow!("configs not an object"))?;
+        for (cfg_id, c) in cfgs {
+            let params = c
+                .req("params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params"))?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>>>()?;
+            let opt_state = c
+                .req("opt_state")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("opt_state"))?
+                .iter()
+                .map(|o| {
+                    Ok(OptStateSpec {
+                        name: o.req("name")?.as_str().unwrap_or("").to_string(),
+                        shape: o
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let artifacts = c
+                .req("artifacts")?
+                .as_obj()
+                .ok_or_else(|| anyhow!("artifacts"))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                .collect();
+            configs.insert(
+                cfg_id.clone(),
+                ConfigEntry {
+                    cfg_id: cfg_id.clone(),
+                    model: parse_model(c.req("model")?)?,
+                    opt_kind: c
+                        .req("opt")?
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("muon_nsgd")
+                        .to_string(),
+                    params,
+                    opt_state,
+                    param_count: c.req("param_count")?.as_usize().unwrap_or(0),
+                    active_param_count: c.req("active_param_count")?.as_usize().unwrap_or(0),
+                    chunk: c.get("chunk").and_then(Json::as_usize).unwrap_or(1),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { root, configs })
+    }
+
+    pub fn get(&self, cfg_id: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(cfg_id)
+            .ok_or_else(|| anyhow!("unknown config '{cfg_id}' (have: {:?})",
+                self.configs.keys().take(8).collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"configs":{"gpt2.l1":{
+        "cfg_id":"gpt2.l1",
+        "model":{"family":"gpt2","n_layer":1,"d_model":64,"n_head":4,"vocab":512,
+                 "seq_len":64,"batch":8,"moe":null},
+        "opt":{"kind":"muon_nsgd"},
+        "params":[{"name":"embed.tok","shape":[512,64],"init":"normal","std":0.02,
+                   "muon":true,"decay":false,"fan_in":512,"fan_out":64},
+                  {"name":"layer.0.attn.wq","shape":[64,64],"init":"normal","std":0.125,
+                   "muon":true,"decay":true,"fan_in":64,"fan_out":64}],
+        "opt_state":[{"name":"mom.embed.tok","shape":[512,64]},
+                     {"name":"mom.layer.0.attn.wq","shape":[64,64]}],
+        "param_count":36864,"active_param_count":36864,"chunk":8,
+        "artifacts":{"train":"gpt2.l1.train.hlo.txt","eval":"gpt2.l1.eval.hlo.txt"}
+    }}}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let c = m.get("gpt2.l1").unwrap();
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.params[1].layer_index(), Some(0));
+        assert_eq!(c.params[1].renamed_to_layer(5), "layer.5.attn.wq");
+        assert_eq!(c.tokens_per_step(), 512);
+        assert!(matches!(c.params[0].init, InitKind::Normal { .. }));
+    }
+
+    #[test]
+    fn unknown_config_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 runtime: PJRT client wrapper, artifact manifest, host tensors.
+//!
+//! `Engine` loads `artifacts/*.hlo.txt` (HLO text produced once by
+//! `python/compile/aot.py`), compiles on the PJRT CPU client, and caches the
+//! executables; `Manifest` is the typed parameter-layout contract between
+//! the JAX build path and this crate. Python never runs at request time.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, ModelState};
+pub use manifest::{ConfigEntry, InitKind, Manifest, ModelInfo, OptStateSpec, ParamSpec};
+pub use tensor::{IntTensor, Tensor};

@@ -1,0 +1,122 @@
+//! Host-side tensors: the coordinator's view of parameters and batches.
+//!
+//! All model math happens inside the AOT'd XLA executables; host tensors
+//! exist only to (a) initialize/remap parameters (expansion engine) and
+//! (b) shuttle batches in and losses out. f32 everywhere for model state,
+//! i32 for token batches.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Root-mean-square of entries (feature-learning scale probe).
+    pub fn rms(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / self.data.len() as f64)
+            .sqrt()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // §Perf iteration 2: direct untyped-data construction — one memcpy
+        // instead of vec1() + reshape() (two literal materializations).
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::from_vec(shape, data)
+    }
+}
+
+/// Integer batch tensor (token ids / labels).
+#[derive(Debug, Clone)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<IntTensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // §Perf iteration 2 (see Tensor::to_literal); S32 payload.
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::scalar(2.0).numel(), 1);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert!((t.norm() - 2.0).abs() < 1e-12);
+        assert!((t.rms() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,76 @@
+//! Scaling-law fits (Fig 2): power laws L = a·C^(−b) via least squares in
+//! log-log space, plus comparison of exponents between progressive and
+//! fixed-size families.
+
+/// Fit log L = log a − b log C. Returns (a, b, r²).
+pub fn fit_power_law(compute: &[f64], loss: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(compute.len(), loss.len());
+    assert!(compute.len() >= 2, "need at least 2 points");
+    let xs: Vec<f64> = compute.iter().map(|c| c.ln()).collect();
+    let ys: Vec<f64> = loss.iter().map(|l| l.ln()).collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    // r²
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| {
+            let pred = intercept + slope * x;
+            (y - pred) * (y - pred)
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (intercept.exp(), -slope, r2)
+}
+
+/// Compute-efficiency ratio at a target loss: how much less compute family A
+/// needs than family B to reach `loss` (paper: 3–5× for progressive).
+pub fn compute_ratio_at_loss(a: (f64, f64), b: (f64, f64), loss: f64) -> f64 {
+    // L = k·C^(−e)  ⇒  C = (k/L)^(1/e)
+    let (ka, ea) = a;
+    let (kb, eb) = b;
+    let ca = (ka / loss).powf(1.0 / ea);
+    let cb = (kb / loss).powf(1.0 / eb);
+    cb / ca
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_planted_power_law() {
+        let compute: Vec<f64> = (1..=6).map(|i| 10f64.powi(i)).collect();
+        let loss: Vec<f64> = compute.iter().map(|c| 7.5 * c.powf(-0.12)).collect();
+        let (a, b, r2) = fit_power_law(&compute, &loss);
+        assert!((a - 7.5).abs() < 1e-6);
+        assert!((b - 0.12).abs() < 1e-9);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn ratio_at_loss() {
+        // A reaches loss with 5x less compute than B (same exponent).
+        let e = 0.1;
+        let a = (5.0, e);
+        let b = (5.0 * 5f64.powf(e), e);
+        let r = compute_ratio_at_loss(a, b, 2.0);
+        assert!((r - 5.0).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn better_exponent_wins_at_scale() {
+        let a = (6.0, 0.15);
+        let b = (6.0, 0.10);
+        // At progressively lower target losses, A's advantage grows.
+        let r1 = compute_ratio_at_loss(a, b, 3.0);
+        let r2 = compute_ratio_at_loss(a, b, 2.0);
+        assert!(r2 > r1);
+    }
+}

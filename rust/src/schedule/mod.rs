@@ -1,0 +1,150 @@
+//! Learning-rate schedules: WSD (warmup–stable–decay) and cosine.
+//!
+//! The schedule is one of the paper's two key levers (§4.2): minimizing the
+//! bound-gap term Σ_{t≤τ} η_t / Σ_t η_t prefers *constant* LR before the
+//! expansion and decay only at the end — exactly WSD. The coordinator
+//! evaluates the schedule on the host and feeds lr as a scalar input to the
+//! AOT'd train step, so a schedule change never retraces/relowers anything.
+
+/// Schedule shape. All fractions are of the total horizon `total_steps`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Warmup to `peak`, hold, then linear decay to 0 over the last
+    /// `decay_frac` of the horizon (paper: 10–20%).
+    Wsd { peak: f32, warmup_frac: f32, decay_frac: f32 },
+    /// Warmup to `peak`, then cosine decay to 0.
+    Cosine { peak: f32, warmup_frac: f32 },
+    /// Constant after warmup (ablation baseline).
+    Constant { peak: f32, warmup_frac: f32 },
+    /// Warmup then linear decay to 0.
+    Linear { peak: f32, warmup_frac: f32 },
+}
+
+impl Schedule {
+    /// Paper defaults: 2% warmup; WSD decays over the final 20% (10% for the
+    /// long Fig-1 runs — callers override).
+    pub fn wsd(peak: f32) -> Schedule {
+        Schedule::Wsd { peak, warmup_frac: 0.02, decay_frac: 0.2 }
+    }
+
+    pub fn cosine(peak: f32) -> Schedule {
+        Schedule::Cosine { peak, warmup_frac: 0.02 }
+    }
+
+    pub fn peak(&self) -> f32 {
+        match *self {
+            Schedule::Wsd { peak, .. }
+            | Schedule::Cosine { peak, .. }
+            | Schedule::Constant { peak, .. }
+            | Schedule::Linear { peak, .. } => peak,
+        }
+    }
+
+    /// LR at step `t` of `total` (t in [0, total)).
+    pub fn lr(&self, t: usize, total: usize) -> f32 {
+        debug_assert!(total > 0);
+        let total_f = total as f32;
+        let x = t as f32 / total_f;
+        let warm = |wf: f32, peak: f32| -> Option<f32> {
+            if wf > 0.0 && x < wf {
+                // Linear ramp, starting above 0 so step 0 moves.
+                Some(peak * (t as f32 + 1.0) / (wf * total_f))
+            } else {
+                None
+            }
+        };
+        match *self {
+            Schedule::Wsd { peak, warmup_frac, decay_frac } => {
+                if let Some(lr) = warm(warmup_frac, peak) {
+                    return lr;
+                }
+                let decay_start = 1.0 - decay_frac;
+                if x < decay_start {
+                    peak
+                } else {
+                    // Linear to 0 at t = total.
+                    peak * ((1.0 - x) / decay_frac).max(0.0)
+                }
+            }
+            Schedule::Cosine { peak, warmup_frac } => {
+                if let Some(lr) = warm(warmup_frac, peak) {
+                    return lr;
+                }
+                let p = (x - warmup_frac) / (1.0 - warmup_frac);
+                peak * 0.5 * (1.0 + (std::f32::consts::PI * p).cos())
+            }
+            Schedule::Constant { peak, warmup_frac } => warm(warmup_frac, peak).unwrap_or(peak),
+            Schedule::Linear { peak, warmup_frac } => {
+                if let Some(lr) = warm(warmup_frac, peak) {
+                    return lr;
+                }
+                let p = (x - warmup_frac) / (1.0 - warmup_frac);
+                peak * (1.0 - p)
+            }
+        }
+    }
+
+    /// Σ η_t over [from, to) — the quantity in the §4 bounds.
+    pub fn lr_sum(&self, from: usize, to: usize, total: usize) -> f64 {
+        (from..to).map(|t| self.lr(t, total) as f64).sum()
+    }
+
+    /// End of the stable phase (where expansion must happen per Takeaway 6);
+    /// for non-WSD schedules this is just the horizon.
+    pub fn stable_end(&self, total: usize) -> usize {
+        match *self {
+            Schedule::Wsd { decay_frac, .. } => ((1.0 - decay_frac) * total as f32) as usize,
+            _ => total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wsd_shape() {
+        let s = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+        let total = 1000;
+        // Warmup is monotone nondecreasing and ends at peak.
+        assert!(s.lr(0, total) > 0.0);
+        assert!(s.lr(0, total) < s.lr(10, total));
+        assert!((s.lr(20, total) - 0.01).abs() < 1e-6);
+        // Stable phase constant.
+        assert_eq!(s.lr(100, total), s.lr(700, total));
+        // Decay reaches ~0 at the end.
+        assert!(s.lr(999, total) < 0.01 * 0.02);
+        assert_eq!(s.stable_end(total), 800);
+    }
+
+    #[test]
+    fn cosine_decays_through_midrange() {
+        let s = Schedule::cosine(0.05);
+        let total = 1000;
+        assert!(s.lr(500, total) < 0.05 * 0.8);
+        assert!(s.lr(990, total) < 0.002);
+    }
+
+    #[test]
+    fn lr_sum_matches_closed_form_constant() {
+        let s = Schedule::Constant { peak: 0.01, warmup_frac: 0.0 };
+        let sum = s.lr_sum(0, 1000, 1000);
+        assert!((sum - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wsd_favors_late_expansion_in_bound() {
+        // Paper §4.2: Σ_{t≤τ} η / Σ η smaller under WSD than cosine at the
+        // same τ, because cosine front-loads its LR mass.
+        let wsd = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.1 };
+        let cos = Schedule::Cosine { peak: 0.01, warmup_frac: 0.02 };
+        let total = 1000;
+        let tau = 800;
+        let r_wsd = wsd.lr_sum(0, tau, total) / wsd.lr_sum(0, total, total);
+        let r_cos = cos.lr_sum(0, tau, total) / cos.lr_sum(0, total, total);
+        // After τ, WSD retains more LR mass (decay hasn't started at 0.8T
+        // with 10% decay... it just started; cosine has nearly none left).
+        assert!(1.0 - r_wsd > 1.0 - r_cos, "wsd {r_wsd} cos {r_cos}");
+    }
+}

@@ -1,0 +1,4 @@
+//! Shared substrates: JSON (offline build has no serde), deterministic RNG.
+pub mod json;
+pub mod proptest;
+pub mod rng;

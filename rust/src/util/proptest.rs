@@ -1,0 +1,86 @@
+//! Minimal property-based testing harness (the offline crate set has no
+//! proptest): seeded random case generation with first-failure reporting.
+//!
+//! ```ignore
+//! proptest(200, |g| {
+//!     let n = g.usize(0..10);
+//!     assert!(n < 10);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform() as f32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`; panics with the failing case index and
+/// seed so the failure is replayable.
+pub fn proptest(cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    proptest_seeded(0xdeadbeef, cases, &mut prop);
+}
+
+pub fn proptest_seeded(seed: u64, cases: usize, prop: &mut impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::new(seed.wrapping_add(case as u64 * 0x9e37)), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        proptest(50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failure() {
+        proptest(50, |g| {
+            let n = g.usize(0..100);
+            assert!(n < 90, "n={n}");
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Deterministic RNG substrate (no external crates): splitmix64-seeded
+//! xoshiro256++ with Box-Muller normals.
+//!
+//! Determinism matters twice here: (1) sweep replicates must be exactly
+//! reproducible from (seed, param-name) so re-running a bench regenerates the
+//! same curve; (2) new-layer *random* initialization at expansion time (the
+//! paper's winning strategy for zero-layer sources) must be independent of
+//! iteration order, so each parameter derives its own stream from a stable
+//! name hash.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller sample.
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a: stable string hash for per-parameter substreams.
+pub fn hash_name(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)], spare: None }
+    }
+
+    /// Independent stream for a named parameter under a run seed.
+    pub fn for_param(seed: u64, name: &str) -> Self {
+        Rng::new(seed ^ hash_name(name).rotate_left(17))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free multiply-shift; bias negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fill a f32 buffer with N(0, std).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32 * std;
+        }
+    }
+
+    /// Zipf-like categorical sampler over n items, exponent `alpha`
+    /// (inverse-CDF on precomputed weights is the caller's job; this is the
+    /// cheap approximate variant used for corpus unigram draws).
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        // Inverse transform on the (approximate) continuous Zipf CDF.
+        let u = self.uniform().max(1e-12);
+        let x = ((n as f64).powf(1.0 - alpha) * u + (1.0 - u)).powf(1.0 / (1.0 - alpha));
+        (x.floor() as usize).clamp(1, n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn param_streams_differ() {
+        let mut a = Rng::for_param(1, "layer.0.attn.wq");
+        let mut b = Rng::for_param(1, "layer.1.attn.wq");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 16];
+        for _ in 0..10_000 {
+            counts[r.zipf(16, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[8] * 3, "{counts:?}");
+    }
+}

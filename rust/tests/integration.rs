@@ -1,0 +1,204 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a clear
+//! message otherwise, so `cargo test` stays green on a fresh checkout).
+
+use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::expansion::{expand, CopyOrder, ExpandSpec, OsPolicy, Strategy};
+use deep_progressive::metrics::mixing_point;
+use deep_progressive::runtime::{Engine, IntTensor, Manifest, ModelState};
+use deep_progressive::schedule::Schedule;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&root) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn small_corpus() -> Corpus {
+    Corpus::generate(CorpusConfig {
+        vocab: 512,
+        train_tokens: 200_000,
+        val_tokens: 20_000,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn train_step_learns() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let entry = m.get("gpt2.l1").unwrap();
+    let mut state = ModelState::init(entry, 0);
+    let mut batcher = deep_progressive::data::Batcher::new(&corpus.train, entry.model.seq_len, 3);
+    let b = entry.model.batch;
+    let s = entry.model.seq_len;
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..80 {
+        let (x, y) = batcher.next_batch(b);
+        let x = IntTensor::from_vec(&[b, s], x).unwrap();
+        let y = IntTensor::from_vec(&[b, s], y).unwrap();
+        last = engine
+            .train_step(entry, &m.root, &mut state, &x, &y, 0.01, None)
+            .unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first - 0.05, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn chunk_matches_single_steps() {
+    // The fused K-step artifact must produce the same final state as K
+    // single-step dispatches on the same data (the hot path is a pure
+    // batching optimization, not a semantic change).
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let entry = m.get("gpt2.l0").unwrap();
+    let b = entry.model.batch;
+    let s = entry.model.seq_len;
+    let k = entry.chunk;
+
+    let mut batcher = deep_progressive::data::Batcher::new(&corpus.train, s, 5);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut batches = Vec::new();
+    for _ in 0..k {
+        let (x, y) = batcher.next_batch(b);
+        xs.extend_from_slice(&x);
+        ys.extend_from_slice(&y);
+        batches.push((x, y));
+    }
+    let lrs: Vec<f32> = (0..k).map(|i| 0.005 + 0.001 * i as f32).collect();
+
+    let mut st_chunk = ModelState::init(entry, 9);
+    let xs_t = IntTensor::from_vec(&[k, b, s], xs).unwrap();
+    let ys_t = IntTensor::from_vec(&[k, b, s], ys).unwrap();
+    let losses = engine
+        .train_chunk(entry, &m.root, &mut st_chunk, &xs_t, &ys_t, &lrs, None)
+        .unwrap();
+    assert_eq!(losses.len(), k);
+
+    let mut st_single = ModelState::init(entry, 9);
+    let mut single_losses = Vec::new();
+    for (i, (x, y)) in batches.iter().enumerate() {
+        let x = IntTensor::from_vec(&[b, s], x.clone()).unwrap();
+        let y = IntTensor::from_vec(&[b, s], y.clone()).unwrap();
+        single_losses.push(
+            engine
+                .train_step(entry, &m.root, &mut st_single, &x, &y, lrs[i], None)
+                .unwrap(),
+        );
+    }
+    for (a, b_) in losses.iter().zip(&single_losses) {
+        assert!((a - b_).abs() < 1e-4, "chunk loss {a} vs single {b_}");
+    }
+    for (a, b_) in st_chunk.params.iter().zip(&st_single.params) {
+        let maxdiff = a
+            .data
+            .iter()
+            .zip(&b_.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxdiff < 1e-4, "params diverged: {maxdiff}");
+    }
+}
+
+#[test]
+fn zero_and_copying_zero_l_are_function_preserving() {
+    // Takeaway 2 / §A.2: zero and copying_zeroL expansions must leave the
+    // validation loss exactly unchanged (block outputs vanish).
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let src = m.get("gpt2.l1").unwrap();
+    let dst = m.get("gpt2.l3").unwrap();
+    let state = ModelState::init(src, 4);
+    let b = src.model.batch;
+    let s = src.model.seq_len;
+    let mut batcher = deep_progressive::data::Batcher::new(&corpus.val, s, 1);
+    let (x, y) = batcher.next_batch(b);
+    let x = IntTensor::from_vec(&[b, s], x).unwrap();
+    let y = IntTensor::from_vec(&[b, s], y).unwrap();
+    let base = engine.eval_step(src, &m.root, &state, &x, &y, None).unwrap();
+
+    for strategy in [Strategy::Zero, Strategy::CopyingZeroL] {
+        let spec = ExpandSpec { strategy, ..Default::default() };
+        let big = expand(src, dst, &state, &spec).unwrap();
+        let loss = engine.eval_step(dst, &m.root, &big, &x, &y, None).unwrap();
+        assert!(
+            (loss - base).abs() < 5e-4,
+            "{strategy:?} not function-preserving: {base} -> {loss}"
+        );
+    }
+
+    // Copying (no zeroing) must NOT be function-preserving in general.
+    let spec = ExpandSpec { strategy: Strategy::Copying(CopyOrder::Stack), ..Default::default() };
+    let big = expand(src, dst, &state, &spec).unwrap();
+    let loss = engine.eval_step(dst, &m.root, &big, &x, &y, None).unwrap();
+    assert!((loss - base).abs() > 1e-3, "copying unexpectedly preserved the function");
+}
+
+#[test]
+fn expansion_preserves_old_layer_bytes() {
+    let Some(m) = manifest() else { return };
+    let src = m.get("gpt2.l2").unwrap();
+    let dst = m.get("gpt2.l6").unwrap();
+    let state = ModelState::init(src, 11);
+    let spec = ExpandSpec { strategy: Strategy::Random, os_policy: OsPolicy::Inherit, ..Default::default() };
+    let big = expand(src, dst, &state, &spec).unwrap();
+    // Old layers 0..2 and non-layer params must be bit-identical.
+    for (i, pspec) in dst.params.iter().enumerate() {
+        let keep = match pspec.layer_index() {
+            None => true,
+            Some(j) => j < 2,
+        };
+        if keep {
+            let src_t = state.param(src, &pspec.name).unwrap();
+            assert_eq!(src_t.data, big.params[i].data, "{} changed", pspec.name);
+        }
+    }
+}
+
+#[test]
+fn progressive_run_end_to_end_mixes() {
+    // Miniature Fig-3: zero-layer -> 3-layer progressive under constant LR
+    // mixes with the fixed-size 3-layer run.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let total = 240;
+
+    let fixed = trainer.run(&RunSpec::fixed("fixed-l3", "gpt2.l3", total, sched)).unwrap();
+    let prog = trainer
+        .run(&RunSpec::progressive(
+            "prog-l0-l3",
+            "gpt2.l0",
+            "gpt2.l3",
+            48,
+            total,
+            sched,
+            ExpandSpec::default(),
+        ))
+        .unwrap();
+
+    assert_eq!(prog.boundaries.len(), 1);
+    // The progressive run costs less compute...
+    assert!(prog.ledger.total < fixed.ledger.total * 0.95);
+    // ...and its loss approaches the fixed run's (generous tolerance at this
+    // tiny scale: within 5% by the end or formally mixed).
+    let gap = (prog.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss;
+    let mixed = mixing_point(&prog.curve, &fixed.curve, 0.05, 2).is_some();
+    assert!(mixed || gap < 0.05, "gap {gap}, mixed {mixed}");
+}

@@ -1,0 +1,274 @@
+//! Property-based tests on coordinator invariants (DESIGN.md §5): schedule
+//! algebra, batcher coverage, expansion remapping, FLOP accounting, mixing
+//! detector monotonicity, JSON round-trips. No PJRT needed — these run on
+//! any checkout.
+
+use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
+use deep_progressive::expansion::{applicable, expand, CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
+use deep_progressive::metrics::{mixing_point, Curve, CurvePoint};
+use deep_progressive::runtime::{Manifest, ModelState};
+use deep_progressive::schedule::Schedule;
+use deep_progressive::util::json::Json;
+use deep_progressive::util::proptest::proptest;
+
+// ---------------------------------------------------------------- schedules
+
+#[test]
+fn prop_schedules_are_bounded_and_end_low() {
+    proptest(200, |g| {
+        let peak = g.f32(1e-4, 0.1);
+        let total = g.usize(50..5000);
+        let decay_frac = g.f32(0.05, 0.5);
+        let sched = *g.choose(&[
+            Schedule::Wsd { peak, warmup_frac: 0.02, decay_frac },
+            Schedule::cosine(peak),
+            Schedule::Constant { peak, warmup_frac: 0.02 },
+            Schedule::Linear { peak, warmup_frac: 0.02 },
+        ]);
+        for t in [0, total / 3, total / 2, total - 1] {
+            let lr = sched.lr(t, total);
+            assert!(lr >= 0.0 && lr <= peak * (1.0 + 1e-5), "lr {lr} out of [0, {peak}] at {t}/{total}");
+        }
+        // All decaying schedules end below 10% of peak.
+        if !matches!(sched, Schedule::Constant { .. }) {
+            assert!(sched.lr(total - 1, total) <= peak * 0.1 + 1e-7);
+        }
+    });
+}
+
+#[test]
+fn prop_wsd_stable_phase_is_constant() {
+    proptest(100, |g| {
+        let total = g.usize(100..3000);
+        let decay = g.f32(0.05, 0.4);
+        let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: decay };
+        let warm_end = (total as f32 * 0.02).ceil() as usize + 1;
+        let stable_end = sched.stable_end(total);
+        if warm_end + 1 < stable_end {
+            let a = sched.lr(warm_end + 1, total);
+            let b = sched.lr(stable_end - 1, total);
+            assert!((a - b).abs() < 1e-7, "stable phase not constant: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_lr_sum_additive() {
+    proptest(100, |g| {
+        let total = g.usize(10..2000);
+        let mid = g.usize(1..total);
+        let sched = Schedule::wsd(0.01);
+        let whole = sched.lr_sum(0, total, total);
+        let split = sched.lr_sum(0, mid, total) + sched.lr_sum(mid, total, total);
+        assert!((whole - split).abs() < 1e-9);
+    });
+}
+
+// ------------------------------------------------------------------ batcher
+
+#[test]
+fn prop_batcher_epoch_partition() {
+    let corpus = Corpus::generate(CorpusConfig {
+        vocab: 64,
+        train_tokens: 30_000,
+        val_tokens: 1000,
+        ..Default::default()
+    });
+    proptest(20, |g| {
+        let seq = *g.choose(&[8usize, 16, 32, 64]);
+        let seed = g.usize(0..1000) as u64;
+        let mut b = Batcher::new(&corpus.train, seq, seed);
+        let n = b.windows_per_epoch();
+        let mut seen = std::collections::HashSet::new();
+        let mut tokens = 0usize;
+        for _ in 0..n {
+            let (x, y) = b.next_window();
+            assert_eq!(x.len(), seq);
+            assert_eq!(&x[1..], &y[..seq - 1], "y must be x shifted");
+            assert!(seen.insert(x.as_ptr()), "window repeated within epoch");
+            tokens += seq;
+        }
+        // Epoch covers ~everything (at most seq leftover).
+        assert!(corpus.train.len() - tokens <= seq + 1);
+    });
+}
+
+// ---------------------------------------------------------------- expansion
+
+fn synth_manifest(depths: &[usize]) -> Manifest {
+    // Two-matrix-per-layer toy family, enough to exercise remapping.
+    let mut cfgs = Vec::new();
+    for &n in depths {
+        let mut params = vec![
+            r#"{"name":"embed.tok","shape":[32,8],"init":"normal","std":0.02,"muon":true,"decay":false,"fan_in":32,"fan_out":8}"#.to_string(),
+        ];
+        let mut opt = vec![r#"{"name":"mom.embed.tok","shape":[32,8]}"#.to_string()];
+        for i in 0..n {
+            params.push(format!(
+                r#"{{"name":"layer.{i}.norm1.g","shape":[8],"init":"ones","muon":false,"decay":false}}"#
+            ));
+            params.push(format!(
+                r#"{{"name":"layer.{i}.attn.wo","shape":[8,8],"init":"normal","std":0.35,"muon":true,"decay":true,"fan_in":8,"fan_out":8}}"#
+            ));
+            params.push(format!(
+                r#"{{"name":"layer.{i}.mlp.w2","shape":[8,8],"init":"normal","std":0.35,"muon":true,"decay":true,"fan_in":8,"fan_out":8}}"#
+            ));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.norm1.g","shape":[8]}}"#));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.attn.wo","shape":[8,8]}}"#));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.mlp.w2","shape":[8,8]}}"#));
+        }
+        cfgs.push(format!(
+            r#""toy.l{n}":{{"model":{{"family":"gpt2","n_layer":{n},"batch":2,"seq_len":8,"moe":null}},
+               "opt":{{"kind":"muon_nsgd"}},"params":[{}],"opt_state":[{}],
+               "param_count":1,"active_param_count":1,"chunk":8,"artifacts":{{}}}}"#,
+            params.join(","),
+            opt.join(",")
+        ));
+    }
+    let text = format!(r#"{{"configs":{{{}}}}}"#, cfgs.join(","));
+    Manifest::parse(&text, std::path::PathBuf::from("/tmp")).unwrap()
+}
+
+#[test]
+fn prop_expansion_is_total_and_shape_correct() {
+    let m = synth_manifest(&[0, 1, 2, 3, 4, 6, 8]);
+    let depths = [0usize, 1, 2, 3, 4, 6, 8];
+    proptest(300, |g| {
+        let n_src = *g.choose(&depths);
+        let n_dst = *g.choose(&depths);
+        let strategy = *g.choose(&[
+            Strategy::Random,
+            Strategy::Zero,
+            Strategy::Copying(CopyOrder::Stack),
+            Strategy::Copying(CopyOrder::Inter),
+            Strategy::Copying(CopyOrder::Last),
+            Strategy::CopyingZeroN,
+            Strategy::CopyingZeroL,
+        ]);
+        let spec = ExpandSpec {
+            strategy,
+            insertion: if g.bool() { Insertion::Bottom } else { Insertion::Top },
+            os_policy: *g.choose(&[OsPolicy::Inherit, OsPolicy::Copy, OsPolicy::Reset]),
+            seed: g.usize(0..100) as u64,
+        };
+        let src = m.get(&format!("toy.l{n_src}")).unwrap();
+        let dst = m.get(&format!("toy.l{n_dst}")).unwrap();
+        let state = ModelState::init(src, 1);
+        let result = expand(src, dst, &state, &spec);
+        if n_dst < n_src || (!applicable(strategy, n_src) && n_dst > n_src) {
+            assert!(result.is_err(), "expected rejection: {n_src}->{n_dst} {strategy:?}");
+        } else if n_dst >= n_src && applicable(strategy, n_src) {
+            let big = result.unwrap();
+            // Bijection onto target manifest: every param has its spec shape.
+            assert_eq!(big.params.len(), dst.params.len());
+            for (t, spec_p) in big.params.iter().zip(&dst.params) {
+                assert_eq!(t.shape, spec_p.shape, "{}", spec_p.name);
+            }
+            assert_eq!(big.opt.len(), dst.opt_state.len());
+            // Old layers preserved bit-exact for order-preserving strategies.
+            if matches!(strategy, Strategy::Random | Strategy::Zero | Strategy::CopyingZeroN | Strategy::CopyingZeroL)
+                && spec.insertion == Insertion::Bottom
+            {
+                for (i, spec_p) in dst.params.iter().enumerate() {
+                    if spec_p.layer_index().map(|j| j < n_src).unwrap_or(true) {
+                        let src_t = state.param(src, &spec_p.name).unwrap();
+                        assert_eq!(src_t.data, big.params[i].data, "{}", spec_p.name);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_expansion_random_matches_manifest_std() {
+    let m = synth_manifest(&[0, 8]);
+    let src = m.get("toy.l0").unwrap();
+    let dst = m.get("toy.l8").unwrap();
+    let state = ModelState::init(src, 1);
+    let big = expand(src, dst, &state, &ExpandSpec::default()).unwrap();
+    // New-layer matrices should have empirical std near the manifest's 0.35.
+    let mut all = Vec::new();
+    for (t, spec) in big.params.iter().zip(&dst.params) {
+        if spec.name.ends_with(".wo") || spec.name.ends_with(".w2") {
+            all.extend_from_slice(&t.data);
+        }
+    }
+    let n = all.len() as f64;
+    let mean: f64 = all.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var: f64 = all.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt();
+    assert!((std - 0.35).abs() < 0.03, "std {std}");
+}
+
+// -------------------------------------------------------------------- mixing
+
+#[test]
+fn prop_mixing_monotone_under_extension() {
+    proptest(200, |g| {
+        // Build a fixed curve and a progressive curve that converges to it.
+        let n = g.usize(6..30);
+        let tol = 0.03f32;
+        let mut fixed = Curve::new("f");
+        let mut prog = Curve::new("p");
+        let mix_at = g.usize(2..n);
+        for i in 0..n {
+            let t = (i * 100) as u64;
+            let f = 4.0 - 3.0 * (i as f32 / n as f32);
+            let gap = if i >= mix_at { 0.0 } else { 1.0 + g.f32(0.0, 1.0) };
+            fixed.push(CurvePoint { step: i, tokens: t, flops: 0.0, train_loss: f, val_loss: f, lr: 0.01 });
+            prog.push(CurvePoint { step: i, tokens: t, flops: 0.0, train_loss: f + gap, val_loss: f + gap, lr: 0.01 });
+        }
+        let before = mixing_point(&prog, &fixed, tol, 2);
+        // Extend both with more in-tolerance points: mixing must not un-mix
+        // and the mixing point must not move later.
+        for i in n..n + 3 {
+            let t = (i * 100) as u64;
+            fixed.push(CurvePoint { step: i, tokens: t, flops: 0.0, train_loss: 1.0, val_loss: 1.0, lr: 0.01 });
+            prog.push(CurvePoint { step: i, tokens: t, flops: 0.0, train_loss: 1.0, val_loss: 1.0, lr: 0.01 });
+        }
+        let after = mixing_point(&prog, &fixed, tol, 2);
+        if let Some(b) = before {
+            assert_eq!(after, Some(b), "mixing point moved after appending mixed points");
+        }
+        if n - mix_at >= 2 {
+            assert!(before.is_some(), "should have mixed at {mix_at}/{n}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip() {
+    proptest(200, |g| {
+        // Random JSON value generator (depth-bounded).
+        fn gen_val(g: &mut deep_progressive::util::proptest::Gen, depth: usize) -> Json {
+            use std::collections::BTreeMap;
+            let pick = if depth == 0 { g.usize(0..4) } else { g.usize(0..6) };
+            match pick {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64(-1e6, 1e6) * 1000.0).round() / 1000.0),
+                3 => Json::Str(format!("s{}-\"esc\\ape\"\n{}", g.usize(0..100), g.usize(0..10))),
+                4 => {
+                    let k = g.usize(0..5);
+                    Json::Arr((0..k).map(|_| gen_val(g, depth - 1)).collect())
+                }
+                _ => {
+                    let mut m = BTreeMap::new();
+                    let k = g.usize(0..5);
+                    for i in 0..k {
+                        let v = gen_val(g, depth - 1);
+                        m.insert(format!("k{i}"), v);
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_val(g, 3);
+        let text = v.to_string();
+        let v2 = Json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(v, v2);
+    });
+}
