@@ -13,7 +13,7 @@
 //! Run: `cargo run --release --example e2e_progressive_gpt2 -- [--steps N] [--wide]`
 
 use deep_progressive::cli::Args;
-use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::coordinator::{LossSpikeDetector, ProgressPrinter, RunBuilder, RunDriver, Trainer};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::ExpandSpec;
 use deep_progressive::metrics::mixing_point;
@@ -52,8 +52,14 @@ fn main() -> anyhow::Result<()> {
     // --tau-frac 0.8 with a longer --steps for the paper's operating point.
     let tau = (steps as f32 * args.get_f32("tau-frac", 0.6)) as usize;
 
-    let fixed = trainer.run(&RunSpec::fixed("e2e-fixed", large, steps, sched))?;
-    let prog = trainer.run(&RunSpec::progressive(
+    let mut fixed_d =
+        RunDriver::new(trainer, RunBuilder::fixed("e2e-fixed", large, steps, sched).build()?)?;
+    fixed_d.run_to_end()?;
+    let fixed = fixed_d.finish();
+
+    // The progressive run showcases the observer hooks: live progress lines
+    // plus a spike detector on the expansion boundary.
+    let plan = RunBuilder::progressive(
         "e2e-progressive",
         small,
         large,
@@ -61,7 +67,14 @@ fn main() -> anyhow::Result<()> {
         steps,
         sched,
         ExpandSpec::default(),
-    ))?;
+    )
+    .build()?;
+    let mut prog_d = RunDriver::new(trainer, plan)?;
+    prog_d.attach(Box::new(ProgressPrinter));
+    let spikes = std::rc::Rc::new(std::cell::RefCell::new(LossSpikeDetector::new(0.0)));
+    prog_d.attach(Box::new(spikes.clone()));
+    prog_d.run_to_end()?;
+    let prog = prog_d.finish();
 
     let out = std::path::Path::new("results/e2e");
     fixed.curve.write_csv(out)?;
@@ -90,6 +103,7 @@ fn main() -> anyhow::Result<()> {
     println!("compute saving: {:.0}% (paper: ≈80% at 60× depth ratio; depth ratio here {}×)",
              saving * 100.0, large_entry.model.n_layer.max(1));
     println!("mixing point: {:?} tokens", mixed);
+    println!("expansion loss jump: {:+.4}", spikes.borrow().max_jump().unwrap_or(f32::NAN));
     println!("ledger stages: {:?}", prog.ledger.stages.iter().map(|(c, s, _)| format!("{c}×{s}")).collect::<Vec<_>>());
     println!("wall time: {:.1}s (curves in results/e2e/)", t0.elapsed().as_secs_f32());
     Ok(())

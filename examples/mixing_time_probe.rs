@@ -37,6 +37,8 @@ fn main() -> anyhow::Result<()> {
         0.04,
     )?;
 
+    let (fx, pg) = outcome.probe_steps_run;
+    println!("probes early-stopped at steps {fx} / {pg} of {probe_steps}");
     match outcome.t_mix_tokens {
         Some(tokens) => {
             println!("mixing time: {} tokens (≈{} steps post-expansion)",

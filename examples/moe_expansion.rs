@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example moe_expansion -- [--steps N]`
 
 use deep_progressive::cli::Args;
-use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::coordinator::{RunBuilder, RunDriver, Trainer};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::ExpandSpec;
 use deep_progressive::metrics::mixing_point;
@@ -36,10 +36,13 @@ fn main() -> anyhow::Result<()> {
             entry.model.moe.as_ref().map(|m| m.top_k).unwrap_or(0),
             entry.model.moe.as_ref().map(|m| m.n_experts).unwrap_or(0),
         );
-        let fixed = trainer.run(&RunSpec::fixed(format!("{fam}-fixed"), &large, steps, sched))?;
+        let mut fixed_d =
+            RunDriver::new(trainer, RunBuilder::fixed(format!("{fam}-fixed"), &large, steps, sched).build()?)?;
+        fixed_d.run_to_end()?;
+        let fixed = fixed_d.finish();
         for src_n in [0usize, 1] {
             let small = format!("{fam}.l{src_n}");
-            let prog = trainer.run(&RunSpec::progressive(
+            let plan = RunBuilder::progressive(
                 format!("{fam}-prog-l{src_n}"),
                 &small,
                 &large,
@@ -47,7 +50,11 @@ fn main() -> anyhow::Result<()> {
                 steps,
                 sched,
                 ExpandSpec::default(),
-            ))?;
+            )
+            .build()?;
+            let mut prog_d = RunDriver::new(trainer, plan)?;
+            prog_d.run_to_end()?;
+            let prog = prog_d.finish();
             let gap = (prog.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
             println!(
                 "  {src_n}-layer → 4-layer: val {:.4} (fixed {:.4}, gap {gap:+.2}%), \

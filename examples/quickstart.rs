@@ -6,7 +6,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::coordinator::{RunBuilder, RunDriver, Trainer};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::ExpandSpec;
 use deep_progressive::runtime::{Engine, Manifest};
@@ -27,13 +27,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("corpus entropy floor: {:.3} nats", corpus.entropy_floor);
 
-    let fixed = trainer.run(&RunSpec::fixed("fixed-l6", "gpt2.l6", total, sched))?;
+    let mut fixed_d =
+        RunDriver::new(trainer, RunBuilder::fixed("fixed-l6", "gpt2.l6", total, sched).build()?)?;
+    fixed_d.run_to_end()?;
+    let fixed = fixed_d.finish();
     println!(
         "fixed 6-layer:   val loss {:.4}  ({:.2e} FLOPs)",
         fixed.final_val_loss, fixed.ledger.total
     );
 
-    let prog = trainer.run(&RunSpec::progressive(
+    let plan = RunBuilder::progressive(
         "prog-l0-l6",
         "gpt2.l0",
         "gpt2.l6",
@@ -41,7 +44,11 @@ fn main() -> anyhow::Result<()> {
         total,
         sched,
         ExpandSpec::default(), // random init, bottom insertion, inherit OS
-    ))?;
+    )
+    .build()?;
+    let mut prog_d = RunDriver::new(trainer, plan)?;
+    prog_d.run_to_end()?;
+    let prog = prog_d.finish();
     println!(
         "progressive:     val loss {:.4}  ({:.2e} FLOPs, {:.0}% compute saving)",
         prog.final_val_loss,

@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::coordinator::{RunBuilder, RunDriver, Trainer};
 use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
 use deep_progressive::expansion::{expand, ExpandSpec};
 use deep_progressive::runtime::{Engine, IntTensor, Manifest, ModelState};
@@ -127,14 +127,30 @@ fn main() -> anyhow::Result<()> {
     // End-to-end: a 48-step progressive mini-run (Fig 1's inner loop).
     let trainer = Trainer::new(&engine, &manifest, &corpus);
     b.time("e2e/progressive-48-steps-l0-l3", 3, || {
-        let spec = RunSpec::progressive(
+        let plan = RunBuilder::progressive(
             "bench-prog", "gpt2.l0", "gpt2.l3", 32, 48,
             Schedule::Constant { peak: 0.01, warmup_frac: 0.0 },
             ExpandSpec::default(),
-        );
-        let r = trainer.run(&spec).unwrap();
+        )
+        .build()
+        .unwrap();
+        let mut driver = RunDriver::new(trainer, plan).unwrap();
+        driver.run_to_end().unwrap();
+        let r = driver.finish();
         std::hint::black_box(r.final_val_loss);
     });
+
+    // Driver snapshot cost (the pause/resume and sweep-fork primitive).
+    let entry12 = manifest.get("gpt2.l12")?;
+    let plan = RunBuilder::fixed("bench-snap", "gpt2.l12", 48, Schedule::Constant { peak: 0.01, warmup_frac: 0.0 })
+        .build()
+        .unwrap();
+    let driver = RunDriver::new(trainer, plan)?;
+    b.time("driver/snapshot-l12", 50, || {
+        let s = driver.snapshot();
+        std::hint::black_box(s.state.params.len());
+    });
+    std::hint::black_box(entry12.param_count);
 
     b.report();
     Ok(())

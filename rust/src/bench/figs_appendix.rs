@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{RunSpec, Stage};
+use crate::coordinator::RunBuilder;
 use crate::expansion::{ExpandSpec, Insertion, OsPolicy, Strategy};
 use crate::metrics::{mixing_point, Table};
 use crate::schedule::Schedule;
@@ -14,28 +14,41 @@ use super::Ctx;
 
 /// Fig 13: copying_zeroN vs copying_zeroL from a one-layer source — zeroL
 /// should match plain copying while being spike-free (function-preserving).
+/// The three inits fork from one shared source segment (sweep).
 pub fn fig13(ctx: &Ctx) -> Result<()> {
     let target = "fig13";
     let total = ctx.steps;
     let tau = total / 4;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l3", "gpt2.l3", total, sched))?;
-    let mut table = Table::new(&["init", "final val loss", "gap %", "spike at τ"]);
-    for (name, strategy) in [
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l3", "gpt2.l3", total, sched).build()?)?;
+    let inits = [
         ("copying", Strategy::Copying(crate::expansion::CopyOrder::Stack)),
         ("copying_zeroN", Strategy::CopyingZeroN),
         ("copying_zeroL", Strategy::CopyingZeroL),
-    ] {
-        let res = ctx.run_logged(
-            target,
-            &RunSpec::progressive(format!("l1-l3-{name}"), "gpt2.l1", "gpt2.l3", tau, total, sched,
-                                  ExpandSpec { strategy, ..Default::default() }),
-        )?;
+    ];
+    let mut plans = Vec::new();
+    for (name, strategy) in inits {
+        plans.push(
+            RunBuilder::progressive(
+                format!("l1-l3-{name}"),
+                "gpt2.l1",
+                "gpt2.l3",
+                tau,
+                total,
+                sched,
+                ExpandSpec { strategy, ..Default::default() },
+            )
+            .build()?,
+        );
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
+    let mut table = Table::new(&["init", "final val loss", "gap %", "spike at τ"]);
+    for ((name, _), res) in inits.iter().zip(&outcome.results) {
         // Spike: val-loss jump across the expansion boundary (the curve logs
         // a pre- and post-expansion point at the same step).
         let spike = spike_at_boundary(&res.curve, tau);
         let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
-        table.row(vec![name.into(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}"), format!("{spike:+.4}")]);
+        table.row(vec![name.to_string(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}"), format!("{spike:+.4}")]);
     }
     table.row(vec!["fixed".into(), format!("{:.4}", fixed.final_val_loss), "0.00".into(), "—".into()]);
     ctx.emit(target, &table)
@@ -57,27 +70,45 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
     let total = ctx.steps;
     let tau = total / 10;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let insertions = [("bottom", Insertion::Bottom), ("top", Insertion::Top)];
+    let mut plans = Vec::new();
+    for (name, insertion) in insertions {
+        plans.push(
+            RunBuilder::progressive(
+                format!("l2-l6-{name}"),
+                "gpt2.l2",
+                "gpt2.l6",
+                tau,
+                total,
+                sched,
+                ExpandSpec { insertion, ..Default::default() },
+            )
+            .build()?,
+        );
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
     let mut table = Table::new(&["insertion", "final val loss", "spike at τ"]);
-    for (name, insertion) in [("bottom", Insertion::Bottom), ("top", Insertion::Top)] {
-        let res = ctx.run_logged(
-            target,
-            &RunSpec::progressive(format!("l2-l6-{name}"), "gpt2.l2", "gpt2.l6", tau, total, sched,
-                                  ExpandSpec { insertion, ..Default::default() }),
-        )?;
-        table.row(vec![name.into(), format!("{:.4}", res.final_val_loss), format!("{:+.4}", spike_at_boundary(&res.curve, tau))]);
+    for ((name, _), res) in insertions.iter().zip(&outcome.results) {
+        table.row(vec![name.to_string(), format!("{:.4}", res.final_val_loss), format!("{:+.4}", spike_at_boundary(&res.curve, tau))]);
     }
     ctx.emit(target, &table)
 }
 
 /// Figs 15/16: mixing grid — sources {0,1,2,6} × targets {6,12}; final loss
-/// at a τ grid (Fig 16's final-loss-vs-timing view).
+/// at a τ grid (Fig 16's final-loss-vs-timing view). One sweep; variants
+/// sharing (source, τ) share the source segment.
 pub fn fig15_16(ctx: &Ctx) -> Result<()> {
     let target = "fig15";
     let total = ctx.steps;
     let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
     let mut table = Table::new(&["target", "source", "τ/T", "final val loss", "mixed", "t_mix tokens"]);
+    let mut fixed_runs = Vec::new();
     for tgt in ["gpt2.l6", "gpt2.l12"] {
-        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{tgt}-fixed"), tgt, total, sched))?;
+        fixed_runs.push((tgt, ctx.run_logged(target, RunBuilder::fixed(format!("{tgt}-fixed"), tgt, total, sched).build()?)?));
+    }
+    let mut plans = Vec::new();
+    let mut meta = Vec::new();
+    for (ti, tgt) in ["gpt2.l6", "gpt2.l12"].iter().enumerate() {
         let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
         for src_n in [0usize, 1, 2, 6] {
             if src_n >= tgt_n {
@@ -85,9 +116,8 @@ pub fn fig15_16(ctx: &Ctx) -> Result<()> {
             }
             for tau_frac in [2usize, 5] {
                 let tau = total * tau_frac / 10;
-                let res = ctx.run_logged(
-                    target,
-                    &RunSpec::progressive(
+                plans.push(
+                    RunBuilder::progressive(
                         format!("{tgt}-from-l{src_n}-t{tau_frac}"),
                         &format!("gpt2.l{src_n}"),
                         tgt,
@@ -95,34 +125,40 @@ pub fn fig15_16(ctx: &Ctx) -> Result<()> {
                         total,
                         sched,
                         ExpandSpec::default(),
-                    ),
-                )?;
-                let m = mixing_point(&res.curve, &fixed.curve, 0.04, 2);
-                table.row(vec![
-                    tgt.into(),
-                    format!("l{src_n}"),
-                    format!("0.{tau_frac}"),
-                    format!("{:.4}", res.final_val_loss),
-                    format!("{}", m.is_some()),
-                    m.map(|t| t.to_string()).unwrap_or_else(|| "—".into()),
-                ]);
+                    )
+                    .build()?,
+                );
+                meta.push((ti, *tgt, src_n, tau_frac));
             }
         }
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
+    for ((ti, tgt, src_n, tau_frac), res) in meta.iter().zip(&outcome.results) {
+        let m = mixing_point(&res.curve, &fixed_runs[*ti].1.curve, 0.04, 2);
+        table.row(vec![
+            (*tgt).into(),
+            format!("l{src_n}"),
+            format!("0.{tau_frac}"),
+            format!("{:.4}", res.final_val_loss),
+            format!("{}", m.is_some()),
+            m.map(|t| t.to_string()).unwrap_or_else(|| "—".into()),
+        ]);
     }
     ctx.emit(target, &table)
 }
 
-/// Fig 17: optimizer-state policies at expansion (inherit / copy / reset).
+/// Fig 17: optimizer-state policies at expansion (inherit / copy / reset),
+/// forked from one shared source segment (sweep).
 pub fn fig17(ctx: &Ctx) -> Result<()> {
     let target = "fig17";
     let total = ctx.steps;
     let tau = total / 10;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let mut table = Table::new(&["OS policy", "final val loss"]);
-    for (name, os) in [("inheriting OS", OsPolicy::Inherit), ("copying OS", OsPolicy::Copy), ("no OS", OsPolicy::Reset)] {
-        let res = ctx.run_logged(
-            target,
-            &RunSpec::progressive(
+    let policies = [("inheriting OS", OsPolicy::Inherit), ("copying OS", OsPolicy::Copy), ("no OS", OsPolicy::Reset)];
+    let mut plans = Vec::new();
+    for (name, os) in policies {
+        plans.push(
+            RunBuilder::progressive(
                 format!("l1-l6-{}", name.replace(' ', "-")),
                 "gpt2.l1",
                 "gpt2.l6",
@@ -134,9 +170,14 @@ pub fn fig17(ctx: &Ctx) -> Result<()> {
                     os_policy: os,
                     ..Default::default()
                 },
-            ),
-        )?;
-        table.row(vec![name.into(), format!("{:.4}", res.final_val_loss)]);
+            )
+            .build()?,
+        );
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
+    let mut table = Table::new(&["OS policy", "final val loss"]);
+    for ((name, _), res) in policies.iter().zip(&outcome.results) {
+        table.row(vec![name.to_string(), format!("{:.4}", res.final_val_loss)]);
     }
     ctx.emit(target, &table)
 }
@@ -160,7 +201,8 @@ pub fn fig18(ctx: &Ctx) -> Result<()> {
             let large = format!("gpt2.l12{suffix}");
             let res = ctx.run_logged(
                 target,
-                &RunSpec::progressive(format!("{okind}-{sname}"), &small, &large, tau, total, sched, ExpandSpec::default()),
+                RunBuilder::progressive(format!("{okind}-{sname}"), &small, &large, tau, total, sched, ExpandSpec::default())
+                    .build()?,
             )?;
             table.row(vec![okind.into(), sname.into(), format!("{:.4}", res.final_val_loss), format!("{:.2e}", res.ledger.total)]);
         }
@@ -168,39 +210,53 @@ pub fn fig18(ctx: &Ctx) -> Result<()> {
     ctx.emit(target, &table)
 }
 
-/// Fig 19: switching optimizers at the expansion (NSGD→Muon-NSGD and
-/// AdamW→Muon-NSGD) still mixes.
+/// Fig 19: switching optimizers still mixes. Two shapes, both explicit in
+/// the v2 API: (a) expansion fused with an optimizer change (l0 under the
+/// cheap optimizer → l12 under Muon-NSGD, optimizer state reset at the
+/// boundary), and (b) the pure constant-depth switch via
+/// [`RunBuilder::then_switch_optimizer_at`] (AdamW → Muon-NSGD at depth 12),
+/// which the pre-v2 loop only reached through implicit inference.
 pub fn fig19(ctx: &Ctx) -> Result<()> {
     let target = "fig19";
     let total = ctx.steps;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l12", "gpt2.l12", total, sched))?;
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l12", "gpt2.l12", total, sched).build()?)?;
     let mut table = Table::new(&["first optimizer", "τ/T", "final val loss", "gap %"]);
     for first in ["nsgd", "adamw"] {
         for tau_frac in [3usize, 5, 7] {
             let tau = total * tau_frac / 10;
             // Stage 1: zero-layer model under the cheap optimizer; stage 2:
-            // 12-layer under Muon-NSGD (expansion + optimizer switch fused:
-            // the coordinator resets OS because the layouts differ).
+            // 12-layer under Muon-NSGD (expansion + optimizer change fused;
+            // the OS layouts differ, so the expansion resets them).
             let res = ctx.run_logged(
                 target,
-                &RunSpec {
-                    name: format!("{first}-to-muon-t{tau_frac}"),
-                    stages: vec![
-                        Stage { cfg_id: format!("gpt2.l0.{first}"), from_step: 0, expand: ExpandSpec::default() },
-                        Stage { cfg_id: "gpt2.l12".into(), from_step: tau, expand: ExpandSpec { os_policy: OsPolicy::Reset, ..Default::default() } },
-                    ],
-                    total_steps: total,
-                    schedule: sched,
-                    eval_every: (total / 40).max(1),
-                    eval_batches: 4,
-                    seed: ctx.seed,
-                },
+                RunBuilder::new(format!("{first}-to-muon-t{tau_frac}"))
+                    .start(format!("gpt2.l0.{first}"))
+                    .then_expand_at(tau, "gpt2.l12", ExpandSpec { os_policy: OsPolicy::Reset, ..Default::default() })
+                    .total_steps(total)
+                    .schedule(sched)
+                    .seed(ctx.seed)
+                    .build()?,
             )?;
             let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
             table.row(vec![first.into(), format!("0.{tau_frac}"), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}")]);
         }
     }
+    // (b) Constant-depth switch: train the 12-layer target under AdamW, then
+    // hand the parameters to Muon-NSGD mid-run.
+    let tau = total / 2;
+    let res = ctx.run_logged(
+        target,
+        RunBuilder::new("adamw-to-muon-same-depth")
+            .start("gpt2.l12.adamw")
+            .then_switch_optimizer_at(tau, "gpt2.l12")
+            .total_steps(total)
+            .schedule(sched)
+            .seed(ctx.seed)
+            .build()?,
+    )?;
+    let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
+    table.row(vec!["adamw (switch @ depth 12)".into(), "0.5".into(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}")]);
     ctx.emit(target, &table)
 }
 
@@ -215,13 +271,15 @@ pub fn fig20(ctx: &Ctx) -> Result<()> {
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     let base = ctx.run_logged(
         target,
-        &RunSpec::progressive("constant-batch", "gpt2.l1", "gpt2.l6", tau, total, sched, ExpandSpec::default()),
+        RunBuilder::progressive("constant-batch", "gpt2.l1", "gpt2.l6", tau, total, sched, ExpandSpec::default())
+            .build()?,
     )?;
     // "4× batch" emulation: same token budget in 1/4 the iterations — the
     // comparison axis is tokens (the paper's point: the x-axis that matters).
     let quarter = ctx.run_logged(
         target,
-        &RunSpec::progressive("short-run-same-lr", "gpt2.l1", "gpt2.l6", tau, tau + (total - tau) / 4, sched, ExpandSpec::default()),
+        RunBuilder::progressive("short-run-same-lr", "gpt2.l1", "gpt2.l6", tau, tau + (total - tau) / 4, sched, ExpandSpec::default())
+            .build()?,
     )?;
     let mut table = Table::new(&["run", "post-τ iters", "tokens", "final val loss"]);
     for (n, r, it) in [("constant batch", &base, total - tau), ("quarter iterations", &quarter, (total - tau) / 4)] {
@@ -242,11 +300,12 @@ pub fn fig21_22(ctx: &Ctx) -> Result<()> {
         ("wsd", Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 }),
         ("cosine", Schedule::cosine(0.02)),
     ] {
-        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("one-{sname}-fixed"), "gpt2.l12", total, sched))?;
+        let fixed = ctx.run_logged(target, RunBuilder::fixed(format!("one-{sname}-fixed"), "gpt2.l12", total, sched).build()?)?;
         for &tau in &taus {
             let res = ctx.run_logged(
                 target,
-                &RunSpec::progressive(format!("one-{sname}-tau{}", tau * 10 / total), "gpt2.l1", "gpt2.l12", tau, total, sched, ExpandSpec::default()),
+                RunBuilder::progressive(format!("one-{sname}-tau{}", tau * 10 / total), "gpt2.l1", "gpt2.l12", tau, total, sched, ExpandSpec::default())
+                    .build()?,
             )?;
             let mixed = mixing_point(&res.curve, &fixed.curve, 0.04, 2).is_some();
             table.row(vec![sname.into(), format!("{:.1}", tau as f32 / total as f32), format!("{:.4}", res.final_val_loss), format!("{mixed}")]);

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::RunSpec;
+use crate::coordinator::RunBuilder;
 use crate::expansion::ExpandSpec;
 use crate::flops::flops_per_step;
 use crate::metrics::{mixing_point, Table};
@@ -22,10 +22,11 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
 
     let mut table = Table::new(&["run", "final val loss", "gap vs fixed", "FLOPs", "saving", "mixed"]);
     for (large, label) in [("gpt2.l12", "12-layer"), ("gpt2w.l8", "wide 8-layer")] {
-        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("fixed-{label}"), large, total, sched))?;
+        let fixed =
+            ctx.run_logged(target, RunBuilder::fixed(format!("fixed-{label}"), large, total, sched).build()?)?;
         let stem = large.rsplit_once('l').map(|(a, _)| a).unwrap_or(large);
         for (small, sname) in [(format!("{stem}l0"), "zero-layer"), (format!("{stem}l1"), "one-layer")] {
-            let spec = RunSpec::progressive(
+            let plan = RunBuilder::progressive(
                 format!("prog-{sname}-{label}"),
                 &small,
                 large,
@@ -33,8 +34,9 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
                 total,
                 sched,
                 ExpandSpec::default(),
-            );
-            let prog = ctx.run_logged(target, &spec)?;
+            )
+            .build()?;
+            let prog = ctx.run_logged(target, plan)?;
             let gap = (prog.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss;
             let saving = 1.0 - prog.ledger.total / fixed.ledger.total;
             let mixed = mixing_point(&prog.curve, &fixed.curve, 0.03, 2).is_some();
@@ -77,22 +79,21 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
                 // Token budget scales with size index (Chinchilla-flavored).
                 let total = ctx.steps * (s + 1);
                 let tau = (total as f32 * 0.8) as usize;
-                let res = if mode == "fixed" {
-                    ctx.run_logged(target, &RunSpec::fixed(format!("{fam}-s{s}-fixed"), &large, total, sched))?
+                let plan = if mode == "fixed" {
+                    RunBuilder::fixed(format!("{fam}-s{s}-fixed"), &large, total, sched).build()?
                 } else {
-                    ctx.run_logged(
-                        target,
-                        &RunSpec::progressive(
-                            format!("{fam}-s{s}-prog"),
-                            &small,
-                            &large,
-                            tau,
-                            total,
-                            sched,
-                            ExpandSpec::default(),
-                        ),
-                    )?
+                    RunBuilder::progressive(
+                        format!("{fam}-s{s}-prog"),
+                        &small,
+                        &large,
+                        tau,
+                        total,
+                        sched,
+                        ExpandSpec::default(),
+                    )
+                    .build()?
                 };
+                let res = ctx.run_logged(target, plan)?;
                 cs.push(res.ledger.total);
                 ls.push(res.final_val_loss as f64);
             }
@@ -111,7 +112,9 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
 
 /// Fig 3: initialization approaches (random / copying / zero) across the five
 /// architecture families, zero/one-layer → 4-layer, expansion at a fixed
-/// early iteration.
+/// early iteration. The strategy variants for one source expand at the same
+/// τ from the same source model, so each (family, source) group runs as a
+/// [`crate::coordinator::Sweep`] that trains the source segment once.
 pub fn fig3(ctx: &Ctx) -> Result<()> {
     use crate::expansion::{CopyOrder, Strategy};
     let target = "fig3";
@@ -122,7 +125,8 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
 
     for fam in ["gpt2", "llama3", "qwen3", "deepseekv3", "mixtral"] {
         let large = if fam == "gpt2" { "gpt2.l3".to_string() } else { format!("{fam}.l4") };
-        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{fam}-fixed"), &large, total, sched))?;
+        let fixed =
+            ctx.run_logged(target, RunBuilder::fixed(format!("{fam}-fixed"), &large, total, sched).build()?)?;
         for (src_n, strategies) in [
             (0usize, vec![("random", Strategy::Random), ("zero", Strategy::Zero)]),
             (1, vec![
@@ -132,22 +136,28 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
             ]),
         ] {
             let small = format!("{fam}.l{src_n}");
-            for (sname, strategy) in strategies {
-                let spec = RunSpec::progressive(
-                    format!("{fam}-l{src_n}-{sname}"),
-                    &small,
-                    &large,
-                    tau,
-                    total,
-                    sched,
-                    ExpandSpec { strategy, ..Default::default() },
+            let mut plans = Vec::new();
+            for (sname, strategy) in &strategies {
+                plans.push(
+                    RunBuilder::progressive(
+                        format!("{fam}-l{src_n}-{sname}"),
+                        &small,
+                        &large,
+                        tau,
+                        total,
+                        sched,
+                        ExpandSpec { strategy: *strategy, ..Default::default() },
+                    )
+                    .build()?,
                 );
-                let res = ctx.run_logged(target, &spec)?;
+            }
+            let outcome = ctx.sweep_logged(target, plans)?;
+            for ((sname, _), res) in strategies.iter().zip(&outcome.results) {
                 let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
                 table.row(vec![
-                    fam.into(),
+                    fam.to_string(),
                     format!("{src_n}-layer"),
-                    sname.into(),
+                    sname.to_string(),
                     format!("{:.4}", res.final_val_loss),
                     format!("{gap:+.2}"),
                 ]);
@@ -166,10 +176,11 @@ pub fn fig9(ctx: &Ctx) -> Result<()> {
     let total = ctx.steps;
     let tau = (total as f32 * 0.5) as usize;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l6", "gpt2.l6", total, sched))?;
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l6", "gpt2.l6", total, sched).build()?)?;
     let prog = ctx.run_logged(
         target,
-        &RunSpec::progressive("prog-l0-l6", "gpt2.l0", "gpt2.l6", tau, total, sched, ExpandSpec::default()),
+        RunBuilder::progressive("prog-l0-l6", "gpt2.l0", "gpt2.l6", tau, total, sched, ExpandSpec::default())
+            .build()?,
     )?;
 
     // Grown-vs-target alignment: shift the progressive curve so expansion is

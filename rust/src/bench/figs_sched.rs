@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::RunSpec;
+use crate::coordinator::RunBuilder;
 use crate::expansion::{CopyOrder, ExpandSpec, Strategy};
 use crate::metrics::{mixing_point, Table};
 use crate::schedule::Schedule;
@@ -22,7 +22,7 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
         let mut best_lr = (0.0f32, f32::INFINITY);
         for &lr in &lrs {
             let sched = Schedule::Wsd { peak: lr, warmup_frac: 0.02, decay_frac: 0.2 };
-            let res = ctx.run_logged(target, &RunSpec::fixed(format!("{cfg}-lr{lr}"), cfg, total, sched))?;
+            let res = ctx.run_logged(target, RunBuilder::fixed(format!("{cfg}-lr{lr}"), cfg, total, sched).build()?)?;
             let train = res.curve.points.last().map(|p| p.train_loss).unwrap_or(f32::NAN);
             table.row(vec![cfg.into(), format!("{lr}"), format!("{train:.4}"), format!("{:.4}", res.final_val_loss)]);
             if res.final_val_loss < best_lr.1 {
@@ -39,27 +39,36 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
 }
 
 /// Fig 5: multi-layer expansion orderings — copying_last vs copying_stack vs
-/// copying_inter, 3-layer → 6-layer GPT2.
+/// copying_inter, 3-layer → 6-layer GPT2. The three orderings fork from one
+/// shared 3-layer source segment (sweep).
 pub fn fig5(ctx: &Ctx) -> Result<()> {
     let target = "fig5";
     let total = ctx.steps;
     let tau = total / 4;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l6", "gpt2.l6", total, sched))?;
-    let mut table = Table::new(&["ordering", "final val loss", "gap vs fixed %"]);
-    for (name, order) in [("copying_last", CopyOrder::Last), ("copying_stack", CopyOrder::Stack), ("copying_inter", CopyOrder::Inter)] {
-        let spec = RunSpec::progressive(
-            format!("l3-l6-{name}"),
-            "gpt2.l3",
-            "gpt2.l6",
-            tau,
-            total,
-            sched,
-            ExpandSpec { strategy: Strategy::Copying(order), ..Default::default() },
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l6", "gpt2.l6", total, sched).build()?)?;
+    let orderings =
+        [("copying_last", CopyOrder::Last), ("copying_stack", CopyOrder::Stack), ("copying_inter", CopyOrder::Inter)];
+    let mut plans = Vec::new();
+    for (name, order) in orderings {
+        plans.push(
+            RunBuilder::progressive(
+                format!("l3-l6-{name}"),
+                "gpt2.l3",
+                "gpt2.l6",
+                tau,
+                total,
+                sched,
+                ExpandSpec { strategy: Strategy::Copying(order), ..Default::default() },
+            )
+            .build()?,
         );
-        let res = ctx.run_logged(target, &spec)?;
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
+    let mut table = Table::new(&["ordering", "final val loss", "gap vs fixed %"]);
+    for ((name, _), res) in orderings.iter().zip(&outcome.results) {
         let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
-        table.row(vec![name.into(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}")]);
+        table.row(vec![name.to_string(), format!("{:.4}", res.final_val_loss), format!("{gap:+.2}")]);
     }
     table.row(vec!["fixed".into(), format!("{:.4}", fixed.final_val_loss), "0.00".into()]);
     ctx.emit(target, &table)
@@ -75,15 +84,20 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
     let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
     let prog = ctx.run_logged(
         target,
-        &RunSpec::progressive("prog-l0-l6", "gpt2.l0", "gpt2.l6", tau, total, sched, ExpandSpec::default()),
+        RunBuilder::progressive("prog-l0-l6", "gpt2.l0", "gpt2.l6", tau, total, sched, ExpandSpec::default())
+            .build()?,
     )?;
     // Fixed-size run for the same steps the grown model got.
     let grown_steps = total - tau;
-    let short = ctx.run_logged(target, &RunSpec::fixed("fixed-short", "gpt2.l6", grown_steps, sched))?;
+    let short =
+        ctx.run_logged(target, RunBuilder::fixed("fixed-short", "gpt2.l6", grown_steps, sched).build()?)?;
     // Fixed-size run with the same FLOPs as the whole progressive run.
     let l6 = ctx.manifest.get("gpt2.l6")?;
     let equal_steps = (prog.ledger.total / crate::flops::flops_per_step(l6)) as usize;
-    let equal = ctx.run_logged(target, &RunSpec::fixed("fixed-equal-compute", "gpt2.l6", equal_steps.max(10), sched))?;
+    let equal = ctx.run_logged(
+        target,
+        RunBuilder::fixed("fixed-equal-compute", "gpt2.l6", equal_steps.max(10), sched).build()?,
+    )?;
 
     let mut table = Table::new(&["run", "steps", "FLOPs", "final val loss"]);
     for (name, res, steps) in [
@@ -113,10 +127,11 @@ pub fn fig7_8(ctx: &Ctx, replot: bool) -> Result<()> {
             ("wsd", Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 }),
             ("cosine", Schedule::cosine(0.02)),
         ] {
-            let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{label}-{sname}-fixed"), large, total, sched))?;
+            let fixed =
+                ctx.run_logged(target, RunBuilder::fixed(format!("{label}-{sname}-fixed"), large, total, sched).build()?)?;
             table.row(vec![label.into(), sname.into(), "fixed".into(), format!("{:.4}", fixed.final_val_loss), "—".into()]);
             for &tau in &taus {
-                let spec = RunSpec::progressive(
+                let plan = RunBuilder::progressive(
                     format!("{label}-{sname}-tau{}", tau * 10 / total),
                     small,
                     large,
@@ -124,8 +139,9 @@ pub fn fig7_8(ctx: &Ctx, replot: bool) -> Result<()> {
                     total,
                     sched,
                     ExpandSpec::default(),
-                );
-                let res = ctx.run_logged(target, &spec)?;
+                )
+                .build()?;
+                let res = ctx.run_logged(target, plan)?;
                 let mixed = mixing_point(&res.curve, &fixed.curve, 0.04, 2).is_some();
                 table.row(vec![
                     label.into(),

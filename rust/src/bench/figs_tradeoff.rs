@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{RunSpec, Stage};
+use crate::coordinator::RunBuilder;
 use crate::expansion::ExpandSpec;
 use crate::metrics::Table;
 use crate::schedule::Schedule;
@@ -12,7 +12,9 @@ use super::Ctx;
 
 /// Fig 10: depth-expansion grid — sources {0,1,2,3,6} × targets {6,12} ×
 /// expansion times; report (FLOPs, loss) Pareto points. The paper's takeaway:
-/// zero/one-layer sources trace the Pareto frontier.
+/// zero/one-layer sources trace the Pareto frontier. The whole grid runs as
+/// one [`crate::coordinator::Sweep`]: variants sharing (source, τ) fork from
+/// a single source-model segment instead of retraining it per target.
 pub fn fig10(ctx: &Ctx) -> Result<()> {
     let target = "fig10";
     let total = ctx.steps;
@@ -23,37 +25,49 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
 
     let mut table = Table::new(&["target", "source", "τ/T", "FLOPs", "final val loss"]);
     let mut pareto: Vec<(String, f64, f32)> = Vec::new();
+    // Fixed baselines first.
     for tgt in targets {
-        let fixed = ctx.run_logged(target, &RunSpec::fixed(format!("{tgt}-fixed"), tgt, total, sched))?;
+        let fixed = ctx.run_logged(target, RunBuilder::fixed(format!("{tgt}-fixed"), tgt, total, sched).build()?)?;
         table.row(vec![tgt.into(), "fixed".into(), "—".into(), format!("{:.2e}", fixed.ledger.total), format!("{:.4}", fixed.final_val_loss)]);
         pareto.push((format!("{tgt}-fixed"), fixed.ledger.total, fixed.final_val_loss));
+    }
+    // The progressive grid as one sweep.
+    let mut plans = Vec::new();
+    let mut meta = Vec::new();
+    for tgt in targets {
+        let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
         for &src_n in &sources {
-            let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
             if src_n >= tgt_n {
                 continue;
             }
             for &tau in &taus {
                 let small = format!("gpt2.l{src_n}");
-                let spec = RunSpec::progressive(
-                    format!("{tgt}-from-l{src_n}-tau{}", tau * 10 / total),
-                    &small,
-                    tgt,
-                    tau,
-                    total,
-                    sched,
-                    ExpandSpec::default(),
+                plans.push(
+                    RunBuilder::progressive(
+                        format!("{tgt}-from-l{src_n}-tau{}", tau * 10 / total),
+                        &small,
+                        tgt,
+                        tau,
+                        total,
+                        sched,
+                        ExpandSpec::default(),
+                    )
+                    .build()?,
                 );
-                let res = ctx.run_logged(target, &spec)?;
-                table.row(vec![
-                    tgt.into(),
-                    format!("l{src_n}"),
-                    format!("{:.1}", tau as f32 / total as f32),
-                    format!("{:.2e}", res.ledger.total),
-                    format!("{:.4}", res.final_val_loss),
-                ]);
-                pareto.push((spec.name.clone(), res.ledger.total, res.final_val_loss));
+                meta.push((tgt, src_n, tau));
             }
         }
+    }
+    let outcome = ctx.sweep_logged(target, plans)?;
+    for ((tgt, src_n, tau), res) in meta.iter().zip(&outcome.results) {
+        table.row(vec![
+            (*tgt).into(),
+            format!("l{src_n}"),
+            format!("{:.1}", *tau as f32 / total as f32),
+            format!("{:.2e}", res.ledger.total),
+            format!("{:.4}", res.final_val_loss),
+        ]);
+        pareto.push((res.curve.name.clone(), res.ledger.total, res.final_val_loss));
     }
     // Pareto membership: a run is dominated if another has ≤ FLOPs and ≤ loss.
     let frontier: Vec<&str> = pareto
@@ -74,26 +88,22 @@ pub fn fig11(ctx: &Ctx) -> Result<()> {
     let total = ctx.steps * 2;
     let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
 
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("fixed-l12", "gpt2.l12", total, sched))?;
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l12", "gpt2.l12", total, sched).build()?)?;
     let single = ctx.run_logged(
         target,
-        &RunSpec::progressive("single-0-12", "gpt2.l0", "gpt2.l12", total / 2, total, sched, ExpandSpec::default()),
+        RunBuilder::progressive("single-0-12", "gpt2.l0", "gpt2.l12", total / 2, total, sched, ExpandSpec::default())
+            .build()?,
     )?;
     let multi = ctx.run_logged(
         target,
-        &RunSpec {
-            name: "multi-0-2-12".into(),
-            stages: vec![
-                Stage { cfg_id: "gpt2.l0".into(), from_step: 0, expand: ExpandSpec::default() },
-                Stage { cfg_id: "gpt2.l2".into(), from_step: total / 4, expand: ExpandSpec::default() },
-                Stage { cfg_id: "gpt2.l12".into(), from_step: total / 2, expand: ExpandSpec::default() },
-            ],
-            total_steps: total,
-            schedule: sched,
-            eval_every: (total / 40).max(1),
-            eval_batches: 4,
-            seed: ctx.seed,
-        },
+        RunBuilder::new("multi-0-2-12")
+            .start("gpt2.l0")
+            .then_expand_at(total / 4, "gpt2.l2", ExpandSpec::default())
+            .then_expand_at(total / 2, "gpt2.l12", ExpandSpec::default())
+            .total_steps(total)
+            .schedule(sched)
+            .seed(ctx.seed)
+            .build()?,
     )?;
 
     let mut table = Table::new(&["run", "FLOPs", "final val loss"]);
@@ -114,12 +124,13 @@ pub fn fig12(ctx: &Ctx) -> Result<()> {
     let total = ctx.steps;
     let tau = total / 3;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    let fixed = ctx.run_logged(target, &RunSpec::fixed("dsv3-fixed-l4", "deepseekv3.l4", total, sched))?;
+    let fixed = ctx.run_logged(target, RunBuilder::fixed("dsv3-fixed-l4", "deepseekv3.l4", total, sched).build()?)?;
     let mut table = Table::new(&["run", "final val loss", "gap %", "mixed"]);
     for src in ["deepseekv3.l0", "deepseekv3.l1"] {
         let res = ctx.run_logged(
             target,
-            &RunSpec::progressive(format!("dsv3-prog-{src}"), src, "deepseekv3.l4", tau, total, sched, ExpandSpec::default()),
+            RunBuilder::progressive(format!("dsv3-prog-{src}"), src, "deepseekv3.l4", tau, total, sched, ExpandSpec::default())
+                .build()?,
         )?;
         let gap = (res.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss * 100.0;
         let mixed = crate::metrics::mixing_point(&res.curve, &fixed.curve, 0.04, 2).is_some();

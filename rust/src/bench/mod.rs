@@ -17,7 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::coordinator::{RunResult, RunSpec, Trainer};
+use crate::coordinator::{RunDriver, RunPlan, RunResult, Sweep, SweepOutcome, Trainer};
 use crate::data::{Corpus, CorpusConfig};
 use crate::metrics::Table;
 use crate::runtime::{Engine, Manifest};
@@ -49,21 +49,50 @@ impl Ctx {
         Trainer::new(&self.engine, &self.manifest, &self.corpus)
     }
 
-    /// Run and persist the curve CSV under `results/<target>/<run>.csv`.
-    pub fn run_logged(&self, target: &str, spec: &RunSpec) -> Result<RunResult> {
+    /// Drive a plan to completion and persist the curve CSV under
+    /// `results/<target>/<run>.csv`.
+    pub fn run_logged(&self, target: &str, plan: RunPlan) -> Result<RunResult> {
         let t0 = std::time::Instant::now();
-        let res = self.trainer().run(spec)?;
+        let name = plan.name().to_string();
+        let mut driver = RunDriver::new(self.trainer(), plan)?;
+        driver.run_to_end()?;
+        let res = driver.finish();
         let dir = self.out_dir.join(target);
         res.curve.write_csv(&dir)?;
         eprintln!(
             "  [{}] {}: final val {:.4}, {:.2e} FLOPs, {:.1}s",
             target,
-            spec.name,
+            name,
             res.final_val_loss,
             res.ledger.total,
             t0.elapsed().as_secs_f32()
         );
         Ok(res)
+    }
+
+    /// Run many plans through a [`Sweep`] (source-model segments shared
+    /// across same-prefix variants) and persist every curve CSV.
+    pub fn sweep_logged(&self, target: &str, plans: Vec<RunPlan>) -> Result<SweepOutcome> {
+        let t0 = std::time::Instant::now();
+        let n = plans.len();
+        let mut sweep = Sweep::new(self.trainer());
+        for p in plans {
+            sweep.add(p);
+        }
+        let outcome = sweep.run()?;
+        let dir = self.out_dir.join(target);
+        for res in &outcome.results {
+            res.curve.write_csv(&dir)?;
+        }
+        eprintln!(
+            "  [{}] sweep of {} runs: executed {:.2e} FLOPs (shared {:.2e}), {:.1}s",
+            target,
+            n,
+            outcome.executed_flops,
+            outcome.shared_flops,
+            t0.elapsed().as_secs_f32()
+        );
+        Ok(outcome)
     }
 
     pub fn emit(&self, target: &str, table: &Table) -> Result<()> {

@@ -1,18 +1,25 @@
 //! Checkpointing: params + optimizer state in a simple self-describing
 //! binary format (magic, version, per-tensor name/shape/f32-LE payload).
 //!
-//! Used by the launcher's `train --save/--resume` and by long bench sweeps
-//! to reuse source-model training across expansion variants (the paper's
-//! Fig-3 grid trains the small model once per family).
+//! Two artifact kinds share the format primitives:
+//! - a plain **model checkpoint** (`DPTCKPT1`): params + optimizer state for
+//!   one config — the unit `expand-ckpt` operates on;
+//! - a **driver snapshot** (`DPTDRV01`): a model checkpoint plus every piece
+//!   of loop state a [`crate::coordinator::RunDriver`] needs to resume
+//!   bit-exactly — step/stage position, data-stream counters, the FLOP
+//!   ledger, and the curve logged so far.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::flops::FlopLedger;
+use crate::metrics::{Curve, CurvePoint};
 use crate::runtime::{ConfigEntry, ModelState, Tensor};
 
 const MAGIC: &[u8; 8] = b"DPTCKPT1";
+const SNAP_MAGIC: &[u8; 8] = b"DPTDRV01";
 
 pub fn save(path: &Path, cfg_id: &str, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -21,13 +28,17 @@ pub fn save(path: &Path, cfg_id: &str, state: &ModelState, entry: &ConfigEntry) 
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     write_str(&mut f, cfg_id)?;
-    write_u64(&mut f, entry.params.len() as u64)?;
+    write_state(&mut f, state, entry)
+}
+
+fn write_state(f: &mut impl Write, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
+    write_u64(f, entry.params.len() as u64)?;
     for (spec, t) in entry.params.iter().zip(&state.params) {
-        write_tensor(&mut f, &spec.name, t)?;
+        write_tensor(f, &spec.name, t)?;
     }
-    write_u64(&mut f, entry.opt_state.len() as u64)?;
+    write_u64(f, entry.opt_state.len() as u64)?;
     for (spec, t) in entry.opt_state.iter().zip(&state.opt) {
-        write_tensor(&mut f, &spec.name, t)?;
+        write_tensor(f, &spec.name, t)?;
     }
     Ok(())
 }
@@ -45,31 +56,193 @@ pub fn load(path: &Path, entry: &ConfigEntry) -> Result<ModelState> {
     if cfg_id != entry.cfg_id {
         bail!("checkpoint is for config '{cfg_id}', expected '{}'", entry.cfg_id);
     }
-    let np = read_u64(&mut f)? as usize;
+    read_state(&mut f, entry)
+}
+
+fn read_state(f: &mut impl Read, entry: &ConfigEntry) -> Result<ModelState> {
+    let np = read_u64(f)? as usize;
     if np != entry.params.len() {
         bail!("checkpoint has {np} params, manifest wants {}", entry.params.len());
     }
     let mut params = Vec::with_capacity(np);
     for spec in &entry.params {
-        let (name, t) = read_tensor(&mut f)?;
+        let (name, t) = read_tensor(f)?;
         if name != spec.name || t.shape != spec.shape {
             bail!("checkpoint param mismatch: {name} vs {}", spec.name);
         }
         params.push(t);
     }
-    let no = read_u64(&mut f)? as usize;
+    let no = read_u64(f)? as usize;
     if no != entry.opt_state.len() {
         bail!("checkpoint has {no} opt tensors, manifest wants {}", entry.opt_state.len());
     }
     let mut opt = Vec::with_capacity(no);
     for spec in &entry.opt_state {
-        let (name, t) = read_tensor(&mut f)?;
+        let (name, t) = read_tensor(f)?;
         if name != spec.name || t.shape != spec.shape {
             bail!("checkpoint OS mismatch: {name} vs {}", spec.name);
         }
         opt.push(t);
     }
     Ok(ModelState { params, opt })
+}
+
+/// Everything a paused [`crate::coordinator::RunDriver`] is, outside the
+/// plan itself: position, model + optimizer state, deterministic data-stream
+/// counters, accounting, and the curve logged so far. Reloading it against
+/// the same `RunPlan` resumes the run bit-exactly.
+#[derive(Debug, Clone)]
+pub struct DriverSnapshot {
+    /// Run name (curve name) at snapshot time.
+    pub run_name: String,
+    /// Config of the stage the driver was in.
+    pub cfg_id: String,
+    pub step: usize,
+    pub stage_idx: usize,
+    /// Seed the current token batchers were constructed with.
+    pub data_seed: u64,
+    /// Windows drawn from the train/val batchers since their construction.
+    pub train_windows: u64,
+    pub val_windows: u64,
+    /// Samples drawn from the image generator since run start (resnet runs).
+    pub image_samples: u64,
+    pub last_train_loss: f32,
+    pub ledger: FlopLedger,
+    pub curve: Curve,
+    pub boundaries: Vec<(usize, String)>,
+    pub state: ModelState,
+}
+
+/// Serialize a driver snapshot (see [`DriverSnapshot`]).
+pub fn save_snapshot(path: &Path, snap: &DriverSnapshot, entry: &ConfigEntry) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(SNAP_MAGIC)?;
+    write_str(&mut f, &snap.run_name)?;
+    write_str(&mut f, &snap.cfg_id)?;
+    write_u64(&mut f, snap.step as u64)?;
+    write_u64(&mut f, snap.stage_idx as u64)?;
+    write_u64(&mut f, snap.data_seed)?;
+    write_u64(&mut f, snap.train_windows)?;
+    write_u64(&mut f, snap.val_windows)?;
+    write_u64(&mut f, snap.image_samples)?;
+    write_f32(&mut f, snap.last_train_loss)?;
+    write_f64(&mut f, snap.ledger.total)?;
+    write_u64(&mut f, snap.ledger.tokens)?;
+    write_u64(&mut f, snap.ledger.stages.len() as u64)?;
+    for (cfg, steps, flops) in &snap.ledger.stages {
+        write_str(&mut f, cfg)?;
+        write_u64(&mut f, *steps as u64)?;
+        write_f64(&mut f, *flops)?;
+    }
+    write_u64(&mut f, snap.curve.points.len() as u64)?;
+    for p in &snap.curve.points {
+        write_u64(&mut f, p.step as u64)?;
+        write_u64(&mut f, p.tokens)?;
+        write_f64(&mut f, p.flops)?;
+        write_f32(&mut f, p.train_loss)?;
+        write_f32(&mut f, p.val_loss)?;
+        write_f32(&mut f, p.lr)?;
+    }
+    write_u64(&mut f, snap.boundaries.len() as u64)?;
+    for (step, cfg) in &snap.boundaries {
+        write_u64(&mut f, *step as u64)?;
+        write_str(&mut f, cfg)?;
+    }
+    write_state(&mut f, &snap.state, entry)
+}
+
+/// Read only the config id of a snapshot (to resolve the manifest entry
+/// [`load_snapshot`] validates against).
+pub fn snapshot_cfg_id(path: &Path) -> Result<String> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening snapshot {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != SNAP_MAGIC {
+        bail!("not a DPT driver snapshot: {path:?}");
+    }
+    let _run_name = read_str(&mut f)?;
+    read_str(&mut f)
+}
+
+/// Load a driver snapshot, validating the model section against `entry`
+/// (which must be the manifest entry for the snapshot's `cfg_id`).
+pub fn load_snapshot(path: &Path, entry: &ConfigEntry) -> Result<DriverSnapshot> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening snapshot {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != SNAP_MAGIC {
+        bail!("not a DPT driver snapshot: {path:?}");
+    }
+    let run_name = read_str(&mut f)?;
+    let cfg_id = read_str(&mut f)?;
+    if cfg_id != entry.cfg_id {
+        bail!("snapshot is for config '{cfg_id}', expected '{}'", entry.cfg_id);
+    }
+    let step = read_u64(&mut f)? as usize;
+    let stage_idx = read_u64(&mut f)? as usize;
+    let data_seed = read_u64(&mut f)?;
+    let train_windows = read_u64(&mut f)?;
+    let val_windows = read_u64(&mut f)?;
+    let image_samples = read_u64(&mut f)?;
+    let last_train_loss = read_f32(&mut f)?;
+    let mut ledger = FlopLedger { total: read_f64(&mut f)?, tokens: read_u64(&mut f)?, stages: Vec::new() };
+    let n_stages = read_u64(&mut f)? as usize;
+    if n_stages > 1 << 16 {
+        bail!("implausible snapshot stage count {n_stages}");
+    }
+    for _ in 0..n_stages {
+        let cfg = read_str(&mut f)?;
+        let steps = read_u64(&mut f)? as usize;
+        let flops = read_f64(&mut f)?;
+        ledger.stages.push((cfg, steps, flops));
+    }
+    let mut curve = Curve::new(run_name.clone());
+    let n_points = read_u64(&mut f)? as usize;
+    if n_points > 1 << 24 {
+        bail!("implausible snapshot curve length {n_points}");
+    }
+    for _ in 0..n_points {
+        curve.push(CurvePoint {
+            step: read_u64(&mut f)? as usize,
+            tokens: read_u64(&mut f)?,
+            flops: read_f64(&mut f)?,
+            train_loss: read_f32(&mut f)?,
+            val_loss: read_f32(&mut f)?,
+            lr: read_f32(&mut f)?,
+        });
+    }
+    let n_bounds = read_u64(&mut f)? as usize;
+    if n_bounds > 1 << 16 {
+        bail!("implausible snapshot boundary count {n_bounds}");
+    }
+    let mut boundaries = Vec::with_capacity(n_bounds);
+    for _ in 0..n_bounds {
+        let step = read_u64(&mut f)? as usize;
+        boundaries.push((step, read_str(&mut f)?));
+    }
+    let state = read_state(&mut f, entry)?;
+    Ok(DriverSnapshot {
+        run_name,
+        cfg_id,
+        step,
+        stage_idx,
+        data_seed,
+        train_windows,
+        val_windows,
+        image_samples,
+        last_train_loss,
+        ledger,
+        curve,
+        boundaries,
+        state,
+    })
 }
 
 fn write_u64(f: &mut impl Write, v: u64) -> Result<()> {
@@ -80,6 +253,26 @@ fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+fn write_f32(f: &mut impl Write, v: f32) -> Result<()> {
+    f.write_all(&v.to_le_bytes()).map_err(Into::into)
+}
+
+fn read_f32(f: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn write_f64(f: &mut impl Write, v: f64) -> Result<()> {
+    f.write_all(&v.to_le_bytes()).map_err(Into::into)
+}
+
+fn read_f64(f: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
 }
 
 fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
@@ -136,37 +329,143 @@ mod tests {
     use crate::runtime::Manifest;
     use std::path::PathBuf;
 
-    fn fake_entry() -> ConfigEntry {
-        let text = r#"{"configs":{"t":{
-            "model":{"family":"gpt2","n_layer":0,"batch":1,"seq_len":4,"moe":null},
-            "opt":{"kind":"muon_nsgd"},
-            "params":[{"name":"embed.tok","shape":[4,2],"init":"normal","std":0.02,
-                       "muon":true,"decay":false,"fan_in":4,"fan_out":2}],
-            "opt_state":[{"name":"mom.embed.tok","shape":[4,2]}],
-            "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{}}}}"#;
-        Manifest::parse(text, PathBuf::from("/tmp")).unwrap().get("t").unwrap().clone()
+    /// Entry with an embedding plus `extra` additional matrices, so tests can
+    /// construct layout mismatches (param count, shape) between entries.
+    fn fake_entry(cfg_id: &str, extra: usize, shape: (usize, usize)) -> ConfigEntry {
+        let mut params = vec![format!(
+            r#"{{"name":"embed.tok","shape":[{},{}],"init":"normal","std":0.02,
+               "muon":true,"decay":false,"fan_in":4,"fan_out":2}}"#,
+            shape.0, shape.1
+        )];
+        let mut opt = vec![format!(r#"{{"name":"mom.embed.tok","shape":[{},{}]}}"#, shape.0, shape.1)];
+        for i in 0..extra {
+            params.push(format!(
+                r#"{{"name":"layer.{i}.w","shape":[2,2],"init":"normal","std":0.1,
+                   "muon":true,"decay":true,"fan_in":2,"fan_out":2}}"#
+            ));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.w","shape":[2,2]}}"#));
+        }
+        let text = format!(
+            r#"{{"configs":{{"{cfg_id}":{{
+            "model":{{"family":"gpt2","n_layer":{extra},"batch":1,"seq_len":4,"moe":null}},
+            "opt":{{"kind":"muon_nsgd"}},
+            "params":[{}],
+            "opt_state":[{}],
+            "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{{}}}}}}}}"#,
+            params.join(","),
+            opt.join(",")
+        );
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap().get(cfg_id).unwrap().clone()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dpt_ckpt_{name}_{}", std::process::id()))
     }
 
     #[test]
-    fn roundtrip() {
-        let entry = fake_entry();
-        let state = ModelState::init(&entry, 5);
-        let dir = std::env::temp_dir().join("dpt_ckpt_test");
+    fn roundtrip_is_bit_exact_for_params_and_opt() {
+        let entry = fake_entry("t", 2, (4, 2));
+        let mut state = ModelState::init(&entry, 5);
+        // Non-trivial optimizer state (init zeros would mask ordering bugs).
+        for (i, t) in state.opt.iter_mut().enumerate() {
+            for (j, v) in t.data.iter_mut().enumerate() {
+                *v = (i * 31 + j) as f32 * 0.125 - 1.0;
+            }
+        }
+        let dir = tmp("roundtrip");
         let path = dir.join("a.ckpt");
         save(&path, "t", &state, &entry).unwrap();
         let loaded = load(&path, &entry).unwrap();
-        assert_eq!(state.params[0].data, loaded.params[0].data);
-        assert_eq!(state.opt[0].data, loaded.opt[0].data);
+        assert_eq!(state.params.len(), loaded.params.len());
+        for (a, b) in state.params.iter().zip(&loaded.params) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "param bytes changed across save/load");
+        }
+        for (a, b) in state.opt.iter().zip(&loaded.opt) {
+            assert_eq!(a.data, b.data, "optimizer-state bytes changed across save/load");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn rejects_wrong_config() {
-        let entry = fake_entry();
+        let entry = fake_entry("t", 0, (4, 2));
         let state = ModelState::init(&entry, 5);
-        let dir = std::env::temp_dir().join("dpt_ckpt_test2");
+        let dir = tmp("wrongcfg");
         let path = dir.join("a.ckpt");
         save(&path, "other", &state, &entry).unwrap();
+        let err = load(&path, &entry).unwrap_err().to_string();
+        assert!(err.contains("for config 'other'"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let small = fake_entry("t", 0, (4, 2));
+        let big = fake_entry("t", 2, (4, 2));
+        let state = ModelState::init(&small, 5);
+        let dir = tmp("count");
+        let path = dir.join("a.ckpt");
+        save(&path, "t", &state, &small).unwrap();
+        let err = load(&path, &big).unwrap_err().to_string();
+        assert!(err.contains("has 1 params, manifest wants 3"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let a = fake_entry("t", 0, (4, 2));
+        let b = fake_entry("t", 0, (2, 4));
+        let state = ModelState::init(&a, 5);
+        let dir = tmp("shape");
+        let path = dir.join("a.ckpt");
+        save(&path, "t", &state, &a).unwrap();
+        let err = load(&path, &b).unwrap_err().to_string();
+        assert!(err.contains("param mismatch"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_loop_state() {
+        let entry = fake_entry("t", 1, (4, 2));
+        let state = ModelState::init(&entry, 9);
+        let mut curve = Curve::new("run");
+        curve.push(CurvePoint { step: 10, tokens: 640, flops: 1e6, train_loss: 2.5, val_loss: 2.6, lr: 0.01 });
+        curve.push(CurvePoint { step: 20, tokens: 1280, flops: 2e6, train_loss: 2.1, val_loss: 2.2, lr: 0.01 });
+        let snap = DriverSnapshot {
+            run_name: "run".into(),
+            cfg_id: "t".into(),
+            step: 20,
+            stage_idx: 1,
+            data_seed: 18,
+            train_windows: 40,
+            val_windows: 8,
+            image_samples: 0,
+            last_train_loss: 2.1,
+            ledger: FlopLedger { total: 2e6, tokens: 1280, stages: vec![("t".into(), 20, 2e6)] },
+            curve,
+            boundaries: vec![(10, "t".into())],
+            state,
+        };
+        let dir = tmp("snap");
+        let path = dir.join("a.snap");
+        save_snapshot(&path, &snap, &entry).unwrap();
+        let loaded = load_snapshot(&path, &entry).unwrap();
+        assert_eq!(loaded.step, 20);
+        assert_eq!(loaded.stage_idx, 1);
+        assert_eq!(loaded.data_seed, 18);
+        assert_eq!(loaded.train_windows, 40);
+        assert_eq!(loaded.val_windows, 8);
+        assert_eq!(loaded.curve.points.len(), 2);
+        assert_eq!(loaded.curve.points[1], snap.curve.points[1]);
+        assert_eq!(loaded.boundaries, snap.boundaries);
+        assert_eq!(loaded.ledger.stages, snap.ledger.stages);
+        assert_eq!(loaded.state.params[0].data, snap.state.params[0].data);
+        assert_eq!(loaded.state.opt[1].data, snap.state.opt[1].data);
+        // A model checkpoint is not a snapshot and vice versa.
+        let ckpt = dir.join("b.ckpt");
+        save(&ckpt, "t", &snap.state, &entry).unwrap();
+        assert!(load_snapshot(&ckpt, &entry).is_err());
         assert!(load(&path, &entry).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

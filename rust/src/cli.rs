@@ -1,7 +1,24 @@
 //! Minimal CLI argument parser (the offline crate set has no clap):
-//! `<command> [positional...] [--flag value] [--switch]`.
+//! `<command> [positional...] [--flag value] [--flag=value] [--switch]`.
+//!
+//! Two entry points:
+//! - [`Args::parse`]: lenient, spec-free (library/example use). A `--token`
+//!   followed by a non-`--` token becomes a valued flag, otherwise a switch.
+//! - [`Args::parse_for`]: spec-aware (the launcher). Knows which names take
+//!   values and which are boolean switches, so negative numbers pass
+//!   unambiguously (`--lr -0.01` or `--lr=-0.01`), switches never swallow
+//!   positionals, and unknown or malformed flags are rejected loudly
+//!   instead of silently parsing as something else.
 
 use std::collections::BTreeMap;
+
+/// Flag vocabulary of one command: names that take a value, and boolean
+/// switch names. Used by [`Args::parse_for`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommandSpec {
+    pub flags: &'static [&'static str],
+    pub switches: &'static [&'static str],
+}
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -12,6 +29,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Lenient parse (no vocabulary): kept for examples and ad-hoc tools.
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -20,6 +38,10 @@ impl Args {
         }
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
                         let v = it.next().unwrap();
@@ -32,6 +54,56 @@ impl Args {
             }
         }
         out
+    }
+
+    /// Spec-aware parse: `spec` names the valued flags and boolean switches
+    /// this command accepts; anything else `--`-prefixed is an error.
+    pub fn parse_for(argv: impl IntoIterator<Item = String>, spec: &CommandSpec) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                out.positional.push(a);
+                continue;
+            };
+            let is_flag = |n: &str| spec.flags.iter().any(|&f| f == n);
+            let is_switch = |n: &str| spec.switches.iter().any(|&s| s == n);
+            if let Some((k, v)) = name.split_once('=') {
+                if is_flag(k) {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if is_switch(k) {
+                    return Err(format!("switch --{k} does not take a value"));
+                }
+                return Err(format!("unknown flag --{k}"));
+            }
+            if is_switch(name) {
+                out.switches.push(name.to_string());
+                continue;
+            }
+            if is_flag(name) {
+                // The next token is the value, even if it starts with a
+                // single '-' (negative numbers). A further '--token' is
+                // almost certainly a doubled-dash mistake, not a value.
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    Some(v) => {
+                        return Err(format!("flag --{name} requires a value, got '{v}' (use --{name}=VALUE if the value starts with '--')"));
+                    }
+                    None => return Err(format!("flag --{name} requires a value")),
+                }
+                continue;
+            }
+            return Err(format!("unknown flag --{name}"));
+        }
+        Ok(out)
     }
 
     pub fn from_env() -> Args {
@@ -71,6 +143,15 @@ mod tests {
         Args::parse(s.split_whitespace().map(String::from))
     }
 
+    const SPEC: CommandSpec = CommandSpec {
+        flags: &["steps", "lr", "tau", "delta"],
+        switches: &["verbose"],
+    };
+
+    fn args_for(s: &str) -> Result<Args, String> {
+        Args::parse_for(s.split_whitespace().map(String::from), &SPEC)
+    }
+
     #[test]
     fn parses_command_flags_switches() {
         let a = args("train gpt2.l12 --steps 500 --verbose --lr 0.01");
@@ -87,5 +168,50 @@ mod tests {
         let a = args("bench-fig1");
         assert_eq!(a.get_usize("steps", 240), 240);
         assert_eq!(a.get_str("out", "results"), "results");
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("train --lr=0.02 --steps=7");
+        assert_eq!(a.get_f32("lr", 0.0), 0.02);
+        assert_eq!(a.get_usize("steps", 0), 7);
+    }
+
+    #[test]
+    fn spec_accepts_negative_values() {
+        let a = args_for("train --lr -0.01 --delta=-3.5 --tau -5").unwrap();
+        assert_eq!(a.get_f32("lr", 0.0), -0.01);
+        assert_eq!(a.get_f32("delta", 0.0), -3.5);
+        assert_eq!(a.get_str("tau", ""), "-5");
+    }
+
+    #[test]
+    fn spec_rejects_unknown_flags() {
+        let err = args_for("train --bogus 3").unwrap_err();
+        assert!(err.contains("unknown flag --bogus"), "{err}");
+        // The doubled-dash typo is a loud error, not a silent switch.
+        let err = args_for("train --lr --0.01").unwrap_err();
+        assert!(err.contains("--lr requires a value"), "{err}");
+        let err = args_for("train --0.01").unwrap_err();
+        assert!(err.contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn spec_switch_never_swallows_positional() {
+        let a = args_for("train --verbose gpt2.l12 --steps 5").unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["gpt2.l12"]);
+        assert_eq!(a.get_usize("steps", 0), 5);
+        // Lenient parse gets this wrong — the spec-aware path is the fix.
+        let lenient = args("train --verbose gpt2.l12 --steps 5");
+        assert_eq!(lenient.get_str("verbose", ""), "gpt2.l12");
+    }
+
+    #[test]
+    fn spec_rejects_switch_with_value_and_missing_value() {
+        let err = args_for("train --verbose=yes").unwrap_err();
+        assert!(err.contains("does not take a value"), "{err}");
+        let err = args_for("train --lr").unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
     }
 }

@@ -1,0 +1,377 @@
+//! Fluent construction and build-time validation of run plans.
+//!
+//! A [`RunPlan`] is the immutable description of one training run: an
+//! N-stage sequence of model configs over a shared horizon, with an explicit
+//! transition (depth expansion or optimizer switch) at each stage boundary,
+//! plus the schedule, eval cadence, and seed. Plans are produced only by
+//! [`RunBuilder::build`], which validates the structure, so every plan a
+//! [`crate::coordinator::RunDriver`] receives is well-formed by construction.
+
+use anyhow::{bail, Result};
+
+use crate::expansion::ExpandSpec;
+use crate::schedule::Schedule;
+
+/// How a stage's initial state is produced from the previous stage.
+#[derive(Debug, Clone)]
+pub enum Transition {
+    /// Stage 0: fresh initialization from the manifest's init specs.
+    Init,
+    /// Depth expansion by the [`crate::expansion`] engine.
+    Expand(ExpandSpec),
+    /// Fig-19 optimizer switch at constant depth: parameters carry over
+    /// bit-exact, the (differently-shaped) optimizer state is reset. The
+    /// driver validates the parameter layouts match at start-up.
+    SwitchOptimizer,
+}
+
+/// One stage of a validated plan.
+#[derive(Debug, Clone)]
+pub struct PlanStage {
+    pub cfg_id: String,
+    /// First step of this stage (stage 0 starts at 0).
+    pub from_step: usize,
+    /// Applied when *entering* this stage.
+    pub transition: Transition,
+}
+
+/// Immutable, validated run description. Construct via [`RunBuilder`].
+#[derive(Debug, Clone)]
+pub struct RunPlan {
+    name: String,
+    stages: Vec<PlanStage>,
+    total_steps: usize,
+    schedule: Schedule,
+    eval_every: usize,
+    eval_batches: usize,
+    seed: u64,
+}
+
+impl RunPlan {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn stages(&self) -> &[PlanStage] {
+        &self.stages
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    pub fn eval_every(&self) -> usize {
+        self.eval_every
+    }
+
+    pub fn eval_batches(&self) -> usize {
+        self.eval_batches
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// First stage-boundary step, or the horizon if the plan is single-stage.
+    pub fn first_boundary(&self) -> usize {
+        self.stages.get(1).map(|s| s.from_step).unwrap_or(self.total_steps)
+    }
+
+    /// Key identifying runs whose step/eval stream is identical until the
+    /// first boundary — the [`crate::coordinator::Sweep`] shares the stage-0
+    /// segment across plans with equal prefix keys.
+    pub fn prefix_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}",
+            self.stages[0].cfg_id,
+            self.total_steps,
+            self.eval_every,
+            self.eval_batches,
+            self.seed,
+            self.schedule,
+        )
+    }
+}
+
+/// Fluent builder for [`RunPlan`]; `build()` validates everything that can
+/// be checked without a manifest (config existence and layout compatibility
+/// are checked when the driver starts).
+#[derive(Debug, Clone)]
+pub struct RunBuilder {
+    name: String,
+    stages: Vec<PlanStage>,
+    total_steps: Option<usize>,
+    schedule: Option<Schedule>,
+    eval_every: Option<usize>,
+    eval_batches: usize,
+    seed: u64,
+}
+
+impl RunBuilder {
+    pub fn new(name: impl Into<String>) -> RunBuilder {
+        RunBuilder {
+            name: name.into(),
+            stages: Vec::new(),
+            total_steps: None,
+            schedule: None,
+            eval_every: None,
+            eval_batches: 4,
+            seed: 17,
+        }
+    }
+
+    /// Stage 0: the config trained from step 0.
+    pub fn start(mut self, cfg_id: impl Into<String>) -> RunBuilder {
+        self.stages
+            .insert(0, PlanStage { cfg_id: cfg_id.into(), from_step: 0, transition: Transition::Init });
+        self
+    }
+
+    /// Add a stage entered at `step` by depth expansion.
+    pub fn then_expand_at(
+        mut self,
+        step: usize,
+        cfg_id: impl Into<String>,
+        spec: ExpandSpec,
+    ) -> RunBuilder {
+        self.stages.push(PlanStage {
+            cfg_id: cfg_id.into(),
+            from_step: step,
+            transition: Transition::Expand(spec),
+        });
+        self
+    }
+
+    /// Add a stage entered at `step` by a constant-depth optimizer switch
+    /// (Fig 19): same parameter layout, new optimizer-state layout.
+    pub fn then_switch_optimizer_at(mut self, step: usize, cfg_id: impl Into<String>) -> RunBuilder {
+        self.stages.push(PlanStage {
+            cfg_id: cfg_id.into(),
+            from_step: step,
+            transition: Transition::SwitchOptimizer,
+        });
+        self
+    }
+
+    pub fn total_steps(mut self, n: usize) -> RunBuilder {
+        self.total_steps = Some(n);
+        self
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> RunBuilder {
+        self.schedule = Some(s);
+        self
+    }
+
+    /// Eval cadence in steps (default: horizon / 40, at least 1).
+    pub fn eval_every(mut self, n: usize) -> RunBuilder {
+        self.eval_every = Some(n);
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> RunBuilder {
+        self.eval_batches = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RunBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Preconfigured single-stage run (the old `RunSpec::fixed` shape).
+    pub fn fixed(
+        name: impl Into<String>,
+        cfg_id: &str,
+        total_steps: usize,
+        schedule: Schedule,
+    ) -> RunBuilder {
+        RunBuilder::new(name).start(cfg_id).total_steps(total_steps).schedule(schedule)
+    }
+
+    /// Preconfigured two-stage progressive run (the old `RunSpec::progressive`
+    /// shape): `small` until `tau`, then expand into `large`.
+    pub fn progressive(
+        name: impl Into<String>,
+        small: &str,
+        large: &str,
+        tau: usize,
+        total_steps: usize,
+        schedule: Schedule,
+        expand_spec: ExpandSpec,
+    ) -> RunBuilder {
+        RunBuilder::new(name)
+            .start(small)
+            .then_expand_at(tau, large, expand_spec)
+            .total_steps(total_steps)
+            .schedule(schedule)
+    }
+
+    /// Validate and freeze into an immutable [`RunPlan`].
+    pub fn build(self) -> Result<RunPlan> {
+        if self.name.is_empty() {
+            bail!("run plan needs a non-empty name");
+        }
+        let Some(total_steps) = self.total_steps else {
+            bail!("run plan '{}' has no total_steps", self.name);
+        };
+        if total_steps == 0 {
+            bail!("run plan '{}' has a zero-step horizon", self.name);
+        }
+        let Some(schedule) = self.schedule else {
+            bail!("run plan '{}' has no schedule", self.name);
+        };
+        if self.stages.is_empty() || !matches!(self.stages[0].transition, Transition::Init) {
+            bail!("run plan '{}' needs a stage 0 (call RunBuilder::start)", self.name);
+        }
+        if self.stages[0].from_step != 0 {
+            bail!("run plan '{}': stage 0 must start at step 0", self.name);
+        }
+        if self.stages.iter().skip(1).any(|s| matches!(s.transition, Transition::Init)) {
+            bail!("run plan '{}' has more than one starting stage", self.name);
+        }
+        for w in self.stages.windows(2) {
+            if w[1].from_step <= w[0].from_step {
+                bail!(
+                    "run plan '{}': stage boundaries must be strictly increasing ({} then {})",
+                    self.name,
+                    w[0].from_step,
+                    w[1].from_step
+                );
+            }
+            if w[1].from_step >= total_steps {
+                bail!(
+                    "run plan '{}': boundary at step {} is outside the {total_steps}-step horizon",
+                    self.name,
+                    w[1].from_step
+                );
+            }
+        }
+        let eval_every = self.eval_every.unwrap_or((total_steps / 40).max(1));
+        if eval_every == 0 {
+            bail!("run plan '{}': eval_every must be at least 1", self.name);
+        }
+        if self.eval_batches == 0 {
+            bail!("run plan '{}': eval_batches must be at least 1", self.name);
+        }
+        Ok(RunPlan {
+            name: self.name,
+            stages: self.stages,
+            total_steps,
+            schedule,
+            eval_every,
+            eval_batches: self.eval_batches,
+            seed: self.seed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Schedule {
+        Schedule::Constant { peak: 0.01, warmup_frac: 0.02 }
+    }
+
+    #[test]
+    fn builds_multi_stage_plan() {
+        let plan = RunBuilder::new("multi")
+            .start("gpt2.l0")
+            .then_expand_at(40, "gpt2.l2", ExpandSpec::default())
+            .then_switch_optimizer_at(80, "gpt2.l2.adamw")
+            .total_steps(160)
+            .schedule(sched())
+            .eval_every(10)
+            .seed(5)
+            .build()
+            .unwrap();
+        assert_eq!(plan.stages().len(), 3);
+        assert_eq!(plan.stages()[1].from_step, 40);
+        assert!(matches!(plan.stages()[2].transition, Transition::SwitchOptimizer));
+        assert_eq!(plan.eval_every(), 10);
+        assert_eq!(plan.seed(), 5);
+        assert_eq!(plan.first_boundary(), 40);
+    }
+
+    #[test]
+    fn fixed_and_progressive_conveniences() {
+        let f = RunBuilder::fixed("f", "gpt2.l6", 400, sched()).build().unwrap();
+        assert_eq!(f.stages().len(), 1);
+        assert_eq!(f.eval_every(), 10); // 400 / 40
+        assert_eq!(f.first_boundary(), 400);
+        let p = RunBuilder::progressive("p", "gpt2.l0", "gpt2.l6", 300, 400, sched(), ExpandSpec::default())
+            .build()
+            .unwrap();
+        assert_eq!(p.stages().len(), 2);
+        assert_eq!(p.first_boundary(), 300);
+        assert!(matches!(p.stages()[1].transition, Transition::Expand(_)));
+    }
+
+    #[test]
+    fn rejects_missing_pieces() {
+        assert!(RunBuilder::new("x").total_steps(10).schedule(sched()).build().is_err()); // no stage 0
+        assert!(RunBuilder::new("x").start("a").schedule(sched()).build().is_err()); // no horizon
+        assert!(RunBuilder::new("x").start("a").total_steps(10).build().is_err()); // no schedule
+        assert!(RunBuilder::new("").start("a").total_steps(10).schedule(sched()).build().is_err());
+        assert!(RunBuilder::new("x").start("a").total_steps(0).schedule(sched()).build().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_boundaries() {
+        // Not increasing.
+        assert!(RunBuilder::new("x")
+            .start("a")
+            .then_expand_at(50, "b", ExpandSpec::default())
+            .then_expand_at(50, "c", ExpandSpec::default())
+            .total_steps(100)
+            .schedule(sched())
+            .build()
+            .is_err());
+        // Outside the horizon.
+        assert!(RunBuilder::new("x")
+            .start("a")
+            .then_expand_at(100, "b", ExpandSpec::default())
+            .total_steps(100)
+            .schedule(sched())
+            .build()
+            .is_err());
+        // Zero cadence.
+        assert!(RunBuilder::new("x")
+            .start("a")
+            .total_steps(100)
+            .schedule(sched())
+            .eval_every(0)
+            .build()
+            .is_err());
+        // Zero eval batches.
+        assert!(RunBuilder::new("x")
+            .start("a")
+            .total_steps(100)
+            .schedule(sched())
+            .eval_batches(0)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn prefix_key_separates_incompatible_runs() {
+        let a = RunBuilder::progressive("a", "s", "l", 40, 100, sched(), ExpandSpec::default())
+            .build()
+            .unwrap();
+        let b = RunBuilder::progressive("b", "s", "l", 40, 100, sched(), ExpandSpec { seed: 99, ..Default::default() })
+            .build()
+            .unwrap();
+        // Same prefix: the expansion spec only matters after the boundary.
+        assert_eq!(a.prefix_key(), b.prefix_key());
+        let c = RunBuilder::progressive("c", "s", "l", 40, 100, sched(), ExpandSpec::default())
+            .seed(99)
+            .build()
+            .unwrap();
+        assert_ne!(a.prefix_key(), c.prefix_key());
+    }
+}

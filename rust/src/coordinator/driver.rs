@@ -1,0 +1,623 @@
+//! The step-granular, resumable run state machine.
+//!
+//! A [`RunDriver`] executes one [`RunPlan`] with *all* loop state held in
+//! fields rather than locals: step position, stage index, model + optimizer
+//! state, data-stream counters, the FLOP ledger, and the curve logged so
+//! far. That externalization is what buys the subsystem's three new
+//! capabilities:
+//!
+//! - **pause/resume**: [`RunDriver::snapshot`] captures the machine,
+//!   [`RunDriver::resume`] rebuilds it; resumed runs are bit-identical to
+//!   uninterrupted ones because data streams fast-forward deterministically
+//!   (see [`crate::data::Batcher::skip_windows`]);
+//! - **early-stopped probes**: callers advance a driver eval-by-eval and
+//!   stop when an external condition (curve mixing) is met;
+//! - **interleaved sweeps**: many drivers share one [`Engine`]'s compiled
+//!   executables and — via snapshot forking — one source-model training
+//!   segment ([`crate::coordinator::Sweep`]).
+//!
+//! Dispatch granularity: the driver batches work into *dispatch units* — a
+//! fused `train_chunk` of `entry.chunk` steps when one fits before the next
+//! eval/boundary, single steps otherwise. Unit boundaries are a pure
+//! function of the step position (never of the `advance` budget), so any
+//! pause/resume sequence replays the exact same engine calls.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::checkpoint::{self, DriverSnapshot};
+use crate::data::{Batcher, ImageGen};
+use crate::expansion::expand;
+use crate::flops::FlopLedger;
+use crate::metrics::{Curve, CurvePoint};
+use crate::runtime::{ConfigEntry, Engine, IntTensor, ModelState, Tensor};
+
+use super::builder::{RunPlan, Transition};
+use super::observer::{
+    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, Observer, RunSummary, Signal,
+};
+use super::{RunResult, Trainer};
+
+/// Data stream for one run: token batchers or the image generator.
+enum RunData<'a> {
+    Tokens { train: Batcher<'a>, val: Batcher<'a> },
+    Images(ImageGen),
+}
+
+impl<'a> RunData<'a> {
+    fn new(trainer: &Trainer<'a>, entry: &ConfigEntry, seed: u64) -> RunData<'a> {
+        if entry.is_resnet() {
+            RunData::Images(ImageGen::new(entry.model.n_classes, entry.model.image_size, 0.5, seed))
+        } else {
+            RunData::Tokens {
+                train: Batcher::new(&trainer.corpus.train, entry.model.seq_len, seed),
+                val: Batcher::new(&trainer.corpus.val, entry.model.seq_len, seed ^ 0x0e7a1),
+            }
+        }
+    }
+}
+
+/// Resumable state machine executing one [`RunPlan`].
+pub struct RunDriver<'a> {
+    trainer: Trainer<'a>,
+    plan: RunPlan,
+    entry: &'a ConfigEntry,
+    state: ModelState,
+    data: RunData<'a>,
+    /// Seed the current token batchers were constructed with (reseeded
+    /// deterministically at each stage boundary).
+    data_seed: u64,
+    step: usize,
+    stage_idx: usize,
+    last_train_loss: f32,
+    ledger: FlopLedger,
+    log: CurveLogger,
+    observers: Vec<Box<dyn Observer>>,
+    finished: bool,
+    stopped: bool,
+}
+
+impl<'a> RunDriver<'a> {
+    /// Start a fresh driver at step 0. Fails fast if any stage config is
+    /// missing from the manifest or an optimizer-switch transition joins
+    /// incompatible parameter layouts.
+    pub fn new(trainer: Trainer<'a>, plan: RunPlan) -> Result<RunDriver<'a>> {
+        for (i, st) in plan.stages().iter().enumerate() {
+            let entry = trainer.manifest.get(&st.cfg_id)?;
+            if let Transition::SwitchOptimizer = st.transition {
+                let prev = trainer.manifest.get(&plan.stages()[i - 1].cfg_id)?;
+                check_switch_layout(prev, entry)?;
+            }
+        }
+        let entry = trainer.manifest.get(&plan.stages()[0].cfg_id)?;
+        let state = ModelState::init(entry, plan.seed());
+        let data = RunData::new(&trainer, entry, plan.seed());
+        let log = CurveLogger::new(plan.name());
+        let data_seed = plan.seed();
+        Ok(RunDriver {
+            trainer,
+            entry,
+            state,
+            data,
+            data_seed,
+            step: 0,
+            stage_idx: 0,
+            last_train_loss: f32::NAN,
+            ledger: FlopLedger::default(),
+            log,
+            observers: Vec::new(),
+            finished: false,
+            stopped: false,
+            plan,
+        })
+    }
+
+    /// Rebuild a driver from a snapshot, under the same plan (or a plan
+    /// sharing its step/eval stream up to the snapshot point — the `Sweep`
+    /// forks variants this way). The resumed run replays the identical
+    /// engine-call sequence an uninterrupted run would make.
+    pub fn resume(trainer: Trainer<'a>, plan: RunPlan, snap: DriverSnapshot) -> Result<RunDriver<'a>> {
+        if snap.stage_idx >= plan.stages().len() {
+            bail!(
+                "snapshot is in stage {} but plan '{}' has {} stages",
+                snap.stage_idx,
+                plan.name(),
+                plan.stages().len()
+            );
+        }
+        let st = &plan.stages()[snap.stage_idx];
+        if st.cfg_id != snap.cfg_id {
+            bail!(
+                "snapshot is in config '{}' but plan '{}' stage {} is '{}'",
+                snap.cfg_id,
+                plan.name(),
+                snap.stage_idx,
+                st.cfg_id
+            );
+        }
+        if snap.step > plan.total_steps() || snap.step < st.from_step {
+            bail!("snapshot step {} is outside its stage of plan '{}'", snap.step, plan.name());
+        }
+        if let Some(next) = plan.stages().get(snap.stage_idx + 1) {
+            if snap.step > next.from_step {
+                bail!(
+                    "snapshot step {} is past the next boundary at {} in plan '{}'",
+                    snap.step,
+                    next.from_step,
+                    plan.name()
+                );
+            }
+        }
+        let entry = trainer.manifest.get(&snap.cfg_id)?;
+        if snap.state.params.len() != entry.params.len() || snap.state.opt.len() != entry.opt_state.len() {
+            bail!("snapshot tensor layout does not match config '{}'", entry.cfg_id);
+        }
+        for (t, spec) in snap.state.params.iter().zip(&entry.params) {
+            if t.shape != spec.shape {
+                bail!("snapshot param {} has shape {:?}, expected {:?}", spec.name, t.shape, spec.shape);
+            }
+        }
+        let seed = if entry.is_resnet() { plan.seed() } else { snap.data_seed };
+        let mut data = RunData::new(&trainer, entry, seed);
+        match &mut data {
+            RunData::Tokens { train, val } => {
+                train.skip_windows(snap.train_windows);
+                val.skip_windows(snap.val_windows);
+            }
+            RunData::Images(gen) => gen.skip_samples(snap.image_samples),
+        }
+        let mut log = CurveLogger::from_parts(snap.curve, snap.boundaries);
+        log.rename(plan.name());
+        Ok(RunDriver {
+            trainer,
+            entry,
+            state: snap.state,
+            data,
+            data_seed: snap.data_seed,
+            step: snap.step,
+            stage_idx: snap.stage_idx,
+            last_train_loss: snap.last_train_loss,
+            ledger: snap.ledger,
+            log,
+            observers: Vec::new(),
+            finished: false,
+            stopped: false,
+            plan,
+        })
+    }
+
+    /// Attach an observer. Events fire in attachment order.
+    pub fn attach(&mut self, obs: Box<dyn Observer>) {
+        self.observers.push(obs);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.finished
+    }
+
+    /// True once an observer requested an early stop.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped
+    }
+
+    pub fn step_index(&self) -> usize {
+        self.step
+    }
+
+    pub fn stage_index(&self) -> usize {
+        self.stage_idx
+    }
+
+    pub fn cfg_id(&self) -> &str {
+        &self.entry.cfg_id
+    }
+
+    pub fn plan(&self) -> &RunPlan {
+        &self.plan
+    }
+
+    /// Curve logged so far (partial until the run finishes).
+    pub fn curve(&self) -> &Curve {
+        self.log.curve()
+    }
+
+    pub fn ledger(&self) -> &FlopLedger {
+        &self.ledger
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// Request an early stop; the driver stops at the next dispatch-unit
+    /// boundary and `finish()` reports `early_stopped`.
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    /// Capture the full machine state (cheap relative to a dispatch: clones
+    /// host tensors only).
+    pub fn snapshot(&self) -> DriverSnapshot {
+        let (train_windows, val_windows, image_samples) = match &self.data {
+            RunData::Tokens { train, val } => (train.windows_drawn(), val.windows_drawn(), 0),
+            RunData::Images(gen) => (0, 0, gen.samples_drawn()),
+        };
+        DriverSnapshot {
+            run_name: self.plan.name().to_string(),
+            cfg_id: self.entry.cfg_id.clone(),
+            step: self.step,
+            stage_idx: self.stage_idx,
+            data_seed: self.data_seed,
+            train_windows,
+            val_windows,
+            image_samples,
+            last_train_loss: self.last_train_loss,
+            ledger: self.ledger.clone(),
+            curve: self.log.curve().clone(),
+            boundaries: self.log.boundaries().to_vec(),
+            state: self.state.clone(),
+        }
+    }
+
+    /// Serialize [`RunDriver::snapshot`] to disk.
+    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+        checkpoint::save_snapshot(path, &self.snapshot(), self.entry)
+    }
+
+    /// Advance by roughly `budget` steps and return the number taken.
+    ///
+    /// The driver only pauses at dispatch-unit boundaries (so every
+    /// pause/resume schedule replays the same engine calls); if `budget` is
+    /// smaller than the next unit, one full unit still runs. Returns 0 when
+    /// the run is already finished or stopped.
+    pub fn advance(&mut self, budget: usize) -> Result<usize> {
+        if budget == 0 {
+            return Ok(0);
+        }
+        let mut taken = 0usize;
+        while !self.finished && !self.stopped {
+            if self.step >= self.plan.total_steps() {
+                self.finish_run(false);
+                break;
+            }
+            if self.next_boundary_at() == Some(self.step) {
+                self.cross_boundary()?;
+            }
+            let unit = self.next_unit_len();
+            if taken > 0 && taken + unit > budget {
+                break;
+            }
+            let signals = self.dispatch_unit(unit)?;
+            taken += unit;
+            self.maybe_cadence_eval()?;
+            // Signals are acted on only after the cadence eval, so a
+            // Checkpoint snapshot taken at an eval step already contains
+            // that eval point and val-stream position (bit-exact resume).
+            self.handle_signals(signals)?;
+            if self.step >= self.plan.total_steps() {
+                self.finish_run(false);
+                break;
+            }
+            if taken >= budget {
+                break;
+            }
+        }
+        Ok(taken)
+    }
+
+    /// Run to natural completion (or until an observer stops the run).
+    pub fn run_to_end(&mut self) -> Result<()> {
+        while !self.finished && !self.stopped {
+            let n = self.advance(self.plan.total_steps())?;
+            if n == 0 && !self.finished {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the driver into a [`RunResult`]. Fires `on_finish` (marked
+    /// early-stopped) if the run did not reach its horizon.
+    pub fn finish(mut self) -> RunResult {
+        if !self.finished {
+            self.finish_run(true);
+        }
+        self.log.into_result(self.ledger)
+    }
+
+    // ------------------------------------------------------------ internals
+
+    fn next_boundary_at(&self) -> Option<usize> {
+        self.plan.stages().get(self.stage_idx + 1).map(|s| s.from_step)
+    }
+
+    /// Length of the next dispatch unit — a pure function of the current
+    /// step (see module docs).
+    fn next_unit_len(&self) -> usize {
+        let total = self.plan.total_steps();
+        let next_boundary = self.next_boundary_at().unwrap_or(total);
+        let next_eval = self.step + self.plan.eval_every() - (self.step % self.plan.eval_every());
+        let until = next_boundary.min(next_eval).min(total);
+        let todo = until - self.step;
+        let k = self.entry.chunk;
+        if todo >= k {
+            k
+        } else {
+            todo
+        }
+    }
+
+    fn cross_boundary(&mut self) -> Result<()> {
+        let next_idx = self.stage_idx + 1;
+        let (next_cfg, transition) = {
+            let st = &self.plan.stages()[next_idx];
+            (st.cfg_id.clone(), st.transition.clone())
+        };
+        let next_entry = self.trainer.manifest.get(&next_cfg)?;
+        let step = self.step;
+        let lr = self.plan.schedule().lr(step, self.plan.total_steps());
+
+        // Pre-boundary eval on the outgoing model (§3.2 spike visibility).
+        let pre = self.eval_loss()?;
+        self.emit_eval(pre, EvalKind::PreBoundary, lr);
+
+        self.state = match transition {
+            Transition::Expand(spec) => expand(self.entry, next_entry, &self.state, &spec)?,
+            Transition::SwitchOptimizer => switch_optimizer(self.entry, next_entry, &self.state)?,
+            Transition::Init => bail!("internal: Init transition past stage 0"),
+        };
+        let from_cfg = self.entry.cfg_id.clone();
+        self.entry = next_entry;
+        self.stage_idx = next_idx;
+        if !self.entry.is_resnet() {
+            // Keep the same token stream; reseed deterministically per stage.
+            self.data_seed = self.plan.seed().wrapping_add(self.stage_idx as u64);
+            self.data = RunData::new(&self.trainer, self.entry, self.data_seed);
+        }
+
+        // Post-boundary eval on the incoming model (same params, new depth).
+        let post = self.eval_loss()?;
+        self.emit_eval(post, EvalKind::PostBoundary, lr);
+
+        let ev = BoundaryEvent {
+            run: self.plan.name(),
+            step,
+            from_cfg: &from_cfg,
+            to_cfg: &self.entry.cfg_id,
+            pre_val_loss: pre,
+            post_val_loss: post,
+        };
+        self.log.on_boundary(&ev);
+        for obs in self.observers.iter_mut() {
+            obs.on_boundary(&ev);
+        }
+        Ok(())
+    }
+
+    fn dispatch_unit(&mut self, unit: usize) -> Result<Vec<Signal>> {
+        let total = self.plan.total_steps();
+        let k = self.entry.chunk;
+        if unit == k {
+            let lrs: Vec<f32> = (0..k).map(|i| self.plan.schedule().lr(self.step + i, total)).collect();
+            let losses = self.chunk_steps(&lrs)?;
+            self.last_train_loss = *losses.last().unwrap();
+            self.ledger.record(self.entry, k);
+            self.step += k;
+        } else {
+            for i in 0..unit {
+                let lr = self.plan.schedule().lr(self.step + i, total);
+                self.last_train_loss = self.single_step(lr)?;
+                self.ledger.record(self.entry, 1);
+            }
+            self.step += unit;
+        }
+        let ev = ChunkEvent {
+            run: self.plan.name(),
+            step: self.step,
+            steps: unit,
+            train_loss: self.last_train_loss,
+            flops: self.ledger.total,
+            tokens: self.ledger.tokens,
+        };
+        let mut signals = Vec::new();
+        for obs in self.observers.iter_mut() {
+            match obs.on_chunk(&ev) {
+                Signal::Continue => {}
+                s => signals.push(s),
+            }
+        }
+        Ok(signals)
+    }
+
+    fn handle_signals(&mut self, signals: Vec<Signal>) -> Result<()> {
+        for s in signals {
+            match s {
+                Signal::Checkpoint(path) => self.save_snapshot(&path)?,
+                Signal::Stop => self.stopped = true,
+                Signal::Continue => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn maybe_cadence_eval(&mut self) -> Result<()> {
+        let total = self.plan.total_steps();
+        let due = self.step % self.plan.eval_every() == 0 || self.step == total;
+        if !due {
+            return Ok(());
+        }
+        // When a stage boundary lands exactly on the eval cadence, the
+        // boundary's own pre/post evals cover this step — pushing the
+        // cadence point too would duplicate it (and burn eval batches).
+        if self.next_boundary_at() == Some(self.step) {
+            return Ok(());
+        }
+        let val = self.eval_loss()?;
+        let lr = self.plan.schedule().lr(self.step.min(total - 1), total);
+        self.emit_eval(val, EvalKind::Cadence, lr);
+        Ok(())
+    }
+
+    fn emit_eval(&mut self, val_loss: f32, kind: EvalKind, lr: f32) {
+        let point = CurvePoint {
+            step: self.step,
+            tokens: self.ledger.tokens,
+            flops: self.ledger.total,
+            train_loss: self.last_train_loss,
+            val_loss,
+            lr,
+        };
+        let ev = EvalEvent {
+            run: self.plan.name(),
+            cfg_id: &self.entry.cfg_id,
+            stage_idx: self.stage_idx,
+            kind,
+            point,
+        };
+        self.log.on_eval(&ev);
+        for obs in self.observers.iter_mut() {
+            obs.on_eval(&ev);
+        }
+    }
+
+    fn finish_run(&mut self, early: bool) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        let summary = RunSummary {
+            run: self.plan.name(),
+            steps: self.step,
+            total_steps: self.plan.total_steps(),
+            final_val_loss: self.log.curve().final_val_loss().unwrap_or(f32::NAN),
+            flops: self.ledger.total,
+            tokens: self.ledger.tokens,
+            early_stopped: early,
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_finish(&summary);
+        }
+    }
+
+    // -------------------------------------------------------- engine bridge
+
+    fn chunk_steps(&mut self, lrs: &[f32]) -> Result<Vec<f32>> {
+        let engine: &Engine = self.trainer.engine;
+        let root = &self.trainer.manifest.root;
+        let entry = self.entry;
+        let k = lrs.len();
+        let b = entry.model.batch;
+        match &mut self.data {
+            RunData::Tokens { train, .. } => {
+                let s = entry.model.seq_len;
+                let mut xs = Vec::with_capacity(k * b * s);
+                let mut ys = Vec::with_capacity(k * b * s);
+                for _ in 0..k {
+                    let (x, y) = train.next_batch(b);
+                    xs.extend(x);
+                    ys.extend(y);
+                }
+                let xs = IntTensor::from_vec(&[k, b, s], xs)?;
+                let ys = IntTensor::from_vec(&[k, b, s], ys)?;
+                engine.train_chunk(entry, root, &mut self.state, &xs, &ys, lrs, None)
+            }
+            RunData::Images(gen) => {
+                let px = entry.model.image_size;
+                let mut imgs = Vec::with_capacity(k * b * px * px * 3);
+                let mut labels = Vec::with_capacity(k * b);
+                for _ in 0..k {
+                    let (im, lb) = gen.next_batch(b);
+                    imgs.extend(im);
+                    labels.extend(lb);
+                }
+                let imgs = Tensor::from_vec(&[k, b, px, px, 3], imgs)?;
+                let ys = IntTensor::from_vec(&[k, b], labels)?;
+                // xs unused for images; pass ys twice via images-arg plumbing.
+                let dummy = IntTensor::from_vec(&[0], vec![])?;
+                engine.train_chunk(entry, root, &mut self.state, &dummy, &ys, lrs, Some(&imgs))
+            }
+        }
+    }
+
+    fn single_step(&mut self, lr: f32) -> Result<f32> {
+        let engine: &Engine = self.trainer.engine;
+        let root = &self.trainer.manifest.root;
+        let entry = self.entry;
+        let b = entry.model.batch;
+        match &mut self.data {
+            RunData::Tokens { train, .. } => {
+                let s = entry.model.seq_len;
+                let (x, y) = train.next_batch(b);
+                let x = IntTensor::from_vec(&[b, s], x)?;
+                let y = IntTensor::from_vec(&[b, s], y)?;
+                engine.train_step(entry, root, &mut self.state, &x, &y, lr, None)
+            }
+            RunData::Images(gen) => {
+                let px = entry.model.image_size;
+                let (im, lb) = gen.next_batch(b);
+                let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
+                let y = IntTensor::from_vec(&[b], lb)?;
+                let dummy = IntTensor::from_vec(&[0], vec![])?;
+                engine.train_step(entry, root, &mut self.state, &dummy, &y, lr, Some(&imgs))
+            }
+        }
+    }
+
+    fn eval_loss(&mut self) -> Result<f32> {
+        let engine: &Engine = self.trainer.engine;
+        let root = &self.trainer.manifest.root;
+        let entry = self.entry;
+        let batches = self.plan.eval_batches();
+        let b = entry.model.batch;
+        let mut total = 0.0f64;
+        for _ in 0..batches {
+            let loss = match &mut self.data {
+                RunData::Tokens { val, .. } => {
+                    let s = entry.model.seq_len;
+                    let (x, y) = val.next_batch(b);
+                    let x = IntTensor::from_vec(&[b, s], x)?;
+                    let y = IntTensor::from_vec(&[b, s], y)?;
+                    engine.eval_step(entry, root, &self.state, &x, &y, None)?
+                }
+                RunData::Images(gen) => {
+                    let px = entry.model.image_size;
+                    let (im, lb) = gen.next_batch(b);
+                    let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
+                    let y = IntTensor::from_vec(&[b], lb)?;
+                    let dummy = IntTensor::from_vec(&[0], vec![])?;
+                    engine.eval_step(entry, root, &self.state, &dummy, &y, Some(&imgs))?
+                }
+            };
+            total += loss as f64;
+        }
+        Ok((total / batches as f64) as f32)
+    }
+}
+
+/// Layout compatibility check for a constant-depth optimizer switch.
+pub(crate) fn check_switch_layout(src: &ConfigEntry, dst: &ConfigEntry) -> Result<()> {
+    if src.params.len() != dst.params.len() {
+        bail!(
+            "optimizer switch requires identical parameter layout ({} vs {} params)",
+            src.params.len(),
+            dst.params.len()
+        );
+    }
+    for (a, b) in src.params.iter().zip(&dst.params) {
+        if a.name != b.name || a.shape != b.shape {
+            bail!("param mismatch at optimizer switch: {} vs {}", a.name, b.name);
+        }
+    }
+    Ok(())
+}
+
+/// Optimizer switch at constant depth (Fig 19): carry parameters bit-exact,
+/// reset the (differently-shaped) optimizer state.
+fn switch_optimizer(src: &ConfigEntry, dst: &ConfigEntry, state: &ModelState) -> Result<ModelState> {
+    check_switch_layout(src, dst)?;
+    Ok(ModelState {
+        params: state.params.clone(),
+        opt: dst.opt_state.iter().map(|o| Tensor::zeros(&o.shape)).collect(),
+    })
+}

@@ -2,24 +2,51 @@
 //!
 //! A run is a sequence of *stages* (model configs) over a shared horizon;
 //! stage boundaries are depth expansions executed by the [`crate::expansion`]
-//! engine. The coordinator owns the event loop: batch assembly, fused-chunk
-//! dispatch to the PJRT engine, LR schedule evaluation, eval cadence, the
-//! FLOP ledger, and curve logging. It also implements the paper's §7 recipe
-//! step 4: estimating the mixing time from two early-stopped probe runs and
-//! converting it into the expansion timing τ.
+//! engine, or constant-depth optimizer switches (Fig 19). The orchestration
+//! API has three pieces (DESIGN.md §4):
+//!
+//! - [`RunBuilder`] → [`RunPlan`]: fluent, build-time-validated description
+//!   of an arbitrary N-stage run;
+//! - [`RunDriver`]: step-granular, resumable state machine executing one
+//!   plan — pause/checkpoint/resume bit-exactly, early-stop probes, and
+//!   interleave many runs via [`Sweep`], which trains shared source-model
+//!   segments once;
+//! - [`Observer`]: event hooks (`on_eval`, `on_boundary`, `on_chunk`,
+//!   `on_finish`) with built-ins for curve logging, spike detection,
+//!   periodic checkpointing, and progress printing.
+//!
+//! [`recipe`] implements the paper's §7 step 4 — estimating the mixing time
+//! from two *early-stopped* probe drivers and converting it into the
+//! expansion timing τ.
+//!
+//! The pre-v2 monolithic entry points ([`RunSpec`] and [`Trainer::run`])
+//! remain as thin deprecated shims over the builder/driver.
 
+pub mod builder;
+pub mod driver;
+pub mod observer;
 pub mod recipe;
+pub mod sweep;
+
+pub use builder::{PlanStage, RunBuilder, RunPlan, Transition};
+pub use driver::RunDriver;
+pub use observer::{
+    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, LossSpikeDetector, Observer,
+    PeriodicCheckpointer, ProgressPrinter, RunSummary, Signal,
+};
+pub use sweep::{Sweep, SweepOutcome};
 
 use anyhow::{bail, Result};
 
-use crate::data::{Batcher, Corpus, ImageGen};
-use crate::expansion::{expand, ExpandSpec};
+use crate::data::Corpus;
+use crate::expansion::ExpandSpec;
 use crate::flops::{flops_per_step, FlopLedger};
-use crate::metrics::{Curve, CurvePoint};
-use crate::runtime::{ConfigEntry, Engine, IntTensor, Manifest, ModelState, Tensor};
+use crate::metrics::Curve;
+use crate::runtime::{Engine, Manifest};
 use crate::schedule::Schedule;
 
-/// One stage of a (possibly multi-stage) progressive run.
+/// One stage of a (possibly multi-stage) progressive run (pre-v2 shape;
+/// new code should use [`RunBuilder`]).
 #[derive(Debug, Clone)]
 pub struct Stage {
     pub cfg_id: String,
@@ -30,7 +57,7 @@ pub struct Stage {
     pub expand: ExpandSpec,
 }
 
-/// Full run specification.
+/// Pre-v2 run specification, kept as a shim over [`RunBuilder`].
 #[derive(Debug, Clone)]
 pub struct RunSpec {
     pub name: String,
@@ -44,6 +71,7 @@ pub struct RunSpec {
 
 impl RunSpec {
     /// Single fixed-size run.
+    #[deprecated(note = "use RunBuilder::fixed(...).build()")]
     pub fn fixed(name: impl Into<String>, cfg_id: &str, total_steps: usize, schedule: Schedule) -> RunSpec {
         RunSpec {
             name: name.into(),
@@ -57,6 +85,7 @@ impl RunSpec {
     }
 
     /// Single-stage progressive run: `small` until τ, then `large`.
+    #[deprecated(note = "use RunBuilder::progressive(...).build()")]
     pub fn progressive(
         name: impl Into<String>,
         small: &str,
@@ -79,6 +108,33 @@ impl RunSpec {
             seed: 17,
         }
     }
+
+    /// Convert to a validated [`RunPlan`], reproducing the pre-v2 implicit
+    /// transition inference: a boundary between same-depth configs with
+    /// different optimizer kinds becomes an explicit optimizer switch
+    /// (new code should say [`RunBuilder::then_switch_optimizer_at`]).
+    pub fn to_plan(&self, manifest: &Manifest) -> Result<RunPlan> {
+        if self.stages.is_empty() || self.stages[0].from_step != 0 {
+            bail!("run needs a stage starting at step 0");
+        }
+        let mut b = RunBuilder::new(self.name.clone())
+            .start(self.stages[0].cfg_id.clone())
+            .total_steps(self.total_steps)
+            .schedule(self.schedule)
+            .eval_every(self.eval_every)
+            .eval_batches(self.eval_batches)
+            .seed(self.seed);
+        for w in self.stages.windows(2) {
+            let prev = manifest.get(&w[0].cfg_id)?;
+            let next = manifest.get(&w[1].cfg_id)?;
+            b = if next.opt_kind != prev.opt_kind && next.model.n_layer == prev.model.n_layer {
+                b.then_switch_optimizer_at(w[1].from_step, w[1].cfg_id.clone())
+            } else {
+                b.then_expand_at(w[1].from_step, w[1].cfg_id.clone(), w[1].expand)
+            };
+        }
+        b.build()
+    }
 }
 
 /// Result of a run: curve (one point per eval), ledger, and stage boundaries
@@ -91,12 +147,9 @@ pub struct RunResult {
     pub final_val_loss: f32,
 }
 
-enum DataSource<'a> {
-    Tokens { train: Batcher<'a>, val: Batcher<'a> },
-    Images(ImageGen),
-}
-
-/// The coordinator proper.
+/// Shared execution context: the engine, the artifact manifest, and the
+/// corpus. Cheap to copy (three references); every [`RunDriver`] holds one.
+#[derive(Clone, Copy)]
 pub struct Trainer<'a> {
     pub engine: &'a Engine,
     pub manifest: &'a Manifest,
@@ -108,244 +161,18 @@ impl<'a> Trainer<'a> {
         Trainer { engine, manifest, corpus }
     }
 
-    fn data_for(&self, entry: &ConfigEntry, seed: u64) -> DataSource<'a> {
-        if entry.is_resnet() {
-            DataSource::Images(ImageGen::new(entry.model.n_classes, entry.model.image_size, 0.5, seed))
-        } else {
-            DataSource::Tokens {
-                train: Batcher::new(&self.corpus.train, entry.model.seq_len, seed),
-                val: Batcher::new(&self.corpus.val, entry.model.seq_len, seed ^ 0x0e7a1),
-            }
-        }
-    }
-
-    /// Execute a run spec. Stage boundaries trigger expansion; eval points
-    /// land every `eval_every` steps plus immediately before and after each
-    /// boundary (to capture the loss spike the paper discusses in §3.2).
+    /// Pre-v2 monolithic entry point, now a shim: build the plan, drive it
+    /// to completion, collect the result.
+    #[deprecated(note = "use RunDriver::new(trainer, plan) + run_to_end() + finish()")]
     pub fn run(&self, spec: &RunSpec) -> Result<RunResult> {
-        if spec.stages.is_empty() || spec.stages[0].from_step != 0 {
-            bail!("run needs a stage starting at step 0");
-        }
-        for w in spec.stages.windows(2) {
-            if w[1].from_step <= w[0].from_step || w[1].from_step >= spec.total_steps {
-                bail!("stage boundaries must be increasing and inside the horizon");
-            }
-        }
-
-        
-        let mut entry = self.manifest.get(&spec.stages[0].cfg_id)?;
-        let mut state = ModelState::init(entry, spec.seed);
-        let mut data = self.data_for(entry, spec.seed);
-        let mut curve = Curve::new(spec.name.clone());
-        let mut ledger = FlopLedger::default();
-        let mut boundaries = Vec::new();
-        let mut stage_idx = 0usize;
-        let mut last_train_loss = f32::NAN;
-
-        let mut step = 0usize;
-        while step < spec.total_steps {
-            // Stage transition?
-            if stage_idx + 1 < spec.stages.len() && step == spec.stages[stage_idx + 1].from_step {
-                let next = &spec.stages[stage_idx + 1];
-                let next_entry = self.manifest.get(&next.cfg_id)?;
-                // Pre-expansion eval on the small model (spike visibility).
-                let pre = self.eval(entry, &state, &mut data, spec.eval_batches)?;
-                curve.push(CurvePoint {
-                    step,
-                    tokens: ledger.tokens,
-                    flops: ledger.total,
-                    train_loss: last_train_loss,
-                    val_loss: pre,
-                    lr: spec.schedule.lr(step, spec.total_steps),
-                });
-                state = if next_entry.opt_kind != entry.opt_kind && next_entry.model.n_layer == entry.model.n_layer {
-                    // Optimizer switch (Fig 19): same depth, new OS layout.
-                    switch_optimizer(entry, next_entry, &state)?
-                } else {
-                    expand(entry, next_entry, &state, &next.expand)?
-                };
-                entry = next_entry;
-                if !entry.is_resnet() {
-                    // Keep the same token stream; reseed deterministically.
-                    data = self.data_for(entry, spec.seed.wrapping_add(stage_idx as u64 + 1));
-                }
-                boundaries.push((step, entry.cfg_id.clone()));
-                stage_idx += 1;
-                // Post-expansion eval (same params, new depth).
-                let post = self.eval(entry, &state, &mut data, spec.eval_batches)?;
-                curve.push(CurvePoint {
-                    step,
-                    tokens: ledger.tokens,
-                    flops: ledger.total,
-                    train_loss: last_train_loss,
-                    val_loss: post,
-                    lr: spec.schedule.lr(step, spec.total_steps),
-                });
-            }
-
-            // How many steps until the next boundary or horizon end?
-            let next_boundary = spec
-                .stages
-                .get(stage_idx + 1)
-                .map(|s| s.from_step)
-                .unwrap_or(spec.total_steps);
-            let next_eval = step + spec.eval_every - (step % spec.eval_every);
-            let until = next_boundary.min(next_eval).min(spec.total_steps);
-            let todo = until - step;
-
-            // Fused-chunk dispatch when a full chunk fits, else single steps.
-            let k = entry.chunk;
-            if todo >= k {
-                let lrs: Vec<f32> = (0..k).map(|i| spec.schedule.lr(step + i, spec.total_steps)).collect();
-                let losses = self.chunk_steps(entry, &mut state, &mut data, &lrs)?;
-                last_train_loss = *losses.last().unwrap();
-                ledger.record(entry, k);
-                step += k;
-            } else {
-                for i in 0..todo {
-                    let lr = spec.schedule.lr(step + i, spec.total_steps);
-                    last_train_loss = self.single_step(entry, &mut state, &mut data, lr)?;
-                    ledger.record(entry, 1);
-                }
-                step += todo;
-            }
-
-            if step % spec.eval_every == 0 || step == spec.total_steps {
-                let val = self.eval(entry, &state, &mut data, spec.eval_batches)?;
-                curve.push(CurvePoint {
-                    step,
-                    tokens: ledger.tokens,
-                    flops: ledger.total,
-                    train_loss: last_train_loss,
-                    val_loss: val,
-                    lr: spec.schedule.lr(step.min(spec.total_steps - 1), spec.total_steps),
-                });
-            }
-        }
-
-        let final_val_loss = curve.final_val_loss().unwrap_or(f32::NAN);
-        Ok(RunResult { curve, ledger, boundaries, final_val_loss })
-    }
-
-    fn chunk_steps(
-        &self,
-        entry: &ConfigEntry,
-        state: &mut ModelState,
-        data: &mut DataSource,
-        lrs: &[f32],
-    ) -> Result<Vec<f32>> {
-        let k = lrs.len();
-        let b = entry.model.batch;
-        match data {
-            DataSource::Tokens { train, .. } => {
-                let s = entry.model.seq_len;
-                let mut xs = Vec::with_capacity(k * b * s);
-                let mut ys = Vec::with_capacity(k * b * s);
-                for _ in 0..k {
-                    let (x, y) = train.next_batch(b);
-                    xs.extend(x);
-                    ys.extend(y);
-                }
-                let xs = IntTensor::from_vec(&[k, b, s], xs)?;
-                let ys = IntTensor::from_vec(&[k, b, s], ys)?;
-                self.engine.train_chunk(entry, &self.manifest.root, state, &xs, &ys, lrs, None)
-            }
-            DataSource::Images(gen) => {
-                let px = entry.model.image_size;
-                let mut imgs = Vec::with_capacity(k * b * px * px * 3);
-                let mut labels = Vec::with_capacity(k * b);
-                for _ in 0..k {
-                    let (im, lb) = gen.next_batch(b);
-                    imgs.extend(im);
-                    labels.extend(lb);
-                }
-                let imgs = Tensor::from_vec(&[k, b, px, px, 3], imgs)?;
-                let ys = IntTensor::from_vec(&[k, b], labels)?;
-                // xs unused for images; pass ys twice via images-arg plumbing.
-                let dummy = IntTensor::from_vec(&[0], vec![])?;
-                self.engine.train_chunk(entry, &self.manifest.root, state, &dummy, &ys, lrs, Some(&imgs))
-            }
-        }
-    }
-
-    fn single_step(
-        &self,
-        entry: &ConfigEntry,
-        state: &mut ModelState,
-        data: &mut DataSource,
-        lr: f32,
-    ) -> Result<f32> {
-        let b = entry.model.batch;
-        match data {
-            DataSource::Tokens { train, .. } => {
-                let s = entry.model.seq_len;
-                let (x, y) = train.next_batch(b);
-                let x = IntTensor::from_vec(&[b, s], x)?;
-                let y = IntTensor::from_vec(&[b, s], y)?;
-                self.engine.train_step(entry, &self.manifest.root, state, &x, &y, lr, None)
-            }
-            DataSource::Images(gen) => {
-                let px = entry.model.image_size;
-                let (im, lb) = gen.next_batch(b);
-                let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
-                let y = IntTensor::from_vec(&[b], lb)?;
-                let dummy = IntTensor::from_vec(&[0], vec![])?;
-                self.engine.train_step(entry, &self.manifest.root, state, &dummy, &y, lr, Some(&imgs))
-            }
-        }
-    }
-
-    fn eval(
-        &self,
-        entry: &ConfigEntry,
-        state: &ModelState,
-        data: &mut DataSource,
-        batches: usize,
-    ) -> Result<f32> {
-        let b = entry.model.batch;
-        let mut total = 0.0f64;
-        for _ in 0..batches {
-            let loss = match data {
-                DataSource::Tokens { val, .. } => {
-                    let s = entry.model.seq_len;
-                    let (x, y) = val.next_batch(b);
-                    let x = IntTensor::from_vec(&[b, s], x)?;
-                    let y = IntTensor::from_vec(&[b, s], y)?;
-                    self.engine.eval_step(entry, &self.manifest.root, state, &x, &y, None)?
-                }
-                DataSource::Images(gen) => {
-                    let px = entry.model.image_size;
-                    let (im, lb) = gen.next_batch(b);
-                    let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
-                    let y = IntTensor::from_vec(&[b], lb)?;
-                    let dummy = IntTensor::from_vec(&[0], vec![])?;
-                    self.engine.eval_step(entry, &self.manifest.root, state, &dummy, &y, Some(&imgs))?
-                }
-            };
-            total += loss as f64;
-        }
-        Ok((total / batches as f64) as f32)
+        let plan = spec.to_plan(self.manifest)?;
+        let mut driver = RunDriver::new(*self, plan)?;
+        driver.run_to_end()?;
+        Ok(driver.finish())
     }
 
     /// FLOPs a fixed-size run of `cfg_id` would cost over `steps`.
     pub fn fixed_flops(&self, cfg_id: &str, steps: usize) -> Result<f64> {
         Ok(flops_per_step(self.manifest.get(cfg_id)?) * steps as f64)
     }
-}
-
-/// Optimizer switch at constant depth (Fig 19): carry parameters, reset the
-/// (differently-shaped) optimizer state.
-fn switch_optimizer(src: &ConfigEntry, dst: &ConfigEntry, state: &ModelState) -> Result<ModelState> {
-    if src.params.len() != dst.params.len() {
-        bail!("optimizer switch requires identical parameter layout");
-    }
-    for (a, b) in src.params.iter().zip(&dst.params) {
-        if a.name != b.name || a.shape != b.shape {
-            bail!("param mismatch at optimizer switch: {} vs {}", a.name, b.name);
-        }
-    }
-    Ok(ModelState {
-        params: state.params.clone(),
-        opt: dst.opt_state.iter().map(|o| Tensor::zeros(&o.shape)).collect(),
-    })
 }

@@ -1,0 +1,356 @@
+//! Run observers: the event surface of the [`crate::coordinator::RunDriver`].
+//!
+//! The driver owns only the training state machine; everything downstream of
+//! an event — curve assembly, spike detection, checkpoint cadence, progress
+//! printing — lives in [`Observer`] implementations. Observers can steer the
+//! driver through the [`Signal`] returned from `on_chunk` (request a snapshot
+//! to disk, or an early stop).
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::flops::FlopLedger;
+use crate::metrics::{Curve, CurvePoint};
+
+use super::RunResult;
+
+/// Why an eval point was taken.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// Regular `eval_every` cadence (or the final step of the horizon).
+    Cadence,
+    /// Immediately before a stage transition, on the outgoing model.
+    PreBoundary,
+    /// Immediately after a stage transition, on the incoming model.
+    PostBoundary,
+}
+
+/// One evaluation of the validation loss.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalEvent<'a> {
+    pub run: &'a str,
+    pub cfg_id: &'a str,
+    pub stage_idx: usize,
+    pub kind: EvalKind,
+    pub point: CurvePoint,
+}
+
+/// A stage transition that was just executed (fired after the post-boundary
+/// eval, so both sides of the spike are known).
+#[derive(Debug, Clone, Copy)]
+pub struct BoundaryEvent<'a> {
+    pub run: &'a str,
+    pub step: usize,
+    pub from_cfg: &'a str,
+    pub to_cfg: &'a str,
+    pub pre_val_loss: f32,
+    pub post_val_loss: f32,
+}
+
+/// A dispatched block of training steps (one fused chunk or a run of single
+/// steps).
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkEvent<'a> {
+    pub run: &'a str,
+    /// Step index *after* the block.
+    pub step: usize,
+    /// Micro-steps in the block.
+    pub steps: usize,
+    pub train_loss: f32,
+    pub flops: f64,
+    pub tokens: u64,
+}
+
+/// Final state of a run (also fired on early stop, with `early_stopped`).
+#[derive(Debug, Clone, Copy)]
+pub struct RunSummary<'a> {
+    pub run: &'a str,
+    pub steps: usize,
+    pub total_steps: usize,
+    pub final_val_loss: f32,
+    pub flops: f64,
+    pub tokens: u64,
+    pub early_stopped: bool,
+}
+
+/// Steering returned from [`Observer::on_chunk`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Signal {
+    Continue,
+    /// Ask the driver to write a [`crate::checkpoint::DriverSnapshot`] here.
+    Checkpoint(PathBuf),
+    /// Ask the driver to stop early (the run can still be `finish()`ed).
+    Stop,
+}
+
+/// Receiver for run events. All methods default to no-ops so implementations
+/// override only what they need.
+pub trait Observer {
+    fn on_eval(&mut self, _ev: &EvalEvent<'_>) {}
+    fn on_boundary(&mut self, _ev: &BoundaryEvent<'_>) {}
+    fn on_chunk(&mut self, _ev: &ChunkEvent<'_>) -> Signal {
+        Signal::Continue
+    }
+    fn on_finish(&mut self, _summary: &RunSummary<'_>) {}
+}
+
+/// Shared-handle attachment: keep an `Rc<RefCell<O>>` clone on the caller's
+/// side and hand the other clone to the driver, then inspect the observer's
+/// state after the run without downcasting.
+impl<O: Observer> Observer for Rc<RefCell<O>> {
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) {
+        self.borrow_mut().on_eval(ev);
+    }
+
+    fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
+        self.borrow_mut().on_boundary(ev);
+    }
+
+    fn on_chunk(&mut self, ev: &ChunkEvent<'_>) -> Signal {
+        self.borrow_mut().on_chunk(ev)
+    }
+
+    fn on_finish(&mut self, summary: &RunSummary<'_>) {
+        self.borrow_mut().on_finish(summary);
+    }
+}
+
+/// Assembles the [`RunResult`] from eval/boundary events. The driver always
+/// owns one internally; it is public so external tools can reuse it.
+#[derive(Debug, Default)]
+pub struct CurveLogger {
+    curve: Curve,
+    boundaries: Vec<(usize, String)>,
+}
+
+impl CurveLogger {
+    pub fn new(run_name: impl Into<String>) -> CurveLogger {
+        CurveLogger { curve: Curve::new(run_name), boundaries: Vec::new() }
+    }
+
+    /// Rebuild from previously logged state (snapshot resume).
+    pub fn from_parts(curve: Curve, boundaries: Vec<(usize, String)>) -> CurveLogger {
+        CurveLogger { curve, boundaries }
+    }
+
+    pub fn curve(&self) -> &Curve {
+        &self.curve
+    }
+
+    pub fn boundaries(&self) -> &[(usize, String)] {
+        &self.boundaries
+    }
+
+    pub fn rename(&mut self, run_name: impl Into<String>) {
+        self.curve.name = run_name.into();
+    }
+
+    pub fn into_result(self, ledger: FlopLedger) -> RunResult {
+        let final_val_loss = self.curve.final_val_loss().unwrap_or(f32::NAN);
+        RunResult { curve: self.curve, ledger, boundaries: self.boundaries, final_val_loss }
+    }
+}
+
+impl Observer for CurveLogger {
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) {
+        self.curve.push(ev.point);
+    }
+
+    fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
+        self.boundaries.push((ev.step, ev.to_cfg.to_string()));
+    }
+}
+
+/// Flags val-loss jumps across stage boundaries above `threshold` (the §3.2
+/// expansion spike, quantified per boundary).
+#[derive(Debug)]
+pub struct LossSpikeDetector {
+    pub threshold: f32,
+    /// (step, incoming cfg, post − pre val loss) for every boundary whose
+    /// jump exceeded the threshold.
+    pub spikes: Vec<(usize, String, f32)>,
+    /// Jump at every boundary, spike or not.
+    pub jumps: Vec<(usize, f32)>,
+}
+
+impl LossSpikeDetector {
+    pub fn new(threshold: f32) -> LossSpikeDetector {
+        LossSpikeDetector { threshold, spikes: Vec::new(), jumps: Vec::new() }
+    }
+
+    pub fn max_jump(&self) -> Option<f32> {
+        self.jumps.iter().map(|&(_, j)| j).fold(None, |m, j| Some(m.map_or(j, |x: f32| x.max(j))))
+    }
+}
+
+impl Observer for LossSpikeDetector {
+    fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
+        let jump = ev.post_val_loss - ev.pre_val_loss;
+        self.jumps.push((ev.step, jump));
+        if jump > self.threshold {
+            self.spikes.push((ev.step, ev.to_cfg.to_string(), jump));
+        }
+    }
+}
+
+/// Writes a driver snapshot every `every` steps (rounded to dispatch
+/// boundaries) under `dir/<run>-step<N>.snap`.
+#[derive(Debug)]
+pub struct PeriodicCheckpointer {
+    every: usize,
+    dir: PathBuf,
+    last_saved_bucket: usize,
+}
+
+impl PeriodicCheckpointer {
+    pub fn new(every: usize, dir: impl Into<PathBuf>) -> PeriodicCheckpointer {
+        PeriodicCheckpointer::starting_at(every, dir, 0)
+    }
+
+    /// For resumed runs: treat `start_step` as already checkpointed, so the
+    /// first chunk after a resume does not write a redundant snapshot.
+    pub fn starting_at(every: usize, dir: impl Into<PathBuf>, start_step: usize) -> PeriodicCheckpointer {
+        let every = every.max(1);
+        PeriodicCheckpointer { every, dir: dir.into(), last_saved_bucket: start_step / every }
+    }
+}
+
+impl Observer for PeriodicCheckpointer {
+    fn on_chunk(&mut self, ev: &ChunkEvent<'_>) -> Signal {
+        let bucket = ev.step / self.every;
+        if bucket > self.last_saved_bucket {
+            self.last_saved_bucket = bucket;
+            return Signal::Checkpoint(self.dir.join(format!("{}-step{}.snap", ev.run, ev.step)));
+        }
+        Signal::Continue
+    }
+}
+
+/// Prints one line per eval (and per boundary / finish) to stderr.
+#[derive(Debug, Default)]
+pub struct ProgressPrinter;
+
+impl Observer for ProgressPrinter {
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) {
+        eprintln!(
+            "  [{}] step {:>6} ({}) val {:.4} train {:.4} lr {:.2e}",
+            ev.run,
+            ev.point.step,
+            ev.cfg_id,
+            ev.point.val_loss,
+            ev.point.train_loss,
+            ev.point.lr
+        );
+    }
+
+    fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
+        eprintln!(
+            "  [{}] step {:>6} boundary {} -> {} (val {:.4} -> {:.4})",
+            ev.run, ev.step, ev.from_cfg, ev.to_cfg, ev.pre_val_loss, ev.post_val_loss
+        );
+    }
+
+    fn on_finish(&mut self, s: &RunSummary<'_>) {
+        eprintln!(
+            "  [{}] done at step {}/{}{}: val {:.4}, {:.2e} FLOPs, {} tokens",
+            s.run,
+            s.steps,
+            s.total_steps,
+            if s.early_stopped { " (early stop)" } else { "" },
+            s.final_val_loss,
+            s.flops,
+            s.tokens
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(step: usize, val: f32) -> CurvePoint {
+        CurvePoint { step, tokens: 0, flops: 0.0, train_loss: val, val_loss: val, lr: 0.01 }
+    }
+
+    #[test]
+    fn curve_logger_assembles_result() {
+        let mut log = CurveLogger::new("r");
+        log.on_eval(&EvalEvent {
+            run: "r",
+            cfg_id: "a",
+            stage_idx: 0,
+            kind: EvalKind::Cadence,
+            point: point(10, 3.0),
+        });
+        log.on_boundary(&BoundaryEvent {
+            run: "r",
+            step: 10,
+            from_cfg: "a",
+            to_cfg: "b",
+            pre_val_loss: 3.0,
+            post_val_loss: 3.5,
+        });
+        log.on_eval(&EvalEvent {
+            run: "r",
+            cfg_id: "b",
+            stage_idx: 1,
+            kind: EvalKind::Cadence,
+            point: point(20, 2.0),
+        });
+        let res = log.into_result(FlopLedger::default());
+        assert_eq!(res.curve.points.len(), 2);
+        assert_eq!(res.boundaries, vec![(10, "b".to_string())]);
+        assert!((res.final_val_loss - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spike_detector_thresholds() {
+        let mut det = LossSpikeDetector::new(0.1);
+        let mk = |pre: f32, post: f32| BoundaryEvent {
+            run: "r",
+            step: 5,
+            from_cfg: "a",
+            to_cfg: "b",
+            pre_val_loss: pre,
+            post_val_loss: post,
+        };
+        det.on_boundary(&mk(3.0, 3.05)); // below threshold
+        det.on_boundary(&mk(3.0, 3.5)); // spike
+        assert_eq!(det.jumps.len(), 2);
+        assert_eq!(det.spikes.len(), 1);
+        assert!((det.max_jump().unwrap() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpointer_fires_once_per_bucket() {
+        let mut ck = PeriodicCheckpointer::new(50, "/tmp/ck");
+        let ev = |step: usize| ChunkEvent {
+            run: "r",
+            step,
+            steps: 8,
+            train_loss: 1.0,
+            flops: 0.0,
+            tokens: 0,
+        };
+        assert_eq!(ck.on_chunk(&ev(8)), Signal::Continue);
+        assert!(matches!(ck.on_chunk(&ev(56)), Signal::Checkpoint(_)));
+        assert_eq!(ck.on_chunk(&ev(64)), Signal::Continue);
+        assert!(matches!(ck.on_chunk(&ev(104)), Signal::Checkpoint(_)));
+    }
+
+    #[test]
+    fn rc_refcell_observer_shares_state() {
+        let det = Rc::new(RefCell::new(LossSpikeDetector::new(0.0)));
+        let mut handle: Box<dyn Observer> = Box::new(det.clone());
+        handle.on_boundary(&BoundaryEvent {
+            run: "r",
+            step: 1,
+            from_cfg: "a",
+            to_cfg: "b",
+            pre_val_loss: 1.0,
+            post_val_loss: 2.0,
+        });
+        assert_eq!(det.borrow().jumps.len(), 1);
+    }
+}

@@ -7,6 +7,12 @@
 //!    the mixing point is the mixing time t_mix.
 //! 4. Takeaway 6: under WSD the mixing time transfers across τ within the
 //!    stable phase, so for the real run set τ = stable_end − t_mix.
+//!
+//! Step 3 is literal here: the two probes are interleaved [`RunDriver`]s
+//! advanced one eval period at a time, and the moment the partial curves
+//! mix both drivers stop — the probe tails are never paid for (the pre-v2
+//! implementation ran both probes to their full horizon and only then
+//! looked for the mixing point).
 
 use anyhow::Result;
 
@@ -14,7 +20,7 @@ use crate::expansion::ExpandSpec;
 use crate::metrics::mixing_point;
 use crate::schedule::Schedule;
 
-use super::{RunSpec, Trainer};
+use super::{RunBuilder, RunDriver, Trainer};
 
 #[derive(Debug, Clone)]
 pub struct ProbeOutcome {
@@ -24,6 +30,8 @@ pub struct ProbeOutcome {
     pub t_mix_tokens: Option<u64>,
     /// Suggested τ for a production horizon.
     pub suggested_tau: Option<usize>,
+    /// Steps the two probes actually ran (early stop shows up here).
+    pub probe_steps_run: (usize, usize),
 }
 
 /// Run the two probes and derive τ for a `production_steps` horizon.
@@ -43,8 +51,8 @@ pub fn probe_mixing_time(
     let probe_sched = Schedule::Constant { peak: schedule.peak(), warmup_frac: 0.02 };
     let warmup_end = (probe_steps as f32 * 0.02).ceil() as usize;
 
-    let fixed = trainer.run(&RunSpec::fixed("probe-fixed", large, probe_steps, probe_sched))?;
-    let prog = trainer.run(&RunSpec::progressive(
+    let fixed_plan = RunBuilder::fixed("probe-fixed", large, probe_steps, probe_sched).build()?;
+    let prog_plan = RunBuilder::progressive(
         "probe-prog",
         small,
         large,
@@ -52,9 +60,31 @@ pub fn probe_mixing_time(
         probe_steps,
         probe_sched,
         expand_spec,
-    ))?;
+    )
+    .build()?;
+    let every = fixed_plan.eval_every();
 
-    let t_mix_tokens = mixing_point(&prog.curve, &fixed.curve, rel_tol, 2);
+    let mut fixed_d = RunDriver::new(*trainer, fixed_plan)?;
+    let mut prog_d = RunDriver::new(*trainer, prog_plan)?;
+
+    // Interleave eval-period by eval-period; stop both at the first mixing
+    // detection (two consecutive in-tolerance eval points).
+    let mut t_mix_tokens = None;
+    while !(fixed_d.is_done() && prog_d.is_done()) {
+        let a = fixed_d.advance(every)?;
+        let b = prog_d.advance(every)?;
+        if let Some(t) = mixing_point(prog_d.curve(), fixed_d.curve(), rel_tol, 2) {
+            t_mix_tokens = Some(t);
+            break;
+        }
+        if a == 0 && b == 0 && !(fixed_d.is_done() && prog_d.is_done()) {
+            break; // defensive: no progress and no mixing
+        }
+    }
+
+    let steps_run = (fixed_d.step_index(), prog_d.step_index());
+    let prog = prog_d.finish();
+
     let large_entry = trainer.manifest.get(large)?;
     let tokens_per_step = large_entry.tokens_per_step() as u64;
     // Steps elapsed after expansion until mixing.
@@ -70,7 +100,7 @@ pub fn probe_mixing_time(
         let stable_end = schedule.stable_end(production_steps);
         stable_end.saturating_sub(m).max(1)
     });
-    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau })
+    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau, probe_steps_run: steps_run })
 }
 
 #[cfg(test)]

@@ -1,0 +1,140 @@
+//! Many-run executor that shares work across expansion variants.
+//!
+//! The Fig-3/Fig-10 grids train the *same* source model under many expansion
+//! variants; a naive per-run loop repays the source-model segment for every
+//! variant. `Sweep` groups plans whose step/eval stream is identical up to
+//! their first boundary (same stage-0 config, horizon, schedule, cadence,
+//! and seed — see [`RunPlan::prefix_key`] — plus the same boundary step),
+//! trains that shared trunk **once**, forks each variant from the trunk's
+//! in-memory snapshot, and interleaves the forked drivers over one engine so
+//! compiled-executable cache hits are shared too.
+//!
+//! Per-run accounting stays exact: every [`RunResult`]'s ledger includes the
+//! shared prefix (what the run *represents*); [`SweepOutcome::executed_flops`]
+//! counts each shared trunk once (what was actually dispatched).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::builder::RunPlan;
+use super::driver::RunDriver;
+use super::{RunResult, Trainer};
+
+/// Outcome of a sweep: per-plan results in submission order, plus the
+/// executed-vs-represented FLOP accounting.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub results: Vec<RunResult>,
+    /// Training FLOPs actually dispatched (shared trunks counted once).
+    pub executed_flops: f64,
+    /// FLOPs saved versus running every plan standalone.
+    pub shared_flops: f64,
+}
+
+/// Interleaved multi-run executor over one engine. See module docs.
+pub struct Sweep<'a> {
+    trainer: Trainer<'a>,
+    plans: Vec<RunPlan>,
+}
+
+impl<'a> Sweep<'a> {
+    pub fn new(trainer: Trainer<'a>) -> Sweep<'a> {
+        Sweep { trainer, plans: Vec::new() }
+    }
+
+    pub fn add(&mut self, plan: RunPlan) -> &mut Sweep<'a> {
+        self.plans.push(plan);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Execute every plan; results come back in the order plans were added.
+    pub fn run(&mut self) -> Result<SweepOutcome> {
+        let plans = std::mem::take(&mut self.plans);
+        if plans.is_empty() {
+            bail!("sweep has no plans");
+        }
+        // Group by (prefix stream, first boundary step): within a group the
+        // runs are bit-identical until the boundary, so the trunk is shared.
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, p) in plans.iter().enumerate() {
+            groups.entry(format!("{}@{}", p.prefix_key(), p.first_boundary())).or_default().push(i);
+        }
+
+        let mut results: Vec<Option<RunResult>> = plans.iter().map(|_| None).collect();
+        let mut executed_flops = 0.0f64;
+        let mut shared_flops = 0.0f64;
+
+        for idxs in groups.values() {
+            let fork_step = plans[idxs[0]].first_boundary();
+            if idxs.len() == 1 || fork_step == 0 {
+                // Nothing to share: run standalone.
+                for &i in idxs {
+                    let mut d = RunDriver::new(self.trainer, plans[i].clone())?;
+                    d.run_to_end()?;
+                    let res = d.finish();
+                    executed_flops += res.ledger.total;
+                    results[i] = Some(res);
+                }
+                continue;
+            }
+
+            // Shared trunk: one driver carries every variant to the boundary.
+            let mut trunk = RunDriver::new(self.trainer, plans[idxs[0]].clone())?;
+            trunk.advance(fork_step)?;
+            if trunk.step_index() != fork_step {
+                bail!(
+                    "sweep trunk for '{}' stopped at step {} instead of the boundary {}",
+                    plans[idxs[0]].name(),
+                    trunk.step_index(),
+                    fork_step
+                );
+            }
+            let snap = trunk.snapshot();
+            let trunk_flops = snap.ledger.total;
+            executed_flops += trunk_flops;
+            shared_flops += trunk_flops * (idxs.len() - 1) as f64;
+
+            // Fork each variant from the trunk and interleave them over the
+            // shared engine, one eval period at a time.
+            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(idxs.len());
+            for &i in idxs {
+                drivers.push((i, RunDriver::resume(self.trainer, plans[i].clone(), snap.clone())?));
+            }
+            loop {
+                let mut progressed = false;
+                for (_, d) in drivers.iter_mut() {
+                    if !d.is_done() && !d.is_stopped() {
+                        let every = d.plan().eval_every();
+                        progressed |= d.advance(every)? > 0 || d.is_done();
+                    }
+                }
+                if drivers.iter().all(|(_, d)| d.is_done() || d.is_stopped()) {
+                    break;
+                }
+                if !progressed {
+                    bail!("sweep made no progress; aborting to avoid a livelock");
+                }
+            }
+            for (i, d) in drivers {
+                let res = d.finish();
+                executed_flops += res.ledger.total - trunk_flops;
+                results[i] = Some(res);
+            }
+        }
+
+        Ok(SweepOutcome {
+            results: results.into_iter().map(|r| r.expect("every plan produced a result")).collect(),
+            executed_flops,
+            shared_flops,
+        })
+    }
+}

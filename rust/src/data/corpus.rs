@@ -114,13 +114,15 @@ pub struct Batcher<'a> {
     cursor: usize,
     epoch: u64,
     seed: u64,
+    drawn: u64,
 }
 
 impl<'a> Batcher<'a> {
     pub fn new(tokens: &'a [i32], seq_len: usize, seed: u64) -> Batcher<'a> {
         assert!(tokens.len() > seq_len, "corpus shorter than one window");
         let n_windows = (tokens.len() - 1) / seq_len; // -1: targets shift by one
-        let mut b = Batcher { tokens, seq_len, order: (0..n_windows).collect(), cursor: 0, epoch: 0, seed };
+        let mut b =
+            Batcher { tokens, seq_len, order: (0..n_windows).collect(), cursor: 0, epoch: 0, seed, drawn: 0 };
         b.shuffle();
         b
     }
@@ -138,6 +140,27 @@ impl<'a> Batcher<'a> {
         self.order.len()
     }
 
+    /// Total windows handed out since construction — the batcher's stream
+    /// position. A fresh batcher with the same (tokens, seq_len, seed)
+    /// fast-forwarded by [`Batcher::skip_windows`] resumes the identical
+    /// stream (deterministic checkpoint/resume).
+    pub fn windows_drawn(&self) -> u64 {
+        self.drawn
+    }
+
+    /// Fast-forward the stream by `n` windows without materializing them.
+    pub fn skip_windows(&mut self, n: u64) {
+        for _ in 0..n {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epoch += 1;
+                self.shuffle();
+            }
+            self.cursor += 1;
+            self.drawn += 1;
+        }
+    }
+
     /// Next (x, y) window pair; y is x shifted by one token.
     pub fn next_window(&mut self) -> (&'a [i32], &'a [i32]) {
         if self.cursor >= self.order.len() {
@@ -147,6 +170,7 @@ impl<'a> Batcher<'a> {
         }
         let w = self.order[self.cursor];
         self.cursor += 1;
+        self.drawn += 1;
         let start = w * self.seq_len;
         (
             &self.tokens[start..start + self.seq_len],
@@ -231,6 +255,30 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(b1.next_batch(4), b2.next_batch(4));
         }
+    }
+
+    #[test]
+    fn skip_windows_matches_replay() {
+        let c = tiny();
+        let mut a = Batcher::new(&c.train, 16, 7);
+        for _ in 0..37 {
+            a.next_window();
+        }
+        let mut b = Batcher::new(&c.train, 16, 7);
+        b.skip_windows(37);
+        assert_eq!(a.windows_drawn(), b.windows_drawn());
+        for _ in 0..20 {
+            assert_eq!(a.next_window(), b.next_window());
+        }
+        // Skipping across an epoch boundary replays the reshuffle too.
+        let n = a.windows_per_epoch() as u64;
+        let mut c1 = Batcher::new(&c.train, 16, 7);
+        let mut c2 = Batcher::new(&c.train, 16, 7);
+        for _ in 0..n + 3 {
+            c1.next_window();
+        }
+        c2.skip_windows(n + 3);
+        assert_eq!(c1.next_window(), c2.next_window());
     }
 
     #[test]

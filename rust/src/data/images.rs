@@ -14,6 +14,7 @@ pub struct ImageGen {
     templates: Vec<Vec<f32>>, // [class][H*W*3]
     noise: f32,
     rng: Rng,
+    drawn: u64,
 }
 
 impl ImageGen {
@@ -43,7 +44,27 @@ impl ImageGen {
             }
             templates.push(t);
         }
-        ImageGen { n_classes, size, templates, noise, rng }
+        ImageGen { n_classes, size, templates, noise, rng, drawn: 0 }
+    }
+
+    /// Samples handed out since construction — the generator's stream
+    /// position (see [`ImageGen::skip_samples`]).
+    pub fn samples_drawn(&self) -> u64 {
+        self.drawn
+    }
+
+    /// Fast-forward by `n` samples, consuming exactly the RNG draws that
+    /// generating them would, so a fresh generator skipped to a checkpoint's
+    /// position resumes the identical stream.
+    pub fn skip_samples(&mut self, n: u64) {
+        let px = self.size * self.size * 3;
+        for _ in 0..n {
+            self.rng.below(self.n_classes);
+            for _ in 0..px {
+                self.rng.normal();
+            }
+        }
+        self.drawn += n;
     }
 
     /// Fill a batch: returns (images [B,H,W,3] flattened, labels [B]).
@@ -59,6 +80,7 @@ impl ImageGen {
                 imgs.push(v + self.rng.normal() as f32 * self.noise);
             }
         }
+        self.drawn += batch as u64;
         (imgs, labels)
     }
 }
@@ -74,6 +96,18 @@ mod tests {
         assert_eq!(imgs.len(), 4 * 8 * 8 * 3);
         assert_eq!(labels.len(), 4);
         assert!(labels.iter().all(|&l| (l as usize) < 10));
+    }
+
+    #[test]
+    fn skip_samples_matches_replay() {
+        let mut a = ImageGen::new(10, 8, 0.3, 1);
+        for _ in 0..5 {
+            a.next_batch(4);
+        }
+        let mut b = ImageGen::new(10, 8, 0.3, 1);
+        b.skip_samples(20);
+        assert_eq!(a.samples_drawn(), b.samples_drawn());
+        assert_eq!(a.next_batch(4), b.next_batch(4));
     }
 
     #[test]

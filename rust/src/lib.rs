@@ -4,7 +4,10 @@
 //! Layering (see DESIGN.md):
 //! - [`runtime`]: loads AOT'd HLO-text artifacts and executes them (PJRT CPU).
 //! - [`coordinator`]: the paper's contribution — progressive-training
-//!   orchestration: expansion timing, mixing detection, multi-stage schedules.
+//!   orchestration: expansion timing, mixing detection, multi-stage
+//!   schedules. The v2 API is `RunBuilder` (validated plans) →
+//!   `RunDriver` (resumable state machine) + `Observer` hooks + `Sweep`
+//!   (work-sharing multi-run executor).
 //! - [`expansion`]: depth-expansion engine (random/copying/zero/... of §3).
 //! - [`schedule`]: WSD / cosine learning-rate schedules (§4's key lever).
 //! - [`data`]: synthetic Markov-Zipf corpus with a known entropy floor.

@@ -2,27 +2,93 @@
 //!
 //! Commands:
 //!   train <cfg_id> [--steps N] [--sched wsd|cosine|constant] [--lr F]
-//!         [--seed N]                                fixed-size training
+//!         [--seed N] [--save-every N --ckpt-dir D] [--resume SNAP]
+//!                                                   fixed-size training
 //!   progressive <small> <large> [--tau N|--tau-frac F] [--steps N] ...
 //!         [--strategy random|copying|zero|zero_n|zero_l] [--insertion top|bottom]
+//!   sweep <small> <large> [--taus F,F,..] [--strategies a,b,..]
+//!         expansion-variant sweep sharing source-model training
 //!   probe-mixing <small> <large> [--probe-steps N] [--steps N]
 //!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
 //!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
 //!   bench-<target>  (fig1..fig22, table1, table2, theory, all)
 //!   list / list-benches / inspect <cfg_id>
 //!
-//! Python never runs here: artifacts are AOT'd once by `make artifacts`.
+//! Flags accept `--name value` and `--name=value`; unknown flags are
+//! rejected per command. Python never runs here: artifacts are AOT'd once
+//! by `make artifacts`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use anyhow::Result;
 use deep_progressive::bench::{run_target, Ctx, ALL_TARGETS};
 use deep_progressive::checkpoint;
-use deep_progressive::cli::Args;
+use deep_progressive::cli::{Args, CommandSpec};
 use deep_progressive::convex::{simulate, ConvexProblem, Teleport};
-use deep_progressive::coordinator::{recipe, RunSpec, Trainer};
+use deep_progressive::coordinator::{
+    recipe, LossSpikeDetector, PeriodicCheckpointer, ProgressPrinter, RunBuilder, RunDriver, Sweep,
+    Trainer,
+};
 use deep_progressive::data::{Corpus, CorpusConfig};
-use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, Strategy};
+use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use deep_progressive::runtime::{Engine, Manifest};
 use deep_progressive::schedule::Schedule;
+
+fn spec_for(cmd: &str) -> Option<CommandSpec> {
+    // Static per-command vocabularies so typos fail loudly instead of
+    // silently parsing as switches (see cli.rs).
+    const TRAIN: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
+            "save-every", "ckpt-dir", "resume",
+        ],
+        switches: &["progress"],
+    };
+    const PROGRESSIVE: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "tau",
+            "tau-frac", "strategy", "insertion", "os", "expand-seed",
+        ],
+        switches: &["progress"],
+    };
+    const SWEEP: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
+            "strategies", "insertion", "os", "expand-seed",
+        ],
+        switches: &[],
+    };
+    const PROBE: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "probe-steps",
+            "production-steps", "tol", "strategy", "insertion", "os", "expand-seed",
+        ],
+        switches: &[],
+    };
+    const CONVEX: CommandSpec = CommandSpec {
+        flags: &["steps", "seed", "lr", "sched", "decay-frac", "dim", "tau-frac"],
+        switches: &[],
+    };
+    const EXPAND_CKPT: CommandSpec = CommandSpec {
+        flags: &["artifacts", "in", "out-ckpt", "strategy", "insertion", "os", "expand-seed"],
+        switches: &[],
+    };
+    const BENCH: CommandSpec =
+        CommandSpec { flags: &["artifacts", "out", "steps", "seed"], switches: &[] };
+    const LISTING: CommandSpec = CommandSpec { flags: &["artifacts"], switches: &[] };
+    match cmd {
+        "train" => Some(TRAIN),
+        "progressive" => Some(PROGRESSIVE),
+        "sweep" => Some(SWEEP),
+        "probe-mixing" => Some(PROBE),
+        "convex" => Some(CONVEX),
+        "expand-ckpt" => Some(EXPAND_CKPT),
+        "list" | "list-benches" | "inspect" => Some(LISTING),
+        c if c.starts_with("bench-") => Some(BENCH),
+        _ => None,
+    }
+}
 
 fn schedule_from(args: &Args) -> Schedule {
     let lr = args.get_f32("lr", 0.01);
@@ -34,30 +100,54 @@ fn schedule_from(args: &Args) -> Schedule {
     }
 }
 
-fn expand_from(args: &Args) -> ExpandSpec {
-    let strategy = match args.get_str("strategy", "random") {
+fn strategy_from(name: &str) -> Result<Strategy> {
+    Ok(match name {
+        "random" => Strategy::Random,
         "copying" | "copying_stack" => Strategy::Copying(CopyOrder::Stack),
         "copying_inter" => Strategy::Copying(CopyOrder::Inter),
         "copying_last" => Strategy::Copying(CopyOrder::Last),
         "zero" => Strategy::Zero,
         "zero_n" | "copying_zero_n" => Strategy::CopyingZeroN,
         "zero_l" | "copying_zero_l" => Strategy::CopyingZeroL,
-        _ => Strategy::Random,
-    };
-    ExpandSpec {
-        strategy,
+        other => anyhow::bail!(
+            "unknown expansion strategy '{other}' (expected random|copying|copying_inter|copying_last|zero|zero_n|zero_l)"
+        ),
+    })
+}
+
+fn expand_from(args: &Args) -> Result<ExpandSpec> {
+    Ok(ExpandSpec {
+        strategy: strategy_from(args.get_str("strategy", "random"))?,
         insertion: if args.get_str("insertion", "bottom") == "top" { Insertion::Top } else { Insertion::Bottom },
         os_policy: match args.get_str("os", "inherit") {
-            "copy" => deep_progressive::expansion::OsPolicy::Copy,
-            "reset" => deep_progressive::expansion::OsPolicy::Reset,
-            _ => deep_progressive::expansion::OsPolicy::Inherit,
+            "copy" => OsPolicy::Copy,
+            "reset" => OsPolicy::Reset,
+            _ => OsPolicy::Inherit,
         },
         seed: args.get_u64("expand-seed", 7),
+    })
+}
+
+fn apply_eval_every(mut b: RunBuilder, args: &Args) -> RunBuilder {
+    if args.get("eval-every").is_some() {
+        b = b.eval_every(args.get_usize("eval-every", 1));
     }
+    b
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let command = argv.first().cloned().unwrap_or_default();
+    let args = match spec_for(&command) {
+        Some(spec) => match Args::parse_for(argv, &spec) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e} (command '{command}')\n{HELP}");
+                std::process::exit(2);
+            }
+        },
+        None => Args::parse(argv),
+    };
     let artifacts = args.get_str("artifacts", "artifacts").to_string();
     let out = args.get_str("out", "results").to_string();
     let steps = args.get_usize("steps", 240);
@@ -103,9 +193,34 @@ fn main() -> Result<()> {
             let corpus = Corpus::generate(CorpusConfig::default());
             let trainer = Trainer::new(&engine, &manifest, &corpus);
             let cfg_id = args.positional.first().expect("usage: train <cfg_id>").clone();
-            let mut spec = RunSpec::fixed(format!("train-{cfg_id}"), &cfg_id, steps, schedule_from(&args));
-            spec.seed = seed;
-            let res = trainer.run(&spec)?;
+            let plan = apply_eval_every(
+                RunBuilder::fixed(format!("train-{cfg_id}"), &cfg_id, steps, schedule_from(&args)).seed(seed),
+                &args,
+            )
+            .build()?;
+            let mut driver = match args.get("resume") {
+                Some(p) => {
+                    let path = std::path::Path::new(p);
+                    let snap_cfg = checkpoint::snapshot_cfg_id(path)?;
+                    let snap = checkpoint::load_snapshot(path, manifest.get(&snap_cfg)?)?;
+                    println!("resuming '{}' from step {}", snap.run_name, snap.step);
+                    RunDriver::resume(trainer, plan, snap)?
+                }
+                None => RunDriver::new(trainer, plan)?,
+            };
+            if args.has("progress") {
+                driver.attach(Box::new(ProgressPrinter));
+            }
+            let save_every = args.get_usize("save-every", 0);
+            if save_every > 0 {
+                driver.attach(Box::new(PeriodicCheckpointer::starting_at(
+                    save_every,
+                    args.get_str("ckpt-dir", "checkpoints"),
+                    driver.step_index(),
+                )));
+            }
+            driver.run_to_end()?;
+            let res = driver.finish();
             res.curve.write_csv(std::path::Path::new(&out))?;
             println!(
                 "final val loss {:.4} | {:.2e} FLOPs | {} tokens | entropy floor {:.3}",
@@ -124,24 +239,84 @@ fn main() -> Result<()> {
                 .get("tau")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(((steps as f32) * args.get_f32("tau-frac", 0.8)) as usize);
-            let mut spec = RunSpec::progressive(
-                format!("prog-{small}-{large}"),
-                &small,
-                &large,
-                tau,
-                steps,
-                schedule_from(&args),
-                expand_from(&args),
-            );
-            spec.seed = seed;
-            let res = trainer.run(&spec)?;
+            let plan = apply_eval_every(
+                RunBuilder::progressive(
+                    format!("prog-{small}-{large}"),
+                    &small,
+                    &large,
+                    tau,
+                    steps,
+                    schedule_from(&args),
+                    expand_from(&args)?,
+                )
+                .seed(seed),
+                &args,
+            )
+            .build()?;
+            let mut driver = RunDriver::new(trainer, plan)?;
+            if args.has("progress") {
+                driver.attach(Box::new(ProgressPrinter));
+            }
+            let spikes = Rc::new(RefCell::new(LossSpikeDetector::new(0.0)));
+            driver.attach(Box::new(spikes.clone()));
+            driver.run_to_end()?;
+            let res = driver.finish();
             res.curve.write_csv(std::path::Path::new(&out))?;
             let fixed_flops = trainer.fixed_flops(&large, steps)?;
             println!(
-                "final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed) | expansion at step {tau}",
+                "final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed) | expansion at step {tau} (loss jump {:+.4})",
                 res.final_val_loss,
                 res.ledger.total,
-                (1.0 - res.ledger.total / fixed_flops) * 100.0
+                (1.0 - res.ledger.total / fixed_flops) * 100.0,
+                spikes.borrow().max_jump().unwrap_or(f32::NAN),
+            );
+            Ok(())
+        }
+        "sweep" => {
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let small = args.positional.first().expect("usage: sweep <small> <large>").clone();
+            let large = args.positional.get(1).expect("usage: sweep <small> <large>").clone();
+            let taus: Vec<usize> = args
+                .get_str("taus", "0.3,0.6")
+                .split(',')
+                .filter_map(|s| s.trim().parse::<f32>().ok())
+                .map(|f| ((steps as f32) * f) as usize)
+                .collect();
+            let strategies: Vec<&str> = args.get_str("strategies", "random,zero").split(',').collect();
+            let base = expand_from(&args)?;
+            let mut sweep = Sweep::new(trainer);
+            let mut labels = Vec::new();
+            for &tau in &taus {
+                for sname in &strategies {
+                    let plan = RunBuilder::progressive(
+                        format!("sweep-{small}-{large}-t{tau}-{sname}"),
+                        &small,
+                        &large,
+                        tau.max(1),
+                        steps,
+                        schedule_from(&args),
+                        ExpandSpec { strategy: strategy_from(sname)?, ..base },
+                    )
+                    .seed(seed)
+                    .build()?;
+                    labels.push((tau, sname.to_string()));
+                    sweep.add(plan);
+                }
+            }
+            let outcome = sweep.run()?;
+            for ((tau, sname), res) in labels.iter().zip(&outcome.results) {
+                res.curve.write_csv(std::path::Path::new(&out))?;
+                println!(
+                    "τ={tau:<6} {sname:<14} final val loss {:.4} | {:.2e} FLOPs",
+                    res.final_val_loss, res.ledger.total
+                );
+            }
+            println!(
+                "executed {:.2e} FLOPs; shared source training saved {:.2e} FLOPs",
+                outcome.executed_flops, outcome.shared_flops
             );
             Ok(())
         }
@@ -186,7 +361,7 @@ fn main() -> Result<()> {
             let src = manifest.get(&src_id)?;
             let dst = manifest.get(&dst_id)?;
             let state = checkpoint::load(std::path::Path::new(args.get("in").expect("--in")), src)?;
-            let big = deep_progressive::expansion::expand(src, dst, &state, &expand_from(&args))?;
+            let big = deep_progressive::expansion::expand(src, dst, &state, &expand_from(&args)?)?;
             checkpoint::save(std::path::Path::new(args.get("out-ckpt").expect("--out-ckpt")), &dst_id, &big, dst)?;
             println!("expanded {src_id} -> {dst_id}");
             Ok(())
@@ -204,10 +379,14 @@ fn main() -> Result<()> {
 
 const HELP: &str = r#"repro — Deep Progressive Training reproduction launcher
 
-USAGE: repro <command> [args]
+USAGE: repro <command> [args]   (flags: --name value or --name=value)
 
   train <cfg_id>                    fixed-size training run
+        [--save-every N --ckpt-dir D]   periodic driver snapshots
+        [--resume SNAP]                 resume a paused run bit-exactly
   progressive <small> <large>       zero/one-layer progressive training
+  sweep <small> <large>             expansion-variant sweep; source-model
+        [--taus F,F] [--strategies a,b] training is shared across variants
   probe-mixing <small> <large>      derive τ from two early-stopped probes (§7)
   convex                            §4 convex-theory simulator
   expand-ckpt <src> <dst>           offline checkpoint depth expansion
@@ -222,6 +401,6 @@ COMMON FLAGS
   --lr F --sched wsd|cosine|constant --decay-frac F
   --strategy random|copying|copying_inter|copying_last|zero|zero_n|zero_l
   --insertion bottom|top   --os inherit|copy|reset
-  --tau N | --tau-frac F   --seed N
+  --tau N | --tau-frac F   --seed N   --eval-every N   --progress
   --artifacts DIR (default artifacts)   --out DIR (default results)
 "#;

@@ -3,9 +3,10 @@
 //! These require `make artifacts` to have run (they are skipped with a clear
 //! message otherwise, so `cargo test` stays green on a fresh checkout).
 
-use deep_progressive::coordinator::{RunSpec, Trainer};
+use deep_progressive::coordinator::{RunBuilder, RunDriver, Sweep, Trainer};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::{expand, CopyOrder, ExpandSpec, OsPolicy, Strategy};
+use deep_progressive::flops::flops_per_step;
 use deep_progressive::metrics::mixing_point;
 use deep_progressive::runtime::{Engine, IntTensor, Manifest, ModelState};
 use deep_progressive::schedule::Schedule;
@@ -169,6 +170,15 @@ fn expansion_preserves_old_layer_bytes() {
     }
 }
 
+fn run_plan(
+    trainer: Trainer,
+    plan: deep_progressive::coordinator::RunPlan,
+) -> deep_progressive::coordinator::RunResult {
+    let mut d = RunDriver::new(trainer, plan).unwrap();
+    d.run_to_end().unwrap();
+    d.finish()
+}
+
 #[test]
 fn progressive_run_end_to_end_mixes() {
     // Miniature Fig-3: zero-layer -> 3-layer progressive under constant LR
@@ -180,18 +190,13 @@ fn progressive_run_end_to_end_mixes() {
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     let total = 240;
 
-    let fixed = trainer.run(&RunSpec::fixed("fixed-l3", "gpt2.l3", total, sched)).unwrap();
-    let prog = trainer
-        .run(&RunSpec::progressive(
-            "prog-l0-l3",
-            "gpt2.l0",
-            "gpt2.l3",
-            48,
-            total,
-            sched,
-            ExpandSpec::default(),
-        ))
-        .unwrap();
+    let fixed = run_plan(trainer, RunBuilder::fixed("fixed-l3", "gpt2.l3", total, sched).build().unwrap());
+    let prog = run_plan(
+        trainer,
+        RunBuilder::progressive("prog-l0-l3", "gpt2.l0", "gpt2.l3", 48, total, sched, ExpandSpec::default())
+            .build()
+            .unwrap(),
+    );
 
     assert_eq!(prog.boundaries.len(), 1);
     // The progressive run costs less compute...
@@ -201,4 +206,183 @@ fn progressive_run_end_to_end_mixes() {
     let gap = (prog.final_val_loss - fixed.final_val_loss) / fixed.final_val_loss;
     let mixed = mixing_point(&prog.curve, &fixed.curve, 0.05, 2).is_some();
     assert!(mixed || gap < 0.05, "gap {gap}, mixed {mixed}");
+}
+
+#[test]
+fn deprecated_runspec_shim_matches_builder_path() {
+    // The pre-v2 entry points stay as shims over the builder/driver; their
+    // results must be identical to the explicit path.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    #[allow(deprecated)]
+    let via_shim = trainer
+        .run(&deep_progressive::coordinator::RunSpec::progressive(
+            "shim",
+            "gpt2.l0",
+            "gpt2.l3",
+            24,
+            96,
+            sched,
+            ExpandSpec::default(),
+        ))
+        .unwrap();
+    let via_builder = run_plan(
+        trainer,
+        RunBuilder::progressive("shim", "gpt2.l0", "gpt2.l3", 24, 96, sched, ExpandSpec::default())
+            .build()
+            .unwrap(),
+    );
+    assert_eq!(via_shim.curve.points.len(), via_builder.curve.points.len());
+    for (a, b) in via_shim.curve.points.iter().zip(&via_builder.curve.points) {
+        assert_eq!(a, b, "shim and builder curves diverged");
+    }
+    assert_eq!(via_shim.boundaries, via_builder.boundaries);
+}
+
+#[test]
+fn curve_has_single_point_per_step_except_boundaries() {
+    // Regression (duplicate curve point): when a stage boundary coincides
+    // with the eval cadence, the old loop pushed a cadence eval AND the
+    // boundary's pre-eval at the same step. The curve must be non-decreasing
+    // in step, with exactly two points (pre/post) at each boundary and one
+    // everywhere else.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let total = 96;
+    let tau = 48; // multiple of eval_every below: the old code duplicated here
+    let plan = RunBuilder::progressive("dup", "gpt2.l0", "gpt2.l3", tau, total, sched, ExpandSpec::default())
+        .eval_every(24)
+        .build()
+        .unwrap();
+    let res = run_plan(trainer, plan);
+
+    let steps: Vec<usize> = res.curve.points.iter().map(|p| p.step).collect();
+    for w in steps.windows(2) {
+        assert!(w[1] >= w[0], "curve steps not monotone: {steps:?}");
+    }
+    let mut counts = std::collections::BTreeMap::new();
+    for s in &steps {
+        *counts.entry(*s).or_insert(0usize) += 1;
+    }
+    for (s, n) in counts {
+        if s == tau {
+            assert_eq!(n, 2, "boundary step {s} must log exactly pre+post, got {n}: {steps:?}");
+        } else {
+            assert_eq!(n, 1, "step {s} logged {n} times: {steps:?}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_pause_snapshot_resume() {
+    // Acceptance: a driver paused mid-run, checkpointed to disk, reloaded,
+    // and resumed produces a bit-identical loss curve and final state to an
+    // uninterrupted run of the same plan.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+    let plan = RunBuilder::progressive("resume", "gpt2.l0", "gpt2.l3", 60, 120, sched, ExpandSpec::default())
+        .eval_every(20)
+        .build()
+        .unwrap();
+
+    // Uninterrupted reference.
+    let mut ref_d = RunDriver::new(trainer, plan.clone()).unwrap();
+    ref_d.run_to_end().unwrap();
+    let ref_state = ref_d.state().clone();
+    let reference = ref_d.finish();
+
+    // Paused run: stop mid-stage-0, snapshot to disk, reload, resume.
+    let mut d = RunDriver::new(trainer, plan.clone()).unwrap();
+    let taken = d.advance(50).unwrap();
+    assert!(taken > 0 && !d.is_done());
+    let dir = std::env::temp_dir().join(format!("dpt_resume_{}", std::process::id()));
+    let path = dir.join("mid.snap");
+    d.save_snapshot(&path).unwrap();
+    drop(d);
+
+    let cfg = deep_progressive::checkpoint::snapshot_cfg_id(&path).unwrap();
+    let snap = deep_progressive::checkpoint::load_snapshot(&path, m.get(&cfg).unwrap()).unwrap();
+    assert_eq!(snap.step, taken);
+    let mut resumed_d = RunDriver::resume(trainer, plan, snap).unwrap();
+    resumed_d.run_to_end().unwrap();
+    let resumed_state = resumed_d.state().clone();
+    let resumed = resumed_d.finish();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(reference.curve.points.len(), resumed.curve.points.len());
+    for (a, b) in reference.curve.points.iter().zip(&resumed.curve.points) {
+        assert_eq!(a, b, "resumed curve diverged from uninterrupted run");
+    }
+    assert_eq!(reference.boundaries, resumed.boundaries);
+    assert_eq!(reference.ledger.tokens, resumed.ledger.tokens);
+    for (a, b) in ref_state.params.iter().zip(&resumed_state.params) {
+        assert_eq!(a.data, b.data, "final params diverged after resume");
+    }
+    for (a, b) in ref_state.opt.iter().zip(&resumed_state.opt) {
+        assert_eq!(a.data, b.data, "final optimizer state diverged after resume");
+    }
+}
+
+#[test]
+fn sweep_shares_source_model_training() {
+    // Acceptance: a two-variant expansion sweep performs the small-model
+    // training steps once — asserted via the FLOP ledger.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let (total, tau) = (120, 40);
+    let mk = |name: &str, strategy: Strategy| {
+        RunBuilder::progressive(
+            name,
+            "gpt2.l0",
+            "gpt2.l3",
+            tau,
+            total,
+            sched,
+            ExpandSpec { strategy, ..Default::default() },
+        )
+        .build()
+        .unwrap()
+    };
+    let mut sweep = Sweep::new(trainer);
+    sweep.add(mk("variant-random", Strategy::Random));
+    sweep.add(mk("variant-zero", Strategy::Zero));
+    let outcome = sweep.run().unwrap();
+    assert_eq!(outcome.results.len(), 2);
+
+    // Each per-run ledger represents the full run (prefix included)...
+    let small = m.get("gpt2.l0").unwrap();
+    let prefix_flops = flops_per_step(small) * tau as f64;
+    for res in &outcome.results {
+        assert_eq!(res.boundaries.len(), 1);
+        assert!(res.ledger.total > prefix_flops);
+    }
+    // ...but the executed total counts the shared prefix exactly once.
+    let represented: f64 = outcome.results.iter().map(|r| r.ledger.total).sum();
+    assert!((outcome.shared_flops - prefix_flops).abs() / prefix_flops < 1e-9);
+    assert!(
+        (outcome.executed_flops - (represented - prefix_flops)).abs() / represented < 1e-9,
+        "executed {} represented {} prefix {}",
+        outcome.executed_flops,
+        represented,
+        prefix_flops
+    );
+    // And the shared trunk did not change the result: a standalone run of
+    // the same plan is bit-identical.
+    let standalone = run_plan(trainer, mk("variant-random", Strategy::Random));
+    assert_eq!(standalone.curve.points.len(), outcome.results[0].curve.points.len());
+    for (a, b) in standalone.curve.points.iter().zip(&outcome.results[0].curve.points) {
+        assert_eq!(a, b, "sweep-forked run diverged from standalone");
+    }
 }

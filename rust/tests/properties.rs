@@ -3,6 +3,7 @@
 //! detector monotonicity, JSON round-trips. No PJRT needed — these run on
 //! any checkout.
 
+use deep_progressive::coordinator::RunBuilder;
 use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
 use deep_progressive::expansion::{applicable, expand, CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use deep_progressive::metrics::{mixing_point, Curve, CurvePoint};
@@ -61,6 +62,38 @@ fn prop_lr_sum_additive() {
         let whole = sched.lr_sum(0, total, total);
         let split = sched.lr_sum(0, mid, total) + sched.lr_sum(mid, total, total);
         assert!((whole - split).abs() < 1e-9);
+    });
+}
+
+// ------------------------------------------------------------------ builder
+
+#[test]
+fn prop_builder_accepts_iff_boundaries_strictly_increasing_inside_horizon() {
+    proptest(200, |g| {
+        let total = g.usize(10..2000);
+        let n_extra = g.usize(0..4);
+        let mut b = RunBuilder::new("p")
+            .start("cfg0")
+            .total_steps(total)
+            .schedule(Schedule::Constant { peak: 0.01, warmup_frac: 0.02 });
+        let mut steps = Vec::new();
+        for i in 0..n_extra {
+            let s = g.usize(0..total * 2);
+            steps.push(s);
+            b = b.then_expand_at(s, format!("cfg{}", i + 1), ExpandSpec::default());
+        }
+        let valid = steps.windows(2).all(|w| w[1] > w[0])
+            && steps.first().map(|&s| s > 0).unwrap_or(true)
+            && steps.last().map(|&s| s < total).unwrap_or(true);
+        let built = b.build();
+        assert_eq!(built.is_ok(), valid, "steps {steps:?} total {total}: {built:?}");
+        if let Ok(plan) = built {
+            assert_eq!(plan.stages().len(), n_extra + 1);
+            assert!(plan.eval_every() >= 1);
+            // The plan is immutable and self-consistent: first_boundary is
+            // either the first declared boundary or the horizon.
+            assert_eq!(plan.first_boundary(), steps.first().copied().unwrap_or(total));
+        }
     });
 }
 
