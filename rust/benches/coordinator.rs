@@ -140,17 +140,30 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(r.final_val_loss);
     });
 
-    // Driver snapshot cost (the pause/resume and sweep-fork primitive).
+    // Driver snapshot cost: since the device-resident refactor this is the
+    // explicit host-materialization point (one download per tensor), so the
+    // driver is advanced first to put its state on the device.
     let entry12 = manifest.get("gpt2.l12")?;
     let plan = RunBuilder::fixed("bench-snap", "gpt2.l12", 48, Schedule::Constant { peak: 0.01, warmup_frac: 0.0 })
         .build()
         .unwrap();
-    let driver = RunDriver::new(trainer, plan)?;
-    b.time("driver/snapshot-l12", 50, || {
-        let s = driver.snapshot();
+    let mut driver = RunDriver::new(trainer, plan)?;
+    driver.advance(1)?;
+    b.time("driver/snapshot-l12 (materialize)", 50, || {
+        let s = driver.snapshot().unwrap();
         std::hint::black_box(s.state.params.len());
     });
     std::hint::black_box(entry12.param_count);
+
+    // Dispatch-overhead breakdown accumulated over everything above.
+    let stats = engine.take_stats();
+    println!(
+        "\ndispatch breakdown: {} dispatches, upload {:.1} ms, execute {:.1} ms, download {:.1} ms",
+        stats.dispatches,
+        stats.upload.as_secs_f64() * 1e3,
+        stats.execute.as_secs_f64() * 1e3,
+        stats.download.as_secs_f64() * 1e3,
+    );
 
     b.report();
     Ok(())

@@ -1,0 +1,159 @@
+//! `bench-perf`: dispatch-overhead benchmark for the device-resident
+//! runtime, seeding the perf trajectory (`BENCH_perf.json`).
+//!
+//! Runs the fig-3 micro configuration (zero-layer → 3-layer progressive,
+//! gpt2.l0 → gpt2.l3) twice through the identical [`RunDriver`] loop:
+//!
+//! - **device**: params/opt stay resident as PJRT buffers across dispatches
+//!   (the default path since the DeviceState refactor);
+//! - **host_roundtrip**: `Engine::set_host_roundtrip(true)` forces the
+//!   pre-refactor transport — the full state is materialized to host
+//!   tensors and re-uploaded after every train unit, and every eval
+//!   dispatch re-uploads all params from the host (the old per-call
+//!   serialization).
+//!
+//! Both runs are driven by the same plan and seed, so their loss curves are
+//! bit-identical (asserted by the integration suite; spot-checked here) and
+//! the steps/sec ratio isolates pure dispatch overhead. The report includes
+//! the engine's upload / execute / download wall-clock breakdown.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{RunBuilder, RunDriver};
+use crate::expansion::ExpandSpec;
+use crate::metrics::Table;
+use crate::runtime::DispatchStats;
+use crate::schedule::Schedule;
+use crate::util::json::Json;
+
+use super::Ctx;
+
+const SMALL: &str = "gpt2.l0";
+const LARGE: &str = "gpt2.l3";
+
+struct Measured {
+    steps_per_sec: f64,
+    wall_s: f64,
+    stats: DispatchStats,
+    final_val_loss: f32,
+}
+
+pub fn perf(ctx: &Ctx) -> Result<()> {
+    let target = "perf";
+    let steps = ctx.steps;
+    let tau = ((steps as f32 * 0.4) as usize).max(1);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    // Keep the eval cadence at least one fused chunk apart: the builder's
+    // default (steps/40) would force single-step units at smoke scales and
+    // the benchmark would never dispatch the train_chunk hot path.
+    let chunk = ctx.manifest.get(SMALL)?.chunk.max(ctx.manifest.get(LARGE)?.chunk);
+    let eval_every = (steps / 6).max(chunk).max(1);
+    let mk = |name: &str| {
+        RunBuilder::progressive(name, SMALL, LARGE, tau, steps, sched, ExpandSpec::default())
+            .seed(ctx.seed)
+            .eval_every(eval_every)
+            .build()
+    };
+
+    // Compile both stages' artifacts up front so neither timed path pays
+    // the one-off compilation.
+    for cfg in [SMALL, LARGE] {
+        ctx.engine.bind_stage(ctx.manifest.get(cfg)?, &ctx.manifest.root)?;
+    }
+    ctx.engine.take_stats();
+
+    let measure = |host_roundtrip: bool, name: &str| -> Result<Measured> {
+        ctx.engine.set_host_roundtrip(host_roundtrip);
+        ctx.engine.take_stats();
+        let t0 = Instant::now();
+        let mut d = RunDriver::new(ctx.trainer(), mk(name)?)?;
+        d.run_to_end()?;
+        let res = d.finish();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let stats = ctx.engine.take_stats();
+        ctx.engine.set_host_roundtrip(false);
+        Ok(Measured {
+            steps_per_sec: steps as f64 / wall_s.max(1e-9),
+            wall_s,
+            stats,
+            final_val_loss: res.final_val_loss,
+        })
+    };
+
+    let device = measure(false, "perf-device")?;
+    let baseline = measure(true, "perf-host-roundtrip")?;
+    let speedup = device.steps_per_sec / baseline.steps_per_sec.max(1e-9);
+
+    let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+    let mut table = Table::new(&[
+        "path",
+        "steps/sec",
+        "wall s",
+        "upload ms",
+        "execute ms",
+        "download ms",
+        "dispatches",
+        "final val loss",
+    ]);
+    for (name, m) in [("device-resident", &device), ("host-roundtrip baseline", &baseline)] {
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", m.steps_per_sec),
+            format!("{:.3}", m.wall_s),
+            format!("{:.1}", ms(m.stats.upload)),
+            format!("{:.1}", ms(m.stats.execute)),
+            format!("{:.1}", ms(m.stats.download)),
+            format!("{}", m.stats.dispatches),
+            format!("{:.4}", m.final_val_loss),
+        ]);
+    }
+    table.row(vec![
+        "speedup".into(),
+        format!("{speedup:.2}x"),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        if device.final_val_loss == baseline.final_val_loss { "bit-equal".into() } else { "DIVERGED".into() },
+    ]);
+    ctx.emit(target, &table)?;
+
+    let path_json = |m: &Measured| {
+        let mut o = BTreeMap::new();
+        o.insert("steps_per_sec".to_string(), Json::Num(m.steps_per_sec));
+        o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+        o.insert("upload_ms".to_string(), Json::Num(ms(m.stats.upload)));
+        o.insert("execute_ms".to_string(), Json::Num(ms(m.stats.execute)));
+        o.insert("download_ms".to_string(), Json::Num(ms(m.stats.download)));
+        o.insert("dispatches".to_string(), Json::Num(m.stats.dispatches as f64));
+        o.insert("final_val_loss".to_string(), Json::Num(m.final_val_loss as f64));
+        Json::Obj(o)
+    };
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("perf".to_string()));
+    top.insert("config".to_string(), Json::Str(format!("{SMALL}->{LARGE}")));
+    top.insert("steps".to_string(), Json::Num(steps as f64));
+    top.insert("tau".to_string(), Json::Num(tau as f64));
+    top.insert("seed".to_string(), Json::Num(ctx.seed as f64));
+    top.insert("device".to_string(), path_json(&device));
+    top.insert("host_roundtrip".to_string(), path_json(&baseline));
+    top.insert("speedup".to_string(), Json::Num(speedup));
+    top.insert(
+        "loss_bit_equal".to_string(),
+        Json::Bool(device.final_val_loss == baseline.final_val_loss),
+    );
+    let mut text = Json::Obj(top).to_string();
+    text.push('\n');
+    // Canonical perf-trajectory location (cwd = repo root), plus a copy
+    // under the bench output dir so `--out` collects everything.
+    std::fs::write("BENCH_perf.json", &text)?;
+    let dir = ctx.out_dir.join(target);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_perf.json"), &text)?;
+    println!("wrote BENCH_perf.json (speedup {speedup:.2}x device over host-roundtrip)");
+    Ok(())
+}

@@ -8,6 +8,13 @@
 //!   of loop state a [`crate::coordinator::RunDriver`] needs to resume
 //!   bit-exactly — step/stage position, data-stream counters, the FLOP
 //!   ledger, and the curve logged so far.
+//!
+//! Since the device-resident runtime (DESIGN.md §2), both artifact kinds are
+//! written from an explicitly *materialized* host [`ModelState`] — taking a
+//! snapshot is one of the few points where model state crosses back to the
+//! host ([`crate::runtime::DeviceState::to_host`]); resuming re-uploads it
+//! once. The byte format is unchanged: transport residency never alters
+//! tensor payloads (the equivalence suite asserts this bit-exactly).
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -183,7 +183,7 @@ impl RunBuilder {
         self
     }
 
-    /// Preconfigured single-stage run (the old `RunSpec::fixed` shape).
+    /// Preconfigured single-stage run.
     pub fn fixed(
         name: impl Into<String>,
         cfg_id: &str,
@@ -193,8 +193,8 @@ impl RunBuilder {
         RunBuilder::new(name).start(cfg_id).total_steps(total_steps).schedule(schedule)
     }
 
-    /// Preconfigured two-stage progressive run (the old `RunSpec::progressive`
-    /// shape): `small` until `tau`, then expand into `large`.
+    /// Preconfigured two-stage progressive run: `small` until `tau`, then
+    /// expand into `large`.
     pub fn progressive(
         name: impl Into<String>,
         small: &str,

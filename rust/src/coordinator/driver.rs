@@ -12,15 +12,27 @@
 //!   (see [`crate::data::Batcher::skip_windows`]);
 //! - **early-stopped probes**: callers advance a driver eval-by-eval and
 //!   stop when an external condition (curve mixing) is met;
-//! - **interleaved sweeps**: many drivers share one [`Engine`]'s compiled
-//!   executables and — via snapshot forking — one source-model training
-//!   segment ([`crate::coordinator::Sweep`]).
+//! - **interleaved sweeps**: many drivers share one
+//!   [`crate::runtime::Engine`]'s compiled executables and — via snapshot
+//!   forking — one source-model training segment
+//!   ([`crate::coordinator::Sweep`]).
+//!
+//! State residency: the model lives on the device. A stage's parameters and
+//! optimizer state are uploaded **once** (at stage entry, or at resume/fork)
+//! as a [`DeviceState`]; every dispatch threads the previous dispatch's
+//! output buffers straight back in, and the per-stage [`StageExec`] handle
+//! binds the lowered executables once. Host tensors exist only at the
+//! explicit materialization points: stage-boundary expansion / optimizer
+//! switch, [`RunDriver::snapshot`] (and the checkpoints built on it),
+//! [`RunDriver::state`], and the sweep's trunk fork. Because materializing
+//! now costs a device download, `snapshot()` and `state()` return `Result`.
 //!
 //! Dispatch granularity: the driver batches work into *dispatch units* — a
 //! fused `train_chunk` of `entry.chunk` steps when one fits before the next
 //! eval/boundary, single steps otherwise. Unit boundaries are a pure
 //! function of the step position (never of the `advance` budget), so any
-//! pause/resume sequence replays the exact same engine calls.
+//! pause/resume sequence replays the exact same engine calls. Batch staging
+//! reuses one scratch buffer pair across units (no per-unit allocation).
 
 use std::path::Path;
 
@@ -31,7 +43,8 @@ use crate::data::{Batcher, ImageGen};
 use crate::expansion::expand;
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
-use crate::runtime::{ConfigEntry, Engine, IntTensor, ModelState, Tensor};
+use crate::runtime::tensor::{literal_f32, literal_i32};
+use crate::runtime::{ConfigEntry, DeviceState, ModelState, StageExec, Tensor};
 
 use super::builder::{RunPlan, Transition};
 use super::observer::{
@@ -58,13 +71,33 @@ impl<'a> RunData<'a> {
     }
 }
 
+/// Where the model state currently lives. `Host` only between construction/
+/// resume/boundary and the next dispatch (which uploads once for the stage).
+enum StateSlot {
+    Host(ModelState),
+    Device(DeviceState),
+}
+
+/// Reusable batch staging buffers — cleared, refilled, and turned into
+/// literals each dispatch unit; never reallocated on the steady path.
+#[derive(Default)]
+struct BatchScratch {
+    x: Vec<i32>,
+    y: Vec<i32>,
+    img: Vec<f32>,
+    lbl: Vec<i32>,
+}
+
 /// Resumable state machine executing one [`RunPlan`].
 pub struct RunDriver<'a> {
     trainer: Trainer<'a>,
     plan: RunPlan,
     entry: &'a ConfigEntry,
-    state: ModelState,
+    state: StateSlot,
+    /// Per-stage executable bindings; rebound lazily after each boundary.
+    exec: Option<StageExec>,
     data: RunData<'a>,
+    scratch: BatchScratch,
     /// Seed the current token batchers were constructed with (reseeded
     /// deterministically at each stage boundary).
     data_seed: u64,
@@ -98,8 +131,10 @@ impl<'a> RunDriver<'a> {
         Ok(RunDriver {
             trainer,
             entry,
-            state,
+            state: StateSlot::Host(state),
+            exec: None,
             data,
+            scratch: BatchScratch::default(),
             data_seed,
             step: 0,
             stage_idx: 0,
@@ -116,7 +151,8 @@ impl<'a> RunDriver<'a> {
     /// Rebuild a driver from a snapshot, under the same plan (or a plan
     /// sharing its step/eval stream up to the snapshot point — the `Sweep`
     /// forks variants this way). The resumed run replays the identical
-    /// engine-call sequence an uninterrupted run would make.
+    /// engine-call sequence an uninterrupted run would make; its first
+    /// dispatch re-uploads the snapshot's host state once.
     pub fn resume(trainer: Trainer<'a>, plan: RunPlan, snap: DriverSnapshot) -> Result<RunDriver<'a>> {
         if snap.stage_idx >= plan.stages().len() {
             bail!(
@@ -172,8 +208,10 @@ impl<'a> RunDriver<'a> {
         Ok(RunDriver {
             trainer,
             entry,
-            state: snap.state,
+            state: StateSlot::Host(snap.state),
+            exec: None,
             data,
+            scratch: BatchScratch::default(),
             data_seed: snap.data_seed,
             step: snap.step,
             stage_idx: snap.stage_idx,
@@ -226,8 +264,15 @@ impl<'a> RunDriver<'a> {
         &self.ledger
     }
 
-    pub fn state(&self) -> &ModelState {
-        &self.state
+    /// Materialize the current model state to the host. Mid-run this costs
+    /// a device download of every tensor — call at boundaries of interest,
+    /// not per step.
+    pub fn state(&self) -> Result<ModelState> {
+        match &self.state {
+            StateSlot::Host(h) => Ok(h.clone()),
+            // Via the engine so the download lands in the dispatch stats.
+            StateSlot::Device(d) => self.trainer.engine.materialize(self.entry, d),
+        }
     }
 
     /// Request an early stop; the driver stops at the next dispatch-unit
@@ -236,14 +281,15 @@ impl<'a> RunDriver<'a> {
         self.stopped = true;
     }
 
-    /// Capture the full machine state (cheap relative to a dispatch: clones
-    /// host tensors only).
-    pub fn snapshot(&self) -> DriverSnapshot {
+    /// Capture the full machine state. With device-resident training state
+    /// this is the designated host-materialization point (one download per
+    /// tensor when mid-run on the device).
+    pub fn snapshot(&self) -> Result<DriverSnapshot> {
         let (train_windows, val_windows, image_samples) = match &self.data {
             RunData::Tokens { train, val } => (train.windows_drawn(), val.windows_drawn(), 0),
             RunData::Images(gen) => (0, 0, gen.samples_drawn()),
         };
-        DriverSnapshot {
+        Ok(DriverSnapshot {
             run_name: self.plan.name().to_string(),
             cfg_id: self.entry.cfg_id.clone(),
             step: self.step,
@@ -256,13 +302,13 @@ impl<'a> RunDriver<'a> {
             ledger: self.ledger.clone(),
             curve: self.log.curve().clone(),
             boundaries: self.log.boundaries().to_vec(),
-            state: self.state.clone(),
-        }
+            state: self.state()?,
+        })
     }
 
     /// Serialize [`RunDriver::snapshot`] to disk.
     pub fn save_snapshot(&self, path: &Path) -> Result<()> {
-        checkpoint::save_snapshot(path, &self.snapshot(), self.entry)
+        checkpoint::save_snapshot(path, &self.snapshot()?, self.entry)
     }
 
     /// Advance by roughly `budget` steps and return the number taken.
@@ -362,11 +408,17 @@ impl<'a> RunDriver<'a> {
         let pre = self.eval_loss()?;
         self.emit_eval(pre, EvalKind::PreBoundary, lr);
 
-        self.state = match transition {
-            Transition::Expand(spec) => expand(self.entry, next_entry, &self.state, &spec)?,
-            Transition::SwitchOptimizer => switch_optimizer(self.entry, next_entry, &self.state)?,
+        // Stage transition: the one mid-run host materialization — the
+        // expansion engine remaps host tensors; the new stage's first
+        // dispatch (the post-boundary eval below) uploads the result once.
+        let outgoing = self.state()?;
+        let incoming = match transition {
+            Transition::Expand(spec) => expand(self.entry, next_entry, &outgoing, &spec)?,
+            Transition::SwitchOptimizer => switch_optimizer(self.entry, next_entry, &outgoing)?,
             Transition::Init => bail!("internal: Init transition past stage 0"),
         };
+        self.state = StateSlot::Host(incoming);
+        self.exec = None;
         let from_cfg = self.entry.cfg_id.clone();
         self.entry = next_entry;
         self.stage_idx = next_idx;
@@ -502,94 +554,98 @@ impl<'a> RunDriver<'a> {
 
     // -------------------------------------------------------- engine bridge
 
-    fn chunk_steps(&mut self, lrs: &[f32]) -> Result<Vec<f32>> {
-        let engine: &Engine = self.trainer.engine;
-        let root = &self.trainer.manifest.root;
+    /// Upload the stage's state once; subsequent dispatches reuse the
+    /// buffers (the outputs of each dispatch become the next one's inputs).
+    fn ensure_device(&mut self) -> Result<()> {
+        if let StateSlot::Host(host) = &self.state {
+            let dev = self.trainer.engine.upload(self.entry, host)?;
+            self.state = StateSlot::Device(dev);
+        }
+        Ok(())
+    }
+
+    /// Bind the stage's executables once; rebound after each boundary.
+    fn ensure_exec(&mut self) -> Result<()> {
+        if self.exec.is_none() {
+            self.exec = Some(self.trainer.engine.bind_stage(self.entry, &self.trainer.manifest.root)?);
+        }
+        Ok(())
+    }
+
+    /// Stage the next `k` batches from the selected stream (train or
+    /// validation) into the reusable scratch buffers and return the
+    /// (data, targets) literals for one dispatch. `chunked` selects the
+    /// fused unit's layout ([K,B,...] — even for K = 1) versus the
+    /// single-step/eval layout ([B,...]). The one staging implementation
+    /// for both train and eval, so their layouts cannot drift apart.
+    fn stage_batches(
+        &mut self,
+        k: usize,
+        chunked: bool,
+        validation: bool,
+    ) -> Result<(xla::Literal, xla::Literal)> {
         let entry = self.entry;
-        let k = lrs.len();
         let b = entry.model.batch;
         match &mut self.data {
-            RunData::Tokens { train, .. } => {
+            RunData::Tokens { train, val } => {
+                let stream = if validation { val } else { train };
                 let s = entry.model.seq_len;
-                let mut xs = Vec::with_capacity(k * b * s);
-                let mut ys = Vec::with_capacity(k * b * s);
+                self.scratch.x.clear();
+                self.scratch.y.clear();
                 for _ in 0..k {
-                    let (x, y) = train.next_batch(b);
-                    xs.extend(x);
-                    ys.extend(y);
+                    stream.next_batch_into(b, &mut self.scratch.x, &mut self.scratch.y);
                 }
-                let xs = IntTensor::from_vec(&[k, b, s], xs)?;
-                let ys = IntTensor::from_vec(&[k, b, s], ys)?;
-                engine.train_chunk(entry, root, &mut self.state, &xs, &ys, lrs, None)
+                let chunk_shape = [k, b, s];
+                let step_shape = [b, s];
+                let shape: &[usize] = if chunked { &chunk_shape } else { &step_shape };
+                Ok((literal_i32(shape, &self.scratch.x)?, literal_i32(shape, &self.scratch.y)?))
             }
+            // Images: one generator serves both streams (fresh samples).
             RunData::Images(gen) => {
                 let px = entry.model.image_size;
-                let mut imgs = Vec::with_capacity(k * b * px * px * 3);
-                let mut labels = Vec::with_capacity(k * b);
+                self.scratch.img.clear();
+                self.scratch.lbl.clear();
                 for _ in 0..k {
-                    let (im, lb) = gen.next_batch(b);
-                    imgs.extend(im);
-                    labels.extend(lb);
+                    gen.next_batch_into(b, &mut self.scratch.img, &mut self.scratch.lbl);
                 }
-                let imgs = Tensor::from_vec(&[k, b, px, px, 3], imgs)?;
-                let ys = IntTensor::from_vec(&[k, b], labels)?;
-                // xs unused for images; pass ys twice via images-arg plumbing.
-                let dummy = IntTensor::from_vec(&[0], vec![])?;
-                engine.train_chunk(entry, root, &mut self.state, &dummy, &ys, lrs, Some(&imgs))
+                let (ishape, lshape): (Vec<usize>, Vec<usize>) = if chunked {
+                    (vec![k, b, px, px, 3], vec![k, b])
+                } else {
+                    (vec![b, px, px, 3], vec![b])
+                };
+                Ok((literal_f32(&ishape, &self.scratch.img)?, literal_i32(&lshape, &self.scratch.lbl)?))
             }
         }
+    }
+
+    fn chunk_steps(&mut self, lrs: &[f32]) -> Result<Vec<f32>> {
+        self.ensure_device()?;
+        self.ensure_exec()?;
+        let (data, ys) = self.stage_batches(lrs.len(), true, false)?;
+        let exec = self.exec.as_ref().expect("bound above");
+        let StateSlot::Device(dev) = &mut self.state else { unreachable!("uploaded above") };
+        self.trainer.engine.train_chunk_dev(exec, self.entry, dev, &data, &ys, lrs)
     }
 
     fn single_step(&mut self, lr: f32) -> Result<f32> {
-        let engine: &Engine = self.trainer.engine;
-        let root = &self.trainer.manifest.root;
-        let entry = self.entry;
-        let b = entry.model.batch;
-        match &mut self.data {
-            RunData::Tokens { train, .. } => {
-                let s = entry.model.seq_len;
-                let (x, y) = train.next_batch(b);
-                let x = IntTensor::from_vec(&[b, s], x)?;
-                let y = IntTensor::from_vec(&[b, s], y)?;
-                engine.train_step(entry, root, &mut self.state, &x, &y, lr, None)
-            }
-            RunData::Images(gen) => {
-                let px = entry.model.image_size;
-                let (im, lb) = gen.next_batch(b);
-                let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
-                let y = IntTensor::from_vec(&[b], lb)?;
-                let dummy = IntTensor::from_vec(&[0], vec![])?;
-                engine.train_step(entry, root, &mut self.state, &dummy, &y, lr, Some(&imgs))
-            }
-        }
+        self.ensure_device()?;
+        self.ensure_exec()?;
+        let (data, ys) = self.stage_batches(1, false, false)?;
+        let exec = self.exec.as_ref().expect("bound above");
+        let StateSlot::Device(dev) = &mut self.state else { unreachable!("uploaded above") };
+        self.trainer.engine.train_step_dev(exec, self.entry, dev, &data, &ys, lr)
     }
 
     fn eval_loss(&mut self) -> Result<f32> {
-        let engine: &Engine = self.trainer.engine;
-        let root = &self.trainer.manifest.root;
-        let entry = self.entry;
+        self.ensure_device()?;
+        self.ensure_exec()?;
         let batches = self.plan.eval_batches();
-        let b = entry.model.batch;
         let mut total = 0.0f64;
         for _ in 0..batches {
-            let loss = match &mut self.data {
-                RunData::Tokens { val, .. } => {
-                    let s = entry.model.seq_len;
-                    let (x, y) = val.next_batch(b);
-                    let x = IntTensor::from_vec(&[b, s], x)?;
-                    let y = IntTensor::from_vec(&[b, s], y)?;
-                    engine.eval_step(entry, root, &self.state, &x, &y, None)?
-                }
-                RunData::Images(gen) => {
-                    let px = entry.model.image_size;
-                    let (im, lb) = gen.next_batch(b);
-                    let imgs = Tensor::from_vec(&[b, px, px, 3], im)?;
-                    let y = IntTensor::from_vec(&[b], lb)?;
-                    let dummy = IntTensor::from_vec(&[0], vec![])?;
-                    engine.eval_step(entry, root, &self.state, &dummy, &y, Some(&imgs))?
-                }
-            };
-            total += loss as f64;
+            let (data, ys) = self.stage_batches(1, false, true)?;
+            let exec = self.exec.as_ref().expect("bound above");
+            let StateSlot::Device(dev) = &self.state else { unreachable!("uploaded above") };
+            total += self.trainer.engine.eval_step_dev(exec, self.entry, dev, &data, &ys)? as f64;
         }
         Ok((total / batches as f64) as f32)
     }

@@ -10,7 +10,9 @@
 //! - [`RunDriver`]: step-granular, resumable state machine executing one
 //!   plan — pause/checkpoint/resume bit-exactly, early-stop probes, and
 //!   interleave many runs via [`Sweep`], which trains shared source-model
-//!   segments once;
+//!   segments once. Model state stays device-resident across dispatches
+//!   ([`crate::runtime::DeviceState`]); the host sees it only at explicit
+//!   materialization points (DESIGN.md §2);
 //! - [`Observer`]: event hooks (`on_eval`, `on_boundary`, `on_chunk`,
 //!   `on_finish`) with built-ins for curve logging, spike detection,
 //!   periodic checkpointing, and progress printing.
@@ -18,9 +20,6 @@
 //! [`recipe`] implements the paper's §7 step 4 — estimating the mixing time
 //! from two *early-stopped* probe drivers and converting it into the
 //! expansion timing τ.
-//!
-//! The pre-v2 monolithic entry points ([`RunSpec`] and [`Trainer::run`])
-//! remain as thin deprecated shims over the builder/driver.
 
 pub mod builder;
 pub mod driver;
@@ -36,106 +35,12 @@ pub use observer::{
 };
 pub use sweep::{Sweep, SweepOutcome};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::expansion::ExpandSpec;
 use crate::flops::{flops_per_step, FlopLedger};
 use crate::metrics::Curve;
 use crate::runtime::{Engine, Manifest};
-use crate::schedule::Schedule;
-
-/// One stage of a (possibly multi-stage) progressive run (pre-v2 shape;
-/// new code should use [`RunBuilder`]).
-#[derive(Debug, Clone)]
-pub struct Stage {
-    pub cfg_id: String,
-    /// First step of this stage (stage 0 must start at 0).
-    pub from_step: usize,
-    /// Expansion settings applied when *entering* this stage (ignored for
-    /// stage 0).
-    pub expand: ExpandSpec,
-}
-
-/// Pre-v2 run specification, kept as a shim over [`RunBuilder`].
-#[derive(Debug, Clone)]
-pub struct RunSpec {
-    pub name: String,
-    pub stages: Vec<Stage>,
-    pub total_steps: usize,
-    pub schedule: Schedule,
-    pub eval_every: usize,
-    pub eval_batches: usize,
-    pub seed: u64,
-}
-
-impl RunSpec {
-    /// Single fixed-size run.
-    #[deprecated(note = "use RunBuilder::fixed(...).build()")]
-    pub fn fixed(name: impl Into<String>, cfg_id: &str, total_steps: usize, schedule: Schedule) -> RunSpec {
-        RunSpec {
-            name: name.into(),
-            stages: vec![Stage { cfg_id: cfg_id.into(), from_step: 0, expand: ExpandSpec::default() }],
-            total_steps,
-            schedule,
-            eval_every: (total_steps / 40).max(1),
-            eval_batches: 4,
-            seed: 17,
-        }
-    }
-
-    /// Single-stage progressive run: `small` until τ, then `large`.
-    #[deprecated(note = "use RunBuilder::progressive(...).build()")]
-    pub fn progressive(
-        name: impl Into<String>,
-        small: &str,
-        large: &str,
-        tau: usize,
-        total_steps: usize,
-        schedule: Schedule,
-        expand_spec: ExpandSpec,
-    ) -> RunSpec {
-        RunSpec {
-            name: name.into(),
-            stages: vec![
-                Stage { cfg_id: small.into(), from_step: 0, expand: ExpandSpec::default() },
-                Stage { cfg_id: large.into(), from_step: tau, expand: expand_spec },
-            ],
-            total_steps,
-            schedule,
-            eval_every: (total_steps / 40).max(1),
-            eval_batches: 4,
-            seed: 17,
-        }
-    }
-
-    /// Convert to a validated [`RunPlan`], reproducing the pre-v2 implicit
-    /// transition inference: a boundary between same-depth configs with
-    /// different optimizer kinds becomes an explicit optimizer switch
-    /// (new code should say [`RunBuilder::then_switch_optimizer_at`]).
-    pub fn to_plan(&self, manifest: &Manifest) -> Result<RunPlan> {
-        if self.stages.is_empty() || self.stages[0].from_step != 0 {
-            bail!("run needs a stage starting at step 0");
-        }
-        let mut b = RunBuilder::new(self.name.clone())
-            .start(self.stages[0].cfg_id.clone())
-            .total_steps(self.total_steps)
-            .schedule(self.schedule)
-            .eval_every(self.eval_every)
-            .eval_batches(self.eval_batches)
-            .seed(self.seed);
-        for w in self.stages.windows(2) {
-            let prev = manifest.get(&w[0].cfg_id)?;
-            let next = manifest.get(&w[1].cfg_id)?;
-            b = if next.opt_kind != prev.opt_kind && next.model.n_layer == prev.model.n_layer {
-                b.then_switch_optimizer_at(w[1].from_step, w[1].cfg_id.clone())
-            } else {
-                b.then_expand_at(w[1].from_step, w[1].cfg_id.clone(), w[1].expand)
-            };
-        }
-        b.build()
-    }
-}
 
 /// Result of a run: curve (one point per eval), ledger, and stage boundaries
 /// actually taken.
@@ -159,16 +64,6 @@ pub struct Trainer<'a> {
 impl<'a> Trainer<'a> {
     pub fn new(engine: &'a Engine, manifest: &'a Manifest, corpus: &'a Corpus) -> Trainer<'a> {
         Trainer { engine, manifest, corpus }
-    }
-
-    /// Pre-v2 monolithic entry point, now a shim: build the plan, drive it
-    /// to completion, collect the result.
-    #[deprecated(note = "use RunDriver::new(trainer, plan) + run_to_end() + finish()")]
-    pub fn run(&self, spec: &RunSpec) -> Result<RunResult> {
-        let plan = spec.to_plan(self.manifest)?;
-        let mut driver = RunDriver::new(*self, plan)?;
-        driver.run_to_end()?;
-        Ok(driver.finish())
     }
 
     /// FLOPs a fixed-size run of `cfg_id` would cost over `steps`.

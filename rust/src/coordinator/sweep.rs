@@ -7,7 +7,10 @@
 //! and seed — see [`RunPlan::prefix_key`] — plus the same boundary step),
 //! trains that shared trunk **once**, forks each variant from the trunk's
 //! in-memory snapshot, and interleaves the forked drivers over one engine so
-//! compiled-executable cache hits are shared too.
+//! compiled-executable cache hits are shared too. The trunk's device-resident
+//! state is materialized to the host exactly once (the snapshot); each forked
+//! variant re-uploads it once at its first dispatch and stays device-resident
+//! from there.
 //!
 //! Per-run accounting stays exact: every [`RunResult`]'s ledger includes the
 //! shared prefix (what the run *represents*); [`SweepOutcome::executed_flops`]
@@ -98,7 +101,7 @@ impl<'a> Sweep<'a> {
                     fork_step
                 );
             }
-            let snap = trunk.snapshot();
+            let snap = trunk.snapshot()?;
             let trunk_flops = snap.ledger.total;
             executed_flops += trunk_flops;
             shared_flops += trunk_flops * (idxs.len() - 1) as f64;

@@ -182,12 +182,22 @@ impl<'a> Batcher<'a> {
     pub fn next_batch(&mut self, batch: usize) -> (Vec<i32>, Vec<i32>) {
         let mut xs = Vec::with_capacity(batch * self.seq_len);
         let mut ys = Vec::with_capacity(batch * self.seq_len);
+        self.next_batch_into(batch, &mut xs, &mut ys);
+        (xs, ys)
+    }
+
+    /// Append a [B, S] batch to caller-owned scratch vectors (the dispatch
+    /// hot path reuses one pair across units instead of allocating two fresh
+    /// `Vec`s per dispatch). Appends — the caller clears between units, and
+    /// chunked dispatches accumulate K batches into one [K, B, S] buffer.
+    pub fn next_batch_into(&mut self, batch: usize, xs: &mut Vec<i32>, ys: &mut Vec<i32>) {
+        xs.reserve(batch * self.seq_len);
+        ys.reserve(batch * self.seq_len);
         for _ in 0..batch {
             let (x, y) = self.next_window();
             xs.extend_from_slice(x);
             ys.extend_from_slice(y);
         }
-        (xs, ys)
     }
 }
 
@@ -279,6 +289,30 @@ mod tests {
         }
         c2.skip_windows(n + 3);
         assert_eq!(c1.next_window(), c2.next_window());
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch_and_appends() {
+        let c = tiny();
+        let mut a = Batcher::new(&c.train, 16, 7);
+        let mut b = Batcher::new(&c.train, 16, 7);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..3 {
+            let (x1, y1) = a.next_batch(4);
+            xs.clear();
+            ys.clear();
+            b.next_batch_into(4, &mut xs, &mut ys);
+            assert_eq!(x1, xs);
+            assert_eq!(y1, ys);
+        }
+        // Append semantics: K calls accumulate one [K, B, S] chunk buffer.
+        xs.clear();
+        ys.clear();
+        b.next_batch_into(2, &mut xs, &mut ys);
+        b.next_batch_into(2, &mut xs, &mut ys);
+        assert_eq!(xs.len(), 4 * 16);
+        assert_eq!(ys.len(), 4 * 16);
     }
 
     #[test]

@@ -72,6 +72,17 @@ impl ImageGen {
         let px = self.size * self.size * 3;
         let mut imgs = Vec::with_capacity(batch * px);
         let mut labels = Vec::with_capacity(batch);
+        self.next_batch_into(batch, &mut imgs, &mut labels);
+        (imgs, labels)
+    }
+
+    /// Append a batch to caller-owned scratch vectors (zero-alloc dispatch
+    /// path — see [`crate::data::Batcher::next_batch_into`]). Appends; the
+    /// caller clears between dispatch units.
+    pub fn next_batch_into(&mut self, batch: usize, imgs: &mut Vec<f32>, labels: &mut Vec<i32>) {
+        let px = self.size * self.size * 3;
+        imgs.reserve(batch * px);
+        labels.reserve(batch);
         for _ in 0..batch {
             let c = self.rng.below(self.n_classes);
             labels.push(c as i32);
@@ -81,7 +92,6 @@ impl ImageGen {
             }
         }
         self.drawn += batch as u64;
-        (imgs, labels)
     }
 }
 
@@ -108,6 +118,23 @@ mod tests {
         b.skip_samples(20);
         assert_eq!(a.samples_drawn(), b.samples_drawn());
         assert_eq!(a.next_batch(4), b.next_batch(4));
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let mut a = ImageGen::new(10, 8, 0.3, 1);
+        let mut b = ImageGen::new(10, 8, 0.3, 1);
+        let mut imgs = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..3 {
+            let (i1, l1) = a.next_batch(4);
+            imgs.clear();
+            labels.clear();
+            b.next_batch_into(4, &mut imgs, &mut labels);
+            assert_eq!(i1, imgs);
+            assert_eq!(l1, labels);
+        }
+        assert_eq!(a.samples_drawn(), b.samples_drawn());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!   probe-mixing <small> <large> [--probe-steps N] [--steps N]
 //!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
 //!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
-//!   bench-<target>  (fig1..fig22, table1, table2, theory, all)
+//!   bench-<target>  (fig1..fig22, table1, table2, theory, perf, all)
 //!   list / list-benches / inspect <cfg_id>
 //!
 //! Flags accept `--name value` and `--name=value`; unknown flags are
@@ -393,6 +393,8 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
   bench-fig1 .. bench-fig22         reproduce each paper figure
   bench-table1 bench-table2         reproduce the paper tables
   bench-theory                      §4 bound verification
+  bench-perf                        dispatch-overhead benchmark: device-resident
+                                    vs host-roundtrip steps/sec (BENCH_perf.json)
   bench-all                         everything
   list | list-benches | inspect <cfg_id>
 

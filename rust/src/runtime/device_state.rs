@@ -1,0 +1,126 @@
+//! Device-resident model state and per-stage executable bindings.
+//!
+//! Pre-refactor, every dispatch serialized the full parameter + optimizer
+//! state from host `Vec<f32>`s into fresh literals, uploaded them, then
+//! re-materialized the whole output tuple back into host vectors — the
+//! dominant wall-clock cost of the harness (dispatch overhead, not model
+//! FLOPs). [`DeviceState`] inverts the ownership: params/opt live as PJRT
+//! device buffers for the lifetime of a stage, the outputs of dispatch N
+//! feed dispatch N+1 without ever being parsed into host tensors, and a
+//! host [`ModelState`] exists only when explicitly materialized via
+//! [`DeviceState::to_host`] (stage-boundary expansion, driver snapshots,
+//! sweep trunk forks — see the DESIGN.md §2 host-touch table).
+//!
+//! [`StageExec`] is the companion dispatch handle: the four lowered
+//! functions of one config (train / train_chunkK / eval / probe) resolved
+//! through the compile cache **once** at stage entry, replacing the
+//! per-dispatch `format!` + path join + cache probe.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::ModelState;
+use super::manifest::ConfigEntry;
+use super::tensor::Tensor;
+
+/// Model + optimizer state held as PJRT device buffers, ordered exactly as
+/// the manifest's layouts. Created by [`super::Engine::upload`]; updated in
+/// place by the engine's `*_dev` dispatches; read back with [`to_host`].
+///
+/// [`to_host`]: DeviceState::to_host
+pub struct DeviceState {
+    pub(crate) cfg_id: String,
+    pub(crate) params: Vec<xla::PjRtBuffer>,
+    pub(crate) opt: Vec<xla::PjRtBuffer>,
+    /// Host copy of the state, maintained ONLY under the engine's
+    /// host-roundtrip reference mode so eval/probe dispatches can replicate
+    /// the pre-refactor per-call param upload without an extra download.
+    /// `None` on the real device-resident path.
+    pub(crate) host_mirror: Option<ModelState>,
+}
+
+impl DeviceState {
+    /// Config this state was uploaded for.
+    pub fn cfg_id(&self) -> &str {
+        &self.cfg_id
+    }
+
+    /// Guard against dispatching one config's buffers through another
+    /// config's executables (the layouts would silently misalign).
+    pub(crate) fn check_cfg(&self, entry: &ConfigEntry) -> Result<()> {
+        if self.cfg_id != entry.cfg_id {
+            bail!(
+                "device state holds config '{}' but the dispatch is for '{}'",
+                self.cfg_id,
+                entry.cfg_id
+            );
+        }
+        Ok(())
+    }
+
+    /// Explicit host materialization: download every buffer into a host
+    /// [`ModelState`] (one copy per tensor, no revalidation pass). This is
+    /// the *only* device→host path for model state; callers are the
+    /// stage-boundary transition, driver snapshots/checkpoints, sweep trunk
+    /// forks, and end-of-run state readers.
+    pub fn to_host(&self, entry: &ConfigEntry) -> Result<ModelState> {
+        self.check_cfg(entry)?;
+        let params = self
+            .params
+            .iter()
+            .zip(&entry.params)
+            .map(|(buf, spec)| Tensor::from_literal(&buf.to_literal_sync()?, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let opt = self
+            .opt
+            .iter()
+            .zip(&entry.opt_state)
+            .map(|(buf, spec)| Tensor::from_literal(&buf.to_literal_sync()?, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelState { params, opt })
+    }
+}
+
+/// Lowered functions of one config, resolved through the compile cache once
+/// per binding. Callers bind only what they dispatch (the driver: train /
+/// chunk / eval; one-shot tools: a single function), so unbound or absent
+/// artifacts surface as errors only when actually dispatched.
+pub struct StageExec {
+    pub(crate) cfg_id: String,
+    pub(crate) train: Option<Rc<xla::PjRtLoadedExecutable>>,
+    /// The fused `train_chunk{K}` unit for this config's K.
+    pub(crate) chunk: Option<Rc<xla::PjRtLoadedExecutable>>,
+    pub(crate) eval: Option<Rc<xla::PjRtLoadedExecutable>>,
+    pub(crate) probe: Option<Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl StageExec {
+    pub fn cfg_id(&self) -> &str {
+        &self.cfg_id
+    }
+
+    pub(crate) fn train(&self) -> Result<&xla::PjRtLoadedExecutable> {
+        self.train
+            .as_deref()
+            .ok_or_else(|| anyhow!("config {} has no 'train' artifact", self.cfg_id))
+    }
+
+    pub(crate) fn chunk(&self) -> Result<&xla::PjRtLoadedExecutable> {
+        self.chunk
+            .as_deref()
+            .ok_or_else(|| anyhow!("config {} has no fused train_chunk artifact", self.cfg_id))
+    }
+
+    pub(crate) fn eval(&self) -> Result<&xla::PjRtLoadedExecutable> {
+        self.eval
+            .as_deref()
+            .ok_or_else(|| anyhow!("config {} has no 'eval' artifact", self.cfg_id))
+    }
+
+    pub(crate) fn probe(&self) -> Result<&xla::PjRtLoadedExecutable> {
+        self.probe
+            .as_deref()
+            .ok_or_else(|| anyhow!("config {} has no 'probe' artifact", self.cfg_id))
+    }
+}

@@ -1,29 +1,48 @@
 //! PJRT execution engine: loads HLO-text artifacts, compiles them once per
-//! process (keyed cache), and dispatches train/eval/probe steps.
+//! process (keyed cache), and dispatches train/eval/probe steps over
+//! device-resident state.
 //!
-//! Execution contract (see python/compile/aot.py):
+//! Execution contract (see python/compile/aot.py and DESIGN.md §2):
 //!   train:       [*params, *opt, x, y, lr]        -> tuple(params', opt', loss)
 //!   train_chunkK:[*params, *opt, xs, ys, lrs]     -> tuple(params', opt', losses[K])
 //!   eval:        [*params, x, y]                  -> tuple(loss)
 //!   probe:       [*params, x, y]                  -> tuple(loss, grad_norms, act_rms)
 //!
-//! Multi-output executables return ONE tuple buffer on this PJRT build, so
-//! each dispatch downloads the tuple literal, decomposes it, and re-uploads
-//! next call. The fused train_chunk artifact amortizes that round-trip K-fold
-//! — it is the hot-path dispatch unit (EXPERIMENTS.md §Perf).
+//! The hot path is the `*_dev` family: params/opt stay on the device as a
+//! [`DeviceState`], each dispatch uploads only the batch operands, and the
+//! output tuple's state elements are threaded straight back into the device
+//! buffers for the next dispatch — never parsed into host `Vec<f32>`s.
+//! (Multi-output executables return ONE tuple buffer on this PJRT build, so
+//! the tuple literal itself is downloaded and decomposed; what the refactor
+//! eliminates is every host-tensor materialization and per-dispatch state
+//! upload around it, and eval/probe dispatches now move no state at all.)
+//! The fused train_chunk artifact still amortizes the per-dispatch fixed
+//! cost K-fold and remains the dispatch unit (EXPERIMENTS.md §Perf).
+//!
+//! The host-signature methods ([`Engine::train_step`] & co.) are retained as
+//! the *reference path*: upload → dispatch → materialize on every call.
+//! `set_host_roundtrip(true)` forces the dev path itself to round-trip state
+//! through the host between units, which is how `bench-perf` measures the
+//! pre-refactor baseline and how the equivalence test proves the device
+//! path is a pure transport optimization (bit-identical curves).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::device_state::{DeviceState, StageExec};
 use super::manifest::{ConfigEntry, InitKind};
-use super::tensor::{IntTensor, Tensor};
+use super::tensor::{self, IntTensor, Tensor};
 use crate::util::rng::Rng;
 
-/// Model + optimizer state, ordered exactly as the manifest's layouts.
+/// Model + optimizer state on the host, ordered exactly as the manifest's
+/// layouts. Since the device-resident refactor this is a *materialization*:
+/// the hot path holds a [`DeviceState`] and produces a `ModelState` only at
+/// the explicit host-touch points (DESIGN.md §2).
 #[derive(Debug, Clone)]
 pub struct ModelState {
     pub params: Vec<Tensor>,
@@ -56,14 +75,33 @@ impl ModelState {
     }
 }
 
+/// Cumulative wall-clock breakdown of dispatch work, split into the three
+/// transport/compute phases `bench-perf` reports. `upload` covers batch
+/// staging, state uploads, and output-state threading; `execute` the PJRT
+/// execution itself; `download` output-tuple and materialization downloads.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchStats {
+    pub dispatches: u64,
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+}
+
 pub struct Engine {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: Cell<DispatchStats>,
+    host_roundtrip: Cell<bool>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu()?, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+            stats: Cell::new(DispatchStats::default()),
+            host_roundtrip: Cell::new(false),
+        })
     }
 
     /// Compile-or-fetch an executable for an artifact path.
@@ -81,14 +119,378 @@ impl Engine {
         Ok(exe)
     }
 
-    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let out = exe.execute::<xla::Literal>(args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    /// Bind the lowered functions a [`crate::coordinator::RunDriver`] stage
+    /// dispatches (train, the fused chunk, eval) through the compile cache —
+    /// once per stage entry, instead of a name format + path join + cache
+    /// probe on every dispatch. Absent artifacts stay `None` and error only
+    /// if that function is dispatched. The probe is deliberately excluded:
+    /// the driver never dispatches it, and compiling it per stage would be
+    /// pure waste (one-shot probe tools bind it separately).
+    pub fn bind_stage(&self, entry: &ConfigEntry, root: &Path) -> Result<StageExec> {
+        self.bind_fns(entry, root, &["train", "chunk", "eval"])
     }
 
-    /// One fused K-step dispatch. `xs`/`ys` are [K,B,S] (or [K,B,...] for
-    /// resnet), `lrs` has K entries. Returns the K per-micro-step losses.
+    /// Bind only the named functions ("train" | "chunk" | "eval" | "probe"),
+    /// so one-shot tools don't compile graphs they never run.
+    fn bind_fns(&self, entry: &ConfigEntry, root: &Path, wanted: &[&str]) -> Result<StageExec> {
+        let want = |n: &str| wanted.iter().any(|&w| w == n);
+        let get = |func: &str| -> Result<Option<Rc<xla::PjRtLoadedExecutable>>> {
+            if entry.artifacts.contains_key(func) {
+                Ok(Some(self.load(&entry.artifact_path(root, func)?)?))
+            } else {
+                Ok(None)
+            }
+        };
+        Ok(StageExec {
+            cfg_id: entry.cfg_id.clone(),
+            train: if want("train") { get("train")? } else { None },
+            chunk: if want("chunk") { get(&format!("train_chunk{}", entry.chunk))? } else { None },
+            eval: if want("eval") { get("eval")? } else { None },
+            probe: if want("probe") { get("probe")? } else { None },
+        })
+    }
+
+    // ------------------------------------------------------- state transport
+
+    /// Upload a host state into device buffers — once per stage (or per
+    /// sweep-fork / resume), not per dispatch.
+    pub fn upload(&self, entry: &ConfigEntry, host: &ModelState) -> Result<DeviceState> {
+        if host.params.len() != entry.params.len() || host.opt.len() != entry.opt_state.len() {
+            bail!(
+                "state layout ({} params, {} opt) does not match config '{}' ({}, {})",
+                host.params.len(),
+                host.opt.len(),
+                entry.cfg_id,
+                entry.params.len(),
+                entry.opt_state.len()
+            );
+        }
+        let params = self.upload_params(&host.params)?;
+        let t0 = Instant::now();
+        let opt = host.opt.iter().map(|t| self.tensor_to_device(t)).collect::<Result<Vec<_>>>()?;
+        self.note(|s| s.upload += t0.elapsed());
+        // Under the host-roundtrip reference mode, keep a host mirror so
+        // read-only dispatches can pay the pre-refactor per-call param
+        // upload without an extra (anachronistic) download first.
+        let host_mirror = if self.host_roundtrip.get() { Some(host.clone()) } else { None };
+        Ok(DeviceState { cfg_id: entry.cfg_id.clone(), params, opt, host_mirror })
+    }
+
+    /// Upload host parameter tensors only (eval/probe executables take no
+    /// optimizer state).
+    fn upload_params(&self, params: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let bufs = params.iter().map(|t| self.tensor_to_device(t)).collect::<Result<Vec<_>>>()?;
+        self.note(|s| s.upload += t0.elapsed());
+        Ok(bufs)
+    }
+
+    /// Timed host materialization (see [`DeviceState::to_host`]).
+    pub fn materialize(&self, entry: &ConfigEntry, state: &DeviceState) -> Result<ModelState> {
+        let t0 = Instant::now();
+        let host = state.to_host(entry)?;
+        self.note(|s| s.download += t0.elapsed());
+        Ok(host)
+    }
+
+    /// Snapshot-and-reset the dispatch breakdown counters.
+    pub fn take_stats(&self) -> DispatchStats {
+        self.stats.take()
+    }
+
+    pub fn stats(&self) -> DispatchStats {
+        self.stats.get()
+    }
+
+    /// Instrumentation toggle replicating the pre-refactor transport: train
+    /// dispatches materialize the device state to host tensors and re-upload
+    /// them after every unit, and eval/probe dispatches re-upload every
+    /// param from the host mirror on every call (the old per-eval
+    /// serialization). Tensor bytes are unchanged either way — used by
+    /// `bench-perf` as the baseline and by the equivalence test.
+    pub fn set_host_roundtrip(&self, on: bool) {
+        self.host_roundtrip.set(on);
+    }
+
+    pub fn host_roundtrip(&self) -> bool {
+        self.host_roundtrip.get()
+    }
+
+    fn note(&self, f: impl FnOnce(&mut DispatchStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
+    }
+
+    fn tensor_to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.literal_to_device(&t.to_literal()?)
+    }
+
+    fn literal_to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        // Trailing optional device selects the default (sole) CPU device.
+        Ok(self.client.buffer_from_host_literal(lit, None)?)
+    }
+
+    /// Execute over device buffers and download + decompose the single
+    /// output tuple this PJRT build returns.
+    fn dispatch(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+        n_outputs: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let out = exe.execute_b(args)?;
+        self.note(|s| {
+            s.dispatches += 1;
+            s.execute += t0.elapsed();
+        });
+        if out.is_empty() || out[0].is_empty() {
+            bail!("execution produced no output buffers");
+        }
+        let t1 = Instant::now();
+        let lit = out[0][0].to_literal_sync()?;
+        let elems = lit.to_tuple()?;
+        self.note(|s| s.download += t1.elapsed());
+        if elems.len() != n_outputs {
+            bail!("artifact returned {} outputs, expected {n_outputs}", elems.len());
+        }
+        Ok(elems)
+    }
+
+    /// Thread the output tuple's state elements back into the device buffers
+    /// (literal → buffer, no host-tensor materialization) and return the
+    /// non-state tail element. Element counts are validated against the
+    /// manifest layout per dispatch (cheap: one product per tensor), so a
+    /// stale manifest vs regenerated artifacts fails on the first train
+    /// dispatch instead of corrupting a long run.
+    fn absorb_state(
+        &self,
+        entry: &ConfigEntry,
+        state: &mut DeviceState,
+        mut elems: Vec<xla::Literal>,
+    ) -> Result<xla::Literal> {
+        let np = entry.params.len();
+        debug_assert_eq!(elems.len(), np + entry.opt_state.len() + 1);
+        let tail = elems.pop().expect("dispatch validated the output arity");
+        let shapes = entry.params.iter().map(|p| &p.shape).chain(entry.opt_state.iter().map(|o| &o.shape));
+        for (lit, shape) in elems.iter().zip(shapes) {
+            let want: usize = shape.iter().product::<usize>().max(1);
+            if lit.element_count() != want {
+                bail!(
+                    "artifact state output has {} elements, manifest shape {:?} wants {} (stale artifacts?)",
+                    lit.element_count(),
+                    shape,
+                    want
+                );
+            }
+        }
+        if self.host_roundtrip.get() {
+            // Reference mode: reproduce the pre-refactor transport exactly —
+            // parse every state element into host tensors (download bucket),
+            // then re-upload from the host for the next dispatch. The host
+            // copy becomes the mirror (no extra clone).
+            let t0 = Instant::now();
+            let params = elems[..np]
+                .iter()
+                .zip(&entry.params)
+                .map(|(lit, spec)| Tensor::from_literal(lit, &spec.shape))
+                .collect::<Result<Vec<_>>>()?;
+            let opt = elems[np..]
+                .iter()
+                .zip(&entry.opt_state)
+                .map(|(lit, spec)| Tensor::from_literal(lit, &spec.shape))
+                .collect::<Result<Vec<_>>>()?;
+            self.note(|s| s.download += t0.elapsed());
+            let host = ModelState { params, opt };
+            let params_b = self.upload_params(&host.params)?;
+            let t1 = Instant::now();
+            let opt_b = host.opt.iter().map(|t| self.tensor_to_device(t)).collect::<Result<Vec<_>>>()?;
+            self.note(|s| s.upload += t1.elapsed());
+            *state = DeviceState {
+                cfg_id: entry.cfg_id.clone(),
+                params: params_b,
+                opt: opt_b,
+                host_mirror: Some(host),
+            };
+            return Ok(tail);
+        }
+        let t0 = Instant::now();
+        for (i, lit) in elems.iter().enumerate() {
+            let buf = self.literal_to_device(lit)?;
+            if i < np {
+                state.params[i] = buf;
+            } else {
+                state.opt[i - np] = buf;
+            }
+        }
+        self.note(|s| s.upload += t0.elapsed());
+        Ok(tail)
+    }
+
+    /// Param buffers for a read-only dispatch: the resident buffers on the
+    /// real path; under host-roundtrip reference mode, a fresh per-call
+    /// upload from the host mirror — the pre-refactor eval transport.
+    /// `fresh` is caller-owned storage keeping the temporary buffers alive.
+    fn eval_params<'s>(
+        &self,
+        entry: &ConfigEntry,
+        state: &'s DeviceState,
+        fresh: &'s mut Option<Vec<xla::PjRtBuffer>>,
+    ) -> Result<&'s [xla::PjRtBuffer]> {
+        if !self.host_roundtrip.get() {
+            return Ok(&state.params);
+        }
+        let materialized;
+        let host: &ModelState = match &state.host_mirror {
+            Some(m) => m,
+            None => {
+                materialized = self.materialize(entry, state)?;
+                &materialized
+            }
+        };
+        *fresh = Some(self.upload_params(&host.params)?);
+        Ok(fresh.as_deref().expect("assigned above"))
+    }
+
+    // ------------------------------------------------- device-resident path
+
+    /// One fused K-step dispatch over device-resident state. `data` is the
+    /// xs literal [K,B,S] (or images [K,B,H,W,3] for resnet), `ys` the
+    /// targets, `lrs` one LR per micro-step. Returns the K per-step losses.
+    pub fn train_chunk_dev(
+        &self,
+        exec: &StageExec,
+        entry: &ConfigEntry,
+        state: &mut DeviceState,
+        data: &xla::Literal,
+        ys: &xla::Literal,
+        lrs: &[f32],
+    ) -> Result<Vec<f32>> {
+        state.check_cfg(entry)?;
+        let exe = exec.chunk()?;
+        let t0 = Instant::now();
+        let data_b = self.literal_to_device(data)?;
+        let ys_b = self.literal_to_device(ys)?;
+        let lrs_b = self.literal_to_device(&tensor::literal_f32(&[lrs.len()], lrs)?)?;
+        self.note(|s| s.upload += t0.elapsed());
+        let n = entry.params.len() + entry.opt_state.len();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n + 3);
+        args.extend(state.params.iter());
+        args.extend(state.opt.iter());
+        args.push(&data_b);
+        args.push(&ys_b);
+        args.push(&lrs_b);
+        let elems = self.dispatch(exe, &args, n + 1)?;
+        drop(args);
+        let losses = self.absorb_state(entry, state, elems)?;
+        losses.to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// One single-step dispatch over device-resident state (ablations that
+    /// need per-step control the chunk unit can't express).
+    pub fn train_step_dev(
+        &self,
+        exec: &StageExec,
+        entry: &ConfigEntry,
+        state: &mut DeviceState,
+        data: &xla::Literal,
+        ys: &xla::Literal,
+        lr: f32,
+    ) -> Result<f32> {
+        state.check_cfg(entry)?;
+        let exe = exec.train()?;
+        let t0 = Instant::now();
+        let data_b = self.literal_to_device(data)?;
+        let ys_b = self.literal_to_device(ys)?;
+        let lr_b = self.literal_to_device(&tensor::literal_f32(&[], &[lr])?)?;
+        self.note(|s| s.upload += t0.elapsed());
+        let n = entry.params.len() + entry.opt_state.len();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n + 3);
+        args.extend(state.params.iter());
+        args.extend(state.opt.iter());
+        args.push(&data_b);
+        args.push(&ys_b);
+        args.push(&lr_b);
+        let elems = self.dispatch(exe, &args, n + 1)?;
+        drop(args);
+        let loss = self.absorb_state(entry, state, elems)?;
+        loss.to_vec::<f32>()?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("train step returned an empty loss"))
+    }
+
+    /// Validation loss on one batch — no state moves at all: params are
+    /// already device-resident from the training dispatches.
+    pub fn eval_step_dev(
+        &self,
+        exec: &StageExec,
+        entry: &ConfigEntry,
+        state: &DeviceState,
+        data: &xla::Literal,
+        ys: &xla::Literal,
+    ) -> Result<f32> {
+        state.check_cfg(entry)?;
+        let exe = exec.eval()?;
+        let mut fresh = None;
+        let params = self.eval_params(entry, state, &mut fresh)?;
+        let t0 = Instant::now();
+        let data_b = self.literal_to_device(data)?;
+        let ys_b = self.literal_to_device(ys)?;
+        self.note(|s| s.upload += t0.elapsed());
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
+        args.extend(params.iter());
+        args.push(&data_b);
+        args.push(&ys_b);
+        let elems = self.dispatch(exe, &args, 1)?;
+        elems[0]
+            .to_vec::<f32>()?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("eval returned an empty loss"))
+    }
+
+    /// Table-1 probe over device-resident params:
+    /// (loss, per-group grad norms, per-layer activation RMS).
+    pub fn probe_dev(
+        &self,
+        exec: &StageExec,
+        entry: &ConfigEntry,
+        state: &DeviceState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        state.check_cfg(entry)?;
+        let exe = exec.probe()?;
+        let mut fresh = None;
+        let params = self.eval_params(entry, state, &mut fresh)?;
+        let t0 = Instant::now();
+        let x_b = self.literal_to_device(x)?;
+        let y_b = self.literal_to_device(y)?;
+        self.note(|s| s.upload += t0.elapsed());
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
+        args.extend(params.iter());
+        args.push(&x_b);
+        args.push(&y_b);
+        let elems = self.dispatch(exe, &args, 3)?;
+        Ok((
+            elems[0]
+                .to_vec::<f32>()?
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("probe returned an empty loss"))?,
+            elems[1].to_vec::<f32>()?,
+            elems[2].to_vec::<f32>()?,
+        ))
+    }
+
+    // -------------------------------------------- host-signature reference
+
+    /// Host-path reference for one fused chunk: upload, dispatch, and
+    /// materialize back — every call. Kept for one-shot tools and as the
+    /// host-materialize-every-unit baseline; the driver uses
+    /// [`Engine::train_chunk_dev`].
     pub fn train_chunk(
         &self,
         entry: &ConfigEntry,
@@ -99,26 +501,18 @@ impl Engine {
         lrs: &[f32],
         images: Option<&Tensor>,
     ) -> Result<Vec<f32>> {
-        let func = format!("train_chunk{}", entry.chunk);
-        let exe = self.load(&entry.artifact_path(root, &func)?)?;
-        let mut args = Vec::with_capacity(state.params.len() + state.opt.len() + 3);
-        for t in state.params.iter().chain(state.opt.iter()) {
-            args.push(t.to_literal()?);
-        }
-        match images {
-            Some(img) => args.push(img.to_literal()?),
-            None => args.push(xs.to_literal()?),
-        }
-        args.push(ys.to_literal()?);
-        args.push(Tensor::from_vec(&[lrs.len()], lrs.to_vec())?.to_literal()?);
-        let outs = self.run(&exe, &args)?;
-        self.unpack_state(entry, state, &outs)?;
-        let losses = outs.last().unwrap().to_vec::<f32>()?;
+        let exec = self.bind_fns(entry, root, &["chunk"])?;
+        let mut dev = self.upload(entry, state)?;
+        let data = match images {
+            Some(img) => img.to_literal()?,
+            None => xs.to_literal()?,
+        };
+        let losses = self.train_chunk_dev(&exec, entry, &mut dev, &data, &ys.to_literal()?, lrs)?;
+        *state = self.materialize(entry, &dev)?;
         Ok(losses)
     }
 
-    /// One single-step dispatch (used by ablations that need per-step control
-    /// the chunk unit can't express, e.g. optimizer switching mid-chunk).
+    /// Host-path reference for one single step (see [`Engine::train_chunk`]).
     pub fn train_step(
         &self,
         entry: &ConfigEntry,
@@ -129,38 +523,37 @@ impl Engine {
         lr: f32,
         images: Option<&Tensor>,
     ) -> Result<f32> {
-        let exe = self.load(&entry.artifact_path(root, "train")?)?;
-        let mut args = Vec::with_capacity(state.params.len() + state.opt.len() + 3);
-        for t in state.params.iter().chain(state.opt.iter()) {
-            args.push(t.to_literal()?);
-        }
-        match images {
-            Some(img) => args.push(img.to_literal()?),
-            None => args.push(x.to_literal()?),
-        }
-        args.push(y.to_literal()?);
-        args.push(Tensor::scalar(lr).to_literal()?);
-        let outs = self.run(&exe, &args)?;
-        self.unpack_state(entry, state, &outs)?;
-        outs.last().unwrap().to_vec::<f32>().map(|v| v[0]).map_err(Into::into)
+        let exec = self.bind_fns(entry, root, &["train"])?;
+        let mut dev = self.upload(entry, state)?;
+        let data = match images {
+            Some(img) => img.to_literal()?,
+            None => x.to_literal()?,
+        };
+        let loss = self.train_step_dev(&exec, entry, &mut dev, &data, &y.to_literal()?, lr)?;
+        *state = self.materialize(entry, &dev)?;
+        Ok(loss)
     }
 
-    fn unpack_state(&self, entry: &ConfigEntry, state: &mut ModelState, outs: &[xla::Literal]) -> Result<()> {
-        let np = state.params.len();
-        let no = state.opt.len();
-        if outs.len() != np + no + 1 {
-            bail!("artifact returned {} outputs, expected {}", outs.len(), np + no + 1);
+    /// Params-only device view for one-shot eval/probe tools (those
+    /// executables take no optimizer state, so none is uploaded).
+    fn upload_for_readonly(&self, entry: &ConfigEntry, state: &ModelState) -> Result<DeviceState> {
+        if state.params.len() != entry.params.len() {
+            bail!(
+                "state has {} params, config '{}' wants {}",
+                state.params.len(),
+                entry.cfg_id,
+                entry.params.len()
+            );
         }
-        for (i, lit) in outs[..np].iter().enumerate() {
-            state.params[i] = Tensor::from_literal(lit, &entry.params[i].shape)?;
-        }
-        for (i, lit) in outs[np..np + no].iter().enumerate() {
-            state.opt[i] = Tensor::from_literal(lit, &entry.opt_state[i].shape)?;
-        }
-        Ok(())
+        Ok(DeviceState {
+            cfg_id: entry.cfg_id.clone(),
+            params: self.upload_params(&state.params)?,
+            opt: Vec::new(),
+            host_mirror: None,
+        })
     }
 
-    /// Validation loss on one batch.
+    /// Host-path validation loss on one batch.
     pub fn eval_step(
         &self,
         entry: &ConfigEntry,
@@ -170,21 +563,16 @@ impl Engine {
         y: &IntTensor,
         images: Option<&Tensor>,
     ) -> Result<f32> {
-        let exe = self.load(&entry.artifact_path(root, "eval")?)?;
-        let mut args = Vec::with_capacity(state.params.len() + 2);
-        for t in &state.params {
-            args.push(t.to_literal()?);
-        }
-        match images {
-            Some(img) => args.push(img.to_literal()?),
-            None => args.push(x.to_literal()?),
-        }
-        args.push(y.to_literal()?);
-        let outs = self.run(&exe, &args)?;
-        Ok(outs[0].to_vec::<f32>()?[0])
+        let exec = self.bind_fns(entry, root, &["eval"])?;
+        let dev = self.upload_for_readonly(entry, state)?;
+        let data = match images {
+            Some(img) => img.to_literal()?,
+            None => x.to_literal()?,
+        };
+        self.eval_step_dev(&exec, entry, &dev, &data, &y.to_literal()?)
     }
 
-    /// Table-1 probe: (loss, per-group grad norms, per-layer activation RMS).
+    /// Host-path Table-1 probe.
     pub fn probe(
         &self,
         entry: &ConfigEntry,
@@ -193,21 +581,8 @@ impl Engine {
         x: &IntTensor,
         y: &IntTensor,
     ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
-        let exe = self.load(&entry.artifact_path(root, "probe")?)?;
-        let mut args = Vec::with_capacity(state.params.len() + 2);
-        for t in &state.params {
-            args.push(t.to_literal()?);
-        }
-        args.push(x.to_literal()?);
-        args.push(y.to_literal()?);
-        let outs = self.run(&exe, &args)?;
-        if outs.len() != 3 {
-            bail!("probe returned {} outputs", outs.len());
-        }
-        Ok((
-            outs[0].to_vec::<f32>()?[0],
-            outs[1].to_vec::<f32>()?,
-            outs[2].to_vec::<f32>()?,
-        ))
+        let exec = self.bind_fns(entry, root, &["probe"])?;
+        let dev = self.upload_for_readonly(entry, state)?;
+        self.probe_dev(&exec, entry, &dev, &x.to_literal()?, &y.to_literal()?)
     }
 }

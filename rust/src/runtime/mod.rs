@@ -1,14 +1,19 @@
-//! L3 runtime: PJRT client wrapper, artifact manifest, host tensors.
+//! L3 runtime: PJRT client wrapper, artifact manifest, device-resident state.
 //!
 //! `Engine` loads `artifacts/*.hlo.txt` (HLO text produced once by
 //! `python/compile/aot.py`), compiles on the PJRT CPU client, and caches the
-//! executables; `Manifest` is the typed parameter-layout contract between
-//! the JAX build path and this crate. Python never runs at request time.
+//! executables; `DeviceState` keeps params/opt as device buffers across
+//! dispatches (host `ModelState` is an explicit materialization);
+//! `StageExec` binds one config's lowered functions once per stage;
+//! `Manifest` is the typed parameter-layout contract between the JAX build
+//! path and this crate. Python never runs at request time.
 
+pub mod device_state;
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
-pub use engine::{Engine, ModelState};
+pub use device_state::{DeviceState, StageExec};
+pub use engine::{DispatchStats, Engine, ModelState};
 pub use manifest::{ConfigEntry, InitKind, Manifest, ModelInfo, OptStateSpec, ParamSpec};
-pub use tensor::{IntTensor, Tensor};
+pub use tensor::{literal_f32, literal_i32, IntTensor, Tensor};

@@ -2,10 +2,41 @@
 //!
 //! All model math happens inside the AOT'd XLA executables; host tensors
 //! exist only to (a) initialize/remap parameters (expansion engine) and
-//! (b) shuttle batches in and losses out. f32 everywhere for model state,
-//! i32 for token batches.
+//! (b) stage batches and materialize device state on demand. Since the
+//! device-resident runtime (DESIGN.md §2), the training hot path never
+//! constructs `Tensor`s at all — it builds batch literals straight from
+//! reusable scratch slices via [`literal_f32`]/[`literal_i32`] and leaves
+//! params/opt on the device ([`super::DeviceState`]). f32 everywhere for
+//! model state, i32 for token batches.
 
 use anyhow::{bail, Result};
+
+/// Shared core of the slice→literal constructors: validate the element
+/// count once, then hand the raw 4-byte payload to XLA (one memcpy).
+fn literal_4byte(
+    ty: xla::ElementType,
+    shape: &[usize],
+    ptr: *const u8,
+    n_elems: usize,
+) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product::<usize>().max(1);
+    if want != n_elems {
+        bail!("shape {:?} wants {} elements, got {}", shape, want, n_elems);
+    }
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(ptr, n_elems * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)?)
+}
+
+/// Build an F32 literal directly from a slice — one memcpy, no `Tensor`
+/// allocation. The dispatch hot path stages batches through this.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    literal_4byte(xla::ElementType::F32, shape, data.as_ptr() as *const u8, data.len())
+}
+
+/// Build an S32 literal directly from a slice (see [`literal_f32`]).
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    literal_4byte(xla::ElementType::S32, shape, data.as_ptr() as *const u8, data.len())
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -55,21 +86,21 @@ impl Tensor {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        // §Perf iteration 2: direct untyped-data construction — one memcpy
-        // instead of vec1() + reshape() (two literal materializations).
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
-        };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &self.shape,
-            bytes,
-        )?)
+        literal_f32(&self.shape, &self.data)
     }
 
+    /// Single-copy literal → tensor: the one `to_vec` out of the literal is
+    /// the only data movement (the old path parsed into a `Vec` and then
+    /// re-checked it through `from_vec`). The length check stays a hard
+    /// error — it is one shape product against a stale-artifact drift that
+    /// would otherwise corrupt checkpoints silently.
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
         let data = lit.to_vec::<f32>()?;
-        Tensor::from_vec(shape, data)
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("literal payload ({} elems) does not match shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
     }
 }
 
@@ -90,15 +121,7 @@ impl IntTensor {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        // §Perf iteration 2 (see Tensor::to_literal); S32 payload.
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
-        };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S32,
-            &self.shape,
-            bytes,
-        )?)
+        literal_i32(&self.shape, &self.data)
     }
 }
 
@@ -118,5 +141,11 @@ mod tests {
         let t = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
         assert!((t.norm() - 2.0).abs() < 1e-12);
         assert!((t.rms() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_literal_rejects_bad_shape() {
+        assert!(literal_f32(&[2, 2], &[0.0; 3]).is_err());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
     }
 }

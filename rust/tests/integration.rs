@@ -32,6 +32,16 @@ fn small_corpus() -> Corpus {
 }
 
 #[test]
+fn tensor_literal_roundtrip_is_bit_exact() {
+    // The single-copy from_literal path (no shape re-validation) must
+    // preserve bytes exactly; no artifacts needed, just the xla host API.
+    let t = deep_progressive::runtime::Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+    let lit = t.to_literal().unwrap();
+    let back = deep_progressive::runtime::Tensor::from_literal(&lit, &[2, 3]).unwrap();
+    assert_eq!(t, back);
+}
+
+#[test]
 fn train_step_learns() {
     let Some(m) = manifest() else { return };
     let engine = Engine::cpu().unwrap();
@@ -209,37 +219,43 @@ fn progressive_run_end_to_end_mixes() {
 }
 
 #[test]
-fn deprecated_runspec_shim_matches_builder_path() {
-    // The pre-v2 entry points stay as shims over the builder/driver; their
-    // results must be identical to the explicit path.
+fn device_path_matches_host_materialized_reference() {
+    // Acceptance (device-resident runtime): the buffer-threading hot path
+    // must be a pure transport optimization. A run whose engine is forced to
+    // materialize the full state to host tensors and re-upload it after
+    // EVERY dispatch unit (the pre-refactor behavior) must produce
+    // bit-identical loss curves and a bit-identical final model state.
     let Some(m) = manifest() else { return };
-    let engine = Engine::cpu().unwrap();
     let corpus = small_corpus();
-    let trainer = Trainer::new(&engine, &m, &corpus);
-    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
-    #[allow(deprecated)]
-    let via_shim = trainer
-        .run(&deep_progressive::coordinator::RunSpec::progressive(
-            "shim",
-            "gpt2.l0",
-            "gpt2.l3",
-            24,
-            96,
-            sched,
-            ExpandSpec::default(),
-        ))
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+    let plan = RunBuilder::progressive("equiv", "gpt2.l0", "gpt2.l3", 40, 120, sched, ExpandSpec::default())
+        .eval_every(20)
+        .build()
         .unwrap();
-    let via_builder = run_plan(
-        trainer,
-        RunBuilder::progressive("shim", "gpt2.l0", "gpt2.l3", 24, 96, sched, ExpandSpec::default())
-            .build()
-            .unwrap(),
-    );
-    assert_eq!(via_shim.curve.points.len(), via_builder.curve.points.len());
-    for (a, b) in via_shim.curve.points.iter().zip(&via_builder.curve.points) {
-        assert_eq!(a, b, "shim and builder curves diverged");
+
+    let run = |host_roundtrip: bool| {
+        let engine = Engine::cpu().unwrap();
+        engine.set_host_roundtrip(host_roundtrip);
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        let mut d = RunDriver::new(trainer, plan.clone()).unwrap();
+        d.run_to_end().unwrap();
+        let state = d.state().unwrap();
+        (d.finish(), state)
+    };
+    let (dev_res, dev_state) = run(false);
+    let (ref_res, ref_state) = run(true);
+
+    assert_eq!(dev_res.curve.points.len(), ref_res.curve.points.len());
+    for (a, b) in dev_res.curve.points.iter().zip(&ref_res.curve.points) {
+        assert_eq!(a, b, "device-resident curve diverged from host-materialized reference");
     }
-    assert_eq!(via_shim.boundaries, via_builder.boundaries);
+    assert_eq!(dev_res.boundaries, ref_res.boundaries);
+    for (a, b) in dev_state.params.iter().zip(&ref_state.params) {
+        assert_eq!(a.data, b.data, "final params diverged between transport paths");
+    }
+    for (a, b) in dev_state.opt.iter().zip(&ref_state.opt) {
+        assert_eq!(a.data, b.data, "final optimizer state diverged between transport paths");
+    }
 }
 
 #[test]
@@ -283,7 +299,10 @@ fn curve_has_single_point_per_step_except_boundaries() {
 fn deterministic_pause_snapshot_resume() {
     // Acceptance: a driver paused mid-run, checkpointed to disk, reloaded,
     // and resumed produces a bit-identical loss curve and final state to an
-    // uninterrupted run of the same plan.
+    // uninterrupted run of the same plan — with the device-resident state in
+    // the loop (the snapshot materializes device buffers; the resume
+    // re-uploads them). Exercised both mid-stage-0 and past the expansion
+    // boundary (stage 1, after a StageExec rebind + re-upload).
     let Some(m) = manifest() else { return };
     let engine = Engine::cpu().unwrap();
     let corpus = small_corpus();
@@ -297,39 +316,42 @@ fn deterministic_pause_snapshot_resume() {
     // Uninterrupted reference.
     let mut ref_d = RunDriver::new(trainer, plan.clone()).unwrap();
     ref_d.run_to_end().unwrap();
-    let ref_state = ref_d.state().clone();
+    let ref_state = ref_d.state().unwrap();
     let reference = ref_d.finish();
 
-    // Paused run: stop mid-stage-0, snapshot to disk, reload, resume.
-    let mut d = RunDriver::new(trainer, plan.clone()).unwrap();
-    let taken = d.advance(50).unwrap();
-    assert!(taken > 0 && !d.is_done());
     let dir = std::env::temp_dir().join(format!("dpt_resume_{}", std::process::id()));
-    let path = dir.join("mid.snap");
-    d.save_snapshot(&path).unwrap();
-    drop(d);
+    for pause_budget in [50usize, 80] {
+        // Paused run: stop (mid-stage-0 / mid-stage-1), snapshot to disk,
+        // reload, resume.
+        let mut d = RunDriver::new(trainer, plan.clone()).unwrap();
+        let taken = d.advance(pause_budget).unwrap();
+        assert!(taken > 0 && !d.is_done());
+        let path = dir.join(format!("mid-{pause_budget}.snap"));
+        d.save_snapshot(&path).unwrap();
+        drop(d);
 
-    let cfg = deep_progressive::checkpoint::snapshot_cfg_id(&path).unwrap();
-    let snap = deep_progressive::checkpoint::load_snapshot(&path, m.get(&cfg).unwrap()).unwrap();
-    assert_eq!(snap.step, taken);
-    let mut resumed_d = RunDriver::resume(trainer, plan, snap).unwrap();
-    resumed_d.run_to_end().unwrap();
-    let resumed_state = resumed_d.state().clone();
-    let resumed = resumed_d.finish();
+        let cfg = deep_progressive::checkpoint::snapshot_cfg_id(&path).unwrap();
+        let snap = deep_progressive::checkpoint::load_snapshot(&path, m.get(&cfg).unwrap()).unwrap();
+        assert_eq!(snap.step, taken);
+        let mut resumed_d = RunDriver::resume(trainer, plan.clone(), snap).unwrap();
+        resumed_d.run_to_end().unwrap();
+        let resumed_state = resumed_d.state().unwrap();
+        let resumed = resumed_d.finish();
+
+        assert_eq!(reference.curve.points.len(), resumed.curve.points.len());
+        for (a, b) in reference.curve.points.iter().zip(&resumed.curve.points) {
+            assert_eq!(a, b, "resumed curve diverged from uninterrupted run (pause {pause_budget})");
+        }
+        assert_eq!(reference.boundaries, resumed.boundaries);
+        assert_eq!(reference.ledger.tokens, resumed.ledger.tokens);
+        for (a, b) in ref_state.params.iter().zip(&resumed_state.params) {
+            assert_eq!(a.data, b.data, "final params diverged after resume (pause {pause_budget})");
+        }
+        for (a, b) in ref_state.opt.iter().zip(&resumed_state.opt) {
+            assert_eq!(a.data, b.data, "final optimizer state diverged after resume (pause {pause_budget})");
+        }
+    }
     std::fs::remove_dir_all(&dir).ok();
-
-    assert_eq!(reference.curve.points.len(), resumed.curve.points.len());
-    for (a, b) in reference.curve.points.iter().zip(&resumed.curve.points) {
-        assert_eq!(a, b, "resumed curve diverged from uninterrupted run");
-    }
-    assert_eq!(reference.boundaries, resumed.boundaries);
-    assert_eq!(reference.ledger.tokens, resumed.ledger.tokens);
-    for (a, b) in ref_state.params.iter().zip(&resumed_state.params) {
-        assert_eq!(a.data, b.data, "final params diverged after resume");
-    }
-    for (a, b) in ref_state.opt.iter().zip(&resumed_state.opt) {
-        assert_eq!(a.data, b.data, "final optimizer state diverged after resume");
-    }
 }
 
 #[test]
