@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     )
     .build()?;
     let mut prog_d = RunDriver::new(trainer, plan)?;
-    prog_d.attach(Box::new(ProgressPrinter));
+    prog_d.attach(Box::new(ProgressPrinter::default()));
     let spikes = std::rc::Rc::new(std::cell::RefCell::new(LossSpikeDetector::new(0.0)));
     prog_d.attach(Box::new(spikes.clone()));
     prog_d.run_to_end()?;

@@ -11,6 +11,7 @@ pub mod figs_core;
 pub mod figs_sched;
 pub mod figs_tradeoff;
 pub mod figs_appendix;
+pub mod parallel;
 pub mod perf;
 pub mod tables;
 
@@ -32,10 +33,13 @@ pub struct Ctx {
     /// Default horizon for one run (smoke scale).
     pub steps: usize,
     pub seed: u64,
+    /// Worker count for grid targets (1 = serial on `engine`; > 1 = the
+    /// `exec` pool, one engine per worker — identical results either way).
+    pub workers: usize,
 }
 
 impl Ctx {
-    pub fn new(artifacts: &str, out_dir: &str, steps: usize, seed: u64) -> Result<Ctx> {
+    pub fn new(artifacts: &str, out_dir: &str, steps: usize, seed: u64, workers: usize) -> Result<Ctx> {
         Ok(Ctx {
             engine: Engine::cpu()?,
             manifest: Manifest::load(artifacts)?,
@@ -43,6 +47,7 @@ impl Ctx {
             out_dir: PathBuf::from(out_dir),
             steps,
             seed,
+            workers: workers.max(1),
         })
     }
 
@@ -72,7 +77,9 @@ impl Ctx {
     }
 
     /// Run many plans through a [`Sweep`] (source-model segments shared
-    /// across same-prefix variants) and persist every curve CSV.
+    /// across same-prefix variants) and persist every curve CSV. Grid
+    /// targets inherit the context's worker count: `workers > 1` executes
+    /// over the `exec` pool with bit-identical results.
     pub fn sweep_logged(&self, target: &str, plans: Vec<RunPlan>) -> Result<SweepOutcome> {
         let t0 = std::time::Instant::now();
         let n = plans.len();
@@ -80,15 +87,17 @@ impl Ctx {
         for p in plans {
             sweep.add(p);
         }
-        let outcome = sweep.run()?;
+        let outcome = sweep.run_parallel(self.workers)?;
         let dir = self.out_dir.join(target);
         for res in &outcome.results {
             res.curve.write_csv(&dir)?;
         }
         eprintln!(
-            "  [{}] sweep of {} runs: executed {:.2e} FLOPs (shared {:.2e}), {:.1}s",
+            "  [{}] sweep of {} runs ({} worker{}): executed {:.2e} FLOPs (shared {:.2e}), {:.1}s",
             target,
             n,
+            self.workers,
+            if self.workers == 1 { "" } else { "s" },
             outcome.executed_flops,
             outcome.shared_flops,
             t0.elapsed().as_secs_f32()
@@ -133,6 +142,7 @@ pub fn run_target(ctx: &Ctx, target: &str) -> Result<()> {
         "table2" => tables::table2(ctx),
         "theory" => tables::theory(ctx),
         "perf" => perf::perf(ctx),
+        "parallel" => parallel::parallel(ctx),
         "all" => {
             for t in ALL_TARGETS {
                 run_target(ctx, t)?;
@@ -146,5 +156,5 @@ pub fn run_target(ctx: &Ctx, target: &str) -> Result<()> {
 pub const ALL_TARGETS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig17", "fig18", "fig19", "fig20",
-    "fig21", "table1", "table2", "theory", "perf",
+    "fig21", "table1", "table2", "theory", "perf", "parallel",
 ];

@@ -1,0 +1,190 @@
+//! `bench-parallel`: scaling benchmark for the `exec` worker pool
+//! (`BENCH_parallel.json`).
+//!
+//! Runs a fixed fig-3-style sweep grid — one fixed-size baseline plus two
+//! shared-trunk groups (zero-layer and one-layer sources, several expansion
+//! strategies each) — once serially and once per pool size, and reports
+//! trained steps/sec versus worker count. Every measurement constructs
+//! fresh engines (the serial run too), so compile costs are comparable and
+//! the ratio isolates scheduling + parallel dispatch.
+//!
+//! The grid is executed through the identical [`Sweep`] lowering in every
+//! mode, and the report asserts the determinism contract as a side effect:
+//! curves, final losses, per-run ledgers, and `executed_flops` must be
+//! bit-identical across all worker counts (`identical` in the JSON).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{RunBuilder, RunPlan, Sweep, SweepOutcome, Trainer};
+use crate::exec::{JobGraph, JobKind};
+use crate::expansion::{CopyOrder, ExpandSpec, Strategy};
+use crate::metrics::Table;
+use crate::runtime::Engine;
+use crate::schedule::Schedule;
+use crate::util::json::Json;
+
+use super::Ctx;
+
+const LARGE: &str = "gpt2.l3";
+
+/// The fixed benchmark grid: 6 runs, 2 shared trunks.
+fn grid(ctx: &Ctx) -> Result<Vec<RunPlan>> {
+    let total = ctx.steps;
+    let tau = (total / 5).max(1);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let mut plans =
+        vec![RunBuilder::fixed("par-fixed-l3", LARGE, total, sched).seed(ctx.seed).build()?];
+    let groups: [(&str, Vec<(&str, Strategy)>); 2] = [
+        ("gpt2.l0", vec![("random", Strategy::Random), ("zero", Strategy::Zero)]),
+        (
+            "gpt2.l1",
+            vec![
+                ("random", Strategy::Random),
+                ("copying", Strategy::Copying(CopyOrder::Stack)),
+                ("zero", Strategy::Zero),
+            ],
+        ),
+    ];
+    for (small, strategies) in groups {
+        for (sname, strategy) in strategies {
+            plans.push(
+                RunBuilder::progressive(
+                    format!("par-{small}-{sname}"),
+                    small,
+                    LARGE,
+                    tau,
+                    total,
+                    sched,
+                    ExpandSpec { strategy, ..Default::default() },
+                )
+                .seed(ctx.seed)
+                .build()?,
+            );
+        }
+    }
+    Ok(plans)
+}
+
+/// Steps actually dispatched by the grid (shared trunks counted once) —
+/// the throughput numerator, read off the job graph.
+fn executed_steps(plans: &[RunPlan]) -> Result<usize> {
+    let graph = JobGraph::lower(plans.to_vec())?;
+    Ok(graph
+        .jobs()
+        .iter()
+        .map(|j| match j.kind {
+            JobKind::Trunk { fork_step, .. } => fork_step,
+            JobKind::Tail { plan_idx, trunk } => {
+                let JobKind::Trunk { fork_step, .. } = graph.jobs()[trunk].kind else {
+                    return 0;
+                };
+                graph.plans()[plan_idx].total_steps() - fork_step
+            }
+            JobKind::Standalone { plan_idx } => graph.plans()[plan_idx].total_steps(),
+        })
+        .sum())
+}
+
+struct Measured {
+    workers: usize,
+    wall_s: f64,
+    steps_per_sec: f64,
+    outcome: SweepOutcome,
+}
+
+/// Bit-equality of two outcomes: curves, boundaries, ledgers, and totals.
+fn outcomes_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
+    a.results.len() == b.results.len()
+        && a.executed_flops.to_bits() == b.executed_flops.to_bits()
+        && a.shared_flops.to_bits() == b.shared_flops.to_bits()
+        && a.results.iter().zip(&b.results).all(|(x, y)| {
+            x.curve.points == y.curve.points
+                && x.boundaries == y.boundaries
+                && x.ledger.total.to_bits() == y.ledger.total.to_bits()
+                && x.ledger.tokens == y.ledger.tokens
+                && x.final_val_loss.to_bits() == y.final_val_loss.to_bits()
+        })
+}
+
+pub fn parallel(ctx: &Ctx) -> Result<()> {
+    let target = "parallel";
+    let plans = grid(ctx)?;
+    let steps_executed = executed_steps(&plans)?;
+
+    // Each measurement builds fresh engines: serial gets a cold one too, so
+    // per-engine compilation is paid identically in every mode.
+    let measure = |workers: usize| -> Result<Measured> {
+        let engine = Engine::cpu()?;
+        let trainer = Trainer::new(&engine, &ctx.manifest, &ctx.corpus);
+        let mut sweep = Sweep::new(trainer);
+        for p in plans.clone() {
+            sweep.add(p);
+        }
+        let t0 = Instant::now();
+        let outcome = sweep.run_parallel(workers)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(Measured {
+            workers,
+            wall_s,
+            steps_per_sec: steps_executed as f64 / wall_s.max(1e-9),
+            outcome,
+        })
+    };
+
+    let runs: Vec<Measured> = [1usize, 2, 4].iter().map(|&w| measure(w)).collect::<Result<_>>()?;
+    let serial_sps = runs[0].steps_per_sec;
+    let identical = runs[1..].iter().all(|m| outcomes_identical(&runs[0].outcome, &m.outcome));
+
+    let mut table = Table::new(&["workers", "wall s", "steps/sec", "speedup vs serial", "identical"]);
+    for m in &runs {
+        table.row(vec![
+            m.workers.to_string(),
+            format!("{:.3}", m.wall_s),
+            format!("{:.2}", m.steps_per_sec),
+            format!("{:.2}x", m.steps_per_sec / serial_sps.max(1e-9)),
+            if m.workers == 1 { "—".into() } else { format!("{identical}") },
+        ]);
+    }
+    ctx.emit(target, &table)?;
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("parallel".to_string()));
+    top.insert("grid".to_string(), Json::Str(format!("fig3-style gpt2 l0/l1 -> {LARGE}")));
+    top.insert("runs".to_string(), Json::Num(plans.len() as f64));
+    top.insert("steps".to_string(), Json::Num(ctx.steps as f64));
+    top.insert("executed_steps".to_string(), Json::Num(steps_executed as f64));
+    top.insert("seed".to_string(), Json::Num(ctx.seed as f64));
+    top.insert("identical".to_string(), Json::Bool(identical));
+    top.insert(
+        "workers".to_string(),
+        Json::Arr(
+            runs.iter()
+                .map(|m| {
+                    let mut o = BTreeMap::new();
+                    o.insert("workers".to_string(), Json::Num(m.workers as f64));
+                    o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+                    o.insert("steps_per_sec".to_string(), Json::Num(m.steps_per_sec));
+                    o.insert(
+                        "speedup_vs_serial".to_string(),
+                        Json::Num(m.steps_per_sec / serial_sps.max(1e-9)),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let mut text = Json::Obj(top).to_string();
+    text.push('\n');
+    // Canonical perf-trajectory location (cwd = repo root), plus a copy
+    // under the bench output dir so `--out` collects everything.
+    std::fs::write("BENCH_parallel.json", &text)?;
+    let dir = ctx.out_dir.join(target);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_parallel.json"), &text)?;
+    let speedup2 = runs[1].steps_per_sec / serial_sps.max(1e-9);
+    println!("wrote BENCH_parallel.json (2 workers: {speedup2:.2}x serial; identical outcomes: {identical})");
+    Ok(())
+}

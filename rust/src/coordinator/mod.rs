@@ -10,7 +10,9 @@
 //! - [`RunDriver`]: step-granular, resumable state machine executing one
 //!   plan — pause/checkpoint/resume bit-exactly, early-stop probes, and
 //!   interleave many runs via [`Sweep`], which trains shared source-model
-//!   segments once. Model state stays device-resident across dispatches
+//!   segments once — serially, or over the [`crate::exec`] engine-per-worker
+//!   pool via [`Sweep::run_parallel`] (bit-identical outcomes for any worker
+//!   count). Model state stays device-resident across dispatches
 //!   ([`crate::runtime::DeviceState`]); the host sees it only at explicit
 //!   materialization points (DESIGN.md §2);
 //! - [`Observer`]: event hooks (`on_eval`, `on_boundary`, `on_chunk`,
@@ -31,7 +33,7 @@ pub use builder::{PlanStage, RunBuilder, RunPlan, Transition};
 pub use driver::RunDriver;
 pub use observer::{
     BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, LossSpikeDetector, Observer,
-    PeriodicCheckpointer, ProgressPrinter, RunSummary, Signal,
+    PeriodicCheckpointer, ProgressPrinter, ProgressSink, RunSummary, Signal,
 };
 pub use sweep::{Sweep, SweepOutcome};
 

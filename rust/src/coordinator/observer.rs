@@ -7,8 +7,10 @@
 //! to disk, or an early stop).
 
 use std::cell::RefCell;
+use std::io::Write;
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
@@ -227,33 +229,118 @@ impl Observer for PeriodicCheckpointer {
     }
 }
 
-/// Prints one line per eval (and per boundary / finish) to stderr.
+/// Shared, line-buffered output sink for progress printing.
+///
+/// Under the parallel executor many runs print concurrently from different
+/// worker threads; raw `eprintln!` fragments would interleave mid-line. A
+/// `ProgressSink` is a cheap-`Clone` handle to one writer behind a mutex:
+/// [`ProgressSink::line`] writes a **whole line** (plus newline, plus flush)
+/// under the lock, so concurrent printers can only interleave at line
+/// granularity, never inside one.
+#[derive(Clone)]
+pub struct ProgressSink {
+    out: Arc<Mutex<Box<dyn Write + Send>>>,
+}
+
+impl ProgressSink {
+    /// Sink writing to stderr (the historical `ProgressPrinter` target).
+    pub fn stderr() -> ProgressSink {
+        ProgressSink::from_writer(std::io::stderr())
+    }
+
+    pub fn from_writer(w: impl Write + Send + 'static) -> ProgressSink {
+        ProgressSink { out: Arc::new(Mutex::new(Box::new(w))) }
+    }
+
+    /// In-memory sink plus a handle to read back what was written (tests).
+    pub fn capture() -> (ProgressSink, Arc<Mutex<Vec<u8>>>) {
+        struct Shared(Arc<Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap_or_else(|e| e.into_inner()).extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        (ProgressSink::from_writer(Shared(buf.clone())), buf)
+    }
+
+    /// Write one complete line atomically (append '\n', flush). Output
+    /// errors are swallowed: progress printing must never fail a run.
+    pub fn line(&self, line: &str) {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = out.write_all(line.as_bytes());
+        let _ = out.write_all(b"\n");
+        let _ = out.flush();
+    }
+}
+
+impl Default for ProgressSink {
+    fn default() -> Self {
+        ProgressSink::stderr()
+    }
+}
+
+impl std::fmt::Debug for ProgressSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ProgressSink")
+    }
+}
+
+/// Prints one line per eval (and per boundary / finish) through a
+/// [`ProgressSink`] — stderr by default. Every line carries the run name;
+/// an optional extra prefix (e.g. the pool's worker index) labels which
+/// executor produced it.
 #[derive(Debug, Default)]
-pub struct ProgressPrinter;
+pub struct ProgressPrinter {
+    sink: ProgressSink,
+    prefix: String,
+}
+
+impl ProgressPrinter {
+    pub fn new() -> ProgressPrinter {
+        ProgressPrinter::default()
+    }
+
+    pub fn with_sink(sink: ProgressSink) -> ProgressPrinter {
+        ProgressPrinter { sink, prefix: String::new() }
+    }
+
+    /// Tag every line with `prefix` (the parallel pool uses `w<idx>`).
+    pub fn prefixed(mut self, prefix: impl Into<String>) -> ProgressPrinter {
+        self.prefix = prefix.into();
+        self
+    }
+}
 
 impl Observer for ProgressPrinter {
     fn on_eval(&mut self, ev: &EvalEvent<'_>) {
-        eprintln!(
-            "  [{}] step {:>6} ({}) val {:.4} train {:.4} lr {:.2e}",
+        self.sink.line(&format!(
+            "{}  [{}] step {:>6} ({}) val {:.4} train {:.4} lr {:.2e}",
+            self.prefix,
             ev.run,
             ev.point.step,
             ev.cfg_id,
             ev.point.val_loss,
             ev.point.train_loss,
             ev.point.lr
-        );
+        ));
     }
 
     fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
-        eprintln!(
-            "  [{}] step {:>6} boundary {} -> {} (val {:.4} -> {:.4})",
-            ev.run, ev.step, ev.from_cfg, ev.to_cfg, ev.pre_val_loss, ev.post_val_loss
-        );
+        self.sink.line(&format!(
+            "{}  [{}] step {:>6} boundary {} -> {} (val {:.4} -> {:.4})",
+            self.prefix, ev.run, ev.step, ev.from_cfg, ev.to_cfg, ev.pre_val_loss, ev.post_val_loss
+        ));
     }
 
     fn on_finish(&mut self, s: &RunSummary<'_>) {
-        eprintln!(
-            "  [{}] done at step {}/{}{}: val {:.4}, {:.2e} FLOPs, {} tokens",
+        self.sink.line(&format!(
+            "{}  [{}] done at step {}/{}{}: val {:.4}, {:.2e} FLOPs, {} tokens",
+            self.prefix,
             s.run,
             s.steps,
             s.total_steps,
@@ -261,7 +348,7 @@ impl Observer for ProgressPrinter {
             s.final_val_loss,
             s.flops,
             s.tokens
-        );
+        ));
     }
 }
 
@@ -337,6 +424,48 @@ mod tests {
         assert!(matches!(ck.on_chunk(&ev(56)), Signal::Checkpoint(_)));
         assert_eq!(ck.on_chunk(&ev(64)), Signal::Continue);
         assert!(matches!(ck.on_chunk(&ev(104)), Signal::Checkpoint(_)));
+    }
+
+    #[test]
+    fn progress_sink_lines_are_atomic_under_concurrency() {
+        let (sink, buf) = ProgressSink::capture();
+        let payload = "x".repeat(64);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let sink = sink.clone();
+                let payload = payload.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        sink.line(&format!("t{t}-{i} {payload}"));
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 200);
+        for l in lines {
+            assert!(l.ends_with(payload.as_str()), "garbled line: {l}");
+        }
+    }
+
+    #[test]
+    fn progress_printer_writes_prefixed_lines_to_sink() {
+        let (sink, buf) = ProgressSink::capture();
+        let mut p = ProgressPrinter::with_sink(sink).prefixed("w3");
+        p.on_eval(&EvalEvent {
+            run: "r",
+            cfg_id: "a",
+            stage_idx: 0,
+            kind: EvalKind::Cadence,
+            point: point(10, 3.0),
+        });
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert!(text.starts_with("w3  [r] step"), "{text}");
+        assert!(text.ends_with('\n'));
     }
 
     #[test]

@@ -8,21 +8,32 @@
 //! 4. Takeaway 6: under WSD the mixing time transfers across τ within the
 //!    stable phase, so for the real run set τ = stable_end − t_mix.
 //!
-//! Step 3 is literal here: the two probes are interleaved [`RunDriver`]s
-//! advanced one eval period at a time, and the moment the partial curves
-//! mix both drivers stop — the probe tails are never paid for (the pre-v2
-//! implementation ran both probes to their full horizon and only then
-//! looked for the mixing point).
+//! Step 3 is literal here: the two probes advance one eval period at a time
+//! and the moment the partial curves mix both stop — the probe tails are
+//! never paid for. Two execution paths share the decision loop:
+//!
+//! - [`probe_mixing_time`]: both drivers interleave on the caller's engine;
+//! - [`probe_mixing_time_parallel`]: the probe pair runs as two jobs on two
+//!   engine-owning worker threads (the [`crate::exec`] ownership rules), in
+//!   **lockstep**: each round both sides advance one eval period, then the
+//!   coordinator checks mixing on the same partial curves the serial path
+//!   would see — so the early-stop decision, the per-probe engine-call
+//!   sequences, and the outcome are identical. The drivers are pinned to
+//!   their workers (device-resident state cannot migrate), which is why
+//!   probes are lockstep workers rather than graph jobs.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::data::Corpus;
 use crate::expansion::ExpandSpec;
-use crate::metrics::mixing_point;
+use crate::metrics::{mixing_point, Curve};
+use crate::runtime::{Engine, Manifest};
 use crate::schedule::Schedule;
 
-use super::{RunBuilder, RunDriver, Trainer};
+use super::builder::RunPlan;
+use super::{RunBuilder, RunDriver, RunResult, Trainer};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProbeOutcome {
     /// Mixing time in steps of the probe horizon (None: did not mix).
     pub t_mix_steps: Option<usize>,
@@ -34,7 +45,62 @@ pub struct ProbeOutcome {
     pub probe_steps_run: (usize, usize),
 }
 
-/// Run the two probes and derive τ for a `production_steps` horizon.
+/// The two probe plans (fixed target, progressive with τ at end of warmup).
+fn probe_plans(
+    small: &str,
+    large: &str,
+    probe_steps: usize,
+    schedule: Schedule,
+    expand_spec: ExpandSpec,
+) -> Result<(RunPlan, RunPlan)> {
+    // Probe runs use a constant-LR schedule at the same peak: we only care
+    // about the stable-phase mixing time, which WSD transfers (Takeaway 6).
+    let probe_sched = Schedule::Constant { peak: schedule.peak(), warmup_frac: 0.02 };
+    let warmup_end = (probe_steps as f32 * 0.02).ceil() as usize;
+    let fixed = RunBuilder::fixed("probe-fixed", large, probe_steps, probe_sched).build()?;
+    let prog = RunBuilder::progressive(
+        "probe-prog",
+        small,
+        large,
+        warmup_end.max(1),
+        probe_steps,
+        probe_sched,
+        expand_spec,
+    )
+    .build()?;
+    Ok((fixed, prog))
+}
+
+/// Convert a mixing detection into the §7 τ suggestion.
+fn derive_outcome(
+    manifest: &Manifest,
+    large: &str,
+    production_steps: usize,
+    schedule: Schedule,
+    t_mix_tokens: Option<u64>,
+    probe_steps_run: (usize, usize),
+    prog: &RunResult,
+) -> Result<ProbeOutcome> {
+    let large_entry = manifest.get(large)?;
+    let tokens_per_step = large_entry.tokens_per_step() as u64;
+    // Steps elapsed after expansion until mixing.
+    let t_mix_steps = t_mix_tokens.map(|tok| {
+        let expand_tokens = prog
+            .boundaries
+            .first()
+            .map(|(s, _)| *s as u64 * tokens_per_step)
+            .unwrap_or(0);
+        ((tok.saturating_sub(expand_tokens)) / tokens_per_step) as usize
+    });
+    let suggested_tau = t_mix_steps.map(|m| {
+        let stable_end = schedule.stable_end(production_steps);
+        stable_end.saturating_sub(m).max(1)
+    });
+    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau, probe_steps_run })
+}
+
+/// Run the two probes serially (interleaved on the caller's engine) and
+/// derive τ for a `production_steps` horizon.
 #[allow(clippy::too_many_arguments)]
 pub fn probe_mixing_time(
     trainer: &Trainer,
@@ -46,22 +112,7 @@ pub fn probe_mixing_time(
     expand_spec: ExpandSpec,
     rel_tol: f32,
 ) -> Result<ProbeOutcome> {
-    // Probe runs use a constant-LR schedule at the same peak: we only care
-    // about the stable-phase mixing time, which WSD transfers (Takeaway 6).
-    let probe_sched = Schedule::Constant { peak: schedule.peak(), warmup_frac: 0.02 };
-    let warmup_end = (probe_steps as f32 * 0.02).ceil() as usize;
-
-    let fixed_plan = RunBuilder::fixed("probe-fixed", large, probe_steps, probe_sched).build()?;
-    let prog_plan = RunBuilder::progressive(
-        "probe-prog",
-        small,
-        large,
-        warmup_end.max(1),
-        probe_steps,
-        probe_sched,
-        expand_spec,
-    )
-    .build()?;
+    let (fixed_plan, prog_plan) = probe_plans(small, large, probe_steps, schedule, expand_spec)?;
     let every = fixed_plan.eval_every();
 
     let mut fixed_d = RunDriver::new(*trainer, fixed_plan)?;
@@ -84,23 +135,100 @@ pub fn probe_mixing_time(
 
     let steps_run = (fixed_d.step_index(), prog_d.step_index());
     let prog = prog_d.finish();
+    derive_outcome(trainer.manifest, large, production_steps, schedule, t_mix_tokens, steps_run, &prog)
+}
 
-    let large_entry = trainer.manifest.get(large)?;
-    let tokens_per_step = large_entry.tokens_per_step() as u64;
-    // Steps elapsed after expansion until mixing.
-    let t_mix_steps = t_mix_tokens.map(|tok| {
-        let expand_tokens = prog
-            .boundaries
-            .first()
-            .map(|(s, _)| *s as u64 * tokens_per_step)
-            .unwrap_or(0);
-        ((tok.saturating_sub(expand_tokens)) / tokens_per_step) as usize
-    });
-    let suggested_tau = t_mix_steps.map(|m| {
-        let stable_end = schedule.stable_end(production_steps);
-        stable_end.saturating_sub(m).max(1)
-    });
-    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau, probe_steps_run: steps_run })
+/// One lockstep report from the fixed-probe worker: its partial curve and
+/// position after advancing one eval period.
+struct FixedTick {
+    curve: Curve,
+    done: bool,
+    step: usize,
+    taken: usize,
+}
+
+/// Run the probe pair as two engine-owning worker jobs in lockstep (see
+/// module docs): the fixed probe trains on a spawned worker thread with its
+/// own engine, the progressive probe on this thread with another, and the
+/// early-stop check runs each round on exactly the partial curves the serial
+/// path would see — the outcome is identical to [`probe_mixing_time`].
+#[allow(clippy::too_many_arguments)]
+pub fn probe_mixing_time_parallel(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    small: &str,
+    large: &str,
+    probe_steps: usize,
+    production_steps: usize,
+    schedule: Schedule,
+    expand_spec: ExpandSpec,
+    rel_tol: f32,
+) -> Result<ProbeOutcome> {
+    let (fixed_plan, prog_plan) = probe_plans(small, large, probe_steps, schedule, expand_spec)?;
+    let every = fixed_plan.eval_every();
+
+    std::thread::scope(|scope| -> Result<ProbeOutcome> {
+        let (tick_tx, tick_rx) = std::sync::mpsc::channel::<Result<FixedTick>>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        scope.spawn(move || {
+            let outcome = (|| -> Result<()> {
+                let engine = Engine::cpu()?;
+                let trainer = Trainer::new(&engine, manifest, corpus);
+                let mut d = RunDriver::new(trainer, fixed_plan)?;
+                // One advance per "go"; stop when the coordinator hangs up.
+                while go_rx.recv().is_ok() {
+                    let taken = d.advance(every)?;
+                    let tick = FixedTick {
+                        curve: d.curve().clone(),
+                        done: d.is_done(),
+                        step: d.step_index(),
+                        taken,
+                    };
+                    if tick_tx.send(Ok(tick)).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            })();
+            if let Err(e) = outcome {
+                let _ = tick_tx.send(Err(e));
+            }
+        });
+
+        let engine = Engine::cpu()?;
+        let trainer = Trainer::new(&engine, manifest, corpus);
+        let mut prog_d = RunDriver::new(trainer, prog_plan)?;
+
+        let mut t_mix_tokens = None;
+        let mut fixed_step = 0usize;
+        loop {
+            // Lockstep round = one serial iteration: the fixed probe
+            // advances one eval period over there while prog advances here.
+            let _ = go_tx.send(());
+            let b = prog_d.advance(every)?;
+            let fixed = match tick_rx.recv() {
+                Ok(Ok(t)) => t,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => bail!("fixed-probe worker terminated unexpectedly"),
+            };
+            fixed_step = fixed.step;
+            if let Some(t) = mixing_point(prog_d.curve(), &fixed.curve, rel_tol, 2) {
+                t_mix_tokens = Some(t);
+                break;
+            }
+            if fixed.taken == 0 && b == 0 && !(fixed.done && prog_d.is_done()) {
+                break; // defensive: no progress and no mixing
+            }
+            if fixed.done && prog_d.is_done() {
+                break;
+            }
+        }
+        drop(go_tx); // release the fixed-probe worker
+
+        let steps_run = (fixed_step, prog_d.step_index());
+        let prog = prog_d.finish();
+        derive_outcome(manifest, large, production_steps, schedule, t_mix_tokens, steps_run, &prog)
+    })
 }
 
 #[cfg(test)]

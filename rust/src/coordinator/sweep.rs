@@ -2,26 +2,38 @@
 //!
 //! The Fig-3/Fig-10 grids train the *same* source model under many expansion
 //! variants; a naive per-run loop repays the source-model segment for every
-//! variant. `Sweep` groups plans whose step/eval stream is identical up to
-//! their first boundary (same stage-0 config, horizon, schedule, cadence,
-//! and seed — see [`RunPlan::prefix_key`] — plus the same boundary step),
-//! trains that shared trunk **once**, forks each variant from the trunk's
-//! in-memory snapshot, and interleaves the forked drivers over one engine so
-//! compiled-executable cache hits are shared too. The trunk's device-resident
-//! state is materialized to the host exactly once (the snapshot); each forked
-//! variant re-uploads it once at its first dispatch and stays device-resident
-//! from there.
+//! variant. `Sweep` lowers its plans through [`JobGraph`]: plans whose
+//! step/eval stream is identical up to their first boundary (same stage-0
+//! config, horizon, schedule, cadence, and seed — see
+//! [`RunPlan::prefix_key`] — plus the same boundary step) share one trunk,
+//! which is trained **once** and snapshotted at the fork step; each variant
+//! resumes from that in-memory snapshot.
+//!
+//! Two execution paths over the same graph:
+//!
+//! - [`Sweep::run`] — serial, on the caller's engine: the trunk driver and
+//!   the forked variants interleave over one engine so compiled-executable
+//!   cache hits are shared too.
+//! - [`Sweep::run_parallel`] — the [`crate::exec`] worker pool: one engine
+//!   per worker thread, ready jobs dispatched to idle workers. Bit-identical
+//!   to the serial path for any worker count (each run's engine-call
+//!   sequence is a pure function of its plan + fork snapshot, and outcomes
+//!   are assembled in the serial group order — see DESIGN.md §6).
 //!
 //! Per-run accounting stays exact: every [`RunResult`]'s ledger includes the
 //! shared prefix (what the run *represents*); [`SweepOutcome::executed_flops`]
 //! counts each shared trunk once (what was actually dispatched).
 
-use std::collections::BTreeMap;
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::exec::{run_graph, JobGraph, JobId, JobKind, PoolOptions};
+use crate::runtime::ModelState;
+
 use super::builder::RunPlan;
 use super::driver::RunDriver;
+use super::observer::{ProgressPrinter, ProgressSink};
 use super::{RunResult, Trainer};
 
 /// Outcome of a sweep: per-plan results in submission order, plus the
@@ -29,21 +41,27 @@ use super::{RunResult, Trainer};
 #[derive(Debug)]
 pub struct SweepOutcome {
     pub results: Vec<RunResult>,
+    /// Final model state per plan — populated only when
+    /// [`Sweep::keep_final_states`] was enabled (one materialization per
+    /// run), `None` otherwise.
+    pub final_states: Vec<Option<ModelState>>,
     /// Training FLOPs actually dispatched (shared trunks counted once).
     pub executed_flops: f64,
     /// FLOPs saved versus running every plan standalone.
     pub shared_flops: f64,
 }
 
-/// Interleaved multi-run executor over one engine. See module docs.
+/// Work-sharing multi-run executor. See module docs.
 pub struct Sweep<'a> {
     trainer: Trainer<'a>,
     plans: Vec<RunPlan>,
+    progress: Option<ProgressSink>,
+    keep_states: bool,
 }
 
 impl<'a> Sweep<'a> {
     pub fn new(trainer: Trainer<'a>) -> Sweep<'a> {
-        Sweep { trainer, plans: Vec::new() }
+        Sweep { trainer, plans: Vec::new(), progress: None, keep_states: false }
     }
 
     pub fn add(&mut self, plan: RunPlan) -> &mut Sweep<'a> {
@@ -59,58 +77,111 @@ impl<'a> Sweep<'a> {
         self.plans.is_empty()
     }
 
-    /// Execute every plan; results come back in the order plans were added.
-    pub fn run(&mut self) -> Result<SweepOutcome> {
+    /// Attach a shared progress sink: every driver (trunks included) gets a
+    /// [`ProgressPrinter`] writing whole lines through it, so serial and
+    /// parallel sweeps report identically without interleaving garbage.
+    pub fn progress(&mut self, sink: ProgressSink) -> &mut Sweep<'a> {
+        self.progress = Some(sink);
+        self
+    }
+
+    /// Materialize each run's final model state into
+    /// [`SweepOutcome::final_states`] (one device download per run; the
+    /// parallel-equivalence suite uses this to compare states bit-exactly).
+    pub fn keep_final_states(&mut self, on: bool) -> &mut Sweep<'a> {
+        self.keep_states = on;
+        self
+    }
+
+    fn lower(&mut self) -> Result<JobGraph> {
         let plans = std::mem::take(&mut self.plans);
         if plans.is_empty() {
             bail!("sweep has no plans");
         }
-        // Group by (prefix stream, first boundary step): within a group the
-        // runs are bit-identical until the boundary, so the trunk is shared.
-        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-        for (i, p) in plans.iter().enumerate() {
-            groups.entry(format!("{}@{}", p.prefix_key(), p.first_boundary())).or_default().push(i);
+        JobGraph::lower(plans)
+    }
+
+    /// Execute every plan serially over the caller's engine; results come
+    /// back in the order plans were added.
+    pub fn run(&mut self) -> Result<SweepOutcome> {
+        let graph = self.lower()?;
+        self.run_serial(&graph)
+    }
+
+    /// Execute every plan over `workers` engine-owning pool threads
+    /// ([`crate::exec`]). `workers <= 1` falls back to [`Sweep::run`] (same
+    /// outcome, no thread overhead); any worker count produces bit-identical
+    /// curves, states, and FLOP totals to the serial path.
+    pub fn run_parallel(&mut self, workers: usize) -> Result<SweepOutcome> {
+        if workers <= 1 {
+            return self.run();
         }
+        let graph = self.lower()?;
+        run_graph(
+            self.trainer.manifest,
+            self.trainer.corpus,
+            &graph,
+            &PoolOptions { workers, progress: self.progress.clone(), keep_states: self.keep_states },
+        )
+    }
 
-        let mut results: Vec<Option<RunResult>> = plans.iter().map(|_| None).collect();
-        let mut executed_flops = 0.0f64;
-        let mut shared_flops = 0.0f64;
+    // ------------------------------------------------------------ internals
 
-        for idxs in groups.values() {
-            let fork_step = plans[idxs[0]].first_boundary();
-            if idxs.len() == 1 || fork_step == 0 {
-                // Nothing to share: run standalone.
-                for &i in idxs {
+    fn attach_progress(&self, d: &mut RunDriver<'a>) {
+        if let Some(sink) = &self.progress {
+            d.attach(Box::new(ProgressPrinter::with_sink(sink.clone())));
+        }
+    }
+
+    /// Consume a finished driver into its result (+ state when kept).
+    fn collect(&self, d: RunDriver<'a>) -> Result<(RunResult, Option<ModelState>)> {
+        let state = if self.keep_states { Some(d.state()?) } else { None };
+        Ok((d.finish(), state))
+    }
+
+    fn run_serial(&self, graph: &JobGraph) -> Result<SweepOutcome> {
+        let plans = graph.plans();
+        let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
+            plans.iter().map(|_| None).collect();
+        let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
+
+        for group in graph.groups() {
+            let Some(trunk_id) = group.trunk else {
+                // Nothing to share: run each plan standalone.
+                for &i in &group.plan_idxs {
                     let mut d = RunDriver::new(self.trainer, plans[i].clone())?;
+                    self.attach_progress(&mut d);
                     d.run_to_end()?;
-                    let res = d.finish();
-                    executed_flops += res.ledger.total;
-                    results[i] = Some(res);
+                    per_plan[i] = Some(self.collect(d)?);
                 }
                 continue;
-            }
+            };
 
             // Shared trunk: one driver carries every variant to the boundary.
-            let mut trunk = RunDriver::new(self.trainer, plans[idxs[0]].clone())?;
+            let JobKind::Trunk { fork_step, .. } = graph.jobs()[trunk_id].kind else {
+                bail!("internal: group trunk {trunk_id} is not a trunk job");
+            };
+            let mut trunk = RunDriver::new(self.trainer, plans[group.plan_idxs[0]].clone())?;
+            self.attach_progress(&mut trunk);
             trunk.advance(fork_step)?;
             if trunk.step_index() != fork_step {
                 bail!(
                     "sweep trunk for '{}' stopped at step {} instead of the boundary {}",
-                    plans[idxs[0]].name(),
+                    plans[group.plan_idxs[0]].name(),
                     trunk.step_index(),
                     fork_step
                 );
             }
             let snap = trunk.snapshot()?;
-            let trunk_flops = snap.ledger.total;
-            executed_flops += trunk_flops;
-            shared_flops += trunk_flops * (idxs.len() - 1) as f64;
+            trunk_flops.insert(trunk_id, snap.ledger.total);
 
             // Fork each variant from the trunk and interleave them over the
             // shared engine, one eval period at a time.
-            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(idxs.len());
-            for &i in idxs {
-                drivers.push((i, RunDriver::resume(self.trainer, plans[i].clone(), snap.clone())?));
+            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(group.plan_idxs.len());
+            for &i in &group.plan_idxs {
+                let mut d = RunDriver::resume(self.trainer, plans[i].clone(), snap.clone())?;
+                self.attach_progress(&mut d);
+                drivers.push((i, d));
             }
             loop {
                 let mut progressed = false;
@@ -128,16 +199,10 @@ impl<'a> Sweep<'a> {
                 }
             }
             for (i, d) in drivers {
-                let res = d.finish();
-                executed_flops += res.ledger.total - trunk_flops;
-                results[i] = Some(res);
+                per_plan[i] = Some(self.collect(d)?);
             }
         }
 
-        Ok(SweepOutcome {
-            results: results.into_iter().map(|r| r.expect("every plan produced a result")).collect(),
-            executed_flops,
-            shared_flops,
-        })
+        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
     }
 }

@@ -1,0 +1,331 @@
+//! Lowering run plans into a dependency-ordered job graph.
+//!
+//! The graph is the *shape* of a sweep, computed without touching an engine:
+//! plans whose step/eval stream is identical up to their first boundary
+//! (same [`RunPlan::prefix_key`] and the same boundary step — exactly the
+//! sharing rule of the serial [`crate::coordinator::Sweep`]) collapse into
+//! one **trunk** job that trains the shared stage-0 segment once and
+//! snapshots at the fork step, plus one **tail** job per variant that
+//! resumes from that snapshot and runs to the horizon. Plans that share with
+//! nothing lower to **standalone** jobs. Job ids are creation-ordered and a
+//! job's dependencies always precede it, so the job list is its own
+//! topological order.
+//!
+//! Because job boundaries sit on dispatch-unit/eval-period boundaries (the
+//! fork step is a stage boundary, where the driver is always pausable) and
+//! jobs communicate only via in-memory [`DriverSnapshot`]s, executing the
+//! graph on any number of workers replays, per run, the exact engine-call
+//! sequence the serial sweep makes — the determinism contract the
+//! integration suite pins down. [`JobGraph::assemble`] folds per-job results
+//! back into a [`SweepOutcome`] in the serial sweep's group order, so even
+//! the f64 FLOP accumulation is bit-identical regardless of completion
+//! order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{RunPlan, RunResult, SweepOutcome};
+use crate::runtime::ModelState;
+
+/// Index into [`JobGraph::jobs`]; ids are creation-ordered (deps first).
+pub type JobId = usize;
+
+/// What a job executes. `plan_idx` indexes [`JobGraph::plans`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Train `plan_idx`'s shared stage-0 segment to `fork_step` and snapshot
+    /// there; the snapshot is the group's fork point.
+    Trunk { plan_idx: usize, fork_step: usize },
+    /// Resume `plan_idx` from `trunk`'s snapshot and run to the horizon.
+    Tail { plan_idx: usize, trunk: JobId },
+    /// Run `plan_idx` start-to-finish (no sharing).
+    Standalone { plan_idx: usize },
+}
+
+impl JobKind {
+    /// Plan whose [`RunResult`] this job produces (trunks produce none).
+    pub fn result_plan(&self) -> Option<usize> {
+        match *self {
+            JobKind::Trunk { .. } => None,
+            JobKind::Tail { plan_idx, .. } | JobKind::Standalone { plan_idx } => Some(plan_idx),
+        }
+    }
+}
+
+/// One schedulable unit: ready when every job in `deps` has completed.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub kind: JobKind,
+    pub deps: Vec<JobId>,
+}
+
+/// One sharing group, in the serial sweep's (BTreeMap key) order. `trunk`
+/// is the shared-trunk job when the group has one (≥ 2 plans with a
+/// non-zero fork step).
+#[derive(Debug, Clone)]
+pub struct GroupSpec {
+    pub key: String,
+    pub plan_idxs: Vec<usize>,
+    pub trunk: Option<JobId>,
+}
+
+/// Dependency-ordered lowering of a set of plans. See module docs.
+#[derive(Debug)]
+pub struct JobGraph {
+    plans: Vec<RunPlan>,
+    jobs: Vec<JobSpec>,
+    groups: Vec<GroupSpec>,
+}
+
+impl JobGraph {
+    /// Sharing key: plans with equal keys train the same trunk. This is the
+    /// single definition both the serial sweep and the parallel scheduler
+    /// group by, so the two paths cannot disagree about what is shared.
+    pub fn group_key(plan: &RunPlan) -> String {
+        format!("{}@{}", plan.prefix_key(), plan.first_boundary())
+    }
+
+    /// Lower `plans` into jobs. Groups are emitted in key order (matching
+    /// the serial sweep's iteration order); within a group the trunk job
+    /// precedes its tails and tails keep plan-submission order.
+    pub fn lower(plans: Vec<RunPlan>) -> Result<JobGraph> {
+        if plans.is_empty() {
+            bail!("job graph needs at least one plan");
+        }
+        let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, p) in plans.iter().enumerate() {
+            by_key.entry(Self::group_key(p)).or_default().push(i);
+        }
+        let mut jobs: Vec<JobSpec> = Vec::new();
+        let mut groups = Vec::with_capacity(by_key.len());
+        for (key, plan_idxs) in by_key {
+            let fork_step = plans[plan_idxs[0]].first_boundary();
+            if plan_idxs.len() == 1 || fork_step == 0 {
+                for &i in &plan_idxs {
+                    jobs.push(JobSpec {
+                        id: jobs.len(),
+                        kind: JobKind::Standalone { plan_idx: i },
+                        deps: Vec::new(),
+                    });
+                }
+                groups.push(GroupSpec { key, plan_idxs, trunk: None });
+            } else {
+                let trunk = jobs.len();
+                jobs.push(JobSpec {
+                    id: trunk,
+                    kind: JobKind::Trunk { plan_idx: plan_idxs[0], fork_step },
+                    deps: Vec::new(),
+                });
+                for &i in &plan_idxs {
+                    jobs.push(JobSpec {
+                        id: jobs.len(),
+                        kind: JobKind::Tail { plan_idx: i, trunk },
+                        deps: vec![trunk],
+                    });
+                }
+                groups.push(GroupSpec { key, plan_idxs, trunk: Some(trunk) });
+            }
+        }
+        Ok(JobGraph { plans, jobs, groups })
+    }
+
+    pub fn plans(&self) -> &[RunPlan] {
+        &self.plans
+    }
+
+    pub fn jobs(&self) -> &[JobSpec] {
+        &self.jobs
+    }
+
+    pub fn groups(&self) -> &[GroupSpec] {
+        &self.groups
+    }
+
+    /// Jobs unlocked by `job` completing (the tails of a trunk).
+    pub fn dependents(&self, job: JobId) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .filter(|j| j.deps.contains(&job))
+            .map(|j| j.id)
+            .collect()
+    }
+
+    /// Fold per-plan results into a [`SweepOutcome`], replaying the serial
+    /// sweep's accumulation order exactly (group by group, members in
+    /// submission order), so `executed_flops`/`shared_flops` are
+    /// bit-identical to `Sweep::run` no matter what order jobs completed in.
+    ///
+    /// `per_plan[i]` is plan i's result (+ its final model state when the
+    /// sweep was asked to keep states); `trunk_flops(job)` is the ledger
+    /// total of the trunk job's snapshot.
+    pub fn assemble(
+        &self,
+        per_plan: Vec<Option<(RunResult, Option<ModelState>)>>,
+        trunk_flops: impl Fn(JobId) -> Option<f64>,
+    ) -> Result<SweepOutcome> {
+        if per_plan.len() != self.plans.len() {
+            bail!(
+                "assemble got {} results for {} plans",
+                per_plan.len(),
+                self.plans.len()
+            );
+        }
+        let mut executed_flops = 0.0f64;
+        let mut shared_flops = 0.0f64;
+        for g in &self.groups {
+            let totals = g.plan_idxs.iter().map(|&i| {
+                per_plan[i]
+                    .as_ref()
+                    .map(|(r, _)| r.ledger.total)
+                    .ok_or_else(|| anyhow!("plan '{}' produced no result", self.plans[i].name()))
+            });
+            match g.trunk {
+                None => {
+                    for t in totals {
+                        executed_flops += t?;
+                    }
+                }
+                Some(trunk) => {
+                    let tf = trunk_flops(trunk)
+                        .ok_or_else(|| anyhow!("trunk job {trunk} produced no snapshot"))?;
+                    executed_flops += tf;
+                    shared_flops += tf * (g.plan_idxs.len() - 1) as f64;
+                    for t in totals {
+                        executed_flops += t? - tf;
+                    }
+                }
+            }
+        }
+        let mut results = Vec::with_capacity(per_plan.len());
+        let mut final_states = Vec::with_capacity(per_plan.len());
+        for (i, slot) in per_plan.into_iter().enumerate() {
+            let (res, state) =
+                slot.ok_or_else(|| anyhow!("plan '{}' produced no result", self.plans[i].name()))?;
+            results.push(res);
+            final_states.push(state);
+        }
+        Ok(SweepOutcome { results, final_states, executed_flops, shared_flops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunBuilder;
+    use crate::expansion::ExpandSpec;
+    use crate::flops::FlopLedger;
+    use crate::metrics::Curve;
+    use crate::schedule::Schedule;
+
+    fn sched() -> Schedule {
+        Schedule::Constant { peak: 0.01, warmup_frac: 0.02 }
+    }
+
+    fn prog(name: &str, tau: usize, seed: u64) -> RunPlan {
+        RunBuilder::progressive(name, "s", "l", tau, 100, sched(), ExpandSpec::default())
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    fn fixed(name: &str, total: usize) -> RunPlan {
+        RunBuilder::fixed(name, "l", total, sched()).build().unwrap()
+    }
+
+    #[test]
+    fn shared_group_lowers_to_trunk_plus_tails() {
+        // a+b share (same prefix, same τ); c forks elsewhere; d is fixed.
+        let graph = JobGraph::lower(vec![
+            prog("a", 40, 1),
+            prog("b", 40, 1),
+            prog("c", 60, 1),
+            fixed("d", 100),
+        ])
+        .unwrap();
+        let trunks: Vec<_> = graph
+            .jobs()
+            .iter()
+            .filter(|j| matches!(j.kind, JobKind::Trunk { .. }))
+            .collect();
+        assert_eq!(trunks.len(), 1, "exactly one shared trunk: {:?}", graph.jobs());
+        let trunk = trunks[0];
+        assert!(matches!(trunk.kind, JobKind::Trunk { fork_step: 40, .. }));
+        let tails: Vec<_> = graph
+            .jobs()
+            .iter()
+            .filter(|j| matches!(j.kind, JobKind::Tail { .. }))
+            .collect();
+        assert_eq!(tails.len(), 2);
+        for t in &tails {
+            assert_eq!(t.deps, vec![trunk.id]);
+            assert!(t.id > trunk.id, "tails must come after their trunk");
+        }
+        // c and d run standalone.
+        let standalone = graph
+            .jobs()
+            .iter()
+            .filter(|j| matches!(j.kind, JobKind::Standalone { .. }))
+            .count();
+        assert_eq!(standalone, 2);
+        assert_eq!(graph.jobs().len(), 5);
+        // Dependents of the trunk are exactly its tails.
+        assert_eq!(graph.dependents(trunk.id).len(), 2);
+    }
+
+    #[test]
+    fn every_plan_gets_exactly_one_result_job() {
+        let graph = JobGraph::lower(vec![prog("a", 40, 1), prog("b", 40, 1), fixed("c", 100)]).unwrap();
+        let mut seen = vec![0usize; graph.plans().len()];
+        for j in graph.jobs() {
+            if let Some(i) = j.kind.result_plan() {
+                seen[i] += 1;
+            }
+        }
+        assert_eq!(seen, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn different_seeds_do_not_share() {
+        let graph = JobGraph::lower(vec![prog("a", 40, 1), prog("b", 40, 2)]).unwrap();
+        assert_eq!(graph.groups().len(), 2);
+        assert!(graph.jobs().iter().all(|j| matches!(j.kind, JobKind::Standalone { .. })));
+    }
+
+    #[test]
+    fn empty_plan_set_is_an_error() {
+        assert!(JobGraph::lower(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn assemble_replays_serial_flop_accounting() {
+        // Group {a, b} shares a 100-FLOP trunk; c is standalone.
+        let graph =
+            JobGraph::lower(vec![prog("a", 40, 1), prog("b", 40, 1), fixed("c", 100)]).unwrap();
+        let res = |total: f64| RunResult {
+            curve: Curve::new("r"),
+            ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
+            boundaries: Vec::new(),
+            final_val_loss: 0.0,
+        };
+        let trunk_id = graph.groups().iter().find_map(|g| g.trunk).unwrap();
+        let per_plan = vec![Some((res(300.0), None)), Some((res(320.0), None)), Some((res(500.0), None))];
+        let out = graph
+            .assemble(per_plan, |j| (j == trunk_id).then_some(100.0))
+            .unwrap();
+        // Serial order: shared group first (key sorts by prefix), trunk once,
+        // then each tail minus the trunk; then the standalone.
+        assert_eq!(out.results.len(), 3);
+        assert!((out.shared_flops - 100.0).abs() < 1e-12);
+        let expect = 100.0 + (300.0 - 100.0) + (320.0 - 100.0) + 500.0;
+        assert!((out.executed_flops - expect).abs() < 1e-12, "{}", out.executed_flops);
+    }
+
+    #[test]
+    fn assemble_rejects_missing_results() {
+        let graph = JobGraph::lower(vec![fixed("c", 100)]).unwrap();
+        assert!(graph.assemble(vec![None], |_| None).is_err());
+        assert!(graph.assemble(Vec::new(), |_| None).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Parallel execution subsystem: lower many runs into a dependency-ordered
+//! job graph and execute it over a pool of engine-owning worker threads.
+//!
+//! Three pieces (DESIGN.md §6):
+//!
+//! - [`JobGraph`]: pure lowering of a set of [`crate::coordinator::RunPlan`]s
+//!   into jobs — shared trunk segments, fork snapshots, per-variant tails —
+//!   plus the canonical-order outcome assembly. No engine required; fully
+//!   property-testable.
+//! - the worker pool ([`run_graph`]): one OS thread per worker, each owning
+//!   its own [`crate::runtime::Engine`] (PJRT client + compile cache). The
+//!   engine's non-`Send` internals never cross a thread; jobs and results
+//!   travel as plain data over channels.
+//! - the scheduler (inside [`run_graph`]): dispatches ready jobs to idle
+//!   workers, publishes trunk snapshots to unlock tails, and aborts cleanly
+//!   on the first error.
+//!
+//! **Determinism contract.** A parallel sweep is bit-identical to the serial
+//! [`crate::coordinator::Sweep::run`] for any worker count and any job
+//! interleaving, because (1) jobs communicate only via in-memory
+//! `DPTDRV01`-form [`crate::checkpoint::DriverSnapshot`]s taken at
+//! dispatch-unit boundaries, (2) each job's engine-call sequence is a pure
+//! function of its plan (+ fork snapshot) — never of the schedule — and
+//! (3) results are folded in the serial sweep's canonical group order
+//! ([`JobGraph::assemble`]), so even f64 FLOP accumulation matches bitwise.
+
+pub mod graph;
+pub mod pool;
+
+pub use graph::{GroupSpec, JobGraph, JobId, JobKind, JobSpec};
+pub use pool::{run_graph, PoolOptions};
+
+/// Default worker count: one per available hardware thread (the `repro`
+/// CLI's `--workers` default).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

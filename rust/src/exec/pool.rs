@@ -1,0 +1,350 @@
+//! Engine-per-worker pool and the job scheduler.
+//!
+//! [`Engine`]'s internals (the PJRT client, the `Rc`-cached executables) are
+//! deliberately non-`Send`; this module is the boundary that keeps them
+//! that way. Each worker is one OS thread that constructs its **own**
+//! engine — own PJRT client, own compile cache — and never lets it cross
+//! the thread. Everything that does cross is plain data: [`RunPlan`]s and
+//! in-memory [`DriverSnapshot`]s going out, [`RunResult`]s and snapshots
+//! coming back.
+//!
+//! Scheduling is demand-driven over channels: the scheduler owns the ready
+//! queue, each worker has a private job channel and announces itself over a
+//! shared reply channel (`Ready` once its engine is up, `Done` after every
+//! job). Ready jobs go to idle workers; a trunk job's completion publishes
+//! its snapshot and unlocks the group's tail jobs. Which worker runs which
+//! job — and in what interleaving — cannot affect the outcome: every job's
+//! engine-call sequence is a pure function of its plan (+ fork snapshot),
+//! and [`JobGraph::assemble`] folds the results in the serial sweep's
+//! canonical order. A failed job (or a worker whose engine fails to
+//! construct) aborts the sweep: no new jobs are issued, in-flight jobs are
+//! drained, and the first error is returned.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::DriverSnapshot;
+use crate::coordinator::{
+    ProgressPrinter, ProgressSink, RunDriver, RunPlan, RunResult, SweepOutcome, Trainer,
+};
+use crate::data::Corpus;
+use crate::runtime::{Engine, Manifest, ModelState};
+
+use super::graph::{JobGraph, JobId, JobKind};
+
+/// Pool configuration for one graph execution.
+#[derive(Debug, Clone, Default)]
+pub struct PoolOptions {
+    /// Worker threads (each with its own engine); clamped to [1, #jobs].
+    pub workers: usize,
+    /// When set, every driver gets a [`ProgressPrinter`] writing whole lines
+    /// through this shared sink (prefixed with the worker index).
+    pub progress: Option<ProgressSink>,
+    /// Materialize each run's final model state into the outcome.
+    pub keep_states: bool,
+}
+
+/// Work sent to a worker. Only plain `Send` data — engines never move.
+enum WorkItem {
+    Trunk {
+        job: JobId,
+        plan: RunPlan,
+        fork_step: usize,
+    },
+    Run {
+        job: JobId,
+        plan_idx: usize,
+        plan: RunPlan,
+        /// Fork snapshot for tail jobs; `None` for standalone runs.
+        snap: Option<Arc<DriverSnapshot>>,
+        keep_state: bool,
+    },
+}
+
+impl WorkItem {
+    fn job(&self) -> JobId {
+        match *self {
+            WorkItem::Trunk { job, .. } | WorkItem::Run { job, .. } => job,
+        }
+    }
+}
+
+/// What a completed job hands back to the scheduler.
+enum JobOutput {
+    /// A trunk's fork snapshot (its ledger total is the shared-prefix cost).
+    Snapshot(Box<DriverSnapshot>),
+    /// A finished run.
+    Run {
+        plan_idx: usize,
+        result: Box<RunResult>,
+        state: Option<Box<ModelState>>,
+    },
+}
+
+enum WorkerMsg {
+    /// Engine constructed; the worker is idle and waiting for jobs.
+    Ready { worker: usize },
+    /// A job finished (successfully or not); the worker is idle again.
+    Done {
+        worker: usize,
+        job: JobId,
+        output: Result<JobOutput>,
+    },
+    /// The worker could not start (engine construction failed) and exited.
+    Dead { error: anyhow::Error },
+}
+
+/// Execute a lowered [`JobGraph`] over `workers` engine-owning threads and
+/// assemble the outcome. Bit-identical to the serial sweep for any worker
+/// count (see module docs / DESIGN.md §6).
+pub fn run_graph(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    graph: &JobGraph,
+    opts: &PoolOptions,
+) -> Result<SweepOutcome> {
+    let jobs = graph.jobs();
+    if jobs.is_empty() {
+        bail!("job graph has no jobs");
+    }
+    // At least one worker, and never more than there are jobs (an idle
+    // worker would still pay engine construction). jobs is non-empty here.
+    let workers = opts.workers.clamp(1, jobs.len());
+
+    thread::scope(|scope| {
+        let (reply_tx, reply_rx) = channel::<WorkerMsg>();
+        let mut to_worker: Vec<Sender<WorkItem>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<WorkItem>();
+            to_worker.push(tx);
+            let replies = reply_tx.clone();
+            let progress = opts.progress.clone();
+            scope.spawn(move || worker_loop(w, manifest, corpus, rx, replies, progress));
+        }
+        drop(reply_tx);
+
+        let mut ready: VecDeque<JobId> =
+            jobs.iter().filter(|j| j.deps.is_empty()).map(|j| j.id).collect();
+        let mut idle: Vec<usize> = Vec::new();
+        // A trunk's snapshot is held only until its last tail is dispatched
+        // (the tails' WorkItems keep their own Arcs); `trunk_flops` outlives
+        // it for the final accounting. Peak host memory therefore matches
+        // the serial sweep's one-group-at-a-time profile, not #groups.
+        let mut snapshots: HashMap<JobId, Arc<DriverSnapshot>> = HashMap::new();
+        let mut undispatched_tails: HashMap<JobId, usize> = HashMap::new();
+        let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
+        let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
+            graph.plans().iter().map(|_| None).collect();
+        let mut in_flight = 0usize;
+        let mut completed = 0usize;
+        let mut alive = workers;
+        let mut first_err: Option<anyhow::Error> = None;
+
+        while completed < jobs.len() {
+            // Hand every ready job to an idle worker (unless aborting).
+            while first_err.is_none() && !ready.is_empty() && !idle.is_empty() {
+                let job = ready.pop_front().expect("checked non-empty");
+                let worker = idle.pop().expect("checked non-empty");
+                let item = make_item(graph, job, &snapshots, opts.keep_states)?;
+                if to_worker[worker].send(item).is_err() {
+                    // The worker hung up after announcing itself (it cannot
+                    // do so gracefully, so treat it as lost) — keep the job.
+                    alive -= 1;
+                    ready.push_front(job);
+                    break;
+                }
+                in_flight += 1;
+                if let JobKind::Tail { trunk, .. } = graph.jobs()[job].kind {
+                    if let Some(left) = undispatched_tails.get_mut(&trunk) {
+                        *left -= 1;
+                        if *left == 0 {
+                            snapshots.remove(&trunk);
+                        }
+                    }
+                }
+            }
+            if first_err.is_some() && in_flight == 0 {
+                break;
+            }
+            if alive == 0 {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("all pool workers exited prematurely"));
+                }
+                break;
+            }
+            match reply_rx.recv() {
+                Ok(WorkerMsg::Ready { worker }) => idle.push(worker),
+                Ok(WorkerMsg::Done { worker, job, output }) => {
+                    in_flight -= 1;
+                    completed += 1;
+                    idle.push(worker);
+                    match output {
+                        Ok(JobOutput::Snapshot(snap)) => {
+                            trunk_flops.insert(job, snap.ledger.total);
+                            let tails = graph.dependents(job);
+                            undispatched_tails.insert(job, tails.len());
+                            snapshots.insert(job, Arc::new(*snap));
+                            ready.extend(tails);
+                        }
+                        Ok(JobOutput::Run { plan_idx, result, state }) => {
+                            per_plan[plan_idx] = Some((*result, state.map(|s| *s)));
+                        }
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                Ok(WorkerMsg::Dead { error }) => {
+                    alive -= 1;
+                    if first_err.is_none() {
+                        first_err = Some(error);
+                    }
+                }
+                Err(_) => {
+                    // Every worker hung up without a Dead message.
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("worker pool disconnected unexpectedly"));
+                    }
+                    break;
+                }
+            }
+        }
+        // Closing the job channels releases the workers; the scope joins them.
+        drop(to_worker);
+
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
+    })
+}
+
+/// Materialize the payload for a ready job (cloning the plan; tails also
+/// take an `Arc` of their trunk's published snapshot).
+fn make_item(
+    graph: &JobGraph,
+    job: JobId,
+    snapshots: &HashMap<JobId, Arc<DriverSnapshot>>,
+    keep_states: bool,
+) -> Result<WorkItem> {
+    let spec = &graph.jobs()[job];
+    Ok(match spec.kind {
+        JobKind::Trunk { plan_idx, fork_step } => WorkItem::Trunk {
+            job,
+            plan: graph.plans()[plan_idx].clone(),
+            fork_step,
+        },
+        JobKind::Tail { plan_idx, trunk } => WorkItem::Run {
+            job,
+            plan_idx,
+            plan: graph.plans()[plan_idx].clone(),
+            snap: Some(
+                snapshots
+                    .get(&trunk)
+                    .cloned()
+                    .context("tail job scheduled before its trunk snapshot")?,
+            ),
+            keep_state: keep_states,
+        },
+        JobKind::Standalone { plan_idx } => WorkItem::Run {
+            job,
+            plan_idx,
+            plan: graph.plans()[plan_idx].clone(),
+            snap: None,
+            keep_state: keep_states,
+        },
+    })
+}
+
+/// One worker thread: construct the thread-local engine, then serve jobs
+/// until the scheduler closes the job channel.
+fn worker_loop(
+    worker: usize,
+    manifest: &Manifest,
+    corpus: &Corpus,
+    jobs: Receiver<WorkItem>,
+    replies: Sender<WorkerMsg>,
+    progress: Option<ProgressSink>,
+) {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = replies.send(WorkerMsg::Dead {
+                error: e.context(format!("pool worker {worker}: engine construction failed")),
+            });
+            return;
+        }
+    };
+    let trainer = Trainer::new(&engine, manifest, corpus);
+    if replies.send(WorkerMsg::Ready { worker }).is_err() {
+        return;
+    }
+    while let Ok(item) = jobs.recv() {
+        let job = item.job();
+        // A panic inside a job must not deadlock the scheduler: convert it
+        // into an error reply (the sweep aborts with it).
+        let output = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_item(trainer, item, worker, progress.as_ref())
+        }))
+        .unwrap_or_else(|payload| Err(anyhow!("worker {worker} panicked: {}", panic_msg(&payload))));
+        if replies.send(WorkerMsg::Done { worker, job, output }).is_err() {
+            return;
+        }
+    }
+}
+
+fn execute_item(
+    trainer: Trainer<'_>,
+    item: WorkItem,
+    worker: usize,
+    progress: Option<&ProgressSink>,
+) -> Result<JobOutput> {
+    let attach = |d: &mut RunDriver<'_>| {
+        if let Some(sink) = progress {
+            d.attach(Box::new(
+                ProgressPrinter::with_sink(sink.clone()).prefixed(format!("w{worker}")),
+            ));
+        }
+    };
+    match item {
+        WorkItem::Trunk { plan, fork_step, .. } => {
+            let name = plan.name().to_string();
+            let mut trunk = RunDriver::new(trainer, plan)?;
+            attach(&mut trunk);
+            trunk.advance(fork_step)?;
+            if trunk.step_index() != fork_step {
+                bail!(
+                    "trunk for '{}' stopped at step {} instead of the fork boundary {}",
+                    name,
+                    trunk.step_index(),
+                    fork_step
+                );
+            }
+            Ok(JobOutput::Snapshot(Box::new(trunk.snapshot()?)))
+        }
+        WorkItem::Run { plan_idx, plan, snap, keep_state, .. } => {
+            let mut d = match snap {
+                Some(s) => RunDriver::resume(trainer, plan, (*s).clone())?,
+                None => RunDriver::new(trainer, plan)?,
+            };
+            attach(&mut d);
+            d.run_to_end()?;
+            let state = if keep_state { Some(Box::new(d.state()?)) } else { None };
+            Ok(JobOutput::Run { plan_idx, result: Box::new(d.finish()), state })
+        }
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}

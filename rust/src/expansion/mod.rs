@@ -119,13 +119,13 @@ fn layer_map(n_src: usize, n_dst: usize, spec: &ExpandSpec) -> Result<Vec<LayerS
                     for i in 0..n_src {
                         map[i] = LayerSource::Src(i);
                     }
-                    for i in n_src..n_dst {
-                        map[i] = fresh;
+                    for slot in map.iter_mut().take(n_dst).skip(n_src) {
+                        *slot = fresh;
                     }
                 }
                 Insertion::Top => {
-                    for i in 0..n_new {
-                        map[i] = fresh;
+                    for slot in map.iter_mut().take(n_new) {
+                        *slot = fresh;
                     }
                     for i in 0..n_src {
                         map[n_new + i] = LayerSource::Src(i);

@@ -8,6 +8,9 @@
 //!   schedules. The v2 API is `RunBuilder` (validated plans) →
 //!   `RunDriver` (resumable state machine) + `Observer` hooks + `Sweep`
 //!   (work-sharing multi-run executor).
+//! - [`exec`]: parallel execution — job-graph lowering of sweeps plus an
+//!   engine-per-worker pool with a deterministic scheduler (bit-identical
+//!   to serial execution for any worker count).
 //! - [`expansion`]: depth-expansion engine (random/copying/zero/... of §3).
 //! - [`schedule`]: WSD / cosine learning-rate schedules (§4's key lever).
 //! - [`data`]: synthetic Markov-Zipf corpus with a known entropy floor.
@@ -23,6 +26,7 @@ pub mod flops;
 pub mod expansion;
 pub mod metrics;
 pub mod coordinator;
+pub mod exec;
 pub mod convex;
 pub mod scaling;
 pub mod checkpoint;

@@ -7,11 +7,13 @@
 //!   progressive <small> <large> [--tau N|--tau-frac F] [--steps N] ...
 //!         [--strategy random|copying|zero|zero_n|zero_l] [--insertion top|bottom]
 //!   sweep <small> <large> [--taus F,F,..] [--strategies a,b,..]
-//!         expansion-variant sweep sharing source-model training
-//!   probe-mixing <small> <large> [--probe-steps N] [--steps N]
+//!         [--workers N] [--progress]
+//!         expansion-variant sweep sharing source-model training, executed
+//!         over N engine-owning pool workers (bit-identical to serial)
+//!   probe-mixing <small> <large> [--probe-steps N] [--steps N] [--workers N]
 //!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
 //!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
-//!   bench-<target>  (fig1..fig22, table1, table2, theory, perf, all)
+//!   bench-<target>  (fig1..fig22, table1, table2, theory, perf, parallel, all)
 //!   list / list-benches / inspect <cfg_id>
 //!
 //! Flags accept `--name value` and `--name=value`; unknown flags are
@@ -27,10 +29,11 @@ use deep_progressive::checkpoint;
 use deep_progressive::cli::{Args, CommandSpec};
 use deep_progressive::convex::{simulate, ConvexProblem, Teleport};
 use deep_progressive::coordinator::{
-    recipe, LossSpikeDetector, PeriodicCheckpointer, ProgressPrinter, RunBuilder, RunDriver, Sweep,
-    Trainer,
+    recipe, LossSpikeDetector, PeriodicCheckpointer, ProgressPrinter, ProgressSink, RunBuilder,
+    RunDriver, Sweep, Trainer,
 };
 use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::exec::default_workers;
 use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use deep_progressive::runtime::{Engine, Manifest};
 use deep_progressive::schedule::Schedule;
@@ -55,14 +58,14 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     const SWEEP: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
-            "strategies", "insertion", "os", "expand-seed",
+            "strategies", "insertion", "os", "expand-seed", "workers",
         ],
-        switches: &[],
+        switches: &["progress"],
     };
     const PROBE: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "probe-steps",
-            "production-steps", "tol", "strategy", "insertion", "os", "expand-seed",
+            "production-steps", "tol", "strategy", "insertion", "os", "expand-seed", "workers",
         ],
         switches: &[],
     };
@@ -75,7 +78,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         switches: &[],
     };
     const BENCH: CommandSpec =
-        CommandSpec { flags: &["artifacts", "out", "steps", "seed"], switches: &[] };
+        CommandSpec { flags: &["artifacts", "out", "steps", "seed", "workers"], switches: &[] };
     const LISTING: CommandSpec = CommandSpec { flags: &["artifacts"], switches: &[] };
     match cmd {
         "train" => Some(TRAIN),
@@ -209,7 +212,7 @@ fn main() -> Result<()> {
                 None => RunDriver::new(trainer, plan)?,
             };
             if args.has("progress") {
-                driver.attach(Box::new(ProgressPrinter));
+                driver.attach(Box::new(ProgressPrinter::default()));
             }
             let save_every = args.get_usize("save-every", 0);
             if save_every > 0 {
@@ -255,7 +258,7 @@ fn main() -> Result<()> {
             .build()?;
             let mut driver = RunDriver::new(trainer, plan)?;
             if args.has("progress") {
-                driver.attach(Box::new(ProgressPrinter));
+                driver.attach(Box::new(ProgressPrinter::default()));
             }
             let spikes = Rc::new(RefCell::new(LossSpikeDetector::new(0.0)));
             driver.attach(Box::new(spikes.clone()));
@@ -287,7 +290,11 @@ fn main() -> Result<()> {
                 .collect();
             let strategies: Vec<&str> = args.get_str("strategies", "random,zero").split(',').collect();
             let base = expand_from(&args)?;
+            let workers = args.get_usize("workers", default_workers());
             let mut sweep = Sweep::new(trainer);
+            if args.has("progress") {
+                sweep.progress(ProgressSink::stderr());
+            }
             let mut labels = Vec::new();
             for &tau in &taus {
                 for sname in &strategies {
@@ -306,7 +313,7 @@ fn main() -> Result<()> {
                     sweep.add(plan);
                 }
             }
-            let outcome = sweep.run()?;
+            let outcome = sweep.run_parallel(workers)?;
             for ((tau, sname), res) in labels.iter().zip(&outcome.results) {
                 res.curve.write_csv(std::path::Path::new(&out))?;
                 println!(
@@ -315,30 +322,49 @@ fn main() -> Result<()> {
                 );
             }
             println!(
-                "executed {:.2e} FLOPs; shared source training saved {:.2e} FLOPs",
-                outcome.executed_flops, outcome.shared_flops
+                "executed {:.2e} FLOPs over {workers} worker{}; shared source training saved {:.2e} FLOPs",
+                outcome.executed_flops,
+                if workers == 1 { "" } else { "s" },
+                outcome.shared_flops
             );
             Ok(())
         }
         "probe-mixing" => {
-            let engine = Engine::cpu()?;
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
-            let trainer = Trainer::new(&engine, &manifest, &corpus);
             let small = args.positional.first().expect("usage: probe-mixing <small> <large>").clone();
             let large = args.positional.get(1).expect("usage: probe-mixing <small> <large>").clone();
             let probe_steps = args.get_usize("probe-steps", steps);
             let production = args.get_usize("production-steps", steps * 10);
-            let outcome = recipe::probe_mixing_time(
-                &trainer,
-                &small,
-                &large,
-                probe_steps,
-                production,
-                schedule_from(&args),
-                expand_from(&args),
-                args.get_f32("tol", 0.04),
-            )?;
+            let workers = args.get_usize("workers", default_workers());
+            // With ≥ 2 workers the probe pair runs as two lockstep jobs on
+            // engine-owning threads — identical outcome to the serial path.
+            let outcome = if workers >= 2 {
+                recipe::probe_mixing_time_parallel(
+                    &manifest,
+                    &corpus,
+                    &small,
+                    &large,
+                    probe_steps,
+                    production,
+                    schedule_from(&args),
+                    expand_from(&args)?,
+                    args.get_f32("tol", 0.04),
+                )?
+            } else {
+                let engine = Engine::cpu()?;
+                let trainer = Trainer::new(&engine, &manifest, &corpus);
+                recipe::probe_mixing_time(
+                    &trainer,
+                    &small,
+                    &large,
+                    probe_steps,
+                    production,
+                    schedule_from(&args),
+                    expand_from(&args)?,
+                    args.get_f32("tol", 0.04),
+                )?
+            };
             println!("{outcome:?}");
             Ok(())
         }
@@ -367,7 +393,8 @@ fn main() -> Result<()> {
             Ok(())
         }
         cmd if cmd.starts_with("bench-") => {
-            let ctx = Ctx::new(&artifacts, &out, steps, seed)?;
+            let workers = args.get_usize("workers", default_workers());
+            let ctx = Ctx::new(&artifacts, &out, steps, seed, workers)?;
             run_target(&ctx, &cmd[6..])
         }
         other => {
@@ -387,7 +414,10 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
   progressive <small> <large>       zero/one-layer progressive training
   sweep <small> <large>             expansion-variant sweep; source-model
         [--taus F,F] [--strategies a,b] training is shared across variants
-  probe-mixing <small> <large>      derive τ from two early-stopped probes (§7)
+        [--workers N] [--progress]      parallel over N engine-owning workers
+                                        (default: all cores; bit-identical)
+  probe-mixing <small> <large>      derive τ from two early-stopped probes (§7);
+        [--workers N]                   ≥2 workers run the pair as lockstep jobs
   convex                            §4 convex-theory simulator
   expand-ckpt <src> <dst>           offline checkpoint depth expansion
   bench-fig1 .. bench-fig22         reproduce each paper figure
@@ -395,7 +425,9 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
   bench-theory                      §4 bound verification
   bench-perf                        dispatch-overhead benchmark: device-resident
                                     vs host-roundtrip steps/sec (BENCH_perf.json)
-  bench-all                         everything
+  bench-parallel                    pool-scaling benchmark: steps/sec at 1/2/4
+                                    workers on a fixed grid (BENCH_parallel.json)
+  bench-all                         everything (grids honor --workers)
   list | list-benches | inspect <cfg_id>
 
 COMMON FLAGS
@@ -404,5 +436,6 @@ COMMON FLAGS
   --strategy random|copying|copying_inter|copying_last|zero|zero_n|zero_l
   --insertion bottom|top   --os inherit|copy|reset
   --tau N | --tau-frac F   --seed N   --eval-every N   --progress
+  --workers N        pool size for sweep/bench grids (default: all cores)
   --artifacts DIR (default artifacts)   --out DIR (default results)
 "#;

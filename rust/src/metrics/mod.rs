@@ -48,7 +48,7 @@ impl Curve {
             return None;
         }
         for w in pts.windows(2) {
-            if tokens >= w[0].tokens && tokens <= w[1].tokens {
+            if (w[0].tokens..=w[1].tokens).contains(&tokens) {
                 let span = (w[1].tokens - w[0].tokens).max(1) as f32;
                 let t = (tokens - w[0].tokens) as f32 / span;
                 return Some(w[0].val_loss * (1.0 - t) + w[1].val_loss * t);

@@ -3,7 +3,7 @@
 //! These require `make artifacts` to have run (they are skipped with a clear
 //! message otherwise, so `cargo test` stays green on a fresh checkout).
 
-use deep_progressive::coordinator::{RunBuilder, RunDriver, Sweep, Trainer};
+use deep_progressive::coordinator::{recipe, RunBuilder, RunDriver, Sweep, Trainer};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::{expand, CopyOrder, ExpandSpec, OsPolicy, Strategy};
 use deep_progressive::flops::flops_per_step;
@@ -407,4 +407,116 @@ fn sweep_shares_source_model_training() {
     for (a, b) in standalone.curve.points.iter().zip(&outcome.results[0].curve.points) {
         assert_eq!(a, b, "sweep-forked run diverged from standalone");
     }
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    // Acceptance (parallel execution subsystem): a fig-3-style grid — one
+    // fixed baseline plus a shared-trunk strategy group — executed over the
+    // 2-worker engine pool must reproduce the serial sweep exactly: curves,
+    // boundaries, per-run ledgers, final model states, and the
+    // executed/shared FLOP totals, all bit-identical.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let (total, tau) = (120, 40);
+    let plans = || {
+        let mut v =
+            vec![RunBuilder::fixed("par-fixed", "gpt2.l3", total, sched).build().unwrap()];
+        for (name, strategy) in [("random", Strategy::Random), ("zero", Strategy::Zero)] {
+            v.push(
+                RunBuilder::progressive(
+                    format!("par-{name}"),
+                    "gpt2.l0",
+                    "gpt2.l3",
+                    tau,
+                    total,
+                    sched,
+                    ExpandSpec { strategy, ..Default::default() },
+                )
+                .build()
+                .unwrap(),
+            );
+        }
+        v
+    };
+    let run = |workers: usize| {
+        let mut sweep = Sweep::new(trainer);
+        sweep.keep_final_states(true);
+        for p in plans() {
+            sweep.add(p);
+        }
+        sweep.run_parallel(workers).unwrap()
+    };
+    let serial = run(1); // run_parallel(1) delegates to the serial path
+    let par = run(2);
+
+    assert_eq!(serial.results.len(), par.results.len());
+    assert_eq!(
+        serial.executed_flops.to_bits(),
+        par.executed_flops.to_bits(),
+        "executed FLOPs diverged: {} vs {}",
+        serial.executed_flops,
+        par.executed_flops
+    );
+    assert_eq!(serial.shared_flops.to_bits(), par.shared_flops.to_bits());
+    for (a, b) in serial.results.iter().zip(&par.results) {
+        assert_eq!(a.curve.name, b.curve.name, "result order changed");
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (p, q) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(p, q, "curve diverged under parallel execution ('{}')", a.curve.name);
+        }
+        assert_eq!(a.boundaries, b.boundaries);
+        assert_eq!(a.ledger.total.to_bits(), b.ledger.total.to_bits());
+        assert_eq!(a.ledger.tokens, b.ledger.tokens);
+        assert_eq!(a.final_val_loss.to_bits(), b.final_val_loss.to_bits());
+    }
+    for (i, (a, b)) in serial.final_states.iter().zip(&par.final_states).enumerate() {
+        let (a, b) = (a.as_ref().expect("kept state"), b.as_ref().expect("kept state"));
+        for (x, y) in a.params.iter().zip(&b.params) {
+            assert_eq!(x.data, y.data, "final params diverged under parallel execution (run {i})");
+        }
+        for (x, y) in a.opt.iter().zip(&b.opt) {
+            assert_eq!(x.data, y.data, "final opt state diverged under parallel execution (run {i})");
+        }
+    }
+}
+
+#[test]
+fn parallel_probe_pair_matches_serial() {
+    // The §7 probe pair run as two lockstep engine-owning jobs must make the
+    // same early-stop decision and derive the same τ as the serial path.
+    let Some(m) = manifest() else { return };
+    let corpus = small_corpus();
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let serial = {
+        let engine = Engine::cpu().unwrap();
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        recipe::probe_mixing_time(
+            &trainer,
+            "gpt2.l0",
+            "gpt2.l3",
+            160,
+            1600,
+            sched,
+            ExpandSpec::default(),
+            0.05,
+        )
+        .unwrap()
+    };
+    let par = recipe::probe_mixing_time_parallel(
+        &m,
+        &corpus,
+        "gpt2.l0",
+        "gpt2.l3",
+        160,
+        1600,
+        sched,
+        ExpandSpec::default(),
+        0.05,
+    )
+    .unwrap();
+    assert_eq!(serial, par);
 }

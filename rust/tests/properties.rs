@@ -5,6 +5,7 @@
 
 use deep_progressive::coordinator::RunBuilder;
 use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
+use deep_progressive::exec::{JobGraph, JobKind};
 use deep_progressive::expansion::{applicable, expand, CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use deep_progressive::metrics::{mixing_point, Curve, CurvePoint};
 use deep_progressive::runtime::{Manifest, ModelState};
@@ -28,7 +29,10 @@ fn prop_schedules_are_bounded_and_end_low() {
         ]);
         for t in [0, total / 3, total / 2, total - 1] {
             let lr = sched.lr(t, total);
-            assert!(lr >= 0.0 && lr <= peak * (1.0 + 1e-5), "lr {lr} out of [0, {peak}] at {t}/{total}");
+            assert!(
+                (0.0..=peak * (1.0 + 1e-5)).contains(&lr),
+                "lr {lr} out of [0, {peak}] at {t}/{total}"
+            );
         }
         // All decaying schedules end below 10% of peak.
         if !matches!(sched, Schedule::Constant { .. }) {
@@ -94,6 +98,103 @@ fn prop_builder_accepts_iff_boundaries_strictly_increasing_inside_horizon() {
             // either the first declared boundary or the horizon.
             assert_eq!(plan.first_boundary(), steps.first().copied().unwrap_or(total));
         }
+    });
+}
+
+// ---------------------------------------------------------------- job graph
+
+#[test]
+fn prop_job_graph_lowering_invariants() {
+    // Arbitrary grids: a few "prefix classes" (shared stage-0 config, seed,
+    // horizon), each plan either fixed or progressive with one of a few τs.
+    // Plans share a trunk iff prefix AND first boundary coincide.
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    proptest(300, |g| {
+        let n_plans = g.usize(1..12);
+        let mut plans = Vec::with_capacity(n_plans);
+        for i in 0..n_plans {
+            let class = g.usize(0..3);
+            let total = 100 + class * 60;
+            let mut b = RunBuilder::new(format!("p{i}"))
+                .start(format!("src{class}"))
+                .total_steps(total)
+                .schedule(sched)
+                .eval_every(10)
+                .seed(class as u64);
+            if g.bool() {
+                let tau = 20 + g.usize(0..3) * 10;
+                b = b.then_expand_at(tau, format!("dst{class}"), ExpandSpec::default());
+            }
+            plans.push(b.build().unwrap());
+        }
+        let graph = JobGraph::lower(plans.clone()).unwrap();
+
+        // 1. Every plan chains into exactly one result-producing job.
+        let mut owners = vec![0usize; n_plans];
+        for j in graph.jobs() {
+            if let Some(idx) = j.kind.result_plan() {
+                owners[idx] += 1;
+            }
+        }
+        assert!(owners.iter().all(|&c| c == 1), "result-job ownership: {owners:?}");
+
+        // 2. Job ids are their positions and dependencies always precede
+        //    their job — the job list is its own topological order.
+        for (pos, j) in graph.jobs().iter().enumerate() {
+            assert_eq!(j.id, pos);
+            for &d in &j.deps {
+                assert!(d < j.id, "dep {d} does not precede job {}", j.id);
+            }
+        }
+
+        // 3. Group coherence: members share the key, keys are unique, and
+        //    the groups partition the plan set.
+        let mut seen_keys = std::collections::HashSet::new();
+        let mut all_idxs = Vec::new();
+        for gr in graph.groups() {
+            assert!(seen_keys.insert(gr.key.clone()), "duplicate group key {}", gr.key);
+            for &i in &gr.plan_idxs {
+                assert_eq!(JobGraph::group_key(&plans[i]), gr.key);
+                all_idxs.push(i);
+            }
+            let fork = plans[gr.plan_idxs[0]].first_boundary();
+            if gr.plan_idxs.len() > 1 && fork > 0 {
+                // 4. Shared group: exactly one trunk at the common fork step;
+                //    every tail chains to it (and only to it).
+                let t = gr.trunk.expect("shared group must have a trunk");
+                let JobKind::Trunk { plan_idx, fork_step } = graph.jobs()[t].kind else {
+                    panic!("group trunk {t} is not a trunk job");
+                };
+                assert!(gr.plan_idxs.contains(&plan_idx));
+                assert_eq!(fork_step, fork);
+                for &i in &gr.plan_idxs {
+                    assert_eq!(plans[i].first_boundary(), fork, "fork step mismatch in group");
+                }
+                let tails: Vec<_> = graph
+                    .jobs()
+                    .iter()
+                    .filter(|j| matches!(j.kind, JobKind::Tail { trunk, .. } if trunk == t))
+                    .collect();
+                assert_eq!(tails.len(), gr.plan_idxs.len(), "one tail per variant");
+                for tail in tails {
+                    assert_eq!(tail.deps, vec![t]);
+                    let JobKind::Tail { plan_idx, .. } = tail.kind else { unreachable!() };
+                    assert!(gr.plan_idxs.contains(&plan_idx));
+                }
+                assert_eq!(graph.dependents(t).len(), gr.plan_idxs.len());
+            } else {
+                assert!(gr.trunk.is_none(), "singleton group must not grow a trunk");
+            }
+        }
+        all_idxs.sort_unstable();
+        assert_eq!(all_idxs, (0..n_plans).collect::<Vec<_>>(), "groups must partition the plans");
+
+        // 5. Shared trunks appear exactly once: one trunk job per shared
+        //    group, none anywhere else.
+        let trunk_jobs =
+            graph.jobs().iter().filter(|j| matches!(j.kind, JobKind::Trunk { .. })).count();
+        let shared_groups = graph.groups().iter().filter(|gr| gr.trunk.is_some()).count();
+        assert_eq!(trunk_jobs, shared_groups);
     });
 }
 
