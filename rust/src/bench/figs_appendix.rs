@@ -109,7 +109,11 @@ pub fn fig15_16(ctx: &Ctx) -> Result<()> {
     let mut plans = Vec::new();
     let mut meta = Vec::new();
     for (ti, tgt) in ["gpt2.l6", "gpt2.l12"].iter().enumerate() {
-        let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
+        let tgt_n: usize = tgt
+            .rsplit('l')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("config id '{tgt}' has no trailing layer count"))?;
         for src_n in [0usize, 1, 2, 6] {
             if src_n >= tgt_n {
                 continue;

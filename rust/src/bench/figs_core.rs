@@ -17,7 +17,7 @@ use super::Ctx;
 pub fn fig1(ctx: &Ctx) -> Result<()> {
     let total = ctx.steps * 2; // the headline figure gets a longer horizon
     let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.1 };
-    let tau = (total as f32 * 0.8) as usize;
+    let tau = (total as f64 * 0.8) as usize;
     let target = "fig1";
 
     let mut table = Table::new(&["run", "final val loss", "gap vs fixed", "FLOPs", "saving", "mixed"]);
@@ -78,7 +78,7 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
                 let small = format!("{fam}.s{s}.l0");
                 // Token budget scales with size index (Chinchilla-flavored).
                 let total = ctx.steps * (s + 1);
-                let tau = (total as f32 * 0.8) as usize;
+                let tau = (total as f64 * 0.8) as usize;
                 let plan = if mode == "fixed" {
                     RunBuilder::fixed(format!("{fam}-s{s}-fixed"), &large, total, sched).build()?
                 } else {
@@ -174,7 +174,7 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
 pub fn fig9(ctx: &Ctx) -> Result<()> {
     let target = "fig9";
     let total = ctx.steps;
-    let tau = (total as f32 * 0.5) as usize;
+    let tau = (total as f64 * 0.5) as usize;
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     let fixed = ctx.run_logged(target, RunBuilder::fixed("fixed-l6", "gpt2.l6", total, sched).build()?)?;
     let prog = ctx.run_logged(

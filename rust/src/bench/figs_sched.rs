@@ -80,7 +80,7 @@ pub fn fig5(ctx: &Ctx) -> Result<()> {
 pub fn fig6(ctx: &Ctx) -> Result<()> {
     let target = "fig6";
     let total = ctx.steps * 2;
-    let tau = (total as f32 * 0.6) as usize;
+    let tau = (total as f64 * 0.6) as usize;
     let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
     let prog = ctx.run_logged(
         target,

@@ -35,7 +35,11 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
     let mut plans = Vec::new();
     let mut meta = Vec::new();
     for tgt in targets {
-        let tgt_n: usize = tgt.rsplit('l').next().unwrap().parse().unwrap();
+        let tgt_n: usize = tgt
+            .rsplit('l')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("config id '{tgt}' has no trailing layer count"))?;
         for &src_n in &sources {
             if src_n >= tgt_n {
                 continue;

@@ -36,10 +36,22 @@ pub struct Ctx {
     /// Worker count for grid targets (1 = serial on `engine`; > 1 = the
     /// `exec` pool, one engine per worker — identical results either way).
     pub workers: usize,
+    /// Durable run store for grid targets (`--store-dir`): sweeps persist
+    /// completed runs + trunk snapshots there and repeated bench
+    /// invocations skip already-executed runs (DESIGN.md §7). Targets
+    /// share the directory; content digests keep entries apart.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Ctx {
-    pub fn new(artifacts: &str, out_dir: &str, steps: usize, seed: u64, workers: usize) -> Result<Ctx> {
+    pub fn new(
+        artifacts: &str,
+        out_dir: &str,
+        steps: usize,
+        seed: u64,
+        workers: usize,
+        store_dir: Option<PathBuf>,
+    ) -> Result<Ctx> {
         Ok(Ctx {
             engine: Engine::cpu()?,
             manifest: Manifest::load(artifacts)?,
@@ -48,6 +60,7 @@ impl Ctx {
             steps,
             seed,
             workers: workers.max(1),
+            store_dir,
         })
     }
 
@@ -84,6 +97,9 @@ impl Ctx {
         let t0 = std::time::Instant::now();
         let n = plans.len();
         let mut sweep = Sweep::new(self.trainer());
+        if let Some(dir) = &self.store_dir {
+            sweep.store(dir)?;
+        }
         for p in plans {
             sweep.add(p);
         }

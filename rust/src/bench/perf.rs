@@ -44,7 +44,7 @@ struct Measured {
 pub fn perf(ctx: &Ctx) -> Result<()> {
     let target = "perf";
     let steps = ctx.steps;
-    let tau = ((steps as f32 * 0.4) as usize).max(1);
+    let tau = ((steps as f64 * 0.4) as usize).max(1);
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     // Keep the eval cadence at least one fused chunk apart: the builder's
     // default (steps/40) would force single-step units at smoke scales and

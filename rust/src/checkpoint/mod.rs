@@ -17,9 +17,9 @@
 //! tensor payloads (the equivalence suite asserts this bit-exactly).
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
@@ -28,14 +28,49 @@ use crate::runtime::{ConfigEntry, ModelState, Tensor};
 const MAGIC: &[u8; 8] = b"DPTCKPT1";
 const SNAP_MAGIC: &[u8; 8] = b"DPTDRV01";
 
-pub fn save(path: &Path, cfg_id: &str, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+/// Write a checkpoint-family file crash-safely: serialize into a `.tmp<pid>`
+/// sibling, flush + fsync, then atomically rename over the destination and
+/// fsync the directory. A crash can leave a stale temp file behind, never a
+/// torn destination — which is what lets the run store (`crate::store`)
+/// treat "file present after journal commit" as "file is whole".
+pub(crate) fn write_atomic(
+    path: &Path,
+    body: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&dir)?;
+    let name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("checkpoint path {path:?} has no file name"))?;
+    let tmp = dir.join(format!("{}.tmp{}", name.to_string_lossy(), std::process::id()));
+    let file = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    let written = body(&mut w).and_then(|()| {
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    });
+    drop(w);
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    write_str(&mut f, cfg_id)?;
-    write_state(&mut f, state, entry)
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing {path:?}"))?;
+    if let Ok(d) = std::fs::File::open(&dir) {
+        let _ = d.sync_all(); // directory fsync is advisory on some filesystems
+    }
+    Ok(())
+}
+
+pub fn save(path: &Path, cfg_id: &str, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
+    write_atomic(path, |f| {
+        f.write_all(MAGIC)?;
+        write_str(f, cfg_id)?;
+        write_state(f, state, entry)
+    })
 }
 
 fn write_state(f: &mut impl Write, state: &ModelState, entry: &ConfigEntry) -> Result<()> {
@@ -120,45 +155,26 @@ pub struct DriverSnapshot {
     pub state: ModelState,
 }
 
-/// Serialize a driver snapshot (see [`DriverSnapshot`]).
+/// Serialize a driver snapshot (see [`DriverSnapshot`]). Written atomically
+/// (temp sibling + fsync + rename), so a crash mid-write never leaves a
+/// torn snapshot at `path`.
 pub fn save_snapshot(path: &Path, snap: &DriverSnapshot, entry: &ConfigEntry) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(SNAP_MAGIC)?;
-    write_str(&mut f, &snap.run_name)?;
-    write_str(&mut f, &snap.cfg_id)?;
-    write_u64(&mut f, snap.step as u64)?;
-    write_u64(&mut f, snap.stage_idx as u64)?;
-    write_u64(&mut f, snap.data_seed)?;
-    write_u64(&mut f, snap.train_windows)?;
-    write_u64(&mut f, snap.val_windows)?;
-    write_u64(&mut f, snap.image_samples)?;
-    write_f32(&mut f, snap.last_train_loss)?;
-    write_f64(&mut f, snap.ledger.total)?;
-    write_u64(&mut f, snap.ledger.tokens)?;
-    write_u64(&mut f, snap.ledger.stages.len() as u64)?;
-    for (cfg, steps, flops) in &snap.ledger.stages {
-        write_str(&mut f, cfg)?;
-        write_u64(&mut f, *steps as u64)?;
-        write_f64(&mut f, *flops)?;
-    }
-    write_u64(&mut f, snap.curve.points.len() as u64)?;
-    for p in &snap.curve.points {
-        write_u64(&mut f, p.step as u64)?;
-        write_u64(&mut f, p.tokens)?;
-        write_f64(&mut f, p.flops)?;
-        write_f32(&mut f, p.train_loss)?;
-        write_f32(&mut f, p.val_loss)?;
-        write_f32(&mut f, p.lr)?;
-    }
-    write_u64(&mut f, snap.boundaries.len() as u64)?;
-    for (step, cfg) in &snap.boundaries {
-        write_u64(&mut f, *step as u64)?;
-        write_str(&mut f, cfg)?;
-    }
-    write_state(&mut f, &snap.state, entry)
+    write_atomic(path, |f| {
+        f.write_all(SNAP_MAGIC)?;
+        write_str(f, &snap.run_name)?;
+        write_str(f, &snap.cfg_id)?;
+        write_u64(f, snap.step as u64)?;
+        write_u64(f, snap.stage_idx as u64)?;
+        write_u64(f, snap.data_seed)?;
+        write_u64(f, snap.train_windows)?;
+        write_u64(f, snap.val_windows)?;
+        write_u64(f, snap.image_samples)?;
+        write_f32(f, snap.last_train_loss)?;
+        write_ledger(f, &snap.ledger)?;
+        write_curve_points(f, &snap.curve.points)?;
+        write_boundaries(f, &snap.boundaries)?;
+        write_state(f, &snap.state, entry)
+    })
 }
 
 /// Read only the config id of a snapshot (to resolve the manifest entry
@@ -178,63 +194,39 @@ pub fn snapshot_cfg_id(path: &Path) -> Result<String> {
 
 /// Load a driver snapshot, validating the model section against `entry`
 /// (which must be the manifest entry for the snapshot's `cfg_id`).
+/// Truncated, corrupted, or wrong-magic files return errors — never panic,
+/// and never yield a partially-filled snapshot.
 pub fn load_snapshot(path: &Path, entry: &ConfigEntry) -> Result<DriverSnapshot> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening snapshot {path:?}"))?,
     );
+    read_snapshot_from(&mut f, entry)
+        .with_context(|| format!("reading snapshot {path:?} (truncated or corrupted?)"))
+}
+
+fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<DriverSnapshot> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic != SNAP_MAGIC {
-        bail!("not a DPT driver snapshot: {path:?}");
+        bail!("not a DPT driver snapshot");
     }
-    let run_name = read_str(&mut f)?;
-    let cfg_id = read_str(&mut f)?;
+    let run_name = read_str(f)?;
+    let cfg_id = read_str(f)?;
     if cfg_id != entry.cfg_id {
         bail!("snapshot is for config '{cfg_id}', expected '{}'", entry.cfg_id);
     }
-    let step = read_u64(&mut f)? as usize;
-    let stage_idx = read_u64(&mut f)? as usize;
-    let data_seed = read_u64(&mut f)?;
-    let train_windows = read_u64(&mut f)?;
-    let val_windows = read_u64(&mut f)?;
-    let image_samples = read_u64(&mut f)?;
-    let last_train_loss = read_f32(&mut f)?;
-    let mut ledger = FlopLedger { total: read_f64(&mut f)?, tokens: read_u64(&mut f)?, stages: Vec::new() };
-    let n_stages = read_u64(&mut f)? as usize;
-    if n_stages > 1 << 16 {
-        bail!("implausible snapshot stage count {n_stages}");
-    }
-    for _ in 0..n_stages {
-        let cfg = read_str(&mut f)?;
-        let steps = read_u64(&mut f)? as usize;
-        let flops = read_f64(&mut f)?;
-        ledger.stages.push((cfg, steps, flops));
-    }
+    let step = read_u64(f)? as usize;
+    let stage_idx = read_u64(f)? as usize;
+    let data_seed = read_u64(f)?;
+    let train_windows = read_u64(f)?;
+    let val_windows = read_u64(f)?;
+    let image_samples = read_u64(f)?;
+    let last_train_loss = read_f32(f)?;
+    let ledger = read_ledger(f)?;
     let mut curve = Curve::new(run_name.clone());
-    let n_points = read_u64(&mut f)? as usize;
-    if n_points > 1 << 24 {
-        bail!("implausible snapshot curve length {n_points}");
-    }
-    for _ in 0..n_points {
-        curve.push(CurvePoint {
-            step: read_u64(&mut f)? as usize,
-            tokens: read_u64(&mut f)?,
-            flops: read_f64(&mut f)?,
-            train_loss: read_f32(&mut f)?,
-            val_loss: read_f32(&mut f)?,
-            lr: read_f32(&mut f)?,
-        });
-    }
-    let n_bounds = read_u64(&mut f)? as usize;
-    if n_bounds > 1 << 16 {
-        bail!("implausible snapshot boundary count {n_bounds}");
-    }
-    let mut boundaries = Vec::with_capacity(n_bounds);
-    for _ in 0..n_bounds {
-        let step = read_u64(&mut f)? as usize;
-        boundaries.push((step, read_str(&mut f)?));
-    }
-    let state = read_state(&mut f, entry)?;
+    curve.points = read_curve_points(f)?;
+    let boundaries = read_boundaries(f)?;
+    let state = read_state(f, entry)?;
     Ok(DriverSnapshot {
         run_name,
         cfg_id,
@@ -252,42 +244,126 @@ pub fn load_snapshot(path: &Path, entry: &ConfigEntry) -> Result<DriverSnapshot>
     })
 }
 
-fn write_u64(f: &mut impl Write, v: u64) -> Result<()> {
+// ------------------------------------------------- shared section codecs
+// (used by both snapshot files and the `crate::store` run-cache entries)
+
+pub(crate) fn write_ledger(f: &mut impl Write, ledger: &FlopLedger) -> Result<()> {
+    write_f64(f, ledger.total)?;
+    write_u64(f, ledger.tokens)?;
+    write_u64(f, ledger.stages.len() as u64)?;
+    for (cfg, steps, flops) in &ledger.stages {
+        write_str(f, cfg)?;
+        write_u64(f, *steps as u64)?;
+        write_f64(f, *flops)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_ledger(f: &mut impl Read) -> Result<FlopLedger> {
+    let mut ledger = FlopLedger { total: read_f64(f)?, tokens: read_u64(f)?, stages: Vec::new() };
+    let n_stages = read_u64(f)? as usize;
+    if n_stages > 1 << 16 {
+        bail!("implausible ledger stage count {n_stages}");
+    }
+    for _ in 0..n_stages {
+        let cfg = read_str(f)?;
+        let steps = read_u64(f)? as usize;
+        let flops = read_f64(f)?;
+        ledger.stages.push((cfg, steps, flops));
+    }
+    Ok(ledger)
+}
+
+pub(crate) fn write_curve_points(f: &mut impl Write, points: &[CurvePoint]) -> Result<()> {
+    write_u64(f, points.len() as u64)?;
+    for p in points {
+        write_u64(f, p.step as u64)?;
+        write_u64(f, p.tokens)?;
+        write_f64(f, p.flops)?;
+        write_f32(f, p.train_loss)?;
+        write_f32(f, p.val_loss)?;
+        write_f32(f, p.lr)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_curve_points(f: &mut impl Read) -> Result<Vec<CurvePoint>> {
+    let n_points = read_u64(f)? as usize;
+    if n_points > 1 << 24 {
+        bail!("implausible curve length {n_points}");
+    }
+    let mut points = Vec::with_capacity(n_points.min(1 << 16));
+    for _ in 0..n_points {
+        points.push(CurvePoint {
+            step: read_u64(f)? as usize,
+            tokens: read_u64(f)?,
+            flops: read_f64(f)?,
+            train_loss: read_f32(f)?,
+            val_loss: read_f32(f)?,
+            lr: read_f32(f)?,
+        });
+    }
+    Ok(points)
+}
+
+pub(crate) fn write_boundaries(f: &mut impl Write, boundaries: &[(usize, String)]) -> Result<()> {
+    write_u64(f, boundaries.len() as u64)?;
+    for (step, cfg) in boundaries {
+        write_u64(f, *step as u64)?;
+        write_str(f, cfg)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_boundaries(f: &mut impl Read) -> Result<Vec<(usize, String)>> {
+    let n_bounds = read_u64(f)? as usize;
+    if n_bounds > 1 << 16 {
+        bail!("implausible boundary count {n_bounds}");
+    }
+    let mut boundaries = Vec::with_capacity(n_bounds);
+    for _ in 0..n_bounds {
+        let step = read_u64(f)? as usize;
+        boundaries.push((step, read_str(f)?));
+    }
+    Ok(boundaries)
+}
+
+pub(crate) fn write_u64(f: &mut impl Write, v: u64) -> Result<()> {
     f.write_all(&v.to_le_bytes()).map_err(Into::into)
 }
 
-fn read_u64(f: &mut impl Read) -> Result<u64> {
+pub(crate) fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn write_f32(f: &mut impl Write, v: f32) -> Result<()> {
+pub(crate) fn write_f32(f: &mut impl Write, v: f32) -> Result<()> {
     f.write_all(&v.to_le_bytes()).map_err(Into::into)
 }
 
-fn read_f32(f: &mut impl Read) -> Result<f32> {
+pub(crate) fn read_f32(f: &mut impl Read) -> Result<f32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(f32::from_le_bytes(b))
 }
 
-fn write_f64(f: &mut impl Write, v: f64) -> Result<()> {
+pub(crate) fn write_f64(f: &mut impl Write, v: f64) -> Result<()> {
     f.write_all(&v.to_le_bytes()).map_err(Into::into)
 }
 
-fn read_f64(f: &mut impl Read) -> Result<f64> {
+pub(crate) fn read_f64(f: &mut impl Read) -> Result<f64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(f64::from_le_bytes(b))
 }
 
-fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+pub(crate) fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
     write_u64(f, s.len() as u64)?;
     f.write_all(s.as_bytes()).map_err(Into::into)
 }
 
-fn read_str(f: &mut impl Read) -> Result<String> {
+pub(crate) fn read_str(f: &mut impl Read) -> Result<String> {
     let n = read_u64(f)? as usize;
     if n > 1 << 20 {
         bail!("implausible string length {n}");
@@ -297,7 +373,12 @@ fn read_str(f: &mut impl Read) -> Result<String> {
     String::from_utf8(b).context("checkpoint string not utf-8")
 }
 
-fn write_tensor(f: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
+/// Hard cap on elements per serialized tensor (~1 GiB of f32), far above
+/// anything this micro-scale testbed writes: a corrupted length field must
+/// fail with an error, not attempt a giant allocation.
+const MAX_TENSOR_ELEMS: usize = 1 << 28;
+
+pub(crate) fn write_tensor(f: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
     write_str(f, name)?;
     write_u64(f, t.shape.len() as u64)?;
     for &d in &t.shape {
@@ -310,7 +391,7 @@ fn write_tensor(f: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
     Ok(())
 }
 
-fn read_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
+pub(crate) fn read_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
     let name = read_str(f)?;
     let rank = read_u64(f)? as usize;
     if rank > 8 {
@@ -318,9 +399,18 @@ fn read_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
     }
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
-        shape.push(read_u64(f)? as usize);
+        let d = read_u64(f)?;
+        if d as usize > MAX_TENSOR_ELEMS {
+            bail!("implausible tensor dim {d}");
+        }
+        shape.push(d as usize);
     }
-    let n: usize = shape.iter().product::<usize>().max(1);
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .filter(|&n| n <= MAX_TENSOR_ELEMS)
+        .ok_or_else(|| anyhow!("implausible tensor shape {shape:?}"))?
+        .max(1);
     let mut bytes = vec![0u8; n * 4];
     f.read_exact(&mut bytes)?;
     let data: Vec<f32> = bytes
@@ -474,6 +564,123 @@ mod tests {
         save(&ckpt, "t", &snap.state, &entry).unwrap();
         assert!(load_snapshot(&ckpt, &entry).is_err());
         assert!(load(&path, &entry).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_snapshot(entry: &ConfigEntry) -> DriverSnapshot {
+        let mut curve = Curve::new("run");
+        curve.push(CurvePoint { step: 10, tokens: 640, flops: 1e6, train_loss: 2.5, val_loss: 2.6, lr: 0.01 });
+        DriverSnapshot {
+            run_name: "run".into(),
+            cfg_id: "t".into(),
+            step: 10,
+            stage_idx: 0,
+            data_seed: 3,
+            train_windows: 20,
+            val_windows: 4,
+            image_samples: 0,
+            last_train_loss: 2.5,
+            ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("t".into(), 10, 1e6)] },
+            curve,
+            boundaries: Vec::new(),
+            state: ModelState::init(entry, 1),
+        }
+    }
+
+    #[test]
+    fn truncated_snapshot_errors_at_every_cut() {
+        // Robustness: a crash-torn or truncated snapshot must error (never
+        // panic, never produce a partially-filled snapshot) at any length.
+        let entry = fake_entry("t", 1, (4, 2));
+        let snap = sample_snapshot(&entry);
+        let dir = tmp("trunc");
+        let path = dir.join("a.snap");
+        save_snapshot(&path, &snap, &entry).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let cut_at = dir.join("cut.snap");
+        for cut in [0usize, 4, 8, 9, 17, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&cut_at, &bytes[..cut]).unwrap();
+            assert!(
+                load_snapshot(&cut_at, &entry).is_err(),
+                "snapshot truncated to {cut}/{} bytes must fail to load",
+                bytes.len()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_garbage_error_cleanly() {
+        let entry = fake_entry("t", 0, (4, 2));
+        let snap = sample_snapshot(&entry);
+        let dir = tmp("magic");
+        let path = dir.join("a.snap");
+        save_snapshot(&path, &snap, &entry).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        let bad = dir.join("bad.snap");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = load_snapshot(&bad, &entry).unwrap_err();
+        assert!(format!("{err:#}").contains("not a DPT driver snapshot"), "{err:#}");
+        // Pure garbage (valid magic, absurd lengths) must error, not allocate.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(b"DPTDRV01");
+        evil.extend_from_slice(&u64::MAX.to_le_bytes()); // run_name "length"
+        std::fs::write(&bad, &evil).unwrap();
+        assert!(load_snapshot(&bad, &entry).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_tensor_shape_errors_instead_of_allocating() {
+        // Flip a tensor rank/dim length field deep in the state section to
+        // an absurd value: the reader must bail on plausibility checks.
+        let entry = fake_entry("t", 0, (4, 2));
+        let state = ModelState::init(&entry, 5);
+        let dir = tmp("evil_shape");
+        let path = dir.join("a.ckpt");
+        save(&path, "t", &state, &entry).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // The first tensor record starts after magic + cfg_id + param count:
+        // 8 + (8 + 1) + 8 = 25; its name is "embed.tok" (8 + 9 bytes), then
+        // the rank u64 — overwrite that with a huge value.
+        let rank_off = 25 + 8 + "embed.tok".len();
+        let mut evil = bytes.clone();
+        evil[rank_off..rank_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, &evil).unwrap();
+        let err = load(&bad, &entry).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+        // Same, but a dim so large the element product overflows usize.
+        let mut evil = bytes;
+        evil[rank_off..rank_off + 8].copy_from_slice(&2u64.to_le_bytes());
+        // rank stays 2; poison the first dim instead.
+        evil[rank_off + 8..rank_off + 16].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        std::fs::write(&bad, &evil).unwrap();
+        assert!(load(&bad, &entry).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_torn_destination() {
+        // write_atomic publishes via rename: a body failure must leave the
+        // destination untouched (here: absent).
+        let dir = tmp("atomic");
+        let path = dir.join("x.bin");
+        let err = write_atomic(&path, |f| {
+            use std::io::Write as _;
+            f.write_all(b"partial")?;
+            anyhow::bail!("simulated crash mid-serialization");
+        });
+        assert!(err.is_err());
+        assert!(!path.exists(), "failed write must not publish a torn file");
+        // A successful write lands complete.
+        write_atomic(&path, |f| {
+            use std::io::Write as _;
+            f.write_all(b"whole").map_err(Into::into)
+        })
+        .unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"whole");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

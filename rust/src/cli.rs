@@ -42,12 +42,11 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                     continue;
                 }
-                match it.peek() {
-                    Some(v) if !v.starts_with("--") => {
-                        let v = it.next().unwrap();
+                match it.next_if(|v| !v.starts_with("--")) {
+                    Some(v) => {
                         out.flags.insert(name.to_string(), v);
                     }
-                    _ => out.switches.push(name.to_string()),
+                    None => out.switches.push(name.to_string()),
                 }
             } else {
                 out.positional.push(a);
@@ -89,15 +88,16 @@ impl Args {
                 // The next token is the value, even if it starts with a
                 // single '-' (negative numbers). A further '--token' is
                 // almost certainly a doubled-dash mistake, not a value.
-                match it.peek() {
-                    Some(v) if !v.starts_with("--") => {
-                        let v = it.next().unwrap();
+                match it.next_if(|v| !v.starts_with("--")) {
+                    Some(v) => {
                         out.flags.insert(name.to_string(), v);
                     }
-                    Some(v) => {
-                        return Err(format!("flag --{name} requires a value, got '{v}' (use --{name}=VALUE if the value starts with '--')"));
-                    }
-                    None => return Err(format!("flag --{name} requires a value")),
+                    None => match it.peek() {
+                        Some(v) => {
+                            return Err(format!("flag --{name} requires a value, got '{v}' (use --{name}=VALUE if the value starts with '--')"));
+                        }
+                        None => return Err(format!("flag --{name} requires a value")),
+                    },
                 }
                 continue;
             }
@@ -119,6 +119,13 @@ impl Args {
     }
 
     pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// f64 accessor for values that feed step-index arithmetic (τ
+    /// fractions): parsing "0.8" as f32 is off by ~6e-8 relative, which is
+    /// whole steps for horizons past ~2^24.
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 

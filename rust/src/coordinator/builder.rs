@@ -95,6 +95,48 @@ impl RunPlan {
             self.schedule,
         )
     }
+
+    /// Canonical textual description of everything that determines this
+    /// plan's execution: every stage (config, boundary step, transition —
+    /// including the full expansion spec), horizon, schedule, eval cadence,
+    /// and seed. The run **name is excluded**: two identically-shaped runs
+    /// are the same work, and the store renames cached results on load.
+    /// The leading version tag invalidates old digests if semantics change.
+    pub fn canonical_desc(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "planv1|total={}|eval_every={}|eval_batches={}|seed={}|sched={:?}",
+            self.total_steps, self.eval_every, self.eval_batches, self.seed, self.schedule
+        );
+        for st in &self.stages {
+            let tr = match &st.transition {
+                Transition::Init => "init".to_string(),
+                Transition::SwitchOptimizer => "switch_opt".to_string(),
+                Transition::Expand(spec) => format!("expand {spec:?}"),
+            };
+            let _ = write!(s, "|stage cfg={} from={} tr={}", st.cfg_id, st.from_step, tr);
+        }
+        s
+    }
+
+    /// Full-plan content digest (32 hex chars): two plans with equal digests
+    /// execute the identical engine-call sequence and produce bit-identical
+    /// results — the run-cache key of [`crate::store::RunStore`].
+    pub fn digest(&self) -> String {
+        crate::store::digest_str(&self.canonical_desc())
+    }
+
+    /// Digest of the shared stage-0 segment up to [`RunPlan::first_boundary`]
+    /// — the trunk-snapshot cache key. Equal exactly when
+    /// [`crate::exec::JobGraph::group_key`] is equal, so the store and the
+    /// sweep can never disagree about what is shared.
+    pub fn trunk_digest(&self) -> String {
+        crate::store::digest_str(&format!(
+            "trunkv1|{}@{}",
+            self.prefix_key(),
+            self.first_boundary()
+        ))
+    }
 }
 
 /// Fluent builder for [`RunPlan`]; `build()` validates everything that can

@@ -36,7 +36,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::{self, DriverSnapshot};
 use crate::data::{Batcher, ImageGen};
@@ -453,7 +453,9 @@ impl<'a> RunDriver<'a> {
         if unit == k {
             let lrs: Vec<f32> = (0..k).map(|i| self.plan.schedule().lr(self.step + i, total)).collect();
             let losses = self.chunk_steps(&lrs)?;
-            self.last_train_loss = *losses.last().unwrap();
+            self.last_train_loss = losses.last().copied().ok_or_else(|| {
+                anyhow!("train chunk for '{}' returned no losses", self.plan.name())
+            })?;
             self.ledger.record(self.entry, k);
             self.step += k;
         } else {
@@ -622,8 +624,12 @@ impl<'a> RunDriver<'a> {
         self.ensure_device()?;
         self.ensure_exec()?;
         let (data, ys) = self.stage_batches(lrs.len(), true, false)?;
-        let exec = self.exec.as_ref().expect("bound above");
-        let StateSlot::Device(dev) = &mut self.state else { unreachable!("uploaded above") };
+        let exec = self.exec.as_ref().ok_or_else(|| {
+            anyhow!("internal: stage executables not bound for '{}'", self.plan.name())
+        })?;
+        let StateSlot::Device(dev) = &mut self.state else {
+            bail!("internal: model state not device-resident for '{}'", self.plan.name());
+        };
         self.trainer.engine.train_chunk_dev(exec, self.entry, dev, &data, &ys, lrs)
     }
 
@@ -631,8 +637,12 @@ impl<'a> RunDriver<'a> {
         self.ensure_device()?;
         self.ensure_exec()?;
         let (data, ys) = self.stage_batches(1, false, false)?;
-        let exec = self.exec.as_ref().expect("bound above");
-        let StateSlot::Device(dev) = &mut self.state else { unreachable!("uploaded above") };
+        let exec = self.exec.as_ref().ok_or_else(|| {
+            anyhow!("internal: stage executables not bound for '{}'", self.plan.name())
+        })?;
+        let StateSlot::Device(dev) = &mut self.state else {
+            bail!("internal: model state not device-resident for '{}'", self.plan.name());
+        };
         self.trainer.engine.train_step_dev(exec, self.entry, dev, &data, &ys, lr)
     }
 
@@ -643,8 +653,12 @@ impl<'a> RunDriver<'a> {
         let mut total = 0.0f64;
         for _ in 0..batches {
             let (data, ys) = self.stage_batches(1, false, true)?;
-            let exec = self.exec.as_ref().expect("bound above");
-            let StateSlot::Device(dev) = &self.state else { unreachable!("uploaded above") };
+            let exec = self.exec.as_ref().ok_or_else(|| {
+                anyhow!("internal: stage executables not bound for '{}'", self.plan.name())
+            })?;
+            let StateSlot::Device(dev) = &self.state else {
+                bail!("internal: model state not device-resident for '{}'", self.plan.name());
+            };
             total += self.trainer.engine.eval_step_dev(exec, self.entry, dev, &data, &ys)? as f64;
         }
         Ok((total / batches as f64) as f32)

@@ -56,7 +56,7 @@ fn probe_plans(
     // Probe runs use a constant-LR schedule at the same peak: we only care
     // about the stable-phase mixing time, which WSD transfers (Takeaway 6).
     let probe_sched = Schedule::Constant { peak: schedule.peak(), warmup_frac: 0.02 };
-    let warmup_end = (probe_steps as f32 * 0.02).ceil() as usize;
+    let warmup_end = (probe_steps as f64 * 0.02).ceil() as usize;
     let fixed = RunBuilder::fixed("probe-fixed", large, probe_steps, probe_sched).build()?;
     let prog = RunBuilder::progressive(
         "probe-prog",

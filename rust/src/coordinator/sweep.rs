@@ -20,16 +20,26 @@
 //!   sequence is a pure function of its plan + fork snapshot, and outcomes
 //!   are assembled in the serial group order — see DESIGN.md §6).
 //!
+//! **Durability** ([`Sweep::store`], DESIGN.md §7): with a
+//! [`crate::store::RunStore`] attached, completed runs and trunk fork
+//! snapshots are persisted as they finish (crash-safe journal + cache), and
+//! both paths consult the cache first — an interrupted sweep restarted
+//! against the same store re-runs only unfinished jobs and is bit-identical
+//! to an uninterrupted run; a fully warm rerun executes nothing.
+//!
 //! Per-run accounting stays exact: every [`RunResult`]'s ledger includes the
 //! shared prefix (what the run *represents*); [`SweepOutcome::executed_flops`]
-//! counts each shared trunk once (what was actually dispatched).
+//! counts each shared trunk once (what was actually dispatched) — cached or
+//! not, since trunk costs are journaled bit-exactly.
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use crate::exec::{run_graph, JobGraph, JobId, JobKind, PoolOptions};
 use crate::runtime::ModelState;
+use crate::store::RunStore;
 
 use super::builder::RunPlan;
 use super::driver::RunDriver;
@@ -46,6 +56,8 @@ pub struct SweepOutcome {
     /// run), `None` otherwise.
     pub final_states: Vec<Option<ModelState>>,
     /// Training FLOPs actually dispatched (shared trunks counted once).
+    /// Cached runs count what their execution *did* dispatch — the value is
+    /// bit-identical whether a job ran now or was served from the store.
     pub executed_flops: f64,
     /// FLOPs saved versus running every plan standalone.
     pub shared_flops: f64,
@@ -57,11 +69,12 @@ pub struct Sweep<'a> {
     plans: Vec<RunPlan>,
     progress: Option<ProgressSink>,
     keep_states: bool,
+    store: Option<RunStore>,
 }
 
 impl<'a> Sweep<'a> {
     pub fn new(trainer: Trainer<'a>) -> Sweep<'a> {
-        Sweep { trainer, plans: Vec::new(), progress: None, keep_states: false }
+        Sweep { trainer, plans: Vec::new(), progress: None, keep_states: false, store: None }
     }
 
     pub fn add(&mut self, plan: RunPlan) -> &mut Sweep<'a> {
@@ -93,6 +106,25 @@ impl<'a> Sweep<'a> {
         self
     }
 
+    /// Attach a durable run store rooted at `dir` (created if missing,
+    /// salted by the corpus + manifest context — see
+    /// [`RunStore::context_salt`]). Completed runs and trunk fork snapshots
+    /// are persisted as they finish and reused on the next invocation: an
+    /// interrupted sweep resumes re-running only unfinished jobs, and a
+    /// fully warm rerun executes zero training dispatches.
+    pub fn store(&mut self, dir: impl AsRef<Path>) -> Result<&mut Sweep<'a>> {
+        let salt = RunStore::context_salt(self.trainer.manifest, self.trainer.corpus);
+        self.store = Some(RunStore::open_salted(dir, &salt)?);
+        Ok(self)
+    }
+
+    /// Attach an already-open [`RunStore`] (no context salting — the caller
+    /// vouches that the store matches this trainer's corpus + manifest).
+    pub fn with_store(&mut self, store: RunStore) -> &mut Sweep<'a> {
+        self.store = Some(store);
+        self
+    }
+
     fn lower(&mut self) -> Result<JobGraph> {
         let plans = std::mem::take(&mut self.plans);
         if plans.is_empty() {
@@ -117,12 +149,12 @@ impl<'a> Sweep<'a> {
             return self.run();
         }
         let graph = self.lower()?;
-        run_graph(
-            self.trainer.manifest,
-            self.trainer.corpus,
-            &graph,
-            &PoolOptions { workers, progress: self.progress.clone(), keep_states: self.keep_states },
-        )
+        let opts = PoolOptions {
+            workers,
+            progress: self.progress.clone(),
+            keep_states: self.keep_states,
+        };
+        run_graph(self.trainer.manifest, self.trainer.corpus, &graph, &opts, self.store.as_mut())
     }
 
     // ------------------------------------------------------------ internals
@@ -133,13 +165,34 @@ impl<'a> Sweep<'a> {
         }
     }
 
-    /// Consume a finished driver into its result (+ state when kept).
-    fn collect(&self, d: RunDriver<'a>) -> Result<(RunResult, Option<ModelState>)> {
-        let state = if self.keep_states { Some(d.state()?) } else { None };
-        Ok((d.finish(), state))
+    /// Store lookup for one plan (`None` when no store is attached or the
+    /// plan is not cached; an error when a committed entry is corrupted).
+    fn cached_run(&self, plan: &RunPlan) -> Result<Option<(RunResult, Option<ModelState>)>> {
+        match &self.store {
+            Some(store) => store.lookup(plan, self.keep_states),
+            None => Ok(None),
+        }
     }
 
-    fn run_serial(&self, graph: &JobGraph) -> Result<SweepOutcome> {
+    /// Consume a finished driver into its result (+ state when kept),
+    /// persisting completed runs into the store.
+    fn collect(&mut self, plan: &RunPlan, d: RunDriver<'a>) -> Result<(RunResult, Option<ModelState>)> {
+        // Only runs that reached their horizon are cacheable; an
+        // early-stopped driver's curve is partial and must never be served
+        // as the plan's result.
+        let completed = d.is_done();
+        let persist = completed && self.store.is_some();
+        let state = if self.keep_states || persist { Some(d.state()?) } else { None };
+        let result = d.finish();
+        if persist {
+            if let Some(store) = self.store.as_mut() {
+                store.store_run(&plan.digest(), &result, state.as_ref())?;
+            }
+        }
+        Ok((result, if self.keep_states { state } else { None }))
+    }
+
+    fn run_serial(&mut self, graph: &JobGraph) -> Result<SweepOutcome> {
         let plans = graph.plans();
         let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
             plans.iter().map(|_| None).collect();
@@ -147,12 +200,17 @@ impl<'a> Sweep<'a> {
 
         for group in graph.groups() {
             let Some(trunk_id) = group.trunk else {
-                // Nothing to share: run each plan standalone.
+                // Nothing to share: serve each plan from the store or run it
+                // standalone.
                 for &i in &group.plan_idxs {
+                    if let Some(hit) = self.cached_run(&plans[i])? {
+                        per_plan[i] = Some(hit);
+                        continue;
+                    }
                     let mut d = RunDriver::new(self.trainer, plans[i].clone())?;
                     self.attach_progress(&mut d);
                     d.run_to_end()?;
-                    per_plan[i] = Some(self.collect(d)?);
+                    per_plan[i] = Some(self.collect(&plans[i], d)?);
                 }
                 continue;
             };
@@ -161,24 +219,62 @@ impl<'a> Sweep<'a> {
             let JobKind::Trunk { fork_step, .. } = graph.jobs()[trunk_id].kind else {
                 bail!("internal: group trunk {trunk_id} is not a trunk job");
             };
-            let mut trunk = RunDriver::new(self.trainer, plans[group.plan_idxs[0]].clone())?;
-            self.attach_progress(&mut trunk);
-            trunk.advance(fork_step)?;
-            if trunk.step_index() != fork_step {
-                bail!(
-                    "sweep trunk for '{}' stopped at step {} instead of the boundary {}",
-                    plans[group.plan_idxs[0]].name(),
-                    trunk.step_index(),
-                    fork_step
-                );
-            }
-            let snap = trunk.snapshot()?;
-            trunk_flops.insert(trunk_id, snap.ledger.total);
-
-            // Fork each variant from the trunk and interleave them over the
-            // shared engine, one eval period at a time.
-            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(group.plan_idxs.len());
+            // Resolve cached variants first — they decide whether the trunk
+            // snapshot is needed at all.
+            let mut pending: Vec<usize> = Vec::new();
             for &i in &group.plan_idxs {
+                match self.cached_run(&plans[i])? {
+                    Some(hit) => per_plan[i] = Some(hit),
+                    None => pending.push(i),
+                }
+            }
+            let lead = &plans[group.plan_idxs[0]];
+            let tdigest = lead.trunk_digest();
+            if pending.is_empty() {
+                // Fully cached group: the journaled trunk cost is enough for
+                // bit-exact FLOP assembly — no snapshot read, no training.
+                if let Some(tf) = self.store.as_ref().and_then(|s| s.trunk_flops(&tdigest)) {
+                    trunk_flops.insert(trunk_id, tf);
+                    continue;
+                }
+            }
+            let entry0 = self.trainer.manifest.get(&lead.stages()[0].cfg_id)?;
+            let cached_snap = match &self.store {
+                Some(store) if store.has_trunk_snapshot(&tdigest) => {
+                    Some(store.load_trunk_at(&tdigest, entry0, fork_step, lead.name())?)
+                }
+                _ => None,
+            };
+            let snap = match cached_snap {
+                Some(snap) => snap,
+                None => {
+                    let mut trunk = RunDriver::new(self.trainer, lead.clone())?;
+                    self.attach_progress(&mut trunk);
+                    trunk.advance(fork_step)?;
+                    if trunk.step_index() != fork_step {
+                        bail!(
+                            "sweep trunk for '{}' stopped at step {} instead of the boundary {}",
+                            lead.name(),
+                            trunk.step_index(),
+                            fork_step
+                        );
+                    }
+                    let snap = trunk.snapshot()?;
+                    if let Some(store) = self.store.as_mut() {
+                        store.store_trunk(&tdigest, &snap, entry0)?;
+                    }
+                    snap
+                }
+            };
+            trunk_flops.insert(trunk_id, snap.ledger.total);
+            if pending.is_empty() {
+                continue;
+            }
+
+            // Fork each pending variant from the trunk and interleave them
+            // over the shared engine, one eval period at a time.
+            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(pending.len());
+            for &i in &pending {
                 let mut d = RunDriver::resume(self.trainer, plans[i].clone(), snap.clone())?;
                 self.attach_progress(&mut d);
                 drivers.push((i, d));
@@ -199,7 +295,7 @@ impl<'a> Sweep<'a> {
                 }
             }
             for (i, d) in drivers {
-                per_plan[i] = Some(self.collect(d)?);
+                per_plan[i] = Some(self.collect(&plans[i], d)?);
             }
         }
 

@@ -19,6 +19,14 @@
 //! canonical order. A failed job (or a worker whose engine fails to
 //! construct) aborts the sweep: no new jobs are issued, in-flight jobs are
 //! drained, and the first error is returned.
+//!
+//! **Durable store** (DESIGN.md §7). With a [`RunStore`] attached, the
+//! scheduler — and only the scheduler; workers never touch the store —
+//! satisfies jobs from the cache in a pre-pass *before any engine exists*
+//! (a fully warm sweep spawns no workers at all), and persists every
+//! completed job as it lands: trunk snapshots and run results are written
+//! and journaled even if a later job aborts the sweep, which is exactly
+//! what lets an interrupted sweep resume re-running only unfinished jobs.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,6 +41,7 @@ use crate::coordinator::{
 };
 use crate::data::Corpus;
 use crate::runtime::{Engine, Manifest, ModelState};
+use crate::store::RunStore;
 
 use super::graph::{JobGraph, JobId, JobKind};
 
@@ -100,20 +109,59 @@ enum WorkerMsg {
 
 /// Execute a lowered [`JobGraph`] over `workers` engine-owning threads and
 /// assemble the outcome. Bit-identical to the serial sweep for any worker
-/// count (see module docs / DESIGN.md §6).
+/// count (see module docs / DESIGN.md §6); with `store` attached, cached
+/// jobs are served without dispatching and completed jobs are persisted.
 pub fn run_graph(
     manifest: &Manifest,
     corpus: &Corpus,
     graph: &JobGraph,
     opts: &PoolOptions,
+    mut store: Option<&mut RunStore>,
 ) -> Result<SweepOutcome> {
     let jobs = graph.jobs();
     if jobs.is_empty() {
         bail!("job graph has no jobs");
     }
-    // At least one worker, and never more than there are jobs (an idle
-    // worker would still pay engine construction). jobs is non-empty here.
-    let workers = opts.workers.clamp(1, jobs.len());
+
+    // Store pre-pass: satisfy what we can from the cache before any engine
+    // (or thread) exists. All maps are pre-seeded so the scheduler below
+    // treats cached jobs exactly like already-completed ones.
+    let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
+        graph.plans().iter().map(|_| None).collect();
+    let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
+    // A trunk's snapshot is held only until its last pending tail is
+    // dispatched (the tails' WorkItems keep their own Arcs); `trunk_flops`
+    // outlives it for the final accounting. Peak host memory therefore
+    // matches the serial sweep's one-group-at-a-time profile, not #groups.
+    let mut snapshots: HashMap<JobId, Arc<DriverSnapshot>> = HashMap::new();
+    let mut undispatched_tails: HashMap<JobId, usize> = HashMap::new();
+    // Trunks satisfied from the store whose snapshot is still on disk:
+    // digest + pending-tail count. The snapshot itself is materialized
+    // lazily, when the first pending tail is dispatched — eagerly loading
+    // every cached trunk up front would hold #groups full model states at
+    // once, breaking the one-group-at-a-time memory profile.
+    let mut cached_trunks: HashMap<JobId, (String, usize)> = HashMap::new();
+    let mut satisfied = vec![false; jobs.len()];
+    if let Some(s) = store.as_deref() {
+        prefill_from_store(
+            graph,
+            s,
+            opts.keep_states,
+            &mut per_plan,
+            &mut trunk_flops,
+            &mut cached_trunks,
+            &mut satisfied,
+        )?;
+    }
+    let done_upfront = satisfied.iter().filter(|&&b| b).count();
+    if done_upfront == jobs.len() {
+        // Fully warm store: zero engines, zero dispatches.
+        return graph.assemble(per_plan, |job| trunk_flops.get(&job).copied());
+    }
+    // At least one worker, and never more than there are uncached jobs (an
+    // idle worker would still pay engine construction).
+    let workers = opts.workers.clamp(1, jobs.len() - done_upfront);
+    let persist = store.is_some();
 
     thread::scope(|scope| {
         let (reply_tx, reply_rx) = channel::<WorkerMsg>();
@@ -127,29 +175,37 @@ pub fn run_graph(
         }
         drop(reply_tx);
 
-        let mut ready: VecDeque<JobId> =
-            jobs.iter().filter(|j| j.deps.is_empty()).map(|j| j.id).collect();
+        let mut ready: VecDeque<JobId> = jobs
+            .iter()
+            .filter(|j| !satisfied[j.id] && j.deps.iter().all(|&d| satisfied[d]))
+            .map(|j| j.id)
+            .collect();
         let mut idle: Vec<usize> = Vec::new();
-        // A trunk's snapshot is held only until its last tail is dispatched
-        // (the tails' WorkItems keep their own Arcs); `trunk_flops` outlives
-        // it for the final accounting. Peak host memory therefore matches
-        // the serial sweep's one-group-at-a-time profile, not #groups.
-        let mut snapshots: HashMap<JobId, Arc<DriverSnapshot>> = HashMap::new();
-        let mut undispatched_tails: HashMap<JobId, usize> = HashMap::new();
-        let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
-        let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
-            graph.plans().iter().map(|_| None).collect();
         let mut in_flight = 0usize;
-        let mut completed = 0usize;
+        let mut completed = done_upfront;
         let mut alive = workers;
         let mut first_err: Option<anyhow::Error> = None;
 
         while completed < jobs.len() {
             // Hand every ready job to an idle worker (unless aborting).
             while first_err.is_none() && !ready.is_empty() && !idle.is_empty() {
-                let job = ready.pop_front().expect("checked non-empty");
-                let worker = idle.pop().expect("checked non-empty");
-                let item = make_item(graph, job, &snapshots, opts.keep_states)?;
+                let (Some(job), Some(worker)) = (ready.pop_front(), idle.pop()) else {
+                    break;
+                };
+                // Lazily materialize a store-cached trunk snapshot when its
+                // first pending tail reaches the front of the queue; the
+                // existing last-tail bookkeeping below then releases it.
+                if let JobKind::Tail { trunk, .. } = graph.jobs()[job].kind {
+                    if !snapshots.contains_key(&trunk) {
+                        if let Some((digest, pending)) = cached_trunks.remove(&trunk) {
+                            let snap =
+                                load_cached_trunk(manifest, graph, store.as_deref(), trunk, &digest)?;
+                            undispatched_tails.insert(trunk, pending);
+                            snapshots.insert(trunk, Arc::new(snap));
+                        }
+                    }
+                }
+                let item = make_item(graph, job, &snapshots, opts.keep_states || persist)?;
                 if to_worker[worker].send(item).is_err() {
                     // The worker hung up after announcing itself (it cannot
                     // do so gracefully, so treat it as lost) — keep the job.
@@ -184,14 +240,65 @@ pub fn run_graph(
                     idle.push(worker);
                     match output {
                         Ok(JobOutput::Snapshot(snap)) => {
+                            // Persist before publication; a store failure
+                            // aborts the sweep cleanly (never deadlocks the
+                            // drain loop).
+                            if let Some(s) = store.as_deref_mut() {
+                                if let JobKind::Trunk { plan_idx, .. } = jobs[job].kind {
+                                    let plan = &graph.plans()[plan_idx];
+                                    let res = manifest
+                                        .get(&plan.stages()[0].cfg_id)
+                                        .and_then(|entry| {
+                                            s.store_trunk(&plan.trunk_digest(), &snap, entry)
+                                        });
+                                    if let Err(e) = res {
+                                        if first_err.is_none() {
+                                            first_err = Some(e.context(format!(
+                                                "persisting trunk snapshot for '{}'",
+                                                plan.name()
+                                            )));
+                                        }
+                                    }
+                                }
+                            }
                             trunk_flops.insert(job, snap.ledger.total);
-                            let tails = graph.dependents(job);
-                            undispatched_tails.insert(job, tails.len());
-                            snapshots.insert(job, Arc::new(*snap));
-                            ready.extend(tails);
+                            let tails: Vec<JobId> = graph
+                                .dependents(job)
+                                .into_iter()
+                                .filter(|&t| !satisfied[t])
+                                .collect();
+                            // Publish the snapshot only if something will
+                            // consume it — when every tail was already
+                            // cache-satisfied the trunk ran purely for its
+                            // FLOP cost, and holding the full model state
+                            // until sweep end would break the one-group-
+                            // at-a-time memory profile.
+                            if !tails.is_empty() {
+                                undispatched_tails.insert(job, tails.len());
+                                snapshots.insert(job, Arc::new(*snap));
+                                ready.extend(tails);
+                            }
                         }
                         Ok(JobOutput::Run { plan_idx, result, state }) => {
-                            per_plan[plan_idx] = Some((*result, state.map(|s| *s)));
+                            let state = state.map(|s| *s);
+                            // Persist even while draining after an error:
+                            // completed work survives the abort and the
+                            // resumed sweep skips it.
+                            if let Some(s) = store.as_deref_mut() {
+                                let plan = &graph.plans()[plan_idx];
+                                if let Err(e) =
+                                    s.store_run(&plan.digest(), &result, state.as_ref())
+                                {
+                                    if first_err.is_none() {
+                                        first_err = Some(e.context(format!(
+                                            "persisting run result for '{}'",
+                                            plan.name()
+                                        )));
+                                    }
+                                }
+                            }
+                            per_plan[plan_idx] =
+                                Some((*result, if opts.keep_states { state } else { None }));
                         }
                         Err(e) => {
                             if first_err.is_none() {
@@ -223,6 +330,66 @@ pub fn run_graph(
         }
         graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
     })
+}
+
+/// Resolve cache hits for a graph against the store (scheduler-side, before
+/// any worker exists): completed runs fill `per_plan`; a cached trunk
+/// contributes its journaled FLOP cost and — when any of its tails still
+/// has to run — is recorded in `cached_trunks` for lazy snapshot loading at
+/// first-tail dispatch. A trunk journaled but missing its snapshot file
+/// with pending tails is simply left unsatisfied and re-runs
+/// (deterministically identical). Corrupted committed entries are errors.
+fn prefill_from_store(
+    graph: &JobGraph,
+    store: &RunStore,
+    keep_states: bool,
+    per_plan: &mut [Option<(RunResult, Option<ModelState>)>],
+    trunk_flops: &mut HashMap<JobId, f64>,
+    cached_trunks: &mut HashMap<JobId, (String, usize)>,
+    satisfied: &mut [bool],
+) -> Result<()> {
+    let plans = graph.plans();
+    for j in graph.jobs() {
+        if let Some(idx) = j.kind.result_plan() {
+            if let Some(hit) = store.lookup(&plans[idx], keep_states)? {
+                per_plan[idx] = Some(hit);
+                satisfied[j.id] = true;
+            }
+        }
+    }
+    for j in graph.jobs() {
+        let JobKind::Trunk { plan_idx, .. } = j.kind else { continue };
+        let digest = plans[plan_idx].trunk_digest();
+        let Some(tf) = store.trunk_flops(&digest) else { continue };
+        let pending = graph.dependents(j.id).into_iter().filter(|&t| !satisfied[t]).count();
+        if pending == 0 {
+            trunk_flops.insert(j.id, tf);
+            satisfied[j.id] = true;
+        } else if store.has_trunk_snapshot(&digest) {
+            trunk_flops.insert(j.id, tf);
+            cached_trunks.insert(j.id, (digest, pending));
+            satisfied[j.id] = true;
+        }
+    }
+    Ok(())
+}
+
+/// Materialize a store-cached trunk snapshot (lazy counterpart of the
+/// pre-pass), validating its fork step against the trunk job.
+fn load_cached_trunk(
+    manifest: &Manifest,
+    graph: &JobGraph,
+    store: Option<&RunStore>,
+    trunk: JobId,
+    digest: &str,
+) -> Result<DriverSnapshot> {
+    let JobKind::Trunk { plan_idx, fork_step } = graph.jobs()[trunk].kind else {
+        bail!("internal: cached trunk {trunk} is not a trunk job");
+    };
+    let plan = &graph.plans()[plan_idx];
+    let store = store.context("internal: cached trunk recorded without a store")?;
+    let entry = manifest.get(&plan.stages()[0].cfg_id)?;
+    store.load_trunk_at(digest, entry, fork_step, plan.name())
 }
 
 /// Materialize the payload for a ready job (cloning the plan; tails also

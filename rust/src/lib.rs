@@ -11,6 +11,9 @@
 //! - [`exec`]: parallel execution — job-graph lowering of sweeps plus an
 //!   engine-per-worker pool with a deterministic scheduler (bit-identical
 //!   to serial execution for any worker count).
+//! - [`store`]: durable sweep store — content-addressed run/trunk cache +
+//!   crash-safe job journal; interrupted sweeps resume, warm reruns
+//!   execute nothing.
 //! - [`expansion`]: depth-expansion engine (random/copying/zero/... of §3).
 //! - [`schedule`]: WSD / cosine learning-rate schedules (§4's key lever).
 //! - [`data`]: synthetic Markov-Zipf corpus with a known entropy floor.
@@ -27,6 +30,7 @@ pub mod expansion;
 pub mod metrics;
 pub mod coordinator;
 pub mod exec;
+pub mod store;
 pub mod convex;
 pub mod scaling;
 pub mod checkpoint;

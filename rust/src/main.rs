@@ -7,9 +7,10 @@
 //!   progressive <small> <large> [--tau N|--tau-frac F] [--steps N] ...
 //!         [--strategy random|copying|zero|zero_n|zero_l] [--insertion top|bottom]
 //!   sweep <small> <large> [--taus F,F,..] [--strategies a,b,..]
-//!         [--workers N] [--progress]
+//!         [--workers N] [--progress] [--store-dir D]
 //!         expansion-variant sweep sharing source-model training, executed
-//!         over N engine-owning pool workers (bit-identical to serial)
+//!         over N engine-owning pool workers (bit-identical to serial);
+//!         --store-dir makes it durable (crash-safe resume + warm reruns)
 //!   probe-mixing <small> <large> [--probe-steps N] [--steps N] [--workers N]
 //!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
 //!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
@@ -58,7 +59,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     const SWEEP: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
-            "strategies", "insertion", "os", "expand-seed", "workers",
+            "strategies", "insertion", "os", "expand-seed", "workers", "store-dir",
         ],
         switches: &["progress"],
     };
@@ -77,8 +78,10 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &["artifacts", "in", "out-ckpt", "strategy", "insertion", "os", "expand-seed"],
         switches: &[],
     };
-    const BENCH: CommandSpec =
-        CommandSpec { flags: &["artifacts", "out", "steps", "seed", "workers"], switches: &[] };
+    const BENCH: CommandSpec = CommandSpec {
+        flags: &["artifacts", "out", "steps", "seed", "workers", "store-dir"],
+        switches: &[],
+    };
     const LISTING: CommandSpec = CommandSpec { flags: &["artifacts"], switches: &[] };
     match cmd {
         "train" => Some(TRAIN),
@@ -138,6 +141,21 @@ fn apply_eval_every(mut b: RunBuilder, args: &Args) -> RunBuilder {
     b
 }
 
+/// Required positional argument, as a friendly error instead of a panic.
+fn positional<'a>(args: &'a Args, i: usize, usage: &str) -> Result<&'a str> {
+    args.positional
+        .get(i)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing argument — usage: {usage}"))
+}
+
+/// τ from a fraction of the horizon. Both the fraction (parsed as f64 —
+/// an f32-encoded "0.8" is already off by whole steps past ~2^24) and the
+/// product stay in f64, so large horizons keep integer precision.
+fn tau_from_frac(steps: usize, frac: f64) -> usize {
+    (steps as f64 * frac) as usize
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let command = argv.first().cloned().unwrap_or_default();
@@ -183,7 +201,7 @@ fn main() -> Result<()> {
         }
         "inspect" => {
             let m = Manifest::load(&artifacts)?;
-            let c = m.get(&args.positional[0])?;
+            let c = m.get(positional(&args, 0, "inspect <cfg_id>")?)?;
             println!("config {}: {} params, {} active", c.cfg_id, c.param_count, c.active_param_count);
             for p in &c.params {
                 println!("  {:32} {:?} init={:?} muon={}", p.name, p.shape, p.init, p.muon);
@@ -195,7 +213,7 @@ fn main() -> Result<()> {
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
             let trainer = Trainer::new(&engine, &manifest, &corpus);
-            let cfg_id = args.positional.first().expect("usage: train <cfg_id>").clone();
+            let cfg_id = positional(&args, 0, "train <cfg_id>")?.to_string();
             let plan = apply_eval_every(
                 RunBuilder::fixed(format!("train-{cfg_id}"), &cfg_id, steps, schedule_from(&args)).seed(seed),
                 &args,
@@ -236,12 +254,12 @@ fn main() -> Result<()> {
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
             let trainer = Trainer::new(&engine, &manifest, &corpus);
-            let small = args.positional.first().expect("usage: progressive <small> <large>").clone();
-            let large = args.positional.get(1).expect("usage: progressive <small> <large>").clone();
+            let small = positional(&args, 0, "progressive <small> <large>")?.to_string();
+            let large = positional(&args, 1, "progressive <small> <large>")?.to_string();
             let tau = args
                 .get("tau")
                 .and_then(|s| s.parse().ok())
-                .unwrap_or(((steps as f32) * args.get_f32("tau-frac", 0.8)) as usize);
+                .unwrap_or_else(|| tau_from_frac(steps, args.get_f64("tau-frac", 0.8)));
             let plan = apply_eval_every(
                 RunBuilder::progressive(
                     format!("prog-{small}-{large}"),
@@ -280,13 +298,13 @@ fn main() -> Result<()> {
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
             let trainer = Trainer::new(&engine, &manifest, &corpus);
-            let small = args.positional.first().expect("usage: sweep <small> <large>").clone();
-            let large = args.positional.get(1).expect("usage: sweep <small> <large>").clone();
+            let small = positional(&args, 0, "sweep <small> <large>")?.to_string();
+            let large = positional(&args, 1, "sweep <small> <large>")?.to_string();
             let taus: Vec<usize> = args
                 .get_str("taus", "0.3,0.6")
                 .split(',')
-                .filter_map(|s| s.trim().parse::<f32>().ok())
-                .map(|f| ((steps as f32) * f) as usize)
+                .filter_map(|s| s.trim().parse::<f64>().ok())
+                .map(|f| tau_from_frac(steps, f))
                 .collect();
             let strategies: Vec<&str> = args.get_str("strategies", "random,zero").split(',').collect();
             let base = expand_from(&args)?;
@@ -294,6 +312,11 @@ fn main() -> Result<()> {
             let mut sweep = Sweep::new(trainer);
             if args.has("progress") {
                 sweep.progress(ProgressSink::stderr());
+            }
+            if let Some(dir) = args.get("store-dir") {
+                // Durable sweep: completed runs + trunk snapshots persist in
+                // the store; an interrupted invocation resumes from it.
+                sweep.store(dir)?;
             }
             let mut labels = Vec::new();
             for &tau in &taus {
@@ -332,8 +355,8 @@ fn main() -> Result<()> {
         "probe-mixing" => {
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
-            let small = args.positional.first().expect("usage: probe-mixing <small> <large>").clone();
-            let large = args.positional.get(1).expect("usage: probe-mixing <small> <large>").clone();
+            let small = positional(&args, 0, "probe-mixing <small> <large>")?.to_string();
+            let large = positional(&args, 1, "probe-mixing <small> <large>")?.to_string();
             let probe_steps = args.get_usize("probe-steps", steps);
             let production = args.get_usize("production-steps", steps * 10);
             let workers = args.get_usize("workers", default_workers());
@@ -372,7 +395,7 @@ fn main() -> Result<()> {
             let dim = args.get_usize("dim", 32);
             let p = ConvexProblem::new(dim, dim * 4, seed);
             let total = args.get_usize("steps", 800);
-            let tau = (total as f32 * args.get_f32("tau-frac", 0.8)) as usize;
+            let tau = tau_from_frac(total, args.get_f64("tau-frac", 0.8));
             let sched = schedule_from(&args);
             let (fixed, prog) = simulate(&p, dim / 2, sched, tau, total, Teleport::Zero, seed);
             println!("fixed:       loss {:.5}  bound {:.5}", fixed.final_loss, fixed.bound);
@@ -381,20 +404,26 @@ fn main() -> Result<()> {
         }
         "expand-ckpt" => {
             // Offline expansion of a checkpoint (library checkpoint format).
+            const USAGE: &str = "expand-ckpt <src> <dst> --in a.ckpt --out-ckpt b.ckpt";
             let manifest = Manifest::load(&artifacts)?;
-            let src_id = args.positional.first().expect("usage: expand-ckpt <src> <dst> --in a --out-ckpt b").clone();
-            let dst_id = args.positional.get(1).expect("usage: expand-ckpt <src> <dst>").clone();
+            let src_id = positional(&args, 0, USAGE)?.to_string();
+            let dst_id = positional(&args, 1, USAGE)?.to_string();
             let src = manifest.get(&src_id)?;
             let dst = manifest.get(&dst_id)?;
-            let state = checkpoint::load(std::path::Path::new(args.get("in").expect("--in")), src)?;
+            let input = args.get("in").ok_or_else(|| anyhow::anyhow!("missing --in — usage: {USAGE}"))?;
+            let output = args
+                .get("out-ckpt")
+                .ok_or_else(|| anyhow::anyhow!("missing --out-ckpt — usage: {USAGE}"))?;
+            let state = checkpoint::load(std::path::Path::new(input), src)?;
             let big = deep_progressive::expansion::expand(src, dst, &state, &expand_from(&args)?)?;
-            checkpoint::save(std::path::Path::new(args.get("out-ckpt").expect("--out-ckpt")), &dst_id, &big, dst)?;
+            checkpoint::save(std::path::Path::new(output), &dst_id, &big, dst)?;
             println!("expanded {src_id} -> {dst_id}");
             Ok(())
         }
         cmd if cmd.starts_with("bench-") => {
             let workers = args.get_usize("workers", default_workers());
-            let ctx = Ctx::new(&artifacts, &out, steps, seed, workers)?;
+            let store_dir = args.get("store-dir").map(std::path::PathBuf::from);
+            let ctx = Ctx::new(&artifacts, &out, steps, seed, workers, store_dir)?;
             run_target(&ctx, &cmd[6..])
         }
         other => {
@@ -416,6 +445,11 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--taus F,F] [--strategies a,b] training is shared across variants
         [--workers N] [--progress]      parallel over N engine-owning workers
                                         (default: all cores; bit-identical)
+        [--store-dir D]                 durable: completed runs + trunk
+                                        snapshots persist; an interrupted
+                                        sweep resumes re-running only
+                                        unfinished jobs, a warm rerun
+                                        executes nothing
   probe-mixing <small> <large>      derive τ from two early-stopped probes (§7);
         [--workers N]                   ≥2 workers run the pair as lockstep jobs
   convex                            §4 convex-theory simulator
@@ -437,5 +471,7 @@ COMMON FLAGS
   --insertion bottom|top   --os inherit|copy|reset
   --tau N | --tau-frac F   --seed N   --eval-every N   --progress
   --workers N        pool size for sweep/bench grids (default: all cores)
+  --store-dir D      durable run cache for sweep/bench grids (crash-safe
+                     journal; repeated invocations skip completed work)
   --artifacts DIR (default artifacts)   --out DIR (default results)
 "#;

@@ -271,8 +271,17 @@ impl Engine {
         mut elems: Vec<xla::Literal>,
     ) -> Result<xla::Literal> {
         let np = entry.params.len();
-        debug_assert_eq!(elems.len(), np + entry.opt_state.len() + 1);
-        let tail = elems.pop().expect("dispatch validated the output arity");
+        if elems.len() != np + entry.opt_state.len() + 1 {
+            bail!(
+                "artifact for '{}' returned {} outputs, manifest layout wants {} (stale artifacts?)",
+                entry.cfg_id,
+                elems.len(),
+                np + entry.opt_state.len() + 1
+            );
+        }
+        let Some(tail) = elems.pop() else {
+            bail!("artifact for '{}' returned no outputs", entry.cfg_id);
+        };
         let shapes = entry.params.iter().map(|p| &p.shape).chain(entry.opt_state.iter().map(|o| &o.shape));
         for (lit, shape) in elems.iter().zip(shapes) {
             let want: usize = shape.iter().product::<usize>().max(1);
@@ -349,8 +358,7 @@ impl Engine {
                 &materialized
             }
         };
-        *fresh = Some(self.upload_params(&host.params)?);
-        Ok(fresh.as_deref().expect("assigned above"))
+        Ok(fresh.insert(self.upload_params(&host.params)?).as_slice())
     }
 
     // ------------------------------------------------- device-resident path

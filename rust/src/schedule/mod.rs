@@ -47,8 +47,12 @@ impl Schedule {
         let x = t as f32 / total_f;
         let warm = |wf: f32, peak: f32| -> Option<f32> {
             if wf > 0.0 && x < wf {
-                // Linear ramp, starting above 0 so step 0 moves.
-                Some(peak * (t as f32 + 1.0) / (wf * total_f))
+                // Linear ramp, starting above 0 so step 0 moves. Clamped at
+                // peak: for short horizons the ramp denominator `wf · total`
+                // can be < t + 1 (e.g. total=10, wf=0.02 gives 0.2), and the
+                // unclamped ramp would overshoot peak several-fold —
+                // violating the §4.2 schedule the bound analysis assumes.
+                Some((peak * (t as f32 + 1.0) / (wf * total_f)).min(peak))
             } else {
                 None
             }
@@ -91,9 +95,18 @@ impl Schedule {
 
     /// End of the stable phase (where expansion must happen per Takeaway 6);
     /// for non-WSD schedules this is just the horizon.
+    ///
+    /// Computed in f64 and rounded: the old `f32` product truncated step
+    /// indices for large horizons (f32 loses integers past 2^24, so at
+    /// total=10^8 the boundary was off by whole steps — and the sweep fork
+    /// step derived from it disagreed with the schedule). f64 keeps integer
+    /// precision to 2^53; rounding recovers the intended fraction from the
+    /// f32-encoded `decay_frac` (0.2 means exactly 80% of the horizon).
     pub fn stable_end(&self, total: usize) -> usize {
         match *self {
-            Schedule::Wsd { decay_frac, .. } => ((1.0 - decay_frac) * total as f32) as usize,
+            Schedule::Wsd { decay_frac, .. } => {
+                ((1.0 - f64::from(decay_frac)) * total as f64).round() as usize
+            }
             _ => total,
         }
     }
@@ -131,6 +144,46 @@ mod tests {
         let s = Schedule::Constant { peak: 0.01, warmup_frac: 0.0 };
         let sum = s.lr_sum(0, 1000, 1000);
         assert!((sum - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_never_overshoots_peak() {
+        // Regression: with total=10 and warmup_frac=0.02, wf·total = 0.2 < 1
+        // and the unclamped ramp made step 0's LR 5× peak.
+        let peak = 0.01f32;
+        for total in [1usize, 2, 5, 10, 37, 50, 1000] {
+            for sched in [
+                Schedule::Wsd { peak, warmup_frac: 0.02, decay_frac: 0.2 },
+                Schedule::cosine(peak),
+                Schedule::Constant { peak, warmup_frac: 0.02 },
+                Schedule::Linear { peak, warmup_frac: 0.02 },
+                Schedule::Wsd { peak, warmup_frac: 0.5, decay_frac: 0.2 },
+            ] {
+                for t in 0..total {
+                    let lr = sched.lr(t, total);
+                    assert!(lr <= peak, "{sched:?}: lr({t}, {total}) = {lr} exceeds peak {peak}");
+                    assert!(lr >= 0.0, "{sched:?}: lr({t}, {total}) = {lr} negative");
+                }
+            }
+        }
+        // The short-horizon case that used to overshoot, pinned explicitly.
+        let s = Schedule::Wsd { peak, warmup_frac: 0.02, decay_frac: 0.2 };
+        assert_eq!(s.lr(0, 10), peak);
+    }
+
+    #[test]
+    fn stable_end_is_exact_for_large_horizons() {
+        // Regression: the f32 product lost integer precision past 2^24.
+        let wsd = |df: f32| Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: df };
+        assert_eq!(wsd(0.2).stable_end(100_000_000), 80_000_000);
+        assert_eq!(wsd(0.25).stable_end(100_000_000), 75_000_000);
+        assert_eq!(wsd(0.25).stable_end(100_000_001), 75_000_001);
+        assert_eq!(wsd(0.1).stable_end(16_777_217), 15_099_495); // 0.9 · (2^24 + 1), rounded
+        // Small horizons keep their intended fractions.
+        assert_eq!(wsd(0.2).stable_end(1000), 800);
+        assert_eq!(wsd(0.2).stable_end(10), 8);
+        // Non-WSD schedules: stable phase runs to the horizon.
+        assert_eq!(Schedule::cosine(0.01).stable_end(100_000_000), 100_000_000);
     }
 
     #[test]

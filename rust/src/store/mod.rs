@@ -1,0 +1,621 @@
+//! Durable sweep store: a content-addressed on-disk run cache plus a
+//! crash-safe job journal (DESIGN.md §7).
+//!
+//! The paper's figure grids train one family of models from a shared trunk;
+//! before this module, a killed sweep repaid **everything**, because trunk
+//! fork snapshots and finished `RunResult`s lived only in memory. The
+//! [`RunStore`] persists both, keyed by content digests:
+//!
+//! - **runs/**`<digest>.run` — a completed run's `RunResult` (+ final model
+//!   state), keyed by [`crate::coordinator::RunPlan::digest`], the full-plan
+//!   hash over stages/transitions, horizon, schedule, eval cadence, and
+//!   seed (name excluded: renaming a run must not repay its compute);
+//! - **trunks/**`<digest>.snap` — a shared trunk's fork snapshot in the
+//!   bit-exact `DPTDRV01` form ([`crate::checkpoint`]), keyed by
+//!   [`crate::coordinator::RunPlan::trunk_digest`] (prefix + fork step —
+//!   exactly the sweep's sharing rule);
+//! - **journal.log** — append-only job journal. A cache file is trusted
+//!   only once its journal line is present, and the write order is always
+//!   *snapshot write → fsync → rename → journal append → fsync*, so a crash
+//!   at any point leaves either nothing or a whole, committed entry. A torn
+//!   trailing journal line is ignored at load.
+//!
+//! Results are deterministic functions of (plan, corpus, manifest), so the
+//! store salts its directory with a **context fingerprint** of the corpus
+//! config and manifest description ([`RunStore::context_salt`]):
+//! regenerating artifacts or changing the corpus switches to a fresh
+//! context directory and can never serve stale results. Bumping
+//! `STORE_VERSION` (or the plan digest version) invalidates the same way —
+//! by key change, never by mutation. The one thing the salt *cannot* see
+//! is the training code itself: a store must not be shared across builds
+//! whose numerics may differ (CI therefore keeps its bench store
+//! workspace-local to one job, never in a cross-commit cache).
+//!
+//! Consumers: [`crate::coordinator::Sweep`] (serial path) and
+//! [`crate::exec::run_graph`] (pool scheduler pre-pass + completion hook);
+//! surfaced as `Sweep::store(dir)` / `repro ... --store-dir`.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+use std::fs::{File, OpenOptions};
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{self, DriverSnapshot};
+use crate::coordinator::{RunPlan, RunResult};
+use crate::data::Corpus;
+use crate::metrics::Curve;
+use crate::runtime::{ConfigEntry, Manifest, ModelState, Tensor};
+
+const RUN_MAGIC: &[u8; 8] = b"DPTRUN01";
+/// Folded into every digest preimage; bump to invalidate all entries when
+/// the on-disk format or digest semantics change.
+pub const STORE_VERSION: u32 = 1;
+
+/// 128-bit content digest (two independent FNV-1a-style lanes), hex-encoded
+/// to 32 chars. Not cryptographic — it keys a local cache where the ~2^64
+/// birthday bound is ample.
+pub fn digest_str(s: &str) -> String {
+    let mut a: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut b: u64 = 0x6c62_272e_07bb_0142;
+    for &byte in s.as_bytes() {
+        a = (a ^ u64::from(byte)).wrapping_mul(0x0000_0100_0000_01b3);
+        b = (b ^ u64::from(byte).rotate_left(17) ^ 0xa5a5).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{a:016x}{b:016x}")
+}
+
+fn is_digest(s: &str) -> bool {
+    s.len() == 32 && s.bytes().all(|c| c.is_ascii_hexdigit())
+}
+
+/// Content-addressed on-disk cache of sweep work. See module docs.
+pub struct RunStore {
+    dir: PathBuf,
+    journal: File,
+    /// Journaled (committed) run digests.
+    runs: HashSet<String>,
+    /// Journaled trunk digests → the trunk snapshot's ledger total, kept in
+    /// the journal line (bit-exact f64) so FLOP assembly over a fully-cached
+    /// group never has to read the snapshot file.
+    trunks: HashMap<String, f64>,
+}
+
+impl RunStore {
+    /// Open (or create) a store rooted at `dir` and replay its journal.
+    /// Unparseable or torn journal lines — the possible residue of a crash
+    /// mid-append — are ignored; their cache files are simply re-earned.
+    pub fn open(dir: impl AsRef<Path>) -> Result<RunStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(dir.join("runs"))
+            .with_context(|| format!("creating run store {dir:?}"))?;
+        std::fs::create_dir_all(dir.join("trunks"))?;
+        let jpath = dir.join("journal.log");
+        let mut runs = HashSet::new();
+        let mut trunks = HashMap::new();
+        let mut torn_tail = false;
+        if let Ok(text) = std::fs::read_to_string(&jpath) {
+            torn_tail = !text.is_empty() && !text.ends_with('\n');
+            for line in text.lines() {
+                // The version header is the one line that must not be
+                // shrugged off: trusting journal entries written under a
+                // different on-disk format would surface later as spurious
+                // corruption errors mid-sweep instead of a clear message.
+                if let Some(v) = line.strip_prefix("DPTSTORE v") {
+                    if v.trim().parse::<u32>().ok() != Some(STORE_VERSION) {
+                        bail!(
+                            "run store {dir:?} was written by an incompatible version \
+                             (journal header '{line}'; this binary expects v{STORE_VERSION}) — \
+                             delete the directory to rebuild it"
+                        );
+                    }
+                    continue;
+                }
+                let mut it = line.split_whitespace();
+                match it.next() {
+                    Some("run") => {
+                        if let Some(d) = it.next() {
+                            if is_digest(d) && it.next().is_none() {
+                                runs.insert(d.to_string());
+                            }
+                        }
+                    }
+                    Some("trunk") => {
+                        if let (Some(d), Some(f)) = (it.next(), it.next()) {
+                            if is_digest(d) && it.next().is_none() {
+                                if let Ok(bits) = u64::from_str_radix(f, 16) {
+                                    trunks.insert(d.to_string(), f64::from_bits(bits));
+                                }
+                            }
+                        }
+                    }
+                    _ => {} // header, garbage, or a torn tail line
+                }
+            }
+        }
+        let mut journal = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&jpath)
+            .with_context(|| format!("opening store journal {jpath:?}"))?;
+        if journal.metadata().map(|m| m.len()).unwrap_or(1) == 0 {
+            journal.write_all(format!("DPTSTORE v{STORE_VERSION}\n").as_bytes())?;
+        } else if torn_tail {
+            // Terminate the crash-torn tail line before the first new
+            // append — otherwise the next commit line would be concatenated
+            // onto the torn fragment and silently discarded at the *next*
+            // open, breaking the journal's commit guarantee exactly in the
+            // crash-recovery path it exists for.
+            journal.write_all(b"\n")?;
+        }
+        Ok(RunStore { dir, journal, runs, trunks })
+    }
+
+    /// Open a store under a per-context subdirectory of `dir` (see
+    /// [`RunStore::context_salt`]): entries from a different corpus or
+    /// manifest can never be served.
+    pub fn open_salted(dir: impl AsRef<Path>, salt: &str) -> Result<RunStore> {
+        RunStore::open(dir.as_ref().join(format!("ctx-{salt}")))
+    }
+
+    /// Fingerprint of everything *outside* the plan that determines run
+    /// results: the corpus config (incl. its seed — the token streams are a
+    /// deterministic function of it) and, per manifest config, the full
+    /// model description (depth, width, heads, batch, seq_len, MoE, …),
+    /// optimizer kind, dispatch chunk length (chunked vs single-step math
+    /// differs in the last float bits), param counts, and every param spec
+    /// (name, shape, init, muon/decay flags, fan-in/out) and opt-state
+    /// layout. Artifact *paths* are deliberately excluded — the same
+    /// artifacts mounted elsewhere must still hit. Digested over the
+    /// manifest's BTreeMap order, so it is stable across processes.
+    pub fn context_salt(manifest: &Manifest, corpus: &Corpus) -> String {
+        let mut desc = format!("ctxv{STORE_VERSION}|corpus={:?}", corpus.cfg);
+        for (id, c) in &manifest.configs {
+            let _ = write!(
+                desc,
+                "|cfg {id} model={:?} opt={} chunk={} n={}/{} params=",
+                c.model, c.opt_kind, c.chunk, c.param_count, c.active_param_count
+            );
+            for p in &c.params {
+                let _ = write!(desc, "{p:?},");
+            }
+            desc.push_str(" os=");
+            for o in &c.opt_state {
+                let _ = write!(desc, "{}:{:?},", o.name, o.shape);
+            }
+        }
+        digest_str(&desc)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn run_path(&self, digest: &str) -> PathBuf {
+        self.dir.join("runs").join(format!("{digest}.run"))
+    }
+
+    fn trunk_path(&self, digest: &str) -> PathBuf {
+        self.dir.join("trunks").join(format!("{digest}.snap"))
+    }
+
+    /// One write + fsync per line; the journal append is the commit point
+    /// of every store entry (files without a journal line are ignored).
+    fn append_journal(&mut self, line: &str) -> Result<()> {
+        self.journal
+            .write_all(format!("{line}\n").as_bytes())
+            .context("appending to store journal")?;
+        self.journal.sync_data().context("syncing store journal")?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ run cache
+
+    /// True when `digest` is journaled *and* its entry file is present.
+    pub fn has_run(&self, digest: &str) -> bool {
+        self.runs.contains(digest) && self.run_path(digest).exists()
+    }
+
+    /// Cache lookup for one plan. On a hit, the stored curve is renamed to
+    /// the requesting plan (digests are name-blind). Returns `None` on a
+    /// miss, or when `keep_state` asks for a final model state the entry
+    /// does not carry; a journaled-but-corrupted entry is an **error**,
+    /// never a silent miss or hit.
+    pub fn lookup(
+        &self,
+        plan: &RunPlan,
+        keep_state: bool,
+    ) -> Result<Option<(RunResult, Option<ModelState>)>> {
+        let digest = plan.digest();
+        if !self.has_run(&digest) {
+            return Ok(None);
+        }
+        let (result, state) = self.load_run(&digest, plan.name(), keep_state)?;
+        if keep_state && state.is_none() {
+            return Ok(None);
+        }
+        Ok(Some((result, state)))
+    }
+
+    /// Persist a completed run: atomic file write (+fsync), then journal
+    /// commit. Idempotent — re-storing a committed digest is a no-op (or a
+    /// file rewrite when the entry file was deleted out from under us).
+    pub fn store_run(
+        &mut self,
+        digest: &str,
+        result: &RunResult,
+        state: Option<&ModelState>,
+    ) -> Result<()> {
+        let journaled = self.runs.contains(digest);
+        let path = self.run_path(digest);
+        if journaled && path.exists() {
+            return Ok(());
+        }
+        checkpoint::write_atomic(&path, |f| {
+            f.write_all(RUN_MAGIC)?;
+            checkpoint::write_str(f, &result.curve.name)?;
+            checkpoint::write_f32(f, result.final_val_loss)?;
+            checkpoint::write_ledger(f, &result.ledger)?;
+            checkpoint::write_curve_points(f, &result.curve.points)?;
+            checkpoint::write_boundaries(f, &result.boundaries)?;
+            match state {
+                None => checkpoint::write_u64(f, 0)?,
+                Some(s) => {
+                    checkpoint::write_u64(f, 1)?;
+                    write_tensor_list(f, &s.params)?;
+                    write_tensor_list(f, &s.opt)?;
+                }
+            }
+            Ok(())
+        })
+        .with_context(|| format!("writing run-cache entry {digest}"))?;
+        if !journaled {
+            self.append_journal(&format!("run {digest}"))?;
+            self.runs.insert(digest.to_string());
+        }
+        Ok(())
+    }
+
+    /// Read a committed run entry, renaming its curve to `run_name`. With
+    /// `want_state` false the final-state section — the dominant bytes of
+    /// an entry — is never read or allocated (warm bench reruns stay cheap).
+    pub fn load_run(
+        &self,
+        digest: &str,
+        run_name: &str,
+        want_state: bool,
+    ) -> Result<(RunResult, Option<ModelState>)> {
+        let path = self.run_path(digest);
+        let read = || -> Result<(RunResult, Option<ModelState>)> {
+            let mut f = BufReader::new(File::open(&path)?);
+            let mut magic = [0u8; 8];
+            f.read_exact(&mut magic)?;
+            if &magic != RUN_MAGIC {
+                bail!("not a DPT run-cache entry");
+            }
+            let _stored_name = checkpoint::read_str(&mut f)?;
+            let final_val_loss = checkpoint::read_f32(&mut f)?;
+            let ledger = checkpoint::read_ledger(&mut f)?;
+            let mut curve = Curve::new(run_name);
+            curve.points = checkpoint::read_curve_points(&mut f)?;
+            let boundaries = checkpoint::read_boundaries(&mut f)?;
+            let state = if !want_state {
+                None
+            } else {
+                match checkpoint::read_u64(&mut f)? {
+                    0 => None,
+                    1 => Some(ModelState {
+                        params: read_tensor_list(&mut f)?,
+                        opt: read_tensor_list(&mut f)?,
+                    }),
+                    other => bail!("bad state-presence flag {other}"),
+                }
+            };
+            Ok((RunResult { curve, ledger, boundaries, final_val_loss }, state))
+        };
+        read().with_context(|| {
+            format!("reading cached run {digest} from {path:?} (truncated or corrupted store?)")
+        })
+    }
+
+    // ---------------------------------------------------------- trunk cache
+
+    /// Journaled trunk-prefix cost, if the trunk ever completed. Survives
+    /// snapshot-file deletion — enough for bit-exact FLOP assembly over a
+    /// fully-cached group.
+    pub fn trunk_flops(&self, digest: &str) -> Option<f64> {
+        self.trunks.get(digest).copied()
+    }
+
+    /// True when the trunk is journaled and its snapshot file is present
+    /// (i.e. variants can actually fork from it).
+    pub fn has_trunk_snapshot(&self, digest: &str) -> bool {
+        self.trunks.contains_key(digest) && self.trunk_path(digest).exists()
+    }
+
+    /// Persist a trunk fork snapshot (`DPTDRV01` via [`crate::checkpoint`]),
+    /// then journal `trunk <digest> <ledger-total-bits>`.
+    pub fn store_trunk(
+        &mut self,
+        digest: &str,
+        snap: &DriverSnapshot,
+        entry: &ConfigEntry,
+    ) -> Result<()> {
+        let journaled = self.trunks.contains_key(digest);
+        let path = self.trunk_path(digest);
+        if journaled && path.exists() {
+            return Ok(());
+        }
+        checkpoint::save_snapshot(&path, snap, entry)
+            .with_context(|| format!("writing trunk-cache entry {digest}"))?;
+        if !journaled {
+            self.append_journal(&format!("trunk {digest} {:016x}", snap.ledger.total.to_bits()))?;
+            self.trunks.insert(digest.to_string(), snap.ledger.total);
+        }
+        Ok(())
+    }
+
+    /// Load a committed trunk snapshot, validated against `entry` (the
+    /// group's stage-0 config). Corruption is an error, never a cache hit.
+    pub fn load_trunk(&self, digest: &str, entry: &ConfigEntry) -> Result<DriverSnapshot> {
+        checkpoint::load_snapshot(&self.trunk_path(digest), entry)
+            .with_context(|| format!("reading cached trunk {digest} from store {:?}", self.dir))
+    }
+
+    /// [`RunStore::load_trunk`] plus the fork-step invariant both sweep
+    /// paths must enforce identically: the cached snapshot has to sit
+    /// exactly at the group's fork boundary.
+    pub fn load_trunk_at(
+        &self,
+        digest: &str,
+        entry: &ConfigEntry,
+        fork_step: usize,
+        plan_name: &str,
+    ) -> Result<DriverSnapshot> {
+        let snap = self.load_trunk(digest, entry)?;
+        if snap.step != fork_step {
+            bail!(
+                "cached trunk {digest} for '{plan_name}' is at step {} instead of the fork boundary {fork_step}",
+                snap.step
+            );
+        }
+        Ok(snap)
+    }
+}
+
+impl std::fmt::Debug for RunStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunStore")
+            .field("dir", &self.dir)
+            .field("runs", &self.runs.len())
+            .field("trunks", &self.trunks.len())
+            .finish()
+    }
+}
+
+/// Positional (nameless) tensor list — the final-state section of a run
+/// entry. Shapes are self-describing; layout order is the manifest order
+/// the run finished in.
+fn write_tensor_list(f: &mut impl Write, tensors: &[Tensor]) -> Result<()> {
+    checkpoint::write_u64(f, tensors.len() as u64)?;
+    for t in tensors {
+        checkpoint::write_tensor(f, "", t)?;
+    }
+    Ok(())
+}
+
+fn read_tensor_list(f: &mut impl Read) -> Result<Vec<Tensor>> {
+    let n = checkpoint::read_u64(f)? as usize;
+    if n > 1 << 16 {
+        bail!("implausible tensor count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (_, t) = checkpoint::read_tensor(f)?;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunBuilder;
+    use crate::expansion::ExpandSpec;
+    use crate::flops::FlopLedger;
+    use crate::metrics::CurvePoint;
+    use crate::schedule::Schedule;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dpt_store_{name}_{}", std::process::id()))
+    }
+
+    fn sched() -> Schedule {
+        Schedule::Constant { peak: 0.01, warmup_frac: 0.02 }
+    }
+
+    fn plan(name: &str, tau: usize, seed: u64) -> RunPlan {
+        RunBuilder::progressive(name, "s", "l", tau, 100, sched(), ExpandSpec::default())
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    fn result(name: &str) -> RunResult {
+        let mut curve = Curve::new(name);
+        curve.push(CurvePoint { step: 10, tokens: 640, flops: 1e6, train_loss: 2.5, val_loss: 2.6, lr: 0.01 });
+        curve.push(CurvePoint { step: 20, tokens: 1280, flops: 2e6, train_loss: 2.1, val_loss: 2.2, lr: 0.01 });
+        RunResult {
+            curve,
+            ledger: FlopLedger { total: 2e6, tokens: 1280, stages: vec![("s".into(), 20, 2e6)] },
+            boundaries: vec![(10, "l".into())],
+            final_val_loss: 2.2,
+        }
+    }
+
+    fn state() -> ModelState {
+        ModelState {
+            params: vec![Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap()],
+            opt: vec![Tensor::from_vec(&[2], vec![-0.5, 0.25]).unwrap()],
+        }
+    }
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        let a = plan("a", 40, 1);
+        assert_eq!(a.digest(), plan("renamed", 40, 1).digest(), "name must not affect the digest");
+        assert_eq!(a.digest(), a.digest());
+        assert!(is_digest(&a.digest()));
+        assert_ne!(a.digest(), plan("a", 40, 2).digest(), "seed must affect the digest");
+        assert_ne!(a.digest(), plan("a", 60, 1).digest(), "boundary must affect the digest");
+        // The expansion spec only matters after the fork: same trunk digest,
+        // different full digest.
+        let b = RunBuilder::progressive("b", "s", "l", 40, 100, sched(), ExpandSpec { seed: 99, ..Default::default() })
+            .seed(1)
+            .build()
+            .unwrap();
+        assert_ne!(a.digest(), b.digest());
+        assert_eq!(a.trunk_digest(), b.trunk_digest());
+        assert_ne!(a.trunk_digest(), plan("a", 60, 1).trunk_digest());
+    }
+
+    #[test]
+    fn run_roundtrip_is_bit_exact_and_renames() {
+        let dir = tmp("run_rt");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let p = plan("mine", 40, 1);
+        let digest = p.digest();
+        let res = result("original");
+        let st = state();
+        assert!(!store.has_run(&digest));
+        store.store_run(&digest, &res, Some(&st)).unwrap();
+        assert!(store.has_run(&digest));
+        let (loaded, lstate) = store.load_run(&digest, "mine", true).unwrap();
+        assert_eq!(loaded.curve.name, "mine", "loaded curve must take the requesting plan's name");
+        assert_eq!(loaded.curve.points, res.curve.points);
+        assert_eq!(loaded.boundaries, res.boundaries);
+        assert_eq!(loaded.ledger.total.to_bits(), res.ledger.total.to_bits());
+        assert_eq!(loaded.ledger.tokens, res.ledger.tokens);
+        assert_eq!(loaded.ledger.stages, res.ledger.stages);
+        assert_eq!(loaded.final_val_loss.to_bits(), res.final_val_loss.to_bits());
+        let lstate = lstate.expect("state stored");
+        assert_eq!(lstate.params[0].data, st.params[0].data);
+        assert_eq!(lstate.opt[0].data, st.opt[0].data);
+        // lookup honors keep_state both ways.
+        let hit = store.lookup(&p, false).unwrap().expect("hit");
+        assert!(hit.1.is_none());
+        let hit = store.lookup(&p, true).unwrap().expect("hit");
+        assert!(hit.1.is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_is_the_commit_point() {
+        let dir = tmp("commit");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = RunStore::open(&dir).unwrap();
+        let p = plan("p", 40, 1);
+        let digest = p.digest();
+        // A cache file that was never journaled (torn write before the
+        // journal append) must be invisible...
+        std::fs::write(dir.join("runs").join(format!("{digest}.run")), b"garbage").unwrap();
+        assert!(!store.has_run(&digest));
+        assert!(store.lookup(&p, false).unwrap().is_none());
+        drop(store);
+        // ...and a journaled digest whose file disappeared is a plain miss.
+        let mut store = RunStore::open(&dir).unwrap();
+        store.store_run(&digest, &result("p"), None).unwrap();
+        std::fs::remove_file(store.run_path(&digest)).unwrap();
+        assert!(!store.has_run(&digest));
+        // Re-storing after deletion rewrites the file under the old journal
+        // entry (idempotent commit).
+        store.store_run(&digest, &result("p"), None).unwrap();
+        assert!(store.has_run(&digest));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_committed_entry_is_an_error_not_a_hit() {
+        let dir = tmp("corrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let p = plan("p", 40, 1);
+        let digest = p.digest();
+        store.store_run(&digest, &result("p"), Some(&state())).unwrap();
+        let path = store.run_path(&digest);
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut inside the ledger (well before the state section), so the
+        // truncation bites for both state-less and state-ful lookups.
+        std::fs::write(&path, &bytes[..60]).unwrap();
+        assert!(store.lookup(&p, false).is_err(), "truncated committed entry must error");
+        // Cut inside the state section: only a keep-state lookup reads it.
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(store.lookup(&p, true).is_err(), "state-truncated entry must error");
+        std::fs::write(&path, b"XXXXXXXXtrash").unwrap();
+        assert!(store.lookup(&p, false).is_err(), "wrong-magic committed entry must error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_survives_reopen_and_ignores_torn_tail() {
+        let dir = tmp("reopen");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = plan("p", 40, 1);
+        let digest = p.digest();
+        {
+            let mut store = RunStore::open(&dir).unwrap();
+            store.store_run(&digest, &result("p"), None).unwrap();
+        }
+        // Simulate a crash mid-append: a torn trailing line.
+        {
+            let mut j = OpenOptions::new().append(true).open(dir.join("journal.log")).unwrap();
+            j.write_all(b"run deadbeef").unwrap(); // no newline, short digest
+        }
+        let mut store = RunStore::open(&dir).unwrap();
+        assert!(store.has_run(&digest), "journal must survive reopen");
+        assert!(!store.has_run("deadbeef"), "torn tail line must be ignored");
+        // Commits made *after* recovering from a torn tail must not be
+        // concatenated onto the fragment — they must survive a reopen.
+        let p2 = plan("p2", 60, 1);
+        store.store_run(&p2.digest(), &result("p2"), None).unwrap();
+        drop(store);
+        let store = RunStore::open(&dir).unwrap();
+        assert!(store.has_run(&digest));
+        assert!(
+            store.has_run(&p2.digest()),
+            "commit after a torn tail must be journaled on its own line"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trunk_flops_survive_without_snapshot_file() {
+        let dir = tmp("trunkflops");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let digest = digest_str("some trunk");
+        // Hand-journal a trunk (as if its snapshot was pruned later).
+        store.append_journal(&format!("trunk {digest} {:016x}", 1234.5f64.to_bits())).unwrap();
+        store.trunks.insert(digest.clone(), 1234.5);
+        drop(store);
+        let store = RunStore::open(&dir).unwrap();
+        assert_eq!(store.trunk_flops(&digest).map(f64::to_bits), Some(1234.5f64.to_bits()));
+        assert!(!store.has_trunk_snapshot(&digest));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lookup_misses_when_state_required_but_absent() {
+        let dir = tmp("nostate");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let p = plan("p", 40, 1);
+        store.store_run(&p.digest(), &result("p"), None).unwrap();
+        assert!(store.lookup(&p, false).unwrap().is_some());
+        assert!(store.lookup(&p, true).unwrap().is_none(), "state-less entry cannot serve keep_states");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -227,7 +227,7 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad number"))?;
         text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 
@@ -274,7 +274,9 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("invalid utf-8"));
+                    };
                     s.push(c);
                     self.i += c.len_utf8();
                 }

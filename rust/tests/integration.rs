@@ -485,6 +485,124 @@ fn parallel_sweep_is_bit_identical_to_serial() {
 }
 
 #[test]
+fn interrupted_sweep_resumes_bit_identical_from_store() {
+    // Acceptance (durable sweep store, DESIGN.md §7): a sweep killed partway
+    // — simulated by running only half the grid against a store, exactly the
+    // journal + cache state a crash after those jobs leaves behind — must
+    // resume re-running only unfinished jobs and produce curves, final
+    // states, and executed/shared FLOP totals bit-identical to an
+    // uninterrupted run, at 1 and 4 workers. A fully warm rerun must execute
+    // zero dispatches.
+    use deep_progressive::coordinator::{RunPlan, SweepOutcome};
+
+    let Some(m) = manifest() else { return };
+    let corpus = small_corpus();
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let (total, tau) = (120, 40);
+    let prog = |name: &str, strategy: Strategy| {
+        RunBuilder::progressive(
+            name,
+            "gpt2.l0",
+            "gpt2.l3",
+            tau,
+            total,
+            sched,
+            ExpandSpec { strategy, ..Default::default() },
+        )
+        .build()
+        .unwrap()
+    };
+    // One standalone baseline + a three-variant shared-trunk group.
+    let full_grid = || -> Vec<RunPlan> {
+        vec![
+            RunBuilder::fixed("st-fixed", "gpt2.l3", total, sched).build().unwrap(),
+            prog("st-random", Strategy::Random),
+            prog("st-zero", Strategy::Zero),
+            prog("st-copying", Strategy::Copying(CopyOrder::Stack)),
+        ]
+    };
+    let half_grid = || full_grid().into_iter().take(2).collect::<Vec<_>>();
+
+    // Returns (outcome, caller-engine dispatches, progress bytes). The
+    // caller engine only sees serial work; the progress capture sees every
+    // executing driver on *any* worker count (pool workers attach printers
+    // too), so "zero progress bytes" means no job trained or evaluated.
+    let run = |store_dir: Option<&std::path::Path>, plans: Vec<RunPlan>, workers: usize| {
+        use deep_progressive::coordinator::ProgressSink;
+        let engine = Engine::cpu().unwrap();
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        let mut sweep = Sweep::new(trainer);
+        sweep.keep_final_states(true);
+        let (sink, captured) = ProgressSink::capture();
+        sweep.progress(sink);
+        if let Some(dir) = store_dir {
+            sweep.store(dir).unwrap();
+        }
+        for p in plans {
+            sweep.add(p);
+        }
+        let outcome = if workers <= 1 {
+            sweep.run().unwrap()
+        } else {
+            sweep.run_parallel(workers).unwrap()
+        };
+        let progress_bytes = captured.lock().unwrap().len();
+        (outcome, engine.stats().dispatches, progress_bytes)
+    };
+
+    let assert_outcomes_identical = |a: &SweepOutcome, b: &SweepOutcome, what: &str| {
+        assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+        assert_eq!(a.executed_flops.to_bits(), b.executed_flops.to_bits(), "{what}: executed_flops");
+        assert_eq!(a.shared_flops.to_bits(), b.shared_flops.to_bits(), "{what}: shared_flops");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.curve.name, y.curve.name, "{what}: result order/name");
+            assert_eq!(x.curve.points.len(), y.curve.points.len(), "{what}: curve length");
+            for (p, q) in x.curve.points.iter().zip(&y.curve.points) {
+                assert_eq!(p, q, "{what}: curve diverged ('{}')", x.curve.name);
+            }
+            assert_eq!(x.boundaries, y.boundaries, "{what}: boundaries");
+            assert_eq!(x.ledger.total.to_bits(), y.ledger.total.to_bits(), "{what}: ledger");
+            assert_eq!(x.ledger.tokens, y.ledger.tokens, "{what}: tokens");
+            assert_eq!(x.final_val_loss.to_bits(), y.final_val_loss.to_bits(), "{what}: final loss");
+        }
+        for (i, (x, y)) in a.final_states.iter().zip(&b.final_states).enumerate() {
+            let (x, y) = (x.as_ref().expect("kept state"), y.as_ref().expect("kept state"));
+            for (s, t) in x.params.iter().zip(&y.params) {
+                assert_eq!(s.data, t.data, "{what}: final params diverged (run {i})");
+            }
+            for (s, t) in x.opt.iter().zip(&y.opt) {
+                assert_eq!(s.data, t.data, "{what}: final opt state diverged (run {i})");
+            }
+        }
+    };
+
+    // Uninterrupted reference (no store anywhere near it). Sanity-check
+    // that the progress capture actually observes executing runs, so the
+    // zero-bytes assertions below cannot pass vacuously.
+    let (reference, _, ref_progress) = run(None, full_grid(), 1);
+    assert!(ref_progress > 0, "progress capture must see executed runs");
+
+    for workers in [1usize, 4] {
+        let dir = std::env::temp_dir()
+            .join(format!("dpt_sweep_store_w{workers}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // "Kill" after half the grid: these jobs are journaled + cached.
+        run(Some(&dir), half_grid(), 1);
+        // Resume with the full grid: trunk + finished runs come from the
+        // store, only unfinished variants execute.
+        let (resumed, _, _) = run(Some(&dir), full_grid(), workers);
+        assert_outcomes_identical(&reference, &resumed, &format!("resumed at {workers} workers"));
+        // Warm rerun: everything cached — nothing trains or evaluates, on
+        // the caller's engine (serial) or any pool worker's (progress).
+        let (warm, dispatches, progress) = run(Some(&dir), full_grid(), workers);
+        assert_outcomes_identical(&reference, &warm, &format!("warm rerun at {workers} workers"));
+        assert_eq!(dispatches, 0, "warm-store rerun must execute zero dispatches");
+        assert_eq!(progress, 0, "warm-store rerun must run no driver at {workers} workers");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
 fn parallel_probe_pair_matches_serial() {
     // The §7 probe pair run as two lockstep engine-owning jobs must make the
     // same early-stop decision and derive the same τ as the serial path.

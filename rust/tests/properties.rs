@@ -198,6 +198,79 @@ fn prop_job_graph_lowering_invariants() {
     });
 }
 
+#[test]
+fn prop_stable_end_matches_job_graph_fork_step_up_to_1e8() {
+    // Regression (f32 truncation): `stable_end` used to compute the decay
+    // boundary in f32, which loses integer precision past 2^24 — a plan
+    // built with τ = stable_end then forked at a step the schedule itself
+    // disagreed with. The f64 path must stay within half a step of the
+    // exact product for horizons up to 10^8, and the JobGraph fork step of
+    // plans expanding at stable_end must equal it exactly.
+    proptest(200, |g| {
+        let total = g.usize(100..100_000_000);
+        let df = *g.choose(&[0.05f32, 0.1, 0.125, 0.2, 0.25, 0.4, 0.5]);
+        let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: df };
+        let tau = sched.stable_end(total);
+        assert!(tau >= 1 && tau < total, "stable_end {tau} outside (0, {total})");
+        let exact = (1.0 - f64::from(df)) * total as f64;
+        assert!(
+            (tau as f64 - exact).abs() <= 0.5 + 1e-6,
+            "stable_end {tau} drifted from exact {exact} (total {total}, df {df})"
+        );
+        let mk = |name: &str| {
+            RunBuilder::progressive(name, "s", "l", tau, total, sched, ExpandSpec::default())
+                .build()
+                .unwrap()
+        };
+        let graph = JobGraph::lower(vec![mk("a"), mk("b")]).unwrap();
+        let fork = graph
+            .jobs()
+            .iter()
+            .find_map(|j| match j.kind {
+                JobKind::Trunk { fork_step, .. } => Some(fork_step),
+                _ => None,
+            })
+            .expect("two plans expanding at the same τ must share a trunk");
+        assert_eq!(fork, tau, "job-graph fork step disagrees with stable_end");
+    });
+}
+
+// ------------------------------------------------------------- plan digests
+
+#[test]
+fn prop_plan_digest_is_content_addressed() {
+    // The run-store key (DESIGN.md §7): blind to the run name, sensitive to
+    // every execution-relevant field; the trunk digest tracks the sweep's
+    // sharing rule (group_key) exactly.
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    proptest(200, |g| {
+        let total = g.usize(50..5000);
+        let tau = g.usize(1..total);
+        let seed = g.usize(0..4) as u64;
+        let mk = |name: &str, seed: u64, tau: usize| {
+            RunBuilder::progressive(name, "s", "l", tau, total, sched, ExpandSpec::default())
+                .seed(seed)
+                .build()
+                .unwrap()
+        };
+        let a = mk("a", seed, tau);
+        let b = mk("b", seed, tau);
+        assert_eq!(a.digest(), b.digest(), "digest must ignore the run name");
+        assert_eq!(a.trunk_digest(), b.trunk_digest());
+        let c = mk("c", seed + 1, tau);
+        assert_ne!(a.digest(), c.digest(), "digest must see the seed");
+        assert_ne!(a.trunk_digest(), c.trunk_digest());
+        let other_tau = g.usize(1..total);
+        let d = mk("d", seed, other_tau);
+        assert_eq!(
+            a.trunk_digest() == d.trunk_digest(),
+            JobGraph::group_key(&a) == JobGraph::group_key(&d),
+            "trunk digest must agree with the sharing rule (τ {tau} vs {other_tau})"
+        );
+        assert_eq!(a.digest() == d.digest(), tau == other_tau);
+    });
+}
+
 // ------------------------------------------------------------------ batcher
 
 #[test]
