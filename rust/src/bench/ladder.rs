@@ -1,0 +1,171 @@
+//! `bench-ladder`: FLOP-matched comparison of multi-round depth-ladder
+//! growth against one-shot expansion and fixed-depth training
+//! (`BENCH_ladder.json`).
+//!
+//! Four arms over the same corpus/seed, all normalized to the ladder's
+//! training FLOPs by the 6BTN ledger:
+//!
+//! - **ladder**: l0 → l1 → l3 → l6 over three rounds at ¼/½/¾ of the
+//!   horizon;
+//! - **ladder-rewarm**: the same ladder with an LR re-warm segment on the
+//!   final round — it shares every rung trunk with the canonical ladder, so
+//!   the grid exercises the nested multi-round prefix sharing end to end;
+//! - **one-shot**: l0 → l6 at the τ that spends the same FLOPs over the
+//!   same horizon;
+//! - **fixed**: l6 from scratch for the FLOP-equivalent (shorter) horizon.
+//!
+//! The paper's claim (and the escape from the curse of depth) is that
+//! staged growth beats one-shot expansion at equal compute; the JSON
+//! records `ladder_beats_oneshot` / `ladder_beats_fixed` on final val loss.
+//! Losses are deterministic, so store-served reruns are bit-identical and
+//! the canonical JSON is always written.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{LadderRound, RunBuilder, RunPlan};
+use crate::expansion::ExpandSpec;
+use crate::flops::flops_per_step;
+use crate::metrics::Table;
+use crate::schedule::Schedule;
+use crate::util::json::Json;
+
+use super::Ctx;
+
+const RUNGS: [&str; 4] = ["gpt2.l0", "gpt2.l1", "gpt2.l3", "gpt2.l6"];
+
+struct Grid {
+    plans: Vec<RunPlan>,
+    labels: Vec<&'static str>,
+    taus: [usize; 3],
+    tau_oneshot: usize,
+    fixed_steps: usize,
+    ladder_flops: f64,
+}
+
+fn grid(ctx: &Ctx) -> Result<Grid> {
+    let total = ctx.steps;
+    if total < 16 {
+        bail!("bench-ladder needs --steps >= 16 (got {total})");
+    }
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let spec = ExpandSpec::default();
+    let taus = [total / 4, total / 2, total * 3 / 4];
+    let rewarm = (total / 16).max(1);
+
+    let f: Vec<f64> = RUNGS
+        .iter()
+        .map(|cfg| Ok(flops_per_step(ctx.manifest.get(cfg)?)))
+        .collect::<Result<_>>()?;
+    let ladder_flops = f[0] * taus[0] as f64
+        + f[1] * (taus[1] - taus[0]) as f64
+        + f[2] * (taus[2] - taus[1]) as f64
+        + f[3] * (total - taus[2]) as f64;
+    // One-shot τ over the same horizon spending the same FLOPs:
+    // f_small·τ + f_large·(T−τ) = ladder_flops.
+    let tau_oneshot = (((f[3] * total as f64 - ladder_flops) / (f[3] - f[0])).round() as usize)
+        .clamp(1, total - 1);
+    // Fixed-depth horizon spending the same FLOPs.
+    let fixed_steps = ((ladder_flops / f[3]).round() as usize).max(1);
+
+    let rounds = |last_rewarm: usize| {
+        vec![
+            LadderRound::new(RUNGS[1], taus[0], spec),
+            LadderRound::new(RUNGS[2], taus[1], spec),
+            LadderRound::new(RUNGS[3], taus[2], spec).rewarm(last_rewarm),
+        ]
+    };
+    let plans = vec![
+        RunBuilder::ladder("ladder", RUNGS[0], &rounds(0), total, sched).seed(ctx.seed).build()?,
+        RunBuilder::ladder("ladder-rewarm", RUNGS[0], &rounds(rewarm), total, sched)
+            .seed(ctx.seed)
+            .build()?,
+        RunBuilder::progressive("one-shot", RUNGS[0], RUNGS[3], tau_oneshot, total, sched, spec)
+            .seed(ctx.seed)
+            .build()?,
+        RunBuilder::fixed("fixed-l6", RUNGS[3], fixed_steps, sched).seed(ctx.seed).build()?,
+    ];
+    let labels = vec!["ladder", "ladder-rewarm", "one-shot", "fixed"];
+    Ok(Grid { plans, labels, taus, tau_oneshot, fixed_steps, ladder_flops })
+}
+
+pub fn ladder(ctx: &Ctx) -> Result<()> {
+    let target = "ladder";
+    let grid = grid(ctx)?;
+    let outcome = ctx.sweep_logged(target, grid.plans.clone())?;
+
+    let final_loss = |i: usize| outcome.results[i].final_val_loss;
+    let ladder_beats_oneshot = final_loss(0) < final_loss(2);
+    let ladder_beats_fixed = final_loss(0) < final_loss(3);
+
+    let mut table = Table::new(&["arm", "steps", "boundaries", "flops", "final val loss"]);
+    for (i, label) in grid.labels.iter().enumerate() {
+        let res = &outcome.results[i];
+        table.row(vec![
+            label.to_string(),
+            grid.plans[i].total_steps().to_string(),
+            format!("{:?}", res.boundaries.iter().map(|(s, _)| *s).collect::<Vec<_>>()),
+            format!("{:.3e}", res.ledger.total),
+            format!("{:.4}", res.final_val_loss),
+        ]);
+    }
+    ctx.emit(target, &table)?;
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("ladder".to_string()));
+    top.insert("rungs".to_string(), Json::Arr(RUNGS.iter().map(|r| Json::Str(r.to_string())).collect()));
+    top.insert("steps".to_string(), Json::Num(ctx.steps as f64));
+    top.insert("seed".to_string(), Json::Num(ctx.seed as f64));
+    top.insert("workers".to_string(), Json::Num(ctx.workers as f64));
+    top.insert(
+        "ladder_taus".to_string(),
+        Json::Arr(grid.taus.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    top.insert("oneshot_tau".to_string(), Json::Num(grid.tau_oneshot as f64));
+    top.insert("fixed_steps".to_string(), Json::Num(grid.fixed_steps as f64));
+    top.insert("flop_budget".to_string(), Json::Num(grid.ladder_flops));
+    top.insert("executed_flops".to_string(), Json::Num(outcome.executed_flops));
+    top.insert("shared_flops".to_string(), Json::Num(outcome.shared_flops));
+    top.insert("ladder_beats_oneshot".to_string(), Json::Bool(ladder_beats_oneshot));
+    top.insert("ladder_beats_fixed".to_string(), Json::Bool(ladder_beats_fixed));
+    top.insert(
+        "arms".to_string(),
+        Json::Arr(
+            grid.labels
+                .iter()
+                .enumerate()
+                .map(|(i, label)| {
+                    let res = &outcome.results[i];
+                    let mut o = BTreeMap::new();
+                    o.insert("arm".to_string(), Json::Str(label.to_string()));
+                    o.insert("steps".to_string(), Json::Num(grid.plans[i].total_steps() as f64));
+                    o.insert("flops".to_string(), Json::Num(res.ledger.total));
+                    o.insert("final_val_loss".to_string(), Json::Num(res.final_val_loss as f64));
+                    o.insert(
+                        "boundaries".to_string(),
+                        Json::Arr(
+                            res.boundaries.iter().map(|(s, _)| Json::Num(*s as f64)).collect(),
+                        ),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let mut text = Json::Obj(top).to_string();
+    text.push('\n');
+    let dir = ctx.out_dir.join(target);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_ladder.json"), &text)?;
+    std::fs::write("BENCH_ladder.json", &text)?;
+    println!(
+        "wrote BENCH_ladder.json (ladder {:.4} vs one-shot {:.4} vs fixed {:.4} at {:.2e} FLOPs; \
+         ladder beats one-shot: {ladder_beats_oneshot})",
+        final_loss(0),
+        final_loss(2),
+        final_loss(3),
+        grid.ladder_flops
+    );
+    Ok(())
+}

@@ -73,16 +73,22 @@ fn grid(ctx: &Ctx) -> Result<Vec<RunPlan>> {
 /// the throughput numerator, read off the job graph.
 fn executed_steps(plans: &[RunPlan]) -> Result<usize> {
     let graph = JobGraph::lower(plans.to_vec())?;
+    let trunk_fork = |job: usize| -> usize {
+        match graph.jobs()[job].kind {
+            JobKind::Trunk { fork_step, .. } => fork_step,
+            _ => 0,
+        }
+    };
     Ok(graph
         .jobs()
         .iter()
         .map(|j| match j.kind {
-            JobKind::Trunk { fork_step, .. } => fork_step,
+            // A nested (ladder) trunk only trains its own rung segment.
+            JobKind::Trunk { fork_step, parent, .. } => {
+                fork_step - parent.map(&trunk_fork).unwrap_or(0)
+            }
             JobKind::Tail { plan_idx, trunk } => {
-                let JobKind::Trunk { fork_step, .. } = graph.jobs()[trunk].kind else {
-                    return 0;
-                };
-                graph.plans()[plan_idx].total_steps() - fork_step
+                graph.plans()[plan_idx].total_steps() - trunk_fork(trunk)
             }
             JobKind::Standalone { plan_idx } => graph.plans()[plan_idx].total_steps(),
         })

@@ -33,6 +33,33 @@ pub struct PlanStage {
     pub from_step: usize,
     /// Applied when *entering* this stage.
     pub transition: Transition,
+    /// LR re-warm segment length: over the first `rewarm_steps` steps of
+    /// this stage the base-schedule LR is multiplied by a linear ramp from
+    /// ~0 back to 1 (CompleteP-style gentle re-entry after a depth
+    /// expansion). 0 = no re-warm; always 0 for stage 0.
+    pub rewarm_steps: usize,
+}
+
+/// One round of a depth ladder: expand into `cfg_id` at step `at_step`,
+/// optionally re-warming the LR over the first `rewarm_steps` steps of the
+/// new stage. Feed a sequence of rounds to [`RunBuilder::ladder`].
+#[derive(Debug, Clone)]
+pub struct LadderRound {
+    pub cfg_id: String,
+    pub at_step: usize,
+    pub spec: ExpandSpec,
+    pub rewarm_steps: usize,
+}
+
+impl LadderRound {
+    pub fn new(cfg_id: impl Into<String>, at_step: usize, spec: ExpandSpec) -> LadderRound {
+        LadderRound { cfg_id: cfg_id.into(), at_step, spec, rewarm_steps: 0 }
+    }
+
+    pub fn rewarm(mut self, steps: usize) -> LadderRound {
+        self.rewarm_steps = steps;
+        self
+    }
 }
 
 /// Immutable, validated run description. Construct via [`RunBuilder`].
@@ -81,6 +108,36 @@ impl RunPlan {
         self.stages.get(1).map(|s| s.from_step).unwrap_or(self.total_steps)
     }
 
+    /// Number of stage boundaries (expansion rounds) in the plan.
+    pub fn n_boundaries(&self) -> usize {
+        self.stages.len() - 1
+    }
+
+    /// Boundary step at `depth` (1-based round index), when the plan has
+    /// that many rounds.
+    pub fn boundary_at(&self, depth: usize) -> Option<usize> {
+        if depth == 0 {
+            return None;
+        }
+        self.stages.get(depth).map(|s| s.from_step)
+    }
+
+    /// LR actually fed to the engine at `step`: the base schedule, times the
+    /// per-stage re-warm ramp when `step` falls inside a boundary's re-warm
+    /// segment (ladder rounds re-enter the schedule gently after expanding).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let base = self.schedule.lr(step, self.total_steps);
+        for st in self.stages.iter().skip(1).rev() {
+            if step >= st.from_step {
+                if st.rewarm_steps > 0 && step < st.from_step + st.rewarm_steps {
+                    return base * (step - st.from_step + 1) as f32 / st.rewarm_steps as f32;
+                }
+                return base;
+            }
+        }
+        base
+    }
+
     /// Key identifying runs whose step/eval stream is identical until the
     /// first boundary — the [`crate::coordinator::Sweep`] shares the stage-0
     /// segment across plans with equal prefix keys.
@@ -96,27 +153,67 @@ impl RunPlan {
         )
     }
 
+    fn transition_desc(tr: &Transition) -> String {
+        match tr {
+            Transition::Init => "init".to_string(),
+            Transition::SwitchOptimizer => "switch_opt".to_string(),
+            Transition::Expand(spec) => format!("expand {spec:?}"),
+        }
+    }
+
     /// Canonical textual description of everything that determines this
     /// plan's execution: every stage (config, boundary step, transition —
-    /// including the full expansion spec), horizon, schedule, eval cadence,
-    /// and seed. The run **name is excluded**: two identically-shaped runs
-    /// are the same work, and the store renames cached results on load.
-    /// The leading version tag invalidates old digests if semantics change.
+    /// including the full expansion spec — and re-warm segment), horizon,
+    /// schedule, eval cadence, and seed. The run **name is excluded**: two
+    /// identically-shaped runs are the same work, and the store renames
+    /// cached results on load. The leading version tag invalidates old
+    /// digests if semantics change (v2: per-stage `rewarm`).
     pub fn canonical_desc(&self) -> String {
         use std::fmt::Write as _;
         let mut s = format!(
-            "planv1|total={}|eval_every={}|eval_batches={}|seed={}|sched={:?}",
+            "planv2|total={}|eval_every={}|eval_batches={}|seed={}|sched={:?}",
             self.total_steps, self.eval_every, self.eval_batches, self.seed, self.schedule
         );
         for st in &self.stages {
-            let tr = match &st.transition {
-                Transition::Init => "init".to_string(),
-                Transition::SwitchOptimizer => "switch_opt".to_string(),
-                Transition::Expand(spec) => format!("expand {spec:?}"),
-            };
-            let _ = write!(s, "|stage cfg={} from={} tr={}", st.cfg_id, st.from_step, tr);
+            let _ = write!(
+                s,
+                "|stage cfg={} from={} rewarm={} tr={}",
+                st.cfg_id,
+                st.from_step,
+                st.rewarm_steps,
+                Self::transition_desc(&st.transition)
+            );
         }
         s
+    }
+
+    /// Sharing key through boundary `depth` (1-based): two plans with equal
+    /// keys execute the identical step/eval stream through the `depth`-th
+    /// boundary, so that whole multi-round prefix can be trained once and
+    /// forked. `depth = 1` is exactly [`crate::exec::JobGraph::group_key`];
+    /// each deeper level extends it with the next stage's config, transition
+    /// (full expansion spec), and re-warm segment, plus the next boundary
+    /// step. Depth 1 is defined for every plan (single-stage plans "fork"
+    /// at the horizon, like `group_key`); deeper keys are `None` when the
+    /// plan has fewer than `depth` boundaries.
+    pub fn share_key_upto(&self, depth: usize) -> Option<String> {
+        use std::fmt::Write as _;
+        if depth == 0 || (depth > 1 && depth > self.n_boundaries()) {
+            return None;
+        }
+        let mut s = format!("{}@{}", self.prefix_key(), self.first_boundary());
+        for d in 2..=depth {
+            let st = &self.stages[d - 1];
+            let _ = write!(
+                s,
+                "|cfg={} rewarm={} tr={}@{}",
+                st.cfg_id,
+                st.rewarm_steps,
+                Self::transition_desc(&st.transition),
+                self.stages[d].from_step
+            );
+        }
+        Some(s)
     }
 
     /// Full-plan content digest (32 hex chars): two plans with equal digests
@@ -127,7 +224,7 @@ impl RunPlan {
     }
 
     /// Digest of the shared stage-0 segment up to [`RunPlan::first_boundary`]
-    /// — the trunk-snapshot cache key. Equal exactly when
+    /// — the depth-1 trunk-snapshot cache key. Equal exactly when
     /// [`crate::exec::JobGraph::group_key`] is equal, so the store and the
     /// sweep can never disagree about what is shared.
     pub fn trunk_digest(&self) -> String {
@@ -136,6 +233,14 @@ impl RunPlan {
             self.prefix_key(),
             self.first_boundary()
         ))
+    }
+
+    /// Trunk-snapshot cache key for the shared prefix through boundary
+    /// `depth` ([`RunPlan::share_key_upto`]); `trunk_digest_at(1)` equals
+    /// [`RunPlan::trunk_digest`] for any multi-stage plan.
+    pub fn trunk_digest_at(&self, depth: usize) -> Option<String> {
+        self.share_key_upto(depth)
+            .map(|key| crate::store::digest_str(&format!("trunkv1|{key}")))
     }
 }
 
@@ -168,22 +273,43 @@ impl RunBuilder {
 
     /// Stage 0: the config trained from step 0.
     pub fn start(mut self, cfg_id: impl Into<String>) -> RunBuilder {
-        self.stages
-            .insert(0, PlanStage { cfg_id: cfg_id.into(), from_step: 0, transition: Transition::Init });
+        self.stages.insert(
+            0,
+            PlanStage {
+                cfg_id: cfg_id.into(),
+                from_step: 0,
+                transition: Transition::Init,
+                rewarm_steps: 0,
+            },
+        );
         self
     }
 
     /// Add a stage entered at `step` by depth expansion.
     pub fn then_expand_at(
+        self,
+        step: usize,
+        cfg_id: impl Into<String>,
+        spec: ExpandSpec,
+    ) -> RunBuilder {
+        self.then_expand_rewarm_at(step, cfg_id, spec, 0)
+    }
+
+    /// Add a stage entered at `step` by depth expansion, re-warming the LR
+    /// over the stage's first `rewarm_steps` steps (0 = no re-warm). The
+    /// segment must end inside the stage — `build()` validates.
+    pub fn then_expand_rewarm_at(
         mut self,
         step: usize,
         cfg_id: impl Into<String>,
         spec: ExpandSpec,
+        rewarm_steps: usize,
     ) -> RunBuilder {
         self.stages.push(PlanStage {
             cfg_id: cfg_id.into(),
             from_step: step,
             transition: Transition::Expand(spec),
+            rewarm_steps,
         });
         self
     }
@@ -195,6 +321,7 @@ impl RunBuilder {
             cfg_id: cfg_id.into(),
             from_step: step,
             transition: Transition::SwitchOptimizer,
+            rewarm_steps: 0,
         });
         self
     }
@@ -253,6 +380,23 @@ impl RunBuilder {
             .schedule(schedule)
     }
 
+    /// Preconfigured N-round depth ladder (2→6→12→24-style growth): train
+    /// `start` until the first round's boundary, then expand once per round,
+    /// each with its own spec and optional LR re-warm segment.
+    pub fn ladder(
+        name: impl Into<String>,
+        start: &str,
+        rounds: &[LadderRound],
+        total_steps: usize,
+        schedule: Schedule,
+    ) -> RunBuilder {
+        let mut b = RunBuilder::new(name).start(start).total_steps(total_steps).schedule(schedule);
+        for r in rounds {
+            b = b.then_expand_rewarm_at(r.at_step, r.cfg_id.clone(), r.spec, r.rewarm_steps);
+        }
+        b
+    }
+
     /// Validate and freeze into an immutable [`RunPlan`].
     pub fn build(self) -> Result<RunPlan> {
         if self.name.is_empty() {
@@ -290,6 +434,21 @@ impl RunBuilder {
                     "run plan '{}': boundary at step {} is outside the {total_steps}-step horizon",
                     self.name,
                     w[1].from_step
+                );
+            }
+        }
+        for (i, st) in self.stages.iter().enumerate().skip(1) {
+            if st.rewarm_steps == 0 {
+                continue;
+            }
+            let stage_end =
+                self.stages.get(i + 1).map(|n| n.from_step).unwrap_or(total_steps);
+            if st.from_step + st.rewarm_steps > stage_end {
+                bail!(
+                    "run plan '{}': re-warm segment at step {} ({} steps) runs past the end of its stage at {stage_end}",
+                    self.name,
+                    st.from_step,
+                    st.rewarm_steps
                 );
             }
         }
@@ -398,6 +557,131 @@ mod tests {
             .eval_batches(0)
             .build()
             .is_err());
+    }
+
+    fn ladder_rounds() -> Vec<LadderRound> {
+        vec![
+            LadderRound::new("l1", 40, ExpandSpec::default()),
+            LadderRound::new("l3", 80, ExpandSpec::default()).rewarm(10),
+            LadderRound::new("l6", 120, ExpandSpec::default()).rewarm(10),
+        ]
+    }
+
+    #[test]
+    fn builds_ladder_plan() {
+        let plan = RunBuilder::ladder("lad", "l0", &ladder_rounds(), 200, sched())
+            .eval_every(10)
+            .build()
+            .unwrap();
+        assert_eq!(plan.stages().len(), 4);
+        assert_eq!(plan.n_boundaries(), 3);
+        assert_eq!(plan.boundary_at(1), Some(40));
+        assert_eq!(plan.boundary_at(2), Some(80));
+        assert_eq!(plan.boundary_at(3), Some(120));
+        assert_eq!(plan.boundary_at(4), None);
+        assert_eq!(plan.boundary_at(0), None);
+        assert_eq!(plan.stages()[2].rewarm_steps, 10);
+        assert!(matches!(plan.stages()[3].transition, Transition::Expand(_)));
+    }
+
+    #[test]
+    fn ladder_rejects_non_monotone_rounds_and_overlong_rewarm() {
+        // Rounds out of order (boundary ordering).
+        let mut rounds = ladder_rounds();
+        rounds.swap(0, 1);
+        assert!(RunBuilder::ladder("bad", "l0", &rounds, 200, sched()).build().is_err());
+        // Round at the horizon.
+        let rounds = vec![LadderRound::new("l1", 200, ExpandSpec::default())];
+        assert!(RunBuilder::ladder("bad", "l0", &rounds, 200, sched()).build().is_err());
+        // Re-warm segment spilling past the next boundary...
+        let rounds = vec![
+            LadderRound::new("l1", 40, ExpandSpec::default()).rewarm(41),
+            LadderRound::new("l3", 80, ExpandSpec::default()),
+        ];
+        assert!(RunBuilder::ladder("bad", "l0", &rounds, 200, sched()).build().is_err());
+        // ...or past the horizon on the last stage.
+        let rounds = vec![LadderRound::new("l1", 40, ExpandSpec::default()).rewarm(161)];
+        assert!(RunBuilder::ladder("bad", "l0", &rounds, 200, sched()).build().is_err());
+        // Exactly filling the stage is fine.
+        let rounds = vec![
+            LadderRound::new("l1", 40, ExpandSpec::default()).rewarm(40),
+            LadderRound::new("l3", 80, ExpandSpec::default()).rewarm(120),
+        ];
+        assert!(RunBuilder::ladder("ok", "l0", &rounds, 200, sched()).build().is_ok());
+    }
+
+    #[test]
+    fn rewarm_ramps_lr_back_to_schedule() {
+        let peak = 0.01f32;
+        let rounds = vec![LadderRound::new("l1", 100, ExpandSpec::default()).rewarm(10)];
+        let plan = RunBuilder::ladder("rw", "l0", &rounds, 400, Schedule::Constant { peak, warmup_frac: 0.0 })
+            .build()
+            .unwrap();
+        // Before the boundary: base schedule untouched.
+        assert_eq!(plan.lr_at(99), peak);
+        // First re-warm step: 1/10 of base; monotone back to base.
+        assert!((plan.lr_at(100) - peak * 0.1).abs() < 1e-9);
+        assert!((plan.lr_at(104) - peak * 0.5).abs() < 1e-9);
+        assert!((plan.lr_at(109) - peak).abs() < 1e-9);
+        assert_eq!(plan.lr_at(110), peak);
+        // A plan without re-warm matches the raw schedule everywhere.
+        let flat = RunBuilder::progressive("f", "l0", "l1", 100, 400, sched(), ExpandSpec::default())
+            .build()
+            .unwrap();
+        for t in [0usize, 50, 100, 399] {
+            assert_eq!(flat.lr_at(t), flat.schedule().lr(t, 400));
+        }
+    }
+
+    #[test]
+    fn share_keys_and_digests_track_every_ladder_field() {
+        let base = || RunBuilder::ladder("a", "l0", &ladder_rounds(), 200, sched()).build().unwrap();
+        let a = base();
+        // Depth-1 key/digest agree with the legacy trunk digest.
+        assert_eq!(a.trunk_digest_at(1).unwrap(), a.trunk_digest());
+        assert_eq!(a.trunk_digest_at(4), None);
+        assert_eq!(a.share_key_upto(0), None);
+        // Name-blind at every depth.
+        let b = RunBuilder::ladder("renamed", "l0", &ladder_rounds(), 200, sched()).build().unwrap();
+        assert_eq!(a.digest(), b.digest());
+        for d in 1..=3 {
+            assert_eq!(a.trunk_digest_at(d), b.trunk_digest_at(d));
+        }
+        // Each per-round field bites the full digest, and the deep keys
+        // split exactly at the round that changed.
+        let mut rounds = ladder_rounds();
+        rounds[2].rewarm_steps = 5;
+        let c = RunBuilder::ladder("c", "l0", &rounds, 200, sched()).build().unwrap();
+        assert_ne!(a.digest(), c.digest(), "rewarm must affect the digest");
+        // Round 3's rewarm is stage-3 state: prefixes through boundaries
+        // 1..3 are untouched (it only shapes the post-boundary-3 segment).
+        for d in 1..=3 {
+            assert_eq!(a.trunk_digest_at(d), c.trunk_digest_at(d), "depth {d}");
+        }
+        let mut rounds = ladder_rounds();
+        rounds[1].rewarm_steps = 5;
+        let d2 = RunBuilder::ladder("d", "l0", &rounds, 200, sched()).build().unwrap();
+        assert_ne!(a.digest(), d2.digest());
+        assert_eq!(a.trunk_digest_at(1), d2.trunk_digest_at(1));
+        assert_eq!(a.trunk_digest_at(2), d2.trunk_digest_at(2));
+        assert_ne!(a.trunk_digest_at(3), d2.trunk_digest_at(3), "stage-2 rewarm shapes the depth-3 prefix");
+        let mut rounds = ladder_rounds();
+        rounds[1].spec = ExpandSpec { seed: 99, ..ExpandSpec::default() };
+        let e = RunBuilder::ladder("e", "l0", &rounds, 200, sched()).build().unwrap();
+        assert_ne!(a.digest(), e.digest(), "round expansion spec must affect the digest");
+        assert_eq!(a.trunk_digest_at(2), e.trunk_digest_at(2), "spec of round 2 only matters past boundary 2");
+        assert_ne!(a.trunk_digest_at(3), e.trunk_digest_at(3));
+        let mut rounds = ladder_rounds();
+        rounds[2].at_step = 130;
+        let f = RunBuilder::ladder("f", "l0", &rounds, 200, sched()).build().unwrap();
+        assert_ne!(a.digest(), f.digest(), "round boundary step must affect the digest");
+        assert_ne!(a.trunk_digest_at(3), f.trunk_digest_at(3));
+        assert_eq!(a.trunk_digest_at(2), f.trunk_digest_at(2));
+        let mut rounds = ladder_rounds();
+        rounds[2].cfg_id = "l12".into();
+        let g = RunBuilder::ladder("g", "l0", &rounds, 200, sched()).build().unwrap();
+        assert_ne!(a.digest(), g.digest(), "round config must affect the digest");
+        assert_eq!(a.trunk_digest_at(3), g.trunk_digest_at(3), "cfg of round 3 only matters past boundary 3");
     }
 
     #[test]

@@ -48,7 +48,8 @@ use crate::runtime::{ConfigEntry, DeviceState, ModelState, StageExec, Tensor};
 
 use super::builder::{RunPlan, Transition};
 use super::observer::{
-    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, Observer, RunSummary, Signal,
+    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, Observer, PreBoundaryEvent,
+    RunSummary, Signal,
 };
 use super::{RunResult, Trainer};
 
@@ -329,6 +330,11 @@ impl<'a> RunDriver<'a> {
             }
             if self.next_boundary_at() == Some(self.step) {
                 self.cross_boundary()?;
+                // A pre-boundary Stop lands here: the transition completed,
+                // but nothing of the new stage may train.
+                if self.stopped {
+                    break;
+                }
             }
             let unit = self.next_unit_len();
             if taken > 0 && taken + unit > budget {
@@ -402,7 +408,30 @@ impl<'a> RunDriver<'a> {
         };
         let next_entry = self.trainer.manifest.get(&next_cfg)?;
         let step = self.step;
-        let lr = self.plan.schedule().lr(step, self.plan.total_steps());
+        let lr = self.plan.lr_at(step);
+
+        // Pre-boundary hook, fired *before* the boundary's own evals touch
+        // the validation stream: a Checkpoint signal here snapshots the
+        // outgoing stage at a clean dispatch-unit boundary, so a run resumed
+        // from it replays the pre/post evals and stays bit-identical to an
+        // uninterrupted one. A Stop takes effect after the transition.
+        let signals = {
+            let ev = PreBoundaryEvent {
+                run: self.plan.name(),
+                step,
+                from_cfg: &self.entry.cfg_id,
+                to_cfg: &next_cfg,
+            };
+            let mut signals = Vec::new();
+            for obs in self.observers.iter_mut() {
+                match obs.on_pre_boundary(&ev) {
+                    Signal::Continue => {}
+                    s => signals.push(s),
+                }
+            }
+            signals
+        };
+        self.handle_signals(signals)?;
 
         // Pre-boundary eval on the outgoing model (§3.2 spike visibility).
         let pre = self.eval_loss()?;
@@ -448,10 +477,9 @@ impl<'a> RunDriver<'a> {
     }
 
     fn dispatch_unit(&mut self, unit: usize) -> Result<Vec<Signal>> {
-        let total = self.plan.total_steps();
         let k = self.entry.chunk;
         if unit == k {
-            let lrs: Vec<f32> = (0..k).map(|i| self.plan.schedule().lr(self.step + i, total)).collect();
+            let lrs: Vec<f32> = (0..k).map(|i| self.plan.lr_at(self.step + i)).collect();
             let losses = self.chunk_steps(&lrs)?;
             self.last_train_loss = losses.last().copied().ok_or_else(|| {
                 anyhow!("train chunk for '{}' returned no losses", self.plan.name())
@@ -460,7 +488,7 @@ impl<'a> RunDriver<'a> {
             self.step += k;
         } else {
             for i in 0..unit {
-                let lr = self.plan.schedule().lr(self.step + i, total);
+                let lr = self.plan.lr_at(self.step + i);
                 self.last_train_loss = self.single_step(lr)?;
                 self.ledger.record(self.entry, 1);
             }
@@ -508,7 +536,7 @@ impl<'a> RunDriver<'a> {
             return Ok(());
         }
         let val = self.eval_loss()?;
-        let lr = self.plan.schedule().lr(self.step.min(total - 1), total);
+        let lr = self.plan.lr_at(self.step.min(total - 1));
         self.emit_eval(val, EvalKind::Cadence, lr);
         Ok(())
     }

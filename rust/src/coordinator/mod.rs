@@ -29,11 +29,12 @@ pub mod observer;
 pub mod recipe;
 pub mod sweep;
 
-pub use builder::{PlanStage, RunBuilder, RunPlan, Transition};
+pub use builder::{LadderRound, PlanStage, RunBuilder, RunPlan, Transition};
 pub use driver::RunDriver;
 pub use observer::{
-    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, LossSpikeDetector, Observer,
-    PeriodicCheckpointer, ProgressPrinter, ProgressSink, RunSummary, Signal,
+    BoundaryCheckpointer, BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind,
+    LossSpikeDetector, Observer, PeriodicCheckpointer, PreBoundaryEvent, ProgressPrinter,
+    ProgressSink, RunSummary, Signal,
 };
 pub use sweep::{Sweep, SweepOutcome};
 

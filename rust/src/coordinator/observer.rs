@@ -38,6 +38,20 @@ pub struct EvalEvent<'a> {
     pub point: CurvePoint,
 }
 
+/// An imminent stage transition: fired **before** the boundary's pre-eval
+/// and the expansion/optimizer switch execute (so a `Checkpoint` signal
+/// snapshots the outgoing stage at a clean point — a run resumed from it
+/// replays the boundary evals and stays bit-identical). Losses are not
+/// known yet; observers that need them use [`Observer::on_boundary`].
+/// A `Stop` takes effect after the transition completes.
+#[derive(Debug, Clone, Copy)]
+pub struct PreBoundaryEvent<'a> {
+    pub run: &'a str,
+    pub step: usize,
+    pub from_cfg: &'a str,
+    pub to_cfg: &'a str,
+}
+
 /// A stage transition that was just executed (fired after the post-boundary
 /// eval, so both sides of the spike are known).
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +104,11 @@ pub enum Signal {
 /// override only what they need.
 pub trait Observer {
     fn on_eval(&mut self, _ev: &EvalEvent<'_>) {}
+    /// Fired before each stage transition executes; may steer the driver
+    /// (snapshot the outgoing stage, or request a stop after the boundary).
+    fn on_pre_boundary(&mut self, _ev: &PreBoundaryEvent<'_>) -> Signal {
+        Signal::Continue
+    }
     fn on_boundary(&mut self, _ev: &BoundaryEvent<'_>) {}
     fn on_chunk(&mut self, _ev: &ChunkEvent<'_>) -> Signal {
         Signal::Continue
@@ -103,6 +122,10 @@ pub trait Observer {
 impl<O: Observer> Observer for Rc<RefCell<O>> {
     fn on_eval(&mut self, ev: &EvalEvent<'_>) {
         self.borrow_mut().on_eval(ev);
+    }
+
+    fn on_pre_boundary(&mut self, ev: &PreBoundaryEvent<'_>) -> Signal {
+        self.borrow_mut().on_pre_boundary(ev)
     }
 
     fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
@@ -226,6 +249,29 @@ impl Observer for PeriodicCheckpointer {
             return Signal::Checkpoint(self.dir.join(format!("{}-step{}.snap", ev.run, ev.step)));
         }
         Signal::Continue
+    }
+}
+
+/// Snapshots the run at every stage boundary, *before* the transition
+/// executes: `dir/<run>-boundary<step>-<from_cfg>.snap` holds the outgoing
+/// stage — the state a ladder run wants preserved per round (re-runnable
+/// expansions, post-hoc strategy comparisons).
+#[derive(Debug)]
+pub struct BoundaryCheckpointer {
+    dir: PathBuf,
+}
+
+impl BoundaryCheckpointer {
+    pub fn new(dir: impl Into<PathBuf>) -> BoundaryCheckpointer {
+        BoundaryCheckpointer { dir: dir.into() }
+    }
+}
+
+impl Observer for BoundaryCheckpointer {
+    fn on_pre_boundary(&mut self, ev: &PreBoundaryEvent<'_>) -> Signal {
+        Signal::Checkpoint(
+            self.dir.join(format!("{}-boundary{}-{}.snap", ev.run, ev.step, ev.from_cfg)),
+        )
     }
 }
 
@@ -466,6 +512,20 @@ mod tests {
         let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert!(text.starts_with("w3  [r] step"), "{text}");
         assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn boundary_checkpointer_snapshots_each_boundary() {
+        let mut ck = BoundaryCheckpointer::new("/tmp/bck");
+        let ev = PreBoundaryEvent { run: "lad", step: 40, from_cfg: "l0", to_cfg: "l1" };
+        let Signal::Checkpoint(path) = ck.on_pre_boundary(&ev) else {
+            panic!("pre-boundary hook must request a checkpoint");
+        };
+        assert_eq!(path, PathBuf::from("/tmp/bck/lad-boundary40-l0.snap"));
+        // Default hook keeps quiet.
+        struct Quiet;
+        impl Observer for Quiet {}
+        assert_eq!(Quiet.on_pre_boundary(&ev), Signal::Continue);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!   their workers (device-resident state cannot migrate), which is why
 //!   probes are lockstep workers rather than graph jobs.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::data::Corpus;
 use crate::expansion::ExpandSpec;
@@ -30,11 +30,26 @@ use crate::metrics::{mixing_point, Curve};
 use crate::runtime::{Engine, Manifest};
 use crate::schedule::Schedule;
 
-use super::builder::RunPlan;
+use super::builder::{LadderRound, RunPlan};
 use super::{RunBuilder, RunDriver, RunResult, Trainer};
+
+/// How a probe pair concluded. A *stall* — neither driver advancing while
+/// neither is done — is **not** representable here on purpose: it is a bug
+/// in the driver loop, and the probe functions error on it instead of
+/// returning an empty outcome a caller could mistake for "never mixed".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeStatus {
+    /// The curves mixed inside the probe horizon; `t_mix_tokens` is set.
+    Mixed,
+    /// Both probes ran their full horizon without mixing (lengthen the
+    /// probe); every `Option` field is `None`.
+    Exhausted,
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProbeOutcome {
+    /// Whether the probes mixed or ran out of horizon.
+    pub status: ProbeStatus,
     /// Mixing time in steps of the probe horizon (None: did not mix).
     pub t_mix_steps: Option<usize>,
     /// Mixing time in tokens (the transferable quantity, §C.4).
@@ -96,7 +111,8 @@ fn derive_outcome(
         let stable_end = schedule.stable_end(production_steps);
         stable_end.saturating_sub(m).max(1)
     });
-    Ok(ProbeOutcome { t_mix_steps, t_mix_tokens, suggested_tau, probe_steps_run })
+    let status = if t_mix_tokens.is_some() { ProbeStatus::Mixed } else { ProbeStatus::Exhausted };
+    Ok(ProbeOutcome { status, t_mix_steps, t_mix_tokens, suggested_tau, probe_steps_run })
 }
 
 /// Run the two probes serially (interleaved on the caller's engine) and
@@ -129,7 +145,17 @@ pub fn probe_mixing_time(
             break;
         }
         if a == 0 && b == 0 && !(fixed_d.is_done() && prog_d.is_done()) {
-            break; // defensive: no progress and no mixing
+            // Neither driver advanced, neither is done: a driver-loop bug.
+            // Error loudly — an empty outcome here is indistinguishable from
+            // a legitimate "probes exhausted, never mixed".
+            bail!(
+                "mixing probe stalled at steps {}/{} of {probe_steps} ('{}'/'{}' \
+                 stopped advancing without finishing or mixing)",
+                fixed_d.step_index(),
+                prog_d.step_index(),
+                fixed_d.plan().name(),
+                prog_d.plan().name()
+            );
         }
     }
 
@@ -217,7 +243,14 @@ pub fn probe_mixing_time_parallel(
                 break;
             }
             if fixed.taken == 0 && b == 0 && !(fixed.done && prog_d.is_done()) {
-                break; // defensive: no progress and no mixing
+                // Same stall contract as the serial path: error, never an
+                // empty outcome (see probe_mixing_time).
+                bail!(
+                    "mixing probe stalled at steps {}/{} of {probe_steps} (lockstep pair \
+                     stopped advancing without finishing or mixing)",
+                    fixed.step,
+                    prog_d.step_index()
+                );
             }
             if fixed.done && prog_d.is_done() {
                 break;
@@ -229,6 +262,180 @@ pub fn probe_mixing_time_parallel(
         let prog = prog_d.finish();
         derive_outcome(manifest, large, production_steps, schedule, t_mix_tokens, steps_run, &prog)
     })
+}
+
+/// Everything the [`LadderController`] decided: the per-round probe
+/// outcomes, the expansion steps it placed, and the ladder plan built from
+/// them.
+#[derive(Debug)]
+pub struct LadderOutcome {
+    /// §7 probe outcome for each rung boundary, in ladder order.
+    pub probes: Vec<ProbeOutcome>,
+    /// Expansion step chosen for each round (strictly increasing).
+    pub taus: Vec<usize>,
+    /// The rounds handed to [`RunBuilder::ladder`] (spec + re-warm applied).
+    pub rounds: Vec<LadderRound>,
+    /// The validated production plan.
+    pub plan: RunPlan,
+}
+
+/// Probe-driven multi-round expansion timing (the §7 recipe generalized to
+/// depth ladders, per Takeaway 6 applied round by round).
+///
+/// For every rung boundary `rungs[i] → rungs[i+1]` the controller runs the
+/// early-stopped mixing-probe pair online and reads off that round's mixing
+/// time t_mix_i. Expansions are then placed **backward from the
+/// stable-phase end**: the final expansion at `stable_end − t_mix_N` (the
+/// paper's single-expansion rule), and each earlier boundary its own mixing
+/// time before the next — so every stage has at least the data budget it
+/// needs to mix before it is expanded again, instead of a fixed τ grid.
+#[derive(Debug, Clone, Copy)]
+pub struct LadderController {
+    /// Horizon of each probe pair (steps).
+    pub probe_steps: usize,
+    /// Relative mixing tolerance handed to [`mixing_point`].
+    pub rel_tol: f32,
+    /// LR re-warm segment attached to every placed round (clamped to its
+    /// stage; 0 = none).
+    pub rewarm_steps: usize,
+    /// `>= 2` runs each probe pair as the lockstep two-worker jobs of
+    /// [`probe_mixing_time_parallel`] (identical outcome by contract).
+    pub workers: usize,
+}
+
+impl LadderController {
+    pub fn new(probe_steps: usize, rel_tol: f32) -> LadderController {
+        LadderController { probe_steps, rel_tol, rewarm_steps: 0, workers: 1 }
+    }
+
+    pub fn rewarm(mut self, steps: usize) -> LadderController {
+        self.rewarm_steps = steps;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> LadderController {
+        self.workers = workers;
+        self
+    }
+
+    /// Probe every boundary of `rungs` (small → … → large) and build the
+    /// production ladder plan for `total_steps`. Errors if any probe pair
+    /// exhausts its horizon without mixing, or if the placed boundaries
+    /// cannot fit the horizon.
+    pub fn plan(
+        &self,
+        trainer: &Trainer<'_>,
+        name: &str,
+        rungs: &[&str],
+        total_steps: usize,
+        schedule: Schedule,
+        spec: ExpandSpec,
+    ) -> Result<LadderOutcome> {
+        if rungs.len() < 2 {
+            bail!("a depth ladder needs at least two rungs (got {})", rungs.len());
+        }
+        let n_rounds = rungs.len() - 1;
+        let mut probes = Vec::with_capacity(n_rounds);
+        for w in rungs.windows(2) {
+            let outcome = if self.workers >= 2 {
+                probe_mixing_time_parallel(
+                    trainer.manifest,
+                    trainer.corpus,
+                    w[0],
+                    w[1],
+                    self.probe_steps,
+                    total_steps,
+                    schedule,
+                    spec,
+                    self.rel_tol,
+                )?
+            } else {
+                probe_mixing_time(
+                    trainer,
+                    w[0],
+                    w[1],
+                    self.probe_steps,
+                    total_steps,
+                    schedule,
+                    spec,
+                    self.rel_tol,
+                )?
+            };
+            probes.push(outcome);
+        }
+
+        let mut t_mixes = Vec::with_capacity(n_rounds);
+        for (i, probe) in probes.iter().enumerate() {
+            t_mixes.push(probe.t_mix_steps.ok_or_else(|| {
+                anyhow!(
+                    "ladder round {} ({} -> {}): probes exhausted {} steps without mixing — \
+                     lengthen --probe-steps or loosen --tol",
+                    i + 1,
+                    rungs[i],
+                    rungs[i + 1],
+                    self.probe_steps
+                )
+            })?);
+        }
+        let taus = place_taus(&t_mixes, schedule.stable_end(total_steps));
+        let (taus, rounds) = rounds_from_taus(rungs, taus, total_steps, spec, self.rewarm_steps)?;
+        let plan =
+            RunBuilder::ladder(name, rungs[0], &rounds, total_steps, schedule).build()?;
+        Ok(LadderOutcome { probes, taus, rounds, plan })
+    }
+}
+
+/// Normalize chosen boundary steps into ladder rounds: forward
+/// strictly-increasing fix-up from step 1, horizon check, and each round's
+/// re-warm clamped to its stage. The one construction path shared by
+/// [`LadderController::plan`] and the `repro ladder` CLI, so the placement
+/// rules cannot drift apart.
+pub fn rounds_from_taus(
+    rungs: &[&str],
+    mut taus: Vec<usize>,
+    total_steps: usize,
+    spec: ExpandSpec,
+    rewarm_steps: usize,
+) -> Result<(Vec<usize>, Vec<LadderRound>)> {
+    let n_rounds = taus.len();
+    if n_rounds == 0 || rungs.len() != n_rounds + 1 {
+        bail!(
+            "ladder needs one boundary per rung transition ({} rungs, {n_rounds} boundaries)",
+            rungs.len()
+        );
+    }
+    let mut floor = 1usize;
+    for tau in taus.iter_mut() {
+        if *tau < floor {
+            *tau = floor;
+        }
+        floor = *tau + 1;
+    }
+    if taus[n_rounds - 1] >= total_steps {
+        bail!("ladder boundaries {taus:?} do not fit the {total_steps}-step horizon");
+    }
+    let mut rounds = Vec::with_capacity(n_rounds);
+    for (i, &tau) in taus.iter().enumerate() {
+        let stage_end = taus.get(i + 1).copied().unwrap_or(total_steps);
+        rounds.push(LadderRound::new(rungs[i + 1], tau, spec).rewarm(rewarm_steps.min(stage_end - tau)));
+    }
+    Ok((taus, rounds))
+}
+
+/// The controller's pure placement rule: boundaries assigned **backward**
+/// from the stable-phase end — the last expansion its mixing time before
+/// `stable_end`, each earlier one its own mixing time before the next.
+/// Tiny horizons can collapse this toward 0; [`rounds_from_taus`] (always
+/// applied next) owns the strictly-increasing fix-up, so the rule lives in
+/// exactly one place.
+fn place_taus(t_mix_steps: &[usize], stable_end: usize) -> Vec<usize> {
+    let mut taus = vec![0usize; t_mix_steps.len()];
+    let mut next = stable_end;
+    for (i, &t_mix) in t_mix_steps.iter().enumerate().rev() {
+        next = next.saturating_sub(t_mix.max(1));
+        taus[i] = next;
+    }
+    taus
 }
 
 #[cfg(test)]
@@ -255,5 +462,58 @@ mod tests {
         let t_mix_steps = (t / 512) as usize;
         let tau = sched.stable_end(10_000) - t_mix_steps;
         assert_eq!(tau, 8000 - 3);
+    }
+
+    #[test]
+    fn ladder_placement_reserves_each_rounds_mixing_time() {
+        // Roomy horizon: pure backward placement from the stable end.
+        assert_eq!(place_taus(&[100, 200, 300], 8000), vec![7400, 7500, 7700]);
+        // The last expansion sits exactly t_mix_N before stable_end, and each
+        // earlier boundary its own mixing time before the next.
+        let taus = place_taus(&[50, 70], 1000);
+        assert_eq!(taus, vec![880, 930]);
+        assert_eq!(1000 - taus[1], 70);
+        assert_eq!(taus[1] - taus[0], 50);
+        // Zero mixing times still separate the boundaries.
+        assert_eq!(place_taus(&[0, 0], 100), vec![98, 99]);
+        // Tiny horizons collapse the backward pass toward 0; the
+        // normalization lives in rounds_from_taus (the single fix-up path).
+        assert_eq!(place_taus(&[40, 40, 40], 100), vec![0, 20, 60]);
+        assert_eq!(place_taus(&[500, 500], 100), vec![0, 0]);
+        let rungs = ["a", "b", "c", "d"];
+        let spec = ExpandSpec::default();
+        let (taus, _) = rounds_from_taus(&rungs, place_taus(&[40, 40, 40], 100), 100, spec, 0).unwrap();
+        assert_eq!(taus, vec![1, 20, 60]);
+        let (taus, _) =
+            rounds_from_taus(&rungs[..3], place_taus(&[500, 500], 100), 100, spec, 0).unwrap();
+        assert_eq!(taus, vec![1, 2]);
+        for t_mix in [&[7usize, 3, 9, 1][..], &[1000][..]] {
+            let raw = place_taus(t_mix, 64);
+            let (taus, _) =
+                rounds_from_taus(&rungs[..t_mix.len() + 1], raw, 64, spec, 0).unwrap();
+            assert!(taus.windows(2).all(|w| w[1] > w[0]) && taus[0] >= 1, "{taus:?}");
+        }
+    }
+
+    #[test]
+    fn rounds_from_taus_normalizes_and_clamps() {
+        let spec = ExpandSpec::default();
+        let rungs = ["l0", "l1", "l3", "l6"];
+        // Collapsed boundaries are fixed up; re-warm clamps to each stage.
+        let (taus, rounds) = rounds_from_taus(&rungs, vec![0, 0, 60], 100, spec, 50).unwrap();
+        assert_eq!(taus, vec![1, 2, 60]);
+        assert_eq!(rounds.len(), 3);
+        assert_eq!(rounds[0].rewarm_steps, 1, "re-warm must fit the 1-step stage");
+        assert_eq!(rounds[1].rewarm_steps, 50.min(60 - 2));
+        assert_eq!(rounds[2].rewarm_steps, 40, "last stage runs to the horizon");
+        assert_eq!(rounds[2].cfg_id, "l6");
+        // Boundaries past the horizon and rung/boundary count mismatches err.
+        assert!(rounds_from_taus(&rungs, vec![10, 20, 100], 100, spec, 0).is_err());
+        assert!(rounds_from_taus(&rungs, vec![10, 20], 100, spec, 0).is_err());
+        assert!(rounds_from_taus(&["l0", "l1"], Vec::new(), 100, spec, 0).is_err());
+        // The normalized rounds build a valid plan.
+        let (_, rounds) = rounds_from_taus(&rungs, vec![25, 50, 75], 100, spec, 10).unwrap();
+        let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+        assert!(RunBuilder::ladder("ok", "l0", &rounds, 100, sched).build().is_ok());
     }
 }

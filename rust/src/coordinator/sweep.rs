@@ -7,7 +7,10 @@
 //! config, horizon, schedule, cadence, and seed — see
 //! [`RunPlan::prefix_key`] — plus the same boundary step) share one trunk,
 //! which is trained **once** and snapshotted at the fork step; each variant
-//! resumes from that in-memory snapshot.
+//! resumes from that in-memory snapshot. Multi-round (ladder) prefixes
+//! nest: variants that stay identical through further boundaries
+//! ([`RunPlan::share_key_upto`]) share deeper trunks too, each rung segment
+//! trained exactly once.
 //!
 //! Two execution paths over the same graph:
 //!
@@ -35,9 +38,10 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::exec::{run_graph, JobGraph, JobId, JobKind, PoolOptions};
+use crate::checkpoint::DriverSnapshot;
+use crate::exec::{run_graph, GroupSpec, JobGraph, JobId, JobKind, PoolOptions};
 use crate::runtime::ModelState;
 use crate::store::RunStore;
 
@@ -198,59 +202,90 @@ impl<'a> Sweep<'a> {
             plans.iter().map(|_| None).collect();
         let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
 
-        for group in graph.groups() {
-            let Some(trunk_id) = group.trunk else {
-                // Nothing to share: serve each plan from the store or run it
-                // standalone.
-                for &i in &group.plan_idxs {
-                    if let Some(hit) = self.cached_run(&plans[i])? {
-                        per_plan[i] = Some(hit);
-                        continue;
-                    }
-                    let mut d = RunDriver::new(self.trainer, plans[i].clone())?;
-                    self.attach_progress(&mut d);
-                    d.run_to_end()?;
-                    per_plan[i] = Some(self.collect(&plans[i], d)?);
-                }
-                continue;
-            };
-
-            // Shared trunk: one driver carries every variant to the boundary.
-            let JobKind::Trunk { fork_step, .. } = graph.jobs()[trunk_id].kind else {
-                bail!("internal: group trunk {trunk_id} is not a trunk job");
-            };
-            // Resolve cached variants first — they decide whether the trunk
-            // snapshot is needed at all.
-            let mut pending: Vec<usize> = Vec::new();
-            for &i in &group.plan_idxs {
-                match self.cached_run(&plans[i])? {
-                    Some(hit) => per_plan[i] = Some(hit),
-                    None => pending.push(i),
+        // Cache pre-pass (same resolution rule as the pool scheduler):
+        // every completed run is served up front, so the group walk below
+        // only trains what is actually missing.
+        if self.store.is_some() {
+            for (i, p) in plans.iter().enumerate() {
+                if let Some(hit) = self.cached_run(p)? {
+                    per_plan[i] = Some(hit);
                 }
             }
-            let lead = &plans[group.plan_idxs[0]];
-            let tdigest = lead.trunk_digest();
-            if pending.is_empty() {
-                // Fully cached group: the journaled trunk cost is enough for
-                // bit-exact FLOP assembly — no snapshot read, no training.
-                if let Some(tf) = self.store.as_ref().and_then(|s| s.trunk_flops(&tdigest)) {
-                    trunk_flops.insert(trunk_id, tf);
+        }
+        for group in graph.groups() {
+            self.exec_group(graph, group, None, &mut per_plan, &mut trunk_flops)?;
+        }
+        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
+    }
+
+    /// Execute one sharing node depth-first: materialize its trunk snapshot
+    /// when anything below needs it (store first, else train the rung
+    /// segment — resuming from the parent's snapshot for depth ≥ 2), fork
+    /// and interleave the pending direct variants over the shared engine,
+    /// then recurse into the child (deeper-ladder) nodes. Holding one
+    /// snapshot per ancestor level keeps the serial one-group-at-a-time
+    /// memory profile.
+    fn exec_group(
+        &mut self,
+        graph: &JobGraph,
+        node: &GroupSpec,
+        parent_snap: Option<&DriverSnapshot>,
+        per_plan: &mut Vec<Option<(RunResult, Option<ModelState>)>>,
+        trunk_flops: &mut HashMap<JobId, f64>,
+    ) -> Result<()> {
+        let plans = graph.plans();
+        let Some(trunk_id) = node.trunk else {
+            // Trunkless node: every member runs standalone (unless cached).
+            for &i in &node.direct {
+                if per_plan[i].is_some() {
                     continue;
                 }
+                let mut d = RunDriver::new(self.trainer, plans[i].clone())?;
+                self.attach_progress(&mut d);
+                d.run_to_end()?;
+                per_plan[i] = Some(self.collect(&plans[i], d)?);
             }
-            let entry0 = self.trainer.manifest.get(&lead.stages()[0].cfg_id)?;
+            return Ok(());
+        };
+        let JobKind::Trunk { fork_step, depth, .. } = graph.jobs()[trunk_id].kind else {
+            bail!("internal: group trunk {trunk_id} is not a trunk job");
+        };
+        let lead = &plans[node.plan_idxs[0]];
+        let tdigest = lead.trunk_digest_at(depth).ok_or_else(|| {
+            anyhow!("internal: trunk at depth {depth} for '{}' has no share key", lead.name())
+        })?;
+
+        let pending_direct: Vec<usize> =
+            node.direct.iter().copied().filter(|&i| per_plan[i].is_none()).collect();
+        // The snapshot must exist if any direct variant forks here, any
+        // child subtree has to *train* its own trunk from it, or the
+        // journaled cost is missing (assembly needs every trunk's cost).
+        let journaled_cost = self.store.as_ref().and_then(|s| s.trunk_flops(&tdigest));
+        let need_snap = !pending_direct.is_empty()
+            || node.children.iter().any(|c| self.subtree_needs_parent_snap(graph, c, per_plan))
+            || journaled_cost.is_none();
+
+        let snap: Option<DriverSnapshot> = if need_snap {
+            let entry = self.trainer.manifest.get(&lead.stages()[depth - 1].cfg_id)?;
             let cached_snap = match &self.store {
                 Some(store) if store.has_trunk_snapshot(&tdigest) => {
-                    Some(store.load_trunk_at(&tdigest, entry0, fork_step, lead.name())?)
+                    Some(store.load_trunk_at(&tdigest, entry, fork_step, lead.name())?)
                 }
                 _ => None,
             };
             let snap = match cached_snap {
                 Some(snap) => snap,
                 None => {
-                    let mut trunk = RunDriver::new(self.trainer, lead.clone())?;
+                    let mut trunk = match parent_snap {
+                        Some(ps) => RunDriver::resume(self.trainer, lead.clone(), ps.clone())?,
+                        None if depth == 1 => RunDriver::new(self.trainer, lead.clone())?,
+                        None => bail!(
+                            "internal: depth-{depth} trunk for '{}' scheduled without its parent snapshot",
+                            lead.name()
+                        ),
+                    };
                     self.attach_progress(&mut trunk);
-                    trunk.advance(fork_step)?;
+                    trunk.advance(fork_step.saturating_sub(trunk.step_index()))?;
                     if trunk.step_index() != fork_step {
                         bail!(
                             "sweep trunk for '{}' stopped at step {} instead of the boundary {}",
@@ -261,20 +296,29 @@ impl<'a> Sweep<'a> {
                     }
                     let snap = trunk.snapshot()?;
                     if let Some(store) = self.store.as_mut() {
-                        store.store_trunk(&tdigest, &snap, entry0)?;
+                        store.store_trunk(&tdigest, &snap, entry)?;
                     }
                     snap
                 }
             };
             trunk_flops.insert(trunk_id, snap.ledger.total);
-            if pending.is_empty() {
-                continue;
-            }
+            Some(snap)
+        } else {
+            // Fully satisfied below: the journaled trunk cost is enough for
+            // bit-exact FLOP assembly — no snapshot read, no training.
+            trunk_flops.insert(
+                trunk_id,
+                journaled_cost.expect("need_snap is false only with a journaled cost"),
+            );
+            None
+        };
 
+        if !pending_direct.is_empty() {
+            let snap = snap.as_ref().expect("pending direct variants imply a snapshot");
             // Fork each pending variant from the trunk and interleave them
             // over the shared engine, one eval period at a time.
-            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(pending.len());
-            for &i in &pending {
+            let mut drivers: Vec<(usize, RunDriver<'a>)> = Vec::with_capacity(pending_direct.len());
+            for &i in &pending_direct {
                 let mut d = RunDriver::resume(self.trainer, plans[i].clone(), snap.clone())?;
                 self.attach_progress(&mut d);
                 drivers.push((i, d));
@@ -299,6 +343,39 @@ impl<'a> Sweep<'a> {
             }
         }
 
-        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
+        for child in &node.children {
+            self.exec_group(graph, child, snap.as_ref(), per_plan, trunk_flops)?;
+        }
+        Ok(())
+    }
+
+    /// Does `node`'s subtree still need its **parent's** snapshot? Only
+    /// when its own trunk has to train: something under it is unfinished
+    /// (or its journaled cost is missing) and the store cannot serve its
+    /// snapshot directly.
+    fn subtree_needs_parent_snap(
+        &self,
+        graph: &JobGraph,
+        node: &GroupSpec,
+        per_plan: &[Option<(RunResult, Option<ModelState>)>],
+    ) -> bool {
+        let Some(trunk_id) = node.trunk else {
+            return false; // trunkless nodes only exist at the top level
+        };
+        let JobKind::Trunk { depth, .. } = graph.jobs()[trunk_id].kind else {
+            return true; // malformed graph: force the parent path, which errors loudly
+        };
+        let lead = &graph.plans()[node.plan_idxs[0]];
+        let Some(digest) = lead.trunk_digest_at(depth) else {
+            return true;
+        };
+        let store = self.store.as_ref();
+        if store.is_some_and(|s| s.has_trunk_snapshot(&digest)) {
+            return false; // self-servable, whatever is pending below
+        }
+        let has_cost = store.and_then(|s| s.trunk_flops(&digest)).is_some();
+        let needs_materialized = node.direct.iter().any(|&i| per_plan[i].is_none())
+            || node.children.iter().any(|c| self.subtree_needs_parent_snap(graph, c, per_plan));
+        needs_materialized || !has_cost
     }
 }

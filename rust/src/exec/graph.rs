@@ -11,15 +11,24 @@
 //! job's dependencies always precede it, so the job list is its own
 //! topological order.
 //!
-//! Because job boundaries sit on dispatch-unit/eval-period boundaries (the
+//! **Multi-round (ladder) prefixes nest.** Within a shared group, plans
+//! whose streams stay identical through *further* boundaries
+//! ([`RunPlan::share_key_upto`]: same configs, transitions, re-warm
+//! segments, and boundary steps) subdivide into child groups: a depth-`d`
+//! trunk job resumes from its depth-`d−1` parent's snapshot, trains only
+//! the segment between the two boundaries, and snapshots at its own fork
+//! step. A 3-round ladder grid therefore trains each shared rung exactly
+//! once — tails fork from the deepest trunk they share.
+//!
+//! Because job boundaries sit on dispatch-unit/eval-period boundaries (every
 //! fork step is a stage boundary, where the driver is always pausable) and
 //! jobs communicate only via in-memory [`DriverSnapshot`]s, executing the
 //! graph on any number of workers replays, per run, the exact engine-call
 //! sequence the serial sweep makes — the determinism contract the
 //! integration suite pins down. [`JobGraph::assemble`] folds per-job results
-//! back into a [`SweepOutcome`] in the serial sweep's group order, so even
-//! the f64 FLOP accumulation is bit-identical regardless of completion
-//! order.
+//! back into a [`SweepOutcome`] in the serial sweep's group order (depth-
+//! first through the nested groups), so even the f64 FLOP accumulation is
+//! bit-identical regardless of completion order.
 
 use std::collections::BTreeMap;
 
@@ -34,9 +43,11 @@ pub type JobId = usize;
 /// What a job executes. `plan_idx` indexes [`JobGraph::plans`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {
-    /// Train `plan_idx`'s shared stage-0 segment to `fork_step` and snapshot
-    /// there; the snapshot is the group's fork point.
-    Trunk { plan_idx: usize, fork_step: usize },
+    /// Train `plan_idx`'s shared prefix through boundary `depth` (1-based)
+    /// to `fork_step` and snapshot there; the snapshot is the group's fork
+    /// point. Depth ≥ 2 trunks resume from `parent`'s snapshot and train
+    /// only the segment between the two boundaries.
+    Trunk { plan_idx: usize, fork_step: usize, depth: usize, parent: Option<JobId> },
     /// Resume `plan_idx` from `trunk`'s snapshot and run to the horizon.
     Tail { plan_idx: usize, trunk: JobId },
     /// Run `plan_idx` start-to-finish (no sharing).
@@ -61,14 +72,23 @@ pub struct JobSpec {
     pub deps: Vec<JobId>,
 }
 
-/// One sharing group, in the serial sweep's (BTreeMap key) order. `trunk`
-/// is the shared-trunk job when the group has one (≥ 2 plans with a
-/// non-zero fork step).
+/// One sharing node, in the serial sweep's (BTreeMap key) order at each
+/// level. `trunk` is the shared-trunk job when the node has one (≥ 2 plans
+/// with a non-zero fork step). Multi-round prefixes nest: `children` are the
+/// deeper sharing nodes (their trunks resume from this node's snapshot) and
+/// `direct` are the plans whose result job forks straight from this node's
+/// trunk — `direct` plus the children's `plan_idxs` partition `plan_idxs`.
 #[derive(Debug, Clone)]
 pub struct GroupSpec {
     pub key: String,
+    /// Every plan under this node (submission order).
     pub plan_idxs: Vec<usize>,
     pub trunk: Option<JobId>,
+    /// Plans forking directly from this node's trunk (tail jobs), or — for
+    /// trunkless nodes — running standalone.
+    pub direct: Vec<usize>,
+    /// Deeper (ladder) sharing nodes, in key order.
+    pub children: Vec<GroupSpec>,
 }
 
 /// Dependency-ordered lowering of a set of plans. See module docs.
@@ -89,7 +109,8 @@ impl JobGraph {
 
     /// Lower `plans` into jobs. Groups are emitted in key order (matching
     /// the serial sweep's iteration order); within a group the trunk job
-    /// precedes its tails and tails keep plan-submission order.
+    /// precedes its direct tails (plan-submission order), which precede the
+    /// child groups (key order, recursively).
     pub fn lower(plans: Vec<RunPlan>) -> Result<JobGraph> {
         if plans.is_empty() {
             bail!("job graph needs at least one plan");
@@ -110,25 +131,69 @@ impl JobGraph {
                         deps: Vec::new(),
                     });
                 }
-                groups.push(GroupSpec { key, plan_idxs, trunk: None });
+                let direct = plan_idxs.clone();
+                groups.push(GroupSpec { key, plan_idxs, trunk: None, direct, children: Vec::new() });
             } else {
-                let trunk = jobs.len();
-                jobs.push(JobSpec {
-                    id: trunk,
-                    kind: JobKind::Trunk { plan_idx: plan_idxs[0], fork_step },
-                    deps: Vec::new(),
-                });
-                for &i in &plan_idxs {
-                    jobs.push(JobSpec {
-                        id: jobs.len(),
-                        kind: JobKind::Tail { plan_idx: i, trunk },
-                        deps: vec![trunk],
-                    });
-                }
-                groups.push(GroupSpec { key, plan_idxs, trunk: Some(trunk) });
+                groups.push(Self::lower_shared(&plans, key, plan_idxs, 1, fork_step, None, &mut jobs));
             }
         }
         Ok(JobGraph { plans, jobs, groups })
+    }
+
+    /// Lower one sharing node: its members all share the prefix through
+    /// boundary `depth` at `fork_step`. Emits the trunk job, then tail jobs
+    /// for members that fork here, then recurses into subgroups whose
+    /// streams stay shared through the next boundary.
+    fn lower_shared(
+        plans: &[RunPlan],
+        key: String,
+        plan_idxs: Vec<usize>,
+        depth: usize,
+        fork_step: usize,
+        parent: Option<JobId>,
+        jobs: &mut Vec<JobSpec>,
+    ) -> GroupSpec {
+        let trunk = jobs.len();
+        jobs.push(JobSpec {
+            id: trunk,
+            kind: JobKind::Trunk { plan_idx: plan_idxs[0], fork_step, depth, parent },
+            deps: parent.into_iter().collect(),
+        });
+        // Members that extend the shared prefix through boundary depth+1
+        // (same next stage + boundary) subdivide; everything else — plans
+        // with no further boundary, or extending alone — forks here.
+        let mut direct: Vec<usize> = Vec::new();
+        let mut deeper: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for &i in &plan_idxs {
+            match plans[i].share_key_upto(depth + 1) {
+                Some(k) => deeper.entry(k).or_default().push(i),
+                None => direct.push(i),
+            }
+        }
+        let mut child_sets: Vec<(String, Vec<usize>)> = Vec::new();
+        for (k, idxs) in deeper {
+            if idxs.len() == 1 {
+                direct.push(idxs[0]);
+            } else {
+                child_sets.push((k, idxs));
+            }
+        }
+        direct.sort_unstable(); // plan-submission order among direct tails
+        for &i in &direct {
+            jobs.push(JobSpec {
+                id: jobs.len(),
+                kind: JobKind::Tail { plan_idx: i, trunk },
+                deps: vec![trunk],
+            });
+        }
+        let mut children = Vec::with_capacity(child_sets.len());
+        for (k, idxs) in child_sets {
+            let next_fork = plans[idxs[0]]
+                .boundary_at(depth + 1)
+                .expect("share_key_upto(depth+1) implies a boundary at depth+1");
+            children.push(Self::lower_shared(plans, k, idxs, depth + 1, next_fork, Some(trunk), jobs));
+        }
+        GroupSpec { key, plan_idxs, trunk: Some(trunk), direct, children }
     }
 
     pub fn plans(&self) -> &[RunPlan] {
@@ -153,13 +218,16 @@ impl JobGraph {
     }
 
     /// Fold per-plan results into a [`SweepOutcome`], replaying the serial
-    /// sweep's accumulation order exactly (group by group, members in
-    /// submission order), so `executed_flops`/`shared_flops` are
-    /// bit-identical to `Sweep::run` no matter what order jobs completed in.
+    /// sweep's accumulation order exactly (groups in key order, depth-first:
+    /// trunk segment, direct tails in submission order, then children), so
+    /// `executed_flops`/`shared_flops` are bit-identical to `Sweep::run` no
+    /// matter what order jobs completed in.
     ///
     /// `per_plan[i]` is plan i's result (+ its final model state when the
-    /// sweep was asked to keep states); `trunk_flops(job)` is the ledger
-    /// total of the trunk job's snapshot.
+    /// sweep was asked to keep states); `trunk_flops(job)` is the
+    /// **cumulative** ledger total of the trunk job's snapshot (from step 0
+    /// — nested trunks inherit their parent's ledger), so a depth-`d`
+    /// trunk's own segment cost is `trunk_flops(d) − trunk_flops(parent)`.
     pub fn assemble(
         &self,
         per_plan: Vec<Option<(RunResult, Option<ModelState>)>>,
@@ -175,28 +243,7 @@ impl JobGraph {
         let mut executed_flops = 0.0f64;
         let mut shared_flops = 0.0f64;
         for g in &self.groups {
-            let totals = g.plan_idxs.iter().map(|&i| {
-                per_plan[i]
-                    .as_ref()
-                    .map(|(r, _)| r.ledger.total)
-                    .ok_or_else(|| anyhow!("plan '{}' produced no result", self.plans[i].name()))
-            });
-            match g.trunk {
-                None => {
-                    for t in totals {
-                        executed_flops += t?;
-                    }
-                }
-                Some(trunk) => {
-                    let tf = trunk_flops(trunk)
-                        .ok_or_else(|| anyhow!("trunk job {trunk} produced no snapshot"))?;
-                    executed_flops += tf;
-                    shared_flops += tf * (g.plan_idxs.len() - 1) as f64;
-                    for t in totals {
-                        executed_flops += t? - tf;
-                    }
-                }
-            }
+            self.assemble_group(g, 0.0, &per_plan, &trunk_flops, &mut executed_flops, &mut shared_flops)?;
         }
         let mut results = Vec::with_capacity(per_plan.len());
         let mut final_states = Vec::with_capacity(per_plan.len());
@@ -207,6 +254,45 @@ impl JobGraph {
             final_states.push(state);
         }
         Ok(SweepOutcome { results, final_states, executed_flops, shared_flops })
+    }
+
+    fn assemble_group(
+        &self,
+        g: &GroupSpec,
+        parent_cost: f64,
+        per_plan: &[Option<(RunResult, Option<ModelState>)>],
+        trunk_flops: &impl Fn(JobId) -> Option<f64>,
+        executed_flops: &mut f64,
+        shared_flops: &mut f64,
+    ) -> Result<()> {
+        let total = |i: usize| -> Result<f64> {
+            per_plan[i]
+                .as_ref()
+                .map(|(r, _)| r.ledger.total)
+                .ok_or_else(|| anyhow!("plan '{}' produced no result", self.plans[i].name()))
+        };
+        match g.trunk {
+            None => {
+                for &i in &g.direct {
+                    *executed_flops += total(i)?;
+                }
+            }
+            Some(trunk) => {
+                let tf = trunk_flops(trunk)
+                    .ok_or_else(|| anyhow!("trunk job {trunk} produced no snapshot"))?;
+                // This node's own segment, paid once and represented by
+                // every plan under the node.
+                *executed_flops += tf - parent_cost;
+                *shared_flops += (tf - parent_cost) * (g.plan_idxs.len() - 1) as f64;
+                for &i in &g.direct {
+                    *executed_flops += total(i)? - tf;
+                }
+                for c in &g.children {
+                    self.assemble_group(c, tf, per_plan, trunk_flops, executed_flops, shared_flops)?;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -327,5 +413,118 @@ mod tests {
         let graph = JobGraph::lower(vec![fixed("c", 100)]).unwrap();
         assert!(graph.assemble(vec![None], |_| None).is_err());
         assert!(graph.assemble(Vec::new(), |_| None).is_err());
+    }
+
+    use crate::coordinator::LadderRound;
+
+    fn ladder(name: &str, taus: [usize; 3], last_rewarm: usize) -> RunPlan {
+        let rounds = vec![
+            LadderRound::new("l1", taus[0], ExpandSpec::default()),
+            LadderRound::new("l3", taus[1], ExpandSpec::default()),
+            LadderRound::new("l6", taus[2], ExpandSpec::default()).rewarm(last_rewarm),
+        ];
+        RunBuilder::ladder(name, "s", &rounds, 200, sched()).eval_every(10).build().unwrap()
+    }
+
+    #[test]
+    fn ladder_prefixes_lower_to_nested_trunks() {
+        // a and b share all three rounds (they differ only in the last
+        // stage's re-warm — post-boundary-3 state); c shares rounds 1–2 but
+        // diverges at round 3; d shares only round 1; e is fixed.
+        let graph = JobGraph::lower(vec![
+            ladder("a", [40, 80, 120], 0),
+            ladder("b", [40, 80, 120], 10),
+            ladder("c", [40, 80, 130], 0),
+            ladder("d", [40, 90, 130], 0),
+            fixed("e", 200),
+        ])
+        .unwrap();
+
+        // One shared top-level group {a,b,c,d} plus the standalone e.
+        assert_eq!(graph.groups().len(), 2);
+        let shared = graph.groups().iter().find(|g| g.trunk.is_some()).unwrap();
+        assert_eq!(shared.plan_idxs, vec![0, 1, 2, 3]);
+        // Depth 1: trunk at 40; d forks directly (it diverges at round 2).
+        let t1 = shared.trunk.unwrap();
+        let JobKind::Trunk { fork_step, depth, parent, .. } = graph.jobs()[t1].kind else {
+            panic!("not a trunk");
+        };
+        assert_eq!((fork_step, depth, parent), (40, 1, None));
+        assert_eq!(shared.direct, vec![3]);
+        assert_eq!(shared.children.len(), 1);
+        // Depth 2: {a,b,c} share through boundary 2 at 80; c forks here.
+        let n2 = &shared.children[0];
+        assert_eq!(n2.plan_idxs, vec![0, 1, 2]);
+        assert_eq!(n2.direct, vec![2]);
+        let t2 = n2.trunk.unwrap();
+        let JobKind::Trunk { fork_step, depth, parent, .. } = graph.jobs()[t2].kind else {
+            panic!("not a trunk");
+        };
+        assert_eq!((fork_step, depth, parent), (80, 2, Some(t1)));
+        // Depth 3: {a,b} share through boundary 3 at 120 and fork there.
+        assert_eq!(n2.children.len(), 1);
+        let n3 = &n2.children[0];
+        assert_eq!(n3.plan_idxs, vec![0, 1]);
+        assert_eq!(n3.direct, vec![0, 1]);
+        assert!(n3.children.is_empty());
+        let t3 = n3.trunk.unwrap();
+        let JobKind::Trunk { fork_step, depth, parent, .. } = graph.jobs()[t3].kind else {
+            panic!("not a trunk");
+        };
+        assert_eq!((fork_step, depth, parent), (120, 3, Some(t2)));
+        // Dependency chain: t1 -> t2 -> t3; deps precede their jobs.
+        assert_eq!(graph.jobs()[t2].deps, vec![t1]);
+        assert_eq!(graph.jobs()[t3].deps, vec![t2]);
+        for j in graph.jobs() {
+            for &d in &j.deps {
+                assert!(d < j.id);
+            }
+        }
+        // Every plan still owns exactly one result job.
+        let mut owners = vec![0usize; graph.plans().len()];
+        for j in graph.jobs() {
+            if let Some(i) = j.kind.result_plan() {
+                owners[i] += 1;
+            }
+        }
+        assert_eq!(owners, vec![1; 5]);
+        // 3 trunks + 4 tails + 1 standalone.
+        assert_eq!(graph.jobs().len(), 8);
+    }
+
+    #[test]
+    fn assemble_deduplicates_nested_trunk_segments() {
+        // {a,b} share all 3 rounds; segment costs: 0→40 = 100, 40→80 = 300
+        // (cumulative 400), 80→120 = 600 (cumulative 1000). Tails run
+        // 120→200 for 2000/2600 more (totals 3000/3600).
+        let graph = JobGraph::lower(vec![ladder("a", [40, 80, 120], 0), ladder("b", [40, 80, 120], 10)])
+            .unwrap();
+        let g1 = &graph.groups()[0];
+        let g2 = &g1.children[0];
+        let g3 = &g2.children[0];
+        let (t1, t2, t3) = (g1.trunk.unwrap(), g2.trunk.unwrap(), g3.trunk.unwrap());
+        let res = |total: f64| RunResult {
+            curve: Curve::new("r"),
+            ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
+            boundaries: Vec::new(),
+            final_val_loss: 0.0,
+        };
+        let per_plan = vec![Some((res(3000.0), None)), Some((res(3600.0), None))];
+        let costs = move |j: JobId| {
+            [(t1, 100.0), (t2, 400.0), (t3, 1000.0)]
+                .iter()
+                .find(|&&(id, _)| id == j)
+                .map(|&(_, c)| c)
+        };
+        let out = graph.assemble(per_plan, costs).unwrap();
+        // Executed: each rung once (100 + 300 + 600) plus the two tails
+        // (3000−1000 and 3600−1000).
+        let expect = 100.0 + 300.0 + 600.0 + 2000.0 + 2600.0;
+        assert!((out.executed_flops - expect).abs() < 1e-9, "{}", out.executed_flops);
+        // Shared: every rung's segment saved once (2 plans per node).
+        assert!((out.shared_flops - 1000.0).abs() < 1e-9, "{}", out.shared_flops);
+        // Identity: executed + shared == represented.
+        let represented = 3000.0 + 3600.0;
+        assert!((out.executed_flops + out.shared_flops - represented).abs() < 1e-9);
     }
 }

@@ -63,6 +63,9 @@ enum WorkItem {
         job: JobId,
         plan: RunPlan,
         fork_step: usize,
+        /// Parent trunk's snapshot for depth ≥ 2 (ladder) trunks; `None`
+        /// for depth-1 trunks, which start from initialization.
+        snap: Option<Arc<DriverSnapshot>>,
     },
     Run {
         job: JobId,
@@ -129,12 +132,13 @@ pub fn run_graph(
     let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
         graph.plans().iter().map(|_| None).collect();
     let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
-    // A trunk's snapshot is held only until its last pending tail is
-    // dispatched (the tails' WorkItems keep their own Arcs); `trunk_flops`
-    // outlives it for the final accounting. Peak host memory therefore
-    // matches the serial sweep's one-group-at-a-time profile, not #groups.
+    // A trunk's snapshot is held only until its last pending consumer — a
+    // tail, or a deeper ladder trunk resuming from it — is dispatched (the
+    // consumers' WorkItems keep their own Arcs); `trunk_flops` outlives it
+    // for the final accounting. Peak host memory therefore matches the
+    // serial sweep's one-group-at-a-time profile, not #groups.
     let mut snapshots: HashMap<JobId, Arc<DriverSnapshot>> = HashMap::new();
-    let mut undispatched_tails: HashMap<JobId, usize> = HashMap::new();
+    let mut undispatched_consumers: HashMap<JobId, usize> = HashMap::new();
     // Trunks satisfied from the store whose snapshot is still on disk:
     // digest + pending-tail count. The snapshot itself is materialized
     // lazily, when the first pending tail is dispatched — eagerly loading
@@ -193,15 +197,16 @@ pub fn run_graph(
                     break;
                 };
                 // Lazily materialize a store-cached trunk snapshot when its
-                // first pending tail reaches the front of the queue; the
-                // existing last-tail bookkeeping below then releases it.
-                if let JobKind::Tail { trunk, .. } = graph.jobs()[job].kind {
-                    if !snapshots.contains_key(&trunk) {
-                        if let Some((digest, pending)) = cached_trunks.remove(&trunk) {
+                // first pending consumer (tail or child trunk) reaches the
+                // front of the queue; the last-consumer bookkeeping below
+                // then releases it.
+                if let Some(src) = snapshot_dep(&graph.jobs()[job].kind) {
+                    if !snapshots.contains_key(&src) {
+                        if let Some((digest, pending)) = cached_trunks.remove(&src) {
                             let snap =
-                                load_cached_trunk(manifest, graph, store.as_deref(), trunk, &digest)?;
-                            undispatched_tails.insert(trunk, pending);
-                            snapshots.insert(trunk, Arc::new(snap));
+                                load_cached_trunk(manifest, graph, store.as_deref(), src, &digest)?;
+                            undispatched_consumers.insert(src, pending);
+                            snapshots.insert(src, Arc::new(snap));
                         }
                     }
                 }
@@ -214,11 +219,11 @@ pub fn run_graph(
                     break;
                 }
                 in_flight += 1;
-                if let JobKind::Tail { trunk, .. } = graph.jobs()[job].kind {
-                    if let Some(left) = undispatched_tails.get_mut(&trunk) {
+                if let Some(src) = snapshot_dep(&graph.jobs()[job].kind) {
+                    if let Some(left) = undispatched_consumers.get_mut(&src) {
                         *left -= 1;
                         if *left == 0 {
-                            snapshots.remove(&trunk);
+                            snapshots.remove(&src);
                         }
                     }
                 }
@@ -244,13 +249,14 @@ pub fn run_graph(
                             // aborts the sweep cleanly (never deadlocks the
                             // drain loop).
                             if let Some(s) = store.as_deref_mut() {
-                                if let JobKind::Trunk { plan_idx, .. } = jobs[job].kind {
+                                if let JobKind::Trunk { plan_idx, depth, .. } = jobs[job].kind {
                                     let plan = &graph.plans()[plan_idx];
-                                    let res = manifest
-                                        .get(&plan.stages()[0].cfg_id)
-                                        .and_then(|entry| {
-                                            s.store_trunk(&plan.trunk_digest(), &snap, entry)
-                                        });
+                                    let res = trunk_store_key(plan, depth).and_then(
+                                        |(digest, cfg_id)| {
+                                            let entry = manifest.get(cfg_id)?;
+                                            s.store_trunk(&digest, &snap, entry)
+                                        },
+                                    );
                                     if let Err(e) = res {
                                         if first_err.is_none() {
                                             first_err = Some(e.context(format!(
@@ -262,21 +268,21 @@ pub fn run_graph(
                                 }
                             }
                             trunk_flops.insert(job, snap.ledger.total);
-                            let tails: Vec<JobId> = graph
+                            let consumers: Vec<JobId> = graph
                                 .dependents(job)
                                 .into_iter()
                                 .filter(|&t| !satisfied[t])
                                 .collect();
                             // Publish the snapshot only if something will
-                            // consume it — when every tail was already
-                            // cache-satisfied the trunk ran purely for its
-                            // FLOP cost, and holding the full model state
-                            // until sweep end would break the one-group-
-                            // at-a-time memory profile.
-                            if !tails.is_empty() {
-                                undispatched_tails.insert(job, tails.len());
+                            // consume it — when every tail and child trunk
+                            // was already cache-satisfied the trunk ran
+                            // purely for its FLOP cost, and holding the full
+                            // model state until sweep end would break the
+                            // one-group-at-a-time memory profile.
+                            if !consumers.is_empty() {
+                                undispatched_consumers.insert(job, consumers.len());
                                 snapshots.insert(job, Arc::new(*snap));
-                                ready.extend(tails);
+                                ready.extend(consumers);
                             }
                         }
                         Ok(JobOutput::Run { plan_idx, result, state }) => {
@@ -332,13 +338,36 @@ pub fn run_graph(
     })
 }
 
+/// The trunk whose published snapshot `kind` resumes from, if any: a tail's
+/// trunk, or a depth ≥ 2 ladder trunk's parent.
+fn snapshot_dep(kind: &JobKind) -> Option<JobId> {
+    match *kind {
+        JobKind::Tail { trunk, .. } => Some(trunk),
+        JobKind::Trunk { parent, .. } => parent,
+        JobKind::Standalone { .. } => None,
+    }
+}
+
+/// Store key + stage config id for a trunk at `depth`: the digest of the
+/// shared prefix through that boundary, and the config the snapshot's state
+/// is laid out in (the stage *before* the boundary is crossed).
+fn trunk_store_key(plan: &RunPlan, depth: usize) -> Result<(String, &str)> {
+    let digest = plan.trunk_digest_at(depth).ok_or_else(|| {
+        anyhow!("internal: plan '{}' has no boundary at trunk depth {depth}", plan.name())
+    })?;
+    Ok((digest, plan.stages()[depth - 1].cfg_id.as_str()))
+}
+
 /// Resolve cache hits for a graph against the store (scheduler-side, before
 /// any worker exists): completed runs fill `per_plan`; a cached trunk
-/// contributes its journaled FLOP cost and — when any of its tails still
-/// has to run — is recorded in `cached_trunks` for lazy snapshot loading at
-/// first-tail dispatch. A trunk journaled but missing its snapshot file
-/// with pending tails is simply left unsatisfied and re-runs
-/// (deterministically identical). Corrupted committed entries are errors.
+/// contributes its journaled FLOP cost and — when any of its consumers
+/// (tails or child trunks) still has to run — is recorded in
+/// `cached_trunks` for lazy snapshot loading at first-consumer dispatch.
+/// Trunks are scanned in reverse creation order so a child trunk's
+/// satisfaction is known before its parent counts pending consumers. A
+/// trunk journaled but missing its snapshot file with pending consumers is
+/// simply left unsatisfied and re-runs (deterministically identical).
+/// Corrupted committed entries are errors.
 fn prefill_from_store(
     graph: &JobGraph,
     store: &RunStore,
@@ -357,9 +386,9 @@ fn prefill_from_store(
             }
         }
     }
-    for j in graph.jobs() {
-        let JobKind::Trunk { plan_idx, .. } = j.kind else { continue };
-        let digest = plans[plan_idx].trunk_digest();
+    for j in graph.jobs().iter().rev() {
+        let JobKind::Trunk { plan_idx, depth, .. } = j.kind else { continue };
+        let (digest, _) = trunk_store_key(&plans[plan_idx], depth)?;
         let Some(tf) = store.trunk_flops(&digest) else { continue };
         let pending = graph.dependents(j.id).into_iter().filter(|&t| !satisfied[t]).count();
         if pending == 0 {
@@ -383,17 +412,19 @@ fn load_cached_trunk(
     trunk: JobId,
     digest: &str,
 ) -> Result<DriverSnapshot> {
-    let JobKind::Trunk { plan_idx, fork_step } = graph.jobs()[trunk].kind else {
+    let JobKind::Trunk { plan_idx, fork_step, depth, .. } = graph.jobs()[trunk].kind else {
         bail!("internal: cached trunk {trunk} is not a trunk job");
     };
     let plan = &graph.plans()[plan_idx];
     let store = store.context("internal: cached trunk recorded without a store")?;
-    let entry = manifest.get(&plan.stages()[0].cfg_id)?;
+    let (_, cfg_id) = trunk_store_key(plan, depth)?;
+    let entry = manifest.get(cfg_id)?;
     store.load_trunk_at(digest, entry, fork_step, plan.name())
 }
 
-/// Materialize the payload for a ready job (cloning the plan; tails also
-/// take an `Arc` of their trunk's published snapshot).
+/// Materialize the payload for a ready job (cloning the plan; tails and
+/// child trunks also take an `Arc` of their source trunk's published
+/// snapshot).
 fn make_item(
     graph: &JobGraph,
     job: JobId,
@@ -401,22 +432,27 @@ fn make_item(
     keep_states: bool,
 ) -> Result<WorkItem> {
     let spec = &graph.jobs()[job];
+    let take_snap = |trunk: JobId, what: &str| {
+        snapshots
+            .get(&trunk)
+            .cloned()
+            .with_context(|| format!("{what} scheduled before its trunk snapshot"))
+    };
     Ok(match spec.kind {
-        JobKind::Trunk { plan_idx, fork_step } => WorkItem::Trunk {
+        JobKind::Trunk { plan_idx, fork_step, parent, .. } => WorkItem::Trunk {
             job,
             plan: graph.plans()[plan_idx].clone(),
             fork_step,
+            snap: match parent {
+                Some(p) => Some(take_snap(p, "ladder trunk")?),
+                None => None,
+            },
         },
         JobKind::Tail { plan_idx, trunk } => WorkItem::Run {
             job,
             plan_idx,
             plan: graph.plans()[plan_idx].clone(),
-            snap: Some(
-                snapshots
-                    .get(&trunk)
-                    .cloned()
-                    .context("tail job scheduled before its trunk snapshot")?,
-            ),
+            snap: Some(take_snap(trunk, "tail job")?),
             keep_state: keep_states,
         },
         JobKind::Standalone { plan_idx } => WorkItem::Run {
@@ -480,11 +516,17 @@ fn execute_item(
         }
     };
     match item {
-        WorkItem::Trunk { plan, fork_step, .. } => {
+        WorkItem::Trunk { plan, fork_step, snap, .. } => {
             let name = plan.name().to_string();
-            let mut trunk = RunDriver::new(trainer, plan)?;
+            // Depth ≥ 2 trunks resume from their parent's boundary snapshot
+            // and train only their own rung segment.
+            let mut trunk = match snap {
+                Some(s) => RunDriver::resume(trainer, plan, (*s).clone())?,
+                None => RunDriver::new(trainer, plan)?,
+            };
             attach(&mut trunk);
-            trunk.advance(fork_step)?;
+            let budget = fork_step.saturating_sub(trunk.step_index());
+            trunk.advance(budget)?;
             if trunk.step_index() != fork_step {
                 bail!(
                     "trunk for '{}' stopped at step {} instead of the fork boundary {}",

@@ -5,12 +5,14 @@
 //! - [`runtime`]: loads AOT'd HLO-text artifacts and executes them (PJRT CPU).
 //! - [`coordinator`]: the paper's contribution — progressive-training
 //!   orchestration: expansion timing, mixing detection, multi-stage
-//!   schedules. The v2 API is `RunBuilder` (validated plans) →
-//!   `RunDriver` (resumable state machine) + `Observer` hooks + `Sweep`
-//!   (work-sharing multi-run executor).
-//! - [`exec`]: parallel execution — job-graph lowering of sweeps plus an
-//!   engine-per-worker pool with a deterministic scheduler (bit-identical
-//!   to serial execution for any worker count).
+//!   schedules, and probe-driven multi-round depth ladders
+//!   (`RunBuilder::ladder` + `recipe::LadderController`). The v2 API is
+//!   `RunBuilder` (validated plans) → `RunDriver` (resumable state machine)
+//!   + `Observer` hooks + `Sweep` (work-sharing multi-run executor).
+//! - [`exec`]: parallel execution — job-graph lowering of sweeps (nested
+//!   multi-round trunk sharing) plus an engine-per-worker pool with a
+//!   deterministic scheduler (bit-identical to serial execution for any
+//!   worker count).
 //! - [`store`]: durable sweep store — content-addressed run/trunk cache +
 //!   crash-safe job journal; interrupted sweeps resume, warm reruns
 //!   execute nothing.

@@ -11,10 +11,13 @@
 //!         expansion-variant sweep sharing source-model training, executed
 //!         over N engine-owning pool workers (bit-identical to serial);
 //!         --store-dir makes it durable (crash-safe resume + warm reruns)
+//!   ladder <cfg0> <cfg1> [<cfg2> ...] [--taus F,F,..|--probe] [--rewarm N]
+//!         multi-round depth-ladder growth; --probe places each boundary
+//!         from a per-round mixing probe (recipe::LadderController)
 //!   probe-mixing <small> <large> [--probe-steps N] [--steps N] [--workers N]
 //!         the paper's §7 recipe step 4: derive τ from two early-stopped runs
 //!   convex [--dim N] [--tau-frac F]                 §4 theory simulator
-//!   bench-<target>  (fig1..fig22, table1, table2, theory, perf, parallel, all)
+//!   bench-<target>  (fig1..fig22, table1, table2, theory, perf, parallel, ladder, all)
 //!   list / list-benches / inspect <cfg_id>
 //!
 //! Flags accept `--name value` and `--name=value`; unknown flags are
@@ -70,6 +73,14 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         ],
         switches: &[],
     };
+    const LADDER: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
+            "taus", "rewarm", "strategy", "insertion", "os", "expand-seed", "workers",
+            "store-dir", "probe-steps", "tol",
+        ],
+        switches: &["progress", "probe"],
+    };
     const CONVEX: CommandSpec = CommandSpec {
         flags: &["steps", "seed", "lr", "sched", "decay-frac", "dim", "tau-frac"],
         switches: &[],
@@ -87,6 +98,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         "train" => Some(TRAIN),
         "progressive" => Some(PROGRESSIVE),
         "sweep" => Some(SWEEP),
+        "ladder" => Some(LADDER),
         "probe-mixing" => Some(PROBE),
         "convex" => Some(CONVEX),
         "expand-ckpt" => Some(EXPAND_CKPT),
@@ -352,6 +364,112 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        "ladder" => {
+            // Multi-round depth-ladder growth (e.g. l0 → l1 → l3 → l6):
+            // boundaries from --taus fractions, or probe-driven placement
+            // (--probe: the §7 recipe per round via recipe::LadderController).
+            const USAGE: &str =
+                "ladder <cfg0> <cfg1> [<cfg2> ...] [--taus F,F,..|--probe] [--rewarm N]";
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let rungs: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+            if rungs.len() < 2 {
+                anyhow::bail!("a ladder needs at least two configs — usage: {USAGE}");
+            }
+            let n_rounds = rungs.len() - 1;
+            let sched = schedule_from(&args);
+            let spec = expand_from(&args)?;
+            let workers = args.get_usize("workers", default_workers());
+            let rewarm = args.get_usize("rewarm", 0);
+            let name = format!("ladder-{}", rungs.join("-"));
+
+            let plan = if args.has("probe") {
+                let ctl = recipe::LadderController::new(
+                    args.get_usize("probe-steps", steps),
+                    args.get_f32("tol", 0.04),
+                )
+                .rewarm(rewarm)
+                .workers(workers);
+                let outcome = ctl.plan(&trainer, &name, &rungs, steps, sched, spec)?;
+                for (i, (probe, tau)) in outcome.probes.iter().zip(&outcome.taus).enumerate() {
+                    println!(
+                        "round {}: {} -> {}: t_mix {:?} tokens ({:?} steps) => expand at step {tau}",
+                        i + 1,
+                        rungs[i],
+                        rungs[i + 1],
+                        probe.t_mix_tokens,
+                        probe.t_mix_steps,
+                    );
+                }
+                // Re-apply the launcher's cadence/seed knobs to the
+                // controller's rounds (its plan keeps builder defaults).
+                apply_eval_every(
+                    RunBuilder::ladder(name.as_str(), rungs[0], &outcome.rounds, steps, sched)
+                        .seed(seed),
+                    &args,
+                )
+                .build()?
+            } else {
+                // Boundary fractions of the horizon; default: evenly spaced
+                // through the stable phase.
+                let stable_frac = sched.stable_end(steps) as f64 / steps as f64;
+                let fracs: Vec<f64> = match args.get("taus") {
+                    Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+                    None => (1..=n_rounds)
+                        .map(|i| stable_frac * i as f64 / (n_rounds + 1) as f64)
+                        .collect(),
+                };
+                if fracs.len() != n_rounds {
+                    anyhow::bail!(
+                        "--taus needs {} comma-separated fractions for {} rungs — usage: {USAGE}",
+                        n_rounds,
+                        rungs.len()
+                    );
+                }
+                let taus: Vec<usize> =
+                    fracs.iter().map(|&f| tau_from_frac(steps, f)).collect();
+                // Same normalization as the probe-driven path (fix-up,
+                // horizon check, per-stage re-warm clamp).
+                let (_, rounds) = recipe::rounds_from_taus(&rungs, taus, steps, spec, rewarm)?;
+                apply_eval_every(
+                    RunBuilder::ladder(name.as_str(), rungs[0], &rounds, steps, sched).seed(seed),
+                    &args,
+                )
+                .build()?
+            };
+
+            let boundaries: Vec<usize> = (1..=plan.n_boundaries())
+                .filter_map(|d| plan.boundary_at(d))
+                .collect();
+            // Run through the sweep machinery so --workers and --store-dir
+            // behave exactly like sweep/bench grids (bit-identical at any
+            // worker count; warm stores serve the run without training).
+            let mut sweep = Sweep::new(trainer);
+            if args.has("progress") {
+                sweep.progress(ProgressSink::stderr());
+            }
+            if let Some(dir) = args.get("store-dir") {
+                sweep.store(dir)?;
+            }
+            sweep.add(plan);
+            let outcome = sweep.run_parallel(workers)?;
+            let res = &outcome.results[0];
+            res.curve.write_csv(std::path::Path::new(&out))?;
+            let fixed_flops = trainer.fixed_flops(rungs[n_rounds], steps)?;
+            println!(
+                "ladder {} ({} rounds at {:?}): final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed-depth {})",
+                name,
+                n_rounds,
+                boundaries,
+                res.final_val_loss,
+                res.ledger.total,
+                (1.0 - res.ledger.total / fixed_flops) * 100.0,
+                rungs[n_rounds],
+            );
+            Ok(())
+        }
         "probe-mixing" => {
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
@@ -450,6 +568,11 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
                                         sweep resumes re-running only
                                         unfinished jobs, a warm rerun
                                         executes nothing
+  ladder <cfg0> <cfg1> [<cfg2> ..]  multi-round depth-ladder growth (2→6→12→24
+        [--taus F,F,..]                 style); boundaries at horizon fractions
+        [--probe --probe-steps N]       or probe-driven per round: each τ placed
+        [--rewarm N]                    at stable_end − t_mix (Takeaway 6);
+        [--workers N] [--store-dir D]   --rewarm re-warms LR after each round
   probe-mixing <small> <large>      derive τ from two early-stopped probes (§7);
         [--workers N]                   ≥2 workers run the pair as lockstep jobs
   convex                            §4 convex-theory simulator
@@ -461,6 +584,8 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
                                     vs host-roundtrip steps/sec (BENCH_perf.json)
   bench-parallel                    pool-scaling benchmark: steps/sec at 1/2/4
                                     workers on a fixed grid (BENCH_parallel.json)
+  bench-ladder                      FLOP-matched ladder vs one-shot expansion vs
+                                    fixed-depth comparison (BENCH_ladder.json)
   bench-all                         everything (grids honor --workers)
   list | list-benches | inspect <cfg_id>
 

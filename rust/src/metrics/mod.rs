@@ -41,10 +41,16 @@ impl Curve {
         self.points.last().map(|p| p.val_loss)
     }
 
-    /// Linear interpolation of val loss at a token count.
+    /// Linear interpolation of val loss at a token count. `None` outside the
+    /// curve's token domain `[first, last]` — **no extrapolation** in either
+    /// direction. (This used to fall through to `pts.last()` past the last
+    /// point; the mixing detector then compared progressive eval points
+    /// against a flat-extrapolated fixed value the fixed run never produced,
+    /// faking or masking mixing — see [`mixing_point`].)
     pub fn val_at_tokens(&self, tokens: u64) -> Option<f32> {
         let pts = &self.points;
-        if pts.is_empty() || tokens < pts[0].tokens {
+        let (first, last) = (pts.first()?, pts.last()?);
+        if tokens < first.tokens || tokens > last.tokens {
             return None;
         }
         for w in pts.windows(2) {
@@ -54,15 +60,22 @@ impl Curve {
                 return Some(w[0].val_loss * (1.0 - t) + w[1].val_loss * t);
             }
         }
-        pts.last().map(|p| p.val_loss)
+        // Single-point curve: tokens == the one point's token count.
+        Some(last.val_loss)
     }
 
+    /// CSV serialization with **round-trip-exact** float formatting: `{}`
+    /// (shortest representation that parses back to the identical bits), not
+    /// a fixed precision. A `{:.6}` loss column made any CSV diff blind to
+    /// sub-1e-6 divergence — the CI store-resume smoke diffs these files to
+    /// certify bit-identity, so truncation there was a hole in the
+    /// determinism contract (pinned by `csv_is_bit_exact_to_one_ulp`).
     pub fn to_csv(&self) -> String {
         let mut s = String::from("step,tokens,flops,train_loss,val_loss,lr\n");
         for p in &self.points {
             let _ = writeln!(
                 s,
-                "{},{},{:.6e},{:.6},{:.6},{:.6e}",
+                "{},{},{},{},{},{}",
                 p.step, p.tokens, p.flops, p.train_loss, p.val_loss, p.lr
             );
         }
@@ -78,24 +91,27 @@ impl Curve {
 /// Mixing detector (§5): first token count after which
 /// |progressive − fixed| / fixed ≤ `rel_tol` for `holdout` consecutive
 /// progressive eval points through the end of the overlap.
+///
+/// Only the **true overlap** of the two curves is evaluated: progressive
+/// points outside the fixed curve's token domain neither confirm nor reset
+/// the detector. Before this restriction (and [`Curve::val_at_tokens`]'s
+/// no-extrapolation fix) a progressive curve that outlived the fixed one was
+/// compared against the fixed curve's frozen final value — which can fake a
+/// mixing point past the real overlap (false positive: the progressive run
+/// keeps improving and eventually "meets" the stale constant) and, because
+/// the out-of-domain points read as failures, could also reset an
+/// in-tolerance run established inside the overlap (false negative). Both
+/// cases corrupt the `suggested_tau` the §7 recipe derives from this value.
 pub fn mixing_point(progressive: &Curve, fixed: &Curve, rel_tol: f32, holdout: usize) -> Option<u64> {
-    let pts = &progressive.points;
-    if pts.is_empty() {
-        return None;
-    }
-    let ok = |i: usize| -> bool {
-        let p = pts[i];
-        match fixed.val_at_tokens(p.tokens) {
-            Some(f) => (p.val_loss - f).abs() / f.max(1e-6) <= rel_tol,
-            None => false,
-        }
-    };
     let mut run = 0usize;
     let mut candidate: Option<u64> = None;
-    for i in 0..pts.len() {
-        if ok(i) {
+    for p in &progressive.points {
+        let Some(f) = fixed.val_at_tokens(p.tokens) else {
+            continue; // outside the overlap: ignored, not a failure
+        };
+        if (p.val_loss - f).abs() / f.max(1e-6) <= rel_tol {
             if run == 0 {
-                candidate = Some(pts[i].tokens);
+                candidate = Some(p.tokens);
             }
             run += 1;
         } else {
@@ -103,7 +119,7 @@ pub fn mixing_point(progressive: &Curve, fixed: &Curve, rel_tol: f32, holdout: u
             candidate = None;
         }
     }
-    if run >= holdout {
+    if run >= holdout.max(1) {
         candidate
     } else {
         None
@@ -203,6 +219,68 @@ mod tests {
     }
 
     #[test]
+    fn no_extrapolation_outside_domain() {
+        let c = curve("a", &[(100, 4.0), (200, 2.0)]);
+        assert_eq!(c.val_at_tokens(99), None, "no extrapolation before the first point");
+        assert_eq!(c.val_at_tokens(201), None, "no flat extrapolation past the last point");
+        assert_eq!(c.val_at_tokens(100), Some(4.0));
+        assert_eq!(c.val_at_tokens(200), Some(2.0));
+        // Single-point curve: defined exactly at that point, nowhere else.
+        let one = curve("b", &[(50, 3.0)]);
+        assert_eq!(one.val_at_tokens(50), Some(3.0));
+        assert_eq!(one.val_at_tokens(49), None);
+        assert_eq!(one.val_at_tokens(51), None);
+        assert_eq!(curve("e", &[]).val_at_tokens(0), None);
+    }
+
+    #[test]
+    fn overlap_false_positive_regression() {
+        // Regression: the progressive probe outlives the fixed one. Under
+        // flat extrapolation its tail was compared against the fixed curve's
+        // frozen final value (2.5), which it crosses — the old detector
+        // reported mixing at 600 even though inside the true overlap
+        // (tokens ≤ 400) the gap never closes.
+        let fixed = curve("f", &[(0, 4.0), (200, 3.0), (400, 2.5)]);
+        let prog = curve(
+            "p",
+            &[(0, 6.0), (200, 4.0), (400, 3.2), (600, 2.52), (800, 2.49)],
+        );
+        assert_eq!(
+            mixing_point(&prog, &fixed, 0.03, 2),
+            None,
+            "points past the overlap must not fake mixing against an extrapolated value"
+        );
+    }
+
+    #[test]
+    fn overlap_false_negative_regression() {
+        // Regression: mixing established inside the overlap, then the
+        // progressive curve keeps improving past the fixed curve's end. The
+        // old detector compared those tail points against the stale final
+        // value, read them as failures, and reset the in-tolerance run —
+        // missing a mixing that genuinely held through the end of the
+        // overlap.
+        let fixed = curve("f", &[(0, 4.0), (200, 3.0), (400, 2.5)]);
+        let prog = curve(
+            "p",
+            &[(0, 6.0), (200, 3.01), (400, 2.51), (600, 2.0), (800, 1.5)],
+        );
+        assert_eq!(
+            mixing_point(&prog, &fixed, 0.03, 2),
+            Some(200),
+            "mixing held through the full overlap; the out-of-overlap tail must not reset it"
+        );
+    }
+
+    #[test]
+    fn non_overlapping_curves_never_mix() {
+        let fixed = curve("f", &[(0, 3.0), (100, 2.0)]);
+        let prog = curve("p", &[(200, 2.0), (300, 2.0)]);
+        assert_eq!(mixing_point(&prog, &fixed, 0.5, 1), None);
+        assert_eq!(mixing_point(&fixed, &prog, 0.5, 1), None);
+    }
+
+    #[test]
     fn table_renders() {
         let mut t = Table::new(&["run", "loss"]);
         t.row(vec!["fixed".into(), "2.01".into()]);
@@ -216,5 +294,48 @@ mod tests {
         let csv = c.to_csv();
         assert!(csv.starts_with("step,tokens,flops,train_loss,val_loss,lr"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn csv_floats_roundtrip_to_identical_bits() {
+        // Values chosen to be awkward in decimal: the CSV must parse back to
+        // the *identical* f32/f64 bits (shortest round-trip formatting).
+        let mut c = Curve::new("x");
+        c.push(CurvePoint {
+            step: 3,
+            tokens: 12_345,
+            flops: 6.02e23_f64 / 7.0,
+            train_loss: 2.0f32 / 3.0,
+            val_loss: f32::from_bits(0x3f9d70a4), // ~1.23: not exactly representable
+            lr: 0.01f32 * 0.3,
+        });
+        let csv = c.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), 6);
+        assert_eq!(cols[2].parse::<f64>().unwrap().to_bits(), c.points[0].flops.to_bits());
+        assert_eq!(cols[3].parse::<f32>().unwrap().to_bits(), c.points[0].train_loss.to_bits());
+        assert_eq!(cols[4].parse::<f32>().unwrap().to_bits(), c.points[0].val_loss.to_bits());
+        assert_eq!(cols[5].parse::<f32>().unwrap().to_bits(), c.points[0].lr.to_bits());
+    }
+
+    #[test]
+    fn csv_is_bit_exact_to_one_ulp() {
+        // The CI store-resume smoke certifies bit-identity by diffing CSVs;
+        // that only works if a 1-ulp loss perturbation changes the text
+        // (the old {:.6} formatting rounded it away).
+        let base = curve("x", &[(0, 2.3456789), (100, 1.2345678)]);
+        let mut bumped = base.clone();
+        bumped.points[1].val_loss = f32::from_bits(bumped.points[1].val_loss.to_bits() + 1);
+        assert_ne!(
+            base.to_csv(),
+            bumped.to_csv(),
+            "a 1-ulp val-loss perturbation must be visible in the CSV"
+        );
+        let mut bumped = base.clone();
+        bumped.points[0].flops = f64::from_bits(1e9f64.to_bits() + 1);
+        let mut reference = base.clone();
+        reference.points[0].flops = 1e9;
+        assert_ne!(reference.to_csv(), bumped.to_csv(), "1-ulp flops perturbation must be visible");
     }
 }

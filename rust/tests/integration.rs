@@ -603,6 +603,126 @@ fn interrupted_sweep_resumes_bit_identical_from_store() {
 }
 
 #[test]
+fn ladder_sweep_parallel_and_warm_store_bit_identical_to_serial_cold() {
+    // Acceptance (multi-round depth ladders): a 3-round ladder grid — two
+    // ladder variants sharing every rung trunk (they differ only in the
+    // final round's LR re-warm), a FLOP-comparable one-shot expansion, and
+    // a fixed-depth baseline — executed (a) serially with no store, (b) at
+    // 2 workers populating a store, and (c) at 4 workers against the now-
+    // warm store, must produce bit-identical curves, final model states,
+    // and executed/shared FLOP totals in all three modes. The warm pass
+    // must train nothing.
+    use deep_progressive::coordinator::{LadderRound, ProgressSink, RunPlan, SweepOutcome};
+
+    let Some(m) = manifest() else { return };
+    let corpus = small_corpus();
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let total = 160;
+    let taus = [40usize, 80, 120];
+    let ladder = |name: &str, last_rewarm: usize| -> RunPlan {
+        let rounds = vec![
+            LadderRound::new("gpt2.l1", taus[0], ExpandSpec::default()),
+            LadderRound::new("gpt2.l2", taus[1], ExpandSpec::default()),
+            LadderRound::new("gpt2.l3", taus[2], ExpandSpec::default()).rewarm(last_rewarm),
+        ];
+        RunBuilder::ladder(name, "gpt2.l0", &rounds, total, sched)
+            .eval_every(20)
+            .build()
+            .unwrap()
+    };
+    let grid = || -> Vec<RunPlan> {
+        vec![
+            ladder("lad-plain", 0),
+            ladder("lad-rewarm", 8),
+            RunBuilder::progressive(
+                "lad-oneshot",
+                "gpt2.l0",
+                "gpt2.l3",
+                taus[2],
+                total,
+                sched,
+                ExpandSpec::default(),
+            )
+            .eval_every(20)
+            .build()
+            .unwrap(),
+            RunBuilder::fixed("lad-fixed", "gpt2.l3", total, sched).eval_every(20).build().unwrap(),
+        ]
+    };
+
+    let run = |store_dir: Option<&std::path::Path>, workers: usize| {
+        let engine = Engine::cpu().unwrap();
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        let mut sweep = Sweep::new(trainer);
+        sweep.keep_final_states(true);
+        let (sink, captured) = ProgressSink::capture();
+        sweep.progress(sink);
+        if let Some(dir) = store_dir {
+            sweep.store(dir).unwrap();
+        }
+        for p in grid() {
+            sweep.add(p);
+        }
+        let outcome =
+            if workers <= 1 { sweep.run().unwrap() } else { sweep.run_parallel(workers).unwrap() };
+        let progress_bytes = captured.lock().unwrap().len();
+        (outcome, engine.stats().dispatches, progress_bytes)
+    };
+
+    let assert_identical = |a: &SweepOutcome, b: &SweepOutcome, what: &str| {
+        assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+        assert_eq!(a.executed_flops.to_bits(), b.executed_flops.to_bits(), "{what}: executed_flops");
+        assert_eq!(a.shared_flops.to_bits(), b.shared_flops.to_bits(), "{what}: shared_flops");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.curve.name, y.curve.name, "{what}: result order");
+            assert_eq!(x.curve.points.len(), y.curve.points.len(), "{what}: curve length");
+            for (p, q) in x.curve.points.iter().zip(&y.curve.points) {
+                assert_eq!(p, q, "{what}: curve diverged ('{}')", x.curve.name);
+            }
+            assert_eq!(x.boundaries, y.boundaries, "{what}: boundaries");
+            assert_eq!(x.ledger.total.to_bits(), y.ledger.total.to_bits(), "{what}: ledger");
+            assert_eq!(x.final_val_loss.to_bits(), y.final_val_loss.to_bits(), "{what}: final loss");
+        }
+        for (i, (x, y)) in a.final_states.iter().zip(&b.final_states).enumerate() {
+            let (x, y) = (x.as_ref().expect("kept state"), y.as_ref().expect("kept state"));
+            for (s, t) in x.params.iter().zip(&y.params) {
+                assert_eq!(s.data, t.data, "{what}: final params diverged (run {i})");
+            }
+            for (s, t) in x.opt.iter().zip(&y.opt) {
+                assert_eq!(s.data, t.data, "{what}: final opt state diverged (run {i})");
+            }
+        }
+    };
+
+    // (a) Serial cold reference, no store.
+    let (reference, _, ref_progress) = run(None, 1);
+    assert!(ref_progress > 0, "progress capture must observe executing runs");
+    // Both ladder variants carry all three boundaries; the rung segments
+    // were shared (executed < represented).
+    for res in &reference.results[..2] {
+        assert_eq!(
+            res.boundaries.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            taus.to_vec(),
+            "ladder must cross all three boundaries"
+        );
+    }
+    assert!(reference.shared_flops > 0.0, "ladder rungs must be shared");
+
+    // (b) 2 workers, cold store: populates runs + every rung trunk.
+    let dir = std::env::temp_dir().join(format!("dpt_ladder_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let (populated, _, _) = run(Some(&dir), 2);
+    assert_identical(&reference, &populated, "2-worker cold-store run");
+
+    // (c) 4 workers, warm store: identical outcome, zero training.
+    let (warm, dispatches, progress) = run(Some(&dir), 4);
+    assert_identical(&reference, &warm, "4-worker warm-store run");
+    assert_eq!(dispatches, 0, "warm rerun must execute zero dispatches on the caller engine");
+    assert_eq!(progress, 0, "warm rerun must run no driver on any worker");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn parallel_probe_pair_matches_serial() {
     // The §7 probe pair run as two lockstep engine-owning jobs must make the
     // same early-stop decision and derive the same τ as the serial path.

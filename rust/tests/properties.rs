@@ -3,9 +3,10 @@
 //! detector monotonicity, JSON round-trips. No PJRT needed — these run on
 //! any checkout.
 
-use deep_progressive::coordinator::RunBuilder;
+use deep_progressive::coordinator::{RunBuilder, RunPlan, RunResult};
 use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
-use deep_progressive::exec::{JobGraph, JobKind};
+use deep_progressive::exec::{GroupSpec, JobGraph, JobKind};
+use deep_progressive::flops::FlopLedger;
 use deep_progressive::expansion::{applicable, expand, CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use deep_progressive::metrics::{mixing_point, Curve, CurvePoint};
 use deep_progressive::runtime::{Manifest, ModelState};
@@ -160,13 +161,19 @@ fn prop_job_graph_lowering_invariants() {
             let fork = plans[gr.plan_idxs[0]].first_boundary();
             if gr.plan_idxs.len() > 1 && fork > 0 {
                 // 4. Shared group: exactly one trunk at the common fork step;
-                //    every tail chains to it (and only to it).
+                //    every tail chains to it (and only to it). These plans
+                //    have at most one boundary, so no nesting appears.
                 let t = gr.trunk.expect("shared group must have a trunk");
-                let JobKind::Trunk { plan_idx, fork_step } = graph.jobs()[t].kind else {
+                let JobKind::Trunk { plan_idx, fork_step, depth, parent } = graph.jobs()[t].kind
+                else {
                     panic!("group trunk {t} is not a trunk job");
                 };
                 assert!(gr.plan_idxs.contains(&plan_idx));
                 assert_eq!(fork_step, fork);
+                assert_eq!(depth, 1, "single-boundary plans must lower to depth-1 trunks");
+                assert!(parent.is_none());
+                assert!(gr.children.is_empty());
+                assert_eq!(gr.direct, gr.plan_idxs);
                 for &i in &gr.plan_idxs {
                     assert_eq!(plans[i].first_boundary(), fork, "fork step mismatch in group");
                 }
@@ -195,6 +202,179 @@ fn prop_job_graph_lowering_invariants() {
             graph.jobs().iter().filter(|j| matches!(j.kind, JobKind::Trunk { .. })).count();
         let shared_groups = graph.groups().iter().filter(|gr| gr.trunk.is_some()).count();
         assert_eq!(trunk_jobs, shared_groups);
+    });
+}
+
+#[test]
+fn prop_ladder_lowering_nests_and_deduplicates() {
+    // Arbitrary multi-round (ladder) grids: plans with 0..=3 expansion
+    // rounds drawn from small per-round vocabularies (boundary step, spec
+    // seed, re-warm), so multi-round prefixes collide often. Invariants:
+    // result-job ownership, topological order, recursive node coherence
+    // (direct + children partition each node; child trunks chain to their
+    // parent with strictly increasing fork steps; members agree on the
+    // node's share key), and the nested FLOP dedup — `assemble` must charge
+    // every rung segment exactly once under a synthetic per-config cost
+    // model, however the prefixes nest.
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+
+    fn cost_upto(plan: &RunPlan, upto: usize) -> f64 {
+        let stages = plan.stages();
+        let mut c = 0.0;
+        for (i, st) in stages.iter().enumerate() {
+            let start = st.from_step;
+            let end = stages
+                .get(i + 1)
+                .map(|n| n.from_step)
+                .unwrap_or(plan.total_steps())
+                .min(upto);
+            if end > start {
+                let w: f64 = st.cfg_id.bytes().map(|b| b as f64).sum::<f64>() + 1.0;
+                c += (end - start) as f64 * w;
+            }
+        }
+        c
+    }
+
+    fn check_node(
+        graph: &JobGraph,
+        plans: &[RunPlan],
+        node: &GroupSpec,
+        parent: Option<(usize, usize)>, // (parent trunk job, parent fork step)
+    ) {
+        let mut members: Vec<usize> = node.direct.clone();
+        for c in &node.children {
+            members.extend(c.plan_idxs.iter().copied());
+        }
+        members.sort_unstable();
+        let mut declared = node.plan_idxs.clone();
+        declared.sort_unstable();
+        assert_eq!(members, declared, "direct + children must partition the node");
+        match node.trunk {
+            None => {
+                assert!(node.children.is_empty(), "trunkless nodes cannot nest");
+                assert!(parent.is_none());
+            }
+            Some(t) => {
+                let JobKind::Trunk { plan_idx, fork_step, depth, parent: tparent } =
+                    graph.jobs()[t].kind
+                else {
+                    panic!("node trunk {t} is not a trunk job");
+                };
+                assert!(node.plan_idxs.contains(&plan_idx));
+                assert_eq!(tparent, parent.map(|(p, _)| p), "child trunks chain to their parent");
+                if let Some((_, pfork)) = parent {
+                    assert!(fork_step > pfork, "fork steps must increase with depth");
+                }
+                for &i in &node.plan_idxs {
+                    if plans[i].n_boundaries() >= depth {
+                        assert_eq!(
+                            plans[i].share_key_upto(depth).as_deref(),
+                            Some(node.key.as_str()),
+                            "member {i} does not share the node key at depth {depth}"
+                        );
+                        assert_eq!(plans[i].boundary_at(depth), Some(fork_step));
+                    } else {
+                        // Identical boundary-less plans group at the horizon.
+                        assert_eq!(plans[i].total_steps(), fork_step);
+                    }
+                }
+                for c in &node.children {
+                    assert!(c.plan_idxs.len() >= 2, "child nodes must actually share");
+                    check_node(graph, plans, c, Some((t, fork_step)));
+                }
+            }
+        }
+    }
+
+    proptest(300, |g| {
+        let n_plans = g.usize(1..10);
+        let mut plans = Vec::with_capacity(n_plans);
+        for i in 0..n_plans {
+            let class = g.usize(0..2);
+            let total = 200 + class * 100;
+            let mut b = RunBuilder::new(format!("p{i}"))
+                .start(format!("src{class}"))
+                .total_steps(total)
+                .schedule(sched)
+                .eval_every(10)
+                .seed(class as u64);
+            let n_rounds = g.usize(0..4);
+            let tau_opts = [[20usize, 30], [50, 60], [80, 90]];
+            for r in 0..n_rounds {
+                let tau = tau_opts[r][g.usize(0..2)];
+                let rewarm = [0usize, 5][g.usize(0..2)];
+                let spec = ExpandSpec { seed: [7u64, 9][g.usize(0..2)], ..Default::default() };
+                b = b.then_expand_rewarm_at(tau, format!("dst{r}"), spec, rewarm);
+            }
+            plans.push(b.build().unwrap());
+        }
+        let graph = JobGraph::lower(plans.clone()).unwrap();
+
+        let mut owners = vec![0usize; n_plans];
+        for j in graph.jobs() {
+            if let Some(idx) = j.kind.result_plan() {
+                owners[idx] += 1;
+            }
+            for &d in &j.deps {
+                assert!(d < j.id, "dep {d} does not precede job {}", j.id);
+            }
+        }
+        assert!(owners.iter().all(|&c| c == 1), "result-job ownership: {owners:?}");
+        for gr in graph.groups() {
+            check_node(&graph, &plans, gr, None);
+        }
+
+        // FLOP dedup: assemble's tree walk must charge exactly the per-job
+        // segments (trunks: own rung only; tails: post-fork only).
+        let mut trunk_costs = std::collections::HashMap::new();
+        let mut expect = 0.0f64;
+        for j in graph.jobs() {
+            match j.kind {
+                JobKind::Trunk { plan_idx, fork_step, parent, .. } => {
+                    let own = cost_upto(&plans[plan_idx], fork_step);
+                    trunk_costs.insert(j.id, own);
+                    let parent_cost = parent.map(|p| trunk_costs[&p]).unwrap_or(0.0);
+                    expect += own - parent_cost;
+                }
+                JobKind::Tail { plan_idx, trunk } => {
+                    expect += cost_upto(&plans[plan_idx], plans[plan_idx].total_steps())
+                        - trunk_costs[&trunk];
+                }
+                JobKind::Standalone { plan_idx } => {
+                    expect += cost_upto(&plans[plan_idx], plans[plan_idx].total_steps());
+                }
+            }
+        }
+        let per_plan: Vec<_> = plans
+            .iter()
+            .map(|p| {
+                let total = cost_upto(p, p.total_steps());
+                Some((
+                    RunResult {
+                        curve: Curve::new(p.name()),
+                        ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
+                        boundaries: Vec::new(),
+                        final_val_loss: 0.0,
+                    },
+                    None,
+                ))
+            })
+            .collect();
+        let represented: f64 = plans.iter().map(|p| cost_upto(p, p.total_steps())).sum();
+        let out = graph.assemble(per_plan, |j| trunk_costs.get(&j).copied()).unwrap();
+        let scale = represented.max(1.0);
+        assert!(
+            (out.executed_flops - expect).abs() / scale < 1e-12,
+            "assemble executed {} vs per-job segments {expect}",
+            out.executed_flops
+        );
+        assert!(
+            (out.executed_flops + out.shared_flops - represented).abs() / scale < 1e-12,
+            "executed {} + shared {} must equal represented {represented}",
+            out.executed_flops,
+            out.shared_flops
+        );
     });
 }
 
@@ -441,6 +621,54 @@ fn prop_mixing_monotone_under_extension() {
         if n - mix_at >= 2 {
             assert!(before.is_some(), "should have mixed at {mix_at}/{n}");
         }
+        // Progressive points beyond the fixed curve's domain are outside the
+        // overlap: appending them — however wild their losses — must not
+        // change the verdict (they used to be compared against a
+        // flat-extrapolated fixed value, faking or resetting mixing).
+        for (i, val) in [(n + 10, 100.0f32), (n + 11, 1.0), (n + 12, 0.9)] {
+            prog.push(CurvePoint {
+                step: i,
+                tokens: (i * 100) as u64,
+                flops: 0.0,
+                train_loss: val,
+                val_loss: val,
+                lr: 0.01,
+            });
+        }
+        assert_eq!(
+            mixing_point(&prog, &fixed, tol, 2),
+            after,
+            "out-of-overlap points must not move the mixing point"
+        );
+    });
+}
+
+#[test]
+fn prop_mixing_is_none_for_non_overlapping_curves() {
+    proptest(200, |g| {
+        // The fixed curve spans [0, 100·(n−1)] tokens; the progressive one
+        // starts strictly past its end (or vice versa). With no overlap
+        // there is nothing to compare — even an infinitely loose tolerance
+        // must not report mixing.
+        let n = g.usize(1..10);
+        let m = g.usize(1..10);
+        let gap = g.usize(1..1000) as u64;
+        let mut fixed = Curve::new("f");
+        let mut prog = Curve::new("p");
+        let fixed_end = (n - 1) as u64 * 100;
+        for i in 0..n {
+            let v = g.f32(0.5, 5.0);
+            fixed.push(CurvePoint { step: i, tokens: i as u64 * 100, flops: 0.0, train_loss: v, val_loss: v, lr: 0.01 });
+        }
+        for j in 0..m {
+            let v = g.f32(0.5, 5.0);
+            let tokens = fixed_end + gap + j as u64 * 100;
+            prog.push(CurvePoint { step: j, tokens, flops: 0.0, train_loss: v, val_loss: v, lr: 0.01 });
+        }
+        assert_eq!(mixing_point(&prog, &fixed, f32::INFINITY, 1), None);
+        assert_eq!(mixing_point(&fixed, &prog, f32::INFINITY, 1), None);
+        assert_eq!(mixing_point(&prog, &fixed, 0.05, 2), None);
+        assert_eq!(mixing_point(&fixed, &prog, 0.05, 2), None);
     });
 }
 
