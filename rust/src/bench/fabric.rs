@@ -1,0 +1,174 @@
+//! `bench-fabric`: loopback benchmark for the distributed sweep fabric
+//! (`BENCH_fabric.json`).
+//!
+//! Runs the `bench-parallel` grid three ways — serially on one engine, and
+//! over a loopback coordinator with 1 and 2 in-process worker connections
+//! (2 engine threads each) — and reports trained steps/sec per topology.
+//! Same grid, same seed: the steps/sec ratio isolates what the fabric adds
+//! on top of the in-process pool (framing, handshake, snapshot bytes over
+//! TCP, coordinator event loop).
+//!
+//! The report asserts the determinism contract as a side effect: every
+//! fabric outcome must be bit-identical to the serial one (`identical` in
+//! the JSON) — curves, boundaries, per-run ledgers, and `executed_flops`.
+
+use std::collections::BTreeMap;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{RunPlan, Sweep, SweepOutcome, Trainer};
+use crate::exec::JobGraph;
+use crate::fabric::{run_worker, FabricOptions, FabricServer, FabricStats, WorkerOptions};
+use crate::metrics::Table;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+use super::parallel::{executed_steps, grid, outcomes_identical};
+use super::Ctx;
+
+/// Engine threads per worker connection.
+const ENGINES_PER_WORKER: usize = 2;
+
+struct Measured {
+    label: String,
+    wall_s: f64,
+    steps_per_sec: f64,
+    outcome: SweepOutcome,
+    stats: Option<FabricStats>,
+}
+
+/// One coordinator + `conns` loopback worker connections, no store: every
+/// job crosses the wire, so the wall clock prices the transport honestly.
+fn measure_fabric(ctx: &Ctx, plans: &[RunPlan], steps: usize, conns: usize) -> Result<Measured> {
+    let graph = JobGraph::lower(plans.to_vec())?;
+    let server = FabricServer::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let t0 = Instant::now();
+    let (outcome, stats) = thread::scope(|scope| -> Result<(SweepOutcome, FabricStats)> {
+        let workers: Vec<_> = (0..conns)
+            .map(|_| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let opts =
+                        WorkerOptions { workers: ENGINES_PER_WORKER, ..WorkerOptions::default() };
+                    run_worker(&addr, &ctx.manifest, &ctx.corpus, &opts)
+                })
+            })
+            .collect();
+        let out = server.run(&ctx.manifest, &ctx.corpus, &graph, &FabricOptions::default(), None);
+        for w in workers {
+            w.join().map_err(|_| anyhow!("fabric bench worker thread panicked"))??;
+        }
+        out
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(Measured {
+        label: format!("fabric {conns}x{ENGINES_PER_WORKER}"),
+        wall_s,
+        steps_per_sec: steps as f64 / wall_s.max(1e-9),
+        outcome,
+        stats: Some(stats),
+    })
+}
+
+pub fn fabric(ctx: &Ctx) -> Result<()> {
+    let target = "fabric";
+    let plans = grid(ctx)?;
+    let steps = executed_steps(&plans)?;
+
+    // Serial baseline on a fresh engine, exactly like `bench-parallel`'s.
+    let serial = {
+        let engine = Engine::cpu()?;
+        let trainer = Trainer::new(&engine, &ctx.manifest, &ctx.corpus);
+        let mut sweep = Sweep::new(trainer);
+        for p in plans.clone() {
+            sweep.add(p);
+        }
+        let t0 = Instant::now();
+        let outcome = sweep.run()?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        Measured {
+            label: "serial".to_string(),
+            wall_s,
+            steps_per_sec: steps as f64 / wall_s.max(1e-9),
+            outcome,
+            stats: None,
+        }
+    };
+    let runs = vec![
+        serial,
+        measure_fabric(ctx, &plans, steps, 1)?,
+        measure_fabric(ctx, &plans, steps, 2)?,
+    ];
+    let serial_sps = runs[0].steps_per_sec;
+    let identical = runs[1..].iter().all(|m| outcomes_identical(&runs[0].outcome, &m.outcome));
+
+    let mut table = Table::new(&[
+        "topology",
+        "wall s",
+        "steps/sec",
+        "speedup vs serial",
+        "remote jobs",
+        "identical",
+    ]);
+    for m in &runs {
+        table.row(vec![
+            m.label.clone(),
+            format!("{:.3}", m.wall_s),
+            format!("{:.2}", m.steps_per_sec),
+            format!("{:.2}x", m.steps_per_sec / serial_sps.max(1e-9)),
+            m.stats.as_ref().map(|s| s.remote_jobs.to_string()).unwrap_or_else(|| "—".into()),
+            if m.stats.is_none() { "—".into() } else { format!("{identical}") },
+        ]);
+    }
+    ctx.emit(target, &table)?;
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("fabric".to_string()));
+    top.insert("grid".to_string(), Json::Str("bench-parallel grid over loopback TCP".into()));
+    top.insert("runs".to_string(), Json::Num(plans.len() as f64));
+    top.insert("steps".to_string(), Json::Num(ctx.steps as f64));
+    top.insert("executed_steps".to_string(), Json::Num(steps as f64));
+    top.insert("seed".to_string(), Json::Num(ctx.seed as f64));
+    top.insert("identical".to_string(), Json::Bool(identical));
+    top.insert(
+        "topologies".to_string(),
+        Json::Arr(
+            runs.iter()
+                .map(|m| {
+                    let mut o = BTreeMap::new();
+                    o.insert("topology".to_string(), Json::Str(m.label.clone()));
+                    o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+                    o.insert("steps_per_sec".to_string(), Json::Num(m.steps_per_sec));
+                    o.insert(
+                        "speedup_vs_serial".to_string(),
+                        Json::Num(m.steps_per_sec / serial_sps.max(1e-9)),
+                    );
+                    if let Some(s) = &m.stats {
+                        o.insert("remote_jobs".to_string(), Json::Num(s.remote_jobs as f64));
+                        let dispatched = Json::Num(s.dispatched_jobs as f64);
+                        o.insert("dispatched_jobs".to_string(), dispatched);
+                        o.insert("connections".to_string(), Json::Num(s.connections as f64));
+                    }
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let mut text = Json::Obj(top).to_string();
+    text.push('\n');
+    // Canonical trajectory file at the repo root (cwd), plus a copy under
+    // the bench output dir — no store is involved, so every invocation is
+    // a real measurement.
+    std::fs::write("BENCH_fabric.json", &text)?;
+    let dir = ctx.out_dir.join(target);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("BENCH_fabric.json"), &text)?;
+    println!(
+        "wrote BENCH_fabric.json (1-conn fabric at {:.2}x serial; identical outcomes: {identical})",
+        runs[1].steps_per_sec / serial_sps.max(1e-9)
+    );
+    Ok(())
+}

@@ -11,6 +11,7 @@ pub mod figs_core;
 pub mod figs_sched;
 pub mod figs_tradeoff;
 pub mod figs_appendix;
+pub mod fabric;
 pub mod ladder;
 pub mod parallel;
 pub mod perf;
@@ -160,6 +161,7 @@ pub fn run_target(ctx: &Ctx, target: &str) -> Result<()> {
         "theory" => tables::theory(ctx),
         "perf" => perf::perf(ctx),
         "parallel" => parallel::parallel(ctx),
+        "fabric" => fabric::fabric(ctx),
         "ladder" => ladder::ladder(ctx),
         "all" => {
             for t in ALL_TARGETS {
@@ -174,5 +176,5 @@ pub fn run_target(ctx: &Ctx, target: &str) -> Result<()> {
 pub const ALL_TARGETS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig17", "fig18", "fig19", "fig20",
-    "fig21", "table1", "table2", "theory", "perf", "parallel", "ladder",
+    "fig21", "table1", "table2", "theory", "perf", "parallel", "fabric", "ladder",
 ];

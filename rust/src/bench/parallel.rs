@@ -31,8 +31,9 @@ use super::Ctx;
 
 const LARGE: &str = "gpt2.l3";
 
-/// The fixed benchmark grid: 6 runs, 2 shared trunks.
-fn grid(ctx: &Ctx) -> Result<Vec<RunPlan>> {
+/// The fixed benchmark grid: 6 runs, 2 shared trunks (shared with
+/// `bench-fabric`, so pool-vs-fabric numbers compare like for like).
+pub(crate) fn grid(ctx: &Ctx) -> Result<Vec<RunPlan>> {
     let total = ctx.steps;
     let tau = (total / 5).max(1);
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
@@ -71,7 +72,7 @@ fn grid(ctx: &Ctx) -> Result<Vec<RunPlan>> {
 
 /// Steps actually dispatched by the grid (shared trunks counted once) —
 /// the throughput numerator, read off the job graph.
-fn executed_steps(plans: &[RunPlan]) -> Result<usize> {
+pub(crate) fn executed_steps(plans: &[RunPlan]) -> Result<usize> {
     let graph = JobGraph::lower(plans.to_vec())?;
     let trunk_fork = |job: usize| -> usize {
         match graph.jobs()[job].kind {
@@ -107,7 +108,7 @@ struct Measured {
 }
 
 /// Bit-equality of two outcomes: curves, boundaries, ledgers, and totals.
-fn outcomes_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
+pub(crate) fn outcomes_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
     a.results.len() == b.results.len()
         && a.executed_flops.to_bits() == b.executed_flops.to_bits()
         && a.shared_flops.to_bits() == b.shared_flops.to_bits()

@@ -41,8 +41,47 @@ struct Measured {
     final_val_loss: f32,
 }
 
+/// Device-path steps/sec from a previously committed `BENCH_perf.json`,
+/// read before this run overwrites it. `None` when absent or unparseable
+/// (first run on a branch, or a hand-edited file).
+fn committed_baseline() -> Option<f64> {
+    let text = std::fs::read_to_string("BENCH_perf.json").ok()?;
+    Json::parse(&text).ok()?.get("device")?.get("steps_per_sec")?.as_f64()
+}
+
+/// The perf trajectory gate: with `REPRO_PERF_GATE` set (optionally to the
+/// allowed regression percent; default 20), a measured device steps/sec
+/// more than that far below the committed baseline fails the bench. CI
+/// sets it after restoring the checked-in `BENCH_perf.json`, so dispatch
+/// regressions fail the build instead of silently rebasing the trajectory.
+fn gate(baseline: Option<f64>, measured: f64) -> Result<()> {
+    let Ok(spec) = std::env::var("REPRO_PERF_GATE") else {
+        return Ok(());
+    };
+    let allowed_pct: f64 = spec.parse().ok().filter(|p| *p > 1.0).unwrap_or(20.0);
+    let Some(base) = baseline else {
+        println!("perf gate: no committed BENCH_perf.json baseline; nothing to compare");
+        return Ok(());
+    };
+    let change_pct = (measured / base - 1.0) * 100.0;
+    println!(
+        "perf gate: device {measured:.2} steps/sec vs committed {base:.2} ({change_pct:+.1}%, \
+         allowed -{allowed_pct:.0}%)"
+    );
+    if change_pct < -allowed_pct {
+        anyhow::bail!(
+            "perf regression: device-resident path at {measured:.2} steps/sec is \
+             {:.1}% below the committed baseline of {base:.2} (allowed {allowed_pct:.0}%)",
+            -change_pct
+        );
+    }
+    Ok(())
+}
+
 pub fn perf(ctx: &Ctx) -> Result<()> {
     let target = "perf";
+    // Read the committed trajectory before this run overwrites it.
+    let baseline = committed_baseline();
     let steps = ctx.steps;
     let tau = ((steps as f64 * 0.4) as usize).max(1);
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
@@ -155,5 +194,26 @@ pub fn perf(ctx: &Ctx) -> Result<()> {
     std::fs::create_dir_all(&dir)?;
     std::fs::write(dir.join("BENCH_perf.json"), &text)?;
     println!("wrote BENCH_perf.json (speedup {speedup:.2}x device over host-roundtrip)");
-    Ok(())
+    gate(baseline, device.steps_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gate;
+
+    #[test]
+    fn perf_gate_fails_only_on_a_real_regression() {
+        // The gate is env-armed: these set/unset globally, so exercise all
+        // cases in one test to avoid parallel-test interference.
+        std::env::set_var("REPRO_PERF_GATE", "1");
+        assert!(gate(Some(100.0), 95.0).is_ok(), "5% down is within the 20% budget");
+        assert!(gate(Some(100.0), 130.0).is_ok(), "faster is always fine");
+        assert!(gate(None, 10.0).is_ok(), "no baseline, nothing to compare");
+        let err = gate(Some(100.0), 70.0).unwrap_err();
+        assert!(format!("{err:#}").contains("perf regression"), "{err:#}");
+        std::env::set_var("REPRO_PERF_GATE", "50");
+        assert!(gate(Some(100.0), 70.0).is_ok(), "custom 50% budget tolerates 30% down");
+        std::env::remove_var("REPRO_PERF_GATE");
+        assert!(gate(Some(100.0), 1.0).is_ok(), "gate disarmed without the env var");
+    }
 }

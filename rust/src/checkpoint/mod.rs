@@ -159,22 +159,32 @@ pub struct DriverSnapshot {
 /// (temp sibling + fsync + rename), so a crash mid-write never leaves a
 /// torn snapshot at `path`.
 pub fn save_snapshot(path: &Path, snap: &DriverSnapshot, entry: &ConfigEntry) -> Result<()> {
-    write_atomic(path, |f| {
-        f.write_all(SNAP_MAGIC)?;
-        write_str(f, &snap.run_name)?;
-        write_str(f, &snap.cfg_id)?;
-        write_u64(f, snap.step as u64)?;
-        write_u64(f, snap.stage_idx as u64)?;
-        write_u64(f, snap.data_seed)?;
-        write_u64(f, snap.train_windows)?;
-        write_u64(f, snap.val_windows)?;
-        write_u64(f, snap.image_samples)?;
-        write_f32(f, snap.last_train_loss)?;
-        write_ledger(f, &snap.ledger)?;
-        write_curve_points(f, &snap.curve.points)?;
-        write_boundaries(f, &snap.boundaries)?;
-        write_state(f, &snap.state, entry)
-    })
+    write_atomic(path, |f| write_snapshot_to(f, snap, entry))
+}
+
+/// Serialize a driver snapshot in its `DPTDRV01` byte form to any writer.
+/// This *is* the file format of [`save_snapshot`]; the fabric wire protocol
+/// reuses it verbatim, so a snapshot shipped over TCP is byte-identical to
+/// one read back from disk.
+pub fn write_snapshot_to(
+    f: &mut impl Write,
+    snap: &DriverSnapshot,
+    entry: &ConfigEntry,
+) -> Result<()> {
+    f.write_all(SNAP_MAGIC)?;
+    write_str(f, &snap.run_name)?;
+    write_str(f, &snap.cfg_id)?;
+    write_u64(f, snap.step as u64)?;
+    write_u64(f, snap.stage_idx as u64)?;
+    write_u64(f, snap.data_seed)?;
+    write_u64(f, snap.train_windows)?;
+    write_u64(f, snap.val_windows)?;
+    write_u64(f, snap.image_samples)?;
+    write_f32(f, snap.last_train_loss)?;
+    write_ledger(f, &snap.ledger)?;
+    write_curve_points(f, &snap.curve.points)?;
+    write_boundaries(f, &snap.boundaries)?;
+    write_state(f, &snap.state, entry)
 }
 
 /// Read only the config id of a snapshot (to resolve the manifest entry
@@ -204,7 +214,9 @@ pub fn load_snapshot(path: &Path, entry: &ConfigEntry) -> Result<DriverSnapshot>
         .with_context(|| format!("reading snapshot {path:?} (truncated or corrupted?)"))
 }
 
-fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<DriverSnapshot> {
+/// Decode a `DPTDRV01` driver snapshot from any reader (the inverse of
+/// [`write_snapshot_to`]), validating the model section against `entry`.
+pub fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<DriverSnapshot> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic != SNAP_MAGIC {

@@ -242,6 +242,164 @@ impl RunPlan {
         self.share_key_upto(depth)
             .map(|key| crate::store::digest_str(&format!("trunkv1|{key}")))
     }
+
+    // ------------------------------------------------------- wire codec
+    // (fabric job assignments ship plans by value; the encoding must
+    // round-trip every field bit-exactly so the remote digest — and hence
+    // the engine-call sequence — is identical to the coordinator's)
+
+    /// Serialize this plan for the fabric wire ([`crate::fabric`]), using
+    /// the checkpoint codec primitives.
+    pub(crate) fn write_to(&self, f: &mut impl std::io::Write) -> Result<()> {
+        use crate::checkpoint::{write_f32, write_str, write_u64};
+        write_str(f, &self.name)?;
+        write_u64(f, self.total_steps as u64)?;
+        match self.schedule {
+            Schedule::Wsd { peak, warmup_frac, decay_frac } => {
+                write_u64(f, 0)?;
+                write_f32(f, peak)?;
+                write_f32(f, warmup_frac)?;
+                write_f32(f, decay_frac)?;
+            }
+            Schedule::Cosine { peak, warmup_frac } => {
+                write_u64(f, 1)?;
+                write_f32(f, peak)?;
+                write_f32(f, warmup_frac)?;
+            }
+            Schedule::Constant { peak, warmup_frac } => {
+                write_u64(f, 2)?;
+                write_f32(f, peak)?;
+                write_f32(f, warmup_frac)?;
+            }
+            Schedule::Linear { peak, warmup_frac } => {
+                write_u64(f, 3)?;
+                write_f32(f, peak)?;
+                write_f32(f, warmup_frac)?;
+            }
+        }
+        write_u64(f, self.eval_every as u64)?;
+        write_u64(f, self.eval_batches as u64)?;
+        write_u64(f, self.seed)?;
+        write_u64(f, self.stages.len() as u64)?;
+        for st in &self.stages {
+            write_str(f, &st.cfg_id)?;
+            write_u64(f, st.from_step as u64)?;
+            write_u64(f, st.rewarm_steps as u64)?;
+            match &st.transition {
+                Transition::Init => write_u64(f, 0)?,
+                Transition::SwitchOptimizer => write_u64(f, 1)?,
+                Transition::Expand(spec) => {
+                    write_u64(f, 2)?;
+                    write_expand_spec(f, spec)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a plan serialized by [`RunPlan::write_to`]. Plans are
+    /// validated at build time on the sending side; this trusts the
+    /// structure (the fabric handshake pins both ends to the same build)
+    /// but still bounds every length against corrupted frames.
+    pub(crate) fn read_from(f: &mut impl std::io::Read) -> Result<RunPlan> {
+        use crate::checkpoint::{read_f32, read_str, read_u64};
+        let name = read_str(f)?;
+        let total_steps = read_u64(f)? as usize;
+        let schedule = match read_u64(f)? {
+            0 => Schedule::Wsd {
+                peak: read_f32(f)?,
+                warmup_frac: read_f32(f)?,
+                decay_frac: read_f32(f)?,
+            },
+            1 => Schedule::Cosine { peak: read_f32(f)?, warmup_frac: read_f32(f)? },
+            2 => Schedule::Constant { peak: read_f32(f)?, warmup_frac: read_f32(f)? },
+            3 => Schedule::Linear { peak: read_f32(f)?, warmup_frac: read_f32(f)? },
+            other => bail!("unknown schedule tag {other} in plan frame"),
+        };
+        let eval_every = read_u64(f)? as usize;
+        let eval_batches = read_u64(f)? as usize;
+        let seed = read_u64(f)?;
+        let n_stages = read_u64(f)? as usize;
+        if n_stages > 1 << 16 {
+            bail!("implausible stage count {n_stages} in plan frame");
+        }
+        let mut stages = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            let cfg_id = read_str(f)?;
+            let from_step = read_u64(f)? as usize;
+            let rewarm_steps = read_u64(f)? as usize;
+            let transition = match read_u64(f)? {
+                0 => Transition::Init,
+                1 => Transition::SwitchOptimizer,
+                2 => Transition::Expand(read_expand_spec(f)?),
+                other => bail!("unknown transition tag {other} in plan frame"),
+            };
+            stages.push(PlanStage { cfg_id, from_step, transition, rewarm_steps });
+        }
+        Ok(RunPlan { name, stages, total_steps, schedule, eval_every, eval_batches, seed })
+    }
+}
+
+fn write_expand_spec(f: &mut impl std::io::Write, spec: &ExpandSpec) -> Result<()> {
+    use crate::checkpoint::write_u64;
+    use crate::expansion::{CopyOrder, Insertion, OsPolicy, Strategy};
+    match spec.strategy {
+        Strategy::Random => write_u64(f, 0)?,
+        Strategy::Copying(order) => {
+            write_u64(f, 1)?;
+            write_u64(
+                f,
+                match order {
+                    CopyOrder::Stack => 0,
+                    CopyOrder::Inter => 1,
+                    CopyOrder::Last => 2,
+                },
+            )?;
+        }
+        Strategy::Zero => write_u64(f, 2)?,
+        Strategy::CopyingZeroN => write_u64(f, 3)?,
+        Strategy::CopyingZeroL => write_u64(f, 4)?,
+    }
+    write_u64(f, match spec.insertion {
+        Insertion::Bottom => 0,
+        Insertion::Top => 1,
+    })?;
+    write_u64(f, match spec.os_policy {
+        OsPolicy::Inherit => 0,
+        OsPolicy::Copy => 1,
+        OsPolicy::Reset => 2,
+    })?;
+    write_u64(f, spec.seed)
+}
+
+fn read_expand_spec(f: &mut impl std::io::Read) -> Result<ExpandSpec> {
+    use crate::checkpoint::read_u64;
+    use crate::expansion::{CopyOrder, Insertion, OsPolicy, Strategy};
+    let strategy = match read_u64(f)? {
+        0 => Strategy::Random,
+        1 => Strategy::Copying(match read_u64(f)? {
+            0 => CopyOrder::Stack,
+            1 => CopyOrder::Inter,
+            2 => CopyOrder::Last,
+            other => bail!("unknown copy-order tag {other} in plan frame"),
+        }),
+        2 => Strategy::Zero,
+        3 => Strategy::CopyingZeroN,
+        4 => Strategy::CopyingZeroL,
+        other => bail!("unknown strategy tag {other} in plan frame"),
+    };
+    let insertion = match read_u64(f)? {
+        0 => Insertion::Bottom,
+        1 => Insertion::Top,
+        other => bail!("unknown insertion tag {other} in plan frame"),
+    };
+    let os_policy = match read_u64(f)? {
+        0 => OsPolicy::Inherit,
+        1 => OsPolicy::Copy,
+        2 => OsPolicy::Reset,
+        other => bail!("unknown os-policy tag {other} in plan frame"),
+    };
+    Ok(ExpandSpec { strategy, insertion, os_policy, seed: read_u64(f)? })
 }
 
 /// Fluent builder for [`RunPlan`]; `build()` validates everything that can
@@ -682,6 +840,81 @@ mod tests {
         let g = RunBuilder::ladder("g", "l0", &rounds, 200, sched()).build().unwrap();
         assert_ne!(a.digest(), g.digest(), "round config must affect the digest");
         assert_eq!(a.trunk_digest_at(3), g.trunk_digest_at(3), "cfg of round 3 only matters past boundary 3");
+    }
+
+    #[test]
+    fn wire_codec_roundtrips_every_plan_shape() {
+        use crate::expansion::{CopyOrder, Insertion, OsPolicy, Strategy};
+        let specs = [
+            ExpandSpec::default(),
+            ExpandSpec {
+                strategy: Strategy::Copying(CopyOrder::Inter),
+                insertion: Insertion::Top,
+                os_policy: OsPolicy::Copy,
+                seed: 99,
+            },
+            ExpandSpec {
+                strategy: Strategy::CopyingZeroL,
+                insertion: Insertion::Bottom,
+                os_policy: OsPolicy::Reset,
+                seed: 3,
+            },
+            ExpandSpec { strategy: Strategy::Zero, ..Default::default() },
+            ExpandSpec { strategy: Strategy::CopyingZeroN, ..Default::default() },
+            ExpandSpec { strategy: Strategy::Copying(CopyOrder::Stack), ..Default::default() },
+            ExpandSpec { strategy: Strategy::Copying(CopyOrder::Last), ..Default::default() },
+        ];
+        let scheds = [
+            Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 },
+            Schedule::Cosine { peak: 0.003, warmup_frac: 0.05 },
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.02 },
+            Schedule::Linear { peak: 0.07, warmup_frac: 0.0 },
+        ];
+        let mut plans = Vec::new();
+        for (i, sch) in scheds.iter().enumerate() {
+            plans.push(RunBuilder::fixed(format!("fixed{i}"), "l0", 120 + i, *sch).build().unwrap());
+            plans.push(
+                RunBuilder::progressive("prog", "l0", "l3", 40, 200, *sch, specs[i])
+                    .seed(5 + i as u64)
+                    .eval_batches(2 + i)
+                    .build()
+                    .unwrap(),
+            );
+        }
+        let rounds: Vec<LadderRound> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| LadderRound::new(format!("l{i}"), 20 * (i + 1), *s).rewarm(i))
+            .collect();
+        plans.push(RunBuilder::ladder("lad", "l0", &rounds, 400, scheds[0]).build().unwrap());
+        plans.push(
+            RunBuilder::new("switch")
+                .start("l3")
+                .then_switch_optimizer_at(50, "l3.adamw")
+                .total_steps(100)
+                .schedule(scheds[1])
+                .build()
+                .unwrap(),
+        );
+        for plan in &plans {
+            let mut bytes = Vec::new();
+            plan.write_to(&mut bytes).unwrap();
+            let back = RunPlan::read_from(&mut &bytes[..]).unwrap();
+            // The digest covers every execution-relevant field (and the
+            // name is carried separately), so digest + name equality is
+            // full round-trip equality.
+            assert_eq!(plan.name(), back.name());
+            assert_eq!(plan.digest(), back.digest(), "plan '{}'", plan.name());
+            assert_eq!(plan.canonical_desc(), back.canonical_desc());
+            // Re-encoding is byte-stable.
+            let mut again = Vec::new();
+            back.write_to(&mut again).unwrap();
+            assert_eq!(bytes, again);
+        }
+        // Corrupted tags error instead of mis-decoding.
+        let mut bytes = Vec::new();
+        plans[0].write_to(&mut bytes).unwrap();
+        assert!(RunPlan::read_from(&mut &bytes[..bytes.len() / 2]).is_err());
     }
 
     #[test]

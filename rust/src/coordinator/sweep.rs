@@ -205,6 +205,11 @@ impl<'a> Sweep<'a> {
         // Cache pre-pass (same resolution rule as the pool scheduler):
         // every completed run is served up front, so the group walk below
         // only trains what is actually missing.
+        if let Some(store) = self.store.as_mut() {
+            // Journal what this sweep references so `repro store gc` can
+            // tell live artifacts from garbage (DESIGN.md §7).
+            crate::exec::sched::record_graph_refs(store, graph)?;
+        }
         if self.store.is_some() {
             for (i, p) in plans.iter().enumerate() {
                 if let Some(hit) = self.cached_run(p)? {

@@ -26,6 +26,7 @@
 
 pub mod graph;
 pub mod pool;
+pub(crate) mod sched;
 
 pub use graph::{GroupSpec, JobGraph, JobId, JobKind, JobSpec};
 pub use pool::{run_graph, PoolOptions};

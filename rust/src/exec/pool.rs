@@ -1,4 +1,4 @@
-//! Engine-per-worker pool and the job scheduler.
+//! Engine-per-worker pool over the extracted scheduler.
 //!
 //! [`Engine`]'s internals (the PJRT client, the `Rc`-cached executables) are
 //! deliberately non-`Send`; this module is the boundary that keeps them
@@ -8,17 +8,18 @@
 //! in-memory [`DriverSnapshot`]s going out, [`RunResult`]s and snapshots
 //! coming back.
 //!
-//! Scheduling is demand-driven over channels: the scheduler owns the ready
-//! queue, each worker has a private job channel and announces itself over a
-//! shared reply channel (`Ready` once its engine is up, `Done` after every
-//! job). Ready jobs go to idle workers; a trunk job's completion publishes
-//! its snapshot and unlocks the group's tail jobs. Which worker runs which
-//! job — and in what interleaving — cannot affect the outcome: every job's
-//! engine-call sequence is a pure function of its plan (+ fork snapshot),
-//! and [`JobGraph::assemble`] folds the results in the serial sweep's
-//! canonical order. A failed job (or a worker whose engine fails to
-//! construct) aborts the sweep: no new jobs are issued, in-flight jobs are
-//! drained, and the first error is returned.
+//! Scheduling is demand-driven over channels: the [`Scheduler`]
+//! ([`super::sched`]) owns the ready queue, each worker has a private job
+//! channel and announces itself over a shared reply channel (`Ready` once
+//! its engine is up, `Done` after every job). Ready jobs go to idle
+//! workers; a trunk job's completion publishes its snapshot and unlocks the
+//! group's tail jobs. Which worker runs which job — and in what
+//! interleaving — cannot affect the outcome: every job's engine-call
+//! sequence is a pure function of its plan (+ fork snapshot), and
+//! [`JobGraph::assemble`] folds the results in the serial sweep's canonical
+//! order. A failed job (or a worker whose engine fails to construct) aborts
+//! the sweep: no new jobs are issued, in-flight jobs are drained, and the
+//! first error is returned.
 //!
 //! **Durable store** (DESIGN.md §7). With a [`RunStore`] attached, the
 //! scheduler — and only the scheduler; workers never touch the store —
@@ -27,23 +28,22 @@
 //! completed job as it lands: trunk snapshots and run results are written
 //! and journaled even if a later job aborts the sweep, which is exactly
 //! what lets an interrupted sweep resume re-running only unfinished jobs.
+//!
+//! The same worker loop serves the fabric's remote engine pools
+//! ([`crate::fabric::worker`]); DESIGN.md §9.
 
-use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::thread;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::checkpoint::DriverSnapshot;
-use crate::coordinator::{
-    ProgressPrinter, ProgressSink, RunDriver, RunPlan, RunResult, SweepOutcome, Trainer,
-};
+use crate::coordinator::{ProgressPrinter, ProgressSink, RunDriver, SweepOutcome, Trainer};
 use crate::data::Corpus;
-use crate::runtime::{Engine, Manifest, ModelState};
+use crate::runtime::{Engine, Manifest};
 use crate::store::RunStore;
 
-use super::graph::{JobGraph, JobId, JobKind};
+use super::graph::{JobGraph, JobId};
+use super::sched::{record_graph_refs, JobOutput, Scheduler, WorkItem};
 
 /// Pool configuration for one graph execution.
 #[derive(Debug, Clone, Default)]
@@ -57,47 +57,7 @@ pub struct PoolOptions {
     pub keep_states: bool,
 }
 
-/// Work sent to a worker. Only plain `Send` data — engines never move.
-enum WorkItem {
-    Trunk {
-        job: JobId,
-        plan: RunPlan,
-        fork_step: usize,
-        /// Parent trunk's snapshot for depth ≥ 2 (ladder) trunks; `None`
-        /// for depth-1 trunks, which start from initialization.
-        snap: Option<Arc<DriverSnapshot>>,
-    },
-    Run {
-        job: JobId,
-        plan_idx: usize,
-        plan: RunPlan,
-        /// Fork snapshot for tail jobs; `None` for standalone runs.
-        snap: Option<Arc<DriverSnapshot>>,
-        keep_state: bool,
-    },
-}
-
-impl WorkItem {
-    fn job(&self) -> JobId {
-        match *self {
-            WorkItem::Trunk { job, .. } | WorkItem::Run { job, .. } => job,
-        }
-    }
-}
-
-/// What a completed job hands back to the scheduler.
-enum JobOutput {
-    /// A trunk's fork snapshot (its ledger total is the shared-prefix cost).
-    Snapshot(Box<DriverSnapshot>),
-    /// A finished run.
-    Run {
-        plan_idx: usize,
-        result: Box<RunResult>,
-        state: Option<Box<ModelState>>,
-    },
-}
-
-enum WorkerMsg {
+pub(crate) enum WorkerMsg {
     /// Engine constructed; the worker is idle and waiting for jobs.
     Ready { worker: usize },
     /// A job finished (successfully or not); the worker is idle again.
@@ -125,47 +85,20 @@ pub fn run_graph(
     if jobs.is_empty() {
         bail!("job graph has no jobs");
     }
-
-    // Store pre-pass: satisfy what we can from the cache before any engine
-    // (or thread) exists. All maps are pre-seeded so the scheduler below
-    // treats cached jobs exactly like already-completed ones.
-    let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
-        graph.plans().iter().map(|_| None).collect();
-    let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
-    // A trunk's snapshot is held only until its last pending consumer — a
-    // tail, or a deeper ladder trunk resuming from it — is dispatched (the
-    // consumers' WorkItems keep their own Arcs); `trunk_flops` outlives it
-    // for the final accounting. Peak host memory therefore matches the
-    // serial sweep's one-group-at-a-time profile, not #groups.
-    let mut snapshots: HashMap<JobId, Arc<DriverSnapshot>> = HashMap::new();
-    let mut undispatched_consumers: HashMap<JobId, usize> = HashMap::new();
-    // Trunks satisfied from the store whose snapshot is still on disk:
-    // digest + pending-tail count. The snapshot itself is materialized
-    // lazily, when the first pending tail is dispatched — eagerly loading
-    // every cached trunk up front would hold #groups full model states at
-    // once, breaking the one-group-at-a-time memory profile.
-    let mut cached_trunks: HashMap<JobId, (String, usize)> = HashMap::new();
-    let mut satisfied = vec![false; jobs.len()];
-    if let Some(s) = store.as_deref() {
-        prefill_from_store(
-            graph,
-            s,
-            opts.keep_states,
-            &mut per_plan,
-            &mut trunk_flops,
-            &mut cached_trunks,
-            &mut satisfied,
-        )?;
+    // Reference the sweep's keys before executing (GC liveness — even an
+    // interrupted sweep's partial artifacts stay live).
+    if let Some(s) = store.as_deref_mut() {
+        record_graph_refs(s, graph)?;
     }
-    let done_upfront = satisfied.iter().filter(|&&b| b).count();
-    if done_upfront == jobs.len() {
+    let (mut sched, done_upfront) =
+        Scheduler::new(graph, opts.keep_states, store.is_some(), store.as_deref())?;
+    if sched.is_done() {
         // Fully warm store: zero engines, zero dispatches.
-        return graph.assemble(per_plan, |job| trunk_flops.get(&job).copied());
+        return sched.assemble();
     }
     // At least one worker, and never more than there are uncached jobs (an
     // idle worker would still pay engine construction).
     let workers = opts.workers.clamp(1, jobs.len() - done_upfront);
-    let persist = store.is_some();
 
     thread::scope(|scope| {
         let (reply_tx, reply_rx) = channel::<WorkerMsg>();
@@ -179,52 +112,38 @@ pub fn run_graph(
         }
         drop(reply_tx);
 
-        let mut ready: VecDeque<JobId> = jobs
-            .iter()
-            .filter(|j| !satisfied[j.id] && j.deps.iter().all(|&d| satisfied[d]))
-            .map(|j| j.id)
-            .collect();
         let mut idle: Vec<usize> = Vec::new();
         let mut in_flight = 0usize;
-        let mut completed = done_upfront;
         let mut alive = workers;
         let mut first_err: Option<anyhow::Error> = None;
 
-        while completed < jobs.len() {
+        while !sched.is_done() {
             // Hand every ready job to an idle worker (unless aborting).
-            while first_err.is_none() && !ready.is_empty() && !idle.is_empty() {
-                let (Some(job), Some(worker)) = (ready.pop_front(), idle.pop()) else {
-                    break;
-                };
-                // Lazily materialize a store-cached trunk snapshot when its
-                // first pending consumer (tail or child trunk) reaches the
-                // front of the queue; the last-consumer bookkeeping below
-                // then releases it.
-                if let Some(src) = snapshot_dep(&graph.jobs()[job].kind) {
-                    if !snapshots.contains_key(&src) {
-                        if let Some((digest, pending)) = cached_trunks.remove(&src) {
-                            let snap =
-                                load_cached_trunk(manifest, graph, store.as_deref(), src, &digest)?;
-                            undispatched_consumers.insert(src, pending);
-                            snapshots.insert(src, Arc::new(snap));
+            while first_err.is_none() && sched.has_ready() && !idle.is_empty() {
+                let Some(worker) = idle.pop() else { break };
+                match sched.next_item(manifest, store.as_deref()) {
+                    Ok(Some(item)) => {
+                        let job = item.job();
+                        if to_worker[worker].send(item).is_err() {
+                            // The worker hung up after announcing itself (it
+                            // cannot do so gracefully, so treat it as lost)
+                            // — keep the job.
+                            alive -= 1;
+                            sched.requeue(job);
+                            break;
                         }
+                        in_flight += 1;
                     }
-                }
-                let item = make_item(graph, job, &snapshots, opts.keep_states || persist)?;
-                if to_worker[worker].send(item).is_err() {
-                    // The worker hung up after announcing itself (it cannot
-                    // do so gracefully, so treat it as lost) — keep the job.
-                    alive -= 1;
-                    ready.push_front(job);
-                    break;
-                }
-                in_flight += 1;
-                if let Some(src) = snapshot_dep(&graph.jobs()[job].kind) {
-                    if let Some(left) = undispatched_consumers.get_mut(&src) {
-                        *left -= 1;
-                        if *left == 0 {
-                            snapshots.remove(&src);
+                    Ok(None) => {
+                        idle.push(worker);
+                        break;
+                    }
+                    Err(e) => {
+                        idle.push(worker);
+                        if first_err.is_none() {
+                            first_err = Some(e);
                         }
+                        break;
                     }
                 }
             }
@@ -241,70 +160,16 @@ pub fn run_graph(
                 Ok(WorkerMsg::Ready { worker }) => idle.push(worker),
                 Ok(WorkerMsg::Done { worker, job, output }) => {
                     in_flight -= 1;
-                    completed += 1;
                     idle.push(worker);
                     match output {
-                        Ok(JobOutput::Snapshot(snap)) => {
-                            // Persist before publication; a store failure
-                            // aborts the sweep cleanly (never deadlocks the
-                            // drain loop).
-                            if let Some(s) = store.as_deref_mut() {
-                                if let JobKind::Trunk { plan_idx, depth, .. } = jobs[job].kind {
-                                    let plan = &graph.plans()[plan_idx];
-                                    let res = trunk_store_key(plan, depth).and_then(
-                                        |(digest, cfg_id)| {
-                                            let entry = manifest.get(cfg_id)?;
-                                            s.store_trunk(&digest, &snap, entry)
-                                        },
-                                    );
-                                    if let Err(e) = res {
-                                        if first_err.is_none() {
-                                            first_err = Some(e.context(format!(
-                                                "persisting trunk snapshot for '{}'",
-                                                plan.name()
-                                            )));
-                                        }
-                                    }
+                        Ok(out) => {
+                            if let Err(e) =
+                                sched.complete(job, out, manifest, store.as_deref_mut())
+                            {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
                                 }
                             }
-                            trunk_flops.insert(job, snap.ledger.total);
-                            let consumers: Vec<JobId> = graph
-                                .dependents(job)
-                                .into_iter()
-                                .filter(|&t| !satisfied[t])
-                                .collect();
-                            // Publish the snapshot only if something will
-                            // consume it — when every tail and child trunk
-                            // was already cache-satisfied the trunk ran
-                            // purely for its FLOP cost, and holding the full
-                            // model state until sweep end would break the
-                            // one-group-at-a-time memory profile.
-                            if !consumers.is_empty() {
-                                undispatched_consumers.insert(job, consumers.len());
-                                snapshots.insert(job, Arc::new(*snap));
-                                ready.extend(consumers);
-                            }
-                        }
-                        Ok(JobOutput::Run { plan_idx, result, state }) => {
-                            let state = state.map(|s| *s);
-                            // Persist even while draining after an error:
-                            // completed work survives the abort and the
-                            // resumed sweep skips it.
-                            if let Some(s) = store.as_deref_mut() {
-                                let plan = &graph.plans()[plan_idx];
-                                if let Err(e) =
-                                    s.store_run(&plan.digest(), &result, state.as_ref())
-                                {
-                                    if first_err.is_none() {
-                                        first_err = Some(e.context(format!(
-                                            "persisting run result for '{}'",
-                                            plan.name()
-                                        )));
-                                    }
-                                }
-                            }
-                            per_plan[plan_idx] =
-                                Some((*result, if opts.keep_states { state } else { None }));
                         }
                         Err(e) => {
                             if first_err.is_none() {
@@ -334,140 +199,15 @@ pub fn run_graph(
         if let Some(e) = first_err {
             return Err(e);
         }
-        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
-    })
-}
-
-/// The trunk whose published snapshot `kind` resumes from, if any: a tail's
-/// trunk, or a depth ≥ 2 ladder trunk's parent.
-fn snapshot_dep(kind: &JobKind) -> Option<JobId> {
-    match *kind {
-        JobKind::Tail { trunk, .. } => Some(trunk),
-        JobKind::Trunk { parent, .. } => parent,
-        JobKind::Standalone { .. } => None,
-    }
-}
-
-/// Store key + stage config id for a trunk at `depth`: the digest of the
-/// shared prefix through that boundary, and the config the snapshot's state
-/// is laid out in (the stage *before* the boundary is crossed).
-fn trunk_store_key(plan: &RunPlan, depth: usize) -> Result<(String, &str)> {
-    let digest = plan.trunk_digest_at(depth).ok_or_else(|| {
-        anyhow!("internal: plan '{}' has no boundary at trunk depth {depth}", plan.name())
-    })?;
-    Ok((digest, plan.stages()[depth - 1].cfg_id.as_str()))
-}
-
-/// Resolve cache hits for a graph against the store (scheduler-side, before
-/// any worker exists): completed runs fill `per_plan`; a cached trunk
-/// contributes its journaled FLOP cost and — when any of its consumers
-/// (tails or child trunks) still has to run — is recorded in
-/// `cached_trunks` for lazy snapshot loading at first-consumer dispatch.
-/// Trunks are scanned in reverse creation order so a child trunk's
-/// satisfaction is known before its parent counts pending consumers. A
-/// trunk journaled but missing its snapshot file with pending consumers is
-/// simply left unsatisfied and re-runs (deterministically identical).
-/// Corrupted committed entries are errors.
-fn prefill_from_store(
-    graph: &JobGraph,
-    store: &RunStore,
-    keep_states: bool,
-    per_plan: &mut [Option<(RunResult, Option<ModelState>)>],
-    trunk_flops: &mut HashMap<JobId, f64>,
-    cached_trunks: &mut HashMap<JobId, (String, usize)>,
-    satisfied: &mut [bool],
-) -> Result<()> {
-    let plans = graph.plans();
-    for j in graph.jobs() {
-        if let Some(idx) = j.kind.result_plan() {
-            if let Some(hit) = store.lookup(&plans[idx], keep_states)? {
-                per_plan[idx] = Some(hit);
-                satisfied[j.id] = true;
-            }
-        }
-    }
-    for j in graph.jobs().iter().rev() {
-        let JobKind::Trunk { plan_idx, depth, .. } = j.kind else { continue };
-        let (digest, _) = trunk_store_key(&plans[plan_idx], depth)?;
-        let Some(tf) = store.trunk_flops(&digest) else { continue };
-        let pending = graph.dependents(j.id).into_iter().filter(|&t| !satisfied[t]).count();
-        if pending == 0 {
-            trunk_flops.insert(j.id, tf);
-            satisfied[j.id] = true;
-        } else if store.has_trunk_snapshot(&digest) {
-            trunk_flops.insert(j.id, tf);
-            cached_trunks.insert(j.id, (digest, pending));
-            satisfied[j.id] = true;
-        }
-    }
-    Ok(())
-}
-
-/// Materialize a store-cached trunk snapshot (lazy counterpart of the
-/// pre-pass), validating its fork step against the trunk job.
-fn load_cached_trunk(
-    manifest: &Manifest,
-    graph: &JobGraph,
-    store: Option<&RunStore>,
-    trunk: JobId,
-    digest: &str,
-) -> Result<DriverSnapshot> {
-    let JobKind::Trunk { plan_idx, fork_step, depth, .. } = graph.jobs()[trunk].kind else {
-        bail!("internal: cached trunk {trunk} is not a trunk job");
-    };
-    let plan = &graph.plans()[plan_idx];
-    let store = store.context("internal: cached trunk recorded without a store")?;
-    let (_, cfg_id) = trunk_store_key(plan, depth)?;
-    let entry = manifest.get(cfg_id)?;
-    store.load_trunk_at(digest, entry, fork_step, plan.name())
-}
-
-/// Materialize the payload for a ready job (cloning the plan; tails and
-/// child trunks also take an `Arc` of their source trunk's published
-/// snapshot).
-fn make_item(
-    graph: &JobGraph,
-    job: JobId,
-    snapshots: &HashMap<JobId, Arc<DriverSnapshot>>,
-    keep_states: bool,
-) -> Result<WorkItem> {
-    let spec = &graph.jobs()[job];
-    let take_snap = |trunk: JobId, what: &str| {
-        snapshots
-            .get(&trunk)
-            .cloned()
-            .with_context(|| format!("{what} scheduled before its trunk snapshot"))
-    };
-    Ok(match spec.kind {
-        JobKind::Trunk { plan_idx, fork_step, parent, .. } => WorkItem::Trunk {
-            job,
-            plan: graph.plans()[plan_idx].clone(),
-            fork_step,
-            snap: match parent {
-                Some(p) => Some(take_snap(p, "ladder trunk")?),
-                None => None,
-            },
-        },
-        JobKind::Tail { plan_idx, trunk } => WorkItem::Run {
-            job,
-            plan_idx,
-            plan: graph.plans()[plan_idx].clone(),
-            snap: Some(take_snap(trunk, "tail job")?),
-            keep_state: keep_states,
-        },
-        JobKind::Standalone { plan_idx } => WorkItem::Run {
-            job,
-            plan_idx,
-            plan: graph.plans()[plan_idx].clone(),
-            snap: None,
-            keep_state: keep_states,
-        },
+        sched.assemble()
     })
 }
 
 /// One worker thread: construct the thread-local engine, then serve jobs
-/// until the scheduler closes the job channel.
-fn worker_loop(
+/// until the scheduler closes the job channel. Shared verbatim by the
+/// in-process pool and the fabric worker's engine pool — the execution
+/// semantics of a job cannot depend on which transport delivered it.
+pub(crate) fn worker_loop(
     worker: usize,
     manifest: &Manifest,
     corpus: &Corpus,

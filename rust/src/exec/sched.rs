@@ -1,0 +1,459 @@
+//! The demand-driven job scheduler, extracted from the in-process pool so
+//! the fabric coordinator (DESIGN.md §9) can drive the *same* state machine
+//! over TCP: ready-queue management, store pre-pass, lazy cached-trunk
+//! materialization, trunk-snapshot publication, completion bookkeeping, and
+//! canonical outcome assembly. The pool ([`super::pool::run_graph`]) and the
+//! fabric server ([`crate::fabric`]) are just two transports for the same
+//! [`WorkItem`]/[`JobOutput`] currency — which is why a distributed sweep is
+//! bit-identical to a local one.
+//!
+//! Reassignment safety: consumer bookkeeping releases a published trunk
+//! snapshot when its last consumer **completes** (not when it is
+//! dispatched), so a job lost to a dead worker can always be re-issued with
+//! its fork snapshot intact. Completions are idempotent — a duplicate
+//! report for an already-completed job is ignored — which makes the
+//! coordinator's journal the single commit point even when a worker dies
+//! mid-report.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::DriverSnapshot;
+use crate::coordinator::{RunPlan, RunResult, SweepOutcome};
+use crate::runtime::{Manifest, ModelState};
+use crate::store::RunStore;
+
+use super::graph::{JobGraph, JobId, JobKind};
+
+/// Work sent to a worker. Only plain `Send` data — engines never move.
+pub(crate) enum WorkItem {
+    Trunk {
+        job: JobId,
+        plan: RunPlan,
+        fork_step: usize,
+        /// Parent trunk's snapshot for depth ≥ 2 (ladder) trunks; `None`
+        /// for depth-1 trunks, which start from initialization.
+        snap: Option<Arc<DriverSnapshot>>,
+    },
+    Run {
+        job: JobId,
+        plan_idx: usize,
+        plan: RunPlan,
+        /// Fork snapshot for tail jobs; `None` for standalone runs.
+        snap: Option<Arc<DriverSnapshot>>,
+        keep_state: bool,
+    },
+}
+
+impl WorkItem {
+    pub(crate) fn job(&self) -> JobId {
+        match *self {
+            WorkItem::Trunk { job, .. } | WorkItem::Run { job, .. } => job,
+        }
+    }
+}
+
+/// What a completed job hands back to the scheduler.
+pub(crate) enum JobOutput {
+    /// A trunk's fork snapshot (its ledger total is the shared-prefix cost).
+    Snapshot(Box<DriverSnapshot>),
+    /// A finished run.
+    Run {
+        plan_idx: usize,
+        result: Box<RunResult>,
+        state: Option<Box<ModelState>>,
+    },
+}
+
+/// The transport-agnostic scheduler state machine. Construction runs the
+/// store pre-pass; [`Scheduler::next_item`] hands out ready jobs;
+/// [`Scheduler::complete`] lands outputs (persisting through the attached
+/// store — the single commit point), publishes trunk snapshots, and unlocks
+/// dependents; [`Scheduler::assemble`] folds the per-plan results in the
+/// serial sweep's canonical order.
+pub(crate) struct Scheduler<'g> {
+    graph: &'g JobGraph,
+    keep_states: bool,
+    /// Run jobs also materialize final states when a store will persist them.
+    persist: bool,
+    per_plan: Vec<Option<(RunResult, Option<ModelState>)>>,
+    trunk_flops: HashMap<JobId, f64>,
+    /// Published fork snapshots, held until the last pending consumer — a
+    /// tail, or a deeper ladder trunk resuming from it — has *completed*
+    /// (in-flight `WorkItem`s keep their own Arcs); `trunk_flops` outlives
+    /// them for the final accounting. Peak host memory therefore matches
+    /// the serial sweep's one-group-at-a-time profile, not #groups.
+    snapshots: HashMap<JobId, Arc<DriverSnapshot>>,
+    /// Trunk job → number of its consumers not yet completed.
+    pending_consumers: HashMap<JobId, usize>,
+    /// Trunks satisfied from the store whose snapshot is still on disk:
+    /// digest + pending-consumer count. The snapshot itself is materialized
+    /// lazily, when the first pending consumer is dispatched — eagerly
+    /// loading every cached trunk up front would hold #groups full model
+    /// states at once.
+    cached_trunks: HashMap<JobId, (String, usize)>,
+    /// Jobs satisfied by the store pre-pass (never dispatched).
+    satisfied: Vec<bool>,
+    /// Jobs whose output has landed (pre-pass hits included).
+    completed: Vec<bool>,
+    ready: VecDeque<JobId>,
+    done: usize,
+}
+
+impl<'g> Scheduler<'g> {
+    /// Build the scheduler for `graph`, running the store pre-pass when a
+    /// store is attached. Returns the scheduler and the number of jobs
+    /// satisfied up-front (a fully warm store needs zero dispatches).
+    pub(crate) fn new(
+        graph: &'g JobGraph,
+        keep_states: bool,
+        persist: bool,
+        store: Option<&RunStore>,
+    ) -> Result<(Scheduler<'g>, usize)> {
+        let jobs = graph.jobs();
+        if jobs.is_empty() {
+            bail!("job graph has no jobs");
+        }
+        let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
+            graph.plans().iter().map(|_| None).collect();
+        let mut trunk_flops = HashMap::new();
+        let mut cached_trunks = HashMap::new();
+        let mut satisfied = vec![false; jobs.len()];
+        if let Some(s) = store {
+            prefill_from_store(
+                graph,
+                s,
+                keep_states,
+                &mut per_plan,
+                &mut trunk_flops,
+                &mut cached_trunks,
+                &mut satisfied,
+            )?;
+        }
+        let done = satisfied.iter().filter(|&&b| b).count();
+        let ready: VecDeque<JobId> = jobs
+            .iter()
+            .filter(|j| !satisfied[j.id] && j.deps.iter().all(|&d| satisfied[d]))
+            .map(|j| j.id)
+            .collect();
+        Ok((
+            Scheduler {
+                graph,
+                keep_states,
+                persist,
+                per_plan,
+                trunk_flops,
+                snapshots: HashMap::new(),
+                pending_consumers: HashMap::new(),
+                cached_trunks,
+                completed: satisfied.clone(),
+                satisfied,
+                ready,
+                done,
+            },
+            done,
+        ))
+    }
+
+    pub(crate) fn graph(&self) -> &'g JobGraph {
+        self.graph
+    }
+
+    /// Every job has landed (store pre-pass included).
+    pub(crate) fn is_done(&self) -> bool {
+        self.done == self.graph.jobs().len()
+    }
+
+    pub(crate) fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    /// Pop the next ready job and materialize its payload (cloning the
+    /// plan; lazily loading a store-cached source trunk's snapshot on its
+    /// first consumer). Returns `None` when nothing is ready *right now* —
+    /// more jobs may become ready as completions land.
+    pub(crate) fn next_item(
+        &mut self,
+        manifest: &Manifest,
+        store: Option<&RunStore>,
+    ) -> Result<Option<WorkItem>> {
+        let Some(job) = self.ready.pop_front() else {
+            return Ok(None);
+        };
+        if let Some(src) = snapshot_dep(&self.graph.jobs()[job].kind) {
+            if !self.snapshots.contains_key(&src) {
+                if let Some((digest, pending)) = self.cached_trunks.remove(&src) {
+                    let snap = load_cached_trunk(manifest, self.graph, store, src, &digest)?;
+                    self.pending_consumers.insert(src, pending);
+                    self.snapshots.insert(src, Arc::new(snap));
+                }
+            }
+        }
+        let item = make_item(self.graph, job, &self.snapshots, self.keep_states || self.persist)?;
+        Ok(Some(item))
+    }
+
+    /// Put a dispatched-but-unfinished job back at the *front* of the ready
+    /// queue (dead-worker reassignment: jobs are pure functions of their
+    /// plan + fork snapshot, so re-execution is safe and bit-identical).
+    pub(crate) fn requeue(&mut self, job: JobId) {
+        if !self.completed[job] {
+            self.ready.push_front(job);
+        }
+    }
+
+    /// Land one job's output: persist it through `store` (the commit
+    /// point), record its result, publish its fork snapshot to unlock
+    /// consumers, and release its own source snapshot once the last sibling
+    /// consumer has completed. Returns `Ok(false)` for a duplicate report
+    /// of an already-completed job (ignored — reassignment can race a dying
+    /// worker's last report). A returned error is a **persistence** failure:
+    /// all in-memory bookkeeping has still been applied, so the caller can
+    /// keep draining in-flight jobs and abort with this as the first error.
+    pub(crate) fn complete(
+        &mut self,
+        job: JobId,
+        output: JobOutput,
+        manifest: &Manifest,
+        mut store: Option<&mut RunStore>,
+    ) -> Result<bool> {
+        if self.completed[job] {
+            return Ok(false);
+        }
+        self.completed[job] = true;
+        self.done += 1;
+        let mut persist_err: Option<anyhow::Error> = None;
+        match output {
+            JobOutput::Snapshot(snap) => {
+                // Persist before publication; a store failure aborts the
+                // sweep cleanly (never deadlocks the drain loop).
+                if let Some(s) = store.as_deref_mut() {
+                    if let JobKind::Trunk { plan_idx, depth, .. } = self.graph.jobs()[job].kind {
+                        let plan = &self.graph.plans()[plan_idx];
+                        let res = trunk_store_key(plan, depth).and_then(|(digest, cfg_id)| {
+                            let entry = manifest.get(cfg_id)?;
+                            s.store_trunk(&digest, &snap, entry)
+                        });
+                        if let Err(e) = res {
+                            persist_err = Some(e.context(format!(
+                                "persisting trunk snapshot for '{}'",
+                                plan.name()
+                            )));
+                        }
+                    }
+                }
+                self.trunk_flops.insert(job, snap.ledger.total);
+                let consumers: Vec<JobId> = self
+                    .graph
+                    .dependents(job)
+                    .into_iter()
+                    .filter(|&t| !self.satisfied[t])
+                    .collect();
+                // Publish the snapshot only if something will consume it —
+                // when every tail and child trunk was already
+                // cache-satisfied the trunk ran purely for its FLOP cost,
+                // and holding the full model state until sweep end would
+                // break the one-group-at-a-time memory profile.
+                if !consumers.is_empty() {
+                    self.pending_consumers.insert(job, consumers.len());
+                    self.snapshots.insert(job, Arc::new(*snap));
+                    self.ready.extend(consumers);
+                }
+            }
+            JobOutput::Run { plan_idx, result, state } => {
+                let state = state.map(|s| *s);
+                // Persist even while draining after an error: completed
+                // work survives the abort and the resumed sweep skips it.
+                if let Some(s) = store.as_deref_mut() {
+                    let plan = &self.graph.plans()[plan_idx];
+                    if let Err(e) = s.store_run(&plan.digest(), &result, state.as_ref()) {
+                        persist_err = Some(
+                            e.context(format!("persisting run result for '{}'", plan.name())),
+                        );
+                    }
+                }
+                self.per_plan[plan_idx] =
+                    Some((*result, if self.keep_states { state } else { None }));
+            }
+        }
+        if let Some(src) = snapshot_dep(&self.graph.jobs()[job].kind) {
+            if let Some(left) = self.pending_consumers.get_mut(&src) {
+                *left -= 1;
+                if *left == 0 {
+                    self.pending_consumers.remove(&src);
+                    self.snapshots.remove(&src);
+                }
+            }
+        }
+        match persist_err {
+            Some(e) => Err(e),
+            None => Ok(true),
+        }
+    }
+
+    /// Fold the landed results into the outcome, in the serial sweep's
+    /// canonical group order (bit-exact FLOP accumulation).
+    pub(crate) fn assemble(self) -> Result<SweepOutcome> {
+        let Scheduler { graph, per_plan, trunk_flops, .. } = self;
+        graph.assemble(per_plan, |job| trunk_flops.get(&job).copied())
+    }
+}
+
+/// The trunk whose published snapshot `kind` resumes from, if any: a tail's
+/// trunk, or a depth ≥ 2 ladder trunk's parent.
+pub(crate) fn snapshot_dep(kind: &JobKind) -> Option<JobId> {
+    match *kind {
+        JobKind::Tail { trunk, .. } => Some(trunk),
+        JobKind::Trunk { parent, .. } => parent,
+        JobKind::Standalone { .. } => None,
+    }
+}
+
+/// Store key + stage config id for a trunk at `depth`: the digest of the
+/// shared prefix through that boundary, and the config the snapshot's state
+/// is laid out in (the stage *before* the boundary is crossed).
+pub(crate) fn trunk_store_key(plan: &RunPlan, depth: usize) -> Result<(String, &str)> {
+    let digest = plan.trunk_digest_at(depth).ok_or_else(|| {
+        anyhow!("internal: plan '{}' has no boundary at trunk depth {depth}", plan.name())
+    })?;
+    Ok((digest, plan.stages()[depth - 1].cfg_id.as_str()))
+}
+
+/// Every store key a graph references: the plan digests of all runs plus
+/// the trunk digests of all shared prefixes — the liveness set
+/// [`RunStore::record_refs`] journals for `repro store gc`.
+pub(crate) fn graph_refs(graph: &JobGraph) -> Result<(Vec<String>, Vec<String>)> {
+    let mut runs: Vec<String> = graph.plans().iter().map(|p| p.digest()).collect();
+    let mut trunks = Vec::new();
+    for j in graph.jobs() {
+        if let JobKind::Trunk { plan_idx, depth, .. } = j.kind {
+            let (digest, _) = trunk_store_key(&graph.plans()[plan_idx], depth)?;
+            trunks.push(digest);
+        }
+    }
+    runs.sort();
+    runs.dedup();
+    trunks.sort();
+    trunks.dedup();
+    Ok((runs, trunks))
+}
+
+/// Journal a graph's reference set into `store` (see [`graph_refs`]);
+/// called by every store-attached sweep path before execution, so even an
+/// interrupted sweep's partial artifacts stay GC-live.
+pub(crate) fn record_graph_refs(store: &mut RunStore, graph: &JobGraph) -> Result<()> {
+    let (runs, trunks) = graph_refs(graph)?;
+    store.record_refs(
+        runs.iter().map(String::as_str),
+        trunks.iter().map(String::as_str),
+    )
+}
+
+/// Resolve cache hits for a graph against the store (scheduler-side, before
+/// any worker exists): completed runs fill `per_plan`; a cached trunk
+/// contributes its journaled FLOP cost and — when any of its consumers
+/// (tails or child trunks) still has to run — is recorded in
+/// `cached_trunks` for lazy snapshot loading at first-consumer dispatch.
+/// Trunks are scanned in reverse creation order so a child trunk's
+/// satisfaction is known before its parent counts pending consumers. A
+/// trunk journaled but missing its snapshot file with pending consumers is
+/// simply left unsatisfied and re-runs (deterministically identical).
+/// Corrupted committed entries are errors.
+fn prefill_from_store(
+    graph: &JobGraph,
+    store: &RunStore,
+    keep_states: bool,
+    per_plan: &mut [Option<(RunResult, Option<ModelState>)>],
+    trunk_flops: &mut HashMap<JobId, f64>,
+    cached_trunks: &mut HashMap<JobId, (String, usize)>,
+    satisfied: &mut [bool],
+) -> Result<()> {
+    let plans = graph.plans();
+    for j in graph.jobs() {
+        if let Some(idx) = j.kind.result_plan() {
+            if let Some(hit) = store.lookup(&plans[idx], keep_states)? {
+                per_plan[idx] = Some(hit);
+                satisfied[j.id] = true;
+            }
+        }
+    }
+    for j in graph.jobs().iter().rev() {
+        let JobKind::Trunk { plan_idx, depth, .. } = j.kind else { continue };
+        let (digest, _) = trunk_store_key(&plans[plan_idx], depth)?;
+        let Some(tf) = store.trunk_flops(&digest) else { continue };
+        let pending = graph.dependents(j.id).into_iter().filter(|&t| !satisfied[t]).count();
+        if pending == 0 {
+            trunk_flops.insert(j.id, tf);
+            satisfied[j.id] = true;
+        } else if store.has_trunk_snapshot(&digest) {
+            trunk_flops.insert(j.id, tf);
+            cached_trunks.insert(j.id, (digest, pending));
+            satisfied[j.id] = true;
+        }
+    }
+    Ok(())
+}
+
+/// Materialize a store-cached trunk snapshot (lazy counterpart of the
+/// pre-pass), validating its fork step against the trunk job.
+fn load_cached_trunk(
+    manifest: &Manifest,
+    graph: &JobGraph,
+    store: Option<&RunStore>,
+    trunk: JobId,
+    digest: &str,
+) -> Result<DriverSnapshot> {
+    let JobKind::Trunk { plan_idx, fork_step, depth, .. } = graph.jobs()[trunk].kind else {
+        bail!("internal: cached trunk {trunk} is not a trunk job");
+    };
+    let plan = &graph.plans()[plan_idx];
+    let store = store.context("internal: cached trunk recorded without a store")?;
+    let (_, cfg_id) = trunk_store_key(plan, depth)?;
+    let entry = manifest.get(cfg_id)?;
+    store.load_trunk_at(digest, entry, fork_step, plan.name())
+}
+
+/// Materialize the payload for a ready job (cloning the plan; tails and
+/// child trunks also take an `Arc` of their source trunk's published
+/// snapshot).
+fn make_item(
+    graph: &JobGraph,
+    job: JobId,
+    snapshots: &HashMap<JobId, Arc<DriverSnapshot>>,
+    keep_states: bool,
+) -> Result<WorkItem> {
+    let spec = &graph.jobs()[job];
+    let take_snap = |trunk: JobId, what: &str| {
+        snapshots
+            .get(&trunk)
+            .cloned()
+            .with_context(|| format!("{what} scheduled before its trunk snapshot"))
+    };
+    Ok(match spec.kind {
+        JobKind::Trunk { plan_idx, fork_step, parent, .. } => WorkItem::Trunk {
+            job,
+            plan: graph.plans()[plan_idx].clone(),
+            fork_step,
+            snap: match parent {
+                Some(p) => Some(take_snap(p, "ladder trunk")?),
+                None => None,
+            },
+        },
+        JobKind::Tail { plan_idx, trunk } => WorkItem::Run {
+            job,
+            plan_idx,
+            plan: graph.plans()[plan_idx].clone(),
+            snap: Some(take_snap(trunk, "tail job")?),
+            keep_state: keep_states,
+        },
+        JobKind::Standalone { plan_idx } => WorkItem::Run {
+            job,
+            plan_idx,
+            plan: graph.plans()[plan_idx].clone(),
+            snap: None,
+            keep_state: keep_states,
+        },
+    })
+}

@@ -1,0 +1,31 @@
+//! Distributed sweep fabric: the in-process scheduler stretched over TCP
+//! (DESIGN.md §9).
+//!
+//! Three pieces:
+//!
+//! - [`wire`](self): `DPTNET01` length-prefixed frames carrying the exact
+//!   on-disk byte forms — plans through the `RunPlan` codec, snapshots as
+//!   `DPTDRV01`, results as `DPTRUN01` run entries — plus a versioned
+//!   handshake that refuses mismatched builds, stores, or corpora at
+//!   connect time instead of mid-sweep.
+//! - [`serve`]: the coordinator. Owns the [`crate::exec::sched::Scheduler`],
+//!   the journal, and the shared artifact repository; local engine threads
+//!   and remote connections draw ready jobs from the same queue. The single
+//!   process that ever writes the store.
+//! - [`worker`]: a stateless engine pool that connects, handshakes, and
+//!   executes — its engine threads are literally the in-process pool's
+//!   `worker_loop`.
+//!
+//! **Determinism contract.** A sweep spread over any fleet — including one
+//! that loses workers mid-flight and reassigns their jobs — assembles
+//! outcomes bit-identical to the serial sweep: every job is a pure function
+//! of its plan (+ fork snapshot), the transport moves bytes that are already
+//! canonical file formats, and the coordinator folds results in serial
+//! group order regardless of arrival order.
+
+pub mod serve;
+pub(crate) mod wire;
+pub mod worker;
+
+pub use serve::{FabricOptions, FabricServer, FabricStats};
+pub use worker::{run_worker, WorkerOptions, WorkerReport};

@@ -1,0 +1,666 @@
+//! The fabric coordinator: one process that owns the [`Scheduler`], the
+//! journal, and the listener; any number of worker processes (plus optional
+//! in-process engine threads) drain the same ready queue over `DPTNET01`
+//! frames.
+//!
+//! Topology (DESIGN.md §9): the coordinator lowers the sweep, runs the
+//! store pre-pass, and then treats every announced engine slot — local
+//! thread or remote connection — identically: pop a ready job, ship the
+//! plan plus its fork snapshot inline, land the `Done`. The coordinator is
+//! the **only** process that touches the store: workers are stateless
+//! engines, so the journal stays the single commit point and can never see
+//! a duplicate or lost entry regardless of how many processes participate.
+//!
+//! **Failure semantics.** Liveness is observed per connection: a worker
+//! that disconnects, errors a write, or goes silent past the heartbeat
+//! timeout is dropped, and every job it held in flight is pushed back to
+//! the *front* of the ready queue. Reassignment is safe because jobs are
+//! pure functions of their plan + fork snapshot, and the scheduler keeps a
+//! trunk snapshot published until its last consumer *completes* — a
+//! re-issued job always finds its snapshot intact. Completions are
+//! idempotent, so a job that raced its dying worker's final report is
+//! executed at most once *as far as the journal is concerned* even if it
+//! was dispatched twice. The result: any fleet size, any interleaving, any
+//! mid-sweep worker death — the assembled curves, states, and
+//! `executed_flops` are bit-identical to a serial sweep.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{ProgressSink, SweepOutcome};
+use crate::data::Corpus;
+use crate::exec::pool::{worker_loop, WorkerMsg};
+use crate::exec::sched::{record_graph_refs, JobOutput, Scheduler, WorkItem};
+use crate::exec::{JobGraph, JobId};
+use crate::runtime::Manifest;
+use crate::store::{RunStore, STORE_VERSION};
+
+use super::wire::{self, Msg};
+
+/// Coordinator configuration for one distributed graph execution.
+#[derive(Debug, Clone)]
+pub struct FabricOptions {
+    /// In-process engine threads drawing from the same queue as remote
+    /// workers (0 = serve remote workers only).
+    pub local_workers: usize,
+    /// Shared whole-line progress sink for local workers' drivers.
+    pub progress: Option<ProgressSink>,
+    /// Materialize each run's final model state into the outcome.
+    pub keep_states: bool,
+    /// A connection silent for longer than this is declared dead and its
+    /// in-flight jobs are reassigned (workers heartbeat every ~2s).
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for FabricOptions {
+    fn default() -> FabricOptions {
+        FabricOptions {
+            local_workers: 0,
+            progress: None,
+            keep_states: false,
+            heartbeat_timeout: Duration::from_secs(20),
+        }
+    }
+}
+
+/// What the fabric actually did — the observability half of the
+/// zero-dispatch warm-rerun contract (`dispatched_jobs == 0` on a fully
+/// warm store) and the reassignment tests.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Jobs satisfied by the store pre-pass (never dispatched anywhere).
+    pub cached_jobs: usize,
+    /// Jobs handed to an engine (local + remote, re-dispatches included).
+    pub dispatched_jobs: usize,
+    /// Dispatches to in-process engine threads.
+    pub local_jobs: usize,
+    /// Dispatches to remote workers.
+    pub remote_jobs: usize,
+    /// Jobs pulled back from a dead connection and re-queued.
+    pub reassigned_jobs: usize,
+    /// Handshaken connections that died before shutdown.
+    pub workers_lost: usize,
+    /// Connections accepted (handshake outcome regardless).
+    pub connections: usize,
+}
+
+/// A bound coordinator listener; [`FabricServer::run`] executes one graph
+/// over it. Binding is separate from running so tests and the CLI can
+/// learn the ephemeral port (`--listen 127.0.0.1:0`) before workers start.
+pub struct FabricServer {
+    listener: TcpListener,
+}
+
+/// Per-connection coordinator state (the write half; a dedicated reader
+/// thread owns the read half and forwards decoded frames as events).
+struct Conn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    /// Handshake completed (Hello verified, Welcome sent).
+    active: bool,
+    /// slot → job currently executing there.
+    inflight: HashMap<u64, JobId>,
+    last_seen: Instant,
+}
+
+/// Everything that flows into the coordinator's single event loop.
+enum Event {
+    Pool(WorkerMsg),
+    Accepted { conn: usize, stream: TcpStream, peer: SocketAddr },
+    Frame { conn: usize, msg: Msg },
+    Gone { conn: usize },
+}
+
+impl FabricServer {
+    /// Bind the coordinator listener. `addr` is anything
+    /// `ToSocketAddrs` accepts (`127.0.0.1:0` for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<FabricServer> {
+        let listener = TcpListener::bind(addr).with_context(|| {
+            format!(
+                "binding fabric coordinator listener on '{addr}' \
+                 (malformed address, or port already in use?)"
+            )
+        })?;
+        Ok(FabricServer { listener })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Into::into)
+    }
+
+    /// Execute `graph` over the fabric: local engine threads and every
+    /// worker that connects drain one ready queue; the outcome is
+    /// bit-identical to [`crate::coordinator::Sweep::run`]. With a store
+    /// attached the pre-pass serves cached jobs first (a fully warm store
+    /// returns before a single byte hits the network) and every completion
+    /// is journaled coordinator-side as it lands.
+    pub fn run(
+        self,
+        manifest: &Manifest,
+        corpus: &Corpus,
+        graph: &JobGraph,
+        opts: &FabricOptions,
+        mut store: Option<&mut RunStore>,
+    ) -> Result<(SweepOutcome, FabricStats)> {
+        if graph.jobs().is_empty() {
+            bail!("job graph has no jobs");
+        }
+        // GC liveness: reference the sweep's keys before executing.
+        if let Some(s) = store.as_deref_mut() {
+            record_graph_refs(s, graph)?;
+        }
+        let (mut sched, done_upfront) =
+            Scheduler::new(graph, opts.keep_states, store.is_some(), store.as_deref())?;
+        let mut stats = FabricStats { cached_jobs: done_upfront, ..FabricStats::default() };
+        if sched.is_done() {
+            // Fully warm store: zero dispatches, zero network traffic.
+            return Ok((sched.assemble()?, stats));
+        }
+        let expected_salt = RunStore::context_salt(manifest, corpus);
+        let expected_probe = wire::codec_probe()?;
+        let remaining = graph.jobs().len() - done_upfront;
+        let local_workers = opts.local_workers.min(remaining);
+        let listener = self.listener;
+        let wake_addr = listener.local_addr().ok();
+        let shutting_down = AtomicBool::new(false);
+        let shutting_down = &shutting_down;
+
+        thread::scope(|scope| -> Result<(SweepOutcome, FabricStats)> {
+            let (event_tx, event_rx) = channel::<Event>();
+
+            // Local engine pool: the exact worker loop the in-process pool
+            // uses, bridged into the event stream.
+            let (pool_tx, pool_rx) = channel::<WorkerMsg>();
+            let mut to_local: Vec<Sender<WorkItem>> = Vec::with_capacity(local_workers);
+            for w in 0..local_workers {
+                let (tx, rx) = channel::<WorkItem>();
+                to_local.push(tx);
+                let replies = pool_tx.clone();
+                let progress = opts.progress.clone();
+                scope.spawn(move || worker_loop(w, manifest, corpus, rx, replies, progress));
+            }
+            drop(pool_tx);
+            {
+                let tx = event_tx.clone();
+                scope.spawn(move || {
+                    for msg in pool_rx {
+                        if tx.send(Event::Pool(msg)).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+
+            // Acceptor: hand each connection's write half to the event
+            // loop, then spawn its frame reader. The Accepted event is sent
+            // *before* the reader exists, so the loop always learns about a
+            // connection before any of its frames.
+            {
+                let acceptor_tx = event_tx.clone();
+                scope.spawn(move || {
+                    let mut next_conn = 0usize;
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, peer)) => {
+                                if shutting_down.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                let conn = next_conn;
+                                next_conn += 1;
+                                let Ok(read_half) = stream.try_clone() else { continue };
+                                stream.set_nodelay(true).ok();
+                                if acceptor_tx.send(Event::Accepted { conn, stream, peer }).is_err()
+                                {
+                                    return;
+                                }
+                                let tx = acceptor_tx.clone();
+                                scope.spawn(move || read_frames(conn, read_half, manifest, tx));
+                            }
+                            Err(_) => {
+                                if shutting_down.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+
+            let mut idle_local: Vec<usize> = Vec::new();
+            let mut idle_remote: VecDeque<(usize, u64)> = VecDeque::new();
+            let mut conns: HashMap<usize, Conn> = HashMap::new();
+            let mut in_flight = 0usize;
+            let mut alive_local = local_workers;
+            let mut ever_connected = false;
+            let mut first_err: Option<anyhow::Error> = None;
+
+            while !sched.is_done() {
+                // Hand every ready job to an idle engine (unless aborting).
+                while first_err.is_none() && sched.has_ready() {
+                    if let Some(worker) = idle_local.pop() {
+                        match sched.next_item(manifest, store.as_deref()) {
+                            Ok(Some(item)) => {
+                                let job = item.job();
+                                if to_local[worker].send(item).is_err() {
+                                    // Hung up after announcing itself: lost.
+                                    alive_local -= 1;
+                                    sched.requeue(job);
+                                    continue;
+                                }
+                                in_flight += 1;
+                                stats.dispatched_jobs += 1;
+                                stats.local_jobs += 1;
+                            }
+                            Ok(None) => {
+                                idle_local.push(worker);
+                                break;
+                            }
+                            Err(e) => {
+                                idle_local.push(worker);
+                                first_err = Some(e);
+                                break;
+                            }
+                        }
+                    } else if let Some((conn_id, slot)) = idle_remote.pop_front() {
+                        if !conns.contains_key(&conn_id) {
+                            continue; // connection died while the slot was queued
+                        }
+                        match sched.next_item(manifest, store.as_deref()) {
+                            Ok(Some(item)) => {
+                                let job = item.job();
+                                let msg = Msg::Assign { slot, item };
+                                let conn = conns.get_mut(&conn_id).expect("checked above");
+                                conn.inflight.insert(slot, job);
+                                in_flight += 1;
+                                stats.dispatched_jobs += 1;
+                                stats.remote_jobs += 1;
+                                if wire::send_msg(&mut conn.stream, &msg, manifest).is_err() {
+                                    drop_conn(
+                                        conn_id,
+                                        &mut conns,
+                                        &mut idle_remote,
+                                        &mut sched,
+                                        &mut in_flight,
+                                        &mut stats,
+                                    );
+                                }
+                            }
+                            Ok(None) => {
+                                idle_remote.push_front((conn_id, slot));
+                                break;
+                            }
+                            Err(e) => {
+                                idle_remote.push_front((conn_id, slot));
+                                first_err = Some(e);
+                                break;
+                            }
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                if first_err.is_some() && in_flight == 0 {
+                    break;
+                }
+                // Stall guard: once a fleet existed, losing all of it with
+                // work remaining is an error, not an infinite wait. (With
+                // no fleet yet — remote-only serve before the first worker
+                // connects — waiting is the job.)
+                if alive_local == 0
+                    && conns.is_empty()
+                    && in_flight == 0
+                    && first_err.is_none()
+                    && (local_workers > 0 || ever_connected)
+                {
+                    first_err = Some(anyhow!(
+                        "fabric fleet drained: every worker exited or disconnected with work remaining"
+                    ));
+                    break;
+                }
+
+                match event_rx.recv_timeout(Duration::from_millis(250)) {
+                    Ok(Event::Pool(WorkerMsg::Ready { worker })) => idle_local.push(worker),
+                    Ok(Event::Pool(WorkerMsg::Done { worker, job, output })) => {
+                        in_flight -= 1;
+                        idle_local.push(worker);
+                        land(&mut sched, job, output, manifest, &mut store, &mut first_err);
+                    }
+                    Ok(Event::Pool(WorkerMsg::Dead { error })) => {
+                        alive_local -= 1;
+                        if first_err.is_none() {
+                            first_err = Some(error);
+                        }
+                    }
+                    Ok(Event::Accepted { conn, mut stream, peer }) => {
+                        stats.connections += 1;
+                        ever_connected = true;
+                        if wire::write_magic(&mut stream).is_ok() {
+                            conns.insert(
+                                conn,
+                                Conn {
+                                    stream,
+                                    peer,
+                                    active: false,
+                                    inflight: HashMap::new(),
+                                    last_seen: Instant::now(),
+                                },
+                            );
+                        }
+                    }
+                    Ok(Event::Frame { conn, msg }) => {
+                        if let Some(c) = conns.get_mut(&conn) {
+                            c.last_seen = Instant::now();
+                        } else {
+                            continue; // frames racing a drop are stale
+                        }
+                        match msg {
+                            Msg::Hello { proto, store_version, salt, probe } => {
+                                let reason = hello_mismatch(
+                                    proto,
+                                    store_version,
+                                    &salt,
+                                    &probe,
+                                    &expected_salt,
+                                    &expected_probe,
+                                );
+                                let c = conns.get_mut(&conn).expect("checked above");
+                                match reason {
+                                    Some(reason) => {
+                                        let _ = wire::send_msg(
+                                            &mut c.stream,
+                                            &Msg::Reject { reason },
+                                            manifest,
+                                        );
+                                        let _ = c.stream.shutdown(Shutdown::Both);
+                                        conns.remove(&conn);
+                                    }
+                                    None => {
+                                        c.active = true;
+                                        if wire::send_msg(&mut c.stream, &Msg::Welcome, manifest)
+                                            .is_err()
+                                        {
+                                            drop_conn(
+                                                conn,
+                                                &mut conns,
+                                                &mut idle_remote,
+                                                &mut sched,
+                                                &mut in_flight,
+                                                &mut stats,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            Msg::Ready { slot } => {
+                                let active = conns.get(&conn).is_some_and(|c| c.active);
+                                if active {
+                                    idle_remote.push_back((conn, slot));
+                                }
+                            }
+                            Msg::Done { slot, job, output } => {
+                                let expected =
+                                    conns.get_mut(&conn).and_then(|c| c.inflight.remove(&slot));
+                                match expected {
+                                    Some(expected) if expected == job => {
+                                        in_flight -= 1;
+                                        idle_remote.push_back((conn, slot));
+                                        let peer =
+                                            conns.get(&conn).map(|c| c.peer.to_string());
+                                        let out = output.map_err(|m| {
+                                            anyhow!(
+                                                "remote worker {}: {m}",
+                                                peer.unwrap_or_default()
+                                            )
+                                        });
+                                        land(
+                                            &mut sched,
+                                            job,
+                                            out,
+                                            manifest,
+                                            &mut store,
+                                            &mut first_err,
+                                        );
+                                    }
+                                    Some(expected) => {
+                                        // The worker reported a job we never
+                                        // assigned to that slot: protocol
+                                        // confusion. Recover the assigned
+                                        // job, then cut the worker loose.
+                                        in_flight -= 1;
+                                        sched.requeue(expected);
+                                        stats.reassigned_jobs += 1;
+                                        drop_conn(
+                                            conn,
+                                            &mut conns,
+                                            &mut idle_remote,
+                                            &mut sched,
+                                            &mut in_flight,
+                                            &mut stats,
+                                        );
+                                    }
+                                    None => {} // stale report for a reassigned slot
+                                }
+                            }
+                            Msg::Heartbeat => {}
+                            // Nothing else is valid coming *from* a worker.
+                            Msg::Welcome
+                            | Msg::Reject { .. }
+                            | Msg::Assign { .. }
+                            | Msg::Shutdown => {
+                                drop_conn(
+                                    conn,
+                                    &mut conns,
+                                    &mut idle_remote,
+                                    &mut sched,
+                                    &mut in_flight,
+                                    &mut stats,
+                                );
+                            }
+                        }
+                    }
+                    Ok(Event::Gone { conn }) => {
+                        drop_conn(
+                            conn,
+                            &mut conns,
+                            &mut idle_remote,
+                            &mut sched,
+                            &mut in_flight,
+                            &mut stats,
+                        );
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if first_err.is_none() {
+                            first_err =
+                                Some(anyhow!("fabric event loop disconnected unexpectedly"));
+                        }
+                        break;
+                    }
+                }
+
+                // Liveness scan: reassign everything held by silent workers.
+                let now = Instant::now();
+                let stale: Vec<usize> = conns
+                    .iter()
+                    .filter(|(_, c)| now.duration_since(c.last_seen) > opts.heartbeat_timeout)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in stale {
+                    drop_conn(
+                        id,
+                        &mut conns,
+                        &mut idle_remote,
+                        &mut sched,
+                        &mut in_flight,
+                        &mut stats,
+                    );
+                }
+            }
+
+            // Teardown: release the fleet, wake the acceptor, join via scope.
+            shutting_down.store(true, Ordering::SeqCst);
+            for c in conns.values_mut() {
+                let _ = wire::send_msg(&mut c.stream, &Msg::Shutdown, manifest);
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            drop(to_local);
+            drop(event_tx);
+            if let Some(addr) = wake_addr {
+                let _ = TcpStream::connect(addr);
+            }
+
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            Ok((sched.assemble()?, stats))
+        })
+    }
+}
+
+/// Compare a worker's Hello against this coordinator's world; `Some` is the
+/// human-readable rejection.
+fn hello_mismatch(
+    proto: u64,
+    store_version: u64,
+    salt: &str,
+    probe: &str,
+    expected_salt: &str,
+    expected_probe: &str,
+) -> Option<String> {
+    if proto != wire::PROTOCOL_VERSION {
+        return Some(format!(
+            "protocol version mismatch: coordinator speaks v{}, worker speaks v{proto} \
+             (rebuild one of them)",
+            wire::PROTOCOL_VERSION
+        ));
+    }
+    if store_version != STORE_VERSION as u64 {
+        return Some(format!(
+            "store format mismatch: coordinator v{STORE_VERSION}, worker v{store_version}"
+        ));
+    }
+    if salt != expected_salt {
+        return Some(format!(
+            "context mismatch: coordinator corpus+manifest salt {expected_salt}, worker \
+             {salt} (different artifacts or corpus flags?)"
+        ));
+    }
+    if probe != expected_probe {
+        return Some(
+            "plan-codec mismatch: the worker's build encodes plans differently \
+             (mismatched binaries?)"
+                .to_string(),
+        );
+    }
+    None
+}
+
+/// One connection's frame reader: preamble, then frames until the socket
+/// closes or a frame fails to decode. Exits silently once the event loop
+/// is gone.
+fn read_frames(conn: usize, stream: TcpStream, manifest: &Manifest, tx: Sender<Event>) {
+    let mut r = BufReader::new(stream);
+    if wire::expect_magic(&mut r).is_err() {
+        let _ = tx.send(Event::Gone { conn });
+        return;
+    }
+    loop {
+        match wire::recv_msg(&mut r, manifest) {
+            Ok(msg) => {
+                if tx.send(Event::Frame { conn, msg }).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Gone { conn });
+                return;
+            }
+        }
+    }
+}
+
+/// Declare a connection dead: close it, forget its idle slots, and push
+/// every job it held back to the front of the ready queue.
+fn drop_conn(
+    id: usize,
+    conns: &mut HashMap<usize, Conn>,
+    idle_remote: &mut VecDeque<(usize, u64)>,
+    sched: &mut Scheduler<'_>,
+    in_flight: &mut usize,
+    stats: &mut FabricStats,
+) {
+    let Some(c) = conns.remove(&id) else { return };
+    let _ = c.stream.shutdown(Shutdown::Both);
+    idle_remote.retain(|&(cid, _)| cid != id);
+    if c.active {
+        stats.workers_lost += 1;
+    }
+    for (_, job) in c.inflight {
+        sched.requeue(job);
+        *in_flight -= 1;
+        stats.reassigned_jobs += 1;
+    }
+}
+
+/// Land one job's output into the scheduler (journaling through the store),
+/// recording the first error without stopping the drain.
+fn land(
+    sched: &mut Scheduler<'_>,
+    job: JobId,
+    output: Result<JobOutput>,
+    manifest: &Manifest,
+    store: &mut Option<&mut RunStore>,
+    first_err: &mut Option<anyhow::Error>,
+) {
+    let res = match output {
+        Ok(out) => sched.complete(job, out, manifest, store.as_deref_mut()).map(|_| ()),
+        Err(e) => Err(e),
+    };
+    if let Err(e) = res {
+        if first_err.is_none() {
+            *first_err = Some(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_reports_malformed_addresses_and_busy_ports() {
+        let err = FabricServer::bind("not an address").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not an address"), "{msg}");
+        assert!(msg.contains("malformed address, or port already in use"), "{msg}");
+
+        let first = FabricServer::bind("127.0.0.1:0").unwrap();
+        let addr = first.local_addr().unwrap().to_string();
+        let err = FabricServer::bind(&addr).unwrap_err();
+        assert!(format!("{err:#}").contains("port already in use"), "{err:#}");
+    }
+
+    #[test]
+    fn handshake_gate_rejects_every_kind_of_drift() {
+        let proto = wire::PROTOCOL_VERSION;
+        let sv = STORE_VERSION as u64;
+        let (salt, probe) = ("aaaa", "bbbb");
+        assert!(hello_mismatch(proto, sv, salt, probe, salt, probe).is_none());
+        let bad = hello_mismatch(99, sv, salt, probe, salt, probe).unwrap();
+        assert!(bad.contains("protocol version mismatch"), "{bad}");
+        let bad = hello_mismatch(proto, sv + 1, salt, probe, salt, probe).unwrap();
+        assert!(bad.contains("store format mismatch"), "{bad}");
+        let bad = hello_mismatch(proto, sv, "zzzz", probe, salt, probe).unwrap();
+        assert!(bad.contains("context mismatch"), "{bad}");
+        let bad = hello_mismatch(proto, sv, salt, "zzzz", salt, probe).unwrap();
+        assert!(bad.contains("plan-codec mismatch"), "{bad}");
+    }
+}

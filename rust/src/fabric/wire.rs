@@ -1,0 +1,669 @@
+//! `DPTNET01` wire protocol: length-prefixed frames carrying the scheduler's
+//! [`WorkItem`]/[`JobOutput`] currency between a coordinator and its workers.
+//!
+//! A connection opens with an 8-byte preamble (`DPTNET01`) from **both**
+//! sides; every subsequent message is one frame: a `u32` little-endian
+//! payload length, a `u8` message kind, then the payload. Payloads are built
+//! from the exact codecs the rest of the repo already trusts — a
+//! [`DriverSnapshot`] on the wire is its `DPTDRV01` file form byte-for-byte
+//! ([`checkpoint::write_snapshot_to`]), a finished run is its `DPTRUN01`
+//! cache-entry form ([`store::write_run_entry`]), and a [`RunPlan`] uses the
+//! plan codec ([`RunPlan::write_to`]). Reusing the persistence codecs is
+//! what makes the distributed determinism contract cheap to state: the bytes
+//! a remote worker resumes from are the bytes a local worker would have
+//! resumed from.
+//!
+//! **Handshake** (DESIGN.md §9): the worker opens with [`Msg::Hello`]
+//! carrying its protocol version, store format version, context salt
+//! ([`crate::store::RunStore::context_salt`] over its own manifest +
+//! corpus), and a plan-codec probe ([`codec_probe`]: the digest of a fixed
+//! canonical plan through the plan codec). The coordinator compares all
+//! four against its own values and answers [`Msg::Welcome`] or
+//! [`Msg::Reject`] — mismatched builds, artifacts, or corpora fail loudly
+//! at connect instead of corrupting a sweep later.
+//!
+//! Decoding is strict: unknown kinds, unknown tags, and trailing payload
+//! bytes are all errors (trailing bytes are the classic symptom of two
+//! builds disagreeing about a codec).
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{self, read_str, read_u64, write_str, write_u64, DriverSnapshot};
+use crate::coordinator::RunBuilder;
+use crate::exec::sched::{JobOutput, WorkItem};
+use crate::exec::JobId;
+use crate::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
+use crate::runtime::Manifest;
+use crate::schedule::Schedule;
+use crate::store;
+
+/// Connection preamble: both endpoints write it immediately after connect.
+pub(crate) const MAGIC: [u8; 8] = *b"DPTNET01";
+
+/// Bumped on any frame-layout or message-semantics change.
+pub(crate) const PROTOCOL_VERSION: u64 = 1;
+
+/// Sanity cap on a single frame (a full model snapshot fits comfortably;
+/// anything near this is a corrupted or hostile length word).
+const MAX_FRAME: usize = 1 << 31;
+
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_REJECT: u8 = 3;
+const KIND_READY: u8 = 4;
+const KIND_ASSIGN: u8 = 5;
+const KIND_DONE: u8 = 6;
+const KIND_HEARTBEAT: u8 = 7;
+const KIND_SHUTDOWN: u8 = 8;
+
+/// One fabric message. `Assign`/`Done` carry the scheduler's own currency
+/// ([`WorkItem`] out, [`JobOutput`] back), so the coordinator's state
+/// machine cannot tell a remote worker from a local thread.
+pub(crate) enum Msg {
+    /// Worker → coordinator, first frame: prove we are the same build
+    /// looking at the same world.
+    Hello {
+        proto: u64,
+        store_version: u64,
+        /// [`crate::store::RunStore::context_salt`] of the worker's own
+        /// manifest + corpus.
+        salt: String,
+        /// [`codec_probe`] of the worker's build.
+        probe: String,
+    },
+    /// Coordinator → worker: handshake accepted, slots may announce.
+    Welcome,
+    /// Coordinator → worker: handshake refused; the reason is for a human.
+    Reject { reason: String },
+    /// Worker → coordinator: engine `slot` is constructed and idle.
+    Ready { slot: u64 },
+    /// Coordinator → worker: run this item on engine `slot`. Fork
+    /// snapshots travel inline — a worker needs nothing but this frame.
+    Assign { slot: u64, item: WorkItem },
+    /// Worker → coordinator: the job on `slot` finished (or failed, with a
+    /// human-readable error). The slot is implicitly idle again.
+    Done {
+        slot: u64,
+        job: JobId,
+        output: Result<JobOutput, String>,
+    },
+    /// Worker → coordinator: liveness while idle or mid-job.
+    Heartbeat,
+    /// Coordinator → worker: the sweep is over; exit cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => KIND_HELLO,
+            Msg::Welcome => KIND_WELCOME,
+            Msg::Reject { .. } => KIND_REJECT,
+            Msg::Ready { .. } => KIND_READY,
+            Msg::Assign { .. } => KIND_ASSIGN,
+            Msg::Done { .. } => KIND_DONE,
+            Msg::Heartbeat => KIND_HEARTBEAT,
+            Msg::Shutdown => KIND_SHUTDOWN,
+        }
+    }
+
+    /// Serialize the payload (frame header excluded). `manifest` resolves
+    /// the config entries snapshots are laid out in.
+    pub(crate) fn encode(&self, manifest: &Manifest) -> Result<Vec<u8>> {
+        let mut p = Vec::new();
+        let f = &mut p;
+        match self {
+            Msg::Hello { proto, store_version, salt, probe } => {
+                write_u64(f, *proto)?;
+                write_u64(f, *store_version)?;
+                write_str(f, salt)?;
+                write_str(f, probe)?;
+            }
+            Msg::Welcome | Msg::Heartbeat | Msg::Shutdown => {}
+            Msg::Reject { reason } => write_str(f, reason)?,
+            Msg::Ready { slot } => write_u64(f, *slot)?,
+            Msg::Assign { slot, item } => {
+                write_u64(f, *slot)?;
+                encode_item(f, item, manifest)?;
+            }
+            Msg::Done { slot, job, output } => {
+                write_u64(f, *slot)?;
+                write_u64(f, *job as u64)?;
+                match output {
+                    Err(msg) => {
+                        write_u64(f, 0)?;
+                        write_str(f, msg)?;
+                    }
+                    Ok(JobOutput::Snapshot(snap)) => {
+                        write_u64(f, 1)?;
+                        write_snap(f, snap, manifest)?;
+                    }
+                    Ok(JobOutput::Run { plan_idx, result, state }) => {
+                        write_u64(f, 2)?;
+                        write_u64(f, *plan_idx as u64)?;
+                        write_str(f, &result.curve.name)?;
+                        store::write_run_entry(f, result, state.as_deref())?;
+                    }
+                }
+            }
+        }
+        Ok(p)
+    }
+}
+
+fn encode_item(f: &mut impl Write, item: &WorkItem, manifest: &Manifest) -> Result<()> {
+    match item {
+        WorkItem::Trunk { job, plan, fork_step, snap } => {
+            write_u64(f, 0)?;
+            write_u64(f, *job as u64)?;
+            plan.write_to(f)?;
+            write_u64(f, *fork_step as u64)?;
+            write_opt_snap(f, snap.as_deref(), manifest)?;
+        }
+        WorkItem::Run { job, plan_idx, plan, snap, keep_state } => {
+            write_u64(f, 1)?;
+            write_u64(f, *job as u64)?;
+            write_u64(f, *plan_idx as u64)?;
+            plan.write_to(f)?;
+            write_u64(f, u64::from(*keep_state))?;
+            write_opt_snap(f, snap.as_deref(), manifest)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_item(f: &mut impl Read, manifest: &Manifest) -> Result<WorkItem> {
+    Ok(match read_u64(f)? {
+        0 => WorkItem::Trunk {
+            job: read_u64(f)? as JobId,
+            plan: crate::coordinator::RunPlan::read_from(f)?,
+            fork_step: {
+                // field order matches encode_item: plan, then fork_step
+                read_u64(f)? as usize
+            },
+            snap: read_opt_snap(f, manifest)?,
+        },
+        1 => {
+            let job = read_u64(f)? as JobId;
+            let plan_idx = read_u64(f)? as usize;
+            let plan = crate::coordinator::RunPlan::read_from(f)?;
+            let keep_state = match read_u64(f)? {
+                0 => false,
+                1 => true,
+                other => bail!("bad keep-state flag {other} in fabric frame"),
+            };
+            let snap = read_opt_snap(f, manifest)?;
+            WorkItem::Run { job, plan_idx, plan, snap, keep_state }
+        }
+        other => bail!("unknown work-item tag {other} in fabric frame"),
+    })
+}
+
+/// Snapshot-in-payload: an explicit config id, then the snapshot in its
+/// verbatim `DPTDRV01` form. The explicit id lets a streaming reader
+/// resolve the manifest entry before decoding (no seek-back on a socket).
+fn write_snap(f: &mut impl Write, snap: &DriverSnapshot, manifest: &Manifest) -> Result<()> {
+    write_str(f, &snap.cfg_id)?;
+    let entry = manifest.get(&snap.cfg_id)?;
+    checkpoint::write_snapshot_to(f, snap, entry)
+}
+
+fn read_snap(f: &mut impl Read, manifest: &Manifest) -> Result<DriverSnapshot> {
+    let cfg_id = read_str(f)?;
+    let entry = manifest
+        .get(&cfg_id)
+        .context("resolving a wire snapshot's config (mismatched artifacts?)")?;
+    checkpoint::read_snapshot_from(f, entry)
+}
+
+fn write_opt_snap(
+    f: &mut impl Write,
+    snap: Option<&DriverSnapshot>,
+    manifest: &Manifest,
+) -> Result<()> {
+    match snap {
+        None => write_u64(f, 0),
+        Some(s) => {
+            write_u64(f, 1)?;
+            write_snap(f, s, manifest)
+        }
+    }
+}
+
+fn read_opt_snap(f: &mut impl Read, manifest: &Manifest) -> Result<Option<Arc<DriverSnapshot>>> {
+    match read_u64(f)? {
+        0 => Ok(None),
+        1 => Ok(Some(Arc::new(read_snap(f, manifest)?))),
+        other => bail!("bad snapshot-presence flag {other} in fabric frame"),
+    }
+}
+
+fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
+    let mut cur = payload;
+    let f = &mut cur;
+    let msg = match kind {
+        KIND_HELLO => Msg::Hello {
+            proto: read_u64(f)?,
+            store_version: read_u64(f)?,
+            salt: read_str(f)?,
+            probe: read_str(f)?,
+        },
+        KIND_WELCOME => Msg::Welcome,
+        KIND_REJECT => Msg::Reject { reason: read_str(f)? },
+        KIND_READY => Msg::Ready { slot: read_u64(f)? },
+        KIND_ASSIGN => {
+            let slot = read_u64(f)?;
+            Msg::Assign { slot, item: decode_item(f, manifest)? }
+        }
+        KIND_DONE => {
+            let slot = read_u64(f)?;
+            let job = read_u64(f)? as JobId;
+            let output = match read_u64(f)? {
+                0 => Err(read_str(f)?),
+                1 => Ok(JobOutput::Snapshot(Box::new(read_snap(f, manifest)?))),
+                2 => {
+                    let plan_idx = read_u64(f)? as usize;
+                    let name = read_str(f)?;
+                    let (result, state) = store::read_run_entry(f, &name, true)?;
+                    Ok(JobOutput::Run {
+                        plan_idx,
+                        result: Box::new(result),
+                        state: state.map(Box::new),
+                    })
+                }
+                other => bail!("bad done-status tag {other} in fabric frame"),
+            };
+            Msg::Done { slot, job, output }
+        }
+        KIND_HEARTBEAT => Msg::Heartbeat,
+        KIND_SHUTDOWN => Msg::Shutdown,
+        other => bail!("unknown fabric frame kind {other}"),
+    };
+    if !cur.is_empty() {
+        bail!(
+            "fabric frame kind {kind} has {} trailing payload bytes (mismatched builds?)",
+            cur.len()
+        );
+    }
+    Ok(msg)
+}
+
+/// Write the connection preamble.
+pub(crate) fn write_magic(w: &mut impl Write) -> Result<()> {
+    w.write_all(&MAGIC)?;
+    w.flush().map_err(Into::into)
+}
+
+/// Read and verify the peer's preamble; anything else is not a DPT fabric
+/// endpoint (fail before interpreting bytes as frames).
+pub(crate) fn expect_magic(r: &mut impl Read) -> Result<()> {
+    let mut m = [0u8; 8];
+    r.read_exact(&mut m).context("reading fabric preamble")?;
+    if m != MAGIC {
+        bail!("peer is not a DPT fabric endpoint (preamble {m:02x?})");
+    }
+    Ok(())
+}
+
+/// Encode and write one frame, flushing so small control frames (Ready,
+/// Heartbeat) are never parked in a buffer behind nothing.
+pub(crate) fn send_msg(w: &mut impl Write, msg: &Msg, manifest: &Manifest) -> Result<()> {
+    let payload = msg.encode(manifest)?;
+    if payload.len() >= MAX_FRAME {
+        bail!("fabric frame too large ({} bytes)", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&[msg.kind()])?;
+    w.write_all(&payload)?;
+    w.flush().map_err(Into::into)
+}
+
+/// Read and decode one frame. Handles arbitrary read fragmentation (TCP
+/// segment boundaries never align with frame boundaries).
+pub(crate) fn recv_msg(r: &mut impl Read, manifest: &Manifest) -> Result<Msg> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading fabric frame header")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len >= MAX_FRAME {
+        bail!("implausible fabric frame length {len}");
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("reading fabric frame kind")?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading fabric frame payload")?;
+    decode(kind[0], &payload, manifest)
+}
+
+/// Digest of one fixed, maximally tag-diverse plan through the plan codec.
+/// Two builds that disagree about any plan-codec detail — field order,
+/// enum tags, float widths — produce different probes and are refused at
+/// handshake instead of silently training the wrong plan.
+pub(crate) fn codec_probe() -> Result<String> {
+    let plan = RunBuilder::progressive(
+        "dpt-wire-probe",
+        "probe-src",
+        "probe-dst",
+        13,
+        89,
+        Schedule::Wsd { peak: 3.0e-4, warmup_frac: 0.03125, decay_frac: 0.125 },
+        ExpandSpec {
+            strategy: Strategy::Copying(CopyOrder::Inter),
+            insertion: Insertion::Top,
+            os_policy: OsPolicy::Copy,
+            seed: 41,
+        },
+    )
+    .eval_every(7)
+    .eval_batches(3)
+    .seed(23)
+    .build()?;
+    let mut bytes = Vec::new();
+    plan.write_to(&mut bytes)?;
+    Ok(store::digest_bytes(&bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    use crate::coordinator::RunPlan;
+    use crate::flops::FlopLedger;
+    use crate::metrics::{Curve, CurvePoint};
+    use crate::runtime::ModelState;
+    use crate::util::proptest::proptest;
+
+    fn manifest() -> Manifest {
+        // Mirrors the checkpoint test fixture: one tiny config "t" with an
+        // embedding plus two 2×2 layers.
+        let mut params = vec![
+            r#"{"name":"embed.tok","shape":[4,2],"init":"normal","std":0.02,
+               "muon":true,"decay":false,"fan_in":4,"fan_out":2}"#
+                .to_string(),
+        ];
+        let mut opt = vec![r#"{"name":"mom.embed.tok","shape":[4,2]}"#.to_string()];
+        for i in 0..2 {
+            params.push(format!(
+                r#"{{"name":"layer.{i}.w","shape":[2,2],"init":"normal","std":0.1,
+                   "muon":true,"decay":true,"fan_in":2,"fan_out":2}}"#
+            ));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.w","shape":[2,2]}}"#));
+        }
+        let text = format!(
+            r#"{{"configs":{{"t":{{
+            "model":{{"family":"gpt2","n_layer":2,"batch":1,"seq_len":4,"moe":null}},
+            "opt":{{"kind":"muon_nsgd"}},
+            "params":[{}],
+            "opt_state":[{}],
+            "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{{}}}}}}}}"#,
+            params.join(","),
+            opt.join(",")
+        );
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    fn sample_snapshot(manifest: &Manifest) -> DriverSnapshot {
+        let entry = manifest.get("t").unwrap();
+        let mut curve = Curve::new("run");
+        curve.push(CurvePoint {
+            step: 10,
+            tokens: 640,
+            flops: 1e6,
+            train_loss: 2.5,
+            val_loss: 2.6,
+            lr: 0.01,
+        });
+        let mut state = ModelState::init(entry, 5);
+        for (i, t) in state.opt.iter_mut().enumerate() {
+            for (j, v) in t.data.iter_mut().enumerate() {
+                *v = (i * 31 + j) as f32 * 0.125 - 1.0;
+            }
+        }
+        DriverSnapshot {
+            run_name: "run".into(),
+            cfg_id: "t".into(),
+            step: 10,
+            stage_idx: 0,
+            data_seed: 3,
+            train_windows: 20,
+            val_windows: 4,
+            image_samples: 0,
+            last_train_loss: 2.5,
+            ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("t".into(), 10, 1e6)] },
+            curve,
+            boundaries: Vec::new(),
+            state,
+        }
+    }
+
+    fn sample_plan(name: &str) -> RunPlan {
+        RunBuilder::progressive(
+            name,
+            "s",
+            "t",
+            10,
+            40,
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.1 },
+            ExpandSpec::default(),
+        )
+        .build()
+        .unwrap()
+    }
+
+    fn assert_snap_eq(a: &DriverSnapshot, b: &DriverSnapshot) {
+        assert_eq!(a.run_name, b.run_name);
+        assert_eq!(a.cfg_id, b.cfg_id);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.stage_idx, b.stage_idx);
+        assert_eq!(a.data_seed, b.data_seed);
+        assert_eq!(a.train_windows, b.train_windows);
+        assert_eq!(a.val_windows, b.val_windows);
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        assert_eq!(a.boundaries, b.boundaries);
+        assert_eq!(a.state.params.len(), b.state.params.len());
+        assert_eq!(a.state.opt.len(), b.state.opt.len());
+        let bits = |ts: &[crate::runtime::Tensor]| -> Vec<Vec<u32>> {
+            ts.iter().map(|t| t.data.iter().map(|v| v.to_bits()).collect()).collect()
+        };
+        assert_eq!(bits(&a.state.params), bits(&b.state.params), "param bits drifted");
+        assert_eq!(bits(&a.state.opt), bits(&b.state.opt), "optimizer-state bits drifted");
+    }
+
+    /// A reader that serves the bytes in caller-chosen chunk sizes —
+    /// simulating TCP segmentation that never aligns with frame or field
+    /// boundaries.
+    struct Chunked {
+        data: Vec<u8>,
+        pos: usize,
+        sizes: Vec<usize>,
+        i: usize,
+    }
+
+    impl std::io::Read for Chunked {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let want = self.sizes[self.i % self.sizes.len()].max(1);
+            self.i += 1;
+            let n = want.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn roundtrip(msg: &Msg, m: &Manifest) -> Msg {
+        let mut buf = Vec::new();
+        send_msg(&mut buf, msg, m).unwrap();
+        let decoded = recv_msg(&mut &buf[..], m).unwrap();
+        // The codec is canonical: re-encoding the decoded message must
+        // reproduce the original bytes exactly.
+        let mut buf2 = Vec::new();
+        send_msg(&mut buf2, &decoded, m).unwrap();
+        assert_eq!(buf, buf2, "re-encoded frame bytes drifted");
+        decoded
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips_byte_exactly() {
+        let m = manifest();
+        let snap = sample_snapshot(&m);
+        let plan = sample_plan("wire");
+        let msgs = vec![
+            Msg::Hello {
+                proto: PROTOCOL_VERSION,
+                store_version: 2,
+                salt: "cafebabe".into(),
+                probe: codec_probe().unwrap(),
+            },
+            Msg::Welcome,
+            Msg::Reject { reason: "context mismatch".into() },
+            Msg::Ready { slot: 3 },
+            Msg::Assign {
+                slot: 1,
+                item: WorkItem::Trunk {
+                    job: 7,
+                    plan: plan.clone(),
+                    fork_step: 10,
+                    snap: Some(Arc::new(snap.clone())),
+                },
+            },
+            Msg::Assign {
+                slot: 0,
+                item: WorkItem::Run {
+                    job: 9,
+                    plan_idx: 2,
+                    plan: plan.clone(),
+                    snap: None,
+                    keep_state: true,
+                },
+            },
+            Msg::Done { slot: 2, job: 7, output: Ok(JobOutput::Snapshot(Box::new(snap.clone()))) },
+            Msg::Done { slot: 0, job: 4, output: Err("worker 0 panicked: oom".into()) },
+            Msg::Heartbeat,
+            Msg::Shutdown,
+        ];
+        for msg in &msgs {
+            roundtrip(msg, &m);
+        }
+        // Spot-check the payload-bearing kinds field-by-field.
+        match roundtrip(&msgs[4], &m) {
+            Msg::Assign { slot, item: WorkItem::Trunk { job, plan: p, fork_step, snap: s } } => {
+                assert_eq!(slot, 1);
+                assert_eq!(job, 7);
+                assert_eq!(fork_step, 10);
+                assert_eq!(p.digest(), plan.digest());
+                assert_snap_eq(&snap, s.as_deref().unwrap());
+            }
+            _ => panic!("trunk assignment decoded as the wrong message"),
+        }
+        match roundtrip(&msgs[7], &m) {
+            Msg::Done { job: 4, output: Err(e), .. } => assert!(e.contains("panicked")),
+            _ => panic!("error done decoded as the wrong message"),
+        }
+    }
+
+    #[test]
+    fn done_run_with_state_roundtrips() {
+        let m = manifest();
+        let snap = sample_snapshot(&m);
+        let result = crate::coordinator::RunResult {
+            curve: snap.curve.clone(),
+            ledger: snap.ledger.clone(),
+            boundaries: vec![(10, "t".into())],
+            final_val_loss: 2.6,
+        };
+        let msg = Msg::Done {
+            slot: 1,
+            job: 3,
+            output: Ok(JobOutput::Run {
+                plan_idx: 5,
+                result: Box::new(result),
+                state: Some(Box::new(snap.state.clone())),
+            }),
+        };
+        match roundtrip(&msg, &m) {
+            Msg::Done { job: 3, output: Ok(JobOutput::Run { plan_idx, result, state }), .. } => {
+                assert_eq!(plan_idx, 5);
+                assert_eq!(result.curve.name, "run");
+                assert_eq!(result.final_val_loss, 2.6);
+                let state = state.expect("state section must survive the wire");
+                assert_eq!(state.params.len(), snap.state.params.len());
+            }
+            _ => panic!("run done decoded as the wrong message"),
+        }
+    }
+
+    #[test]
+    fn snapshot_frames_survive_arbitrary_read_fragmentation() {
+        // The satellite property: a DPTDRV01 snapshot pushed through the
+        // frame encoder, split at arbitrary byte boundaries (as TCP will),
+        // decodes bit-exactly.
+        let m = manifest();
+        let snap = sample_snapshot(&m);
+        let mut buf = Vec::new();
+        write_magic(&mut buf).unwrap();
+        send_msg(
+            &mut buf,
+            &Msg::Done { slot: 0, job: 1, output: Ok(JobOutput::Snapshot(Box::new(snap.clone()))) },
+            &m,
+        )
+        .unwrap();
+        send_msg(&mut buf, &Msg::Heartbeat, &m).unwrap();
+        proptest(60, |g| {
+            let n_sizes = g.usize(1..8);
+            let sizes: Vec<usize> = (0..n_sizes).map(|_| g.usize(1..97)).collect();
+            let mut r = Chunked { data: buf.clone(), pos: 0, sizes, i: 0 };
+            expect_magic(&mut r).unwrap();
+            match recv_msg(&mut r, &m).unwrap() {
+                Msg::Done { output: Ok(JobOutput::Snapshot(got)), .. } => {
+                    assert_snap_eq(&snap, &got)
+                }
+                _ => panic!("fragmented snapshot frame decoded as the wrong message"),
+            }
+            assert!(matches!(recv_msg(&mut r, &m).unwrap(), Msg::Heartbeat));
+        });
+    }
+
+    #[test]
+    fn strict_decoding_rejects_drift() {
+        let m = manifest();
+        // Trailing payload bytes: the classic mismatched-codec symptom.
+        let mut payload = Msg::Ready { slot: 1 }.encode(&m).unwrap();
+        payload.push(0xab);
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.push(KIND_READY);
+        framed.extend_from_slice(&payload);
+        let err = recv_msg(&mut &framed[..], &m).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+
+        // Unknown frame kind.
+        let framed = [0u8, 0, 0, 0, 99];
+        let err = recv_msg(&mut &framed[..], &m).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown fabric frame kind"), "{err:#}");
+
+        // A peer that is not speaking DPTNET01 at all.
+        let err = expect_magic(&mut &b"HTTP/1.1"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("not a DPT fabric endpoint"), "{err:#}");
+
+        // Truncation at every prefix of a small frame errors, never panics.
+        let mut buf = Vec::new();
+        send_msg(&mut buf, &Msg::Reject { reason: "nope".into() }, &m).unwrap();
+        for cut in 0..buf.len() {
+            assert!(recv_msg(&mut &buf[..cut], &m).is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn codec_probe_is_stable_within_a_build() {
+        let a = codec_probe().unwrap();
+        let b = codec_probe().unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32, "probe is a 32-hex-char dual-lane digest");
+    }
+}

@@ -1,0 +1,268 @@
+//! The fabric worker: a stateless engine pool that pulls jobs from a remote
+//! coordinator over `DPTNET01` frames.
+//!
+//! A worker process owns engines and nothing else — no store, no journal,
+//! no scheduler state. It connects, proves it is the same build looking at
+//! the same artifacts + corpus (the Hello handshake), announces one slot
+//! per engine thread, and then executes whatever [`WorkItem`]s arrive,
+//! reporting each `JobOutput` back as a `Done` frame. The engine threads
+//! are byte-for-byte the in-process pool's [`worker_loop`] — the transport
+//! cannot change what a job computes, which is the whole determinism story.
+//!
+//! Liveness: the worker heartbeats every ~2s (also while its engines are
+//! busy — the routing thread never blocks on a job), so a coordinator can
+//! tell a long job from a dead process. If the coordinator vanishes
+//! mid-sweep the worker errors out; after a clean `Shutdown` frame it
+//! exits 0.
+//!
+//! `max_jobs` is a failure-injection drill, not a production knob: after
+//! executing its quota the worker *defects* — drops the connection on the
+//! next assignment without executing it, exactly like a crashed machine —
+//! so reassignment is testable deterministically (see the CI distributed
+//! smoke and `tests/integration.rs`).
+
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::ProgressSink;
+use crate::data::Corpus;
+use crate::exec::pool::{worker_loop, WorkerMsg};
+use crate::exec::sched::WorkItem;
+use crate::runtime::Manifest;
+use crate::store::{RunStore, STORE_VERSION};
+
+use super::wire::{self, Msg};
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Engine threads (slots) this process contributes.
+    pub workers: usize,
+    /// Shared whole-line progress sink for the engine threads' drivers.
+    pub progress: Option<ProgressSink>,
+    /// Failure-injection: execute at most this many jobs, then drop the
+    /// connection on the next assignment without executing it.
+    pub max_jobs: Option<usize>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { workers: 1, progress: None, max_jobs: None }
+    }
+}
+
+/// How a worker session ended (both are process-exit-0 outcomes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerReport {
+    /// Jobs fully executed and reported.
+    pub jobs_executed: usize,
+    /// Ended by `max_jobs` defection rather than a coordinator `Shutdown`.
+    pub defected: bool,
+}
+
+/// Internal event stream: engine-pool replies and decoded frames merge
+/// into one queue so the routing loop has a single blocking point.
+enum WEvent {
+    Pool(WorkerMsg),
+    Net(Msg),
+    NetGone(String),
+}
+
+/// Connect to a coordinator and serve jobs until it says `Shutdown` (or
+/// `max_jobs` defection). The manifest + corpus must describe the same
+/// world as the coordinator's — the handshake refuses anything else.
+pub fn run_worker(
+    addr: &str,
+    manifest: &Manifest,
+    corpus: &Corpus,
+    opts: &WorkerOptions,
+) -> Result<WorkerReport> {
+    if opts.workers == 0 {
+        bail!("a fabric worker needs at least one engine thread (got --workers 0)");
+    }
+    let stream = TcpStream::connect(addr).with_context(|| {
+        format!(
+            "connecting to fabric coordinator at '{addr}' \
+             (malformed address, or no `repro serve` listening there?)"
+        )
+    })?;
+    stream.set_nodelay(true).ok();
+    let mut write = stream.try_clone().context("cloning fabric socket")?;
+    let mut read = BufReader::new(stream);
+
+    // Handshake, synchronously: preamble both ways, Hello out,
+    // Welcome/Reject back.
+    wire::write_magic(&mut write)?;
+    wire::expect_magic(&mut read)?;
+    wire::send_msg(
+        &mut write,
+        &Msg::Hello {
+            proto: wire::PROTOCOL_VERSION,
+            store_version: STORE_VERSION as u64,
+            salt: RunStore::context_salt(manifest, corpus),
+            probe: wire::codec_probe()?,
+        },
+        manifest,
+    )?;
+    match wire::recv_msg(&mut read, manifest).context("waiting for the coordinator's welcome")? {
+        Msg::Welcome => {}
+        Msg::Reject { reason } => bail!("coordinator rejected this worker: {reason}"),
+        _ => bail!("coordinator answered the handshake with an unexpected frame"),
+    }
+
+    thread::scope(|scope| -> Result<WorkerReport> {
+        let (event_tx, event_rx) = channel::<WEvent>();
+
+        // Engine pool: identical threads to the in-process pool.
+        let (pool_tx, pool_rx) = channel::<WorkerMsg>();
+        let mut to_engine: Vec<Sender<WorkItem>> = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let (tx, rx) = channel::<WorkItem>();
+            to_engine.push(tx);
+            let replies = pool_tx.clone();
+            let progress = opts.progress.clone();
+            scope.spawn(move || worker_loop(w, manifest, corpus, rx, replies, progress));
+        }
+        drop(pool_tx);
+        {
+            let tx = event_tx.clone();
+            scope.spawn(move || {
+                for msg in pool_rx {
+                    if tx.send(WEvent::Pool(msg)).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        // Frame reader: decoded coordinator frames into the same queue.
+        {
+            let tx = event_tx.clone();
+            scope.spawn(move || {
+                loop {
+                    match wire::recv_msg(&mut read, manifest) {
+                        Ok(msg) => {
+                            let stop = matches!(msg, Msg::Shutdown);
+                            if tx.send(WEvent::Net(msg)).is_err() || stop {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(WEvent::NetGone(format!("{e:#}")));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        drop(event_tx);
+
+        let mut assigned = 0usize;
+        let mut executed = 0usize;
+        let mut alive = opts.workers;
+        let mut last_beat = Instant::now();
+        let finish = |write: &TcpStream, executed: usize, defected: bool| {
+            let _ = write.shutdown(Shutdown::Both);
+            Ok(WorkerReport { jobs_executed: executed, defected })
+        };
+        loop {
+            match event_rx.recv_timeout(Duration::from_millis(500)) {
+                Ok(WEvent::Pool(WorkerMsg::Ready { worker })) => {
+                    wire::send_msg(&mut write, &Msg::Ready { slot: worker as u64 }, manifest)
+                        .context("announcing an engine slot")?;
+                }
+                Ok(WEvent::Pool(WorkerMsg::Done { worker, job, output })) => {
+                    executed += 1;
+                    let output = output.map_err(|e| format!("{e:#}"));
+                    let msg = Msg::Done { slot: worker as u64, job, output };
+                    wire::send_msg(&mut write, &msg, manifest)
+                        .context("reporting a finished job")?;
+                }
+                Ok(WEvent::Pool(WorkerMsg::Dead { error })) => {
+                    alive -= 1;
+                    if alive == 0 {
+                        let _ = write.shutdown(Shutdown::Both);
+                        return Err(error.context("every engine thread failed to start"));
+                    }
+                    // Slots that never announced Ready are simply never
+                    // assigned; the remaining engines keep serving.
+                }
+                Ok(WEvent::Net(Msg::Assign { slot, item })) => {
+                    assigned += 1;
+                    if opts.max_jobs.is_some_and(|max| assigned > max) {
+                        // Defect: vanish exactly like a crashed machine —
+                        // the assignment is neither executed nor answered.
+                        return finish(&write, executed, true);
+                    }
+                    let idx = slot as usize;
+                    if idx >= to_engine.len() {
+                        let _ = write.shutdown(Shutdown::Both);
+                        return Err(anyhow!("coordinator assigned to unknown slot {slot}"));
+                    }
+                    if to_engine[idx].send(item).is_err() {
+                        let _ = write.shutdown(Shutdown::Both);
+                        return Err(anyhow!("engine thread {idx} exited unexpectedly"));
+                    }
+                }
+                Ok(WEvent::Net(Msg::Heartbeat)) => {}
+                Ok(WEvent::Net(Msg::Shutdown)) => return finish(&write, executed, false),
+                Ok(WEvent::Net(_)) => {
+                    let _ = write.shutdown(Shutdown::Both);
+                    return Err(anyhow!("unexpected fabric frame from the coordinator"));
+                }
+                Ok(WEvent::NetGone(e)) => {
+                    return Err(anyhow!("lost connection to the fabric coordinator: {e}"));
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("worker internals disconnected unexpectedly"));
+                }
+            }
+            // Liveness, even mid-job: this loop never blocks on an engine.
+            if last_beat.elapsed() >= Duration::from_secs(2) {
+                // A send failure here means the socket died; the reader
+                // thread will surface it as NetGone with the real error.
+                let _ = wire::send_msg(&mut write, &Msg::Heartbeat, manifest);
+                last_beat = Instant::now();
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusConfig;
+
+    fn tiny_world() -> (Manifest, Corpus) {
+        let manifest = Manifest::parse(r#"{"configs":{}}"#, std::path::PathBuf::from("/tmp"))
+            .expect("empty manifest parses");
+        let cfg = CorpusConfig { vocab: 8, train_tokens: 64, val_tokens: 16, ..Default::default() };
+        (manifest, Corpus::generate(cfg))
+    }
+
+    #[test]
+    fn zero_engine_threads_is_a_friendly_error() {
+        // No connection is attempted: the flag error must come first.
+        let (manifest, corpus) = tiny_world();
+        let opts = WorkerOptions { workers: 0, ..WorkerOptions::default() };
+        let err = run_worker("127.0.0.1:1", &manifest, &corpus, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one engine thread"), "{err:#}");
+    }
+
+    #[test]
+    fn connecting_nowhere_is_a_contextual_error() {
+        let (manifest, corpus) = tiny_world();
+        let opts = WorkerOptions::default();
+        // A port nothing listens on: the error must say where and hint at
+        // `repro serve`, not surface a bare io::Error.
+        let err = run_worker("127.0.0.1:9", &manifest, &corpus, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fabric coordinator at '127.0.0.1:9'"), "{msg}");
+        assert!(msg.contains("repro serve"), "{msg}");
+    }
+}

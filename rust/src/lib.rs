@@ -16,6 +16,9 @@
 //! - [`store`]: durable sweep store — content-addressed run/trunk cache +
 //!   crash-safe job journal; interrupted sweeps resume, warm reruns
 //!   execute nothing.
+//! - [`fabric`]: distributed sweep fabric — the same scheduler stretched
+//!   over TCP: `repro serve` coordinator + `repro worker` fleets sharing
+//!   one artifact repository, bit-identical to serial execution.
 //! - [`expansion`]: depth-expansion engine (random/copying/zero/... of §3).
 //! - [`schedule`]: WSD / cosine learning-rate schedules (§4's key lever).
 //! - [`data`]: synthetic Markov-Zipf corpus with a known entropy floor.
@@ -33,6 +36,7 @@ pub mod metrics;
 pub mod coordinator;
 pub mod exec;
 pub mod store;
+pub mod fabric;
 pub mod convex;
 pub mod scaling;
 pub mod checkpoint;

@@ -26,6 +26,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::time::Duration;
 
 use anyhow::Result;
 use deep_progressive::bench::{run_target, Ctx, ALL_TARGETS};
@@ -34,13 +35,15 @@ use deep_progressive::cli::{Args, CommandSpec};
 use deep_progressive::convex::{simulate, ConvexProblem, Teleport};
 use deep_progressive::coordinator::{
     recipe, LossSpikeDetector, PeriodicCheckpointer, ProgressPrinter, ProgressSink, RunBuilder,
-    RunDriver, Sweep, Trainer,
+    RunDriver, RunPlan, Sweep, Trainer,
 };
 use deep_progressive::data::{Corpus, CorpusConfig};
-use deep_progressive::exec::default_workers;
+use deep_progressive::exec::{default_workers, JobGraph};
 use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
+use deep_progressive::fabric::{run_worker, FabricOptions, FabricServer, WorkerOptions};
 use deep_progressive::runtime::{Engine, Manifest};
 use deep_progressive::schedule::Schedule;
+use deep_progressive::store::RunStore;
 
 fn spec_for(cmd: &str) -> Option<CommandSpec> {
     // Static per-command vocabularies so typos fail loudly instead of
@@ -76,10 +79,26 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     const LADDER: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
-            "taus", "rewarm", "strategy", "insertion", "os", "expand-seed", "workers",
-            "store-dir", "probe-steps", "tol",
+            "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
+            "workers", "store-dir", "probe-steps", "tol",
         ],
         switches: &["progress", "probe"],
+    };
+    const SERVE: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
+            "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
+            "workers", "store-dir", "listen", "heartbeat-timeout",
+        ],
+        switches: &["progress"],
+    };
+    const WORKER: CommandSpec = CommandSpec {
+        flags: &["artifacts", "connect", "workers", "max-jobs"],
+        switches: &["progress"],
+    };
+    const STORE: CommandSpec = CommandSpec {
+        flags: &["store-dir", "keep"],
+        switches: &["dry-run"],
     };
     const CONVEX: CommandSpec = CommandSpec {
         flags: &["steps", "seed", "lr", "sched", "decay-frac", "dim", "tau-frac"],
@@ -99,6 +118,9 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         "progressive" => Some(PROGRESSIVE),
         "sweep" => Some(SWEEP),
         "ladder" => Some(LADDER),
+        "serve" => Some(SERVE),
+        "worker" => Some(WORKER),
+        "store" => Some(STORE),
         "probe-mixing" => Some(PROBE),
         "convex" => Some(CONVEX),
         "expand-ckpt" => Some(EXPAND_CKPT),
@@ -166,6 +188,86 @@ fn positional<'a>(args: &'a Args, i: usize, usage: &str) -> Result<&'a str> {
 /// product stay in f64, so large horizons keep integer precision.
 fn tau_from_frac(steps: usize, frac: f64) -> usize {
     (steps as f64 * frac) as usize
+}
+
+/// `--workers` with a friendly floor: zero engines can execute nothing, so
+/// an explicit 0 (or garbage) is an error instead of silently meaning
+/// "serial" — `repro serve --workers 0` is the one place 0 is meaningful
+/// (remote-only coordinator) and does not go through here.
+fn workers_from(args: &Args) -> Result<usize> {
+    match args.get("workers") {
+        None => Ok(default_workers()),
+        Some(s) => match s.parse::<usize>() {
+            Ok(0) => anyhow::bail!(
+                "--workers must be at least 1 (got 0); omit the flag to use every core"
+            ),
+            Ok(n) => Ok(n),
+            Err(_) => anyhow::bail!("--workers expects a positive number, got '{s}'"),
+        },
+    }
+}
+
+/// Build the (non-probe) ladder grid shared by `ladder` and `serve`: one
+/// plan per `--strategies` entry (names suffixed `-{strategy}`), else a
+/// single plan under `--strategy`. Both commands construct plans through
+/// this one function so a fabric run's CSVs can be diffed byte-for-byte
+/// against the serial ladder's.
+fn ladder_grid(
+    args: &Args,
+    rungs: &[&str],
+    steps: usize,
+    seed: u64,
+    sched: Schedule,
+    usage: &str,
+) -> Result<Vec<RunPlan>> {
+    let n_rounds = rungs.len() - 1;
+    let base = expand_from(args)?;
+    let rewarm = args.get_usize("rewarm", 0);
+    // Boundary fractions of the horizon; default: evenly spaced through
+    // the stable phase.
+    let stable_frac = sched.stable_end(steps) as f64 / steps as f64;
+    let fracs: Vec<f64> = match args.get("taus") {
+        Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+        None => {
+            (1..=n_rounds).map(|i| stable_frac * i as f64 / (n_rounds + 1) as f64).collect()
+        }
+    };
+    if fracs.len() != n_rounds {
+        anyhow::bail!(
+            "--taus needs {} comma-separated fractions for {} rungs — usage: {usage}",
+            n_rounds,
+            rungs.len()
+        );
+    }
+    let taus: Vec<usize> = fracs.iter().map(|&f| tau_from_frac(steps, f)).collect();
+    let name = format!("ladder-{}", rungs.join("-"));
+    let variants: Vec<(String, ExpandSpec)> = match args.get("strategies") {
+        None => vec![(name, base)],
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                let sname = s.trim();
+                Ok((format!("{name}-{sname}"), ExpandSpec {
+                    strategy: strategy_from(sname)?,
+                    ..base
+                }))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let mut plans = Vec::with_capacity(variants.len());
+    for (vname, spec) in variants {
+        // Same normalization as the probe-driven path (fix-up, horizon
+        // check, per-stage re-warm clamp).
+        let (_, rounds) = recipe::rounds_from_taus(rungs, taus.clone(), steps, spec, rewarm)?;
+        plans.push(
+            apply_eval_every(
+                RunBuilder::ladder(vname.as_str(), rungs[0], &rounds, steps, sched).seed(seed),
+                args,
+            )
+            .build()?,
+        );
+    }
+    Ok(plans)
 }
 
 fn main() -> Result<()> {
@@ -320,7 +422,7 @@ fn main() -> Result<()> {
                 .collect();
             let strategies: Vec<&str> = args.get_str("strategies", "random,zero").split(',').collect();
             let base = expand_from(&args)?;
-            let workers = args.get_usize("workers", default_workers());
+            let workers = workers_from(&args)?;
             let mut sweep = Sweep::new(trainer);
             if args.has("progress") {
                 sweep.progress(ProgressSink::stderr());
@@ -368,8 +470,8 @@ fn main() -> Result<()> {
             // Multi-round depth-ladder growth (e.g. l0 → l1 → l3 → l6):
             // boundaries from --taus fractions, or probe-driven placement
             // (--probe: the §7 recipe per round via recipe::LadderController).
-            const USAGE: &str =
-                "ladder <cfg0> <cfg1> [<cfg2> ...] [--taus F,F,..|--probe] [--rewarm N]";
+            const USAGE: &str = "ladder <cfg0> <cfg1> [<cfg2> ...] \
+                                 [--taus F,F,..|--probe] [--strategies a,b] [--rewarm N]";
             let engine = Engine::cpu()?;
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
@@ -380,19 +482,17 @@ fn main() -> Result<()> {
             }
             let n_rounds = rungs.len() - 1;
             let sched = schedule_from(&args);
-            let spec = expand_from(&args)?;
-            let workers = args.get_usize("workers", default_workers());
-            let rewarm = args.get_usize("rewarm", 0);
+            let workers = workers_from(&args)?;
             let name = format!("ladder-{}", rungs.join("-"));
 
-            let plan = if args.has("probe") {
+            let plans: Vec<RunPlan> = if args.has("probe") {
                 let ctl = recipe::LadderController::new(
                     args.get_usize("probe-steps", steps),
                     args.get_f32("tol", 0.04),
                 )
-                .rewarm(rewarm)
+                .rewarm(args.get_usize("rewarm", 0))
                 .workers(workers);
-                let outcome = ctl.plan(&trainer, &name, &rungs, steps, sched, spec)?;
+                let outcome = ctl.plan(&trainer, &name, &rungs, steps, sched, expand_from(&args)?)?;
                 for (i, (probe, tau)) in outcome.probes.iter().zip(&outcome.taus).enumerate() {
                     println!(
                         "round {}: {} -> {}: t_mix {:?} tokens ({:?} steps) => expand at step {tau}",
@@ -405,44 +505,16 @@ fn main() -> Result<()> {
                 }
                 // Re-apply the launcher's cadence/seed knobs to the
                 // controller's rounds (its plan keeps builder defaults).
-                apply_eval_every(
+                vec![apply_eval_every(
                     RunBuilder::ladder(name.as_str(), rungs[0], &outcome.rounds, steps, sched)
                         .seed(seed),
                     &args,
                 )
-                .build()?
+                .build()?]
             } else {
-                // Boundary fractions of the horizon; default: evenly spaced
-                // through the stable phase.
-                let stable_frac = sched.stable_end(steps) as f64 / steps as f64;
-                let fracs: Vec<f64> = match args.get("taus") {
-                    Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
-                    None => (1..=n_rounds)
-                        .map(|i| stable_frac * i as f64 / (n_rounds + 1) as f64)
-                        .collect(),
-                };
-                if fracs.len() != n_rounds {
-                    anyhow::bail!(
-                        "--taus needs {} comma-separated fractions for {} rungs — usage: {USAGE}",
-                        n_rounds,
-                        rungs.len()
-                    );
-                }
-                let taus: Vec<usize> =
-                    fracs.iter().map(|&f| tau_from_frac(steps, f)).collect();
-                // Same normalization as the probe-driven path (fix-up,
-                // horizon check, per-stage re-warm clamp).
-                let (_, rounds) = recipe::rounds_from_taus(&rungs, taus, steps, spec, rewarm)?;
-                apply_eval_every(
-                    RunBuilder::ladder(name.as_str(), rungs[0], &rounds, steps, sched).seed(seed),
-                    &args,
-                )
-                .build()?
+                ladder_grid(&args, &rungs, steps, seed, sched, USAGE)?
             };
 
-            let boundaries: Vec<usize> = (1..=plan.n_boundaries())
-                .filter_map(|d| plan.boundary_at(d))
-                .collect();
             // Run through the sweep machinery so --workers and --store-dir
             // behave exactly like sweep/bench grids (bit-identical at any
             // worker count; warm stores serve the run without training).
@@ -453,21 +525,156 @@ fn main() -> Result<()> {
             if let Some(dir) = args.get("store-dir") {
                 sweep.store(dir)?;
             }
-            sweep.add(plan);
+            for p in &plans {
+                sweep.add(p.clone());
+            }
             let outcome = sweep.run_parallel(workers)?;
-            let res = &outcome.results[0];
-            res.curve.write_csv(std::path::Path::new(&out))?;
             let fixed_flops = trainer.fixed_flops(rungs[n_rounds], steps)?;
+            for (plan, res) in plans.iter().zip(&outcome.results) {
+                res.curve.write_csv(std::path::Path::new(&out))?;
+                let boundaries: Vec<usize> = (1..=plan.n_boundaries())
+                    .filter_map(|d| plan.boundary_at(d))
+                    .collect();
+                println!(
+                    "ladder {} ({} rounds at {:?}): final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed-depth {})",
+                    plan.name(),
+                    n_rounds,
+                    boundaries,
+                    res.final_val_loss,
+                    res.ledger.total,
+                    (1.0 - res.ledger.total / fixed_flops) * 100.0,
+                    rungs[n_rounds],
+                );
+            }
+            Ok(())
+        }
+        "serve" => {
+            // Fabric coordinator: same ladder-grid semantics (and CSV
+            // output) as `ladder`, executed over local engine threads plus
+            // every `repro worker` that connects (DESIGN.md §9). `--workers
+            // 0` (the default) serves remote workers only.
+            const USAGE: &str = "serve <cfg0> <cfg1> [<cfg2> ...] --listen ADDR \
+                                 [--taus F,F,..] [--strategies a,b] [--workers N] [--store-dir D]";
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let rungs: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+            if rungs.len() < 2 {
+                anyhow::bail!("a ladder needs at least two configs — usage: {USAGE}");
+            }
+            let listen = args
+                .get("listen")
+                .ok_or_else(|| anyhow::anyhow!("missing --listen ADDR — usage: {USAGE}"))?;
+            let plans = ladder_grid(&args, &rungs, steps, seed, schedule_from(&args), USAGE)?;
+            let graph = JobGraph::lower(plans)?;
+            let server = FabricServer::bind(listen)?;
+            println!("fabric coordinator listening on {}", server.local_addr()?);
+            let opts = FabricOptions {
+                local_workers: args.get_usize("workers", 0),
+                progress: args.has("progress").then(ProgressSink::stderr),
+                keep_states: false,
+                heartbeat_timeout: Duration::from_secs(args.get_u64("heartbeat-timeout", 20)),
+            };
+            let mut store = match args.get("store-dir") {
+                Some(dir) => {
+                    let salt = RunStore::context_salt(&manifest, &corpus);
+                    Some(RunStore::open_salted(dir, &salt)?)
+                }
+                None => None,
+            };
+            let (outcome, stats) = server.run(&manifest, &corpus, &graph, &opts, store.as_mut())?;
+            for (plan, res) in graph.plans().iter().zip(&outcome.results) {
+                res.curve.write_csv(std::path::Path::new(&out))?;
+                println!(
+                    "{:<40} final val loss {:.4} | {:.2e} FLOPs",
+                    plan.name(),
+                    res.final_val_loss,
+                    res.ledger.total
+                );
+            }
             println!(
-                "ladder {} ({} rounds at {:?}): final val loss {:.4} | {:.2e} FLOPs ({:.0}% saving vs fixed-depth {})",
-                name,
-                n_rounds,
-                boundaries,
-                res.final_val_loss,
-                res.ledger.total,
-                (1.0 - res.ledger.total / fixed_flops) * 100.0,
-                rungs[n_rounds],
+                "fabric: {} dispatched ({} local, {} remote, {} reassigned) + {} cached \
+                 over {} connection(s); {} worker(s) lost | executed {:.2e} FLOPs",
+                stats.dispatched_jobs,
+                stats.local_jobs,
+                stats.remote_jobs,
+                stats.reassigned_jobs,
+                stats.cached_jobs,
+                stats.connections,
+                stats.workers_lost,
+                outcome.executed_flops,
             );
+            Ok(())
+        }
+        "worker" => {
+            // Fabric worker: engines only — results land in the
+            // coordinator's store, never here. The artifacts + corpus must
+            // match the coordinator's (the handshake refuses anything else).
+            const USAGE: &str = "worker --connect ADDR [--workers N] [--max-jobs K]";
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let connect = args
+                .get("connect")
+                .ok_or_else(|| anyhow::anyhow!("missing --connect ADDR — usage: {USAGE}"))?;
+            let opts = WorkerOptions {
+                workers: args.get_usize("workers", default_workers()),
+                progress: args.has("progress").then(ProgressSink::stderr),
+                max_jobs: args.get("max-jobs").and_then(|s| s.parse().ok()),
+            };
+            let report = run_worker(connect, &manifest, &corpus, &opts)?;
+            println!(
+                "worker done: {} job(s) executed{}",
+                report.jobs_executed,
+                if report.defected { " (defected at --max-jobs)" } else { "" }
+            );
+            Ok(())
+        }
+        "store" => {
+            const USAGE: &str = "store gc --store-dir D [--dry-run] [--keep N]";
+            let sub = positional(&args, 0, USAGE)?;
+            if sub != "gc" {
+                anyhow::bail!("unknown store subcommand '{sub}' — usage: {USAGE}");
+            }
+            let dir = args
+                .get("store-dir")
+                .ok_or_else(|| anyhow::anyhow!("missing --store-dir D — usage: {USAGE}"))?;
+            let dry_run = args.has("dry-run");
+            let keep = args.get_usize("keep", 1);
+            // A repository is either a bare store (journal at the root) or
+            // a shared one holding per-context `ctx-*` stores; GC each.
+            let root = std::path::Path::new(dir);
+            let mut roots = Vec::new();
+            if root.join("journal.log").is_file() {
+                roots.push(root.to_path_buf());
+            }
+            if let Ok(rd) = std::fs::read_dir(root) {
+                for e in rd.flatten() {
+                    let p = e.path();
+                    let ctx = e.file_name().to_string_lossy().starts_with("ctx-");
+                    if ctx && p.join("journal.log").is_file() {
+                        roots.push(p);
+                    }
+                }
+            }
+            if roots.is_empty() {
+                anyhow::bail!(
+                    "no run store under '{dir}' (expected journal.log or ctx-*/journal.log)"
+                );
+            }
+            roots.sort();
+            for p in roots {
+                let mut store = RunStore::open(&p)?;
+                let r = store.gc(dry_run, keep)?;
+                println!(
+                    "{}{}: collected {} run(s) + {} trunk(s), {} bytes; live: {} run(s), {} trunk(s)",
+                    if dry_run { "[dry-run] " } else { "" },
+                    p.display(),
+                    r.collected_runs.len(),
+                    r.collected_trunks.len(),
+                    r.bytes_reclaimed,
+                    r.live_runs,
+                    r.live_trunks,
+                );
+            }
             Ok(())
         }
         "probe-mixing" => {
@@ -477,7 +684,7 @@ fn main() -> Result<()> {
             let large = positional(&args, 1, "probe-mixing <small> <large>")?.to_string();
             let probe_steps = args.get_usize("probe-steps", steps);
             let production = args.get_usize("production-steps", steps * 10);
-            let workers = args.get_usize("workers", default_workers());
+            let workers = workers_from(&args)?;
             // With ≥ 2 workers the probe pair runs as two lockstep jobs on
             // engine-owning threads — identical outcome to the serial path.
             let outcome = if workers >= 2 {
@@ -539,7 +746,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         cmd if cmd.starts_with("bench-") => {
-            let workers = args.get_usize("workers", default_workers());
+            let workers = workers_from(&args)?;
             let store_dir = args.get("store-dir").map(std::path::PathBuf::from);
             let ctx = Ctx::new(&artifacts, &out, steps, seed, workers, store_dir)?;
             run_target(&ctx, &cmd[6..])
@@ -573,6 +780,20 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--probe --probe-steps N]       or probe-driven per round: each τ placed
         [--rewarm N]                    at stable_end − t_mix (Takeaway 6);
         [--workers N] [--store-dir D]   --rewarm re-warms LR after each round
+        [--strategies a,b]              a grid: one ladder per strategy
+  serve <cfg0> <cfg1> [<cfg2> ..]   fabric coordinator: the same ladder grid,
+        --listen HOST:PORT              executed over local engine threads
+        [--workers N]                   (--workers, default 0) plus every
+        [--taus F,F] [--strategies a,b] `repro worker` that connects; CSVs are
+        [--store-dir D]                 bit-identical to the serial ladder's;
+        [--heartbeat-timeout SECS]      --store-dir shares one artifact repo
+  worker --connect HOST:PORT        fabric worker: N engine threads executing
+        [--workers N] [--max-jobs K]    jobs for a `repro serve` coordinator;
+                                        --max-jobs K drops the connection after
+                                        K jobs (failure-injection drill)
+  store gc --store-dir D            collect cache entries no referencing sweep
+        [--dry-run] [--keep N]          still needs (liveness = the last N
+                                        journaled ref sets; default 1)
   probe-mixing <small> <large>      derive τ from two early-stopped probes (§7);
         [--workers N]                   ≥2 workers run the pair as lockstep jobs
   convex                            §4 convex-theory simulator
@@ -584,6 +805,8 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
                                     vs host-roundtrip steps/sec (BENCH_perf.json)
   bench-parallel                    pool-scaling benchmark: steps/sec at 1/2/4
                                     workers on a fixed grid (BENCH_parallel.json)
+  bench-fabric                      fabric benchmark: the same grid serial vs 1/2
+                                    loopback worker connections (BENCH_fabric.json)
   bench-ladder                      FLOP-matched ladder vs one-shot expansion vs
                                     fixed-depth comparison (BENCH_ladder.json)
   bench-all                         everything (grids honor --workers)
@@ -600,3 +823,34 @@ COMMON FLAGS
                      journal; repeated invocations skip completed work)
   --artifacts DIR (default artifacts)   --out DIR (default results)
 "#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parsed(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn workers_zero_is_a_friendly_error_not_a_silent_serial_run() {
+        let err = workers_from(&parsed("sweep --workers 0")).unwrap_err();
+        assert!(format!("{err:#}").contains("at least 1"), "{err:#}");
+        let err = workers_from(&parsed("ladder --workers nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("positive number"), "{err:#}");
+        assert_eq!(workers_from(&parsed("sweep --workers 3")).unwrap(), 3);
+        assert!(workers_from(&parsed("sweep")).unwrap() >= 1);
+    }
+
+    #[test]
+    fn serve_ladder_worker_store_have_flag_vocabularies() {
+        for cmd in ["serve", "worker", "store", "ladder", "sweep"] {
+            assert!(spec_for(cmd).is_some(), "{cmd} lost its CommandSpec");
+        }
+        // The hardened parse rejects typos on the new commands too.
+        let spec = spec_for("serve").unwrap();
+        let argv = "serve a b --lsten 1.2.3.4:5".split_whitespace().map(String::from);
+        let err = Args::parse_for(argv, &spec).unwrap_err();
+        assert!(err.contains("unknown flag --lsten"), "{err}");
+    }
+}

@@ -1,5 +1,6 @@
 //! Durable sweep store: a content-addressed on-disk run cache plus a
-//! crash-safe job journal (DESIGN.md §7).
+//! crash-safe job journal (DESIGN.md §7), shareable across processes as the
+//! fabric's artifact repository (DESIGN.md §9).
 //!
 //! The paper's figure grids train one family of models from a shared trunk;
 //! before this module, a killed sweep repaid **everything**, because trunk
@@ -16,9 +17,25 @@
 //!   exactly the sweep's sharing rule);
 //! - **journal.log** — append-only job journal. A cache file is trusted
 //!   only once its journal line is present, and the write order is always
-//!   *snapshot write → fsync → rename → journal append → fsync*, so a crash
+//!   *entry write → fsync → rename → journal append → fsync*, so a crash
 //!   at any point leaves either nothing or a whole, committed entry. A torn
 //!   trailing journal line is ignored at load.
+//!
+//! Since v2 every journal line carries the entry's **artifact manifest**
+//! (byte length + content digest, [`ArtifactManifest`]), and every load
+//! verifies the file against it — length first, then digest — before a
+//! single field is decoded. A repository shared between hosts (the fabric's
+//! coordinator serves trunk snapshots from it) can therefore never hand out
+//! a silently-corrupted artifact: corruption is an error at the reader, not
+//! a wrong curve three stages later. The journal also records:
+//!
+//! - `salt <s>` — the context salt the store was opened under
+//!   ([`RunStore::open_salted`] pins it on first open; a later open under a
+//!   different salt fails loudly instead of mixing contexts);
+//! - `refs run:<d> trunk:<d> ...` — the set of store keys each sweep
+//!   references ([`RunStore::record_refs`]), which is the liveness input to
+//!   [`RunStore::gc`]: ref-counting garbage collection by journal replay
+//!   (`repro store gc`), keeping shared repositories bounded.
 //!
 //! Results are deterministic functions of (plan, corpus, manifest), so the
 //! store salts its directory with a **context fingerprint** of the corpus
@@ -31,17 +48,18 @@
 //! whose numerics may differ (CI therefore keeps its bench store
 //! workspace-local to one job, never in a cross-commit cache).
 //!
-//! Consumers: [`crate::coordinator::Sweep`] (serial path) and
-//! [`crate::exec::run_graph`] (pool scheduler pre-pass + completion hook);
+//! Consumers: [`crate::coordinator::Sweep`] (serial path),
+//! [`crate::exec::run_graph`] (pool scheduler pre-pass + completion hook),
+//! and [`crate::fabric`] (coordinator-side commit point + artifact serving);
 //! surfaced as `Sweep::store(dir)` / `repro ... --store-dir`.
 
 use std::collections::{HashMap, HashSet};
 use std::fmt::Write as _;
 use std::fs::{File, OpenOptions};
-use std::io::{BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::checkpoint::{self, DriverSnapshot};
 use crate::coordinator::{RunPlan, RunResult};
@@ -51,36 +69,95 @@ use crate::runtime::{ConfigEntry, Manifest, ModelState, Tensor};
 
 const RUN_MAGIC: &[u8; 8] = b"DPTRUN01";
 /// Folded into every digest preimage; bump to invalidate all entries when
-/// the on-disk format or digest semantics change.
-pub const STORE_VERSION: u32 = 1;
+/// the on-disk format or digest semantics change. v2: artifact manifests
+/// (length + content digest) on every journal line, salt pinning, refs
+/// lines for GC.
+pub const STORE_VERSION: u32 = 2;
 
-/// 128-bit content digest (two independent FNV-1a-style lanes), hex-encoded
-/// to 32 chars. Not cryptographic — it keys a local cache where the ~2^64
-/// birthday bound is ample.
-pub fn digest_str(s: &str) -> String {
+/// 128-bit content digest of raw bytes (two independent FNV-1a-style
+/// lanes), hex-encoded to 32 chars. Not cryptographic — it keys a local
+/// cache and detects corruption, where the ~2^64 birthday bound is ample.
+pub fn digest_bytes(bytes: &[u8]) -> String {
     let mut a: u64 = 0xcbf2_9ce4_8422_2325;
     let mut b: u64 = 0x6c62_272e_07bb_0142;
-    for &byte in s.as_bytes() {
+    for &byte in bytes {
         a = (a ^ u64::from(byte)).wrapping_mul(0x0000_0100_0000_01b3);
         b = (b ^ u64::from(byte).rotate_left(17) ^ 0xa5a5).wrapping_mul(0x0000_0100_0000_01b3);
     }
     format!("{a:016x}{b:016x}")
 }
 
+/// [`digest_bytes`] over a string's UTF-8 bytes.
+pub fn digest_str(s: &str) -> String {
+    digest_bytes(s.as_bytes())
+}
+
 fn is_digest(s: &str) -> bool {
     s.len() == 32 && s.bytes().all(|c| c.is_ascii_hexdigit())
+}
+
+/// Integrity manifest of one store artifact: its exact byte length and
+/// content digest, journaled at commit time and verified on **every** load
+/// (length first — the cheap check — then digest) before any decoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactManifest {
+    pub len: u64,
+    pub digest: String,
+}
+
+impl ArtifactManifest {
+    pub fn of(bytes: &[u8]) -> ArtifactManifest {
+        ArtifactManifest { len: bytes.len() as u64, digest: digest_bytes(bytes) }
+    }
+
+    /// Verify `bytes` against this manifest. Corruption is an error with a
+    /// clear message, never a silent miss or a wrong hit.
+    pub fn verify(&self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() as u64 != self.len {
+            bail!(
+                "artifact is {} bytes but its journal manifest says {} (truncated or corrupted store?)",
+                bytes.len(),
+                self.len
+            );
+        }
+        let d = digest_bytes(bytes);
+        if d != self.digest {
+            bail!(
+                "artifact content digest {d} does not match its journal manifest {} (corrupted store?)",
+                self.digest
+            );
+        }
+        Ok(())
+    }
+}
+
+/// What [`RunStore::gc`] did (or, with `dry_run`, would do).
+#[derive(Debug, Default)]
+pub struct GcReport {
+    pub dry_run: bool,
+    /// Journaled run/trunk keys that are unreferenced by the kept refs sets.
+    pub collected_runs: Vec<String>,
+    pub collected_trunks: Vec<String>,
+    pub live_runs: usize,
+    pub live_trunks: usize,
+    /// Bytes of every cache file removed (incl. stray unjournaled files).
+    pub bytes_reclaimed: u64,
 }
 
 /// Content-addressed on-disk cache of sweep work. See module docs.
 pub struct RunStore {
     dir: PathBuf,
     journal: File,
-    /// Journaled (committed) run digests.
-    runs: HashSet<String>,
-    /// Journaled trunk digests → the trunk snapshot's ledger total, kept in
-    /// the journal line (bit-exact f64) so FLOP assembly over a fully-cached
-    /// group never has to read the snapshot file.
-    trunks: HashMap<String, f64>,
+    /// Journaled (committed) run digests → artifact manifests.
+    runs: HashMap<String, ArtifactManifest>,
+    /// Journaled trunk digests → (the trunk snapshot's ledger total, kept in
+    /// the journal line bit-exactly so FLOP assembly over a fully-cached
+    /// group never has to read the snapshot file; artifact manifest).
+    trunks: HashMap<String, (f64, ArtifactManifest)>,
+    /// Replayed `refs` journal lines, oldest first (tags like `run:<d>`).
+    refs: Vec<Vec<String>>,
+    /// Context salt the store is pinned to, if any.
+    salt: Option<String>,
 }
 
 impl RunStore {
@@ -88,13 +165,27 @@ impl RunStore {
     /// Unparseable or torn journal lines — the possible residue of a crash
     /// mid-append — are ignored; their cache files are simply re-earned.
     pub fn open(dir: impl AsRef<Path>) -> Result<RunStore> {
-        let dir = dir.as_ref().to_path_buf();
+        RunStore::open_impl(dir.as_ref().to_path_buf(), None)
+    }
+
+    /// Open a store under a per-context subdirectory of `dir` (see
+    /// [`RunStore::context_salt`]): entries from a different corpus or
+    /// manifest can never be served. The salt is pinned in the journal on
+    /// first open; re-opening the same directory under a different salt
+    /// (a mis-shared repository) fails loudly.
+    pub fn open_salted(dir: impl AsRef<Path>, salt: &str) -> Result<RunStore> {
+        RunStore::open_impl(dir.as_ref().join(format!("ctx-{salt}")), Some(salt))
+    }
+
+    fn open_impl(dir: PathBuf, expected_salt: Option<&str>) -> Result<RunStore> {
         std::fs::create_dir_all(dir.join("runs"))
             .with_context(|| format!("creating run store {dir:?}"))?;
         std::fs::create_dir_all(dir.join("trunks"))?;
         let jpath = dir.join("journal.log");
-        let mut runs = HashSet::new();
+        let mut runs = HashMap::new();
         let mut trunks = HashMap::new();
+        let mut refs: Vec<Vec<String>> = Vec::new();
+        let mut journal_salt: Option<String> = None;
         let mut torn_tail = false;
         if let Ok(text) = std::fs::read_to_string(&jpath) {
             torn_tail = !text.is_empty() && !text.ends_with('\n');
@@ -116,23 +207,57 @@ impl RunStore {
                 let mut it = line.split_whitespace();
                 match it.next() {
                     Some("run") => {
-                        if let Some(d) = it.next() {
-                            if is_digest(d) && it.next().is_none() {
-                                runs.insert(d.to_string());
+                        if let (Some(d), Some(len), Some(cd)) = (it.next(), it.next(), it.next()) {
+                            if is_digest(d) && is_digest(cd) && it.next().is_none() {
+                                if let Ok(len) = len.parse::<u64>() {
+                                    // Last line wins: a re-store after file
+                                    // loss may supersede the manifest.
+                                    runs.insert(
+                                        d.to_string(),
+                                        ArtifactManifest { len, digest: cd.to_string() },
+                                    );
+                                }
                             }
                         }
                     }
                     Some("trunk") => {
-                        if let (Some(d), Some(f)) = (it.next(), it.next()) {
-                            if is_digest(d) && it.next().is_none() {
-                                if let Ok(bits) = u64::from_str_radix(f, 16) {
-                                    trunks.insert(d.to_string(), f64::from_bits(bits));
+                        if let (Some(d), Some(fl), Some(len), Some(cd)) =
+                            (it.next(), it.next(), it.next(), it.next())
+                        {
+                            if is_digest(d) && is_digest(cd) && it.next().is_none() {
+                                if let (Ok(bits), Ok(len)) =
+                                    (u64::from_str_radix(fl, 16), len.parse::<u64>())
+                                {
+                                    trunks.insert(
+                                        d.to_string(),
+                                        (
+                                            f64::from_bits(bits),
+                                            ArtifactManifest { len, digest: cd.to_string() },
+                                        ),
+                                    );
                                 }
+                            }
+                        }
+                    }
+                    Some("refs") => refs.push(it.map(str::to_string).collect()),
+                    Some("salt") => {
+                        if let Some(s) = it.next() {
+                            if it.next().is_none() {
+                                journal_salt = Some(s.to_string());
                             }
                         }
                     }
                     _ => {} // header, garbage, or a torn tail line
                 }
+            }
+        }
+        if let (Some(exp), Some(found)) = (expected_salt, journal_salt.as_deref()) {
+            if exp != found {
+                bail!(
+                    "run store {dir:?} is pinned to context salt {found}, but this sweep's \
+                     context is {exp} — the store was built from a different corpus/manifest \
+                     and must not be shared with this one"
+                );
             }
         }
         let mut journal = OpenOptions::new()
@@ -150,14 +275,14 @@ impl RunStore {
             // crash-recovery path it exists for.
             journal.write_all(b"\n")?;
         }
-        Ok(RunStore { dir, journal, runs, trunks })
-    }
-
-    /// Open a store under a per-context subdirectory of `dir` (see
-    /// [`RunStore::context_salt`]): entries from a different corpus or
-    /// manifest can never be served.
-    pub fn open_salted(dir: impl AsRef<Path>, salt: &str) -> Result<RunStore> {
-        RunStore::open(dir.as_ref().join(format!("ctx-{salt}")))
+        let mut store = RunStore { dir, journal, runs, trunks, refs, salt: journal_salt };
+        if store.salt.is_none() {
+            if let Some(exp) = expected_salt {
+                store.append_journal(&format!("salt {exp}"))?;
+                store.salt = Some(exp.to_string());
+            }
+        }
+        Ok(store)
     }
 
     /// Fingerprint of everything *outside* the plan that determines run
@@ -193,6 +318,12 @@ impl RunStore {
         &self.dir
     }
 
+    /// The context salt this store is pinned to, if it was opened salted
+    /// (the fabric handshake compares this across processes).
+    pub fn salt(&self) -> Option<&str> {
+        self.salt.as_deref()
+    }
+
     fn run_path(&self, digest: &str) -> PathBuf {
         self.dir.join("runs").join(format!("{digest}.run"))
     }
@@ -215,7 +346,7 @@ impl RunStore {
 
     /// True when `digest` is journaled *and* its entry file is present.
     pub fn has_run(&self, digest: &str) -> bool {
-        self.runs.contains(digest) && self.run_path(digest).exists()
+        self.runs.contains_key(digest) && self.run_path(digest).exists()
     }
 
     /// Cache lookup for one plan. On a hit, the stored curve is renamed to
@@ -240,47 +371,36 @@ impl RunStore {
     }
 
     /// Persist a completed run: atomic file write (+fsync), then journal
-    /// commit. Idempotent — re-storing a committed digest is a no-op (or a
-    /// file rewrite when the entry file was deleted out from under us).
+    /// commit with the entry's artifact manifest. Idempotent — re-storing a
+    /// committed digest is a no-op (or a file rewrite when the entry file
+    /// was deleted out from under us, e.g. by [`RunStore::gc`]).
     pub fn store_run(
         &mut self,
         digest: &str,
         result: &RunResult,
         state: Option<&ModelState>,
     ) -> Result<()> {
-        let journaled = self.runs.contains(digest);
         let path = self.run_path(digest);
-        if journaled && path.exists() {
+        if self.runs.contains_key(digest) && path.exists() {
             return Ok(());
         }
-        checkpoint::write_atomic(&path, |f| {
-            f.write_all(RUN_MAGIC)?;
-            checkpoint::write_str(f, &result.curve.name)?;
-            checkpoint::write_f32(f, result.final_val_loss)?;
-            checkpoint::write_ledger(f, &result.ledger)?;
-            checkpoint::write_curve_points(f, &result.curve.points)?;
-            checkpoint::write_boundaries(f, &result.boundaries)?;
-            match state {
-                None => checkpoint::write_u64(f, 0)?,
-                Some(s) => {
-                    checkpoint::write_u64(f, 1)?;
-                    write_tensor_list(f, &s.params)?;
-                    write_tensor_list(f, &s.opt)?;
-                }
-            }
-            Ok(())
-        })
-        .with_context(|| format!("writing run-cache entry {digest}"))?;
-        if !journaled {
-            self.append_journal(&format!("run {digest}"))?;
-            self.runs.insert(digest.to_string());
+        let mut bytes = Vec::new();
+        write_run_entry(&mut bytes, result, state)?;
+        let manifest = ArtifactManifest::of(&bytes);
+        checkpoint::write_atomic(&path, |f| f.write_all(&bytes).map_err(Into::into))
+            .with_context(|| format!("writing run-cache entry {digest}"))?;
+        if self.runs.get(digest) != Some(&manifest) {
+            self.append_journal(&format!("run {digest} {} {}", manifest.len, manifest.digest))?;
+            self.runs.insert(digest.to_string(), manifest);
         }
         Ok(())
     }
 
-    /// Read a committed run entry, renaming its curve to `run_name`. With
-    /// `want_state` false the final-state section — the dominant bytes of
-    /// an entry — is never read or allocated (warm bench reruns stay cheap).
+    /// Read a committed run entry, renaming its curve to `run_name`. The
+    /// file's bytes are verified against the journaled artifact manifest
+    /// (length, then content digest) before any field is decoded. With
+    /// `want_state` false the final-state section is read for verification
+    /// but never decoded into tensors.
     pub fn load_run(
         &self,
         digest: &str,
@@ -289,31 +409,13 @@ impl RunStore {
     ) -> Result<(RunResult, Option<ModelState>)> {
         let path = self.run_path(digest);
         let read = || -> Result<(RunResult, Option<ModelState>)> {
-            let mut f = BufReader::new(File::open(&path)?);
-            let mut magic = [0u8; 8];
-            f.read_exact(&mut magic)?;
-            if &magic != RUN_MAGIC {
-                bail!("not a DPT run-cache entry");
-            }
-            let _stored_name = checkpoint::read_str(&mut f)?;
-            let final_val_loss = checkpoint::read_f32(&mut f)?;
-            let ledger = checkpoint::read_ledger(&mut f)?;
-            let mut curve = Curve::new(run_name);
-            curve.points = checkpoint::read_curve_points(&mut f)?;
-            let boundaries = checkpoint::read_boundaries(&mut f)?;
-            let state = if !want_state {
-                None
-            } else {
-                match checkpoint::read_u64(&mut f)? {
-                    0 => None,
-                    1 => Some(ModelState {
-                        params: read_tensor_list(&mut f)?,
-                        opt: read_tensor_list(&mut f)?,
-                    }),
-                    other => bail!("bad state-presence flag {other}"),
-                }
-            };
-            Ok((RunResult { curve, ledger, boundaries, final_val_loss }, state))
+            let manifest = self
+                .runs
+                .get(digest)
+                .ok_or_else(|| anyhow!("run {digest} has no journal entry"))?;
+            let bytes = std::fs::read(&path)?;
+            manifest.verify(&bytes)?;
+            read_run_entry(&mut &bytes[..], run_name, want_state)
         };
         read().with_context(|| {
             format!("reading cached run {digest} from {path:?} (truncated or corrupted store?)")
@@ -326,7 +428,7 @@ impl RunStore {
     /// snapshot-file deletion — enough for bit-exact FLOP assembly over a
     /// fully-cached group.
     pub fn trunk_flops(&self, digest: &str) -> Option<f64> {
-        self.trunks.get(digest).copied()
+        self.trunks.get(digest).map(|(f, _)| *f)
     }
 
     /// True when the trunk is journaled and its snapshot file is present
@@ -336,31 +438,57 @@ impl RunStore {
     }
 
     /// Persist a trunk fork snapshot (`DPTDRV01` via [`crate::checkpoint`]),
-    /// then journal `trunk <digest> <ledger-total-bits>`.
+    /// then journal `trunk <digest> <ledger-total-bits> <len> <content>`.
     pub fn store_trunk(
         &mut self,
         digest: &str,
         snap: &DriverSnapshot,
         entry: &ConfigEntry,
     ) -> Result<()> {
-        let journaled = self.trunks.contains_key(digest);
         let path = self.trunk_path(digest);
-        if journaled && path.exists() {
+        if self.trunks.contains_key(digest) && path.exists() {
             return Ok(());
         }
-        checkpoint::save_snapshot(&path, snap, entry)
+        let mut bytes = Vec::new();
+        checkpoint::write_snapshot_to(&mut bytes, snap, entry)
+            .with_context(|| format!("serializing trunk-cache entry {digest}"))?;
+        let manifest = ArtifactManifest::of(&bytes);
+        checkpoint::write_atomic(&path, |f| f.write_all(&bytes).map_err(Into::into))
             .with_context(|| format!("writing trunk-cache entry {digest}"))?;
-        if !journaled {
-            self.append_journal(&format!("trunk {digest} {:016x}", snap.ledger.total.to_bits()))?;
-            self.trunks.insert(digest.to_string(), snap.ledger.total);
+        if self.trunks.get(digest).map(|(_, m)| m) != Some(&manifest) {
+            self.append_journal(&format!(
+                "trunk {digest} {:016x} {} {}",
+                snap.ledger.total.to_bits(),
+                manifest.len,
+                manifest.digest
+            ))?;
+            self.trunks.insert(digest.to_string(), (snap.ledger.total, manifest));
         }
         Ok(())
     }
 
-    /// Load a committed trunk snapshot, validated against `entry` (the
-    /// group's stage-0 config). Corruption is an error, never a cache hit.
+    /// Read a committed trunk snapshot's raw verified bytes (the fabric
+    /// serves these to workers without decoding them).
+    pub fn load_trunk_bytes(&self, digest: &str) -> Result<Vec<u8>> {
+        let path = self.trunk_path(digest);
+        let read = || -> Result<Vec<u8>> {
+            let (_, manifest) = self
+                .trunks
+                .get(digest)
+                .ok_or_else(|| anyhow!("trunk {digest} has no journal entry"))?;
+            let bytes = std::fs::read(&path)?;
+            manifest.verify(&bytes)?;
+            Ok(bytes)
+        };
+        read().with_context(|| format!("reading cached trunk {digest} from store {:?}", self.dir))
+    }
+
+    /// Load a committed trunk snapshot, validated against the journaled
+    /// artifact manifest and then against `entry` (the group's stage-0
+    /// config). Corruption is an error, never a cache hit.
     pub fn load_trunk(&self, digest: &str, entry: &ConfigEntry) -> Result<DriverSnapshot> {
-        checkpoint::load_snapshot(&self.trunk_path(digest), entry)
+        let bytes = self.load_trunk_bytes(digest)?;
+        checkpoint::read_snapshot_from(&mut &bytes[..], entry)
             .with_context(|| format!("reading cached trunk {digest} from store {:?}", self.dir))
     }
 
@@ -383,6 +511,148 @@ impl RunStore {
         }
         Ok(snap)
     }
+
+    // ----------------------------------------------------- refs + GC
+
+    /// Journal the set of store keys a sweep references (its plan digests
+    /// and trunk digests) — the liveness input to [`RunStore::gc`]. Called
+    /// once per sweep before execution, so even an interrupted sweep's
+    /// partial artifacts stay referenced.
+    pub fn record_refs<'a>(
+        &mut self,
+        run_digests: impl IntoIterator<Item = &'a str>,
+        trunk_digests: impl IntoIterator<Item = &'a str>,
+    ) -> Result<()> {
+        let mut tags: Vec<String> =
+            run_digests.into_iter().map(|d| format!("run:{d}")).collect();
+        tags.extend(trunk_digests.into_iter().map(|d| format!("trunk:{d}")));
+        tags.sort();
+        tags.dedup();
+        self.append_journal(&format!("refs {}", tags.join(" ")))?;
+        self.refs.push(tags);
+        Ok(())
+    }
+
+    /// Ref-counting garbage collection by journal replay: every journaled
+    /// entry not referenced by the last `keep` (≥1) `refs` sets is
+    /// collected, along with any stray unjournaled file in the cache
+    /// directories (torn temp files are invisible to lookups but still
+    /// occupy bytes). A store with **no** refs lines collects nothing —
+    /// liveness would be a guess. With `dry_run` the report is computed and
+    /// nothing is touched. A real GC ends by compacting the journal
+    /// atomically (tmp + fsync + rename), so collected keys do not
+    /// resurrect on reopen.
+    pub fn gc(&mut self, dry_run: bool, keep: usize) -> Result<GcReport> {
+        let mut report = GcReport { dry_run, ..Default::default() };
+        if self.refs.is_empty() {
+            report.live_runs = self.runs.len();
+            report.live_trunks = self.trunks.len();
+            return Ok(report);
+        }
+        let keep = keep.max(1);
+        let start = self.refs.len().saturating_sub(keep);
+        let mut live_runs: HashSet<&str> = HashSet::new();
+        let mut live_trunks: HashSet<&str> = HashSet::new();
+        for tags in &self.refs[start..] {
+            for t in tags {
+                if let Some(d) = t.strip_prefix("run:") {
+                    live_runs.insert(d);
+                } else if let Some(d) = t.strip_prefix("trunk:") {
+                    live_trunks.insert(d);
+                }
+            }
+        }
+        report.collected_runs =
+            self.runs.keys().filter(|d| !live_runs.contains(d.as_str())).cloned().collect();
+        report.collected_trunks =
+            self.trunks.keys().filter(|d| !live_trunks.contains(d.as_str())).cloned().collect();
+        report.collected_runs.sort();
+        report.collected_trunks.sort();
+        report.live_runs = self.runs.len() - report.collected_runs.len();
+        report.live_trunks = self.trunks.len() - report.collected_trunks.len();
+        // Keep exactly the journaled-and-live files; everything else in the
+        // cache directories (dead entries, unjournaled strays, leftover
+        // temp files) is collectable.
+        let keep_files: [HashSet<String>; 2] = [
+            self.runs
+                .keys()
+                .filter(|d| live_runs.contains(d.as_str()))
+                .map(|d| format!("{d}.run"))
+                .collect(),
+            self.trunks
+                .keys()
+                .filter(|d| live_trunks.contains(d.as_str()))
+                .map(|d| format!("{d}.snap"))
+                .collect(),
+        ];
+        for (sub, keep_files) in ["runs", "trunks"].iter().zip(&keep_files) {
+            let dirp = self.dir.join(sub);
+            for e in std::fs::read_dir(&dirp).with_context(|| format!("listing {dirp:?}"))? {
+                let e = e?;
+                let name = e.file_name().to_string_lossy().into_owned();
+                if keep_files.contains(&name) {
+                    continue;
+                }
+                report.bytes_reclaimed += e.metadata().map(|m| m.len()).unwrap_or(0);
+                if !dry_run {
+                    let path = e.path();
+                    std::fs::remove_file(&path)
+                        .with_context(|| format!("collecting {path:?}"))?;
+                }
+            }
+        }
+        if !dry_run {
+            for d in &report.collected_runs {
+                self.runs.remove(d);
+            }
+            for d in &report.collected_trunks {
+                self.trunks.remove(d);
+            }
+            if start > 0 {
+                self.refs.drain(..start);
+            }
+            self.compact_journal()?;
+        }
+        Ok(report)
+    }
+
+    /// Rewrite the journal to exactly the in-memory state (header, salt,
+    /// surviving entries, kept refs), atomically: tmp + fsync + rename,
+    /// then reopen the append handle on the new file.
+    fn compact_journal(&mut self) -> Result<()> {
+        let jpath = self.dir.join("journal.log");
+        let tmp = self.dir.join(format!("journal.tmp{}", std::process::id()));
+        let mut text = format!("DPTSTORE v{STORE_VERSION}\n");
+        if let Some(s) = &self.salt {
+            let _ = writeln!(text, "salt {s}");
+        }
+        let mut runs: Vec<_> = self.runs.iter().collect();
+        runs.sort_by(|a, b| a.0.cmp(b.0));
+        for (d, m) in runs {
+            let _ = writeln!(text, "run {d} {} {}", m.len, m.digest);
+        }
+        let mut trunks: Vec<_> = self.trunks.iter().collect();
+        trunks.sort_by(|a, b| a.0.cmp(b.0));
+        for (d, (fl, m)) in trunks {
+            let _ = writeln!(text, "trunk {d} {:016x} {} {}", fl.to_bits(), m.len, m.digest);
+        }
+        for tags in &self.refs {
+            let _ = writeln!(text, "refs {}", tags.join(" "));
+        }
+        {
+            let f = File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            let mut w = std::io::BufWriter::new(f);
+            w.write_all(text.as_bytes())?;
+            w.flush()?;
+            w.get_ref().sync_all()?;
+        }
+        std::fs::rename(&tmp, &jpath).context("publishing compacted store journal")?;
+        self.journal = OpenOptions::new()
+            .append(true)
+            .open(&jpath)
+            .context("reopening compacted store journal")?;
+        Ok(())
+    }
 }
 
 impl std::fmt::Debug for RunStore {
@@ -391,8 +661,72 @@ impl std::fmt::Debug for RunStore {
             .field("dir", &self.dir)
             .field("runs", &self.runs.len())
             .field("trunks", &self.trunks.len())
+            .field("refs", &self.refs.len())
+            .field("salt", &self.salt)
             .finish()
     }
+}
+
+// --------------------------------------------------- run-entry byte codec
+// (shared by the on-disk store and the fabric wire: a `RunResult` shipped
+// over TCP is byte-identical to its cache-entry form)
+
+/// Serialize a completed run (`DPTRUN01`): curve, ledger, boundaries, final
+/// val loss, and optionally the final model state.
+pub fn write_run_entry(
+    f: &mut impl Write,
+    result: &RunResult,
+    state: Option<&ModelState>,
+) -> Result<()> {
+    f.write_all(RUN_MAGIC)?;
+    checkpoint::write_str(f, &result.curve.name)?;
+    checkpoint::write_f32(f, result.final_val_loss)?;
+    checkpoint::write_ledger(f, &result.ledger)?;
+    checkpoint::write_curve_points(f, &result.curve.points)?;
+    checkpoint::write_boundaries(f, &result.boundaries)?;
+    match state {
+        None => checkpoint::write_u64(f, 0)?,
+        Some(s) => {
+            checkpoint::write_u64(f, 1)?;
+            write_tensor_list(f, &s.params)?;
+            write_tensor_list(f, &s.opt)?;
+        }
+    }
+    Ok(())
+}
+
+/// Decode a `DPTRUN01` run entry, renaming its curve to `run_name`. With
+/// `want_state` false the final-state section — the dominant bytes of an
+/// entry — is never decoded or allocated.
+pub fn read_run_entry(
+    f: &mut impl Read,
+    run_name: &str,
+    want_state: bool,
+) -> Result<(RunResult, Option<ModelState>)> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != RUN_MAGIC {
+        bail!("not a DPT run-cache entry");
+    }
+    let _stored_name = checkpoint::read_str(f)?;
+    let final_val_loss = checkpoint::read_f32(f)?;
+    let ledger = checkpoint::read_ledger(f)?;
+    let mut curve = Curve::new(run_name);
+    curve.points = checkpoint::read_curve_points(f)?;
+    let boundaries = checkpoint::read_boundaries(f)?;
+    let state = if !want_state {
+        None
+    } else {
+        match checkpoint::read_u64(f)? {
+            0 => None,
+            1 => Some(ModelState {
+                params: read_tensor_list(f)?,
+                opt: read_tensor_list(f)?,
+            }),
+            other => bail!("bad state-presence flag {other}"),
+        }
+    };
+    Ok((RunResult { curve, ledger, boundaries, final_val_loss }, state))
 }
 
 /// Positional (nameless) tensor list — the final-state section of a run
@@ -479,6 +813,8 @@ mod tests {
         assert_ne!(a.digest(), b.digest());
         assert_eq!(a.trunk_digest(), b.trunk_digest());
         assert_ne!(a.trunk_digest(), plan("a", 60, 1).trunk_digest());
+        // Byte and string digests agree on the same content.
+        assert_eq!(digest_str("abc"), digest_bytes(b"abc"));
     }
 
     #[test]
@@ -547,13 +883,19 @@ mod tests {
         store.store_run(&digest, &result("p"), Some(&state())).unwrap();
         let path = store.run_path(&digest);
         let bytes = std::fs::read(&path).unwrap();
-        // Cut inside the ledger (well before the state section), so the
-        // truncation bites for both state-less and state-ful lookups.
+        // Truncation is caught by the manifest length check...
         std::fs::write(&path, &bytes[..60]).unwrap();
         assert!(store.lookup(&p, false).is_err(), "truncated committed entry must error");
-        // Cut inside the state section: only a keep-state lookup reads it.
         std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
         assert!(store.lookup(&p, true).is_err(), "state-truncated entry must error");
+        // ...and a same-length bit flip by the content digest, even in the
+        // state section a state-less lookup never decodes.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = store.lookup(&p, false).unwrap_err();
+        assert!(format!("{err:#}").contains("content digest"), "{err:#}");
         std::fs::write(&path, b"XXXXXXXXtrash").unwrap();
         assert!(store.lookup(&p, false).is_err(), "wrong-magic committed entry must error");
         std::fs::remove_dir_all(&dir).ok();
@@ -598,8 +940,16 @@ mod tests {
         let mut store = RunStore::open(&dir).unwrap();
         let digest = digest_str("some trunk");
         // Hand-journal a trunk (as if its snapshot was pruned later).
-        store.append_journal(&format!("trunk {digest} {:016x}", 1234.5f64.to_bits())).unwrap();
-        store.trunks.insert(digest.clone(), 1234.5);
+        let m = ArtifactManifest::of(b"");
+        store
+            .append_journal(&format!(
+                "trunk {digest} {:016x} {} {}",
+                1234.5f64.to_bits(),
+                m.len,
+                m.digest
+            ))
+            .unwrap();
+        store.trunks.insert(digest.clone(), (1234.5, m));
         drop(store);
         let store = RunStore::open(&dir).unwrap();
         assert_eq!(store.trunk_flops(&digest).map(f64::to_bits), Some(1234.5f64.to_bits()));
@@ -617,5 +967,110 @@ mod tests {
         assert!(store.lookup(&p, false).unwrap().is_some());
         assert!(store.lookup(&p, true).unwrap().is_none(), "state-less entry cannot serve keep_states");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn salted_store_pins_its_context() {
+        let dir = tmp("saltpin");
+        std::fs::remove_dir_all(&dir).ok();
+        let s1 = digest_str("context one");
+        let s2 = digest_str("context two");
+        {
+            let store = RunStore::open_salted(&dir, &s1).unwrap();
+            assert_eq!(store.salt(), Some(s1.as_str()));
+        }
+        // Reopening under the same salt is fine (and the pin survives).
+        {
+            let store = RunStore::open_salted(&dir, &s1).unwrap();
+            assert_eq!(store.salt(), Some(s1.as_str()));
+        }
+        // Simulate mis-sharing: the ctx directory of context one is handed
+        // to a sweep in context two. The pinned salt must refuse.
+        std::fs::rename(dir.join(format!("ctx-{s1}")), dir.join(format!("ctx-{s2}"))).unwrap();
+        let err = RunStore::open_salted(&dir, &s2).unwrap_err().to_string();
+        assert!(err.contains("pinned to context salt"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_collects_only_unreferenced_entries() {
+        let dir = tmp("gc");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let keep_p = plan("keep", 40, 1);
+        let drop_a = plan("drop_a", 40, 2);
+        let drop_b = plan("drop_b", 60, 3);
+        for p in [&keep_p, &drop_a, &drop_b] {
+            store.store_run(&p.digest(), &result(p.name()), None).unwrap();
+        }
+        // Without any refs line, GC must collect nothing.
+        let report = store.gc(false, 1).unwrap();
+        assert!(report.collected_runs.is_empty());
+        assert_eq!(report.live_runs, 3);
+        // Record a sweep referencing only `keep`.
+        store.record_refs([keep_p.digest().as_str()], []).unwrap();
+        // Stray unjournaled file is collectable too.
+        std::fs::write(dir.join("runs").join("stray.run.tmp999"), b"leftover").unwrap();
+        let dry = store.gc(true, 1).unwrap();
+        assert!(dry.dry_run);
+        let mut expected = vec![drop_a.digest(), drop_b.digest()];
+        expected.sort();
+        assert_eq!(dry.collected_runs, expected);
+        assert!(dry.bytes_reclaimed > 0);
+        assert!(store.has_run(&drop_a.digest()), "dry run must not delete");
+        let real = store.gc(false, 1).unwrap();
+        assert_eq!(real.collected_runs, expected);
+        assert!(store.has_run(&keep_p.digest()));
+        assert!(!store.has_run(&drop_a.digest()));
+        assert!(!store.has_run(&drop_b.digest()));
+        assert!(!dir.join("runs").join("stray.run.tmp999").exists());
+        drop(store);
+        // The compacted journal must not resurrect collected keys, and the
+        // survivor must still verify.
+        let mut store = RunStore::open(&dir).unwrap();
+        assert!(store.has_run(&keep_p.digest()));
+        assert!(!store.has_run(&drop_a.digest()));
+        assert!(store.lookup(&keep_p, false).unwrap().is_some());
+        // A collected entry can be re-earned.
+        store.store_run(&drop_a.digest(), &result("drop_a"), None).unwrap();
+        assert!(store.has_run(&drop_a.digest()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_keep_n_unions_recent_refs() {
+        let dir = tmp("gc_keep");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = RunStore::open(&dir).unwrap();
+        let a = plan("a", 40, 1);
+        let b = plan("b", 40, 2);
+        store.store_run(&a.digest(), &result("a"), None).unwrap();
+        store.store_run(&b.digest(), &result("b"), None).unwrap();
+        store.record_refs([a.digest().as_str()], []).unwrap();
+        store.record_refs([b.digest().as_str()], []).unwrap();
+        // keep=2 unions both sweeps' refs: nothing to collect.
+        let report = store.gc(false, 2).unwrap();
+        assert!(report.collected_runs.is_empty());
+        assert!(store.has_run(&a.digest()) && store.has_run(&b.digest()));
+        // keep=1 keeps only the latest sweep's refs.
+        let report = store.gc(false, 1).unwrap();
+        assert_eq!(report.collected_runs, vec![a.digest()]);
+        assert!(!store.has_run(&a.digest()) && store.has_run(&b.digest()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_entry_codec_roundtrips_through_plain_bytes() {
+        // The wire form is the file format: encode to a Vec, decode back.
+        let res = result("orig");
+        let st = state();
+        let mut bytes = Vec::new();
+        write_run_entry(&mut bytes, &res, Some(&st)).unwrap();
+        let (back, bstate) = read_run_entry(&mut &bytes[..], "renamed", true).unwrap();
+        assert_eq!(back.curve.name, "renamed");
+        assert_eq!(back.curve.points, res.curve.points);
+        assert_eq!(back.ledger.total.to_bits(), res.ledger.total.to_bits());
+        assert_eq!(bstate.unwrap().params[0].data, st.params[0].data);
+        std::fs::remove_dir_all(tmp("unused")).ok();
     }
 }

@@ -723,6 +723,213 @@ fn ladder_sweep_parallel_and_warm_store_bit_identical_to_serial_cold() {
 }
 
 #[test]
+fn fabric_ladder_grid_bit_identical_to_serial_even_after_worker_loss() {
+    // Acceptance (distributed sweep fabric, DESIGN.md §9): a multi-round
+    // ladder grid executed by a coordinator + two real `repro worker`
+    // subprocesses over loopback TCP — one of which defects after a single
+    // job (`--max-jobs 1`), forcing dead-worker reassignment — must
+    // assemble curves, final model states, and executed/shared FLOP totals
+    // bit-identical to the serial sweep. A second coordinator run against
+    // the now-warm shared store must dispatch zero jobs.
+    use deep_progressive::coordinator::{LadderRound, RunPlan, SweepOutcome};
+    use deep_progressive::exec::JobGraph;
+    use deep_progressive::fabric::{FabricOptions, FabricServer};
+    use deep_progressive::store::RunStore;
+    use std::process::{Child, Command, Stdio};
+
+    let Some(m) = manifest() else { return };
+    // Must match the corpus `repro worker` builds for itself, or the
+    // handshake's context salt rightly refuses the fleet.
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let total = 160;
+    let taus = [40usize, 80, 120];
+    let ladder = |name: &str, last_rewarm: usize| -> RunPlan {
+        let rounds = vec![
+            LadderRound::new("gpt2.l1", taus[0], ExpandSpec::default()),
+            LadderRound::new("gpt2.l2", taus[1], ExpandSpec::default()),
+            LadderRound::new("gpt2.l3", taus[2], ExpandSpec::default()).rewarm(last_rewarm),
+        ];
+        RunBuilder::ladder(name, "gpt2.l0", &rounds, total, sched)
+            .eval_every(20)
+            .build()
+            .unwrap()
+    };
+    let grid = || -> Vec<RunPlan> {
+        vec![
+            ladder("fab-plain", 0),
+            ladder("fab-rewarm", 8),
+            RunBuilder::fixed("fab-fixed", "gpt2.l3", total, sched).eval_every(20).build().unwrap(),
+        ]
+    };
+
+    let assert_identical = |a: &SweepOutcome, b: &SweepOutcome, what: &str| {
+        assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+        assert_eq!(a.executed_flops.to_bits(), b.executed_flops.to_bits(), "{what}: executed_flops");
+        assert_eq!(a.shared_flops.to_bits(), b.shared_flops.to_bits(), "{what}: shared_flops");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.curve.name, y.curve.name, "{what}: result order");
+            assert_eq!(x.curve.points.len(), y.curve.points.len(), "{what}: curve length");
+            for (p, q) in x.curve.points.iter().zip(&y.curve.points) {
+                assert_eq!(p, q, "{what}: curve diverged ('{}')", x.curve.name);
+            }
+            assert_eq!(x.boundaries, y.boundaries, "{what}: boundaries");
+            assert_eq!(x.ledger.total.to_bits(), y.ledger.total.to_bits(), "{what}: ledger");
+            assert_eq!(x.final_val_loss.to_bits(), y.final_val_loss.to_bits(), "{what}: final loss");
+        }
+        for (i, (x, y)) in a.final_states.iter().zip(&b.final_states).enumerate() {
+            let (x, y) = (x.as_ref().expect("kept state"), y.as_ref().expect("kept state"));
+            for (s, t) in x.params.iter().zip(&y.params) {
+                assert_eq!(s.data, t.data, "{what}: final params diverged (run {i})");
+            }
+            for (s, t) in x.opt.iter().zip(&y.opt) {
+                assert_eq!(s.data, t.data, "{what}: final opt state diverged (run {i})");
+            }
+        }
+    };
+
+    // Serial reference: the caller's engine, no store, no network.
+    let reference = {
+        let engine = Engine::cpu().unwrap();
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        let mut sweep = Sweep::new(trainer);
+        sweep.keep_final_states(true);
+        for p in grid() {
+            sweep.add(p);
+        }
+        sweep.run().unwrap()
+    };
+
+    let artifacts_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let spawn_worker = |addr: &str, max_jobs: Option<usize>| -> Child {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+        cmd.arg("worker")
+            .arg("--artifacts")
+            .arg(&artifacts_root)
+            .arg("--connect")
+            .arg(addr)
+            .arg("--workers")
+            .arg("2")
+            .stdout(Stdio::null())
+            .stderr(Stdio::null());
+        if let Some(k) = max_jobs {
+            cmd.arg("--max-jobs").arg(k.to_string());
+        }
+        cmd.spawn().expect("spawning a repro worker subprocess")
+    };
+
+    let dir = std::env::temp_dir().join(format!("dpt_fabric_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let salt = RunStore::context_salt(&m, &corpus);
+    let graph = JobGraph::lower(grid()).unwrap();
+    let opts = FabricOptions { keep_states: true, ..FabricOptions::default() };
+
+    // Coordinator + 2 worker processes; the defector executes one job and
+    // then drops its connection on the next assignment, like a crash.
+    let server = FabricServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut defector = spawn_worker(&addr, Some(1));
+    let mut survivor = spawn_worker(&addr, None);
+    let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+    let (outcome, stats) = server.run(&m, &corpus, &graph, &opts, Some(&mut store)).unwrap();
+    drop(store);
+    assert!(defector.wait().unwrap().success(), "defecting worker must still exit cleanly");
+    assert!(survivor.wait().unwrap().success(), "surviving worker must exit cleanly");
+
+    assert_eq!(stats.connections, 2, "both workers must have connected");
+    assert!(stats.workers_lost >= 1, "the defector must be declared lost: {stats:?}");
+    assert!(stats.reassigned_jobs >= 1, "its jobs must be reassigned: {stats:?}");
+    assert!(stats.remote_jobs >= 1, "remote slots must have executed jobs: {stats:?}");
+    assert_eq!(stats.cached_jobs, 0, "first run starts from a cold store");
+    assert_identical(&reference, &outcome, "fabric grid with a lost worker");
+
+    // Warm shared repository: a fresh coordinator dispatches nothing.
+    let server = FabricServer::bind("127.0.0.1:0").unwrap();
+    let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+    let (warm, wstats) = server.run(&m, &corpus, &graph, &opts, Some(&mut store)).unwrap();
+    assert_eq!(wstats.dispatched_jobs, 0, "warm rerun must dispatch zero jobs: {wstats:?}");
+    assert_eq!(wstats.connections, 0, "a fully warm run never touches the network");
+    assert_identical(&reference, &warm, "warm fabric rerun");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_gc_then_resume_retrains_exactly_the_collected_work() {
+    // Acceptance (`repro store gc`): after a narrower sweep re-records its
+    // refs, GC collects the runs only the wider grid referenced; rerunning
+    // the wider grid against the collected store re-trains exactly those
+    // runs (the survivor is served from cache) and ends bit-identical.
+    use deep_progressive::coordinator::{RunPlan, SweepOutcome};
+    use deep_progressive::exec::JobGraph;
+    use deep_progressive::fabric::{FabricOptions, FabricServer};
+    use deep_progressive::store::RunStore;
+
+    let Some(m) = manifest() else { return };
+    let corpus = small_corpus();
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let fixed = |name: &str, seed: u64| -> RunPlan {
+        RunBuilder::fixed(name, "gpt2.l1", 80, sched).eval_every(20).seed(seed).build().unwrap()
+    };
+    let grid = || vec![fixed("gc-a", 1), fixed("gc-b", 2), fixed("gc-c", 3)];
+
+    let dir = std::env::temp_dir().join(format!("dpt_gc_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let salt = RunStore::context_salt(&m, &corpus);
+    // Through the coordinator with local engine threads: the same
+    // record-refs → execute → journal path a distributed sweep takes.
+    let serve = |plans: Vec<RunPlan>| {
+        let graph = JobGraph::lower(plans).unwrap();
+        let server = FabricServer::bind("127.0.0.1:0").unwrap();
+        let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+        let opts =
+            FabricOptions { local_workers: 2, keep_states: true, ..FabricOptions::default() };
+        server.run(&m, &corpus, &graph, &opts, Some(&mut store)).unwrap()
+    };
+
+    let (full, stats) = serve(grid());
+    assert_eq!(stats.dispatched_jobs, 3);
+    assert_eq!(stats.local_jobs, 3);
+
+    // A narrower sweep referencing only gc-a: fully cached, but its refs
+    // line supersedes the grid's for liveness.
+    let (_, sub) = serve(vec![fixed("gc-a", 1)]);
+    assert_eq!(sub.dispatched_jobs, 0, "the survivor must be cache-served: {sub:?}");
+
+    // Dry-run first: reports the two dead runs, touches nothing.
+    let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+    let dry = store.gc(true, 1).unwrap();
+    assert_eq!(dry.collected_runs.len(), 2, "{dry:?}");
+    assert_eq!(dry.live_runs, 1, "{dry:?}");
+    let real = store.gc(false, 1).unwrap();
+    assert_eq!(real.collected_runs, dry.collected_runs, "dry-run must predict the real GC");
+    assert!(real.bytes_reclaimed > 0);
+    drop(store);
+
+    // Resume the wide grid: exactly the collected runs re-train.
+    let (resumed, rstats) = serve(grid());
+    assert_eq!(rstats.dispatched_jobs, 2, "only the GC'd runs may re-train: {rstats:?}");
+    assert_eq!(rstats.cached_jobs, 1, "the survivor must still be cache-served: {rstats:?}");
+
+    let assert_identical = |a: &SweepOutcome, b: &SweepOutcome| {
+        assert_eq!(a.results.len(), b.results.len());
+        assert_eq!(a.executed_flops.to_bits(), b.executed_flops.to_bits());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.curve.name, y.curve.name);
+            assert_eq!(x.curve.points, y.curve.points, "curve diverged ('{}')", x.curve.name);
+            assert_eq!(x.final_val_loss.to_bits(), y.final_val_loss.to_bits());
+        }
+        for (x, y) in a.final_states.iter().zip(&b.final_states) {
+            let (x, y) = (x.as_ref().expect("kept state"), y.as_ref().expect("kept state"));
+            for (s, t) in x.params.iter().zip(&y.params) {
+                assert_eq!(s.data, t.data, "final params diverged after GC + resume");
+            }
+        }
+    };
+    assert_identical(&full, &resumed);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn parallel_probe_pair_matches_serial() {
     // The §7 probe pair run as two lockstep engine-owning jobs must make the
     // same early-stop decision and derive the same τ as the serial path.
