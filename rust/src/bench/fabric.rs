@@ -151,6 +151,28 @@ pub fn fabric(ctx: &Ctx) -> Result<()> {
                         let dispatched = Json::Num(s.dispatched_jobs as f64);
                         o.insert("dispatched_jobs".to_string(), dispatched);
                         o.insert("connections".to_string(), Json::Num(s.connections as f64));
+                        o.insert(
+                            "reassigned_jobs".to_string(),
+                            Json::Num(s.reassigned_jobs as f64),
+                        );
+                        o.insert("workers_lost".to_string(), Json::Num(s.workers_lost as f64));
+                        o.insert(
+                            "workers_reconnected".to_string(),
+                            Json::Num(s.workers_reconnected as f64),
+                        );
+                        o.insert(
+                            "snapshots_shipped".to_string(),
+                            Json::Num(s.snapshots_shipped as f64),
+                        );
+                        o.insert(
+                            "snapshots_cache_served".to_string(),
+                            Json::Num(s.snapshots_cache_served as f64),
+                        );
+                        o.insert(
+                            "snapshot_bytes_shipped".to_string(),
+                            Json::Num(s.snapshot_bytes_shipped as f64),
+                        );
+                        o.insert("resumed_jobs".to_string(), Json::Num(s.resumed_jobs as f64));
                     }
                     Json::Obj(o)
                 })

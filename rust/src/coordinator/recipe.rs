@@ -25,7 +25,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::Corpus;
-use crate::expansion::ExpandSpec;
+use crate::expansion::{strategy_from_name, ExpandSpec};
 use crate::metrics::{mixing_point, Curve};
 use crate::runtime::{Engine, Manifest};
 use crate::schedule::Schedule;
@@ -420,6 +420,88 @@ pub fn rounds_from_taus(
         rounds.push(LadderRound::new(rungs[i + 1], tau, spec).rewarm(rewarm_steps.min(stage_end - tau)));
     }
     Ok((taus, rounds))
+}
+
+/// Everything that determines a (non-probe) ladder grid: the plan set
+/// behind `repro ladder`, `repro serve`, and `repro chaos`. All three — and
+/// the integration tests that diff their CSVs byte-for-byte — construct
+/// plans through [`ladder_grid`], so the grids cannot drift apart.
+pub struct LadderGridSpec<'a> {
+    /// Rung config ids, smallest first (≥ 2).
+    pub rungs: &'a [&'a str],
+    /// Total training horizon in steps.
+    pub steps: usize,
+    /// Data seed shared by every variant.
+    pub seed: u64,
+    pub sched: Schedule,
+    /// Base expansion spec; per-strategy variants override `strategy` only.
+    pub base: ExpandSpec,
+    /// Re-warm steps after each boundary (clamped per stage).
+    pub rewarm: usize,
+    /// Boundary fractions of the horizon (one per rung transition); `None`:
+    /// evenly spaced through the schedule's stable phase.
+    pub taus: Option<Vec<f64>>,
+    /// One plan per strategy name, suffixed `-{name}`; `None`: a single
+    /// plan under `base`.
+    pub strategies: Option<Vec<String>>,
+    /// Eval cadence override applied to every plan.
+    pub eval_every: Option<usize>,
+}
+
+/// Build the ladder plan grid for `spec`: one plan per strategy variant,
+/// named `ladder-{rungs}[-{strategy}]`, boundaries normalized through
+/// [`rounds_from_taus`] exactly as the probe-driven path does.
+pub fn ladder_grid(spec: &LadderGridSpec) -> Result<Vec<RunPlan>> {
+    let rungs = spec.rungs;
+    if rungs.len() < 2 {
+        bail!("a ladder grid needs at least two rungs (got {})", rungs.len());
+    }
+    let n_rounds = rungs.len() - 1;
+    let stable_frac = spec.sched.stable_end(spec.steps) as f64 / spec.steps as f64;
+    let fracs: Vec<f64> = match &spec.taus {
+        Some(f) => f.clone(),
+        None => {
+            (1..=n_rounds).map(|i| stable_frac * i as f64 / (n_rounds + 1) as f64).collect()
+        }
+    };
+    if fracs.len() != n_rounds {
+        bail!(
+            "{} boundary fraction(s) given for {} rungs (need {n_rounds})",
+            fracs.len(),
+            rungs.len()
+        );
+    }
+    // τ from a fraction of the horizon, all in f64: an f32-encoded "0.8"
+    // is already off by whole steps past ~2^24.
+    let taus: Vec<usize> =
+        fracs.iter().map(|&f| (spec.steps as f64 * f) as usize).collect();
+    let name = format!("ladder-{}", rungs.join("-"));
+    let variants: Vec<(String, ExpandSpec)> = match &spec.strategies {
+        None => vec![(name, spec.base)],
+        Some(list) => list
+            .iter()
+            .map(|sname| {
+                Ok((
+                    format!("{name}-{sname}"),
+                    ExpandSpec { strategy: strategy_from_name(sname)?, ..spec.base },
+                ))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let mut plans = Vec::with_capacity(variants.len());
+    for (vname, vspec) in variants {
+        // Same normalization as the probe-driven path (fix-up, horizon
+        // check, per-stage re-warm clamp).
+        let (_, rounds) =
+            rounds_from_taus(rungs, taus.clone(), spec.steps, vspec, spec.rewarm)?;
+        let mut b = RunBuilder::ladder(vname.as_str(), rungs[0], &rounds, spec.steps, spec.sched)
+            .seed(spec.seed);
+        if let Some(e) = spec.eval_every {
+            b = b.eval_every(e);
+        }
+        plans.push(b.build()?);
+    }
+    Ok(plans)
 }
 
 /// The controller's pure placement rule: boundaries assigned **backward**

@@ -195,6 +195,12 @@ impl<'g> Scheduler<'g> {
         Ok(Some(item))
     }
 
+    /// Whether `job` has already landed (duplicate-delivery detection: a
+    /// re-sent `Done` for a completed job is recognizable, not confusing).
+    pub(crate) fn completed(&self, job: JobId) -> bool {
+        self.completed[job]
+    }
+
     /// Put a dispatched-but-unfinished job back at the *front* of the ready
     /// queue (dead-worker reassignment: jobs are pure functions of their
     /// plan + fork snapshot, so re-execution is safe and bit-identical).
@@ -456,4 +462,244 @@ fn make_item(
             keep_state: keep_states,
         },
     })
+}
+
+// Coordinator-failover replay: `repro serve --resume` is nothing but
+// `Scheduler::new` against the journal a crashed coordinator left behind,
+// so these tests drive that reconstruction directly — no network, no
+// engines — over the journal states a crash can actually produce.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    use crate::coordinator::RunBuilder;
+    use crate::expansion::ExpandSpec;
+    use crate::flops::FlopLedger;
+    use crate::metrics::{Curve, CurvePoint};
+    use crate::schedule::Schedule;
+
+    // One manifest config body (mirrors the checkpoint fixture): an
+    // embedding plus `n_layer` 2×2 layers.
+    fn cfg_json(n_layer: usize) -> String {
+        let mut params = vec![
+            r#"{"name":"embed.tok","shape":[4,2],"init":"normal","std":0.02,
+               "muon":true,"decay":false,"fan_in":4,"fan_out":2}"#
+                .to_string(),
+        ];
+        let mut opt = vec![r#"{"name":"mom.embed.tok","shape":[4,2]}"#.to_string()];
+        for i in 0..n_layer {
+            params.push(format!(
+                r#"{{"name":"layer.{i}.w","shape":[2,2],"init":"normal","std":0.1,
+                   "muon":true,"decay":true,"fan_in":2,"fan_out":2}}"#
+            ));
+            opt.push(format!(r#"{{"name":"mom.layer.{i}.w","shape":[2,2]}}"#));
+        }
+        format!(
+            r#"{{"model":{{"family":"gpt2","n_layer":{n_layer},"batch":1,"seq_len":4,"moe":null}},
+            "opt":{{"kind":"muon_nsgd"}},
+            "params":[{}],
+            "opt_state":[{}],
+            "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{{}}}}"#,
+            params.join(","),
+            opt.join(",")
+        )
+    }
+
+    /// Both stages of a progressive s→t plan: the trunk snapshot of such a
+    /// plan is laid out in the *source* config, so the manifest must carry
+    /// the pair.
+    fn manifest() -> Manifest {
+        let text = format!(r#"{{"configs":{{"s":{},"t":{}}}}}"#, cfg_json(1), cfg_json(2));
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    fn plan(name: &str, seed: u64) -> RunPlan {
+        RunBuilder::progressive(
+            name,
+            "s",
+            "t",
+            10,
+            40,
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.1 },
+            ExpandSpec { seed, ..ExpandSpec::default() },
+        )
+        .build()
+        .unwrap()
+    }
+
+    /// What a finished depth-1 trunk of the plans above would have handed
+    /// back: a snapshot at the fork step, in config "s".
+    fn trunk_snapshot(manifest: &Manifest) -> DriverSnapshot {
+        let entry = manifest.get("s").unwrap();
+        let mut curve = Curve::new("trunk");
+        curve.push(CurvePoint {
+            step: 10,
+            tokens: 640,
+            flops: 1e6,
+            train_loss: 2.5,
+            val_loss: 2.6,
+            lr: 0.01,
+        });
+        DriverSnapshot {
+            run_name: "trunk".into(),
+            cfg_id: "s".into(),
+            step: 10,
+            stage_idx: 0,
+            data_seed: 3,
+            train_windows: 20,
+            val_windows: 4,
+            image_samples: 0,
+            last_train_loss: 2.5,
+            ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("s".into(), 10, 1e6)] },
+            curve,
+            boundaries: Vec::new(),
+            state: ModelState::init(entry, 5),
+        }
+    }
+
+    fn warm_result() -> RunResult {
+        let mut curve = Curve::new("warm");
+        curve.push(CurvePoint {
+            step: 40,
+            tokens: 2560,
+            flops: 4e6,
+            train_loss: 2.2,
+            val_loss: 2.3,
+            lr: 0.01,
+        });
+        RunResult {
+            curve,
+            ledger: FlopLedger { total: 4e6, tokens: 2560, stages: vec![("t".into(), 40, 4e6)] },
+            boundaries: vec![(10, "t".into())],
+            final_val_loss: 2.3,
+        }
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dpt-sched-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn refs_only_journal_resumes_with_all_work_remaining() {
+        let plans = vec![plan("a", 7), plan("b", 8)];
+        let graph = JobGraph::lower(plans).unwrap();
+        let dir = scratch("refs");
+        {
+            let mut store = RunStore::open(&dir).unwrap();
+            record_graph_refs(&mut store, &graph).unwrap();
+        }
+        // Coordinator restart after a crash that landed nothing: the
+        // journal holds only the liveness refs, so the rebuilt scheduler
+        // must re-dispatch everything — but the refs themselves survive
+        // (an interrupted sweep's partial artifacts stay GC-live).
+        let store = RunStore::open(&dir).unwrap();
+        let (runs, trunks) = graph_refs(&graph).unwrap();
+        assert!(
+            store.refs_recorded(
+                runs.iter().map(String::as_str),
+                trunks.iter().map(String::as_str),
+            ),
+            "the liveness refs did not survive the restart"
+        );
+        let (sched, done) = Scheduler::new(&graph, false, true, Some(&store)).unwrap();
+        assert_eq!(done, 0, "a refs-only journal must satisfy nothing");
+        assert!(sched.has_ready());
+        assert!(!sched.is_done());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn committed_trunk_resumes_satisfied_and_loads_lazily() {
+        let m = manifest();
+        let plans = vec![plan("a", 7), plan("b", 8)];
+        let graph = JobGraph::lower(plans).unwrap();
+        assert_eq!(graph.jobs().len(), 3, "two variants should share one trunk");
+        let dir = scratch("trunk");
+        let (digest, cfg_id) = trunk_store_key(&graph.plans()[0], 1).unwrap();
+        assert_eq!(cfg_id, "s", "a trunk snapshot is laid out in the pre-boundary config");
+        {
+            let mut store = RunStore::open(&dir).unwrap();
+            store.store_trunk(&digest, &trunk_snapshot(&m), m.get("s").unwrap()).unwrap();
+        }
+        // Restart after the coordinator died between committing the trunk
+        // and dispatching its tails: the journaled trunk is satisfied
+        // up-front, both tails start ready, and the snapshot is read back
+        // from disk only when the first tail is actually dispatched.
+        let store = RunStore::open(&dir).unwrap();
+        let (mut sched, done) = Scheduler::new(&graph, false, true, Some(&store)).unwrap();
+        assert_eq!(done, 1, "exactly the trunk must be satisfied");
+        for _ in 0..2 {
+            let item = sched.next_item(&m, Some(&store)).unwrap().expect("a ready tail");
+            match item {
+                WorkItem::Run { snap, .. } => {
+                    let snap = snap.expect("tail dispatched without its fork snapshot");
+                    assert_eq!(snap.cfg_id, "s");
+                    assert_eq!(snap.step, 10);
+                }
+                WorkItem::Trunk { .. } => panic!("the cache-satisfied trunk was re-dispatched"),
+            }
+        }
+        assert!(sched.next_item(&m, Some(&store)).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_journal_tail_is_ignored_but_committed_lines_survive() {
+        let m = manifest();
+        let plans = vec![plan("a", 7), plan("b", 8)];
+        let graph = JobGraph::lower(plans).unwrap();
+        let dir = scratch("torn");
+        let (digest, _) = trunk_store_key(&graph.plans()[0], 1).unwrap();
+        {
+            let mut store = RunStore::open(&dir).unwrap();
+            store.store_trunk(&digest, &trunk_snapshot(&m), m.get("s").unwrap()).unwrap();
+        }
+        // A SIGKILL mid-append leaves a torn, newline-less fragment at the
+        // journal tail. The restart must shrug it off without losing the
+        // committed trunk line before it.
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("journal.log"))
+            .unwrap();
+        f.write_all(b"trunk 0123456789abcdef").unwrap();
+        drop(f);
+        let store = RunStore::open(&dir).unwrap();
+        assert!(store.has_trunk_snapshot(&digest), "the committed trunk line was lost");
+        let (sched, done) = Scheduler::new(&graph, false, true, Some(&store)).unwrap();
+        assert_eq!(done, 1, "the torn fragment must not cost the committed trunk");
+        assert!(sched.has_ready());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fully_warm_store_needs_zero_dispatches() {
+        let m = manifest();
+        let plans = vec![plan("a", 7), plan("b", 8)];
+        let graph = JobGraph::lower(plans).unwrap();
+        let dir = scratch("warm");
+        {
+            let mut store = RunStore::open(&dir).unwrap();
+            let (digest, _) = trunk_store_key(&graph.plans()[0], 1).unwrap();
+            store.store_trunk(&digest, &trunk_snapshot(&m), m.get("s").unwrap()).unwrap();
+            for p in graph.plans() {
+                store.store_run(&p.digest(), &warm_result(), None).unwrap();
+            }
+        }
+        // Restart after everything landed (the coordinator died printing
+        // the summary): every job is satisfied up-front and the outcome
+        // assembles without a single dispatch.
+        let store = RunStore::open(&dir).unwrap();
+        let (mut sched, done) = Scheduler::new(&graph, false, true, Some(&store)).unwrap();
+        assert_eq!(done, graph.jobs().len(), "a fully warm journal satisfies every job");
+        assert!(sched.is_done());
+        assert!(sched.next_item(&m, Some(&store)).unwrap().is_none());
+        let outcome = sched.assemble().unwrap();
+        assert_eq!(outcome.results.len(), 2);
+        assert!(outcome.executed_flops > 0.0, "cached runs still report dispatched flops");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

@@ -93,6 +93,26 @@ enum LayerSource {
     SrcZeroL(usize),
 }
 
+/// Parse a strategy from its CLI/sweep-grid name — the one vocabulary
+/// shared by `--strategy`, `--strategies`, and every plan-name suffix, so a
+/// grid built in-process (`repro chaos`, tests) names its variants exactly
+/// as the CLI would.
+pub fn strategy_from_name(name: &str) -> Result<Strategy> {
+    Ok(match name {
+        "random" => Strategy::Random,
+        "copying" | "copying_stack" => Strategy::Copying(CopyOrder::Stack),
+        "copying_inter" => Strategy::Copying(CopyOrder::Inter),
+        "copying_last" => Strategy::Copying(CopyOrder::Last),
+        "zero" => Strategy::Zero,
+        "zero_n" | "copying_zero_n" => Strategy::CopyingZeroN,
+        "zero_l" | "copying_zero_l" => Strategy::CopyingZeroL,
+        other => bail!(
+            "unknown expansion strategy '{other}' \
+             (expected random|copying|copying_inter|copying_last|zero|zero_n|zero_l)"
+        ),
+    })
+}
+
 /// Table 2's applicability matrix: is (strategy, n_src) valid?
 pub fn applicable(strategy: Strategy, n_src: usize) -> bool {
     match strategy {

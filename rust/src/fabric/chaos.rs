@@ -1,0 +1,279 @@
+//! `repro chaos`: the deterministic fault-injection drill (DESIGN.md §10).
+//!
+//! One in-process fleet per scenario, one scenario per fault kind the
+//! [`faultline`](super::faultline) layer can inject. Every scenario runs
+//! under a watchdog and must end — in a bit-identical outcome for the
+//! survivable faults, or in a loud contextual error for the fatal one —
+//! within its timeout. A hang is itself a failure: the watchdog kills the
+//! process with a diagnostic rather than letting CI time out silently.
+//!
+//! The scenarios (all workers run one engine thread, so the worker's
+//! outbound frame sequence — magic, hello, ready, first `Done` at frame 4
+//! — is deterministic and the injection points are reproducible):
+//!
+//! - **drop-reconnect** — a worker's connection dies right after its first
+//!   `Done`; with a retry budget it redials, re-handshakes, and the sweep
+//!   completes bit-identical to serial.
+//! - **torn-frame** — a worker sends half a `Done` frame and dies mid-way;
+//!   the coordinator requeues the undelivered job and the fleet recovers.
+//! - **stall** — a worker goes silent past the heartbeat timeout while its
+//!   engines are fine; the coordinator declares it dead, reassigns, and
+//!   the late frames are discarded as stale.
+//! - **dup-done** — a worker delivers the same `Done` twice; completion is
+//!   idempotent, so the duplicate is ignored even when it races a fresh
+//!   assignment on the same slot.
+//! - **lose-everything** — the only worker dies with no retry budget and
+//!   no local engines: the coordinator must error loudly ("fleet
+//!   drained"), never wait forever.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::bench::parallel::outcomes_identical;
+use crate::coordinator::{RunPlan, Sweep, SweepOutcome, Trainer};
+use crate::data::Corpus;
+use crate::exec::JobGraph;
+use crate::runtime::{Engine, Manifest};
+
+use super::faultline::FaultSpec;
+use super::serve::{FabricOptions, FabricServer, FabricStats};
+use super::worker::{run_worker, WorkerOptions, WorkerReport};
+
+/// Everything one scenario's fleet produced: the coordinator's verdict and
+/// each worker's, success or not — scenarios assert on both sides.
+struct FleetRun {
+    server: Result<(SweepOutcome, FabricStats)>,
+    workers: Vec<Result<WorkerReport>>,
+}
+
+/// One coordinator + one in-process worker thread per `fleet` entry, over
+/// loopback, no store: every fault crosses a real TCP stream.
+fn run_fleet(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    plans: &[RunPlan],
+    heartbeat_timeout: Duration,
+    fleet: Vec<WorkerOptions>,
+) -> Result<FleetRun> {
+    let graph = JobGraph::lower(plans.to_vec())?;
+    let server = FabricServer::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    let opts = FabricOptions { heartbeat_timeout, ..FabricOptions::default() };
+    Ok(thread::scope(|scope| {
+        let handles: Vec<_> = fleet
+            .into_iter()
+            .map(|w| {
+                let addr = addr.clone();
+                scope.spawn(move || run_worker(&addr, manifest, corpus, &w))
+            })
+            .collect();
+        let server = server.run(manifest, corpus, &graph, &opts, None);
+        let workers = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked"))))
+            .collect();
+        FleetRun { server, workers }
+    }))
+}
+
+/// A worker armed with `fault` and a reconnect budget fast enough for a
+/// drill (6 retries from 50 ms keeps a whole outage streak under ~4 s).
+fn faulty(fault: FaultSpec, retry_max: usize) -> WorkerOptions {
+    WorkerOptions {
+        workers: 1,
+        retry_max,
+        retry_base_ms: 50,
+        fault: Some(fault),
+        ..WorkerOptions::default()
+    }
+}
+
+fn clean() -> WorkerOptions {
+    faulty(FaultSpec::default(), 6)
+}
+
+/// The survivable-fault postconditions: the coordinator completed, and the
+/// assembled outcome is bit-identical to the serial reference.
+fn assert_identical(run: &FleetRun, serial: &SweepOutcome) -> Result<FabricStats> {
+    let (outcome, stats) = match &run.server {
+        Ok(pair) => pair,
+        Err(e) => bail!("coordinator failed: {e:#}"),
+    };
+    ensure!(
+        outcomes_identical(serial, outcome),
+        "fabric outcome diverged from the serial reference (curves, boundaries, or flops)"
+    );
+    Ok(stats.clone())
+}
+
+/// Run `drill` under a watchdog: if it neither completes nor errors within
+/// `timeout`, print a diagnostic and kill the process (exit 124) — a hung
+/// drill must never look like a slow success.
+fn watchdogged(
+    name: &str,
+    timeout: Duration,
+    failures: &mut Vec<String>,
+    drill: impl FnOnce() -> Result<()>,
+) {
+    println!("chaos: {name} ...");
+    let disarmed = Arc::new(AtomicBool::new(false));
+    let watchdog = {
+        let disarmed = disarmed.clone();
+        let name = name.to_string();
+        thread::spawn(move || {
+            let deadline = Instant::now() + timeout;
+            while Instant::now() < deadline {
+                if disarmed.load(Ordering::SeqCst) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(100));
+            }
+            eprintln!(
+                "chaos: drill '{name}' hung for {timeout:?} without completing or erroring"
+            );
+            std::process::exit(124);
+        })
+    };
+    let result = drill();
+    disarmed.store(true, Ordering::SeqCst);
+    let _ = watchdog.join();
+    match result {
+        Ok(()) => println!("chaos: {name} ok"),
+        Err(e) => {
+            eprintln!("chaos: {name} FAILED: {e:#}");
+            failures.push(name.to_string());
+        }
+    }
+}
+
+/// Execute the whole drill suite over `plans`. Errors if any scenario
+/// fails; `timeout` bounds each scenario individually.
+pub fn run_chaos(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    plans: &[RunPlan],
+    timeout: Duration,
+) -> Result<()> {
+    if plans.is_empty() {
+        bail!("chaos drill needs at least one plan");
+    }
+    // Serial reference, computed once: the bit-identity yardstick every
+    // surviving scenario is measured against.
+    println!("chaos: serial reference ({} plan(s)) ...", plans.len());
+    let serial = {
+        let engine = Engine::cpu()?;
+        let trainer = Trainer::new(&engine, manifest, corpus);
+        let mut sweep = Sweep::new(trainer);
+        for p in plans {
+            sweep.add(p.clone());
+        }
+        sweep.run()?
+    };
+    let mut failures: Vec<String> = Vec::new();
+
+    watchdogged("drop-reconnect", timeout, &mut failures, || {
+        let fault = FaultSpec::parse("drop-after:4")?;
+        let run = run_fleet(
+            manifest,
+            corpus,
+            plans,
+            Duration::from_secs(20),
+            vec![faulty(fault, 6), clean()],
+        )?;
+        let stats = assert_identical(&run, &serial)?;
+        ensure!(stats.workers_lost >= 1, "the dropped connection was never noticed");
+        if let Ok(report) = &run.workers[0] {
+            ensure!(report.faults_fired == 1, "armed drop-after never fired");
+            ensure!(report.reconnects >= 1, "the faulty worker never re-handshook");
+            ensure!(stats.workers_reconnected >= 1, "the coordinator missed the reconnect");
+        }
+        Ok(())
+    });
+
+    watchdogged("torn-frame", timeout, &mut failures, || {
+        let fault = FaultSpec::parse("torn-frame:4")?;
+        let run = run_fleet(
+            manifest,
+            corpus,
+            plans,
+            Duration::from_secs(20),
+            vec![faulty(fault, 6), clean()],
+        )?;
+        let stats = assert_identical(&run, &serial)?;
+        ensure!(stats.workers_lost >= 1, "the torn connection was never noticed");
+        ensure!(
+            stats.reassigned_jobs >= 1,
+            "the job whose Done was torn mid-frame was never reassigned"
+        );
+        Ok(())
+    });
+
+    watchdogged("stall", timeout, &mut failures, || {
+        // The stalled worker goes silent for 7 s against a 3 s heartbeat
+        // timeout: the coordinator must declare it dead and reassign long
+        // before the stall ends.
+        let fault = FaultSpec::parse("stall:4,stall-ms:7000")?;
+        let run = run_fleet(
+            manifest,
+            corpus,
+            plans,
+            Duration::from_secs(3),
+            vec![faulty(fault, 6), clean()],
+        )?;
+        let stats = assert_identical(&run, &serial)?;
+        ensure!(stats.workers_lost >= 1, "the stalled worker was never declared dead");
+        ensure!(stats.reassigned_jobs >= 1, "the stalled worker's job was never reassigned");
+        Ok(())
+    });
+
+    watchdogged("dup-done", timeout, &mut failures, || {
+        let fault = FaultSpec::parse("dup-done:1")?;
+        let run =
+            run_fleet(manifest, corpus, plans, Duration::from_secs(20), vec![faulty(fault, 0)])?;
+        let stats = assert_identical(&run, &serial)?;
+        ensure!(stats.workers_lost == 0, "a duplicated Done must not cost the connection");
+        let report = match &run.workers[0] {
+            Ok(r) => r,
+            Err(e) => bail!("worker failed: {e:#}"),
+        };
+        ensure!(report.faults_fired == 1, "armed dup-done never fired");
+        ensure!(report.reconnects == 0, "a duplicated Done must not force a reconnect");
+        Ok(())
+    });
+
+    watchdogged("lose-everything", timeout, &mut failures, || {
+        // The only worker dies with no retry budget and there are no local
+        // engines: completion is impossible, and the coordinator must say
+        // so promptly instead of waiting for a fleet that will never return.
+        let fault = FaultSpec::parse("drop-after:4")?;
+        let run = run_fleet(
+            manifest,
+            corpus,
+            plans,
+            Duration::from_secs(3),
+            vec![faulty(fault, 0)],
+        )?;
+        let err = match &run.server {
+            Ok(_) => bail!("the sweep completed with every worker dead"),
+            Err(e) => format!("{e:#}"),
+        };
+        ensure!(err.contains("fleet drained"), "unexpected coordinator error: {err}");
+        let worker = match &run.workers[0] {
+            Ok(_) => bail!("the dropped worker reported success"),
+            Err(e) => format!("{e:#}"),
+        };
+        ensure!(worker.contains("lost connection"), "unexpected worker error: {worker}");
+        Ok(())
+    });
+
+    if failures.is_empty() {
+        println!("chaos: all scenarios passed (outcomes bit-identical; no hangs)");
+        Ok(())
+    } else {
+        bail!("chaos: {} scenario(s) failed: {}", failures.len(), failures.join(", "))
+    }
+}

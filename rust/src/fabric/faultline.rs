@@ -1,0 +1,356 @@
+//! Deterministic fault injection for the fabric's wire streams
+//! (DESIGN.md §10).
+//!
+//! A [`FaultSpec`] names frame-indexed injection points — armed from the
+//! `REPRO_FAULT` environment variable or `repro worker --fault` — and a
+//! [`Faultline`] carries the counters that decide when each one fires. The
+//! counters live in one `Arc` for the whole `run_worker` invocation, so a
+//! reconnecting worker keeps counting where it left off and every fault
+//! fires **exactly once** at a reproducible point instead of re-firing on
+//! every fresh connection.
+//!
+//! The injection site is [`FaultWriter`], wrapped around the worker's
+//! outbound stream. [`wire::send_msg`] flushes exactly once per frame, so
+//! the writer buffers until `flush()` and treats each flush as one frame —
+//! it can read the frame kind (byte 4) to target `Done` frames
+//! specifically and to leave heartbeats out of the frame count (heartbeats
+//! are timer-driven, so counting them would make injection points depend
+//! on wall clock instead of protocol progress).
+//!
+//! Faults:
+//! - `drop-after:N` — write the Nth frame fully, then kill the connection.
+//! - `torn-frame:K` — write only the first half of the Kth frame, then
+//!   kill the connection (the coordinator sees a mid-frame EOF).
+//! - `stall:M` — sleep `stall-ms` (default 3000) before the Mth frame; a
+//!   single-writer worker stops heartbeating while stalled, so a short
+//!   `--heartbeat-timeout` coordinator declares it dead and reassigns.
+//! - `dup-done:J` — write the Jth `Done` frame twice (the duplicate-
+//!   delivery drill; completion must be idempotent).
+//! - `stall-ms:T` — duration knob for `stall`, not a fault by itself.
+
+use std::io::{self, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::wire;
+
+/// Which faults to inject, and where. Parsed from a comma-separated list
+/// of `name:count` clauses, e.g. `drop-after:6,dup-done:2,stall-ms:4000`.
+/// All frame indices are 1-based and count the worker's outbound frames
+/// (handshake included, heartbeats excluded).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Kill the connection after this outbound frame has been written.
+    pub drop_after: Option<u64>,
+    /// Write half of this outbound frame, then kill the connection.
+    pub torn_frame: Option<u64>,
+    /// Sleep [`FaultSpec::stall_ms`] before this outbound frame.
+    pub stall: Option<u64>,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Write this (1-based) `Done` frame twice.
+    pub dup_done: Option<u64>,
+}
+
+impl FaultSpec {
+    /// Parse `drop-after:N,torn-frame:K,stall:M,stall-ms:T,dup-done:J`
+    /// (any subset, any order). Unknown clauses and non-numeric counts are
+    /// errors — a typo must not silently run a chaos drill fault-free.
+    pub fn parse(text: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec { stall_ms: 3000, ..FaultSpec::default() };
+        for clause in text.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, value) = clause
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}' is not name:count"))?;
+            let n: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause '{clause}' has a non-numeric count"))?;
+            if n == 0 {
+                bail!("fault clause '{clause}' is zero (frame indices are 1-based)");
+            }
+            match name.trim() {
+                "drop-after" => spec.drop_after = Some(n),
+                "torn-frame" => spec.torn_frame = Some(n),
+                "stall" => spec.stall = Some(n),
+                "stall-ms" => spec.stall_ms = n,
+                "dup-done" => spec.dup_done = Some(n),
+                other => bail!(
+                    "unknown fault '{other}' (expected \
+                     drop-after|torn-frame|stall|stall-ms|dup-done)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Read the spec from `REPRO_FAULT` (None when unset or empty).
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var("REPRO_FAULT") {
+            Ok(text) if !text.trim().is_empty() => Ok(Some(FaultSpec::parse(&text)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// True when no fault is armed (a bare `stall-ms` arms nothing).
+    pub fn is_empty(&self) -> bool {
+        self.drop_after.is_none()
+            && self.torn_frame.is_none()
+            && self.stall.is_none()
+            && self.dup_done.is_none()
+    }
+}
+
+/// Shared fault counters for one `run_worker` invocation. Survives
+/// reconnects, so each armed fault fires exactly once.
+pub(crate) struct Faultline {
+    spec: FaultSpec,
+    /// Outbound non-heartbeat frames written so far.
+    frames: AtomicU64,
+    /// Outbound `Done` frames written so far.
+    dones: AtomicU64,
+    fired: Mutex<Vec<String>>,
+}
+
+impl Faultline {
+    pub(crate) fn new(spec: FaultSpec) -> Arc<Faultline> {
+        Arc::new(Faultline {
+            spec,
+            frames: AtomicU64::new(0),
+            dones: AtomicU64::new(0),
+            fired: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Labels of the faults that have fired so far, in firing order — the
+    /// chaos drill asserts every armed fault actually fired.
+    pub(crate) fn fired(&self) -> Vec<String> {
+        self.fired.lock().unwrap().clone()
+    }
+
+    fn record(&self, label: String) {
+        eprintln!("faultline: injecting {label}");
+        self.fired.lock().unwrap().push(label);
+    }
+
+    fn fault_err(what: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::ConnectionAborted, format!("fault injected: {what}"))
+    }
+
+    /// Deliver one buffered frame through `w`, injecting any armed fault
+    /// whose counter matches. `sock` (when present) is shut down on
+    /// connection-killing faults so the peer sees the drop immediately.
+    fn deliver(
+        &self,
+        frame: &[u8],
+        w: &mut impl Write,
+        sock: Option<&TcpStream>,
+    ) -> io::Result<()> {
+        let kind = frame.get(4).copied();
+        if kind == Some(wire::KIND_HEARTBEAT) {
+            w.write_all(frame)?;
+            return w.flush();
+        }
+        let n = self.frames.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.spec.stall == Some(n) {
+            self.record(format!("stall:{n} ({} ms)", self.spec.stall_ms));
+            std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
+        }
+        if self.spec.torn_frame == Some(n) {
+            self.record(format!("torn-frame:{n}"));
+            w.write_all(&frame[..frame.len() / 2])?;
+            w.flush()?;
+            if let Some(s) = sock {
+                s.shutdown(Shutdown::Both).ok();
+            }
+            return Err(Self::fault_err("torn frame"));
+        }
+        w.write_all(frame)?;
+        if kind == Some(wire::KIND_DONE) {
+            let d = self.dones.fetch_add(1, Ordering::SeqCst) + 1;
+            if self.spec.dup_done == Some(d) {
+                self.record(format!("dup-done:{d}"));
+                w.write_all(frame)?;
+            }
+        }
+        w.flush()?;
+        if self.spec.drop_after == Some(n) {
+            self.record(format!("drop-after:{n}"));
+            if let Some(s) = sock {
+                s.shutdown(Shutdown::Both).ok();
+            }
+            return Err(Self::fault_err("connection dropped"));
+        }
+        Ok(())
+    }
+}
+
+/// A `Write` adapter that buffers until `flush()` (= one wire frame, see
+/// [`wire::send_msg`]) and hands each complete frame to the [`Faultline`].
+pub(crate) struct FaultWriter<W: Write> {
+    inner: W,
+    /// Kept separately from `inner` (which may be buffered) so connection-
+    /// killing faults can slam the socket, not just stop writing.
+    sock: Option<TcpStream>,
+    line: Arc<Faultline>,
+    buf: Vec<u8>,
+}
+
+impl<W: Write> FaultWriter<W> {
+    pub(crate) fn new(inner: W, sock: Option<TcpStream>, line: Arc<Faultline>) -> FaultWriter<W> {
+        FaultWriter { inner, sock, line, buf: Vec::new() }
+    }
+
+    /// Slam the underlying socket (both directions) so the paired reader
+    /// thread wakes up with an error instead of blocking on a dead session.
+    pub(crate) fn shutdown(&self) {
+        if let Some(s) = &self.sock {
+            s.shutdown(Shutdown::Both).ok();
+        }
+    }
+}
+
+impl<W: Write> Write for FaultWriter<W> {
+    fn write(&mut self, bytes: &[u8]) -> io::Result<usize> {
+        self.buf.extend_from_slice(bytes);
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        let frame = std::mem::take(&mut self.buf);
+        if frame.is_empty() {
+            return self.inner.flush();
+        }
+        self.line.deliver(&frame, &mut self.inner, self.sock.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut f = (payload.len() as u32).to_le_bytes().to_vec();
+        f.push(kind);
+        f.extend_from_slice(payload);
+        f
+    }
+
+    fn send(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+        w.write_all(frame)?;
+        w.flush()
+    }
+
+    #[test]
+    fn spec_parsing_accepts_subsets_and_rejects_typos() {
+        let spec = FaultSpec::parse("drop-after:6, dup-done:2 ,stall-ms:4000").unwrap();
+        assert_eq!(spec.drop_after, Some(6));
+        assert_eq!(spec.dup_done, Some(2));
+        assert_eq!(spec.stall_ms, 4000);
+        assert_eq!(spec.torn_frame, None);
+        assert!(!spec.is_empty());
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse("stall-ms:99").unwrap().is_empty());
+        for bad in ["drop-after", "drop-after:x", "drop-after:0", "explode:3"] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("fault"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn drop_after_delivers_the_frame_then_kills_the_connection() {
+        let line = Faultline::new(FaultSpec::parse("drop-after:2").unwrap());
+        let mut out = Vec::new();
+        let mut w = FaultWriter::new(&mut out, None, line.clone());
+        let f1 = frame(4, &[1]);
+        let f2 = frame(4, &[2]);
+        send(&mut w, &f1).unwrap();
+        let err = send(&mut w, &f2).unwrap_err();
+        assert!(err.to_string().contains("fault injected"), "{err}");
+        // Both frames are fully on the wire: the drop is after delivery.
+        let mut want = f1;
+        want.extend_from_slice(&f2);
+        assert_eq!(out, want);
+        assert_eq!(line.fired(), vec!["drop-after:2".to_string()]);
+    }
+
+    #[test]
+    fn torn_frame_writes_exactly_half() {
+        let line = Faultline::new(FaultSpec::parse("torn-frame:1").unwrap());
+        let mut out = Vec::new();
+        let mut w = FaultWriter::new(&mut out, None, line.clone());
+        let f1 = frame(6, &[9, 9, 9, 9, 9]);
+        let err = send(&mut w, &f1).unwrap_err();
+        assert!(err.to_string().contains("torn frame"), "{err}");
+        assert_eq!(out, f1[..f1.len() / 2].to_vec());
+    }
+
+    #[test]
+    fn dup_done_duplicates_only_the_targeted_done_frame() {
+        let line = Faultline::new(FaultSpec::parse("dup-done:2").unwrap());
+        let mut out = Vec::new();
+        let mut w = FaultWriter::new(&mut out, None, line.clone());
+        let ready = frame(4, &[0]);
+        let done1 = frame(wire::KIND_DONE, &[1]);
+        let done2 = frame(wire::KIND_DONE, &[2]);
+        send(&mut w, &ready).unwrap();
+        send(&mut w, &done1).unwrap();
+        send(&mut w, &done2).unwrap();
+        let mut want = ready;
+        want.extend_from_slice(&done1);
+        want.extend_from_slice(&done2);
+        want.extend_from_slice(&done2);
+        assert_eq!(out, want);
+        assert_eq!(line.fired(), vec!["dup-done:2".to_string()]);
+    }
+
+    #[test]
+    fn heartbeats_do_not_advance_the_frame_clock() {
+        let line = Faultline::new(FaultSpec::parse("drop-after:2").unwrap());
+        let mut out = Vec::new();
+        let mut w = FaultWriter::new(&mut out, None, line.clone());
+        send(&mut w, &frame(4, &[1])).unwrap();
+        // Any number of heartbeats pass through uncounted.
+        for _ in 0..5 {
+            send(&mut w, &frame(wire::KIND_HEARTBEAT, &[])).unwrap();
+        }
+        assert!(line.fired().is_empty());
+        let err = send(&mut w, &frame(4, &[2])).unwrap_err();
+        assert!(err.to_string().contains("fault injected"), "{err}");
+    }
+
+    #[test]
+    fn counters_survive_across_writers_like_a_reconnect() {
+        // One Faultline, two writers (two connections): the second fault
+        // fires on the second connection, and nothing re-fires.
+        let line = Faultline::new(FaultSpec::parse("drop-after:3").unwrap());
+        let mut out1 = Vec::new();
+        let mut w1 = FaultWriter::new(&mut out1, None, line.clone());
+        send(&mut w1, &frame(4, &[1])).unwrap();
+        send(&mut w1, &frame(4, &[2])).unwrap();
+        let mut out2 = Vec::new();
+        let mut w2 = FaultWriter::new(&mut out2, None, line.clone());
+        let err = send(&mut w2, &frame(4, &[3])).unwrap_err();
+        assert!(err.to_string().contains("fault injected"), "{err}");
+        send(&mut w2, &frame(4, &[4])).unwrap();
+        assert_eq!(line.fired(), vec!["drop-after:3".to_string()]);
+    }
+
+    #[test]
+    fn stall_sleeps_before_the_frame_and_fires_once() {
+        let line = Faultline::new(FaultSpec::parse("stall:1,stall-ms:30").unwrap());
+        let mut out = Vec::new();
+        let mut w = FaultWriter::new(&mut out, None, line.clone());
+        let t0 = std::time::Instant::now();
+        let f1 = frame(4, &[1]);
+        send(&mut w, &f1).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(out, f1);
+        send(&mut w, &frame(4, &[2])).unwrap();
+        assert_eq!(line.fired().len(), 1);
+    }
+}

@@ -14,7 +14,17 @@
 //!   process that ever writes the store.
 //! - [`worker`]: a stateless engine pool that connects, handshakes, and
 //!   executes — its engine threads are literally the in-process pool's
-//!   `worker_loop`.
+//!   `worker_loop`. With a retry budget it survives outages: bounded
+//!   exponential-backoff redial, re-handshake, and a verified LRU snapshot
+//!   cache that lets a restarted coordinator assign by reference.
+//! - [`faultline`]: deterministic fault injection on the worker's outbound
+//!   stream (DESIGN.md §10) — connection drops, torn frames, stalls past
+//!   the heartbeat timeout, duplicated `Done` frames — armed via
+//!   `REPRO_FAULT` or `repro worker --fault`, firing at frame-indexed,
+//!   reproducible points.
+//! - [`chaos`]: the in-process chaos drill behind `repro chaos` — one
+//!   scenario per fault kind, each watchdogged, each required to end in a
+//!   bit-identical outcome or a loud contextual error (never a hang).
 //!
 //! **Determinism contract.** A sweep spread over any fleet — including one
 //! that loses workers mid-flight and reassigns their jobs — assembles
@@ -23,9 +33,13 @@
 //! canonical file formats, and the coordinator folds results in serial
 //! group order regardless of arrival order.
 
+pub mod chaos;
+pub(crate) mod faultline;
 pub mod serve;
 pub(crate) mod wire;
 pub mod worker;
 
+pub use chaos::run_chaos;
+pub use faultline::FaultSpec;
 pub use serve::{FabricOptions, FabricServer, FabricStats};
 pub use worker::{run_worker, WorkerOptions, WorkerReport};

@@ -6,7 +6,7 @@
 //! Topology (DESIGN.md §9): the coordinator lowers the sweep, runs the
 //! store pre-pass, and then treats every announced engine slot — local
 //! thread or remote connection — identically: pop a ready job, ship the
-//! plan plus its fork snapshot inline, land the `Done`. The coordinator is
+//! plan plus its fork snapshot, land the `Done`. The coordinator is
 //! the **only** process that touches the store: workers are stateless
 //! engines, so the journal stays the single commit point and can never see
 //! a duplicate or lost entry regardless of how many processes participate.
@@ -20,29 +20,49 @@
 //! re-issued job always finds its snapshot intact. Completions are
 //! idempotent, so a job that raced its dying worker's final report is
 //! executed at most once *as far as the journal is concerned* even if it
-//! was dispatched twice. The result: any fleet size, any interleaving, any
-//! mid-sweep worker death — the assembled curves, states, and
-//! `executed_flops` are bit-identical to a serial sweep.
+//! was dispatched twice. On abort the coordinator broadcasts `Shutdown`
+//! with the failure reason before closing, so workers exit loudly instead
+//! of idling to a heartbeat timeout. The result: any fleet size, any
+//! interleaving, any mid-sweep worker death — the assembled curves,
+//! states, and `executed_flops` are bit-identical to a serial sweep.
+//!
+//! **Coordinator failover** is the same machinery viewed from the other
+//! side: because every completion journals before it publishes, a
+//! SIGKILL'd coordinator can restart with `--resume` and rebuild its whole
+//! scheduler state from the §7 journal + store (the pre-pass satisfies
+//! completed jobs; committed trunk snapshots re-load lazily). Workers
+//! redial with backoff, re-handshake, and advertise the trunk snapshots
+//! they still cache so the restarted coordinator can keep assigning by
+//! reference — each advertised entry is accepted only if it verifies
+//! against a journaled artifact manifest, so a stale cache can never
+//! serve. Snapshot transport is a per-connection mirror of the worker's
+//! LRU cache: hit → a by-reference `Cached` assignment, miss or drift →
+//! the worker answers `SnapMiss` and the bytes ship inline (the mirror is
+//! optimistic; `SnapMiss` is its correction, never a wrong byte).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::BufReader;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::DriverSnapshot;
 use crate::coordinator::{ProgressSink, SweepOutcome};
 use crate::data::Corpus;
 use crate::exec::pool::{worker_loop, WorkerMsg};
-use crate::exec::sched::{record_graph_refs, JobOutput, Scheduler, WorkItem};
-use crate::exec::{JobGraph, JobId};
+use crate::exec::sched::{
+    graph_refs, record_graph_refs, snapshot_dep, trunk_store_key, JobOutput, Scheduler, WorkItem,
+};
+use crate::exec::{JobGraph, JobId, JobKind};
 use crate::runtime::Manifest;
-use crate::store::{RunStore, STORE_VERSION};
+use crate::store::{ArtifactManifest, RunStore, STORE_VERSION};
 
-use super::wire::{self, Msg};
+use super::wire::{self, Msg, WireItem, WireSnap};
 
 /// Coordinator configuration for one distributed graph execution.
 #[derive(Debug, Clone)]
@@ -57,6 +77,10 @@ pub struct FabricOptions {
     /// A connection silent for longer than this is declared dead and its
     /// in-flight jobs are reassigned (workers heartbeat every ~2s).
     pub heartbeat_timeout: Duration,
+    /// This serve is a restart of an interrupted sweep: require the store
+    /// journal to already know this sweep (refuse a store that has never
+    /// seen it) and count the pre-pass hits as `resumed_jobs`.
+    pub resume: bool,
 }
 
 impl Default for FabricOptions {
@@ -66,13 +90,14 @@ impl Default for FabricOptions {
             progress: None,
             keep_states: false,
             heartbeat_timeout: Duration::from_secs(20),
+            resume: false,
         }
     }
 }
 
 /// What the fabric actually did — the observability half of the
 /// zero-dispatch warm-rerun contract (`dispatched_jobs == 0` on a fully
-/// warm store) and the reassignment tests.
+/// warm store), the reassignment tests, and the failover drills.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct FabricStats {
     /// Jobs satisfied by the store pre-pass (never dispatched anywhere).
@@ -87,8 +112,19 @@ pub struct FabricStats {
     pub reassigned_jobs: usize,
     /// Handshaken connections that died before shutdown.
     pub workers_lost: usize,
+    /// Handshakes from a worker identity seen before — i.e. successful
+    /// reconnects after a lost connection or a coordinator restart.
+    pub workers_reconnected: usize,
     /// Connections accepted (handshake outcome regardless).
     pub connections: usize,
+    /// Fork snapshots shipped inline over the wire.
+    pub snapshots_shipped: usize,
+    /// Fork snapshots served by reference from a worker's verified cache.
+    pub snapshots_cache_served: usize,
+    /// Total `DPTDRV01` bytes shipped inline (0 on a fully warm rerun).
+    pub snapshot_bytes_shipped: u64,
+    /// Jobs the `--resume` pre-pass replayed from the journal.
+    pub resumed_jobs: usize,
 }
 
 /// A bound coordinator listener; [`FabricServer::run`] executes one graph
@@ -105,9 +141,35 @@ struct Conn {
     peer: SocketAddr,
     /// Handshake completed (Hello verified, Welcome sent).
     active: bool,
+    /// Stable worker identity from the Hello (reconnect accounting).
+    wid: String,
     /// slot → job currently executing there.
     inflight: HashMap<u64, JobId>,
+    /// Mirror of the worker's snapshot-cache keys, LRU order (oldest
+    /// first). Optimistic: `SnapMiss` corrects any drift.
+    model: Vec<String>,
+    /// The worker's advertised cache capacity, mirrored here.
+    cache_cap: usize,
     last_seen: Instant,
+}
+
+impl Conn {
+    fn model_has(&self, key: &str) -> bool {
+        self.model.iter().any(|k| k == key)
+    }
+
+    /// Insert (or touch) a key with the worker's own LRU discipline.
+    fn model_insert(&mut self, key: &str) {
+        self.model.retain(|k| k != key);
+        self.model.push(key.to_string());
+        while self.model.len() > self.cache_cap {
+            self.model.remove(0);
+        }
+    }
+
+    fn model_evict(&mut self, key: &str) {
+        self.model.retain(|k| k != key);
+    }
 }
 
 /// Everything that flows into the coordinator's single event loop.
@@ -116,6 +178,90 @@ enum Event {
     Accepted { conn: usize, stream: TcpStream, peer: SocketAddr },
     Frame { conn: usize, msg: Msg },
     Gone { conn: usize },
+}
+
+/// The cache key a job's *fork* snapshot travels under (its source trunk's
+/// store digest), if it has one.
+fn fork_key(graph: &JobGraph, job: JobId) -> Result<Option<String>> {
+    let Some(src) = snapshot_dep(&graph.jobs()[job].kind) else { return Ok(None) };
+    let JobKind::Trunk { plan_idx, depth, .. } = graph.jobs()[src].kind else {
+        bail!("internal: snapshot dep {src} of job {job} is not a trunk job");
+    };
+    Ok(Some(trunk_store_key(&graph.plans()[plan_idx], depth)?.0))
+}
+
+/// The cache key a trunk job's *result* snapshot files under on the worker
+/// that runs it (empty for run jobs, which produce no snapshot).
+fn result_key(graph: &JobGraph, job: JobId) -> Result<String> {
+    match graph.jobs()[job].kind {
+        JobKind::Trunk { plan_idx, depth, .. } => {
+            Ok(trunk_store_key(&graph.plans()[plan_idx], depth)?.0)
+        }
+        _ => Ok(String::new()),
+    }
+}
+
+/// The manifest a snapshot key must verify against: memoized, else the
+/// store's journaled trunk manifest, else computed from the snapshot's
+/// canonical `DPTDRV01` bytes (and memoized for every later decision).
+fn key_manifest(
+    manifests: &mut HashMap<String, ArtifactManifest>,
+    store: Option<&RunStore>,
+    key: &str,
+    snap: &DriverSnapshot,
+    manifest: &Manifest,
+) -> Result<ArtifactManifest> {
+    if let Some(m) = manifests.get(key) {
+        return Ok(m.clone());
+    }
+    let m = match store.and_then(|s| s.trunk_manifest(key)) {
+        Some(m) => m,
+        None => wire::snap_blob(snap, manifest)?.0,
+    };
+    manifests.insert(key.to_string(), m.clone());
+    Ok(m)
+}
+
+/// Lower a ready [`WorkItem`] into its wire form for one connection:
+/// snapshots the worker verifiably holds go by reference, everything else
+/// ships inline (keyed, so the worker caches it for next time).
+fn encode_item(
+    item: WorkItem,
+    graph: &JobGraph,
+    manifest: &Manifest,
+    store: Option<&RunStore>,
+    manifests: &mut HashMap<String, ArtifactManifest>,
+    conn: &mut Conn,
+    stats: &mut FabricStats,
+) -> Result<WireItem> {
+    let job = item.job();
+    let fork = fork_key(graph, job)?;
+    let mut wire_snap = |snap: Option<Arc<DriverSnapshot>>| -> Result<WireSnap> {
+        let Some(snap) = snap else { return Ok(WireSnap::None) };
+        let key = fork
+            .clone()
+            .with_context(|| format!("internal: job {job} has a snapshot but no trunk key"))?;
+        let m = key_manifest(manifests, store, &key, &snap, manifest)?;
+        if conn.model_has(&key) {
+            stats.snapshots_cache_served += 1;
+            conn.model_insert(&key); // touch: mirrors the worker's LRU hit
+            return Ok(WireSnap::Cached { key, manifest: m });
+        }
+        stats.snapshots_shipped += 1;
+        stats.snapshot_bytes_shipped += m.len;
+        conn.model_insert(&key); // the worker caches every keyed inline ship
+        Ok(WireSnap::Inline { key, manifest: m, snap })
+    };
+    Ok(match item {
+        WorkItem::Trunk { job, plan, fork_step, snap } => {
+            let snap = wire_snap(snap)?;
+            WireItem::Trunk { job, plan, fork_step, result_key: result_key(graph, job)?, snap }
+        }
+        WorkItem::Run { job, plan_idx, plan, snap, keep_state } => {
+            let snap = wire_snap(snap)?;
+            WireItem::Run { job, plan_idx, plan, snap, keep_state }
+        }
+    })
 }
 
 impl FabricServer {
@@ -141,7 +287,8 @@ impl FabricServer {
     /// bit-identical to [`crate::coordinator::Sweep::run`]. With a store
     /// attached the pre-pass serves cached jobs first (a fully warm store
     /// returns before a single byte hits the network) and every completion
-    /// is journaled coordinator-side as it lands.
+    /// is journaled coordinator-side as it lands — which is exactly what
+    /// makes `--resume` after a coordinator SIGKILL work.
     pub fn run(
         self,
         manifest: &Manifest,
@@ -153,13 +300,32 @@ impl FabricServer {
         if graph.jobs().is_empty() {
             bail!("job graph has no jobs");
         }
+        if opts.resume {
+            let s = store.as_deref().ok_or_else(|| {
+                anyhow!("`--resume` rebuilds scheduler state from the journal: pass --store <dir>")
+            })?;
+            let (runs, trunks) = graph_refs(graph)?;
+            if !s.refs_recorded(
+                runs.iter().map(String::as_str),
+                trunks.iter().map(String::as_str),
+            ) {
+                bail!(
+                    "nothing to resume: the store journal has no record of this sweep \
+                     (same --store dir and identical sweep flags as the interrupted run?)"
+                );
+            }
+        }
         // GC liveness: reference the sweep's keys before executing.
         if let Some(s) = store.as_deref_mut() {
             record_graph_refs(s, graph)?;
         }
         let (mut sched, done_upfront) =
             Scheduler::new(graph, opts.keep_states, store.is_some(), store.as_deref())?;
-        let mut stats = FabricStats { cached_jobs: done_upfront, ..FabricStats::default() };
+        let mut stats = FabricStats {
+            cached_jobs: done_upfront,
+            resumed_jobs: if opts.resume { done_upfront } else { 0 },
+            ..FabricStats::default()
+        };
         if sched.is_done() {
             // Fully warm store: zero dispatches, zero network traffic.
             return Ok((sched.assemble()?, stats));
@@ -237,6 +403,9 @@ impl FabricServer {
             let mut idle_local: Vec<usize> = Vec::new();
             let mut idle_remote: VecDeque<(usize, u64)> = VecDeque::new();
             let mut conns: HashMap<usize, Conn> = HashMap::new();
+            // Verified snapshot manifests by cache key (trunk digest).
+            let mut manifests: HashMap<String, ArtifactManifest> = HashMap::new();
+            let mut seen_wids: HashSet<String> = HashSet::new();
             let mut in_flight = 0usize;
             let mut alive_local = local_workers;
             let mut ever_connected = false;
@@ -276,12 +445,28 @@ impl FabricServer {
                         match sched.next_item(manifest, store.as_deref()) {
                             Ok(Some(item)) => {
                                 let job = item.job();
-                                let msg = Msg::Assign { slot, item };
                                 let conn = conns.get_mut(&conn_id).expect("checked above");
+                                let wire_item = match encode_item(
+                                    item,
+                                    graph,
+                                    manifest,
+                                    store.as_deref(),
+                                    &mut manifests,
+                                    conn,
+                                    &mut stats,
+                                ) {
+                                    Ok(it) => it,
+                                    Err(e) => {
+                                        sched.requeue(job);
+                                        first_err = Some(e);
+                                        break;
+                                    }
+                                };
                                 conn.inflight.insert(slot, job);
                                 in_flight += 1;
                                 stats.dispatched_jobs += 1;
                                 stats.remote_jobs += 1;
+                                let msg = Msg::Assign { slot, item: wire_item };
                                 if wire::send_msg(&mut conn.stream, &msg, manifest).is_err() {
                                     drop_conn(
                                         conn_id,
@@ -349,7 +534,10 @@ impl FabricServer {
                                     stream,
                                     peer,
                                     active: false,
+                                    wid: String::new(),
                                     inflight: HashMap::new(),
+                                    model: Vec::new(),
+                                    cache_cap: 1,
                                     last_seen: Instant::now(),
                                 },
                             );
@@ -362,7 +550,15 @@ impl FabricServer {
                             continue; // frames racing a drop are stale
                         }
                         match msg {
-                            Msg::Hello { proto, store_version, salt, probe } => {
+                            Msg::Hello {
+                                proto,
+                                store_version,
+                                salt,
+                                probe,
+                                wid,
+                                cache_cap,
+                                cached,
+                            } => {
                                 let reason = hello_mismatch(
                                     proto,
                                     store_version,
@@ -384,6 +580,30 @@ impl FabricServer {
                                     }
                                     None => {
                                         c.active = true;
+                                        c.wid = wid.clone();
+                                        c.cache_cap = (cache_cap as usize).max(1);
+                                        if !seen_wids.insert(wid) {
+                                            stats.workers_reconnected += 1;
+                                        }
+                                        // Adopt only *verifiable* cache
+                                        // entries: a key must match a
+                                        // journaled or already-served
+                                        // manifest. Anything else is
+                                        // dropped (worst case one inline
+                                        // re-ship — never a stale serve).
+                                        for (key, m) in cached {
+                                            let known = manifests.get(&key).cloned().or_else(
+                                                || {
+                                                    store
+                                                        .as_deref()
+                                                        .and_then(|s| s.trunk_manifest(&key))
+                                                },
+                                            );
+                                            if known.as_ref() == Some(&m) {
+                                                manifests.insert(key.clone(), m);
+                                                c.model_insert(&key);
+                                            }
+                                        }
                                         if wire::send_msg(&mut c.stream, &Msg::Welcome, manifest)
                                             .is_err()
                                         {
@@ -405,11 +625,42 @@ impl FabricServer {
                                     idle_remote.push_back((conn, slot));
                                 }
                             }
+                            Msg::SnapMiss { slot, job, key } => {
+                                let c = conns.get_mut(&conn).expect("checked above");
+                                match c.inflight.remove(&slot) {
+                                    Some(expected) if expected == job => {
+                                        // The mirror drifted: evict, requeue,
+                                        // and the next dispatch ships inline.
+                                        c.model_evict(&key);
+                                        in_flight -= 1;
+                                        sched.requeue(job);
+                                        idle_remote.push_back((conn, slot));
+                                    }
+                                    Some(expected) => {
+                                        in_flight -= 1;
+                                        sched.requeue(expected);
+                                        stats.reassigned_jobs += 1;
+                                        drop_conn(
+                                            conn,
+                                            &mut conns,
+                                            &mut idle_remote,
+                                            &mut sched,
+                                            &mut in_flight,
+                                            &mut stats,
+                                        );
+                                    }
+                                    None => {} // stale (reassigned already)
+                                }
+                            }
                             Msg::Done { slot, job, output } => {
-                                let expected =
-                                    conns.get_mut(&conn).and_then(|c| c.inflight.remove(&slot));
+                                let expected = conns
+                                    .get(&conn)
+                                    .and_then(|c| c.inflight.get(&slot).copied());
                                 match expected {
                                     Some(expected) if expected == job => {
+                                        if let Some(c) = conns.get_mut(&conn) {
+                                            c.inflight.remove(&slot);
+                                        }
                                         in_flight -= 1;
                                         idle_remote.push_back((conn, slot));
                                         let peer =
@@ -420,6 +671,31 @@ impl FabricServer {
                                                 peer.unwrap_or_default()
                                             )
                                         });
+                                        // A trunk result was filed into the
+                                        // worker's cache before it was sent:
+                                        // mirror that, so its tails can go
+                                        // by reference.
+                                        if let Ok(JobOutput::Snapshot(s)) = &out {
+                                            let filed = result_key(graph, job)
+                                                .ok()
+                                                .filter(|k| !k.is_empty())
+                                                .and_then(|k| {
+                                                    key_manifest(
+                                                        &mut manifests,
+                                                        store.as_deref(),
+                                                        &k,
+                                                        s,
+                                                        manifest,
+                                                    )
+                                                    .ok()
+                                                    .map(|_| k)
+                                                });
+                                            if let Some(k) = filed {
+                                                if let Some(c) = conns.get_mut(&conn) {
+                                                    c.model_insert(&k);
+                                                }
+                                            }
+                                        }
                                         land(
                                             &mut sched,
                                             job,
@@ -429,14 +705,19 @@ impl FabricServer {
                                             &mut first_err,
                                         );
                                     }
-                                    Some(expected) => {
+                                    // A duplicated delivery (the dup-done
+                                    // drill) can race a fresh assignment on
+                                    // the same slot: a Done for a job that
+                                    // already landed is idempotent noise, and
+                                    // the slot's live assignment is left
+                                    // untouched.
+                                    Some(_) if sched.completed(job) => {}
+                                    Some(_) => {
                                         // The worker reported a job we never
                                         // assigned to that slot: protocol
-                                        // confusion. Recover the assigned
-                                        // job, then cut the worker loose.
-                                        in_flight -= 1;
-                                        sched.requeue(expected);
-                                        stats.reassigned_jobs += 1;
+                                        // confusion. Cut the worker loose
+                                        // (drop_conn recovers everything it
+                                        // held, the confused slot included).
                                         drop_conn(
                                             conn,
                                             &mut conns,
@@ -454,7 +735,7 @@ impl FabricServer {
                             Msg::Welcome
                             | Msg::Reject { .. }
                             | Msg::Assign { .. }
-                            | Msg::Shutdown => {
+                            | Msg::Shutdown { .. } => {
                                 drop_conn(
                                     conn,
                                     &mut conns,
@@ -505,10 +786,14 @@ impl FabricServer {
                 }
             }
 
-            // Teardown: release the fleet, wake the acceptor, join via scope.
+            // Teardown: release the fleet — with the abort reason, if any,
+            // so workers exit loudly instead of idling to a heartbeat
+            // timeout — then wake the acceptor and join via scope.
             shutting_down.store(true, Ordering::SeqCst);
+            let reason = first_err.as_ref().map(|e| format!("{e:#}")).unwrap_or_default();
             for c in conns.values_mut() {
-                let _ = wire::send_msg(&mut c.stream, &Msg::Shutdown, manifest);
+                let bye = Msg::Shutdown { reason: reason.clone() };
+                let _ = wire::send_msg(&mut c.stream, &bye, manifest);
                 let _ = c.stream.shutdown(Shutdown::Both);
             }
             drop(to_local);
@@ -634,6 +919,12 @@ fn land(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
+
+    use crate::coordinator::RunBuilder;
+    use crate::data::CorpusConfig;
+    use crate::expansion::ExpandSpec;
+    use crate::schedule::Schedule;
 
     #[test]
     fn bind_reports_malformed_addresses_and_busy_ports() {
@@ -662,5 +953,117 @@ mod tests {
         assert!(bad.contains("context mismatch"), "{bad}");
         let bad = hello_mismatch(proto, sv, salt, "zzzz", salt, probe).unwrap();
         assert!(bad.contains("plan-codec mismatch"), "{bad}");
+    }
+
+    #[test]
+    fn resume_without_a_journal_record_is_refused() {
+        let plan = RunBuilder::progressive(
+            "r",
+            "s",
+            "t",
+            10,
+            40,
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.1 },
+            ExpandSpec::default(),
+        )
+        .build()
+        .unwrap();
+        let graph = JobGraph::lower(vec![plan]).unwrap();
+        let manifest = Manifest::parse(r#"{"configs":{}}"#, PathBuf::from("/tmp")).unwrap();
+        let cfg = CorpusConfig { vocab: 8, train_tokens: 64, val_tokens: 16, ..Default::default() };
+        let corpus = Corpus::generate(cfg);
+        let dir = std::env::temp_dir().join(format!("fabric-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = RunStore::open(&dir).unwrap();
+
+        let server = FabricServer::bind("127.0.0.1:0").unwrap();
+        let opts = FabricOptions { resume: true, ..FabricOptions::default() };
+        let err =
+            server.run(&manifest, &corpus, &graph, &opts, Some(&mut store)).unwrap_err();
+        assert!(format!("{err:#}").contains("nothing to resume"), "{err:#}");
+
+        // Without a store at all, --resume is a contextual error too.
+        let server = FabricServer::bind("127.0.0.1:0").unwrap();
+        let err = server.run(&manifest, &corpus, &graph, &opts, None).unwrap_err();
+        assert!(format!("{err:#}").contains("--store"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The abort-broadcast satellite: a worker whose job fails must receive
+    /// a `Shutdown` frame carrying the abort reason — not a silent socket
+    /// close — so fleets exit promptly and loudly.
+    #[test]
+    fn abort_broadcasts_shutdown_with_the_reason() {
+        let plan = RunBuilder::progressive(
+            "r",
+            "s",
+            "t",
+            10,
+            40,
+            Schedule::Constant { peak: 0.01, warmup_frac: 0.1 },
+            ExpandSpec::default(),
+        )
+        .build()
+        .unwrap();
+        let graph = JobGraph::lower(vec![plan]).unwrap();
+        let manifest = Manifest::parse(r#"{"configs":{}}"#, PathBuf::from("/tmp")).unwrap();
+        let cfg = CorpusConfig { vocab: 8, train_tokens: 64, val_tokens: 16, ..Default::default() };
+        let corpus = Corpus::generate(cfg);
+        let salt = RunStore::context_salt(&manifest, &corpus);
+        let probe = wire::codec_probe().unwrap();
+
+        let server = FabricServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let fake = {
+            thread::spawn(move || -> Result<String> {
+                // A protocol-speaking fake worker: takes one assignment,
+                // fails it, then waits for the coordinator's goodbye.
+                let manifest = Manifest::parse(r#"{"configs":{}}"#, PathBuf::from("/tmp"))?;
+                let stream = TcpStream::connect(addr)?;
+                stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+                let mut write = stream.try_clone()?;
+                let mut read = BufReader::new(stream);
+                wire::expect_magic(&mut read)?;
+                wire::write_magic(&mut write)?;
+                let hello = Msg::Hello {
+                    proto: wire::PROTOCOL_VERSION,
+                    store_version: STORE_VERSION as u64,
+                    salt,
+                    probe,
+                    wid: "fake".into(),
+                    cache_cap: 4,
+                    cached: Vec::new(),
+                };
+                wire::send_msg(&mut write, &hello, &manifest)?;
+                match wire::recv_msg(&mut read, &manifest)? {
+                    Msg::Welcome => {}
+                    Msg::Reject { reason } => bail!("handshake rejected: {reason}"),
+                    _ => bail!("expected Welcome, got another frame"),
+                }
+                wire::send_msg(&mut write, &Msg::Ready { slot: 0 }, &manifest)?;
+                let job = loop {
+                    match wire::recv_msg(&mut read, &manifest)? {
+                        Msg::Assign { item, .. } => break item.job(),
+                        Msg::Heartbeat => {}
+                        _ => bail!("expected Assign, got another frame"),
+                    }
+                };
+                let done = Msg::Done { slot: 0, job, output: Err("boom at step 3".into()) };
+                wire::send_msg(&mut write, &done, &manifest)?;
+                loop {
+                    match wire::recv_msg(&mut read, &manifest)? {
+                        Msg::Shutdown { reason } => return Ok(reason),
+                        Msg::Heartbeat => {}
+                        _ => bail!("expected Shutdown, got another frame"),
+                    }
+                }
+            })
+        };
+        let err = server
+            .run(&manifest, &corpus, &graph, &FabricOptions::default(), None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("boom at step 3"), "{err:#}");
+        let reason = fake.join().expect("fake worker panicked").expect("fake worker errored");
+        assert!(reason.contains("boom at step 3"), "shutdown carried: {reason:?}");
     }
 }

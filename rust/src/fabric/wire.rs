@@ -20,11 +20,26 @@
 //! canonical plan through the plan codec). The coordinator compares all
 //! four against its own values and answers [`Msg::Welcome`] or
 //! [`Msg::Reject`] — mismatched builds, artifacts, or corpora fail loudly
-//! at connect instead of corrupting a sweep later.
+//! at connect instead of corrupting a sweep later. Since protocol v2 the
+//! Hello also carries a stable worker id (reconnect accounting) and the
+//! worker's snapshot-cache inventory, so a coordinator — freshly restarted
+//! or not — can serve fork snapshots by reference instead of re-shipping
+//! megabytes the worker already holds.
+//!
+//! **Snapshot transport** ([`WireSnap`], DESIGN.md §9): an assignment's
+//! fork snapshot travels either inline (the raw `DPTDRV01` blob plus the
+//! cache key to file it under) or by reference (cache key + the
+//! [`ArtifactManifest`] of the expected bytes). The manifest check is the
+//! stale-cache guard: a worker whose cached bytes do not match answers
+//! [`Msg::SnapMiss`] and the coordinator re-ships inline — a wrong snapshot
+//! can never silently serve.
 //!
 //! Decoding is strict: unknown kinds, unknown tags, and trailing payload
 //! bytes are all errors (trailing bytes are the classic symptom of two
-//! builds disagreeing about a codec).
+//! builds disagreeing about a codec). Length words are never trusted for
+//! allocation: payloads are read in bounded chunks, so a corrupt or hostile
+//! frame header dies on the first missing byte instead of reserving
+//! gigabytes.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
@@ -32,35 +47,91 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{self, read_str, read_u64, write_str, write_u64, DriverSnapshot};
-use crate::coordinator::RunBuilder;
+use crate::coordinator::{RunBuilder, RunPlan};
 use crate::exec::sched::{JobOutput, WorkItem};
 use crate::exec::JobId;
 use crate::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
 use crate::runtime::Manifest;
 use crate::schedule::Schedule;
-use crate::store;
+use crate::store::{self, ArtifactManifest};
 
 /// Connection preamble: both endpoints write it immediately after connect.
 pub(crate) const MAGIC: [u8; 8] = *b"DPTNET01";
 
-/// Bumped on any frame-layout or message-semantics change.
-pub(crate) const PROTOCOL_VERSION: u64 = 1;
+/// Bumped on any frame-layout or message-semantics change. v2: Hello carries
+/// a worker id + cache inventory, Shutdown carries a reason, assignments use
+/// [`WireSnap`] transport, and `SnapMiss` exists.
+pub(crate) const PROTOCOL_VERSION: u64 = 2;
 
 /// Sanity cap on a single frame (a full model snapshot fits comfortably;
 /// anything near this is a corrupted or hostile length word).
 const MAX_FRAME: usize = 1 << 31;
+
+/// Chunk size for length-word-distrusting payload reads.
+const READ_CHUNK: usize = 64 * 1024;
 
 const KIND_HELLO: u8 = 1;
 const KIND_WELCOME: u8 = 2;
 const KIND_REJECT: u8 = 3;
 const KIND_READY: u8 = 4;
 const KIND_ASSIGN: u8 = 5;
-const KIND_DONE: u8 = 6;
-const KIND_HEARTBEAT: u8 = 7;
+pub(crate) const KIND_DONE: u8 = 6;
+pub(crate) const KIND_HEARTBEAT: u8 = 7;
 const KIND_SHUTDOWN: u8 = 8;
+const KIND_SNAPMISS: u8 = 9;
+
+/// How an assignment's fork snapshot crosses the wire.
+pub(crate) enum WireSnap {
+    /// No snapshot (fresh-start trunk).
+    None,
+    /// Full snapshot bytes. `key` is the cache key the worker files the
+    /// blob under (`""` = uncacheable); `manifest` covers the raw
+    /// `DPTDRV01` blob — the encoder recomputes it, the decoder fills it
+    /// from the bytes actually received.
+    Inline { key: String, manifest: ArtifactManifest, snap: Arc<DriverSnapshot> },
+    /// Reference into the worker's snapshot cache. `manifest` is the
+    /// digest check a stale entry can never pass.
+    Cached { key: String, manifest: ArtifactManifest },
+}
+
+/// A [`WorkItem`] in wire form: same fields, but the fork snapshot is a
+/// [`WireSnap`] and trunk items name the cache key their *result* snapshot
+/// should be filed under, so a worker that just trained a trunk can serve
+/// its own fork snapshot from cache on the next assignment.
+pub(crate) enum WireItem {
+    Trunk { job: JobId, plan: RunPlan, fork_step: usize, result_key: String, snap: WireSnap },
+    Run { job: JobId, plan_idx: usize, plan: RunPlan, snap: WireSnap, keep_state: bool },
+}
+
+impl WireItem {
+    pub(crate) fn job(&self) -> JobId {
+        match self {
+            WireItem::Trunk { job, .. } | WireItem::Run { job, .. } => *job,
+        }
+    }
+
+    pub(crate) fn snap(&self) -> &WireSnap {
+        match self {
+            WireItem::Trunk { snap, .. } | WireItem::Run { snap, .. } => snap,
+        }
+    }
+
+    /// Rebuild the scheduler's currency once the snapshot is resolved
+    /// (decoded inline, or fetched from the worker's cache).
+    pub(crate) fn into_work_item(self, snap: Option<Arc<DriverSnapshot>>) -> WorkItem {
+        match self {
+            WireItem::Trunk { job, plan, fork_step, .. } => {
+                WorkItem::Trunk { job, plan, fork_step, snap }
+            }
+            WireItem::Run { job, plan_idx, plan, keep_state, .. } => {
+                WorkItem::Run { job, plan_idx, plan, snap, keep_state }
+            }
+        }
+    }
+}
 
 /// One fabric message. `Assign`/`Done` carry the scheduler's own currency
-/// ([`WorkItem`] out, [`JobOutput`] back), so the coordinator's state
+/// ([`WireItem`] out, [`JobOutput`] back), so the coordinator's state
 /// machine cannot tell a remote worker from a local thread.
 pub(crate) enum Msg {
     /// Worker → coordinator, first frame: prove we are the same build
@@ -73,6 +144,14 @@ pub(crate) enum Msg {
         salt: String,
         /// [`codec_probe`] of the worker's build.
         probe: String,
+        /// Stable worker identity (per `run_worker` invocation): lets the
+        /// coordinator tell a reconnect from a fresh worker.
+        wid: String,
+        /// Worker snapshot-cache capacity, in entries.
+        cache_cap: u64,
+        /// Advertised cache inventory, least-recently-used first, so a
+        /// restarted coordinator can keep serving by reference.
+        cached: Vec<(String, ArtifactManifest)>,
     },
     /// Coordinator → worker: handshake accepted, slots may announce.
     Welcome,
@@ -80,9 +159,8 @@ pub(crate) enum Msg {
     Reject { reason: String },
     /// Worker → coordinator: engine `slot` is constructed and idle.
     Ready { slot: u64 },
-    /// Coordinator → worker: run this item on engine `slot`. Fork
-    /// snapshots travel inline — a worker needs nothing but this frame.
-    Assign { slot: u64, item: WorkItem },
+    /// Coordinator → worker: run this item on engine `slot`.
+    Assign { slot: u64, item: WireItem },
     /// Worker → coordinator: the job on `slot` finished (or failed, with a
     /// human-readable error). The slot is implicitly idle again.
     Done {
@@ -90,10 +168,17 @@ pub(crate) enum Msg {
         job: JobId,
         output: Result<JobOutput, String>,
     },
+    /// Worker → coordinator: a by-reference snapshot was absent or stale
+    /// in the worker's cache; the slot is idle again and the job must be
+    /// re-assigned (inline this time).
+    SnapMiss { slot: u64, job: JobId, key: String },
     /// Worker → coordinator: liveness while idle or mid-job.
     Heartbeat,
-    /// Coordinator → worker: the sweep is over; exit cleanly.
-    Shutdown,
+    /// Coordinator → worker: the sweep is over; exit. An empty reason is a
+    /// clean completion; a non-empty reason is the coordinator's abort
+    /// cause, surfaced so workers exit loudly instead of idling until a
+    /// heartbeat timeout.
+    Shutdown { reason: String },
 }
 
 impl Msg {
@@ -106,7 +191,8 @@ impl Msg {
             Msg::Assign { .. } => KIND_ASSIGN,
             Msg::Done { .. } => KIND_DONE,
             Msg::Heartbeat => KIND_HEARTBEAT,
-            Msg::Shutdown => KIND_SHUTDOWN,
+            Msg::Shutdown { .. } => KIND_SHUTDOWN,
+            Msg::SnapMiss { .. } => KIND_SNAPMISS,
         }
     }
 
@@ -116,18 +202,31 @@ impl Msg {
         let mut p = Vec::new();
         let f = &mut p;
         match self {
-            Msg::Hello { proto, store_version, salt, probe } => {
+            Msg::Hello { proto, store_version, salt, probe, wid, cache_cap, cached } => {
                 write_u64(f, *proto)?;
                 write_u64(f, *store_version)?;
                 write_str(f, salt)?;
                 write_str(f, probe)?;
+                write_str(f, wid)?;
+                write_u64(f, *cache_cap)?;
+                write_u64(f, cached.len() as u64)?;
+                for (key, m) in cached {
+                    write_str(f, key)?;
+                    write_manifest(f, m)?;
+                }
             }
-            Msg::Welcome | Msg::Heartbeat | Msg::Shutdown => {}
+            Msg::Welcome | Msg::Heartbeat => {}
             Msg::Reject { reason } => write_str(f, reason)?,
+            Msg::Shutdown { reason } => write_str(f, reason)?,
             Msg::Ready { slot } => write_u64(f, *slot)?,
             Msg::Assign { slot, item } => {
                 write_u64(f, *slot)?;
                 encode_item(f, item, manifest)?;
+            }
+            Msg::SnapMiss { slot, job, key } => {
+                write_u64(f, *slot)?;
+                write_u64(f, *job as u64)?;
+                write_str(f, key)?;
             }
             Msg::Done { slot, job, output } => {
                 write_u64(f, *slot)?;
@@ -154,57 +253,127 @@ impl Msg {
     }
 }
 
-fn encode_item(f: &mut impl Write, item: &WorkItem, manifest: &Manifest) -> Result<()> {
+fn encode_item(f: &mut impl Write, item: &WireItem, manifest: &Manifest) -> Result<()> {
     match item {
-        WorkItem::Trunk { job, plan, fork_step, snap } => {
+        WireItem::Trunk { job, plan, fork_step, result_key, snap } => {
             write_u64(f, 0)?;
             write_u64(f, *job as u64)?;
             plan.write_to(f)?;
             write_u64(f, *fork_step as u64)?;
-            write_opt_snap(f, snap.as_deref(), manifest)?;
+            write_str(f, result_key)?;
+            write_wire_snap(f, snap, manifest)?;
         }
-        WorkItem::Run { job, plan_idx, plan, snap, keep_state } => {
+        WireItem::Run { job, plan_idx, plan, snap, keep_state } => {
             write_u64(f, 1)?;
             write_u64(f, *job as u64)?;
             write_u64(f, *plan_idx as u64)?;
             plan.write_to(f)?;
             write_u64(f, u64::from(*keep_state))?;
-            write_opt_snap(f, snap.as_deref(), manifest)?;
+            write_wire_snap(f, snap, manifest)?;
         }
     }
     Ok(())
 }
 
-fn decode_item(f: &mut impl Read, manifest: &Manifest) -> Result<WorkItem> {
+fn decode_item(f: &mut impl Read, manifest: &Manifest) -> Result<WireItem> {
     Ok(match read_u64(f)? {
-        0 => WorkItem::Trunk {
-            job: read_u64(f)? as JobId,
-            plan: crate::coordinator::RunPlan::read_from(f)?,
-            fork_step: {
-                // field order matches encode_item: plan, then fork_step
-                read_u64(f)? as usize
-            },
-            snap: read_opt_snap(f, manifest)?,
-        },
+        0 => {
+            let job = read_u64(f)? as JobId;
+            let plan = RunPlan::read_from(f)?;
+            let fork_step = read_u64(f)? as usize;
+            let result_key = read_str(f)?;
+            let snap = read_wire_snap(f, manifest)?;
+            WireItem::Trunk { job, plan, fork_step, result_key, snap }
+        }
         1 => {
             let job = read_u64(f)? as JobId;
             let plan_idx = read_u64(f)? as usize;
-            let plan = crate::coordinator::RunPlan::read_from(f)?;
+            let plan = RunPlan::read_from(f)?;
             let keep_state = match read_u64(f)? {
                 0 => false,
                 1 => true,
                 other => bail!("bad keep-state flag {other} in fabric frame"),
             };
-            let snap = read_opt_snap(f, manifest)?;
-            WorkItem::Run { job, plan_idx, plan, snap, keep_state }
+            let snap = read_wire_snap(f, manifest)?;
+            WireItem::Run { job, plan_idx, plan, snap, keep_state }
         }
         other => bail!("unknown work-item tag {other} in fabric frame"),
     })
 }
 
-/// Snapshot-in-payload: an explicit config id, then the snapshot in its
-/// verbatim `DPTDRV01` form. The explicit id lets a streaming reader
-/// resolve the manifest entry before decoding (no seek-back on a socket).
+/// Encode a snapshot into its cacheable wire blob — the verbatim
+/// `DPTDRV01` bytes, identical to the store's trunk-file content — and the
+/// [`ArtifactManifest`] both endpoints use for the stale-cache check.
+pub(crate) fn snap_blob(
+    snap: &DriverSnapshot,
+    manifest: &Manifest,
+) -> Result<(ArtifactManifest, Vec<u8>)> {
+    let entry = manifest.get(&snap.cfg_id)?;
+    let mut blob = Vec::new();
+    checkpoint::write_snapshot_to(&mut blob, snap, entry)?;
+    Ok((ArtifactManifest::of(&blob), blob))
+}
+
+fn write_wire_snap(f: &mut impl Write, snap: &WireSnap, manifest: &Manifest) -> Result<()> {
+    match snap {
+        WireSnap::None => write_u64(f, 0),
+        WireSnap::Inline { key, snap, .. } => {
+            write_u64(f, 1)?;
+            write_str(f, key)?;
+            write_str(f, &snap.cfg_id)?;
+            let (_, blob) = snap_blob(snap, manifest)?;
+            write_u64(f, blob.len() as u64)?;
+            f.write_all(&blob)?;
+            Ok(())
+        }
+        WireSnap::Cached { key, manifest: m } => {
+            write_u64(f, 2)?;
+            write_str(f, key)?;
+            write_manifest(f, m)
+        }
+    }
+}
+
+fn read_wire_snap(f: &mut impl Read, manifest: &Manifest) -> Result<WireSnap> {
+    match read_u64(f)? {
+        0 => Ok(WireSnap::None),
+        1 => {
+            let key = read_str(f)?;
+            let cfg_id = read_str(f)?;
+            let len = read_u64(f)? as usize;
+            if len >= MAX_FRAME {
+                bail!("implausible inline snapshot length {len} in fabric frame");
+            }
+            let blob = read_exact_chunked(f, len, "inline snapshot blob")?;
+            let m = ArtifactManifest::of(&blob);
+            let entry = manifest
+                .get(&cfg_id)
+                .context("resolving a wire snapshot's config (mismatched artifacts?)")?;
+            let mut cur = &blob[..];
+            let snap = checkpoint::read_snapshot_from(&mut cur, entry)?;
+            if !cur.is_empty() {
+                bail!("inline snapshot blob has {} trailing bytes", cur.len());
+            }
+            Ok(WireSnap::Inline { key, manifest: m, snap: Arc::new(snap) })
+        }
+        2 => Ok(WireSnap::Cached { key: read_str(f)?, manifest: read_manifest(f)? }),
+        other => bail!("bad snapshot-transport tag {other} in fabric frame"),
+    }
+}
+
+fn write_manifest(f: &mut impl Write, m: &ArtifactManifest) -> Result<()> {
+    write_u64(f, m.len)?;
+    write_str(f, &m.digest)
+}
+
+fn read_manifest(f: &mut impl Read) -> Result<ArtifactManifest> {
+    Ok(ArtifactManifest { len: read_u64(f)?, digest: read_str(f)? })
+}
+
+/// Snapshot-in-payload for `Done` frames: an explicit config id, then the
+/// snapshot in its verbatim `DPTDRV01` form. The explicit id lets a
+/// streaming reader resolve the manifest entry before decoding (no
+/// seek-back on a socket).
 fn write_snap(f: &mut impl Write, snap: &DriverSnapshot, manifest: &Manifest) -> Result<()> {
     write_str(f, &snap.cfg_id)?;
     let entry = manifest.get(&snap.cfg_id)?;
@@ -219,38 +388,24 @@ fn read_snap(f: &mut impl Read, manifest: &Manifest) -> Result<DriverSnapshot> {
     checkpoint::read_snapshot_from(f, entry)
 }
 
-fn write_opt_snap(
-    f: &mut impl Write,
-    snap: Option<&DriverSnapshot>,
-    manifest: &Manifest,
-) -> Result<()> {
-    match snap {
-        None => write_u64(f, 0),
-        Some(s) => {
-            write_u64(f, 1)?;
-            write_snap(f, s, manifest)
-        }
-    }
-}
-
-fn read_opt_snap(f: &mut impl Read, manifest: &Manifest) -> Result<Option<Arc<DriverSnapshot>>> {
-    match read_u64(f)? {
-        0 => Ok(None),
-        1 => Ok(Some(Arc::new(read_snap(f, manifest)?))),
-        other => bail!("bad snapshot-presence flag {other} in fabric frame"),
-    }
-}
-
 fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
     let mut cur = payload;
     let f = &mut cur;
     let msg = match kind {
-        KIND_HELLO => Msg::Hello {
-            proto: read_u64(f)?,
-            store_version: read_u64(f)?,
-            salt: read_str(f)?,
-            probe: read_str(f)?,
-        },
+        KIND_HELLO => {
+            let proto = read_u64(f)?;
+            let store_version = read_u64(f)?;
+            let salt = read_str(f)?;
+            let probe = read_str(f)?;
+            let wid = read_str(f)?;
+            let cache_cap = read_u64(f)?;
+            let n = read_u64(f)?;
+            let mut cached = Vec::new();
+            for _ in 0..n {
+                cached.push((read_str(f)?, read_manifest(f)?));
+            }
+            Msg::Hello { proto, store_version, salt, probe, wid, cache_cap, cached }
+        }
         KIND_WELCOME => Msg::Welcome,
         KIND_REJECT => Msg::Reject { reason: read_str(f)? },
         KIND_READY => Msg::Ready { slot: read_u64(f)? },
@@ -258,6 +413,11 @@ fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
             let slot = read_u64(f)?;
             Msg::Assign { slot, item: decode_item(f, manifest)? }
         }
+        KIND_SNAPMISS => Msg::SnapMiss {
+            slot: read_u64(f)?,
+            job: read_u64(f)? as JobId,
+            key: read_str(f)?,
+        },
         KIND_DONE => {
             let slot = read_u64(f)?;
             let job = read_u64(f)? as JobId;
@@ -279,7 +439,7 @@ fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
             Msg::Done { slot, job, output }
         }
         KIND_HEARTBEAT => Msg::Heartbeat,
-        KIND_SHUTDOWN => Msg::Shutdown,
+        KIND_SHUTDOWN => Msg::Shutdown { reason: read_str(f)? },
         other => bail!("unknown fabric frame kind {other}"),
     };
     if !cur.is_empty() {
@@ -309,7 +469,8 @@ pub(crate) fn expect_magic(r: &mut impl Read) -> Result<()> {
 }
 
 /// Encode and write one frame, flushing so small control frames (Ready,
-/// Heartbeat) are never parked in a buffer behind nothing.
+/// Heartbeat) are never parked in a buffer behind nothing. Exactly one
+/// flush per frame — the fault-injection layer counts flushes as frames.
 pub(crate) fn send_msg(w: &mut impl Write, msg: &Msg, manifest: &Manifest) -> Result<()> {
     let payload = msg.encode(manifest)?;
     if payload.len() >= MAX_FRAME {
@@ -319,6 +480,21 @@ pub(crate) fn send_msg(w: &mut impl Write, msg: &Msg, manifest: &Manifest) -> Re
     w.write_all(&[msg.kind()])?;
     w.write_all(&payload)?;
     w.flush().map_err(Into::into)
+}
+
+/// Read exactly `len` bytes without trusting `len` for the allocation:
+/// the buffer grows only as bytes actually arrive, so a corrupt length
+/// word dies on the first missing byte instead of reserving gigabytes.
+fn read_exact_chunked(r: &mut impl Read, len: usize, what: &str) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(len.min(READ_CHUNK));
+    let mut chunk = vec![0u8; READ_CHUNK.min(len.max(1))];
+    while buf.len() < len {
+        let n = chunk.len().min(len - buf.len());
+        r.read_exact(&mut chunk[..n])
+            .with_context(|| format!("reading fabric {what} ({}/{len} bytes)", buf.len()))?;
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    Ok(buf)
 }
 
 /// Read and decode one frame. Handles arbitrary read fragmentation (TCP
@@ -332,8 +508,7 @@ pub(crate) fn recv_msg(r: &mut impl Read, manifest: &Manifest) -> Result<Msg> {
     }
     let mut kind = [0u8; 1];
     r.read_exact(&mut kind).context("reading fabric frame kind")?;
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("reading fabric frame payload")?;
+    let payload = read_exact_chunked(r, len, "frame payload")?;
     decode(kind[0], &payload, manifest)
 }
 
@@ -513,55 +688,119 @@ mod tests {
         let m = manifest();
         let snap = sample_snapshot(&m);
         let plan = sample_plan("wire");
+        let (blob_manifest, blob) = snap_blob(&snap, &m).unwrap();
         let msgs = vec![
             Msg::Hello {
                 proto: PROTOCOL_VERSION,
                 store_version: 2,
                 salt: "cafebabe".into(),
                 probe: codec_probe().unwrap(),
+                wid: "4242.0".into(),
+                cache_cap: 8,
+                cached: vec![("k0".into(), ArtifactManifest::of(b"x"))],
             },
             Msg::Welcome,
             Msg::Reject { reason: "context mismatch".into() },
             Msg::Ready { slot: 3 },
             Msg::Assign {
                 slot: 1,
-                item: WorkItem::Trunk {
+                item: WireItem::Trunk {
                     job: 7,
                     plan: plan.clone(),
                     fork_step: 10,
-                    snap: Some(Arc::new(snap.clone())),
+                    result_key: "trunk-key".into(),
+                    snap: WireSnap::Inline {
+                        key: "prev-key".into(),
+                        manifest: blob_manifest.clone(),
+                        snap: Arc::new(snap.clone()),
+                    },
                 },
             },
             Msg::Assign {
                 slot: 0,
-                item: WorkItem::Run {
+                item: WireItem::Run {
                     job: 9,
                     plan_idx: 2,
                     plan: plan.clone(),
-                    snap: None,
+                    snap: WireSnap::Cached {
+                        key: "trunk-key".into(),
+                        manifest: blob_manifest.clone(),
+                    },
                     keep_state: true,
+                },
+            },
+            Msg::Assign {
+                slot: 2,
+                item: WireItem::Run {
+                    job: 11,
+                    plan_idx: 0,
+                    plan: plan.clone(),
+                    snap: WireSnap::None,
+                    keep_state: false,
                 },
             },
             Msg::Done { slot: 2, job: 7, output: Ok(JobOutput::Snapshot(Box::new(snap.clone()))) },
             Msg::Done { slot: 0, job: 4, output: Err("worker 0 panicked: oom".into()) },
+            Msg::SnapMiss { slot: 1, job: 9, key: "trunk-key".into() },
             Msg::Heartbeat,
-            Msg::Shutdown,
+            Msg::Shutdown { reason: String::new() },
+            Msg::Shutdown { reason: "fabric fleet drained".into() },
         ];
         for msg in &msgs {
             roundtrip(msg, &m);
         }
         // Spot-check the payload-bearing kinds field-by-field.
+        match roundtrip(&msgs[0], &m) {
+            Msg::Hello { wid, cache_cap, cached, .. } => {
+                assert_eq!(wid, "4242.0");
+                assert_eq!(cache_cap, 8);
+                assert_eq!(cached, vec![("k0".to_string(), ArtifactManifest::of(b"x"))]);
+            }
+            _ => panic!("hello decoded as the wrong message"),
+        }
         match roundtrip(&msgs[4], &m) {
-            Msg::Assign { slot, item: WorkItem::Trunk { job, plan: p, fork_step, snap: s } } => {
+            Msg::Assign {
+                slot,
+                item: WireItem::Trunk { job, plan: p, fork_step, result_key, snap: s },
+            } => {
                 assert_eq!(slot, 1);
                 assert_eq!(job, 7);
                 assert_eq!(fork_step, 10);
+                assert_eq!(result_key, "trunk-key");
                 assert_eq!(p.digest(), plan.digest());
-                assert_snap_eq(&snap, s.as_deref().unwrap());
+                match s {
+                    WireSnap::Inline { key, manifest: got_m, snap: got } => {
+                        assert_eq!(key, "prev-key");
+                        // The decoder's manifest is computed from the bytes
+                        // actually received — it must match the encoder's.
+                        assert_eq!(got_m, blob_manifest);
+                        assert_eq!(got_m, ArtifactManifest::of(&blob));
+                        assert_snap_eq(&snap, &got);
+                    }
+                    _ => panic!("inline snapshot decoded as the wrong transport"),
+                }
             }
             _ => panic!("trunk assignment decoded as the wrong message"),
         }
-        match roundtrip(&msgs[7], &m) {
+        match roundtrip(&msgs[5], &m) {
+            Msg::Assign { item: WireItem::Run { snap, .. }, .. } => match snap {
+                WireSnap::Cached { key, manifest } => {
+                    assert_eq!(key, "trunk-key");
+                    assert_eq!(manifest, blob_manifest);
+                }
+                _ => panic!("cached-ref snapshot decoded as the wrong transport"),
+            },
+            _ => panic!("cached-ref assignment decoded as the wrong message"),
+        }
+        match roundtrip(&msgs[9], &m) {
+            Msg::SnapMiss { slot: 1, job: 9, key } => assert_eq!(key, "trunk-key"),
+            _ => panic!("snap-miss decoded as the wrong message"),
+        }
+        match roundtrip(&msgs[12], &m) {
+            Msg::Shutdown { reason } => assert!(reason.contains("drained")),
+            _ => panic!("shutdown decoded as the wrong message"),
+        }
+        match roundtrip(&msgs[8], &m) {
             Msg::Done { job: 4, output: Err(e), .. } => assert!(e.contains("panicked")),
             _ => panic!("error done decoded as the wrong message"),
         }
@@ -657,6 +896,110 @@ mod tests {
         for cut in 0..buf.len() {
             assert!(recv_msg(&mut &buf[..cut], &m).is_err(), "cut at {cut} must error");
         }
+    }
+
+    #[test]
+    fn oversized_length_words_never_allocate_their_claim() {
+        // A frame header claiming just under the 2 GiB cap, backed by a few
+        // real bytes: the chunked reader must fail on the missing bytes
+        // without ever reserving the claimed length.
+        let m = manifest();
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&((MAX_FRAME - 1) as u32).to_le_bytes());
+        framed.push(KIND_HEARTBEAT);
+        framed.extend_from_slice(&[0u8; 64]);
+        let err = recv_msg(&mut &framed[..], &m).unwrap_err();
+        assert!(format!("{err:#}").contains("frame payload"), "{err:#}");
+
+        // At or above the cap the length word is rejected outright.
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&u32::MAX.to_le_bytes());
+        framed.push(KIND_HEARTBEAT);
+        let err = recv_msg(&mut &framed[..], &m).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+
+        // Same guard inside an inline-snapshot blob length.
+        let mut payload = Vec::new();
+        write_u64(&mut payload, 0).unwrap(); // trunk tag
+        write_u64(&mut payload, 1).unwrap(); // job
+        sample_plan("oversize").write_to(&mut payload).unwrap();
+        write_u64(&mut payload, 10).unwrap(); // fork_step
+        write_str(&mut payload, "").unwrap(); // result_key
+        write_u64(&mut payload, 1).unwrap(); // inline transport tag
+        write_str(&mut payload, "k").unwrap();
+        write_str(&mut payload, "t").unwrap();
+        write_u64(&mut payload, (MAX_FRAME as u64) + 7).unwrap(); // hostile blob length
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&((payload.len() + 8) as u32).to_le_bytes());
+        framed.push(KIND_ASSIGN);
+        framed.extend_from_slice(&0u64.to_le_bytes()); // slot
+        framed.extend_from_slice(&payload);
+        let err = recv_msg(&mut &framed[..], &m).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible inline snapshot"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupted_streams_error_contextually_and_never_panic() {
+        // The wire-robustness property: arbitrary truncation and bit flips
+        // over a stream containing every payload-bearing kind decode to
+        // errors (or, for payload-interior flips, to values) — never a
+        // panic, never a partial snapshot handed to a caller.
+        let m = manifest();
+        let snap = sample_snapshot(&m);
+        let plan = sample_plan("chaoswire");
+        let (bm, _) = snap_blob(&snap, &m).unwrap();
+        let mut stream = Vec::new();
+        let msgs = vec![
+            Msg::Ready { slot: 0 },
+            Msg::Assign {
+                slot: 0,
+                item: WireItem::Trunk {
+                    job: 1,
+                    plan: plan.clone(),
+                    fork_step: 10,
+                    result_key: "rk".into(),
+                    snap: WireSnap::Inline {
+                        key: "ik".into(),
+                        manifest: bm.clone(),
+                        snap: Arc::new(snap.clone()),
+                    },
+                },
+            },
+            Msg::Done { slot: 0, job: 1, output: Ok(JobOutput::Snapshot(Box::new(snap.clone()))) },
+            Msg::SnapMiss { slot: 0, job: 2, key: "ik".into() },
+            Msg::Shutdown { reason: "done".into() },
+        ];
+        for msg in &msgs {
+            send_msg(&mut stream, msg, &m).unwrap();
+        }
+        proptest(80, |g| {
+            let mut bytes = stream.clone();
+            match g.usize(0..3) {
+                0 => {
+                    let keep = g.usize(0..bytes.len());
+                    bytes.truncate(keep);
+                }
+                1 => {
+                    for _ in 0..g.usize(1..5) {
+                        let i = g.usize(0..bytes.len());
+                        bytes[i] ^= 1 << g.usize(0..8);
+                    }
+                }
+                _ => {
+                    // Oversized or nonsense length word at a frame start.
+                    let word = if g.usize(0..2) == 0 { u32::MAX } else { 0x7fff_ffff };
+                    bytes[..4].copy_from_slice(&word.to_le_bytes());
+                }
+            }
+            // Drain the stream: every frame either decodes or errors; the
+            // first error ends the connection, exactly like `read_frames`.
+            let mut r = &bytes[..];
+            for _ in 0..(msgs.len() + 1) {
+                if recv_msg(&mut r, &m).is_err() {
+                    break;
+                }
+            }
+        });
     }
 
     #[test]

@@ -9,34 +9,59 @@
 //! are byte-for-byte the in-process pool's [`worker_loop`] — the transport
 //! cannot change what a job computes, which is the whole determinism story.
 //!
+//! **Resilience** (DESIGN.md §9): with a non-zero `retry_max` the worker
+//! survives coordinator outages. The engine pool outlives connections;
+//! each lost link enters a bounded exponential-backoff dial loop
+//! (deterministically jittered so a fleet does not reconnect in lockstep)
+//! and a successful re-handshake starts a new connection *epoch*. Results
+//! of jobs assigned under an older epoch are discarded — the coordinator
+//! already requeued them at disconnect — and their slots re-announce
+//! `Ready`. The worker also keeps an LRU cache of fork snapshots keyed by
+//! the coordinator's trunk digests, advertised in the Hello, so a
+//! restarted coordinator (or a deep ladder grid) serves references
+//! instead of re-shipping megabytes; every cache hit is verified against
+//! the assignment's [`ArtifactManifest`], so a stale entry can never
+//! serve — it answers `SnapMiss` and the coordinator re-ships inline.
+//!
 //! Liveness: the worker heartbeats every ~2s (also while its engines are
 //! busy — the routing thread never blocks on a job), so a coordinator can
-//! tell a long job from a dead process. If the coordinator vanishes
-//! mid-sweep the worker errors out; after a clean `Shutdown` frame it
-//! exits 0.
+//! tell a long job from a dead process. A clean `Shutdown` frame exits 0;
+//! a `Shutdown` carrying an abort reason exits loudly with it.
 //!
 //! `max_jobs` is a failure-injection drill, not a production knob: after
 //! executing its quota the worker *defects* — drops the connection on the
 //! next assignment without executing it, exactly like a crashed machine —
 //! so reassignment is testable deterministically (see the CI distributed
-//! smoke and `tests/integration.rs`).
+//! smoke and `tests/integration.rs`). `fault` arms the deterministic
+//! fault-injection layer (DESIGN.md §10) on the worker's outbound stream.
 
 use std::io::BufReader;
-use std::net::{Shutdown, TcpStream};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::DriverSnapshot;
 use crate::coordinator::ProgressSink;
 use crate::data::Corpus;
 use crate::exec::pool::{worker_loop, WorkerMsg};
-use crate::exec::sched::WorkItem;
+use crate::exec::sched::{JobOutput, WorkItem};
 use crate::runtime::Manifest;
-use crate::store::{RunStore, STORE_VERSION};
+use crate::store::{ArtifactManifest, RunStore, STORE_VERSION};
 
-use super::wire::{self, Msg};
+use super::faultline::{FaultSpec, FaultWriter, Faultline};
+use super::wire::{self, Msg, WireItem, WireSnap};
+
+/// Entries in the worker-side fork-snapshot cache.
+const SNAP_CACHE_CAP: usize = 8;
+
+/// Distinguishes `run_worker` invocations within one process (loopback
+/// benches open several connections from the same pid).
+static WID_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Worker configuration.
 #[derive(Debug, Clone)]
@@ -48,29 +73,149 @@ pub struct WorkerOptions {
     /// Failure-injection: execute at most this many jobs, then drop the
     /// connection on the next assignment without executing it.
     pub max_jobs: Option<usize>,
+    /// Reconnect budget: how many times a failed connect (or a lost
+    /// connection) is retried per outage streak before giving up. 0 (the
+    /// default) fails immediately — reconnection is opt-in.
+    pub retry_max: usize,
+    /// Backoff base delay in milliseconds; doubles per attempt, capped at
+    /// 10 s, with deterministic ±25% jitter.
+    pub retry_base_ms: u64,
+    /// Deterministic fault injection on the outbound stream (DESIGN.md
+    /// §10); `None` or an empty spec injects nothing.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for WorkerOptions {
     fn default() -> WorkerOptions {
-        WorkerOptions { workers: 1, progress: None, max_jobs: None }
+        WorkerOptions {
+            workers: 1,
+            progress: None,
+            max_jobs: None,
+            retry_max: 0,
+            retry_base_ms: 250,
+            fault: None,
+        }
     }
 }
 
-/// How a worker session ended (both are process-exit-0 outcomes).
+/// How a worker session ended (all are process-exit-0 outcomes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkerReport {
-    /// Jobs fully executed and reported.
+    /// Jobs fully executed (whether or not their results were delivered).
     pub jobs_executed: usize,
     /// Ended by `max_jobs` defection rather than a coordinator `Shutdown`.
     pub defected: bool,
+    /// Successful re-handshakes after a lost connection.
+    pub reconnects: usize,
+    /// Faults the injection layer actually fired (chaos drills assert every
+    /// armed fault fired exactly once).
+    pub faults_fired: usize,
+}
+
+/// Bounded exponential backoff with deterministic jitter: `base · 2^n`,
+/// capped at 10 s, scaled into [75%, 125%] by a hash of (seed, attempt).
+/// Same worker + same attempt → same delay (reproducible drills); fleets
+/// get distinct seeds, so they fan out instead of dialing in lockstep.
+fn backoff_ms(base_ms: u64, attempt: u32, seed: u64) -> u64 {
+    let capped = base_ms.max(1).saturating_mul(1u64 << attempt.min(10)).min(10_000);
+    let r = seed
+        .wrapping_add(attempt as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .rotate_left(17)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    capped * (750 + r % 501) / 1000
+}
+
+/// Worker-side LRU cache of fork snapshots, keyed by the coordinator's
+/// per-depth trunk digests. Index 0 is the oldest entry.
+struct SnapCache {
+    cap: usize,
+    entries: Vec<(String, ArtifactManifest, Arc<DriverSnapshot>)>,
+}
+
+impl SnapCache {
+    fn new(cap: usize) -> SnapCache {
+        SnapCache { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    /// Serve a cached snapshot **only** if its manifest matches the
+    /// assignment's expectation; a stale entry is evicted and misses.
+    fn lookup(&mut self, key: &str, want: &ArtifactManifest) -> Option<Arc<DriverSnapshot>> {
+        let i = self.entries.iter().position(|(k, _, _)| k == key)?;
+        if self.entries[i].1 != *want {
+            self.entries.remove(i);
+            return None;
+        }
+        let entry = self.entries.remove(i);
+        let snap = entry.2.clone();
+        self.entries.push(entry);
+        Some(snap)
+    }
+
+    fn insert(&mut self, key: String, manifest: ArtifactManifest, snap: Arc<DriverSnapshot>) {
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| k == &key) {
+            self.entries.remove(i);
+        }
+        self.entries.push((key, manifest, snap));
+        while self.entries.len() > self.cap {
+            self.entries.remove(0);
+        }
+    }
+
+    /// Inventory for the Hello advertisement, oldest first (the
+    /// coordinator mirrors the LRU order).
+    fn advertise(&self) -> Vec<(String, ArtifactManifest)> {
+        self.entries.iter().map(|(k, m, _)| (k.clone(), m.clone())).collect()
+    }
+}
+
+/// Per-slot state across connections.
+enum Slot {
+    /// Engine thread not (yet) announced.
+    Unready,
+    Idle,
+    /// Executing a job assigned under connection `epoch`; trunk jobs
+    /// remember the cache key their result snapshot files under.
+    Busy { epoch: u64, result_key: Option<String> },
+}
+
+/// Outcome of one dial + handshake.
+enum Dial {
+    Session(FaultWriter<TcpStream>, BufReader<TcpStream>),
+    /// The coordinator said `Reject`: permanent, never retried.
+    Refused(String),
 }
 
 /// Internal event stream: engine-pool replies and decoded frames merge
-/// into one queue so the routing loop has a single blocking point.
+/// into one queue so the routing loop has a single blocking point. Net
+/// events carry their connection epoch so frames and errors from an
+/// abandoned connection cannot poison the current one.
 enum WEvent {
     Pool(WorkerMsg),
-    Net(Msg),
-    NetGone(String),
+    Net(u64, Msg),
+    NetGone(u64, String),
+}
+
+fn reader_loop(
+    mut read: BufReader<TcpStream>,
+    epoch: u64,
+    tx: Sender<WEvent>,
+    manifest: &Manifest,
+) {
+    loop {
+        match wire::recv_msg(&mut read, manifest) {
+            Ok(msg) => {
+                let stop = matches!(msg, Msg::Shutdown { .. });
+                if tx.send(WEvent::Net(epoch, msg)).is_err() || stop {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(WEvent::NetGone(epoch, format!("{e:#}")));
+                return;
+            }
+        }
+    }
 }
 
 /// Connect to a coordinator and serve jobs until it says `Shutdown` (or
@@ -85,40 +230,93 @@ pub fn run_worker(
     if opts.workers == 0 {
         bail!("a fabric worker needs at least one engine thread (got --workers 0)");
     }
-    let stream = TcpStream::connect(addr).with_context(|| {
-        format!(
-            "connecting to fabric coordinator at '{addr}' \
-             (malformed address, or no `repro serve` listening there?)"
-        )
-    })?;
-    stream.set_nodelay(true).ok();
-    let mut write = stream.try_clone().context("cloning fabric socket")?;
-    let mut read = BufReader::new(stream);
+    let faults = Faultline::new(opts.fault.clone().unwrap_or_default());
+    let wid = format!("{}.{}", std::process::id(), WID_SEQ.fetch_add(1, Ordering::SeqCst));
+    let jitter_seed = wid.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+    let salt = RunStore::context_salt(manifest, corpus);
+    let probe = wire::codec_probe()?;
+    let mut cache = SnapCache::new(SNAP_CACHE_CAP);
 
-    // Handshake, synchronously: preamble both ways, Hello out,
-    // Welcome/Reject back.
-    wire::write_magic(&mut write)?;
-    wire::expect_magic(&mut read)?;
-    wire::send_msg(
-        &mut write,
-        &Msg::Hello {
-            proto: wire::PROTOCOL_VERSION,
-            store_version: STORE_VERSION as u64,
-            salt: RunStore::context_salt(manifest, corpus),
-            probe: wire::codec_probe()?,
-        },
-        manifest,
-    )?;
-    match wire::recv_msg(&mut read, manifest).context("waiting for the coordinator's welcome")? {
-        Msg::Welcome => {}
-        Msg::Reject { reason } => bail!("coordinator rejected this worker: {reason}"),
-        _ => bail!("coordinator answered the handshake with an unexpected frame"),
-    }
+    let dial = |advert: Vec<(String, ArtifactManifest)>| -> Result<Dial> {
+        let stream = TcpStream::connect(addr).with_context(|| {
+            format!(
+                "connecting to fabric coordinator at '{addr}' \
+                 (malformed address, or no `repro serve` listening there?)"
+            )
+        })?;
+        stream.set_nodelay(true).ok();
+        // The handshake is bounded: a connection sitting in the accept
+        // backlog of a dead coordinator must fail the dial (and enter the
+        // retry loop) instead of blocking in the preamble read forever.
+        // Cleared once the session is live — the reader thread blocks
+        // indefinitely by design between frames.
+        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+        let sock = stream.try_clone().context("cloning fabric socket")?;
+        let read_half = stream.try_clone().context("cloning fabric socket")?;
+        let mut write = FaultWriter::new(stream, Some(sock), faults.clone());
+        let mut read = BufReader::new(read_half);
+        wire::write_magic(&mut write)?;
+        wire::expect_magic(&mut read)?;
+        wire::send_msg(
+            &mut write,
+            &Msg::Hello {
+                proto: wire::PROTOCOL_VERSION,
+                store_version: STORE_VERSION as u64,
+                salt: salt.clone(),
+                probe: probe.clone(),
+                wid: wid.clone(),
+                cache_cap: SNAP_CACHE_CAP as u64,
+                cached: advert,
+            },
+            manifest,
+        )?;
+        let hello =
+            wire::recv_msg(&mut read, manifest).context("waiting for the coordinator's welcome")?;
+        match hello {
+            Msg::Welcome => {
+                read.get_ref().set_read_timeout(None).ok();
+                Ok(Dial::Session(write, read))
+            }
+            Msg::Reject { reason } => Ok(Dial::Refused(reason)),
+            _ => bail!("coordinator answered the handshake with an unexpected frame"),
+        }
+    };
+
+    // Dial with the retry budget; also used for every reconnect streak.
+    type Session = (FaultWriter<TcpStream>, BufReader<TcpStream>);
+    let dial_with_backoff = |advert: Vec<(String, ArtifactManifest)>| -> Result<Session> {
+        let mut attempt: u32 = 0;
+        loop {
+            let err = match dial(advert.clone()) {
+                Ok(Dial::Session(write, read)) => return Ok((write, read)),
+                Ok(Dial::Refused(reason)) => {
+                    bail!("coordinator rejected this worker: {reason}")
+                }
+                Err(e) => e,
+            };
+            if attempt as usize >= opts.retry_max {
+                return Err(err);
+            }
+            let delay = backoff_ms(opts.retry_base_ms, attempt, jitter_seed);
+            eprintln!(
+                "worker: connect to {addr} failed ({err:#}); retry {}/{} in {delay} ms",
+                attempt + 1,
+                opts.retry_max
+            );
+            thread::sleep(Duration::from_millis(delay));
+            attempt += 1;
+        }
+    };
+
+    // First connection *before* the engine pool spawns: a bad address or
+    // an absent coordinator fails fast, without constructing engines.
+    let (mut write, first_read) = dial_with_backoff(cache.advertise())?;
 
     thread::scope(|scope| -> Result<WorkerReport> {
         let (event_tx, event_rx) = channel::<WEvent>();
 
-        // Engine pool: identical threads to the in-process pool.
+        // Engine pool: identical threads to the in-process pool. Spawned
+        // once — it outlives connections.
         let (pool_tx, pool_rx) = channel::<WorkerMsg>();
         let mut to_engine: Vec<Sender<WorkItem>> = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
@@ -139,95 +337,180 @@ pub fn run_worker(
                 }
             });
         }
-        // Frame reader: decoded coordinator frames into the same queue.
+
+        let mut epoch: u64 = 1;
         {
             let tx = event_tx.clone();
-            scope.spawn(move || {
-                loop {
-                    match wire::recv_msg(&mut read, manifest) {
-                        Ok(msg) => {
-                            let stop = matches!(msg, Msg::Shutdown);
-                            if tx.send(WEvent::Net(msg)).is_err() || stop {
-                                return;
-                            }
-                        }
-                        Err(e) => {
-                            let _ = tx.send(WEvent::NetGone(format!("{e:#}")));
-                            return;
-                        }
-                    }
-                }
-            });
+            scope.spawn(move || reader_loop(first_read, 1, tx, manifest));
         }
-        drop(event_tx);
 
+        let mut slots: Vec<Slot> = (0..opts.workers).map(|_| Slot::Unready).collect();
         let mut assigned = 0usize;
         let mut executed = 0usize;
+        let mut reconnects = 0usize;
         let mut alive = opts.workers;
         let mut last_beat = Instant::now();
-        let finish = |write: &TcpStream, executed: usize, defected: bool| {
-            let _ = write.shutdown(Shutdown::Both);
-            Ok(WorkerReport { jobs_executed: executed, defected })
-        };
-        loop {
+        'sessions: loop {
+            let mut outbound: Vec<Msg> = Vec::new();
+            let mut lost: Option<String> = None;
             match event_rx.recv_timeout(Duration::from_millis(500)) {
                 Ok(WEvent::Pool(WorkerMsg::Ready { worker })) => {
-                    wire::send_msg(&mut write, &Msg::Ready { slot: worker as u64 }, manifest)
-                        .context("announcing an engine slot")?;
+                    slots[worker] = Slot::Idle;
+                    outbound.push(Msg::Ready { slot: worker as u64 });
                 }
                 Ok(WEvent::Pool(WorkerMsg::Done { worker, job, output })) => {
                     executed += 1;
-                    let output = output.map_err(|e| format!("{e:#}"));
-                    let msg = Msg::Done { slot: worker as u64, job, output };
-                    wire::send_msg(&mut write, &msg, manifest)
-                        .context("reporting a finished job")?;
+                    let prev = std::mem::replace(&mut slots[worker], Slot::Idle);
+                    match prev {
+                        Slot::Busy { epoch: e, result_key } if e == epoch => {
+                            if let (Some(key), Ok(JobOutput::Snapshot(s))) = (&result_key, &output)
+                            {
+                                // File our own trunk result in the cache so
+                                // the coordinator can assign its variants
+                                // by reference (it mirrors this insert).
+                                if let Ok((m, _)) = wire::snap_blob(s, manifest) {
+                                    cache.insert(key.clone(), m, Arc::new((**s).clone()));
+                                }
+                            }
+                            let output = output.map_err(|e| format!("{e:#}"));
+                            outbound.push(Msg::Done { slot: worker as u64, job, output });
+                        }
+                        _ => {
+                            // Assigned under a previous connection: the
+                            // coordinator requeued it at disconnect, so the
+                            // result is void — just free the slot.
+                            outbound.push(Msg::Ready { slot: worker as u64 });
+                        }
+                    }
                 }
                 Ok(WEvent::Pool(WorkerMsg::Dead { error })) => {
                     alive -= 1;
                     if alive == 0 {
-                        let _ = write.shutdown(Shutdown::Both);
+                        write.shutdown();
                         return Err(error.context("every engine thread failed to start"));
                     }
                     // Slots that never announced Ready are simply never
                     // assigned; the remaining engines keep serving.
                 }
-                Ok(WEvent::Net(Msg::Assign { slot, item })) => {
+                Ok(WEvent::Net(e, _)) if e != epoch => {}
+                Ok(WEvent::Net(_, Msg::Assign { slot, item })) => {
                     assigned += 1;
                     if opts.max_jobs.is_some_and(|max| assigned > max) {
                         // Defect: vanish exactly like a crashed machine —
                         // the assignment is neither executed nor answered.
-                        return finish(&write, executed, true);
+                        write.shutdown();
+                        return Ok(WorkerReport {
+                            jobs_executed: executed,
+                            defected: true,
+                            reconnects,
+                            faults_fired: faults.fired().len(),
+                        });
                     }
                     let idx = slot as usize;
                     if idx >= to_engine.len() {
-                        let _ = write.shutdown(Shutdown::Both);
+                        write.shutdown();
                         return Err(anyhow!("coordinator assigned to unknown slot {slot}"));
                     }
-                    if to_engine[idx].send(item).is_err() {
-                        let _ = write.shutdown(Shutdown::Both);
-                        return Err(anyhow!("engine thread {idx} exited unexpectedly"));
+                    let job = item.job();
+                    let mut miss: Option<String> = None;
+                    let snap: Option<Arc<DriverSnapshot>> = match item.snap() {
+                        WireSnap::None => None,
+                        WireSnap::Inline { key, manifest: m, snap } => {
+                            if !key.is_empty() {
+                                cache.insert(key.clone(), m.clone(), snap.clone());
+                            }
+                            Some(snap.clone())
+                        }
+                        WireSnap::Cached { key, manifest: m } => match cache.lookup(key, m) {
+                            Some(s) => Some(s),
+                            None => {
+                                miss = Some(key.clone());
+                                None
+                            }
+                        },
+                    };
+                    if let Some(key) = miss {
+                        // Absent or stale: ask for the bytes instead of
+                        // running with the wrong snapshot. The slot stays
+                        // idle; the coordinator re-assigns inline.
+                        outbound.push(Msg::SnapMiss { slot, job, key });
+                    } else {
+                        let result_key = match &item {
+                            WireItem::Trunk { result_key, .. } if !result_key.is_empty() => {
+                                Some(result_key.clone())
+                            }
+                            _ => None,
+                        };
+                        slots[idx] = Slot::Busy { epoch, result_key };
+                        if to_engine[idx].send(item.into_work_item(snap)).is_err() {
+                            write.shutdown();
+                            return Err(anyhow!("engine thread {idx} exited unexpectedly"));
+                        }
                     }
                 }
-                Ok(WEvent::Net(Msg::Heartbeat)) => {}
-                Ok(WEvent::Net(Msg::Shutdown)) => return finish(&write, executed, false),
-                Ok(WEvent::Net(_)) => {
-                    let _ = write.shutdown(Shutdown::Both);
+                Ok(WEvent::Net(_, Msg::Heartbeat)) => {}
+                Ok(WEvent::Net(_, Msg::Shutdown { reason })) => {
+                    write.shutdown();
+                    if reason.is_empty() {
+                        return Ok(WorkerReport {
+                            jobs_executed: executed,
+                            defected: false,
+                            reconnects,
+                            faults_fired: faults.fired().len(),
+                        });
+                    }
+                    // The coordinator aborted: exit promptly and loudly
+                    // with its reason instead of idling to a timeout.
+                    return Err(anyhow!("coordinator aborted the sweep: {reason}"));
+                }
+                Ok(WEvent::Net(_, _)) => {
+                    write.shutdown();
                     return Err(anyhow!("unexpected fabric frame from the coordinator"));
                 }
-                Ok(WEvent::NetGone(e)) => {
-                    return Err(anyhow!("lost connection to the fabric coordinator: {e}"));
-                }
+                Ok(WEvent::NetGone(e, _)) if e != epoch => {}
+                Ok(WEvent::NetGone(_, e)) => lost = Some(e),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(anyhow!("worker internals disconnected unexpectedly"));
                 }
             }
             // Liveness, even mid-job: this loop never blocks on an engine.
-            if last_beat.elapsed() >= Duration::from_secs(2) {
-                // A send failure here means the socket died; the reader
-                // thread will surface it as NetGone with the real error.
-                let _ = wire::send_msg(&mut write, &Msg::Heartbeat, manifest);
+            if lost.is_none() && last_beat.elapsed() >= Duration::from_secs(2) {
+                outbound.push(Msg::Heartbeat);
                 last_beat = Instant::now();
+            }
+            for msg in &outbound {
+                if let Err(e) = wire::send_msg(&mut write, msg, manifest) {
+                    write.shutdown();
+                    lost = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+            if let Some(err) = lost {
+                if opts.retry_max == 0 {
+                    return Err(anyhow!("lost connection to the fabric coordinator: {err}"));
+                }
+                eprintln!("worker: lost connection ({err}); reconnecting");
+                let (w, read) = dial_with_backoff(cache.advertise())
+                    .context("reconnecting to the fabric coordinator")?;
+                write = w;
+                epoch += 1;
+                reconnects += 1;
+                {
+                    let tx = event_tx.clone();
+                    let e = epoch;
+                    scope.spawn(move || reader_loop(read, e, tx, manifest));
+                }
+                // Idle slots introduce themselves on the new connection;
+                // busy ones re-announce when their (void) results land.
+                for (slot, st) in slots.iter().enumerate() {
+                    if matches!(st, Slot::Idle) {
+                        wire::send_msg(&mut write, &Msg::Ready { slot: slot as u64 }, manifest)
+                            .context("re-announcing engine slots after reconnect")?;
+                    }
+                }
+                last_beat = Instant::now();
+                continue 'sessions;
             }
         }
     })
@@ -259,10 +542,71 @@ mod tests {
         let (manifest, corpus) = tiny_world();
         let opts = WorkerOptions::default();
         // A port nothing listens on: the error must say where and hint at
-        // `repro serve`, not surface a bare io::Error.
+        // `repro serve`, not surface a bare io::Error. The default retry
+        // budget is 0, so this fails on the first attempt.
         let err = run_worker("127.0.0.1:9", &manifest, &corpus, &opts).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("fabric coordinator at '127.0.0.1:9'"), "{msg}");
         assert!(msg.contains("repro serve"), "{msg}");
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential_and_deterministic() {
+        for attempt in 0..16 {
+            let d = backoff_ms(250, attempt, 7);
+            let nominal = 250u64.saturating_mul(1 << attempt.min(10)).min(10_000);
+            assert!(d >= nominal * 3 / 4, "attempt {attempt}: {d} < 75% of {nominal}");
+            assert!(d <= nominal * 5 / 4, "attempt {attempt}: {d} > 125% of {nominal}");
+            assert_eq!(d, backoff_ms(250, attempt, 7), "same inputs, same delay");
+        }
+        // Different workers jitter differently (at least somewhere).
+        assert!((0..8).any(|a| backoff_ms(250, a, 1) != backoff_ms(250, a, 2)));
+        // The cap holds even for absurd attempt counts.
+        assert!(backoff_ms(250, 63, 9) <= 12_500);
+    }
+
+    #[test]
+    fn snap_cache_serves_verified_hits_and_evicts_stale_or_old_entries() {
+        // The cache never looks inside the snapshot, so a hollow dummy is
+        // enough; entries are distinguished by key and manifest.
+        let dummy = Arc::new(DriverSnapshot {
+            run_name: "r".into(),
+            cfg_id: "t".into(),
+            step: 0,
+            stage_idx: 0,
+            data_seed: 0,
+            train_windows: 0,
+            val_windows: 0,
+            image_samples: 0,
+            last_train_loss: 0.0,
+            ledger: crate::flops::FlopLedger { total: 0.0, tokens: 0, stages: Vec::new() },
+            curve: crate::metrics::Curve::new("r"),
+            boundaries: Vec::new(),
+            state: crate::runtime::ModelState { params: Vec::new(), opt: Vec::new() },
+        });
+        let snap = |tag: u64| {
+            let m = ArtifactManifest { len: tag, digest: format!("d{tag}") };
+            (m, dummy.clone())
+        };
+        let mut cache = SnapCache::new(2);
+        let (m1, s1) = snap(1);
+        let (m2, s2) = snap(2);
+        let (m3, s3) = snap(3);
+        cache.insert("a".into(), m1.clone(), s1);
+        cache.insert("b".into(), m2.clone(), s2);
+        // Verified hit touches the entry to most-recently-used.
+        assert!(cache.lookup("a", &m1).is_some());
+        assert_eq!(cache.advertise()[0].0, "b", "b is now the LRU entry");
+        // A manifest mismatch is a miss *and* evicts the stale entry.
+        assert!(cache.lookup("b", &m3).is_none());
+        assert!(cache.lookup("b", &m2).is_none(), "stale entry must be gone");
+        // Capacity evicts the oldest entry.
+        cache.insert("b".into(), m2.clone(), snap(2).1);
+        cache.insert("c".into(), m3.clone(), s3);
+        assert!(cache.lookup("a", &m1).is_none(), "a was evicted by capacity");
+        assert_eq!(
+            cache.advertise().iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+            vec!["b", "c"]
+        );
     }
 }

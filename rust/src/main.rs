@@ -39,8 +39,10 @@ use deep_progressive::coordinator::{
 };
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::exec::{default_workers, JobGraph};
-use deep_progressive::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
-use deep_progressive::fabric::{run_worker, FabricOptions, FabricServer, WorkerOptions};
+use deep_progressive::expansion::{strategy_from_name, ExpandSpec, Insertion, OsPolicy};
+use deep_progressive::fabric::{
+    run_chaos, run_worker, FabricOptions, FabricServer, FaultSpec, WorkerOptions,
+};
 use deep_progressive::runtime::{Engine, Manifest};
 use deep_progressive::schedule::Schedule;
 use deep_progressive::store::RunStore;
@@ -90,11 +92,20 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
             "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
             "workers", "store-dir", "listen", "heartbeat-timeout",
         ],
-        switches: &["progress"],
+        switches: &["progress", "resume"],
     };
     const WORKER: CommandSpec = CommandSpec {
-        flags: &["artifacts", "connect", "workers", "max-jobs"],
+        flags: &[
+            "artifacts", "connect", "workers", "max-jobs", "retry-max", "retry-base", "fault",
+        ],
         switches: &["progress"],
+    };
+    const CHAOS: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
+            "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed", "timeout",
+        ],
+        switches: &[],
     };
     const STORE: CommandSpec = CommandSpec {
         flags: &["store-dir", "keep"],
@@ -120,6 +131,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         "ladder" => Some(LADDER),
         "serve" => Some(SERVE),
         "worker" => Some(WORKER),
+        "chaos" => Some(CHAOS),
         "store" => Some(STORE),
         "probe-mixing" => Some(PROBE),
         "convex" => Some(CONVEX),
@@ -140,24 +152,9 @@ fn schedule_from(args: &Args) -> Schedule {
     }
 }
 
-fn strategy_from(name: &str) -> Result<Strategy> {
-    Ok(match name {
-        "random" => Strategy::Random,
-        "copying" | "copying_stack" => Strategy::Copying(CopyOrder::Stack),
-        "copying_inter" => Strategy::Copying(CopyOrder::Inter),
-        "copying_last" => Strategy::Copying(CopyOrder::Last),
-        "zero" => Strategy::Zero,
-        "zero_n" | "copying_zero_n" => Strategy::CopyingZeroN,
-        "zero_l" | "copying_zero_l" => Strategy::CopyingZeroL,
-        other => anyhow::bail!(
-            "unknown expansion strategy '{other}' (expected random|copying|copying_inter|copying_last|zero|zero_n|zero_l)"
-        ),
-    })
-}
-
 fn expand_from(args: &Args) -> Result<ExpandSpec> {
     Ok(ExpandSpec {
-        strategy: strategy_from(args.get_str("strategy", "random"))?,
+        strategy: strategy_from_name(args.get_str("strategy", "random"))?,
         insertion: if args.get_str("insertion", "bottom") == "top" { Insertion::Top } else { Insertion::Bottom },
         os_policy: match args.get_str("os", "inherit") {
             "copy" => OsPolicy::Copy,
@@ -207,11 +204,10 @@ fn workers_from(args: &Args) -> Result<usize> {
     }
 }
 
-/// Build the (non-probe) ladder grid shared by `ladder` and `serve`: one
-/// plan per `--strategies` entry (names suffixed `-{strategy}`), else a
-/// single plan under `--strategy`. Both commands construct plans through
-/// this one function so a fabric run's CSVs can be diffed byte-for-byte
-/// against the serial ladder's.
+/// Build the (non-probe) ladder grid shared by `ladder`, `serve`, and
+/// `chaos` from CLI args — a thin adapter over [`recipe::ladder_grid`],
+/// which owns the construction rules, so a fabric run's CSVs can be diffed
+/// byte-for-byte against the serial ladder's.
 fn ladder_grid(
     args: &Args,
     rungs: &[&str],
@@ -220,54 +216,22 @@ fn ladder_grid(
     sched: Schedule,
     usage: &str,
 ) -> Result<Vec<RunPlan>> {
-    let n_rounds = rungs.len() - 1;
-    let base = expand_from(args)?;
-    let rewarm = args.get_usize("rewarm", 0);
-    // Boundary fractions of the horizon; default: evenly spaced through
-    // the stable phase.
-    let stable_frac = sched.stable_end(steps) as f64 / steps as f64;
-    let fracs: Vec<f64> = match args.get("taus") {
-        Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
-        None => {
-            (1..=n_rounds).map(|i| stable_frac * i as f64 / (n_rounds + 1) as f64).collect()
-        }
+    let spec = recipe::LadderGridSpec {
+        rungs,
+        steps,
+        seed,
+        sched,
+        base: expand_from(args)?,
+        rewarm: args.get_usize("rewarm", 0),
+        taus: args
+            .get("taus")
+            .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect()),
+        strategies: args
+            .get("strategies")
+            .map(|l| l.split(',').map(|s| s.trim().to_string()).collect()),
+        eval_every: args.get("eval-every").map(|_| args.get_usize("eval-every", 1)),
     };
-    if fracs.len() != n_rounds {
-        anyhow::bail!(
-            "--taus needs {} comma-separated fractions for {} rungs — usage: {usage}",
-            n_rounds,
-            rungs.len()
-        );
-    }
-    let taus: Vec<usize> = fracs.iter().map(|&f| tau_from_frac(steps, f)).collect();
-    let name = format!("ladder-{}", rungs.join("-"));
-    let variants: Vec<(String, ExpandSpec)> = match args.get("strategies") {
-        None => vec![(name, base)],
-        Some(list) => list
-            .split(',')
-            .map(|s| {
-                let sname = s.trim();
-                Ok((format!("{name}-{sname}"), ExpandSpec {
-                    strategy: strategy_from(sname)?,
-                    ..base
-                }))
-            })
-            .collect::<Result<_>>()?,
-    };
-    let mut plans = Vec::with_capacity(variants.len());
-    for (vname, spec) in variants {
-        // Same normalization as the probe-driven path (fix-up, horizon
-        // check, per-stage re-warm clamp).
-        let (_, rounds) = recipe::rounds_from_taus(rungs, taus.clone(), steps, spec, rewarm)?;
-        plans.push(
-            apply_eval_every(
-                RunBuilder::ladder(vname.as_str(), rungs[0], &rounds, steps, sched).seed(seed),
-                args,
-            )
-            .build()?,
-        );
-    }
-    Ok(plans)
+    recipe::ladder_grid(&spec).map_err(|e| anyhow::anyhow!("{e:#} — usage: {usage}"))
 }
 
 fn main() -> Result<()> {
@@ -442,7 +406,7 @@ fn main() -> Result<()> {
                         tau.max(1),
                         steps,
                         schedule_from(&args),
-                        ExpandSpec { strategy: strategy_from(sname)?, ..base },
+                        ExpandSpec { strategy: strategy_from_name(sname)?, ..base },
                     )
                     .seed(seed)
                     .build()?;
@@ -554,7 +518,8 @@ fn main() -> Result<()> {
             // every `repro worker` that connects (DESIGN.md §9). `--workers
             // 0` (the default) serves remote workers only.
             const USAGE: &str = "serve <cfg0> <cfg1> [<cfg2> ...] --listen ADDR \
-                                 [--taus F,F,..] [--strategies a,b] [--workers N] [--store-dir D]";
+                                 [--taus F,F,..] [--strategies a,b] [--workers N] \
+                                 [--store-dir D [--resume]]";
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
             let rungs: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
@@ -573,6 +538,7 @@ fn main() -> Result<()> {
                 progress: args.has("progress").then(ProgressSink::stderr),
                 keep_states: false,
                 heartbeat_timeout: Duration::from_secs(args.get_u64("heartbeat-timeout", 20)),
+                resume: args.has("resume"),
             };
             let mut store = match args.get("store-dir") {
                 Some(dir) => {
@@ -603,30 +569,68 @@ fn main() -> Result<()> {
                 stats.workers_lost,
                 outcome.executed_flops,
             );
+            println!(
+                "fabric: {} resumed from journal; {} reconnect(s); snapshots: {} shipped \
+                 ({} bytes), {} cache-served",
+                stats.resumed_jobs,
+                stats.workers_reconnected,
+                stats.snapshots_shipped,
+                stats.snapshot_bytes_shipped,
+                stats.snapshots_cache_served,
+            );
             Ok(())
         }
         "worker" => {
             // Fabric worker: engines only — results land in the
             // coordinator's store, never here. The artifacts + corpus must
             // match the coordinator's (the handshake refuses anything else).
-            const USAGE: &str = "worker --connect ADDR [--workers N] [--max-jobs K]";
+            const USAGE: &str = "worker --connect ADDR [--workers N] [--max-jobs K] \
+                                 [--retry-max N] [--retry-base MS] [--fault SPEC]";
             let manifest = Manifest::load(&artifacts)?;
             let corpus = Corpus::generate(CorpusConfig::default());
             let connect = args
                 .get("connect")
                 .ok_or_else(|| anyhow::anyhow!("missing --connect ADDR — usage: {USAGE}"))?;
+            // `--fault` beats the env (explicit over ambient); either way
+            // an empty spec means no injection layer at all.
+            let fault = match args.get("fault") {
+                Some(text) => Some(FaultSpec::parse(text)?),
+                None => FaultSpec::from_env()?,
+            }
+            .filter(|f| !f.is_empty());
             let opts = WorkerOptions {
                 workers: args.get_usize("workers", default_workers()),
                 progress: args.has("progress").then(ProgressSink::stderr),
                 max_jobs: args.get("max-jobs").and_then(|s| s.parse().ok()),
+                retry_max: args.get_usize("retry-max", 0),
+                retry_base_ms: args.get_u64("retry-base", 250),
+                fault,
             };
             let report = run_worker(connect, &manifest, &corpus, &opts)?;
             println!(
-                "worker done: {} job(s) executed{}",
+                "worker done: {} job(s) executed, {} reconnect(s){}",
                 report.jobs_executed,
+                report.reconnects,
                 if report.defected { " (defected at --max-jobs)" } else { "" }
             );
             Ok(())
+        }
+        "chaos" => {
+            // Deterministic fault-injection drill (DESIGN.md §10): every
+            // fault kind the faultline can inject, each scenario an
+            // in-process fleet over loopback, each required to end in a
+            // bit-identical outcome or a loud error — never a hang.
+            const USAGE: &str = "chaos <cfg0> <cfg1> [<cfg2> ...] [--strategies a,b] \
+                                 [--steps N] [--timeout SECS]";
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let rungs: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+            if rungs.len() < 2 {
+                anyhow::bail!("a ladder needs at least two configs — usage: {USAGE}");
+            }
+            let plans = ladder_grid(&args, &rungs, steps, seed, schedule_from(&args), USAGE)?;
+            let timeout = Duration::from_secs(args.get_u64("timeout", 120));
+            run_chaos(&manifest, &corpus, &plans, timeout)
         }
         "store" => {
             const USAGE: &str = "store gc --store-dir D [--dry-run] [--keep N]";
@@ -786,11 +790,25 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--workers N]                   (--workers, default 0) plus every
         [--taus F,F] [--strategies a,b] `repro worker` that connects; CSVs are
         [--store-dir D]                 bit-identical to the serial ladder's;
-        [--heartbeat-timeout SECS]      --store-dir shares one artifact repo
+        [--heartbeat-timeout SECS]      --store-dir shares one artifact repo;
+        [--resume]                      --resume rebuilds scheduler state from
+                                        the store journal after a coordinator
+                                        crash and dispatches only unfinished
+                                        work (fully warm: zero dispatches)
   worker --connect HOST:PORT        fabric worker: N engine threads executing
         [--workers N] [--max-jobs K]    jobs for a `repro serve` coordinator;
+        [--retry-max N]                 --retry-max/--retry-base: redial a lost
+        [--retry-base MS]               coordinator with bounded exponential
+        [--fault SPEC]                  backoff + jitter, then re-handshake;
                                         --max-jobs K drops the connection after
-                                        K jobs (failure-injection drill)
+                                        K jobs; --fault (or REPRO_FAULT) arms
+                                        deterministic fault injection, e.g.
+                                        drop-after:4,torn-frame:9,stall:3
+  chaos <cfg0> <cfg1> [<cfg2> ..]   fault-injection drill: one in-process
+        [--strategies a,b]              fleet per fault kind over loopback;
+        [--steps N] [--timeout SECS]    every scenario must end bit-identical
+                                        to serial or error loudly — a hang
+                                        kills the process (exit 124)
   store gc --store-dir D            collect cache entries no referencing sweep
         [--dry-run] [--keep N]          still needs (liveness = the last N
                                         journaled ref sets; default 1)
@@ -844,7 +862,7 @@ mod tests {
 
     #[test]
     fn serve_ladder_worker_store_have_flag_vocabularies() {
-        for cmd in ["serve", "worker", "store", "ladder", "sweep"] {
+        for cmd in ["serve", "worker", "store", "ladder", "sweep", "chaos"] {
             assert!(spec_for(cmd).is_some(), "{cmd} lost its CommandSpec");
         }
         // The hardened parse rejects typos on the new commands too.
@@ -852,5 +870,16 @@ mod tests {
         let argv = "serve a b --lsten 1.2.3.4:5".split_whitespace().map(String::from);
         let err = Args::parse_for(argv, &spec).unwrap_err();
         assert!(err.contains("unknown flag --lsten"), "{err}");
+        // The resilience/fault knobs parse on their commands.
+        let spec = spec_for("worker").unwrap();
+        let argv = "worker --connect h:1 --retry-max 5 --retry-base 100 --fault drop-after:4"
+            .split_whitespace()
+            .map(String::from);
+        assert!(Args::parse_for(argv, &spec).is_ok());
+        let spec = spec_for("serve").unwrap();
+        let argv = "serve a b --listen h:1 --store-dir d --resume"
+            .split_whitespace()
+            .map(String::from);
+        assert!(Args::parse_for(argv, &spec).is_ok());
     }
 }

@@ -437,6 +437,13 @@ impl RunStore {
         self.trunks.contains_key(digest) && self.trunk_path(digest).exists()
     }
 
+    /// Journaled artifact manifest (length + content digest) of a committed
+    /// trunk snapshot. The fabric uses this to verify worker-advertised
+    /// cache entries without touching the snapshot file.
+    pub fn trunk_manifest(&self, digest: &str) -> Option<ArtifactManifest> {
+        self.trunks.get(digest).map(|(_, m)| m.clone())
+    }
+
     /// Persist a trunk fork snapshot (`DPTDRV01` via [`crate::checkpoint`]),
     /// then journal `trunk <digest> <ledger-total-bits> <len> <content>`.
     pub fn store_trunk(
@@ -528,9 +535,32 @@ impl RunStore {
         tags.extend(trunk_digests.into_iter().map(|d| format!("trunk:{d}")));
         tags.sort();
         tags.dedup();
+        if self.refs.last() == Some(&tags) {
+            // Re-running the same sweep (e.g. `serve --resume` restarts)
+            // appends nothing: the journal stays bounded and the GC
+            // keep-window still counts distinct sweeps.
+            return Ok(());
+        }
         self.append_journal(&format!("refs {}", tags.join(" ")))?;
         self.refs.push(tags);
         Ok(())
+    }
+
+    /// True when some journaled `refs` set covers every one of this sweep's
+    /// keys — i.e. the journal has seen this sweep before. `serve --resume`
+    /// uses this to refuse resuming a sweep the store knows nothing about
+    /// (a typo'd store dir would otherwise silently run from scratch).
+    pub fn refs_recorded<'a>(
+        &self,
+        run_digests: impl IntoIterator<Item = &'a str>,
+        trunk_digests: impl IntoIterator<Item = &'a str>,
+    ) -> bool {
+        let mut tags: Vec<String> =
+            run_digests.into_iter().map(|d| format!("run:{d}")).collect();
+        tags.extend(trunk_digests.into_iter().map(|d| format!("trunk:{d}")));
+        tags.sort();
+        tags.dedup();
+        self.refs.iter().any(|set| tags.iter().all(|t| set.contains(t)))
     }
 
     /// Ref-counting garbage collection by journal replay: every journaled

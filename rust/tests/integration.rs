@@ -854,6 +854,228 @@ fn fabric_ladder_grid_bit_identical_to_serial_even_after_worker_loss() {
 }
 
 #[test]
+fn sigkilled_coordinator_resumes_bit_identical_with_reconnecting_workers() {
+    // Acceptance (chaos-hardened fabric, DESIGN.md §9–10): a `repro serve`
+    // coordinator SIGKILLed mid-ladder-grid and restarted with `--resume`
+    // on the same address must rebuild its scheduler purely from the store
+    // journal, re-handshake the surviving `repro worker` subprocesses (one
+    // of which defects after a single job), dispatch only unfinished work,
+    // and assemble an outcome bit-identical to the serial sweep. A second
+    // fully-warm `--resume` must dispatch zero jobs and ship zero snapshot
+    // bytes.
+    use deep_progressive::coordinator::SweepOutcome;
+    use deep_progressive::exec::JobGraph;
+    use deep_progressive::fabric::{FabricOptions, FabricServer};
+    use deep_progressive::store::RunStore;
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let Some(m) = manifest() else { return };
+    // Must match the corpus the subprocesses build for themselves, or the
+    // handshake's context salt rightly refuses the fleet.
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    // The grid the `serve` CLI builds from these exact flags — via the
+    // same recipe::ladder_grid the CLI delegates to, so the restarted
+    // in-process coordinator resumes the identical plan set.
+    let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+    let rungs = ["gpt2.l0", "gpt2.l1", "gpt2.l3"];
+    let spec = recipe::LadderGridSpec {
+        rungs: &rungs,
+        steps: 160,
+        seed: 17,
+        sched,
+        base: ExpandSpec::default(),
+        rewarm: 0,
+        taus: Some(vec![0.25, 0.5]),
+        strategies: Some(vec!["random".into(), "zero".into()]),
+        eval_every: Some(20),
+    };
+    let plans = recipe::ladder_grid(&spec).unwrap();
+
+    // Serial reference (no store, no network).
+    let reference = {
+        let engine = Engine::cpu().unwrap();
+        let trainer = Trainer::new(&engine, &m, &corpus);
+        let mut sweep = Sweep::new(trainer);
+        for p in plans.clone() {
+            sweep.add(p);
+        }
+        sweep.run().unwrap()
+    };
+
+    let assert_identical = |a: &SweepOutcome, b: &SweepOutcome, what: &str| {
+        assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+        assert_eq!(
+            a.executed_flops.to_bits(),
+            b.executed_flops.to_bits(),
+            "{what}: executed_flops"
+        );
+        assert_eq!(a.shared_flops.to_bits(), b.shared_flops.to_bits(), "{what}: shared_flops");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.curve.name, y.curve.name, "{what}: result order");
+            assert_eq!(x.curve.points, y.curve.points, "{what}: curve ('{}')", x.curve.name);
+            assert_eq!(x.boundaries, y.boundaries, "{what}: boundaries");
+            assert_eq!(x.ledger.total.to_bits(), y.ledger.total.to_bits(), "{what}: ledger");
+            assert_eq!(x.ledger.tokens, y.ledger.tokens, "{what}: tokens");
+            assert_eq!(x.final_val_loss.to_bits(), y.final_val_loss.to_bits(), "{what}: loss");
+        }
+    };
+
+    let artifacts_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::env::temp_dir().join(format!("dpt_failover_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Phase 1: a real `repro serve` subprocess on an ephemeral port (so it
+    // can be SIGKILLed like a crashed host), with the grid flags above.
+    let mut serve = Command::new(env!("CARGO_BIN_EXE_repro"));
+    serve
+        .arg("serve")
+        .args(["--listen", "127.0.0.1:0", "--steps", "160", "--seed", "17"])
+        .args(["--taus", "0.25,0.5", "--strategies", "random,zero", "--eval-every", "20"])
+        .args(["--workers", "0"])
+        .arg("--artifacts")
+        .arg(&artifacts_root)
+        .arg("--store-dir")
+        .arg(&dir)
+        .arg("--out")
+        .arg(dir.join("csv-ignored"))
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    for r in &rungs {
+        serve.arg(r);
+    }
+    let mut serve = serve.spawn().expect("spawning repro serve");
+    let addr = {
+        let out = serve.stdout.take().expect("serve stdout piped");
+        let mut lines = std::io::BufReader::new(out).lines();
+        let mut addr = None;
+        for line in &mut lines {
+            let line = line.expect("reading serve stdout");
+            if let Some(rest) = line.strip_prefix("fabric coordinator listening on ") {
+                addr = Some(rest.trim().to_string());
+                break;
+            }
+        }
+        // Keep draining stdout so the coordinator can never block on a
+        // full pipe while we are busy elsewhere.
+        std::thread::spawn(move || for _ in lines {});
+        addr.expect("serve never announced its address")
+    };
+
+    let spawn_worker = |max_jobs: Option<usize>| -> Child {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+        cmd.arg("worker")
+            .arg("--artifacts")
+            .arg(&artifacts_root)
+            .args(["--connect", &addr, "--workers", "1"])
+            .args(["--retry-max", "20", "--retry-base", "250"])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null());
+        if let Some(k) = max_jobs {
+            cmd.arg("--max-jobs").arg(k.to_string());
+        }
+        cmd.spawn().expect("spawning a repro worker subprocess")
+    };
+    let mut defector = spawn_worker(Some(1));
+    let mut survivor = spawn_worker(None);
+
+    // Wait for the first trunk commit to hit the journal, then SIGKILL the
+    // coordinator mid-grid — the exact crash window `--resume` exists for.
+    let salt = RunStore::context_salt(&m, &corpus);
+    let journal = dir.join(format!("ctx-{salt}")).join("journal.log");
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        if std::fs::read_to_string(&journal).map(|t| t.contains("\ntrunk ")).unwrap_or(false) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no trunk commit appeared in {journal:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    serve.kill().expect("SIGKILLing the coordinator");
+    serve.wait().unwrap();
+
+    // Phase 2: restart the coordinator on the SAME address with --resume.
+    // The kernel may hold the port briefly (TIME_WAIT residue of the
+    // killed process's sockets), so the rebind retries; meanwhile the
+    // workers' backoff loops are redialing the very same address.
+    let rebind_deadline = Instant::now() + Duration::from_secs(60);
+    let server = loop {
+        match FabricServer::bind(addr.as_str()) {
+            Ok(s) => break s,
+            Err(e) => {
+                assert!(Instant::now() < rebind_deadline, "could not rebind {addr}: {e:#}");
+                std::thread::sleep(Duration::from_millis(500));
+            }
+        }
+    };
+    let graph = JobGraph::lower(plans.clone()).unwrap();
+    let opts = FabricOptions { resume: true, ..FabricOptions::default() };
+    let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+    let (outcome, stats) = server.run(&m, &corpus, &graph, &opts, Some(&mut store)).unwrap();
+    drop(store);
+    // The defector may still be mid-backoff when the sweep finishes and
+    // would then burn its whole retry budget against a closed port; its
+    // clean-exit contract is already pinned by the fabric test above.
+    defector.kill().ok();
+    defector.wait().ok();
+    assert!(survivor.wait().unwrap().success(), "survivor must exit cleanly");
+
+    assert_identical(&reference, &outcome, "resumed fabric grid");
+    assert!(stats.resumed_jobs >= 1, "the restart must replay journal commits: {stats:?}");
+    assert!(
+        stats.resumed_jobs + stats.dispatched_jobs >= graph.jobs().len(),
+        "every job is either resumed or dispatched: {stats:?}"
+    );
+    if stats.dispatched_jobs > 0 {
+        assert!(
+            stats.connections >= 1,
+            "remaining work must have been served to a redialing worker: {stats:?}"
+        );
+    }
+
+    // Phase 3: fully warm --resume — zero dispatches, zero snapshot bytes.
+    let server = FabricServer::bind("127.0.0.1:0").unwrap();
+    let mut store = RunStore::open_salted(&dir, &salt).unwrap();
+    let (warm, wstats) = server.run(&m, &corpus, &graph, &opts, Some(&mut store)).unwrap();
+    assert_identical(&reference, &warm, "fully warm resume");
+    assert_eq!(wstats.dispatched_jobs, 0, "warm resume must dispatch nothing: {wstats:?}");
+    assert_eq!(wstats.snapshots_shipped, 0, "warm resume must ship no snapshots: {wstats:?}");
+    assert_eq!(wstats.snapshot_bytes_shipped, 0, "warm resume must ship zero bytes: {wstats:?}");
+    assert_eq!(wstats.resumed_jobs, graph.jobs().len(), "all jobs from the journal: {wstats:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn chaos_drill_suite_passes_on_a_small_grid() {
+    // Acceptance (deterministic fault injection, DESIGN.md §10): every
+    // fault kind the faultline can inject — connection drop, torn frame,
+    // stall past the heartbeat timeout, duplicated Done, and losing every
+    // engine — exercised by `run_chaos` on a small shared-trunk grid.
+    // Survivable faults must end bit-identical to serial; the fatal one
+    // must error loudly; a hang kills the process.
+    use deep_progressive::fabric::run_chaos;
+
+    let Some(m) = manifest() else { return };
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let spec = recipe::LadderGridSpec {
+        rungs: &["gpt2.l0", "gpt2.l3"],
+        steps: 80,
+        seed: 17,
+        sched,
+        base: ExpandSpec::default(),
+        rewarm: 0,
+        taus: Some(vec![0.3]),
+        strategies: Some(vec!["random".into(), "zero".into(), "copying".into()]),
+        eval_every: Some(20),
+    };
+    let plans = recipe::ladder_grid(&spec).unwrap();
+    run_chaos(&m, &corpus, &plans, std::time::Duration::from_secs(240)).unwrap();
+}
+
+#[test]
 fn store_gc_then_resume_retrains_exactly_the_collected_work() {
     // Acceptance (`repro store gc`): after a narrower sweep re-records its
     // refs, GC collects the runs only the wider grid referenced; rerunning
