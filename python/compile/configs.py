@@ -161,10 +161,12 @@ def default_bundle() -> Tuple[ArtifactSpec, ...]:
     """
     specs = []
     # GPT2-micro depth family (sources and targets share dims => expansion valid).
+    # Every rung carries the per-layer diagnostics probe: `repro diagnose`
+    # compares grown vs from-scratch depth profiles at arbitrary rungs.
     for n in (0, 1, 2, 3, 6, 12):
         specs.append(ArtifactSpec(
             cfg_id=f"gpt2.l{n}", model=gpt2(n),
-            fns=("train", "eval"), probe=(n in (0, 1, 12))))
+            fns=("train", "eval"), probe=True))
     # Wider GPT2 for scaling/e2e (Fig 1 "larger model" analogue).
     for n in (0, 1, 8):
         specs.append(ArtifactSpec(cfg_id=f"gpt2w.l{n}", model=gpt2(n, d_model=128, n_head=8)))

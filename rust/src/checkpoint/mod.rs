@@ -4,10 +4,12 @@
 //! Two artifact kinds share the format primitives:
 //! - a plain **model checkpoint** (`DPTCKPT1`): params + optimizer state for
 //!   one config — the unit `expand-ckpt` operates on;
-//! - a **driver snapshot** (`DPTDRV01`): a model checkpoint plus every piece
+//! - a **driver snapshot** (`DPTDRV02`): a model checkpoint plus every piece
 //!   of loop state a [`crate::coordinator::RunDriver`] needs to resume
 //!   bit-exactly — step/stage position, data-stream counters, the FLOP
-//!   ledger, and the curve logged so far.
+//!   ledger, the curve logged so far, and (v02) the per-layer diagnostics
+//!   rows, so a tail forked from a trunk snapshot inherits the trunk
+//!   segment's layer stats exactly as it inherits its curve.
 //!
 //! Since the device-resident runtime (DESIGN.md §2), both artifact kinds are
 //! written from an explicitly *materialized* host [`ModelState`] — taking a
@@ -21,12 +23,13 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::diag::LayerStatsRow;
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
 use crate::runtime::{ConfigEntry, ModelState, Tensor};
 
 const MAGIC: &[u8; 8] = b"DPTCKPT1";
-const SNAP_MAGIC: &[u8; 8] = b"DPTDRV01";
+const SNAP_MAGIC: &[u8; 8] = b"DPTDRV02";
 
 /// Write a checkpoint-family file crash-safely: serialize into a `.tmp<pid>`
 /// sibling, flush + fsync, then atomically rename over the destination and
@@ -152,6 +155,9 @@ pub struct DriverSnapshot {
     pub ledger: FlopLedger,
     pub curve: Curve,
     pub boundaries: Vec<(usize, String)>,
+    /// Per-layer diagnostics rows logged so far (empty unless the plan has
+    /// diagnostics on — see [`crate::diag`]).
+    pub layer_stats: Vec<LayerStatsRow>,
     pub state: ModelState,
 }
 
@@ -162,7 +168,7 @@ pub fn save_snapshot(path: &Path, snap: &DriverSnapshot, entry: &ConfigEntry) ->
     write_atomic(path, |f| write_snapshot_to(f, snap, entry))
 }
 
-/// Serialize a driver snapshot in its `DPTDRV01` byte form to any writer.
+/// Serialize a driver snapshot in its `DPTDRV02` byte form to any writer.
 /// This *is* the file format of [`save_snapshot`]; the fabric wire protocol
 /// reuses it verbatim, so a snapshot shipped over TCP is byte-identical to
 /// one read back from disk.
@@ -184,6 +190,7 @@ pub fn write_snapshot_to(
     write_ledger(f, &snap.ledger)?;
     write_curve_points(f, &snap.curve.points)?;
     write_boundaries(f, &snap.boundaries)?;
+    write_layer_stats(f, &snap.layer_stats)?;
     write_state(f, &snap.state, entry)
 }
 
@@ -214,7 +221,7 @@ pub fn load_snapshot(path: &Path, entry: &ConfigEntry) -> Result<DriverSnapshot>
         .with_context(|| format!("reading snapshot {path:?} (truncated or corrupted?)"))
 }
 
-/// Decode a `DPTDRV01` driver snapshot from any reader (the inverse of
+/// Decode a `DPTDRV02` driver snapshot from any reader (the inverse of
 /// [`write_snapshot_to`]), validating the model section against `entry`.
 pub fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<DriverSnapshot> {
     let mut magic = [0u8; 8];
@@ -238,6 +245,7 @@ pub fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<Driv
     let mut curve = Curve::new(run_name.clone());
     curve.points = read_curve_points(f)?;
     let boundaries = read_boundaries(f)?;
+    let layer_stats = read_layer_stats(f)?;
     let state = read_state(f, entry)?;
     Ok(DriverSnapshot {
         run_name,
@@ -252,6 +260,7 @@ pub fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<Driv
         ledger,
         curve,
         boundaries,
+        layer_stats,
         state,
     })
 }
@@ -338,6 +347,40 @@ pub(crate) fn read_boundaries(f: &mut impl Read) -> Result<Vec<(usize, String)>>
         boundaries.push((step, read_str(f)?));
     }
     Ok(boundaries)
+}
+
+pub(crate) fn write_layer_stats(f: &mut impl Write, rows: &[LayerStatsRow]) -> Result<()> {
+    write_u64(f, rows.len() as u64)?;
+    for r in rows {
+        write_u64(f, r.step as u64)?;
+        write_u64(f, r.tokens)?;
+        write_u64(f, r.layer as u64)?;
+        write_str(f, &r.rung)?;
+        write_f32(f, r.grad_norm)?;
+        write_f32(f, r.act_rms)?;
+        write_f32(f, r.uw_ratio)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_layer_stats(f: &mut impl Read) -> Result<Vec<LayerStatsRow>> {
+    let n_rows = read_u64(f)? as usize;
+    if n_rows > 1 << 24 {
+        bail!("implausible layer-stats count {n_rows}");
+    }
+    let mut rows = Vec::with_capacity(n_rows.min(1 << 16));
+    for _ in 0..n_rows {
+        rows.push(LayerStatsRow {
+            step: read_u64(f)? as usize,
+            tokens: read_u64(f)?,
+            layer: read_u64(f)? as usize,
+            rung: read_str(f)?,
+            grad_norm: read_f32(f)?,
+            act_rms: read_f32(f)?,
+            uw_ratio: read_f32(f)?,
+        });
+    }
+    Ok(rows)
 }
 
 pub(crate) fn write_u64(f: &mut impl Write, v: u64) -> Result<()> {
@@ -554,6 +597,26 @@ mod tests {
             ledger: FlopLedger { total: 2e6, tokens: 1280, stages: vec![("t".into(), 20, 2e6)] },
             curve,
             boundaries: vec![(10, "t".into())],
+            layer_stats: vec![
+                LayerStatsRow {
+                    step: 10,
+                    tokens: 640,
+                    layer: 0,
+                    rung: "t".into(),
+                    grad_norm: 0.5,
+                    act_rms: 1.25,
+                    uw_ratio: 0.004,
+                },
+                LayerStatsRow {
+                    step: 20,
+                    tokens: 1280,
+                    layer: 0,
+                    rung: "t".into(),
+                    grad_norm: 0.25,
+                    act_rms: 1.5,
+                    uw_ratio: 0.002,
+                },
+            ],
             state,
         };
         let dir = tmp("snap");
@@ -568,6 +631,7 @@ mod tests {
         assert_eq!(loaded.curve.points.len(), 2);
         assert_eq!(loaded.curve.points[1], snap.curve.points[1]);
         assert_eq!(loaded.boundaries, snap.boundaries);
+        assert_eq!(loaded.layer_stats, snap.layer_stats, "layer-stats rows changed across save/load");
         assert_eq!(loaded.ledger.stages, snap.ledger.stages);
         assert_eq!(loaded.state.params[0].data, snap.state.params[0].data);
         assert_eq!(loaded.state.opt[1].data, snap.state.opt[1].data);
@@ -595,6 +659,7 @@ mod tests {
             ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("t".into(), 10, 1e6)] },
             curve,
             boundaries: Vec::new(),
+            layer_stats: Vec::new(),
             state: ModelState::init(entry, 1),
         }
     }
@@ -636,7 +701,7 @@ mod tests {
         assert!(format!("{err:#}").contains("not a DPT driver snapshot"), "{err:#}");
         // Pure garbage (valid magic, absurd lengths) must error, not allocate.
         let mut evil = Vec::new();
-        evil.extend_from_slice(b"DPTDRV01");
+        evil.extend_from_slice(b"DPTDRV02");
         evil.extend_from_slice(&u64::MAX.to_le_bytes()); // run_name "length"
         std::fs::write(&bad, &evil).unwrap();
         assert!(load_snapshot(&bad, &entry).is_err());

@@ -72,6 +72,12 @@ pub struct RunPlan {
     eval_every: usize,
     eval_batches: usize,
     seed: u64,
+    /// Depth diagnostics: when on, the driver binds the `probe` artifact
+    /// per stage and records per-layer stats at every eval point
+    /// ([`crate::diag`]). Probes reuse the eval batch, so the training
+    /// trajectory — and the curve — is byte-identical either way; only the
+    /// run's *outputs* differ, which is why the flag is part of the digest.
+    diag: bool,
 }
 
 impl RunPlan {
@@ -101,6 +107,11 @@ impl RunPlan {
 
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// Whether per-layer depth diagnostics are recorded (see [`crate::diag`]).
+    pub fn diag(&self) -> bool {
+        self.diag
     }
 
     /// First stage-boundary step, or the horizon if the plan is single-stage.
@@ -142,14 +153,19 @@ impl RunPlan {
     /// first boundary — the [`crate::coordinator::Sweep`] shares the stage-0
     /// segment across plans with equal prefix keys.
     pub fn prefix_key(&self) -> String {
+        // The diag tag is appended only when on, so every pre-diagnostics
+        // key (and the trunk digests derived from it) is unchanged. It must
+        // be part of the key: a diag-on tail forked from a diag-off trunk
+        // snapshot would be missing the trunk segment's layer-stats rows.
         format!(
-            "{}|{}|{}|{}|{}|{:?}",
+            "{}|{}|{}|{}|{}|{:?}{}",
             self.stages[0].cfg_id,
             self.total_steps,
             self.eval_every,
             self.eval_batches,
             self.seed,
             self.schedule,
+            if self.diag { "|diag" } else { "" },
         )
     }
 
@@ -171,8 +187,16 @@ impl RunPlan {
     pub fn canonical_desc(&self) -> String {
         use std::fmt::Write as _;
         let mut s = format!(
-            "planv2|total={}|eval_every={}|eval_batches={}|seed={}|sched={:?}",
-            self.total_steps, self.eval_every, self.eval_batches, self.seed, self.schedule
+            "planv2|total={}|eval_every={}|eval_batches={}|seed={}|sched={:?}{}",
+            self.total_steps,
+            self.eval_every,
+            self.eval_batches,
+            self.seed,
+            self.schedule,
+            // Appended only when on: pre-diagnostics digests are unchanged,
+            // but a diag run's cached entry (which carries layer stats) can
+            // never be confused with the plain run's.
+            if self.diag { "|diag=on" } else { "" },
         );
         for st in &self.stages {
             let _ = write!(
@@ -294,6 +318,7 @@ impl RunPlan {
                 }
             }
         }
+        write_u64(f, self.diag as u64)?;
         Ok(())
     }
 
@@ -336,7 +361,12 @@ impl RunPlan {
             };
             stages.push(PlanStage { cfg_id, from_step, transition, rewarm_steps });
         }
-        Ok(RunPlan { name, stages, total_steps, schedule, eval_every, eval_batches, seed })
+        let diag = match read_u64(f)? {
+            0 => false,
+            1 => true,
+            other => bail!("unknown diag tag {other} in plan frame"),
+        };
+        Ok(RunPlan { name, stages, total_steps, schedule, eval_every, eval_batches, seed, diag })
     }
 }
 
@@ -414,6 +444,7 @@ pub struct RunBuilder {
     eval_every: Option<usize>,
     eval_batches: usize,
     seed: u64,
+    diag: bool,
 }
 
 impl RunBuilder {
@@ -426,6 +457,7 @@ impl RunBuilder {
             eval_every: None,
             eval_batches: 4,
             seed: 17,
+            diag: false,
         }
     }
 
@@ -507,6 +539,12 @@ impl RunBuilder {
 
     pub fn seed(mut self, seed: u64) -> RunBuilder {
         self.seed = seed;
+        self
+    }
+
+    /// Record per-layer depth diagnostics at every eval point (default off).
+    pub fn diag(mut self, on: bool) -> RunBuilder {
+        self.diag = on;
         self
     }
 
@@ -625,6 +663,7 @@ impl RunBuilder {
             eval_every,
             eval_batches: self.eval_batches,
             seed: self.seed,
+            diag: self.diag,
         })
     }
 }
@@ -896,6 +935,12 @@ mod tests {
                 .build()
                 .unwrap(),
         );
+        plans.push(
+            RunBuilder::progressive("diag", "l0", "l3", 40, 200, scheds[2], specs[0])
+                .diag(true)
+                .build()
+                .unwrap(),
+        );
         for plan in &plans {
             let mut bytes = Vec::new();
             plan.write_to(&mut bytes).unwrap();
@@ -915,6 +960,28 @@ mod tests {
         let mut bytes = Vec::new();
         plans[0].write_to(&mut bytes).unwrap();
         assert!(RunPlan::read_from(&mut &bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn diag_flag_splits_digests_but_leaves_plain_plans_untouched() {
+        let plain = RunBuilder::fixed("r", "l0", 100, sched()).build().unwrap();
+        assert!(!plain.diag(), "diagnostics default off");
+        let diag = RunBuilder::fixed("r", "l0", 100, sched()).diag(true).build().unwrap();
+        assert!(diag.diag());
+        // A diag run's cached entry carries layer stats the plain run's
+        // doesn't: digests, prefix keys, and trunk digests must all split.
+        assert_ne!(plain.digest(), diag.digest());
+        assert_ne!(plain.prefix_key(), diag.prefix_key());
+        assert_ne!(plain.trunk_digest(), diag.trunk_digest());
+        // Plain plans are tag-free, so every pre-diagnostics digest and
+        // store key is unchanged by this feature.
+        assert!(!plain.canonical_desc().contains("diag"));
+        assert!(!plain.prefix_key().contains("diag"));
+        assert!(diag.canonical_desc().contains("|diag=on"));
+        // The flag survives the wire.
+        let mut bytes = Vec::new();
+        diag.write_to(&mut bytes).unwrap();
+        assert!(RunPlan::read_from(&mut &bytes[..]).unwrap().diag());
     }
 
     #[test]

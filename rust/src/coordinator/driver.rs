@@ -40,6 +40,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::{self, DriverSnapshot};
 use crate::data::{Batcher, ImageGen};
+use crate::diag::{self, LayerStatsRow};
 use crate::expansion::expand;
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
@@ -48,8 +49,8 @@ use crate::runtime::{ConfigEntry, DeviceState, ModelState, StageExec, Tensor};
 
 use super::builder::{RunPlan, Transition};
 use super::observer::{
-    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, Observer, PreBoundaryEvent,
-    RunSummary, Signal,
+    BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind, LayerStatsEvent, Observer,
+    PreBoundaryEvent, RunSummary, Signal,
 };
 use super::{RunResult, Trainer};
 
@@ -107,6 +108,13 @@ pub struct RunDriver<'a> {
     last_train_loss: f32,
     ledger: FlopLedger,
     log: CurveLogger,
+    /// Per-layer probe rows accumulated so far (diagnostics-enabled plans;
+    /// seeded from the snapshot on resume so forked tails inherit trunk
+    /// rows).
+    layer_stats: Vec<LayerStatsRow>,
+    /// Raw probe output of the most recent `eval_loss`, consumed by the
+    /// matching `emit_eval` (which knows the eval's kind and lr).
+    pending_probe: Option<(Vec<f32>, Vec<f32>)>,
     observers: Vec<Box<dyn Observer>>,
     finished: bool,
     stopped: bool,
@@ -142,6 +150,8 @@ impl<'a> RunDriver<'a> {
             last_train_loss: f32::NAN,
             ledger: FlopLedger::default(),
             log,
+            layer_stats: Vec::new(),
+            pending_probe: None,
             observers: Vec::new(),
             finished: false,
             stopped: false,
@@ -219,6 +229,8 @@ impl<'a> RunDriver<'a> {
             last_train_loss: snap.last_train_loss,
             ledger: snap.ledger,
             log,
+            layer_stats: snap.layer_stats,
+            pending_probe: None,
             observers: Vec::new(),
             finished: false,
             stopped: false,
@@ -303,6 +315,7 @@ impl<'a> RunDriver<'a> {
             ledger: self.ledger.clone(),
             curve: self.log.curve().clone(),
             boundaries: self.log.boundaries().to_vec(),
+            layer_stats: self.layer_stats.clone(),
             state: self.state()?,
         })
     }
@@ -375,7 +388,16 @@ impl<'a> RunDriver<'a> {
         if !self.finished {
             self.finish_run(true);
         }
-        self.log.into_result(self.ledger)
+        let layer_stats = std::mem::take(&mut self.layer_stats);
+        let mut res = self.log.into_result(self.ledger);
+        res.layer_stats = layer_stats;
+        res
+    }
+
+    /// Per-layer probe rows logged so far (diagnostics-enabled plans only;
+    /// empty otherwise).
+    pub fn layer_stats(&self) -> &[LayerStatsRow] {
+        &self.layer_stats
     }
 
     // ------------------------------------------------------------ internals
@@ -561,6 +583,24 @@ impl<'a> RunDriver<'a> {
         for obs in self.observers.iter_mut() {
             obs.on_eval(&ev);
         }
+        // Probe rows ride the eval they were computed on: same step, same
+        // kind, and the lr the schedule prescribed there (the uw-ratio
+        // input).
+        if let Some((grads, act)) = self.pending_probe.take() {
+            let rows =
+                diag::rows_from_probe(self.entry, self.step, self.ledger.tokens, lr, &grads, &act);
+            let ls = LayerStatsEvent {
+                run: self.plan.name(),
+                cfg_id: &self.entry.cfg_id,
+                step: self.step,
+                kind,
+                rows: &rows,
+            };
+            for obs in self.observers.iter_mut() {
+                obs.on_layer_stats(&ls);
+            }
+            self.layer_stats.extend(rows);
+        }
     }
 
     fn finish_run(&mut self, early: bool) {
@@ -595,9 +635,15 @@ impl<'a> RunDriver<'a> {
     }
 
     /// Bind the stage's executables once; rebound after each boundary.
+    /// Diagnostics-enabled plans also bind the per-layer probe.
     fn ensure_exec(&mut self) -> Result<()> {
         if self.exec.is_none() {
-            self.exec = Some(self.trainer.engine.bind_stage(self.entry, &self.trainer.manifest.root)?);
+            let root = &self.trainer.manifest.root;
+            self.exec = Some(if self.plan.diag() {
+                self.trainer.engine.bind_stage_diag(self.entry, root)?
+            } else {
+                self.trainer.engine.bind_stage(self.entry, root)?
+            });
         }
         Ok(())
     }
@@ -679,6 +725,10 @@ impl<'a> RunDriver<'a> {
         self.ensure_exec()?;
         let batches = self.plan.eval_batches();
         let mut total = 0.0f64;
+        // Diagnostics reuse the *last* eval batch's literals for the probe
+        // dispatch, so the validation stream advances identically with
+        // diagnostics on or off (curves stay byte-equal either way).
+        let mut last_batch = None;
         for _ in 0..batches {
             let (data, ys) = self.stage_batches(1, false, true)?;
             let exec = self.exec.as_ref().ok_or_else(|| {
@@ -688,6 +738,23 @@ impl<'a> RunDriver<'a> {
                 bail!("internal: model state not device-resident for '{}'", self.plan.name());
             };
             total += self.trainer.engine.eval_step_dev(exec, self.entry, dev, &data, &ys)? as f64;
+            last_batch = Some((data, ys));
+        }
+        self.pending_probe = None;
+        if self.plan.diag() {
+            if let Some((data, ys)) = last_batch {
+                let exec = self.exec.as_ref().ok_or_else(|| {
+                    anyhow!("internal: stage executables not bound for '{}'", self.plan.name())
+                })?;
+                if exec.has_probe() {
+                    let StateSlot::Device(dev) = &self.state else {
+                        bail!("internal: model state not device-resident for '{}'", self.plan.name());
+                    };
+                    let (_, grads, act) =
+                        self.trainer.engine.probe_dev(exec, self.entry, dev, &data, &ys)?;
+                    self.pending_probe = Some((grads, act));
+                }
+            }
         }
         Ok((total / batches as f64) as f32)
     }

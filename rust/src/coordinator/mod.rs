@@ -33,26 +33,29 @@ pub use builder::{LadderRound, PlanStage, RunBuilder, RunPlan, Transition};
 pub use driver::RunDriver;
 pub use observer::{
     BoundaryCheckpointer, BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind,
-    LossSpikeDetector, Observer, PeriodicCheckpointer, PreBoundaryEvent, ProgressPrinter,
-    ProgressSink, RunSummary, Signal,
+    LayerStatsEvent, LossSpikeDetector, Observer, PeriodicCheckpointer, PreBoundaryEvent,
+    ProgressPrinter, ProgressSink, RunSummary, Signal,
 };
 pub use sweep::{Sweep, SweepOutcome};
 
 use anyhow::Result;
 
 use crate::data::Corpus;
+use crate::diag::LayerStatsRow;
 use crate::flops::{flops_per_step, FlopLedger};
 use crate::metrics::Curve;
 use crate::runtime::{Engine, Manifest};
 
-/// Result of a run: curve (one point per eval), ledger, and stage boundaries
-/// actually taken.
+/// Result of a run: curve (one point per eval), ledger, stage boundaries
+/// actually taken, and — when the plan enables diagnostics — per-layer probe
+/// stats (one [`LayerStatsRow`] per layer per eval).
 #[derive(Debug)]
 pub struct RunResult {
     pub curve: Curve,
     pub ledger: FlopLedger,
     pub boundaries: Vec<(usize, String)>,
     pub final_val_loss: f32,
+    pub layer_stats: Vec<LayerStatsRow>,
 }
 
 /// Shared execution context: the engine, the artifact manifest, and the

@@ -11,7 +11,9 @@ use std::io::Write;
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use crate::diag::LayerStatsRow;
 use crate::flops::FlopLedger;
 use crate::metrics::{Curve, CurvePoint};
 
@@ -78,6 +80,19 @@ pub struct ChunkEvent<'a> {
     pub tokens: u64,
 }
 
+/// Per-layer probe stats for one eval point, fired immediately after the
+/// matching [`Observer::on_eval`] on diagnostics-enabled plans only
+/// ([`crate::coordinator::RunBuilder::diag`]). `rows` holds one
+/// [`LayerStatsRow`] per layer of the active stage, all at `step`.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerStatsEvent<'a> {
+    pub run: &'a str,
+    pub cfg_id: &'a str,
+    pub step: usize,
+    pub kind: EvalKind,
+    pub rows: &'a [LayerStatsRow],
+}
+
 /// Final state of a run (also fired on early stop, with `early_stopped`).
 #[derive(Debug, Clone, Copy)]
 pub struct RunSummary<'a> {
@@ -104,6 +119,9 @@ pub enum Signal {
 /// override only what they need.
 pub trait Observer {
     fn on_eval(&mut self, _ev: &EvalEvent<'_>) {}
+    /// Fired right after `on_eval` with the per-layer probe rows computed on
+    /// the same eval batch — only on diagnostics-enabled plans.
+    fn on_layer_stats(&mut self, _ev: &LayerStatsEvent<'_>) {}
     /// Fired before each stage transition executes; may steer the driver
     /// (snapshot the outgoing stage, or request a stop after the boundary).
     fn on_pre_boundary(&mut self, _ev: &PreBoundaryEvent<'_>) -> Signal {
@@ -122,6 +140,10 @@ pub trait Observer {
 impl<O: Observer> Observer for Rc<RefCell<O>> {
     fn on_eval(&mut self, ev: &EvalEvent<'_>) {
         self.borrow_mut().on_eval(ev);
+    }
+
+    fn on_layer_stats(&mut self, ev: &LayerStatsEvent<'_>) {
+        self.borrow_mut().on_layer_stats(ev);
     }
 
     fn on_pre_boundary(&mut self, ev: &PreBoundaryEvent<'_>) -> Signal {
@@ -173,7 +195,13 @@ impl CurveLogger {
 
     pub fn into_result(self, ledger: FlopLedger) -> RunResult {
         let final_val_loss = self.curve.final_val_loss().unwrap_or(f32::NAN);
-        RunResult { curve: self.curve, ledger, boundaries: self.boundaries, final_val_loss }
+        RunResult {
+            curve: self.curve,
+            ledger,
+            boundaries: self.boundaries,
+            final_val_loss,
+            layer_stats: Vec::new(),
+        }
     }
 }
 
@@ -189,9 +217,20 @@ impl Observer for CurveLogger {
 
 /// Flags val-loss jumps across stage boundaries above `threshold` (the §3.2
 /// expansion spike, quantified per boundary).
+///
+/// Two modes: [`LossSpikeDetector::new`] uses a fixed absolute threshold;
+/// [`LossSpikeDetector::with_sigma`] adapts it to the run — the per-boundary
+/// threshold is `sigma` standard deviations of the last `window` cadence-eval
+/// validation losses (the CLI's `--spike-sigma`/`--spike-window`).
 #[derive(Debug)]
 pub struct LossSpikeDetector {
     pub threshold: f32,
+    /// Rolling (sigma, window) mode. Until two cadence evals have been seen
+    /// the deviation is undefined: no spike is flagged, though the jump is
+    /// still recorded in `jumps`.
+    sigma: Option<(f32, usize)>,
+    /// Last `window` cadence-eval val losses (rolling-mode sample).
+    recent: Vec<f32>,
     /// (step, incoming cfg, post − pre val loss) for every boundary whose
     /// jump exceeded the threshold.
     pub spikes: Vec<(usize, String, f32)>,
@@ -201,19 +240,53 @@ pub struct LossSpikeDetector {
 
 impl LossSpikeDetector {
     pub fn new(threshold: f32) -> LossSpikeDetector {
-        LossSpikeDetector { threshold, spikes: Vec::new(), jumps: Vec::new() }
+        LossSpikeDetector { threshold, sigma: None, recent: Vec::new(), spikes: Vec::new(), jumps: Vec::new() }
+    }
+
+    /// Rolling mode: flag boundary jumps above `sigma` standard deviations
+    /// (sample stddev) of the last `window` cadence-eval validation losses.
+    /// `window` is clamped to at least 2 (a single sample has no deviation).
+    pub fn with_sigma(sigma: f32, window: usize) -> LossSpikeDetector {
+        let mut det = LossSpikeDetector::new(f32::INFINITY);
+        det.sigma = Some((sigma, window.max(2)));
+        det
     }
 
     pub fn max_jump(&self) -> Option<f32> {
         self.jumps.iter().map(|&(_, j)| j).fold(None, |m, j| Some(m.map_or(j, |x: f32| x.max(j))))
     }
+
+    /// Threshold in force for the next boundary (rolling modes adapt it).
+    pub fn current_threshold(&self) -> f32 {
+        match self.sigma {
+            Some((sigma, _)) if self.recent.len() >= 2 => {
+                let n = self.recent.len() as f64;
+                let mean = self.recent.iter().map(|&v| v as f64).sum::<f64>() / n;
+                let var = self.recent.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+                    / (n - 1.0);
+                (sigma as f64 * var.sqrt()) as f32
+            }
+            _ => self.threshold,
+        }
+    }
 }
 
 impl Observer for LossSpikeDetector {
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) {
+        if let Some((_, window)) = self.sigma {
+            if ev.kind == EvalKind::Cadence {
+                self.recent.push(ev.point.val_loss);
+                if self.recent.len() > window {
+                    self.recent.remove(0);
+                }
+            }
+        }
+    }
+
     fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
         let jump = ev.post_val_loss - ev.pre_val_loss;
         self.jumps.push((ev.step, jump));
-        if jump > self.threshold {
+        if jump > self.current_threshold() {
             self.spikes.push((ev.step, ev.to_cfg.to_string(), jump));
         }
     }
@@ -283,9 +356,14 @@ impl Observer for BoundaryCheckpointer {
 /// [`ProgressSink::line`] writes a **whole line** (plus newline, plus flush)
 /// under the lock, so concurrent printers can only interleave at line
 /// granularity, never inside one.
+///
+/// Every line is stamped with a fixed-width monotonic elapsed-time prefix
+/// (`"{:>9.3}s  "`, seconds since the sink was created). Clones share the
+/// same epoch, so interleaved multi-worker output is orderable post-hoc.
 #[derive(Clone)]
 pub struct ProgressSink {
     out: Arc<Mutex<Box<dyn Write + Send>>>,
+    start: Instant,
 }
 
 impl ProgressSink {
@@ -295,7 +373,7 @@ impl ProgressSink {
     }
 
     pub fn from_writer(w: impl Write + Send + 'static) -> ProgressSink {
-        ProgressSink { out: Arc::new(Mutex::new(Box::new(w))) }
+        ProgressSink { out: Arc::new(Mutex::new(Box::new(w))), start: Instant::now() }
     }
 
     /// In-memory sink plus a handle to read back what was written (tests).
@@ -314,10 +392,14 @@ impl ProgressSink {
         (ProgressSink::from_writer(Shared(buf.clone())), buf)
     }
 
-    /// Write one complete line atomically (append '\n', flush). Output
-    /// errors are swallowed: progress printing must never fail a run.
+    /// Write one complete line atomically (elapsed-time prefix, append
+    /// '\n', flush). The prefix is taken under the lock, so stamps are
+    /// monotonic in write order. Output errors are swallowed: progress
+    /// printing must never fail a run.
     pub fn line(&self, line: &str) {
         let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        let stamp = format!("{:>9.3}s  ", self.start.elapsed().as_secs_f64());
+        let _ = out.write_all(stamp.as_bytes());
         let _ = out.write_all(line.as_bytes());
         let _ = out.write_all(b"\n");
         let _ = out.flush();
@@ -456,6 +538,50 @@ mod tests {
     }
 
     #[test]
+    fn spike_detector_sigma_mode_adapts_threshold() {
+        let mut det = LossSpikeDetector::with_sigma(2.0, 4);
+        let eval = |step: usize, val: f32| EvalEvent {
+            run: "r",
+            cfg_id: "a",
+            stage_idx: 0,
+            kind: EvalKind::Cadence,
+            point: point(step, val),
+        };
+        let mk = |pre: f32, post: f32| BoundaryEvent {
+            run: "r",
+            step: 5,
+            from_cfg: "a",
+            to_cfg: "b",
+            pre_val_loss: pre,
+            post_val_loss: post,
+        };
+        // Before two cadence evals the deviation is undefined: jump
+        // recorded, no spike flagged.
+        det.on_boundary(&mk(3.0, 9.0));
+        assert_eq!(det.jumps.len(), 1);
+        assert!(det.spikes.is_empty());
+        // Four cadence evals with stddev ~0.129: threshold 2σ ≈ 0.258.
+        for (i, v) in [3.0f32, 2.9, 2.8, 2.7].iter().enumerate() {
+            det.on_eval(&eval(10 * (i + 1), *v));
+        }
+        let thr = det.current_threshold();
+        assert!((thr - 0.2582).abs() < 1e-3, "threshold {thr}");
+        det.on_boundary(&mk(2.7, 2.8)); // jump 0.1 < 2σ: quiet
+        det.on_boundary(&mk(2.7, 3.2)); // jump 0.5 > 2σ: spike
+        assert_eq!(det.spikes.len(), 1);
+        assert!((det.spikes[0].2 - 0.5).abs() < 1e-6);
+        // Pre/post-boundary evals must not pollute the rolling sample.
+        let before = det.current_threshold();
+        det.on_eval(&EvalEvent { kind: EvalKind::PreBoundary, ..eval(50, 99.0) });
+        assert_eq!(det.current_threshold(), before);
+        // The window is bounded: pushing more evals drops the oldest.
+        for i in 0..10 {
+            det.on_eval(&eval(100 + i, 2.7));
+        }
+        assert!(det.current_threshold() < 1e-6, "constant window has zero deviation");
+    }
+
+    #[test]
     fn checkpointer_fires_once_per_bucket() {
         let mut ck = PeriodicCheckpointer::new(50, "/tmp/ck");
         let ev = |step: usize| ChunkEvent {
@@ -510,8 +636,30 @@ mod tests {
             point: point(10, 3.0),
         });
         let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
-        assert!(text.starts_with("w3  [r] step"), "{text}");
+        let (stamp, rest) = text.split_once("s  ").expect("line carries an elapsed-time stamp");
+        assert!(stamp.trim().parse::<f64>().is_ok(), "bad stamp in: {text}");
+        assert!(rest.starts_with("w3  [r] step"), "{text}");
         assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn progress_sink_stamps_are_monotonic() {
+        let (sink, buf) = ProgressSink::capture();
+        for i in 0..5 {
+            sink.line(&format!("line {i}"));
+        }
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let stamps: Vec<f64> = text
+            .lines()
+            .map(|l| l.split_once("s  ").unwrap().0.trim().parse::<f64>().unwrap())
+            .collect();
+        assert_eq!(stamps.len(), 5);
+        for w in stamps.windows(2) {
+            assert!(w[1] >= w[0], "elapsed stamps must be monotonic: {stamps:?}");
+        }
+        for s in &stamps {
+            assert!(*s >= 0.0);
+        }
     }
 
     #[test]

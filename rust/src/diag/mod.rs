@@ -1,0 +1,613 @@
+//! Depth-diagnostics observability: per-layer probe statistics, the
+//! structured JSONL trace sink, and the curse-of-depth verdict behind
+//! `repro diagnose` (DESIGN.md §11).
+//!
+//! The paper's aggregate loss curves certify *that* progressive training
+//! matches a from-scratch model, but say nothing about *how* grown layers
+//! learn. This module turns the compiled `probe` artifact — already part of
+//! the execution contract, `probe: [*params, x, y] -> tuple(loss,
+//! grad_norms, act_rms)` — into per-layer telemetry:
+//!
+//! - [`LayerStatsRow`]: one (eval point × layer) record of gradient norm,
+//!   activation RMS, and an update-to-weight proxy ratio. Rows are produced
+//!   by [`rows_from_probe`] from the probe's output tuple alone — no host
+//!   materialization of model state — and ride the driver's snapshot and the
+//!   store's run entries, so they obey the same bit-identity contract as
+//!   curves (serial ≡ pool ≡ fabric, warm store replays them for free).
+//! - [`DepthDiagnostics`]: an observer collecting rows live, marking the
+//!   before/after snapshots at each expansion boundary (the zero/one-layer
+//!   init signature), and optionally mirroring every event into a trace.
+//! - [`TraceSink`]: a line-per-event JSONL writer for structured span
+//!   events (`{"ts_us":…,"kind":…,…}` — schema in [`validate_trace_line`]).
+//!   Trace timing is wall-clock and therefore *not* part of the determinism
+//!   contract; only its schema is.
+//! - [`curse_verdict`]: the late-vs-early-layer gradient decay comparison
+//!   (arXiv:2512.08819's question) between a grown ladder and a FLOP-matched
+//!   from-scratch baseline.
+//!
+//! Determinism: everything derived from probe outputs uses fixed-order f64
+//! accumulation, so identical probe tuples yield identical rows, CSV bytes,
+//! and verdicts on every execution path.
+
+use std::fmt;
+use std::fmt::Write as _;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::observer::{
+    BoundaryEvent, EvalKind, LayerStatsEvent, Observer, RunSummary,
+};
+use crate::metrics::Table;
+use crate::runtime::ConfigEntry;
+use crate::util::json::Json;
+
+/// Guard against degenerate denominators in ratio math; small enough that
+/// any real gradient/activation signal dominates it.
+const EPS: f32 = 1e-12;
+
+/// One per-layer record at one eval point. `layer` indexes the residual
+/// stream: 0 is the embedding output, `i ≥ 1` is transformer layer `i − 1`
+/// (see [`rows_from_probe`]). `rung` is the config id the model had when
+/// the probe ran (so ladder rows are attributable to the depth rung that
+/// produced them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerStatsRow {
+    pub step: usize,
+    pub tokens: u64,
+    pub layer: usize,
+    pub rung: String,
+    pub grad_norm: f32,
+    pub act_rms: f32,
+    /// Update-to-weight proxy: `lr · grad_norm / act_rms`. The probe tuple
+    /// carries no weight norms (and materializing them would break the
+    /// no-host-touch contract), so the activation RMS stands in as the
+    /// layer's scale. Comparable across runs probed at the same schedule.
+    pub uw_ratio: f32,
+}
+
+/// Convert one probe dispatch's output into per-layer rows.
+///
+/// The AOT probe (`aot.make_probe`) emits `grad_norms` per parameter group
+/// — `[embed, layer.0 … layer.N−1, tail]` — and `act_rms` per residual-
+/// stream stage — `[embed output, layer.0 output … layer.N−1 output]` —
+/// so the two vectors align positionally and the trailing `tail` group
+/// (final norm + head) simply has no activation row. The row count is
+/// taken from `act_rms`: row 0 is the embedding stream, row `i ≥ 1` is
+/// transformer layer `i − 1`. A per-param gradient vector (length equal to
+/// the manifest's param count, the host-probe form) is instead folded onto
+/// rows through [`ParamSpec::layer_index`] — `sqrt(Σ‖g‖²)` per layer,
+/// f64-accumulated in manifest order so the fold is deterministic.
+///
+/// [`ParamSpec::layer_index`]: crate::runtime::ParamSpec::layer_index
+pub fn rows_from_probe(
+    entry: &ConfigEntry,
+    step: usize,
+    tokens: u64,
+    lr: f32,
+    grad_norms: &[f32],
+    act_rms: &[f32],
+) -> Vec<LayerStatsRow> {
+    let layers = act_rms.len();
+    let per_layer: Vec<f32> = if grad_norms.len() == entry.params.len() {
+        let mut acc = vec![0f64; layers];
+        for (spec, &g) in entry.params.iter().zip(grad_norms) {
+            if let Some(i) = spec.layer_index() {
+                if i < layers {
+                    acc[i] += g as f64 * g as f64;
+                }
+            }
+        }
+        acc.into_iter().map(|s| s.sqrt() as f32).collect()
+    } else {
+        (0..layers).map(|i| grad_norms.get(i).copied().unwrap_or(f32::NAN)).collect()
+    };
+    act_rms
+        .iter()
+        .enumerate()
+        .map(|(layer, &rms)| LayerStatsRow {
+            step,
+            tokens,
+            layer,
+            rung: entry.cfg_id.clone(),
+            grad_norm: per_layer[layer],
+            act_rms: rms,
+            uw_ratio: lr * per_layer[layer] / rms.max(EPS),
+        })
+        .collect()
+}
+
+/// CSV serialization with the same **round-trip-exact** float formatting as
+/// [`crate::metrics::Curve::to_csv`]: `{}` (shortest representation that
+/// parses back to identical bits), so the CI diagnose smoke's byte-diff is
+/// a real bit-identity check.
+pub fn layer_stats_csv(rows: &[LayerStatsRow]) -> String {
+    let mut s = String::from("step,tokens,layer,rung,grad_norm,act_rms,uw_ratio\n");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{}",
+            r.step, r.tokens, r.layer, r.rung, r.grad_norm, r.act_rms, r.uw_ratio
+        );
+    }
+    s
+}
+
+/// Write `<name>.layers.csv` under `dir`.
+pub fn write_layer_stats_csv(dir: &Path, name: &str, rows: &[LayerStatsRow]) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.layers.csv")), layer_stats_csv(rows))
+}
+
+/// Rows belonging to the last probed step (the end-of-run depth profile).
+pub fn final_step_rows(rows: &[LayerStatsRow]) -> Vec<&LayerStatsRow> {
+    let Some(last) = rows.iter().map(|r| r.step).max() else {
+        return Vec::new();
+    };
+    rows.iter().filter(|r| r.step == last).collect()
+}
+
+/// Per-layer table of the final probed step (the `repro diagnose` printout).
+pub fn depth_profile(rows: &[LayerStatsRow]) -> Table {
+    let mut t = Table::new(&["layer", "rung", "grad_norm", "act_rms", "uw_ratio"]);
+    let mut fin = final_step_rows(rows);
+    fin.sort_by_key(|r| r.layer);
+    for r in fin {
+        t.row(vec![
+            r.layer.to_string(),
+            r.rung.clone(),
+            format!("{}", r.grad_norm),
+            format!("{}", r.act_rms),
+            format!("{}", r.uw_ratio),
+        ]);
+    }
+    t
+}
+
+/// Late-over-early gradient-norm ratio at the final probed step: mean grad
+/// norm of the last ⌈n/3⌉ layers over the first ⌈n/3⌉. 1.0 means late
+/// layers see the same gradient signal as early ones (no curse of depth);
+/// values near 0 mean late layers are starved. `None` without rows.
+pub fn grad_decay(rows: &[LayerStatsRow]) -> Option<f32> {
+    let mut fin = final_step_rows(rows);
+    if fin.is_empty() {
+        return None;
+    }
+    fin.sort_by_key(|r| r.layer);
+    let n = fin.len();
+    let k = n.div_ceil(3);
+    let mean = |slice: &[&LayerStatsRow]| {
+        slice.iter().map(|r| r.grad_norm as f64).sum::<f64>() / slice.len() as f64
+    };
+    let early = mean(&fin[..k]);
+    let late = mean(&fin[n - k..]);
+    Some((late / early.max(EPS as f64)) as f32)
+}
+
+/// A grown run "escapes" when its late-layer gradient signal is at least
+/// this fraction of the from-scratch baseline's.
+pub const ESCAPE_TOLERANCE: f32 = 0.9;
+
+/// Outcome of the grown-vs-scratch curse-of-depth comparison.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DepthVerdict {
+    /// Late/early grad-norm ratio of the grown ladder's final profile.
+    pub grown_decay: f32,
+    /// Same ratio for the FLOP-matched from-scratch baseline.
+    pub scratch_decay: f32,
+    /// `grown_decay / scratch_decay`.
+    pub ratio: f32,
+    /// `ratio >= ESCAPE_TOLERANCE`.
+    pub escapes: bool,
+}
+
+impl fmt::Display for DepthVerdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "curse-of-depth: grown late/early grad ratio {} vs scratch {} (ratio {}) -> {}",
+            self.grown_decay,
+            self.scratch_decay,
+            self.ratio,
+            if self.escapes { "ESCAPES" } else { "SUFFERS" }
+        )
+    }
+}
+
+/// Compare a grown ladder's layer stats against a from-scratch baseline's.
+/// Errors when either side carries no rows (probe artifact missing or
+/// diagnostics were off), because a silent default verdict would be a lie.
+pub fn curse_verdict(grown: &[LayerStatsRow], scratch: &[LayerStatsRow]) -> Result<DepthVerdict> {
+    let g = grad_decay(grown)
+        .ok_or_else(|| anyhow!("grown run produced no layer stats (probe artifact missing or diagnostics disabled)"))?;
+    let s = grad_decay(scratch)
+        .ok_or_else(|| anyhow!("from-scratch run produced no layer stats (probe artifact missing or diagnostics disabled)"))?;
+    let ratio = g / s.max(EPS);
+    Ok(DepthVerdict { grown_decay: g, scratch_decay: s, ratio, escapes: ratio >= ESCAPE_TOLERANCE })
+}
+
+// ------------------------------------------------------------------ tracing
+
+/// Structured JSONL trace sink. Every event is one line:
+/// `{"kind":"...","ts_us":<monotonic micros since sink creation>, ...fields}`.
+/// Writes are line-atomic (one lock per event) so interleaved writers from
+/// multiple threads never shear a record; write errors are swallowed —
+/// tracing must never kill a run.
+#[derive(Clone)]
+pub struct TraceSink {
+    out: Arc<Mutex<Box<dyn Write + Send>>>,
+    start: Instant,
+}
+
+// `Box<dyn Write>` has no Debug, so derive is unavailable.
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TraceSink").finish_non_exhaustive()
+    }
+}
+
+impl TraceSink {
+    /// Trace into (truncating) a file at `path`.
+    pub fn to_file(path: &Path) -> Result<TraceSink> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {path:?}"))?;
+        Ok(TraceSink::from_writer(Box::new(f)))
+    }
+
+    pub fn from_writer(w: Box<dyn Write + Send>) -> TraceSink {
+        TraceSink { out: Arc::new(Mutex::new(w)), start: Instant::now() }
+    }
+
+    /// In-memory sink for tests: returns the sink and the shared buffer.
+    pub fn capture() -> (TraceSink, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        struct Shared(Arc<Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        (TraceSink::from_writer(Box::new(Shared(buf.clone()))), buf)
+    }
+
+    /// Emit one event. `fields` are appended to the record verbatim; the
+    /// reserved keys `kind` and `ts_us` are set by the sink.
+    pub fn emit(&self, kind: &str, fields: &[(&str, Json)]) {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str(kind.to_string()));
+        obj.insert("ts_us".to_string(), Json::Num(self.start.elapsed().as_micros() as f64));
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(obj).to_string();
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.write_all(line.as_bytes());
+            let _ = out.write_all(b"\n");
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Validate one trace line against the schema: a JSON object with a string
+/// `kind` and a non-negative numeric `ts_us`. The CI diagnose smoke runs
+/// every emitted line through this.
+pub fn validate_trace_line(line: &str) -> Result<()> {
+    let j = Json::parse(line).map_err(|e| anyhow!("trace line is not JSON: {e}"))?;
+    let kind = j
+        .req("kind")
+        .context("trace line")?
+        .as_str()
+        .ok_or_else(|| anyhow!("trace 'kind' is not a string"))?;
+    if kind.is_empty() {
+        anyhow::bail!("trace 'kind' is empty");
+    }
+    let ts = j
+        .req("ts_us")
+        .context("trace line")?
+        .as_f64()
+        .ok_or_else(|| anyhow!("trace 'ts_us' is not a number"))?;
+    if ts < 0.0 {
+        anyhow::bail!("trace 'ts_us' is negative");
+    }
+    Ok(())
+}
+
+/// p-th percentile (nearest-rank) of latency samples; 0 on empty input.
+/// Used for the fabric's heartbeat round-trip summary (`--stats-json`).
+pub fn percentile_us(samples: &[u64], pct: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+// ----------------------------------------------------------- the observer
+
+/// One before/after layer-stats snapshot taken at an expansion boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundaryProfile {
+    pub step: usize,
+    /// `EvalKind::PreBoundary` (outgoing depth) or `PostBoundary` (incoming
+    /// depth, freshly injected layers still at their zero/one-layer init).
+    pub kind: EvalKind,
+    pub rows: Vec<LayerStatsRow>,
+}
+
+/// Observer assembling the depth-diagnostics record of one run: every
+/// per-layer row in eval order, the boundary before/after profiles, and —
+/// when a [`TraceSink`] is attached — a span event per observer hook.
+#[derive(Default)]
+pub struct DepthDiagnostics {
+    rows: Vec<LayerStatsRow>,
+    profiles: Vec<BoundaryProfile>,
+    trace: Option<TraceSink>,
+}
+
+impl DepthDiagnostics {
+    pub fn new() -> DepthDiagnostics {
+        DepthDiagnostics::default()
+    }
+
+    pub fn with_trace(trace: TraceSink) -> DepthDiagnostics {
+        DepthDiagnostics { trace: Some(trace), ..DepthDiagnostics::default() }
+    }
+
+    /// All rows observed so far, in eval order.
+    pub fn rows(&self) -> &[LayerStatsRow] {
+        &self.rows
+    }
+
+    /// Boundary before/after snapshots, in boundary order.
+    pub fn profiles(&self) -> &[BoundaryProfile] {
+        &self.profiles
+    }
+}
+
+impl Observer for DepthDiagnostics {
+    fn on_layer_stats(&mut self, ev: &LayerStatsEvent) {
+        self.rows.extend_from_slice(ev.rows);
+        if matches!(ev.kind, EvalKind::PreBoundary | EvalKind::PostBoundary) {
+            self.profiles.push(BoundaryProfile {
+                step: ev.step,
+                kind: ev.kind,
+                rows: ev.rows.to_vec(),
+            });
+        }
+        if let Some(t) = &self.trace {
+            t.emit(
+                "layer_stats",
+                &[
+                    ("run", Json::Str(ev.run.to_string())),
+                    ("cfg", Json::Str(ev.cfg_id.to_string())),
+                    ("step", Json::Num(ev.step as f64)),
+                    ("rows", Json::Num(ev.rows.len() as f64)),
+                ],
+            );
+        }
+    }
+
+    fn on_boundary(&mut self, ev: &BoundaryEvent) {
+        if let Some(t) = &self.trace {
+            t.emit(
+                "boundary",
+                &[
+                    ("run", Json::Str(ev.run.to_string())),
+                    ("step", Json::Num(ev.step as f64)),
+                    ("from", Json::Str(ev.from_cfg.to_string())),
+                    ("to", Json::Str(ev.to_cfg.to_string())),
+                    ("pre_val_loss", Json::Num(ev.pre_val_loss as f64)),
+                    ("post_val_loss", Json::Num(ev.post_val_loss as f64)),
+                ],
+            );
+        }
+    }
+
+    fn on_finish(&mut self, summary: &RunSummary) {
+        if let Some(t) = &self.trace {
+            t.emit(
+                "run_finish",
+                &[
+                    ("run", Json::Str(summary.run.to_string())),
+                    ("steps", Json::Num(summary.steps as f64)),
+                    ("final_val_loss", Json::Num(summary.final_val_loss as f64)),
+                ],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(step: usize, layer: usize, grad: f32) -> LayerStatsRow {
+        LayerStatsRow {
+            step,
+            tokens: step as u64 * 100,
+            layer,
+            rung: "gpt2.l3".into(),
+            grad_norm: grad,
+            act_rms: 1.0,
+            uw_ratio: 0.01 * grad,
+        }
+    }
+
+    #[test]
+    fn csv_shape_and_bit_exactness() {
+        let rows = vec![
+            LayerStatsRow {
+                step: 3,
+                tokens: 96,
+                layer: 0,
+                rung: "gpt2.l1".into(),
+                grad_norm: 2.0f32 / 3.0,
+                act_rms: f32::from_bits(0x3f9d70a4),
+                uw_ratio: 0.01f32 * 0.3,
+            },
+        ];
+        let csv = layer_stats_csv(&rows);
+        assert!(csv.starts_with("step,tokens,layer,rung,grad_norm,act_rms,uw_ratio\n"));
+        let cols: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(cols.len(), 7);
+        assert_eq!(cols[4].parse::<f32>().unwrap().to_bits(), rows[0].grad_norm.to_bits());
+        assert_eq!(cols[5].parse::<f32>().unwrap().to_bits(), rows[0].act_rms.to_bits());
+        // A 1-ulp perturbation must change the text (bit-identity diffing).
+        let mut bumped = rows.clone();
+        bumped[0].grad_norm = f32::from_bits(bumped[0].grad_norm.to_bits() + 1);
+        assert_ne!(layer_stats_csv(&rows), layer_stats_csv(&bumped));
+    }
+
+    #[test]
+    fn probe_rows_fold_param_groups_onto_layers() {
+        use crate::runtime::Manifest;
+        use std::path::PathBuf;
+        // Two params: one embedding (no layer), one layer.0 matrix.
+        let m = Manifest::parse(
+            r#"{"configs":{"gpt2.l1":{
+                "cfg_id":"gpt2.l1",
+                "model":{"family":"gpt2","n_layer":1,"d_model":64,"n_head":4,
+                         "vocab":512,"seq_len":64,"batch":8,"moe":null},
+                "opt":{"kind":"muon_nsgd"},
+                "params":[{"name":"embed.tok","shape":[512,64],"init":"normal","std":0.02},
+                          {"name":"layer.0.attn.wq","shape":[64,64],"init":"normal","std":0.125}],
+                "opt_state":[],
+                "param_count":1,"active_param_count":1,
+                "artifacts":{}
+            }}}"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        let entry = m.get("gpt2.l1").unwrap();
+        // grad_norms per param group: embedding 3.0 (excluded), layer.0 4.0.
+        let rows = rows_from_probe(entry, 10, 1000, 0.5, &[3.0, 4.0], &[2.0]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].layer, 0);
+        assert_eq!(rows[0].rung, "gpt2.l1");
+        assert_eq!(rows[0].grad_norm, 4.0);
+        assert_eq!(rows[0].act_rms, 2.0);
+        assert_eq!(rows[0].uw_ratio, 0.5 * 4.0 / 2.0);
+        // Per-layer grad vector (length != param count): positional mapping.
+        let rows = rows_from_probe(entry, 10, 1000, 1.0, &[7.0], &[1.0]);
+        assert_eq!(rows[0].grad_norm, 7.0);
+        // The real AOT shape for a 1-layer model: grad groups
+        // [embed, layer.0, tail] against act rows [embed out, layer.0 out].
+        // Positional alignment pairs embed↔embed and layer↔layer; the tail
+        // group has no activation row and is dropped.
+        let rows = rows_from_probe(entry, 10, 1000, 1.0, &[3.0, 4.0, 5.0], &[1.5, 2.0]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].grad_norm, rows[0].act_rms), (3.0, 1.5));
+        assert_eq!((rows[1].grad_norm, rows[1].act_rms), (4.0, 2.0));
+    }
+
+    #[test]
+    fn decay_and_verdict_math() {
+        // 6 layers, late third (layers 4,5) carries half the early signal.
+        let grown: Vec<LayerStatsRow> =
+            (0..6).map(|l| row(10, l, if l >= 4 { 1.0 } else { 2.0 })).collect();
+        let d = grad_decay(&grown).unwrap();
+        assert!((d - 0.5).abs() < 1e-6, "late/early = 1.0/2.0, got {d}");
+        // Scratch decays much harder: verdict says the grown model escapes.
+        let scratch: Vec<LayerStatsRow> =
+            (0..6).map(|l| row(10, l, if l >= 4 { 0.2 } else { 2.0 })).collect();
+        let v = curse_verdict(&grown, &scratch).unwrap();
+        assert!(v.escapes);
+        assert!(v.ratio > 1.0);
+        // Reversed comparison suffers.
+        let v = curse_verdict(&scratch, &grown).unwrap();
+        assert!(!v.escapes);
+        // Only the final step's rows count.
+        let mut with_history = grown.clone();
+        with_history.extend((0..6).map(|l| row(20, l, 3.0)));
+        assert!((grad_decay(&with_history).unwrap() - 1.0).abs() < 1e-6);
+        // Empty sides error instead of fabricating a verdict.
+        assert!(curse_verdict(&[], &scratch).is_err());
+        assert!(curse_verdict(&grown, &[]).is_err());
+    }
+
+    #[test]
+    fn depth_profile_sorts_layers() {
+        let rows = vec![row(5, 2, 1.0), row(5, 0, 3.0), row(5, 1, 2.0)];
+        let t = depth_profile(&rows);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "0");
+        assert_eq!(t.rows[2][0], "2");
+    }
+
+    #[test]
+    fn trace_lines_parse_against_schema() {
+        let (sink, buf) = TraceSink::capture();
+        sink.emit("frame", &[("peer", Json::Str("w1".into())), ("bytes", Json::Num(128.0))]);
+        sink.emit("boundary", &[("step", Json::Num(24.0))]);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            validate_trace_line(l).unwrap();
+        }
+        // ts_us is monotonic non-decreasing across events.
+        let ts: Vec<f64> = lines
+            .iter()
+            .map(|l| Json::parse(l).unwrap().req("ts_us").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts[0] <= ts[1]);
+        // Schema violations are caught.
+        assert!(validate_trace_line("not json").is_err());
+        assert!(validate_trace_line(r#"{"ts_us":1}"#).is_err());
+        assert!(validate_trace_line(r#"{"kind":"x"}"#).is_err());
+        assert!(validate_trace_line(r#"{"kind":"","ts_us":1}"#).is_err());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&s, 50.0), 50);
+        assert_eq!(percentile_us(&s, 90.0), 90);
+        assert_eq!(percentile_us(&s, 99.0), 99);
+        assert_eq!(percentile_us(&s, 100.0), 100);
+        assert_eq!(percentile_us(&[7], 50.0), 7);
+        assert_eq!(percentile_us(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn depth_diagnostics_collects_rows_and_boundary_profiles() {
+        let mut d = DepthDiagnostics::new();
+        let pre = vec![row(24, 0, 1.0)];
+        d.on_layer_stats(&LayerStatsEvent {
+            run: "r",
+            cfg_id: "gpt2.l1",
+            step: 24,
+            kind: EvalKind::PreBoundary,
+            rows: &pre,
+        });
+        let post = vec![row(24, 0, 1.0), row(24, 1, 0.5)];
+        d.on_layer_stats(&LayerStatsEvent {
+            run: "r",
+            cfg_id: "gpt2.l3",
+            step: 24,
+            kind: EvalKind::PostBoundary,
+            rows: &post,
+        });
+        let cadence = vec![row(48, 0, 1.0)];
+        d.on_layer_stats(&LayerStatsEvent {
+            run: "r",
+            cfg_id: "gpt2.l3",
+            step: 48,
+            kind: EvalKind::Cadence,
+            rows: &cadence,
+        });
+        assert_eq!(d.rows().len(), 4);
+        assert_eq!(d.profiles().len(), 2, "only boundary evals become profiles");
+        assert_eq!(d.profiles()[0].kind, EvalKind::PreBoundary);
+        assert_eq!(d.profiles()[1].rows.len(), 2);
+    }
+}

@@ -394,6 +394,7 @@ mod tests {
             ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
             boundaries: Vec::new(),
             final_val_loss: 0.0,
+            layer_stats: Vec::new(),
         };
         let trunk_id = graph.groups().iter().find_map(|g| g.trunk).unwrap();
         let per_plan = vec![Some((res(300.0), None)), Some((res(320.0), None)), Some((res(500.0), None))];
@@ -508,6 +509,7 @@ mod tests {
             ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
             boundaries: Vec::new(),
             final_val_loss: 0.0,
+            layer_stats: Vec::new(),
         };
         let per_plan = vec![Some((res(3000.0), None)), Some((res(3600.0), None))];
         let costs = move |j: JobId| {

@@ -18,7 +18,7 @@
 //! **Determinism contract.** A parallel sweep is bit-identical to the serial
 //! [`crate::coordinator::Sweep::run`] for any worker count and any job
 //! interleaving, because (1) jobs communicate only via in-memory
-//! `DPTDRV01`-form [`crate::checkpoint::DriverSnapshot`]s taken at
+//! `DPTDRV02`-form [`crate::checkpoint::DriverSnapshot`]s taken at
 //! dispatch-unit boundaries, (2) each job's engine-call sequence is a pure
 //! function of its plan (+ fork snapshot) — never of the schedule — and
 //! (3) results are folded in the serial sweep's canonical group order

@@ -555,6 +555,7 @@ mod tests {
             ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("s".into(), 10, 1e6)] },
             curve,
             boundaries: Vec::new(),
+            layer_stats: Vec::new(),
             state: ModelState::init(entry, 5),
         }
     }
@@ -574,6 +575,7 @@ mod tests {
             ledger: FlopLedger { total: 4e6, tokens: 2560, stages: vec![("t".into(), 40, 4e6)] },
             boundaries: vec![(10, "t".into())],
             final_val_loss: 2.3,
+            layer_stats: Vec::new(),
         }
     }
 

@@ -5,7 +5,7 @@
 //!
 //! - [`wire`](self): `DPTNET01` length-prefixed frames carrying the exact
 //!   on-disk byte forms — plans through the `RunPlan` codec, snapshots as
-//!   `DPTDRV01`, results as `DPTRUN01` run entries — plus a versioned
+//!   `DPTDRV02`, results as `DPTRUN02` run entries — plus a versioned
 //!   handshake that refuses mismatched builds, stores, or corpora at
 //!   connect time instead of mid-sweep.
 //! - [`serve`]: the coordinator. Owns the [`crate::exec::sched::Scheduler`],

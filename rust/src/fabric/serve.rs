@@ -121,11 +121,62 @@ pub struct FabricStats {
     pub snapshots_shipped: usize,
     /// Fork snapshots served by reference from a worker's verified cache.
     pub snapshots_cache_served: usize,
-    /// Total `DPTDRV01` bytes shipped inline (0 on a fully warm rerun).
+    /// Total `DPTDRV02` bytes shipped inline (0 on a fully warm rerun).
     pub snapshot_bytes_shipped: u64,
     /// Jobs the `--resume` pre-pass replayed from the journal.
     pub resumed_jobs: usize,
+    /// Heartbeat round-trip latency samples (microseconds): the coordinator
+    /// pings each live worker on the liveness-scan cadence and pairs the
+    /// echoed nonce. Empty for local-only serves.
+    pub rtt_micros: Vec<u64>,
 }
+
+impl FabricStats {
+    /// Machine-readable form for `repro serve --stats-json PATH`: every
+    /// counter plus nearest-rank percentiles of the heartbeat round-trip
+    /// samples. Stable key order (object keys sort lexicographically).
+    pub fn to_json(&self) -> String {
+        use crate::diag::percentile_us;
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let n = |v: usize| Json::Num(v as f64);
+        let mut o = BTreeMap::new();
+        o.insert("cached_jobs".to_string(), n(self.cached_jobs));
+        o.insert("dispatched_jobs".to_string(), n(self.dispatched_jobs));
+        o.insert("local_jobs".to_string(), n(self.local_jobs));
+        o.insert("remote_jobs".to_string(), n(self.remote_jobs));
+        o.insert("reassigned_jobs".to_string(), n(self.reassigned_jobs));
+        o.insert("workers_lost".to_string(), n(self.workers_lost));
+        o.insert("workers_reconnected".to_string(), n(self.workers_reconnected));
+        o.insert("connections".to_string(), n(self.connections));
+        o.insert("snapshots_shipped".to_string(), n(self.snapshots_shipped));
+        o.insert("snapshots_cache_served".to_string(), n(self.snapshots_cache_served));
+        o.insert(
+            "snapshot_bytes_shipped".to_string(),
+            Json::Num(self.snapshot_bytes_shipped as f64),
+        );
+        o.insert("resumed_jobs".to_string(), n(self.resumed_jobs));
+        let mut rtt = BTreeMap::new();
+        rtt.insert("samples".to_string(), n(self.rtt_micros.len()));
+        for (key, pct) in [("p50_us", 50.0), ("p90_us", 90.0), ("p99_us", 99.0)] {
+            rtt.insert(key.to_string(), Json::Num(percentile_us(&self.rtt_micros, pct) as f64));
+        }
+        rtt.insert(
+            "max_us".to_string(),
+            Json::Num(self.rtt_micros.iter().copied().max().unwrap_or(0) as f64),
+        );
+        o.insert("heartbeat_rtt".to_string(), Json::Obj(rtt));
+        Json::Obj(o).to_string()
+    }
+}
+
+/// A new latency probe goes out per live worker at most this often; one is
+/// outstanding at a time per connection.
+const PING_INTERVAL: Duration = Duration::from_millis(1000);
+
+/// Hard cap on retained RTT samples (bounds coordinator memory on very long
+/// serves; at one sample per worker per second this is many hours of fleet).
+const MAX_RTT_SAMPLES: usize = 1 << 16;
 
 /// A bound coordinator listener; [`FabricServer::run`] executes one graph
 /// over it. Binding is separate from running so tests and the CLI can
@@ -151,6 +202,10 @@ struct Conn {
     /// The worker's advertised cache capacity, mirrored here.
     cache_cap: usize,
     last_seen: Instant,
+    /// Outstanding latency probe: nonce and send time, paired by the Pong.
+    ping: Option<(u64, Instant)>,
+    /// When the last latency probe went out (rate-limits to PING_INTERVAL).
+    last_ping: Instant,
 }
 
 impl Conn {
@@ -203,7 +258,7 @@ fn result_key(graph: &JobGraph, job: JobId) -> Result<String> {
 
 /// The manifest a snapshot key must verify against: memoized, else the
 /// store's journaled trunk manifest, else computed from the snapshot's
-/// canonical `DPTDRV01` bytes (and memoized for every later decision).
+/// canonical `DPTDRV02` bytes (and memoized for every later decision).
 fn key_manifest(
     manifests: &mut HashMap<String, ArtifactManifest>,
     store: Option<&RunStore>,
@@ -407,6 +462,7 @@ impl FabricServer {
             let mut manifests: HashMap<String, ArtifactManifest> = HashMap::new();
             let mut seen_wids: HashSet<String> = HashSet::new();
             let mut in_flight = 0usize;
+            let mut next_nonce = 0u64;
             let mut alive_local = local_workers;
             let mut ever_connected = false;
             let mut first_err: Option<anyhow::Error> = None;
@@ -539,6 +595,8 @@ impl FabricServer {
                                     model: Vec::new(),
                                     cache_cap: 1,
                                     last_seen: Instant::now(),
+                                    ping: None,
+                                    last_ping: Instant::now(),
                                 },
                             );
                         }
@@ -731,10 +789,23 @@ impl FabricServer {
                                 }
                             }
                             Msg::Heartbeat => {}
+                            Msg::Pong { nonce } => {
+                                let c = conns.get_mut(&conn).expect("checked above");
+                                if c.ping.is_some_and(|(n, _)| n == nonce) {
+                                    let (_, sent) = c.ping.take().expect("checked above");
+                                    if stats.rtt_micros.len() < MAX_RTT_SAMPLES {
+                                        stats
+                                            .rtt_micros
+                                            .push(sent.elapsed().as_micros() as u64);
+                                    }
+                                }
+                                // A nonce we no longer expect is stale noise.
+                            }
                             // Nothing else is valid coming *from* a worker.
                             Msg::Welcome
                             | Msg::Reject { .. }
                             | Msg::Assign { .. }
+                            | Msg::Ping { .. }
                             | Msg::Shutdown { .. } => {
                                 drop_conn(
                                     conn,
@@ -775,6 +846,35 @@ impl FabricServer {
                     .map(|(&id, _)| id)
                     .collect();
                 for id in stale {
+                    drop_conn(
+                        id,
+                        &mut conns,
+                        &mut idle_remote,
+                        &mut sched,
+                        &mut in_flight,
+                        &mut stats,
+                    );
+                }
+                // Latency probes ride the same cadence: one outstanding Ping
+                // per live worker, a fresh one at most every PING_INTERVAL.
+                let mut ping_dead: Vec<usize> = Vec::new();
+                for (&id, c) in conns.iter_mut() {
+                    if !c.active
+                        || c.ping.is_some()
+                        || now.duration_since(c.last_ping) < PING_INTERVAL
+                    {
+                        continue;
+                    }
+                    next_nonce += 1;
+                    let msg = Msg::Ping { nonce: next_nonce };
+                    if wire::send_msg(&mut c.stream, &msg, manifest).is_err() {
+                        ping_dead.push(id);
+                        continue;
+                    }
+                    c.ping = Some((next_nonce, Instant::now()));
+                    c.last_ping = now;
+                }
+                for id in ping_dead {
                     drop_conn(
                         id,
                         &mut conns,
@@ -956,6 +1056,29 @@ mod tests {
     }
 
     #[test]
+    fn stats_json_reports_counters_and_rtt_percentiles() {
+        let stats = FabricStats {
+            dispatched_jobs: 7,
+            remote_jobs: 4,
+            rtt_micros: vec![100, 400, 200, 300],
+            ..FabricStats::default()
+        };
+        let json = crate::util::json::Json::parse(&stats.to_json()).unwrap();
+        assert_eq!(json.get("dispatched_jobs").unwrap().as_usize(), Some(7));
+        assert_eq!(json.get("remote_jobs").unwrap().as_usize(), Some(4));
+        let rtt = json.get("heartbeat_rtt").unwrap();
+        assert_eq!(rtt.get("samples").unwrap().as_usize(), Some(4));
+        assert_eq!(rtt.get("p50_us").unwrap().as_usize(), Some(200));
+        assert_eq!(rtt.get("p99_us").unwrap().as_usize(), Some(400));
+        assert_eq!(rtt.get("max_us").unwrap().as_usize(), Some(400));
+
+        // No samples: percentiles degrade to zero, never panic.
+        let empty = FabricStats::default().to_json();
+        let json = crate::util::json::Json::parse(&empty).unwrap();
+        assert_eq!(json.get("heartbeat_rtt").unwrap().get("p90_us").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
     fn resume_without_a_journal_record_is_refused() {
         let plan = RunBuilder::progressive(
             "r",
@@ -1045,6 +1168,9 @@ mod tests {
                     match wire::recv_msg(&mut read, &manifest)? {
                         Msg::Assign { item, .. } => break item.job(),
                         Msg::Heartbeat => {}
+                        Msg::Ping { nonce } => {
+                            wire::send_msg(&mut write, &Msg::Pong { nonce }, &manifest)?;
+                        }
                         _ => bail!("expected Assign, got another frame"),
                     }
                 };
@@ -1054,6 +1180,9 @@ mod tests {
                     match wire::recv_msg(&mut read, &manifest)? {
                         Msg::Shutdown { reason } => return Ok(reason),
                         Msg::Heartbeat => {}
+                        Msg::Ping { nonce } => {
+                            wire::send_msg(&mut write, &Msg::Pong { nonce }, &manifest)?;
+                        }
                         _ => bail!("expected Shutdown, got another frame"),
                     }
                 }

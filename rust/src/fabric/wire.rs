@@ -5,8 +5,8 @@
 //! sides; every subsequent message is one frame: a `u32` little-endian
 //! payload length, a `u8` message kind, then the payload. Payloads are built
 //! from the exact codecs the rest of the repo already trusts — a
-//! [`DriverSnapshot`] on the wire is its `DPTDRV01` file form byte-for-byte
-//! ([`checkpoint::write_snapshot_to`]), a finished run is its `DPTRUN01`
+//! [`DriverSnapshot`] on the wire is its `DPTDRV02` file form byte-for-byte
+//! ([`checkpoint::write_snapshot_to`]), a finished run is its `DPTRUN02`
 //! cache-entry form ([`store::write_run_entry`]), and a [`RunPlan`] uses the
 //! plan codec ([`RunPlan::write_to`]). Reusing the persistence codecs is
 //! what makes the distributed determinism contract cheap to state: the bytes
@@ -27,7 +27,7 @@
 //! megabytes the worker already holds.
 //!
 //! **Snapshot transport** ([`WireSnap`], DESIGN.md §9): an assignment's
-//! fork snapshot travels either inline (the raw `DPTDRV01` blob plus the
+//! fork snapshot travels either inline (the raw `DPTDRV02` blob plus the
 //! cache key to file it under) or by reference (cache key + the
 //! [`ArtifactManifest`] of the expected bytes). The manifest check is the
 //! stale-cache guard: a worker whose cached bytes do not match answers
@@ -60,8 +60,10 @@ pub(crate) const MAGIC: [u8; 8] = *b"DPTNET01";
 
 /// Bumped on any frame-layout or message-semantics change. v2: Hello carries
 /// a worker id + cache inventory, Shutdown carries a reason, assignments use
-/// [`WireSnap`] transport, and `SnapMiss` exists.
-pub(crate) const PROTOCOL_VERSION: u64 = 2;
+/// [`WireSnap`] transport, and `SnapMiss` exists. v3: snapshots and run
+/// entries carry per-layer diagnostics rows (`DPTDRV02`/`DPTRUN02`), and
+/// `Ping`/`Pong` measure heartbeat round-trip latency.
+pub(crate) const PROTOCOL_VERSION: u64 = 3;
 
 /// Sanity cap on a single frame (a full model snapshot fits comfortably;
 /// anything near this is a corrupted or hostile length word).
@@ -79,6 +81,8 @@ pub(crate) const KIND_DONE: u8 = 6;
 pub(crate) const KIND_HEARTBEAT: u8 = 7;
 const KIND_SHUTDOWN: u8 = 8;
 const KIND_SNAPMISS: u8 = 9;
+const KIND_PING: u8 = 10;
+const KIND_PONG: u8 = 11;
 
 /// How an assignment's fork snapshot crosses the wire.
 pub(crate) enum WireSnap {
@@ -86,7 +90,7 @@ pub(crate) enum WireSnap {
     None,
     /// Full snapshot bytes. `key` is the cache key the worker files the
     /// blob under (`""` = uncacheable); `manifest` covers the raw
-    /// `DPTDRV01` blob — the encoder recomputes it, the decoder fills it
+    /// `DPTDRV02` blob — the encoder recomputes it, the decoder fills it
     /// from the bytes actually received.
     Inline { key: String, manifest: ArtifactManifest, snap: Arc<DriverSnapshot> },
     /// Reference into the worker's snapshot cache. `manifest` is the
@@ -174,6 +178,12 @@ pub(crate) enum Msg {
     SnapMiss { slot: u64, job: JobId, key: String },
     /// Worker → coordinator: liveness while idle or mid-job.
     Heartbeat,
+    /// Coordinator → worker: round-trip latency probe. The worker echoes
+    /// the nonce back as [`Msg::Pong`] immediately; the coordinator pairs
+    /// them to sample heartbeat round-trip latency for `FabricStats`.
+    Ping { nonce: u64 },
+    /// Worker → coordinator: answer to [`Msg::Ping`], same nonce.
+    Pong { nonce: u64 },
     /// Coordinator → worker: the sweep is over; exit. An empty reason is a
     /// clean completion; a non-empty reason is the coordinator's abort
     /// cause, surfaced so workers exit loudly instead of idling until a
@@ -193,6 +203,8 @@ impl Msg {
             Msg::Heartbeat => KIND_HEARTBEAT,
             Msg::Shutdown { .. } => KIND_SHUTDOWN,
             Msg::SnapMiss { .. } => KIND_SNAPMISS,
+            Msg::Ping { .. } => KIND_PING,
+            Msg::Pong { .. } => KIND_PONG,
         }
     }
 
@@ -216,6 +228,7 @@ impl Msg {
                 }
             }
             Msg::Welcome | Msg::Heartbeat => {}
+            Msg::Ping { nonce } | Msg::Pong { nonce } => write_u64(f, *nonce)?,
             Msg::Reject { reason } => write_str(f, reason)?,
             Msg::Shutdown { reason } => write_str(f, reason)?,
             Msg::Ready { slot } => write_u64(f, *slot)?,
@@ -302,7 +315,7 @@ fn decode_item(f: &mut impl Read, manifest: &Manifest) -> Result<WireItem> {
 }
 
 /// Encode a snapshot into its cacheable wire blob — the verbatim
-/// `DPTDRV01` bytes, identical to the store's trunk-file content — and the
+/// `DPTDRV02` bytes, identical to the store's trunk-file content — and the
 /// [`ArtifactManifest`] both endpoints use for the stale-cache check.
 pub(crate) fn snap_blob(
     snap: &DriverSnapshot,
@@ -371,7 +384,7 @@ fn read_manifest(f: &mut impl Read) -> Result<ArtifactManifest> {
 }
 
 /// Snapshot-in-payload for `Done` frames: an explicit config id, then the
-/// snapshot in its verbatim `DPTDRV01` form. The explicit id lets a
+/// snapshot in its verbatim `DPTDRV02` form. The explicit id lets a
 /// streaming reader resolve the manifest entry before decoding (no
 /// seek-back on a socket).
 fn write_snap(f: &mut impl Write, snap: &DriverSnapshot, manifest: &Manifest) -> Result<()> {
@@ -439,6 +452,8 @@ fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
             Msg::Done { slot, job, output }
         }
         KIND_HEARTBEAT => Msg::Heartbeat,
+        KIND_PING => Msg::Ping { nonce: read_u64(f)? },
+        KIND_PONG => Msg::Pong { nonce: read_u64(f)? },
         KIND_SHUTDOWN => Msg::Shutdown { reason: read_str(f)? },
         other => bail!("unknown fabric frame kind {other}"),
     };
@@ -610,6 +625,15 @@ mod tests {
             ledger: FlopLedger { total: 1e6, tokens: 640, stages: vec![("t".into(), 10, 1e6)] },
             curve,
             boundaries: Vec::new(),
+            layer_stats: vec![crate::diag::LayerStatsRow {
+                step: 10,
+                tokens: 640,
+                layer: 1,
+                rung: "t".into(),
+                grad_norm: 0.75,
+                act_rms: 1.5,
+                uw_ratio: 0.005,
+            }],
             state,
         }
     }
@@ -638,6 +662,7 @@ mod tests {
         assert_eq!(a.val_windows, b.val_windows);
         assert_eq!(a.curve.points.len(), b.curve.points.len());
         assert_eq!(a.boundaries, b.boundaries);
+        assert_eq!(a.layer_stats, b.layer_stats, "diagnostics rows drifted");
         assert_eq!(a.state.params.len(), b.state.params.len());
         assert_eq!(a.state.opt.len(), b.state.opt.len());
         let bits = |ts: &[crate::runtime::Tensor]| -> Vec<Vec<u32>> {
@@ -692,7 +717,7 @@ mod tests {
         let msgs = vec![
             Msg::Hello {
                 proto: PROTOCOL_VERSION,
-                store_version: 2,
+                store_version: 3,
                 salt: "cafebabe".into(),
                 probe: codec_probe().unwrap(),
                 wid: "4242.0".into(),
@@ -745,6 +770,8 @@ mod tests {
             Msg::Heartbeat,
             Msg::Shutdown { reason: String::new() },
             Msg::Shutdown { reason: "fabric fleet drained".into() },
+            Msg::Ping { nonce: 0xdead_beef },
+            Msg::Pong { nonce: 0xdead_beef },
         ];
         for msg in &msgs {
             roundtrip(msg, &m);
@@ -804,6 +831,14 @@ mod tests {
             Msg::Done { job: 4, output: Err(e), .. } => assert!(e.contains("panicked")),
             _ => panic!("error done decoded as the wrong message"),
         }
+        match roundtrip(&msgs[13], &m) {
+            Msg::Ping { nonce } => assert_eq!(nonce, 0xdead_beef),
+            _ => panic!("ping decoded as the wrong message"),
+        }
+        match roundtrip(&msgs[14], &m) {
+            Msg::Pong { nonce } => assert_eq!(nonce, 0xdead_beef),
+            _ => panic!("pong decoded as the wrong message"),
+        }
     }
 
     #[test]
@@ -815,6 +850,7 @@ mod tests {
             ledger: snap.ledger.clone(),
             boundaries: vec![(10, "t".into())],
             final_val_loss: 2.6,
+            layer_stats: snap.layer_stats.clone(),
         };
         let msg = Msg::Done {
             slot: 1,
@@ -839,7 +875,7 @@ mod tests {
 
     #[test]
     fn snapshot_frames_survive_arbitrary_read_fragmentation() {
-        // The satellite property: a DPTDRV01 snapshot pushed through the
+        // The satellite property: a DPTDRV02 snapshot pushed through the
         // frame encoder, split at arbitrary byte boundaries (as TCP will),
         // decodes bit-exactly.
         let m = manifest();

@@ -449,6 +449,11 @@ pub fn run_worker(
                     }
                 }
                 Ok(WEvent::Net(_, Msg::Heartbeat)) => {}
+                Ok(WEvent::Net(_, Msg::Ping { nonce })) => {
+                    // Latency probe: echo immediately so the coordinator's
+                    // RTT sample measures the wire, not our job queue.
+                    outbound.push(Msg::Pong { nonce });
+                }
                 Ok(WEvent::Net(_, Msg::Shutdown { reason })) => {
                     write.shutdown();
                     if reason.is_empty() {
@@ -582,6 +587,7 @@ mod tests {
             ledger: crate::flops::FlopLedger { total: 0.0, tokens: 0, stages: Vec::new() },
             curve: crate::metrics::Curve::new("r"),
             boundaries: Vec::new(),
+            layer_stats: Vec::new(),
             state: crate::runtime::ModelState { params: Vec::new(), opt: Vec::new() },
         });
         let snap = |tag: u64| {

@@ -26,6 +26,8 @@
 //! - [`convex`]: §4 convergence-theory simulator.
 //! - [`scaling`]: power-law fits for the Fig-2 scaling laws.
 //! - [`metrics`]: loss curves, the §5 mixing detector, table/CSV writers.
+//! - [`diag`]: depth-diagnostics observability — per-layer probe stats,
+//!   the JSONL trace sink, and the `repro diagnose` verdict math (§11).
 pub mod util;
 pub mod runtime;
 pub mod schedule;
@@ -34,6 +36,7 @@ pub mod flops;
 pub mod expansion;
 pub mod metrics;
 pub mod coordinator;
+pub mod diag;
 pub mod exec;
 pub mod store;
 pub mod fabric;

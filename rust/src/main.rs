@@ -6,6 +6,10 @@
 //!                                                   fixed-size training
 //!   progressive <small> <large> [--tau N|--tau-frac F] [--steps N] ...
 //!         [--strategy random|copying|zero|zero_n|zero_l] [--insertion top|bottom]
+//!         [--spike-sigma S [--spike-window W]]         adaptive spike detector
+//!   diagnose <small> <large> [--tau N|--tau-frac F] [--workers N] [--trace P]
+//!         per-layer depth diagnostics: grown ladder vs FLOP-matched
+//!         from-scratch baseline, depth profiles + curse-of-depth verdict
 //!   sweep <small> <large> [--taus F,F,..] [--strategies a,b,..]
 //!         [--workers N] [--progress] [--store-dir D]
 //!         expansion-variant sweep sharing source-model training, executed
@@ -38,6 +42,7 @@ use deep_progressive::coordinator::{
     RunDriver, RunPlan, Sweep, Trainer,
 };
 use deep_progressive::data::{Corpus, CorpusConfig};
+use deep_progressive::diag;
 use deep_progressive::exec::{default_workers, JobGraph};
 use deep_progressive::expansion::{strategy_from_name, ExpandSpec, Insertion, OsPolicy};
 use deep_progressive::fabric::{
@@ -46,6 +51,7 @@ use deep_progressive::fabric::{
 use deep_progressive::runtime::{Engine, Manifest};
 use deep_progressive::schedule::Schedule;
 use deep_progressive::store::RunStore;
+use deep_progressive::util::json::Json;
 
 fn spec_for(cmd: &str) -> Option<CommandSpec> {
     // Static per-command vocabularies so typos fail loudly instead of
@@ -60,7 +66,16 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     const PROGRESSIVE: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "tau",
-            "tau-frac", "strategy", "insertion", "os", "expand-seed",
+            "tau-frac", "strategy", "insertion", "os", "expand-seed", "spike-sigma",
+            "spike-window",
+        ],
+        switches: &["progress"],
+    };
+    const DIAGNOSE: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "tau",
+            "tau-frac", "strategy", "insertion", "os", "expand-seed", "workers", "store-dir",
+            "trace",
         ],
         switches: &["progress"],
     };
@@ -90,7 +105,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
             "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
-            "workers", "store-dir", "listen", "heartbeat-timeout",
+            "workers", "store-dir", "listen", "heartbeat-timeout", "stats-json",
         ],
         switches: &["progress", "resume"],
     };
@@ -127,6 +142,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     match cmd {
         "train" => Some(TRAIN),
         "progressive" => Some(PROGRESSIVE),
+        "diagnose" => Some(DIAGNOSE),
         "sweep" => Some(SWEEP),
         "ladder" => Some(LADDER),
         "serve" => Some(SERVE),
@@ -202,6 +218,39 @@ fn workers_from(args: &Args) -> Result<usize> {
             Err(_) => anyhow::bail!("--workers expects a positive number, got '{s}'"),
         },
     }
+}
+
+/// Spike-detector settings for `progressive`: report-only (threshold 0) by
+/// default; `--spike-sigma S [--spike-window W]` switches to the rolling
+/// mode, flagging post-expansion jumps above S × the sample stddev of the
+/// last W cadence evals.
+fn spike_detector_from(args: &Args) -> Result<LossSpikeDetector> {
+    let sigma = match args.get("spike-sigma") {
+        None => {
+            if let Some(w) = args.get("spike-window") {
+                anyhow::bail!(
+                    "--spike-window {w} only makes sense with --spike-sigma (without a sigma                      the detector uses an absolute threshold and keeps no rolling window)"
+                );
+            }
+            return Ok(LossSpikeDetector::new(0.0));
+        }
+        Some(text) => match text.parse::<f32>() {
+            Ok(v) if v.is_finite() && v > 0.0 => v,
+            _ => anyhow::bail!(
+                "--spike-sigma expects a positive number of standard deviations, got '{text}'"
+            ),
+        },
+    };
+    let window = match args.get("spike-window") {
+        None => 8,
+        Some(text) => match text.parse::<usize>() {
+            Ok(w) if w >= 2 => w,
+            _ => anyhow::bail!(
+                "--spike-window expects an integer >= 2 (a rolling stddev needs at least                  two samples), got '{text}'"
+            ),
+        },
+    };
+    Ok(LossSpikeDetector::with_sigma(sigma, window))
 }
 
 /// Build the (non-probe) ladder grid shared by `ladder`, `serve`, and
@@ -356,7 +405,7 @@ fn main() -> Result<()> {
             if args.has("progress") {
                 driver.attach(Box::new(ProgressPrinter::default()));
             }
-            let spikes = Rc::new(RefCell::new(LossSpikeDetector::new(0.0)));
+            let spikes = Rc::new(RefCell::new(spike_detector_from(&args)?));
             driver.attach(Box::new(spikes.clone()));
             driver.run_to_end()?;
             let res = driver.finish();
@@ -369,6 +418,139 @@ fn main() -> Result<()> {
                 (1.0 - res.ledger.total / fixed_flops) * 100.0,
                 spikes.borrow().max_jump().unwrap_or(f32::NAN),
             );
+            Ok(())
+        }
+        "diagnose" => {
+            // Depth diagnostics (DESIGN.md §11): one grown progressive run
+            // and one FLOP-matched from-scratch baseline at the large depth,
+            // both with per-layer probes on, compared layer by layer. Runs
+            // through the sweep machinery, so --workers and --store-dir
+            // behave exactly like sweep grids: any worker count (or a warm
+            // store rerun, which executes nothing) emits byte-identical
+            // diagnostics.
+            const USAGE: &str = "diagnose <small> <large> [--tau N|--tau-frac F] [--steps N] \
+                                 [--workers N] [--store-dir D] [--trace PATH]";
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let corpus = Corpus::generate(CorpusConfig::default());
+            let trainer = Trainer::new(&engine, &manifest, &corpus);
+            let small = positional(&args, 0, USAGE)?.to_string();
+            let large = positional(&args, 1, USAGE)?.to_string();
+            let tau = args
+                .get("tau")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(|| tau_from_frac(steps, args.get_f64("tau-frac", 0.8)))
+                .max(1);
+            if tau >= steps {
+                anyhow::bail!("--tau {tau} must be below --steps {steps} — usage: {USAGE}");
+            }
+            let sched = schedule_from(&args);
+            let grown = apply_eval_every(
+                RunBuilder::progressive(
+                    format!("diag-grown-{small}-{large}"),
+                    &small,
+                    &large,
+                    tau,
+                    steps,
+                    sched,
+                    expand_from(&args)?,
+                )
+                .seed(seed)
+                .diag(true),
+                &args,
+            )
+            .build()?;
+            // FLOP-match the baseline: a from-scratch run at the large depth
+            // spending what the grown run spends, in large-config steps.
+            let grown_flops =
+                trainer.fixed_flops(&small, tau)? + trainer.fixed_flops(&large, steps - tau)?;
+            let scratch_steps =
+                ((grown_flops / trainer.fixed_flops(&large, 1)?).round() as usize).max(1);
+            let scratch = apply_eval_every(
+                RunBuilder::fixed(format!("diag-scratch-{large}"), &large, scratch_steps, sched)
+                    .seed(seed)
+                    .diag(true),
+                &args,
+            )
+            .build()?;
+            let workers = workers_from(&args)?;
+            let mut sweep = Sweep::new(trainer);
+            if args.has("progress") {
+                sweep.progress(ProgressSink::stderr());
+            }
+            if let Some(dir) = args.get("store-dir") {
+                sweep.store(dir)?;
+            }
+            sweep.add(grown.clone());
+            sweep.add(scratch.clone());
+            let outcome = sweep.run_parallel(workers)?;
+            let outdir = std::path::Path::new(&out);
+            let trace = args
+                .get("trace")
+                .map(|p| diag::TraceSink::to_file(std::path::Path::new(p)))
+                .transpose()?;
+            for (plan, res) in [&grown, &scratch].iter().zip(&outcome.results) {
+                res.curve.write_csv(outdir)?;
+                diag::write_layer_stats_csv(outdir, plan.name(), &res.layer_stats)?;
+                println!(
+                    "\n{} (final val loss {:.4} | {:.2e} FLOPs):",
+                    plan.name(),
+                    res.final_val_loss,
+                    res.ledger.total
+                );
+                print!("{}", diag::depth_profile(&res.layer_stats).render());
+                if let Some(t) = &trace {
+                    // Replay the persisted record as span events — identical
+                    // output whether the runs executed now or came from a
+                    // warm store.
+                    let rows = &res.layer_stats;
+                    let mut i = 0;
+                    while i < rows.len() {
+                        let mut j = i;
+                        while j < rows.len()
+                            && rows[j].step == rows[i].step
+                            && rows[j].rung == rows[i].rung
+                        {
+                            j += 1;
+                        }
+                        t.emit(
+                            "layer_stats",
+                            &[
+                                ("run", Json::Str(plan.name().to_string())),
+                                ("cfg", Json::Str(rows[i].rung.clone())),
+                                ("step", Json::Num(rows[i].step as f64)),
+                                ("rows", Json::Num((j - i) as f64)),
+                            ],
+                        );
+                        i = j;
+                    }
+                    for (bstep, cfg) in &res.boundaries {
+                        t.emit(
+                            "boundary",
+                            &[
+                                ("run", Json::Str(plan.name().to_string())),
+                                ("step", Json::Num(*bstep as f64)),
+                                ("to", Json::Str(cfg.clone())),
+                            ],
+                        );
+                    }
+                    t.emit(
+                        "run_finish",
+                        &[
+                            ("run", Json::Str(plan.name().to_string())),
+                            ("final_val_loss", Json::Num(res.final_val_loss as f64)),
+                        ],
+                    );
+                }
+            }
+            println!(
+                "\ngrown: {steps} steps ({tau} at {small} + {} at {large}) vs scratch: \
+                 {scratch_steps} steps at {large} (FLOP-matched)",
+                steps - tau
+            );
+            let verdict =
+                diag::curse_verdict(&outcome.results[0].layer_stats, &outcome.results[1].layer_stats)?;
+            println!("{verdict}");
             Ok(())
         }
         "sweep" => {
@@ -578,6 +760,19 @@ fn main() -> Result<()> {
                 stats.snapshot_bytes_shipped,
                 stats.snapshots_cache_served,
             );
+            if !stats.rtt_micros.is_empty() {
+                println!(
+                    "fabric: heartbeat RTT p50 {} us, p99 {} us over {} sample(s)",
+                    diag::percentile_us(&stats.rtt_micros, 50.0),
+                    diag::percentile_us(&stats.rtt_micros, 99.0),
+                    stats.rtt_micros.len(),
+                );
+            }
+            if let Some(path) = args.get("stats-json") {
+                std::fs::write(path, stats.to_json())
+                    .map_err(|e| anyhow::anyhow!("writing --stats-json {path}: {e}"))?;
+                println!("fabric stats JSON -> {path}");
+            }
             Ok(())
         }
         "worker" => {
@@ -770,6 +965,16 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--save-every N --ckpt-dir D]   periodic driver snapshots
         [--resume SNAP]                 resume a paused run bit-exactly
   progressive <small> <large>       zero/one-layer progressive training
+        [--spike-sigma S]               flag post-expansion loss jumps above
+        [--spike-window W]              S × the rolling stddev of the last W
+                                        cadence evals (default: report-only)
+  diagnose <small> <large>          depth diagnostics: a grown run vs a
+        [--tau N|--tau-frac F]          FLOP-matched from-scratch baseline,
+        [--workers N] [--store-dir D]   both probed per layer at every eval;
+        [--trace PATH]                  prints depth-profile tables, writes
+                                        <run>.layers.csv, and renders the
+                                        curse-of-depth verdict; --trace
+                                        writes a JSONL span-event trace
   sweep <small> <large>             expansion-variant sweep; source-model
         [--taus F,F] [--strategies a,b] training is shared across variants
         [--workers N] [--progress]      parallel over N engine-owning workers
@@ -792,9 +997,12 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--store-dir D]                 bit-identical to the serial ladder's;
         [--heartbeat-timeout SECS]      --store-dir shares one artifact repo;
         [--resume]                      --resume rebuilds scheduler state from
-                                        the store journal after a coordinator
+        [--stats-json PATH]             the store journal after a coordinator
                                         crash and dispatches only unfinished
-                                        work (fully warm: zero dispatches)
+                                        work (fully warm: zero dispatches);
+                                        --stats-json writes machine-readable
+                                        FabricStats incl. heartbeat RTT
+                                        percentiles
   worker --connect HOST:PORT        fabric worker: N engine threads executing
         [--workers N] [--max-jobs K]    jobs for a `repro serve` coordinator;
         [--retry-max N]                 --retry-max/--retry-base: redial a lost
@@ -862,7 +1070,7 @@ mod tests {
 
     #[test]
     fn serve_ladder_worker_store_have_flag_vocabularies() {
-        for cmd in ["serve", "worker", "store", "ladder", "sweep", "chaos"] {
+        for cmd in ["serve", "worker", "store", "ladder", "sweep", "chaos", "diagnose"] {
             assert!(spec_for(cmd).is_some(), "{cmd} lost its CommandSpec");
         }
         // The hardened parse rejects typos on the new commands too.
@@ -877,9 +1085,41 @@ mod tests {
             .map(String::from);
         assert!(Args::parse_for(argv, &spec).is_ok());
         let spec = spec_for("serve").unwrap();
-        let argv = "serve a b --listen h:1 --store-dir d --resume"
+        let argv = "serve a b --listen h:1 --store-dir d --resume --stats-json s.json"
             .split_whitespace()
             .map(String::from);
         assert!(Args::parse_for(argv, &spec).is_ok());
+        // The diagnose vocabulary parses its own knobs and rejects typos.
+        let spec = spec_for("diagnose").unwrap();
+        let argv = "diagnose a b --tau-frac 0.5 --workers 2 --store-dir d --trace t.jsonl"
+            .split_whitespace()
+            .map(String::from);
+        assert!(Args::parse_for(argv, &spec).is_ok());
+        let argv = "diagnose a b --trce t.jsonl".split_whitespace().map(String::from);
+        assert!(Args::parse_for(argv, &spec).unwrap_err().contains("unknown flag --trce"));
+    }
+
+    #[test]
+    fn spike_flags_configure_the_detector_with_contextual_errors() {
+        // Defaults: absolute report-only detector, no flags required.
+        assert!(spike_detector_from(&parsed("progressive a b")).is_ok());
+        assert!(spike_detector_from(&parsed("progressive a b --spike-sigma 2.5")).is_ok());
+        assert!(spike_detector_from(
+            &parsed("progressive a b --spike-sigma 2.5 --spike-window 6")
+        )
+        .is_ok());
+
+        let err =
+            spike_detector_from(&parsed("progressive a b --spike-window 6")).unwrap_err();
+        assert!(format!("{err:#}").contains("only makes sense with --spike-sigma"), "{err:#}");
+        let err =
+            spike_detector_from(&parsed("progressive a b --spike-sigma nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("positive number"), "{err:#}");
+        let err =
+            spike_detector_from(&parsed("progressive a b --spike-sigma -1")).unwrap_err();
+        assert!(format!("{err:#}").contains("positive number"), "{err:#}");
+        let err = spike_detector_from(&parsed("progressive a b --spike-sigma 2 --spike-window 1"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("at least"), "{err:#}");
     }
 }

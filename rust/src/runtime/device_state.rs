@@ -100,6 +100,12 @@ impl StageExec {
         &self.cfg_id
     }
 
+    /// Whether a lowered per-layer probe is bound (diagnostics drivers skip
+    /// layer stats for configs without one instead of erroring).
+    pub fn has_probe(&self) -> bool {
+        self.probe.is_some()
+    }
+
     pub(crate) fn train(&self) -> Result<&xla::PjRtLoadedExecutable> {
         self.train
             .as_deref()

@@ -124,10 +124,19 @@ impl Engine {
     /// once per stage entry, instead of a name format + path join + cache
     /// probe on every dispatch. Absent artifacts stay `None` and error only
     /// if that function is dispatched. The probe is deliberately excluded:
-    /// the driver never dispatches it, and compiling it per stage would be
-    /// pure waste (one-shot probe tools bind it separately).
+    /// a plain (diagnostics-off) driver never dispatches it, and compiling
+    /// it per stage would be pure waste — diagnostics-enabled drivers use
+    /// [`Engine::bind_stage_diag`] instead.
     pub fn bind_stage(&self, entry: &ConfigEntry, root: &Path) -> Result<StageExec> {
         self.bind_fns(entry, root, &["train", "chunk", "eval"])
+    }
+
+    /// [`Engine::bind_stage`] plus the per-layer probe, for drivers running
+    /// a diagnostics-enabled plan ([`crate::coordinator::RunPlan::diag`]).
+    /// Configs without a lowered probe artifact still bind (`probe` stays
+    /// `None`); the driver skips layer stats for them.
+    pub fn bind_stage_diag(&self, entry: &ConfigEntry, root: &Path) -> Result<StageExec> {
+        self.bind_fns(entry, root, &["train", "chunk", "eval", "probe"])
     }
 
     /// Bind only the named functions ("train" | "chunk" | "eval" | "probe"),

@@ -12,7 +12,7 @@
 //!   hash over stages/transitions, horizon, schedule, eval cadence, and
 //!   seed (name excluded: renaming a run must not repay its compute);
 //! - **trunks/**`<digest>.snap` — a shared trunk's fork snapshot in the
-//!   bit-exact `DPTDRV01` form ([`crate::checkpoint`]), keyed by
+//!   bit-exact `DPTDRV02` form ([`crate::checkpoint`]), keyed by
 //!   [`crate::coordinator::RunPlan::trunk_digest`] (prefix + fork step —
 //!   exactly the sweep's sharing rule);
 //! - **journal.log** — append-only job journal. A cache file is trusted
@@ -67,12 +67,13 @@ use crate::data::Corpus;
 use crate::metrics::Curve;
 use crate::runtime::{ConfigEntry, Manifest, ModelState, Tensor};
 
-const RUN_MAGIC: &[u8; 8] = b"DPTRUN01";
+const RUN_MAGIC: &[u8; 8] = b"DPTRUN02";
 /// Folded into every digest preimage; bump to invalidate all entries when
 /// the on-disk format or digest semantics change. v2: artifact manifests
 /// (length + content digest) on every journal line, salt pinning, refs
-/// lines for GC.
-pub const STORE_VERSION: u32 = 2;
+/// lines for GC. v3: per-layer diagnostics rows in run entries (`DPTRUN02`)
+/// and trunk snapshots (`DPTDRV02`).
+pub const STORE_VERSION: u32 = 3;
 
 /// 128-bit content digest of raw bytes (two independent FNV-1a-style
 /// lanes), hex-encoded to 32 chars. Not cryptographic — it keys a local
@@ -444,7 +445,7 @@ impl RunStore {
         self.trunks.get(digest).map(|(_, m)| m.clone())
     }
 
-    /// Persist a trunk fork snapshot (`DPTDRV01` via [`crate::checkpoint`]),
+    /// Persist a trunk fork snapshot (`DPTDRV02` via [`crate::checkpoint`]),
     /// then journal `trunk <digest> <ledger-total-bits> <len> <content>`.
     pub fn store_trunk(
         &mut self,
@@ -701,7 +702,8 @@ impl std::fmt::Debug for RunStore {
 // (shared by the on-disk store and the fabric wire: a `RunResult` shipped
 // over TCP is byte-identical to its cache-entry form)
 
-/// Serialize a completed run (`DPTRUN01`): curve, ledger, boundaries, final
+/// Serialize a completed run (`DPTRUN02`): curve, ledger, boundaries,
+/// per-layer diagnostics rows (empty unless the plan enabled them), final
 /// val loss, and optionally the final model state.
 pub fn write_run_entry(
     f: &mut impl Write,
@@ -714,6 +716,7 @@ pub fn write_run_entry(
     checkpoint::write_ledger(f, &result.ledger)?;
     checkpoint::write_curve_points(f, &result.curve.points)?;
     checkpoint::write_boundaries(f, &result.boundaries)?;
+    checkpoint::write_layer_stats(f, &result.layer_stats)?;
     match state {
         None => checkpoint::write_u64(f, 0)?,
         Some(s) => {
@@ -725,7 +728,7 @@ pub fn write_run_entry(
     Ok(())
 }
 
-/// Decode a `DPTRUN01` run entry, renaming its curve to `run_name`. With
+/// Decode a `DPTRUN02` run entry, renaming its curve to `run_name`. With
 /// `want_state` false the final-state section — the dominant bytes of an
 /// entry — is never decoded or allocated.
 pub fn read_run_entry(
@@ -744,6 +747,7 @@ pub fn read_run_entry(
     let mut curve = Curve::new(run_name);
     curve.points = checkpoint::read_curve_points(f)?;
     let boundaries = checkpoint::read_boundaries(f)?;
+    let layer_stats = checkpoint::read_layer_stats(f)?;
     let state = if !want_state {
         None
     } else {
@@ -756,7 +760,7 @@ pub fn read_run_entry(
             other => bail!("bad state-presence flag {other}"),
         }
     };
-    Ok((RunResult { curve, ledger, boundaries, final_val_loss }, state))
+    Ok((RunResult { curve, ledger, boundaries, final_val_loss, layer_stats }, state))
 }
 
 /// Positional (nameless) tensor list — the final-state section of a run
@@ -816,6 +820,15 @@ mod tests {
             ledger: FlopLedger { total: 2e6, tokens: 1280, stages: vec![("s".into(), 20, 2e6)] },
             boundaries: vec![(10, "l".into())],
             final_val_loss: 2.2,
+            layer_stats: vec![crate::diag::LayerStatsRow {
+                step: 20,
+                tokens: 1280,
+                layer: 0,
+                rung: "l".into(),
+                grad_norm: 0.5,
+                act_rms: 1.0,
+                uw_ratio: 0.005,
+            }],
         }
     }
 
@@ -863,6 +876,7 @@ mod tests {
         assert_eq!(loaded.curve.name, "mine", "loaded curve must take the requesting plan's name");
         assert_eq!(loaded.curve.points, res.curve.points);
         assert_eq!(loaded.boundaries, res.boundaries);
+        assert_eq!(loaded.layer_stats, res.layer_stats);
         assert_eq!(loaded.ledger.total.to_bits(), res.ledger.total.to_bits());
         assert_eq!(loaded.ledger.tokens, res.ledger.tokens);
         assert_eq!(loaded.ledger.stages, res.ledger.stages);
@@ -1099,6 +1113,7 @@ mod tests {
         let (back, bstate) = read_run_entry(&mut &bytes[..], "renamed", true).unwrap();
         assert_eq!(back.curve.name, "renamed");
         assert_eq!(back.curve.points, res.curve.points);
+        assert_eq!(back.layer_stats, res.layer_stats, "diagnostics rows must roundtrip");
         assert_eq!(back.ledger.total.to_bits(), res.ledger.total.to_bits());
         assert_eq!(bstate.unwrap().params[0].data, st.params[0].data);
         std::fs::remove_dir_all(tmp("unused")).ok();

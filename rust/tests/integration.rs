@@ -1187,3 +1187,171 @@ fn parallel_probe_pair_matches_serial() {
     .unwrap();
     assert_eq!(serial, par);
 }
+
+#[test]
+fn observer_hooks_fire_in_documented_order_for_arbitrary_ladders() {
+    // Observer-contract property: for ANY multi-stage plan, each boundary
+    // fires `on_pre_boundary`, then the PreBoundary eval, then the
+    // PostBoundary eval, then `on_boundary`; every `on_layer_stats` rides
+    // immediately after its eval at the same step; a boundary landing
+    // exactly on the eval cadence suppresses that step's Cadence eval
+    // (never a duplicate); `on_finish` fires exactly once, last.
+    use deep_progressive::coordinator::{
+        BoundaryEvent, EvalEvent, LadderRound, LayerStatsEvent, Observer, PreBoundaryEvent,
+        RunSummary, Signal,
+    };
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+
+    #[derive(Default)]
+    struct Recorder {
+        events: Vec<(String, usize)>,
+    }
+    impl Observer for Recorder {
+        fn on_eval(&mut self, ev: &EvalEvent<'_>) {
+            self.events.push((format!("eval:{:?}", ev.kind), ev.point.step));
+        }
+        fn on_layer_stats(&mut self, ev: &LayerStatsEvent<'_>) {
+            self.events.push(("layer_stats".into(), ev.step));
+        }
+        fn on_pre_boundary(&mut self, ev: &PreBoundaryEvent<'_>) -> Signal {
+            self.events.push(("pre_boundary".into(), ev.step));
+            Signal::Continue
+        }
+        fn on_boundary(&mut self, ev: &BoundaryEvent<'_>) {
+            self.events.push(("boundary".into(), ev.step));
+        }
+        fn on_finish(&mut self, _s: &RunSummary<'_>) {
+            self.events.push(("finish".into(), usize::MAX));
+        }
+    }
+
+    let rungs = ["gpt2.l0", "gpt2.l1", "gpt2.l3"];
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    deep_progressive::util::proptest::proptest(6, |g| {
+        let total = 30;
+        let eval_every = *g.choose(&[1usize, 2, 3, 5]);
+        let n_rounds = g.usize(1..3);
+        let mut rounds = Vec::new();
+        for r in 0..n_rounds {
+            // Disjoint windows keep boundaries strictly increasing; about
+            // half the cases snap a boundary up onto the eval cadence to
+            // exercise the boundary-hits-cadence edge.
+            let (lo, hi) = if r == 0 { (4, 12) } else { (18, 26) };
+            let mut at = g.usize(lo..hi);
+            if g.bool() {
+                at = at.div_ceil(eval_every) * eval_every;
+            }
+            rounds.push(LadderRound::new(rungs[r + 1], at, ExpandSpec::default()));
+        }
+        let plan = RunBuilder::ladder("obs-order", rungs[0], &rounds, total, sched)
+            .eval_every(eval_every)
+            .diag(g.bool())
+            .build()
+            .unwrap();
+        let boundaries: Vec<usize> =
+            (1..=plan.n_boundaries()).filter_map(|d| plan.boundary_at(d)).collect();
+
+        let rec = Rc::new(RefCell::new(Recorder::default()));
+        let mut d = RunDriver::new(trainer, plan).unwrap();
+        d.attach(Box::new(rec.clone()));
+        d.run_to_end().unwrap();
+        let _ = d.finish();
+        let events = rec.borrow().events.clone();
+
+        assert_eq!(events.last().map(|(k, _)| k.as_str()), Some("finish"));
+        assert_eq!(events.iter().filter(|(k, _)| k == "finish").count(), 1);
+        for (i, (k, step)) in events.iter().enumerate() {
+            if k == "layer_stats" {
+                let (pk, ps) = &events[i - 1];
+                assert!(pk.starts_with("eval:"), "layer_stats rode after '{pk}', not an eval");
+                assert_eq!(ps, step, "layer_stats step differs from its eval's");
+            }
+        }
+        let spans: Vec<&(String, usize)> =
+            events.iter().filter(|(k, _)| k != "layer_stats").collect();
+        for &b in &boundaries {
+            let i = spans
+                .iter()
+                .position(|(k, s)| k == "pre_boundary" && *s == b)
+                .unwrap_or_else(|| panic!("no pre_boundary at step {b}: {events:?}"));
+            assert_eq!((spans[i + 1].0.as_str(), spans[i + 1].1), ("eval:PreBoundary", b));
+            assert_eq!((spans[i + 2].0.as_str(), spans[i + 2].1), ("eval:PostBoundary", b));
+            assert_eq!((spans[i + 3].0.as_str(), spans[i + 3].1), ("boundary", b));
+            assert!(
+                !events.iter().any(|(k, s)| k == "eval:Cadence" && *s == b),
+                "cadence eval duplicated at boundary step {b}: {events:?}"
+            );
+        }
+        let fired: Vec<usize> =
+            events.iter().filter(|(k, _)| k == "boundary").map(|(_, s)| *s).collect();
+        assert_eq!(fired, boundaries, "boundaries fired out of order");
+    });
+}
+
+#[test]
+fn diagnostics_leave_curves_byte_equal_and_replay_bit_identical() {
+    // The diagnostics hard contract: probe dispatches never perturb the
+    // training trajectory (curves byte-equal diag on/off), the recorded
+    // per-layer rows are bit-identical at any worker count, and a warm
+    // store replays them without recomputation.
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let corpus = small_corpus();
+    let trainer = Trainer::new(&engine, &m, &corpus);
+    let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
+    let spec = ExpandSpec::default();
+    let plan = |diag: bool| {
+        RunBuilder::progressive("diagx", "gpt2.l0", "gpt2.l3", 40, 120, sched, spec)
+            .diag(diag)
+            .build()
+            .unwrap()
+    };
+
+    let off = run_plan(trainer, plan(false));
+    let on = run_plan(trainer, plan(true));
+    assert_eq!(off.curve.to_csv(), on.curve.to_csv(), "diagnostics perturbed the curve");
+    assert_eq!(off.final_val_loss.to_bits(), on.final_val_loss.to_bits());
+    assert_eq!(off.ledger.total.to_bits(), on.ledger.total.to_bits());
+    assert!(off.layer_stats.is_empty(), "diag-off run recorded layer stats");
+    assert!(
+        !on.layer_stats.is_empty(),
+        "diag run recorded no layer stats (probe artifacts missing?)"
+    );
+
+    // Any worker count reproduces the rows byte-for-byte (CSV form).
+    let par = {
+        let mut sweep = Sweep::new(trainer);
+        sweep.add(plan(true));
+        sweep.run_parallel(2).unwrap()
+    };
+    assert_eq!(
+        deep_progressive::diag::layer_stats_csv(&on.layer_stats),
+        deep_progressive::diag::layer_stats_csv(&par.results[0].layer_stats),
+        "layer stats diverged under parallel execution"
+    );
+
+    // Warm store: the rerun serves the run from cache, rows included.
+    let dir = std::env::temp_dir().join(format!("diag-replay-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let stored = || {
+        let mut sweep = Sweep::new(trainer);
+        sweep.store(&dir).unwrap();
+        sweep.add(plan(true));
+        sweep.run_parallel(1).unwrap()
+    };
+    let cold = stored();
+    let warm = stored();
+    assert_eq!(
+        cold.results[0].layer_stats,
+        warm.results[0].layer_stats,
+        "warm store replayed different layer stats"
+    );
+    assert_eq!(cold.results[0].layer_stats, on.layer_stats);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -356,6 +356,7 @@ fn prop_ladder_lowering_nests_and_deduplicates() {
                         ledger: FlopLedger { total, tokens: 0, stages: Vec::new() },
                         boundaries: Vec::new(),
                         final_val_loss: 0.0,
+                        layer_stats: Vec::new(),
                     },
                     None,
                 ))
