@@ -1,0 +1,554 @@
+//! Codec drift registry: every persisted or wire-visible byte format in
+//! the crate, pinned to committed golden fixtures under
+//! `rust/tests/golden/`. `repro audit --codecs` re-encodes the frozen
+//! fixture values through the *live* codecs and fails on any byte
+//! difference — a codec change without a version bump (and a deliberate
+//! re-bless) can no longer slip through as silent cache poisoning.
+//!
+//! The registry covers: the store digest itself, plan wire codec +
+//! canonical descriptions/digests, the fabric codec probe, `DPTDRV02`
+//! snapshots, `DPTRUN02` run entries, all fifteen `DPTNET` frame kinds,
+//! the store journal (raw append order and compacted form), and the JSONL
+//! trace schema. The `versions` check asserts the declared compatibility
+//! matrix (DESIGN.md §12): the wire protocol version, store version, and
+//! digest-salted formats move together.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::audit::fixtures;
+use crate::checkpoint;
+use crate::coordinator::RunPlan;
+use crate::exec::sched::JobOutput;
+use crate::fabric::wire::{self, Msg, WireItem, WireSnap};
+use crate::store::{self, ArtifactManifest, RunStore};
+use crate::util::json::Json;
+
+/// One registry check: a golden-fixture comparison, a round-trip, or the
+/// version matrix.
+#[derive(Debug, Clone)]
+pub struct CodecCheck {
+    pub name: String,
+    /// Fixture file name under the golden dir, when the check has one.
+    pub fixture: Option<String>,
+    pub ok: bool,
+    pub detail: String,
+}
+
+#[derive(Debug, Default)]
+pub struct CodecReport {
+    pub checks: Vec<CodecCheck>,
+    /// Fixture files (re)written when running with `--bless`.
+    pub blessed: Vec<PathBuf>,
+}
+
+impl CodecReport {
+    pub fn ok(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+struct Record {
+    name: &'static str,
+    file: &'static str,
+    encode: fn() -> Result<Vec<u8>>,
+    /// Decode the live bytes and re-encode; the driver compares the
+    /// result against the live bytes (codec self-consistency, independent
+    /// of the committed fixture).
+    roundtrip: Option<fn(&[u8]) -> Result<Vec<u8>>>,
+}
+
+const RECORDS: &[Record] = &[
+    Record { name: "digest", file: "digest.txt", encode: enc_digest, roundtrip: None },
+    Record { name: "plan", file: "plans.bin", encode: enc_plans, roundtrip: Some(rt_plans) },
+    Record { name: "plan-desc", file: "plan_desc.txt", encode: enc_plan_desc, roundtrip: None },
+    Record { name: "wire-probe", file: "probe.txt", encode: enc_probe, roundtrip: None },
+    Record {
+        name: "snapshot",
+        file: "snapshot.bin",
+        encode: enc_snapshot,
+        roundtrip: Some(rt_snapshot),
+    },
+    Record {
+        name: "run-entry",
+        file: "run_entry.bin",
+        encode: enc_run_entry,
+        roundtrip: Some(rt_run_entry),
+    },
+    Record { name: "journal", file: "journal.txt", encode: enc_journal, roundtrip: None },
+    Record { name: "trace", file: "trace.txt", encode: enc_trace, roundtrip: Some(rt_trace) },
+];
+
+fn enc_digest() -> Result<Vec<u8>> {
+    let all: Vec<u8> = (0u8..=255).collect();
+    let text = format!(
+        "{}\n{}\n{}\n",
+        store::digest_bytes(b""),
+        store::digest_str("dpt-audit: the quick brown fox jumps over the lazy dog"),
+        store::digest_bytes(&all),
+    );
+    Ok(text.into_bytes())
+}
+
+fn enc_plans() -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    for p in fixtures::all_plans()? {
+        p.write_to(&mut out)?;
+    }
+    Ok(out)
+}
+
+fn rt_plans(bytes: &[u8]) -> Result<Vec<u8>> {
+    let n = fixtures::all_plans()?.len();
+    let mut r = bytes;
+    let mut out = Vec::new();
+    for _ in 0..n {
+        RunPlan::read_from(&mut r)?.write_to(&mut out)?;
+    }
+    if !r.is_empty() {
+        bail!("{} trailing bytes after decoding {n} plans", r.len());
+    }
+    Ok(out)
+}
+
+fn enc_plan_desc() -> Result<Vec<u8>> {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for p in fixtures::all_plans()? {
+        let _ = writeln!(s, "plan {}", p.name());
+        let _ = writeln!(s, "desc {}", p.canonical_desc());
+        let _ = writeln!(s, "digest {}", p.digest());
+        for d in 1..=3usize {
+            let t = p.trunk_digest_at(d).unwrap_or_else(|| "-".to_string());
+            let _ = writeln!(s, "trunk@{d} {t}");
+        }
+    }
+    Ok(s.into_bytes())
+}
+
+fn enc_probe() -> Result<Vec<u8>> {
+    Ok(format!("{}\n", wire::codec_probe()?).into_bytes())
+}
+
+fn enc_snapshot() -> Result<Vec<u8>> {
+    let manifest = fixtures::manifest()?;
+    let entry = manifest.get("s")?;
+    let snap = fixtures::fixture_snapshot()?;
+    let mut out = Vec::new();
+    checkpoint::write_snapshot_to(&mut out, &snap, entry)?;
+    Ok(out)
+}
+
+fn rt_snapshot(bytes: &[u8]) -> Result<Vec<u8>> {
+    let manifest = fixtures::manifest()?;
+    let entry = manifest.get("s")?;
+    let snap = checkpoint::read_snapshot_from(&mut &bytes[..], entry)?;
+    let mut out = Vec::new();
+    checkpoint::write_snapshot_to(&mut out, &snap, entry)?;
+    Ok(out)
+}
+
+fn enc_run_entry() -> Result<Vec<u8>> {
+    let state = fixtures::fixture_state_t()?;
+    let mut out = Vec::new();
+    store::write_run_entry(&mut out, &fixtures::fixture_result(), Some(&state))?;
+    Ok(out)
+}
+
+fn rt_run_entry(bytes: &[u8]) -> Result<Vec<u8>> {
+    let (result, state) = store::read_run_entry(&mut &bytes[..], "audit-fixture", true)?;
+    let mut out = Vec::new();
+    store::write_run_entry(&mut out, &result, state.as_ref())?;
+    Ok(out)
+}
+
+static SCRATCH: AtomicU64 = AtomicU64::new(0);
+
+/// Unique scratch directory without consulting the clock (audit output
+/// must be a pure function of the source tree).
+fn scratch_dir() -> PathBuf {
+    let n = SCRATCH.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("dpt-audit-{}-{n}", std::process::id()))
+}
+
+/// Drive a live [`RunStore`] in a scratch dir through the canonical
+/// fixture sequence (salted open → trunk → run → refs → GC) and capture
+/// the journal text before and after compaction. Every byte of both
+/// journals is a deterministic function of the frozen fixtures.
+fn enc_journal() -> Result<Vec<u8>> {
+    let manifest = fixtures::manifest()?;
+    let entry = manifest.get("s")?;
+    let dir = scratch_dir();
+    let salt = fixtures::fixture_salt();
+    let result = (|| -> Result<String> {
+        let mut st = RunStore::open_salted(&dir, &salt)?;
+        st.store_trunk(&fixtures::fixture_trunk_key(), &fixtures::fixture_snapshot()?, entry)?;
+        st.store_run(&fixtures::fixture_run_key(), &fixtures::fixture_result(), None)?;
+        let run_keys = [fixtures::fixture_run_key()];
+        let trunk_keys = [fixtures::fixture_trunk_key()];
+        st.record_refs(
+            run_keys.iter().map(String::as_str),
+            trunk_keys.iter().map(String::as_str),
+        )?;
+        let jpath = dir.join(format!("ctx-{salt}")).join("journal.log");
+        let raw = std::fs::read_to_string(&jpath).context("reading raw journal")?;
+        st.gc(false, 1)?;
+        let compacted = std::fs::read_to_string(&jpath).context("reading compacted journal")?;
+        Ok(format!("-- journal --\n{raw}-- compacted --\n{compacted}"))
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    result.map(String::into_bytes)
+}
+
+fn enc_trace() -> Result<Vec<u8>> {
+    let mut s = String::new();
+    for line in fixtures::trace_lines() {
+        s.push_str(&line);
+        s.push('\n');
+    }
+    Ok(s.into_bytes())
+}
+
+fn rt_trace(bytes: &[u8]) -> Result<Vec<u8>> {
+    let text = std::str::from_utf8(bytes).context("trace fixture is not UTF-8")?;
+    let mut out = String::new();
+    for line in text.lines() {
+        crate::diag::validate_trace_line(line)?;
+        let j = Json::parse(line).map_err(|e| anyhow!("trace line does not parse: {e}"))?;
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    Ok(out.into_bytes())
+}
+
+// ---------------------------------------------------------- wire frames
+
+/// All fifteen `DPTNET` frame kinds with frozen field values. The encoded
+/// fixture is the *full frame* (length prefix + kind byte + payload), via
+/// the live [`wire::send_msg`].
+fn wire_msgs() -> Result<Vec<(&'static str, Msg)>> {
+    let manifest = fixtures::manifest()?;
+    let entry = manifest.get("s")?;
+    let snap = fixtures::fixture_snapshot()?;
+    let mut blob = Vec::new();
+    checkpoint::write_snapshot_to(&mut blob, &snap, entry)?;
+    let blob_manifest = ArtifactManifest::of(&blob);
+
+    let hello = Msg::Hello {
+        proto: wire::PROTOCOL_VERSION,
+        store_version: u64::from(store::STORE_VERSION),
+        salt: fixtures::fixture_salt(),
+        probe: store::digest_str("dpt-audit-probe"),
+        wid: "audit-worker-1".to_string(),
+        cache_cap: 4,
+        cached: vec![
+            (
+                store::digest_str("cache-key-1"),
+                ArtifactManifest { len: 128, digest: store::digest_str("blob-1") },
+            ),
+            (
+                store::digest_str("cache-key-2"),
+                ArtifactManifest { len: 256, digest: store::digest_str("blob-2") },
+            ),
+        ],
+    };
+    let assign_trunk = Msg::Assign {
+        slot: 0,
+        item: WireItem::Trunk {
+            job: 1,
+            plan: fixtures::fixture_plan()?,
+            fork_step: 12,
+            result_key: store::digest_str("trunk-result-key"),
+            snap: WireSnap::None,
+        },
+    };
+    let assign_run_cached = Msg::Assign {
+        slot: 1,
+        item: WireItem::Run {
+            job: 2,
+            plan_idx: 0,
+            plan: fixtures::fixture_plan()?,
+            snap: WireSnap::Cached {
+                key: store::digest_str("cache-key-1"),
+                manifest: blob_manifest.clone(),
+            },
+            keep_state: false,
+        },
+    };
+    let assign_run_inline = Msg::Assign {
+        slot: 2,
+        item: WireItem::Run {
+            job: 3,
+            plan_idx: 1,
+            plan: fixtures::fixture_plan()?,
+            snap: WireSnap::Inline {
+                key: store::digest_str("cache-key-2"),
+                manifest: blob_manifest,
+                snap: Arc::new(fixtures::fixture_snapshot()?),
+            },
+            keep_state: true,
+        },
+    };
+    let done_snapshot = Msg::Done {
+        slot: 0,
+        job: 1,
+        output: Ok(JobOutput::Snapshot(Box::new(fixtures::fixture_snapshot()?))),
+    };
+    let done_run = Msg::Done {
+        slot: 1,
+        job: 2,
+        output: Ok(JobOutput::Run {
+            plan_idx: 0,
+            result: Box::new(fixtures::fixture_result()),
+            state: Some(Box::new(fixtures::fixture_state_t()?)),
+        }),
+    };
+    Ok(vec![
+        ("hello", hello),
+        ("welcome", Msg::Welcome),
+        ("reject", Msg::Reject { reason: "context salt mismatch (audit fixture)".to_string() }),
+        ("ready", Msg::Ready { slot: 2 }),
+        ("assign_trunk", assign_trunk),
+        ("assign_run_cached", assign_run_cached),
+        ("assign_run_inline", assign_run_inline),
+        ("done_snapshot", done_snapshot),
+        ("done_run", done_run),
+        (
+            "done_err",
+            Msg::Done { slot: 2, job: 3, output: Err("engine exploded (audit fixture)".to_string()) },
+        ),
+        (
+            "snapmiss",
+            Msg::SnapMiss { slot: 1, job: 2, key: store::digest_str("cache-key-1") },
+        ),
+        ("heartbeat", Msg::Heartbeat),
+        ("ping", Msg::Ping { nonce: 0xDEAD_BEEF }),
+        ("pong", Msg::Pong { nonce: 0xDEAD_BEEF }),
+        ("shutdown", Msg::Shutdown { reason: "sweep complete (audit fixture)".to_string() }),
+    ])
+}
+
+// -------------------------------------------------------------- driver
+
+fn first_divergence(a: &[u8], b: &[u8]) -> usize {
+    let n = a.len().min(b.len());
+    (0..n).find(|&i| a[i] != b[i]).unwrap_or(n)
+}
+
+/// Compare live bytes against the committed fixture (or rewrite it under
+/// `--bless`). Failure messages are pointed: they carry the divergence
+/// offset and the re-bless procedure.
+fn check_bytes(
+    rep: &mut CodecReport,
+    name: &str,
+    golden: &Path,
+    file: &str,
+    live: &[u8],
+    bless: bool,
+) -> Result<()> {
+    let path = golden.join(file);
+    if bless {
+        std::fs::create_dir_all(golden)
+            .with_context(|| format!("creating golden dir {golden:?}"))?;
+        std::fs::write(&path, live).with_context(|| format!("blessing {path:?}"))?;
+        rep.blessed.push(path);
+        rep.checks.push(CodecCheck {
+            name: name.to_string(),
+            fixture: Some(file.to_string()),
+            ok: true,
+            detail: format!("blessed ({} bytes)", live.len()),
+        });
+        return Ok(());
+    }
+    let check = match std::fs::read(&path) {
+        Err(_) => CodecCheck {
+            name: name.to_string(),
+            fixture: Some(file.to_string()),
+            ok: false,
+            detail: format!(
+                "golden fixture missing: {path:?} — run `repro audit --codecs --bless` to \
+                 create it (only after verifying the codec change is intentional)"
+            ),
+        },
+        Ok(want) if want == live => CodecCheck {
+            name: name.to_string(),
+            fixture: Some(file.to_string()),
+            ok: true,
+            detail: format!("byte-stable ({} bytes)", live.len()),
+        },
+        Ok(want) => {
+            let off = first_divergence(&want, live);
+            CodecCheck {
+                name: name.to_string(),
+                fixture: Some(file.to_string()),
+                ok: false,
+                detail: format!(
+                    "byte drift at offset {off} (fixture {} bytes, live {} bytes) — codec \
+                     changed without a version bump? If intentional: bump the format's \
+                     version constant, update the DESIGN.md §12 compatibility matrix, and \
+                     re-bless with `repro audit --codecs --bless`",
+                    want.len(),
+                    live.len()
+                ),
+            }
+        }
+    };
+    rep.checks.push(check);
+    Ok(())
+}
+
+fn check_roundtrip(
+    rep: &mut CodecReport,
+    name: &str,
+    live: &[u8],
+    rt: fn(&[u8]) -> Result<Vec<u8>>,
+) {
+    let check = match rt(live) {
+        Err(e) => CodecCheck {
+            name: format!("{name}/roundtrip"),
+            fixture: None,
+            ok: false,
+            detail: format!("decode of live bytes failed: {e:#}"),
+        },
+        Ok(re) if re == live => CodecCheck {
+            name: format!("{name}/roundtrip"),
+            fixture: None,
+            ok: true,
+            detail: "decode → re-encode is byte-identical".to_string(),
+        },
+        Ok(re) => {
+            let off = first_divergence(live, &re);
+            CodecCheck {
+                name: format!("{name}/roundtrip"),
+                fixture: None,
+                ok: false,
+                detail: format!(
+                    "decode → re-encode diverges at offset {off} ({} vs {} bytes): the \
+                     decoder and encoder disagree about this format",
+                    live.len(),
+                    re.len()
+                ),
+            }
+        }
+    };
+    rep.checks.push(check);
+}
+
+/// The declared compatibility matrix: these constants move together. A
+/// bump to any one of them without the others fails here with the full
+/// table, so version skew is caught at audit time, not at handshake time
+/// in production.
+fn check_versions(rep: &mut CodecReport) -> Result<()> {
+    let snap_bytes = enc_snapshot()?;
+    let run_bytes = enc_run_entry()?;
+    let plan = fixtures::fixture_plan()?;
+    let expect_trunk = plan
+        .share_key_upto(1)
+        .map(|k| store::digest_str(&format!("trunkv1|{k}")))
+        .unwrap_or_default();
+    // Coupling rules (see DESIGN.md §12): the handshake carries proto +
+    // store version + codec probe; wire and store versions are bumped in
+    // lockstep so a cached artifact can never cross a protocol boundary.
+    let rows: Vec<(&str, String, String)> = vec![
+        ("wire protocol (DPTNET)", wire::PROTOCOL_VERSION.to_string(), "3".to_string()),
+        ("store journal (DPTSTORE)", store::STORE_VERSION.to_string(), "3".to_string()),
+        ("wire magic", String::from_utf8_lossy(&wire::MAGIC).into_owned(), "DPTNET01".to_string()),
+        (
+            "snapshot magic",
+            String::from_utf8_lossy(&snap_bytes[..8]).into_owned(),
+            "DPTDRV02".to_string(),
+        ),
+        (
+            "run-entry magic",
+            String::from_utf8_lossy(&run_bytes[..8]).into_owned(),
+            "DPTRUN02".to_string(),
+        ),
+        (
+            "wire/store lockstep",
+            format!("{}={}", wire::PROTOCOL_VERSION, store::STORE_VERSION),
+            format!("{0}={0}", store::STORE_VERSION),
+        ),
+        ("plan desc prefix", plan.canonical_desc().chars().take(7).collect(), "planv2|".to_string()),
+        ("trunk digest = trunkv1|share_key@1", plan.trunk_digest(), expect_trunk),
+    ];
+
+    let bad: Vec<String> = rows
+        .iter()
+        .filter(|(_, got, want)| got != want)
+        .map(|(what, got, want)| format!("{what}: live '{got}' != declared '{want}'"))
+        .collect();
+    let detail = if bad.is_empty() {
+        let table: Vec<String> =
+            rows.iter().map(|(what, got, _)| format!("{what}={got}")).collect();
+        table.join("; ")
+    } else {
+        format!(
+            "version matrix violated — {} (versions are bumped together; see DESIGN.md §12)",
+            bad.join("; ")
+        )
+    };
+    rep.checks.push(CodecCheck {
+        name: "versions".to_string(),
+        fixture: None,
+        ok: bad.is_empty(),
+        detail,
+    });
+    Ok(())
+}
+
+/// Run the full registry against `golden` (or re-bless it).
+pub fn run_codecs(golden: &Path, bless: bool) -> Result<CodecReport> {
+    let mut rep = CodecReport::default();
+    for rec in RECORDS {
+        let live = (rec.encode)()
+            .with_context(|| format!("encoding codec fixture '{}'", rec.name))?;
+        check_bytes(&mut rep, rec.name, golden, rec.file, &live, bless)?;
+        if let Some(rt) = rec.roundtrip {
+            check_roundtrip(&mut rep, rec.name, &live, rt);
+        }
+    }
+    let manifest = fixtures::manifest()?;
+    for (name, msg) in wire_msgs()? {
+        let mut live = Vec::new();
+        wire::send_msg(&mut live, &msg, &manifest)
+            .with_context(|| format!("encoding wire fixture '{name}'"))?;
+        let file = format!("wire_{name}.bin");
+        check_bytes(&mut rep, &format!("wire/{name}"), golden, &file, &live, bless)?;
+        let check = match wire::recv_msg(&mut &live[..], &manifest) {
+            Err(e) => CodecCheck {
+                name: format!("wire/{name}/roundtrip"),
+                fixture: None,
+                ok: false,
+                detail: format!("recv_msg failed on live frame: {e:#}"),
+            },
+            Ok(decoded) => {
+                let mut re = Vec::new();
+                wire::send_msg(&mut re, &decoded, &manifest)?;
+                if re == live {
+                    CodecCheck {
+                        name: format!("wire/{name}/roundtrip"),
+                        fixture: None,
+                        ok: true,
+                        detail: "recv → send is byte-identical".to_string(),
+                    }
+                } else {
+                    let off = first_divergence(&live, &re);
+                    CodecCheck {
+                        name: format!("wire/{name}/roundtrip"),
+                        fixture: None,
+                        ok: false,
+                        detail: format!("recv → send diverges at offset {off}"),
+                    }
+                }
+            }
+        };
+        rep.checks.push(check);
+    }
+    check_versions(&mut rep)?;
+    Ok(rep)
+}

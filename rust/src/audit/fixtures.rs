@@ -1,0 +1,349 @@
+//! Deterministic fixture values shared by the codec drift registry and the
+//! order-permutation model checker. Every value here is frozen: the golden
+//! byte vectors under `rust/tests/golden/` are the serialized form of these
+//! fixtures, so editing any constant in this file is a codec-visible change
+//! and requires re-blessing the fixtures (`repro audit --codecs --bless`)
+//! plus a version bump per the DESIGN.md §12 compatibility matrix.
+//!
+//! All floats are exact binary fractions (0.5, 0.25, 0.0625, …) so their
+//! `Debug` renderings — which feed `canonical_desc` and the plan digests —
+//! are identical across formatting implementations, and their bit patterns
+//! are unambiguous in the committed fixtures.
+
+use anyhow::Result;
+
+use crate::checkpoint::DriverSnapshot;
+use crate::coordinator::{LadderRound, RunBuilder, RunPlan, RunResult};
+use crate::diag::LayerStatsRow;
+use crate::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
+use crate::flops::FlopLedger;
+use crate::metrics::{Curve, CurvePoint};
+use crate::runtime::{Manifest, ModelState, Tensor};
+use crate::schedule::Schedule;
+use crate::store::digest_str;
+use crate::util::json::Json;
+
+/// One manifest config body: an embedding plus `n_layer` 2×2 layers
+/// (mirrors the checkpoint/scheduler test fixture — small enough that
+/// snapshot fixtures stay a few hundred bytes).
+pub fn cfg_json(n_layer: usize) -> String {
+    let mut params = vec![
+        r#"{"name":"embed.tok","shape":[4,2],"init":"normal","std":0.02,
+           "muon":true,"decay":false,"fan_in":4,"fan_out":2}"#
+            .to_string(),
+    ];
+    let mut opt = vec![r#"{"name":"mom.embed.tok","shape":[4,2]}"#.to_string()];
+    for i in 0..n_layer {
+        params.push(format!(
+            r#"{{"name":"layer.{i}.w","shape":[2,2],"init":"normal","std":0.1,
+               "muon":true,"decay":true,"fan_in":2,"fan_out":2}}"#
+        ));
+        opt.push(format!(r#"{{"name":"mom.layer.{i}.w","shape":[2,2]}}"#));
+    }
+    format!(
+        r#"{{"model":{{"family":"gpt2","n_layer":{n_layer},"batch":1,"seq_len":4,"moe":null}},
+        "opt":{{"kind":"muon_nsgd"}},
+        "params":[{}],
+        "opt_state":[{}],
+        "param_count":8,"active_param_count":8,"chunk":8,"artifacts":{{}}}}"#,
+        params.join(","),
+        opt.join(",")
+    )
+}
+
+/// Manifest carrying the four fixture configs `s`/`t`/`u`/`v` (1–4 layers):
+/// enough rungs for every plan fixture and every model-check grid.
+pub fn manifest() -> Result<Manifest> {
+    let text = format!(
+        r#"{{"configs":{{"s":{},"t":{},"u":{},"v":{}}}}}"#,
+        cfg_json(1),
+        cfg_json(2),
+        cfg_json(3),
+        cfg_json(4)
+    );
+    Manifest::parse(&text, std::path::PathBuf::from("/tmp"))
+}
+
+/// Two-stage progressive plan — exercises the `Expand` transition with a
+/// non-default spec on every axis.
+pub fn fixture_plan() -> Result<RunPlan> {
+    let sched = Schedule::Constant { peak: 0.5, warmup_frac: 0.25 };
+    let spec = ExpandSpec {
+        strategy: Strategy::Copying(CopyOrder::Inter),
+        insertion: Insertion::Top,
+        os_policy: OsPolicy::Copy,
+        seed: 9,
+    };
+    RunBuilder::progressive("audit-fixture", "s", "t", 12, 48, sched, spec)
+        .eval_every(6)
+        .eval_batches(2)
+        .seed(11)
+        .build()
+}
+
+/// Three-round ladder — every strategy tag family, a Wsd schedule, and
+/// non-zero re-warm segments.
+pub fn fixture_ladder() -> Result<RunPlan> {
+    let rounds = [
+        LadderRound::new(
+            "t",
+            8,
+            ExpandSpec {
+                strategy: Strategy::Zero,
+                insertion: Insertion::Bottom,
+                os_policy: OsPolicy::Inherit,
+                seed: 3,
+            },
+        )
+        .rewarm(2),
+        LadderRound::new(
+            "u",
+            16,
+            ExpandSpec {
+                strategy: Strategy::Random,
+                insertion: Insertion::Bottom,
+                os_policy: OsPolicy::Inherit,
+                seed: 5,
+            },
+        ),
+        LadderRound::new(
+            "v",
+            24,
+            ExpandSpec {
+                strategy: Strategy::CopyingZeroL,
+                insertion: Insertion::Top,
+                os_policy: OsPolicy::Reset,
+                seed: 7,
+            },
+        )
+        .rewarm(4),
+    ];
+    let sched = Schedule::Wsd { peak: 0.25, warmup_frac: 0.125, decay_frac: 0.25 };
+    RunBuilder::ladder("audit-ladder", "s", &rounds, 40, sched)
+        .eval_every(4)
+        .eval_batches(2)
+        .seed(13)
+        .build()
+}
+
+/// Optimizer-switch plan with diagnostics on — the `SwitchOptimizer`
+/// transition tag and the `diag` flag both change the byte stream.
+pub fn fixture_switch() -> Result<RunPlan> {
+    RunBuilder::new("audit-switch")
+        .start("s")
+        .then_switch_optimizer_at(10, "s")
+        .total_steps(20)
+        .schedule(Schedule::Cosine { peak: 0.125, warmup_frac: 0.25 })
+        .eval_every(5)
+        .eval_batches(1)
+        .seed(19)
+        .diag(true)
+        .build()
+}
+
+/// Single-stage fixed plan — the minimal stage list and the Linear tag.
+pub fn fixture_fixed() -> Result<RunPlan> {
+    let sched = Schedule::Linear { peak: 0.5, warmup_frac: 0.125 };
+    RunBuilder::fixed("audit-fixed", "s", 16, sched)
+        .eval_every(8)
+        .eval_batches(1)
+        .seed(29)
+        .build()
+}
+
+/// Every plan fixture, in registry order (the `plans.bin` golden vector is
+/// their concatenated wire form).
+pub fn all_plans() -> Result<Vec<RunPlan>> {
+    Ok(vec![fixture_plan()?, fixture_ladder()?, fixture_switch()?, fixture_fixed()?])
+}
+
+/// Model state laid out for config `s` (1 layer): params `embed.tok` [4,2]
+/// + `layer.0.w` [2,2], momenta to match.
+pub fn fixture_state() -> Result<ModelState> {
+    Ok(ModelState {
+        params: vec![
+            Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32 * 0.125 - 0.5).collect())?,
+            Tensor::from_vec(&[2, 2], (0..4).map(|i| 0.25 * (i + 1) as f32).collect())?,
+        ],
+        opt: vec![
+            Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32 * 0.0625).collect())?,
+            Tensor::from_vec(&[2, 2], (0..4).map(|i| 1.0 - 0.125 * i as f32).collect())?,
+        ],
+    })
+}
+
+/// Model state laid out for config `t` (2 layers).
+pub fn fixture_state_t() -> Result<ModelState> {
+    Ok(ModelState {
+        params: vec![
+            Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32 * 0.125 - 0.25).collect())?,
+            Tensor::from_vec(&[2, 2], vec![0.5, 0.25, -0.25, -0.5])?,
+            Tensor::from_vec(&[2, 2], (0..4).map(|i| 0.0625 * i as f32).collect())?,
+        ],
+        opt: vec![
+            Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32 * 0.03125).collect())?,
+            Tensor::from_vec(&[2, 2], vec![0.75, 0.5, 0.25, 0.0])?,
+            Tensor::from_vec(&[2, 2], (0..4).map(|i| -0.125 * i as f32).collect())?,
+        ],
+    })
+}
+
+/// A trunk fork snapshot in config `s` at step 12 — the `DPTDRV02` fixture.
+pub fn fixture_snapshot() -> Result<DriverSnapshot> {
+    let mut curve = Curve::new("audit-trunk");
+    curve.push(CurvePoint {
+        step: 6,
+        tokens: 384,
+        flops: 524288.0,
+        train_loss: 2.75,
+        val_loss: 2.875,
+        lr: 0.5,
+    });
+    curve.push(CurvePoint {
+        step: 12,
+        tokens: 768,
+        flops: 1048576.0,
+        train_loss: 2.5,
+        val_loss: 2.625,
+        lr: 0.5,
+    });
+    Ok(DriverSnapshot {
+        run_name: "audit-trunk".into(),
+        cfg_id: "s".into(),
+        step: 12,
+        stage_idx: 0,
+        data_seed: 7,
+        train_windows: 24,
+        val_windows: 4,
+        image_samples: 0,
+        last_train_loss: 2.5,
+        ledger: FlopLedger {
+            total: 1048576.0,
+            tokens: 768,
+            stages: vec![("s".into(), 12, 1048576.0)],
+        },
+        curve,
+        boundaries: Vec::new(),
+        layer_stats: vec![LayerStatsRow {
+            step: 12,
+            tokens: 768,
+            layer: 0,
+            rung: "s".into(),
+            grad_norm: 0.75,
+            act_rms: 1.5,
+            uw_ratio: 0.25,
+        }],
+        state: fixture_state()?,
+    })
+}
+
+/// A finished progressive run (`audit-fixture` shape) — the `DPTRUN02`
+/// fixture, with the final state in config `t`.
+pub fn fixture_result() -> RunResult {
+    let mut curve = Curve::new("audit-fixture");
+    curve.push(CurvePoint {
+        step: 24,
+        tokens: 1536,
+        flops: 2097152.0,
+        train_loss: 2.375,
+        val_loss: 2.5,
+        lr: 0.5,
+    });
+    curve.push(CurvePoint {
+        step: 48,
+        tokens: 3072,
+        flops: 4194304.0,
+        train_loss: 2.125,
+        val_loss: 2.25,
+        lr: 0.5,
+    });
+    RunResult {
+        curve,
+        ledger: FlopLedger {
+            total: 4194304.0,
+            tokens: 3072,
+            stages: vec![("s".into(), 12, 1048576.0), ("t".into(), 36, 3145728.0)],
+        },
+        boundaries: vec![(12, "t".into())],
+        final_val_loss: 2.25,
+        layer_stats: vec![
+            LayerStatsRow {
+                step: 24,
+                tokens: 1536,
+                layer: 0,
+                rung: "t".into(),
+                grad_norm: 0.5,
+                act_rms: 1.25,
+                uw_ratio: 0.125,
+            },
+            LayerStatsRow {
+                step: 24,
+                tokens: 1536,
+                layer: 1,
+                rung: "t".into(),
+                grad_norm: 0.625,
+                act_rms: 1.375,
+                uw_ratio: 0.1875,
+            },
+        ],
+    }
+}
+
+/// The JSONL trace-schema fixture: one line per event kind, rendered by the
+/// live [`Json`] serializer with `ts_us` pinned to 0 (the one field a real
+/// sink derives from the wall clock). Each line must pass
+/// [`crate::diag::validate_trace_line`].
+pub fn trace_lines() -> Vec<String> {
+    let obj = |fields: &[(&str, Json)]| {
+        let mut m = std::collections::BTreeMap::new();
+        for (k, v) in fields {
+            m.insert((*k).to_string(), v.clone());
+        }
+        Json::Obj(m).to_string()
+    };
+    vec![
+        obj(&[
+            ("kind", Json::Str("layer_stats".into())),
+            ("ts_us", Json::Num(0.0)),
+            ("run", Json::Str("audit-fixture".into())),
+            ("cfg", Json::Str("t".into())),
+            ("step", Json::Num(24.0)),
+            ("rows", Json::Num(2.0)),
+        ]),
+        obj(&[
+            ("kind", Json::Str("boundary".into())),
+            ("ts_us", Json::Num(0.0)),
+            ("run", Json::Str("audit-fixture".into())),
+            ("step", Json::Num(12.0)),
+            ("from", Json::Str("s".into())),
+            ("to", Json::Str("t".into())),
+            ("pre_val_loss", Json::Num(2.625)),
+            ("post_val_loss", Json::Num(2.5)),
+        ]),
+        obj(&[
+            ("kind", Json::Str("run_finish".into())),
+            ("ts_us", Json::Num(0.0)),
+            ("run", Json::Str("audit-fixture".into())),
+            ("steps", Json::Num(48.0)),
+            ("final_val_loss", Json::Num(2.25)),
+        ]),
+    ]
+}
+
+/// Context-salt stand-in for the journal fixture: a fixed digest, not a
+/// live [`crate::store::RunStore::context_salt`] (which covers the full
+/// manifest Debug form — too wide a net for a codec fixture; the salt's
+/// own derivation is covered by the version-matrix check instead).
+pub fn fixture_salt() -> String {
+    digest_str("dpt-audit-context")
+}
+
+/// Store key the journal fixture trunk is filed under.
+pub fn fixture_trunk_key() -> String {
+    digest_str("audit-trunk-key")
+}
+
+/// Store key the journal fixture run is filed under.
+pub fn fixture_run_key() -> String {
+    digest_str("audit-run-key")
+}

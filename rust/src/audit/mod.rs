@@ -1,0 +1,231 @@
+//! Contract-audit subsystem (`repro audit`): static enforcement of the
+//! determinism contracts the rest of the crate merely documents.
+//!
+//! Three passes, all offline and dependency-free:
+//!
+//! - [`lint`] — line-level determinism lints over the source tree
+//!   (unordered maps in digest paths, panics in hot paths, wall-clock or
+//!   lossy float formatting in codec paths, `as f32` in schedule math,
+//!   bare `#[allow]`s), suppressable only by inventoried inline
+//!   `// audit:allow(<lint>): <reason>` annotations.
+//! - [`codecs`] — golden-vector drift detection for every persisted/wire
+//!   byte format, plus the version compatibility matrix.
+//! - [`model_check`] — exhaustive completion-order permutation checking
+//!   of the sweep scheduler on small grids.
+//!
+//! The catalog, the fixture policy, and the version matrix are documented
+//! in DESIGN.md §12 ("Static contracts").
+
+pub mod codecs;
+pub mod fixtures;
+pub mod lint;
+pub mod model_check;
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+pub struct AuditOptions {
+    /// Source root the lints scan (normally `rust/src`).
+    pub src_dir: PathBuf,
+    /// Golden fixture directory (normally `rust/tests/golden`).
+    pub golden_dir: PathBuf,
+    pub lints: bool,
+    pub codecs: bool,
+    pub model_check: bool,
+    /// Rewrite the golden fixtures from the live codecs instead of
+    /// checking against them.
+    pub bless: bool,
+    /// Max interleavings enumerated per model-check grid before falling
+    /// back to sampling.
+    pub budget: usize,
+    /// Random orders sampled per grid when enumeration exceeds `budget`.
+    pub sample: usize,
+    pub seed: u64,
+}
+
+impl Default for AuditOptions {
+    fn default() -> AuditOptions {
+        AuditOptions {
+            src_dir: PathBuf::from("src"),
+            golden_dir: PathBuf::from("tests/golden"),
+            lints: true,
+            codecs: true,
+            model_check: true,
+            bless: false,
+            budget: 2000,
+            sample: 64,
+            seed: 17,
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct AuditReport {
+    pub lints: Option<lint::LintReport>,
+    pub codecs: Option<codecs::CodecReport>,
+    pub model_check: Option<model_check::ModelCheckReport>,
+}
+
+impl AuditReport {
+    pub fn ok(&self) -> bool {
+        self.lints.as_ref().is_none_or(|l| l.ok())
+            && self.codecs.as_ref().is_none_or(|c| c.ok())
+            && self.model_check.as_ref().is_none_or(|m| m.ok())
+    }
+
+    /// Human-readable report, one section per pass.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        if let Some(l) = &self.lints {
+            let used = l.allows.iter().filter(|a| a.used).count();
+            let _ = writeln!(
+                s,
+                "== determinism lints ==\n  {} files scanned, {} finding(s), {} allow(s) \
+                 ({} used)",
+                l.files_scanned,
+                l.findings.len(),
+                l.allows.len(),
+                used
+            );
+            for f in &l.findings {
+                let _ = writeln!(s, "  FAIL {}:{} [{}] {}", f.file, f.line, f.lint, f.excerpt);
+            }
+            for a in &l.allows {
+                let _ = writeln!(
+                    s,
+                    "  allow {}:{} [{}]{} — {}",
+                    a.file,
+                    a.line,
+                    a.lint,
+                    if a.used { "" } else { " (unused)" },
+                    a.reason
+                );
+            }
+        }
+        if let Some(c) = &self.codecs {
+            let _ = writeln!(
+                s,
+                "== codec golden vectors ==\n  {} check(s), {} blessed",
+                c.checks.len(),
+                c.blessed.len()
+            );
+            for ch in &c.checks {
+                let fixture = ch.fixture.as_deref().unwrap_or("-");
+                let status = if ch.ok { "ok  " } else { "FAIL" };
+                let _ = writeln!(s, "  {status} {} ({fixture}): {}", ch.name, ch.detail);
+            }
+        }
+        if let Some(m) = &self.model_check {
+            let _ = writeln!(s, "== scheduler order-permutation model check ==");
+            for g in &m.grids {
+                let status = if g.ok { "ok  " } else { "FAIL" };
+                let _ = writeln!(s, "  {status} {} ({} jobs): {}", g.name, g.jobs, g.detail);
+            }
+        }
+        let _ = writeln!(s, "audit: {}", if self.ok() { "PASS" } else { "FAIL" });
+        s
+    }
+
+    /// Machine-readable report (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("ok".to_string(), Json::Bool(self.ok()));
+        if let Some(l) = &self.lints {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("ok".to_string(), Json::Bool(l.ok()));
+            o.insert("files_scanned".to_string(), Json::Num(l.files_scanned as f64));
+            let findings = l
+                .findings
+                .iter()
+                .map(|f| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("file".to_string(), Json::Str(f.file.clone()));
+                    m.insert("line".to_string(), Json::Num(f.line as f64));
+                    m.insert("lint".to_string(), Json::Str(f.lint.clone()));
+                    m.insert("excerpt".to_string(), Json::Str(f.excerpt.clone()));
+                    Json::Obj(m)
+                })
+                .collect();
+            o.insert("findings".to_string(), Json::Arr(findings));
+            let allows = l
+                .allows
+                .iter()
+                .map(|a| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("file".to_string(), Json::Str(a.file.clone()));
+                    m.insert("line".to_string(), Json::Num(a.line as f64));
+                    m.insert("lint".to_string(), Json::Str(a.lint.clone()));
+                    m.insert("reason".to_string(), Json::Str(a.reason.clone()));
+                    m.insert("used".to_string(), Json::Bool(a.used));
+                    Json::Obj(m)
+                })
+                .collect();
+            o.insert("allows".to_string(), Json::Arr(allows));
+            root.insert("lints".to_string(), Json::Obj(o));
+        }
+        if let Some(c) = &self.codecs {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("ok".to_string(), Json::Bool(c.ok()));
+            let checks = c
+                .checks
+                .iter()
+                .map(|ch| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("name".to_string(), Json::Str(ch.name.clone()));
+                    let fixture = match &ch.fixture {
+                        Some(f) => Json::Str(f.clone()),
+                        None => Json::Null,
+                    };
+                    m.insert("fixture".to_string(), fixture);
+                    m.insert("ok".to_string(), Json::Bool(ch.ok));
+                    m.insert("detail".to_string(), Json::Str(ch.detail.clone()));
+                    Json::Obj(m)
+                })
+                .collect();
+            o.insert("checks".to_string(), Json::Arr(checks));
+            root.insert("codecs".to_string(), Json::Obj(o));
+        }
+        if let Some(mc) = &self.model_check {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("ok".to_string(), Json::Bool(mc.ok()));
+            let grids = mc
+                .grids
+                .iter()
+                .map(|g| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("name".to_string(), Json::Str(g.name.to_string()));
+                    m.insert("jobs".to_string(), Json::Num(g.jobs as f64));
+                    m.insert("explored".to_string(), Json::Num(g.explored as f64));
+                    m.insert("exhaustive".to_string(), Json::Bool(g.exhaustive));
+                    m.insert("ok".to_string(), Json::Bool(g.ok));
+                    m.insert("fingerprint".to_string(), Json::Str(g.fingerprint.clone()));
+                    m.insert("detail".to_string(), Json::Str(g.detail.clone()));
+                    Json::Obj(m)
+                })
+                .collect();
+            o.insert("grids".to_string(), Json::Arr(grids));
+            root.insert("model_check".to_string(), Json::Obj(o));
+        }
+        Json::Obj(root)
+    }
+}
+
+/// Run the selected audit passes.
+pub fn run(opts: &AuditOptions) -> Result<AuditReport> {
+    let mut report = AuditReport::default();
+    if opts.lints {
+        report.lints = Some(lint::scan_dir(&opts.src_dir)?);
+    }
+    if opts.codecs {
+        report.codecs = Some(codecs::run_codecs(&opts.golden_dir, opts.bless)?);
+    }
+    if opts.model_check {
+        report.model_check =
+            Some(model_check::run_model_check(opts.budget, opts.sample, opts.seed)?);
+    }
+    Ok(report)
+}

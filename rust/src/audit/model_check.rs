@@ -1,0 +1,417 @@
+//! Order-permutation model checking for [`crate::exec::sched::Scheduler`].
+//!
+//! The scheduler promises order-independence: whatever order in-flight
+//! jobs *complete* in, the assembled [`SweepOutcome`] is identical —
+//! canonical per-plan assembly, identical FLOP totals, and every fork
+//! snapshot released by the time the sweep drains. Unit tests exercise a
+//! couple of adversarial orders by hand; this checker proves the property
+//! for small grids by driving an in-process scheduler (no engines, no
+//! store — synthetic outputs that are pure functions of the job) through
+//! **every** completion-order interleaving, comparing a byte-level
+//! fingerprint of each outcome. Grids whose interleaving count exceeds
+//! the budget fall back to a seeded bounded random sample and are
+//! reported as non-exhaustive.
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::DriverSnapshot;
+use crate::coordinator::{LadderRound, RunBuilder, RunPlan, RunResult, SweepOutcome};
+use crate::exec::sched::{JobOutput, Scheduler, WorkItem};
+use crate::exec::JobGraph;
+use crate::expansion::{CopyOrder, ExpandSpec, Insertion, OsPolicy, Strategy};
+use crate::flops::FlopLedger;
+use crate::metrics::{Curve, CurvePoint};
+use crate::runtime::{Manifest, ModelState};
+use crate::schedule::Schedule;
+use crate::store::digest_bytes;
+
+/// Result of model-checking one grid of plans.
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub name: &'static str,
+    pub jobs: usize,
+    /// Interleavings actually simulated.
+    pub explored: usize,
+    /// Whether `explored` covers *every* completion order.
+    pub exhaustive: bool,
+    pub ok: bool,
+    /// Outcome fingerprint shared by all explored interleavings (when ok).
+    pub fingerprint: String,
+    pub detail: String,
+}
+
+#[derive(Debug, Default)]
+pub struct ModelCheckReport {
+    pub grids: Vec<GridResult>,
+}
+
+impl ModelCheckReport {
+    pub fn ok(&self) -> bool {
+        self.grids.iter().all(|g| g.ok)
+    }
+}
+
+// ------------------------------------------------------------ simulation
+
+/// Synthetic job output: a pure function of the work item, so two
+/// interleavings that dispatch the same job always feed the scheduler the
+/// same bytes — any outcome divergence is the scheduler's fault.
+fn synth_output(item: &WorkItem) -> JobOutput {
+    match item {
+        WorkItem::Trunk { job, plan, fork_step, .. } => {
+            let stage_idx =
+                plan.stages().iter().rposition(|s| s.from_step < *fork_step).unwrap_or(0);
+            let cfg_id = plan.stages()[stage_idx].cfg_id.clone();
+            let j = *job as u64;
+            let ledger = FlopLedger {
+                total: 1024.0 * (j as f64 + 1.0),
+                tokens: 64 * (j + 1),
+                stages: vec![(cfg_id.clone(), *fork_step, 1024.0 * (j as f64 + 1.0))],
+            };
+            let snap = DriverSnapshot {
+                run_name: plan.name().to_string(),
+                cfg_id,
+                step: *fork_step,
+                stage_idx,
+                data_seed: j,
+                train_windows: 0,
+                val_windows: 0,
+                image_samples: 0,
+                last_train_loss: 2.0 + j as f32 * 0.125,
+                ledger,
+                curve: Curve::new(plan.name()),
+                boundaries: Vec::new(),
+                layer_stats: Vec::new(),
+                state: ModelState { params: Vec::new(), opt: Vec::new() },
+            };
+            JobOutput::Snapshot(Box::new(snap))
+        }
+        WorkItem::Run { plan_idx, plan, .. } => {
+            let pi = *plan_idx as u64;
+            let loss = 2.0 + pi as f32 * 0.0625;
+            let mut curve = Curve::new(plan.name());
+            let point = CurvePoint {
+                step: plan.total_steps(),
+                tokens: 64 * (pi + 1),
+                flops: 4096.0 * (pi as f64 + 1.0),
+                train_loss: loss,
+                val_loss: loss,
+                lr: 0.5,
+            };
+            curve.push(point);
+            let boundaries: Vec<(usize, String)> = plan
+                .stages()
+                .iter()
+                .skip(1)
+                .map(|s| (s.from_step, s.cfg_id.clone()))
+                .collect();
+            let result = RunResult {
+                curve,
+                ledger: FlopLedger {
+                    total: 4096.0 * (pi as f64 + 1.0),
+                    tokens: 64 * (pi + 1),
+                    stages: vec![(plan.stages()[0].cfg_id.clone(), plan.total_steps(), 4096.0)],
+                },
+                boundaries,
+                final_val_loss: loss,
+                layer_stats: Vec::new(),
+            };
+            JobOutput::Run { plan_idx: *plan_idx, result: Box::new(result), state: None }
+        }
+    }
+}
+
+/// Deterministic byte-level fingerprint of an assembled outcome, built
+/// from the checkpoint codec primitives so every float is captured
+/// bit-exactly.
+fn fingerprint(outcome: &SweepOutcome) -> Result<String> {
+    use crate::checkpoint::{
+        write_boundaries, write_curve_points, write_f32, write_f64, write_layer_stats,
+        write_ledger, write_str, write_u64,
+    };
+    let mut buf = Vec::new();
+    write_u64(&mut buf, outcome.results.len() as u64)?;
+    for r in &outcome.results {
+        write_str(&mut buf, &r.curve.name)?;
+        write_f32(&mut buf, r.final_val_loss)?;
+        write_ledger(&mut buf, &r.ledger)?;
+        write_curve_points(&mut buf, &r.curve.points)?;
+        write_boundaries(&mut buf, &r.boundaries)?;
+        write_layer_stats(&mut buf, &r.layer_stats)?;
+    }
+    for s in &outcome.final_states {
+        write_u64(&mut buf, u64::from(s.is_some()))?;
+    }
+    write_f64(&mut buf, outcome.executed_flops)?;
+    write_f64(&mut buf, outcome.shared_flops)?;
+    Ok(digest_bytes(&buf))
+}
+
+struct SimResult {
+    fingerprint: String,
+    /// Number of in-flight items at each completion decision — the radix
+    /// vector the odometer enumerates over.
+    radices: Vec<usize>,
+    /// The choice actually taken at each decision.
+    taken: Vec<usize>,
+}
+
+/// Drive one full sweep, choosing which in-flight job completes next via
+/// `choose(decision_idx, n_in_flight)`. Checks the drain invariants
+/// (no deadlock, zero live snapshots at the end) and fingerprints the
+/// assembled outcome.
+fn simulate(
+    manifest: &Manifest,
+    plans: &[RunPlan],
+    mut choose: impl FnMut(usize, usize) -> usize,
+) -> Result<SimResult> {
+    let graph = JobGraph::lower(plans.to_vec())?;
+    let (mut sched, _slots) = Scheduler::new(&graph, false, false, None)?;
+    let mut in_flight: Vec<WorkItem> = Vec::new();
+    let mut radices = Vec::new();
+    let mut taken = Vec::new();
+    let mut decision = 0usize;
+    loop {
+        while let Some(item) = sched.next_item(manifest, None)? {
+            in_flight.push(item);
+        }
+        if in_flight.is_empty() {
+            if sched.is_done() {
+                break;
+            }
+            bail!(
+                "scheduler deadlock: nothing ready or in flight after {decision} of {} \
+                 completions",
+                graph.jobs().len()
+            );
+        }
+        let pick = choose(decision, in_flight.len()).min(in_flight.len() - 1);
+        radices.push(in_flight.len());
+        taken.push(pick);
+        let item = in_flight.swap_remove(pick);
+        let job = item.job();
+        let output = synth_output(&item);
+        sched
+            .complete(job, output, manifest, None)
+            .with_context(|| format!("completing job {job} (decision {decision})"))?;
+        decision += 1;
+    }
+    let live = sched.live_snapshots();
+    if live != 0 {
+        bail!(
+            "snapshot leak: {live} fork snapshot(s) still retained after the sweep \
+             drained (order {taken:?}) — release accounting depends on completion order"
+        );
+    }
+    let outcome = sched.assemble()?;
+    Ok(SimResult { fingerprint: fingerprint(&outcome)?, radices, taken })
+}
+
+// ----------------------------------------------------------- enumeration
+
+/// Splitmix-style step for the bounded random sample.
+fn lcg_next(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Check one grid: exhaustive odometer enumeration up to `budget`
+/// interleavings, else a seeded sample of `sample` random orders.
+fn check_grid(
+    name: &'static str,
+    manifest: &Manifest,
+    plans: &[RunPlan],
+    budget: usize,
+    sample: usize,
+    seed: u64,
+    grid_idx: usize,
+) -> Result<GridResult> {
+    let jobs = JobGraph::lower(plans.to_vec())?.jobs().len();
+    let mut explored = 0usize;
+    let mut exhaustive = true;
+    let mut baseline: Option<SimResult> = None;
+    let mut failure: Option<String> = None;
+
+    let mut record = |sim: SimResult, failure: &mut Option<String>| {
+        if let Some(base) = &baseline {
+            if sim.fingerprint != base.fingerprint && failure.is_none() {
+                *failure = Some(format!(
+                    "outcome diverges across completion orders: order {:?} → {}, but \
+                     order {:?} → {}",
+                    base.taken, base.fingerprint, sim.taken, sim.fingerprint
+                ));
+            }
+        } else {
+            baseline = Some(sim);
+        }
+    };
+
+    // Odometer over the radix vector discovered during simulation: the
+    // prefix of choices is replayed, everything past it defaults to 0,
+    // and each run reports the radices it saw, which drives the carry.
+    let mut prefix: Vec<usize> = Vec::new();
+    loop {
+        let replay = prefix.clone();
+        let sim = match simulate(manifest, plans, |d, _n| replay.get(d).copied().unwrap_or(0)) {
+            Ok(sim) => sim,
+            Err(e) => {
+                if failure.is_none() {
+                    failure = Some(format!("order {prefix:?}: {e:#}"));
+                }
+                break;
+            }
+        };
+        explored += 1;
+        let radices = sim.radices.clone();
+        let mut choices = sim.taken.clone();
+        record(sim, &mut failure);
+        if failure.is_some() {
+            break;
+        }
+        if explored >= budget {
+            exhaustive = false;
+            break;
+        }
+        choices.resize(radices.len(), 0);
+        match (0..radices.len()).rev().find(|&k| choices[k] + 1 < radices[k]) {
+            None => break, // every interleaving visited
+            Some(k) => {
+                choices[k] += 1;
+                choices.truncate(k + 1);
+                prefix = choices;
+            }
+        }
+    }
+
+    // Budget exceeded: keep probing with a seeded random sample so large
+    // grids still get adversarial coverage (reported as non-exhaustive).
+    if !exhaustive && failure.is_none() {
+        let mut state = seed ^ (grid_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for _ in 0..sample {
+            let sim = simulate(manifest, plans, |_d, n| lcg_next(&mut state) as usize % n)?;
+            explored += 1;
+            record(sim, &mut failure);
+            if failure.is_some() {
+                break;
+            }
+        }
+    }
+
+    let ok = failure.is_none();
+    let fp = baseline.as_ref().map(|b| b.fingerprint.clone()).unwrap_or_default();
+    let detail = match failure {
+        Some(f) => f,
+        None if exhaustive => {
+            format!("all {explored} completion orders assemble identically")
+        }
+        None => format!(
+            "{explored} completion orders (budget-capped, incl. {sample} sampled) \
+             assemble identically — NOT exhaustive"
+        ),
+    };
+    Ok(GridResult { name, jobs, explored, exhaustive, ok, fingerprint: fp, detail })
+}
+
+// ----------------------------------------------------------------- grids
+
+fn spec(strategy: Strategy, insertion: Insertion, os_policy: OsPolicy, seed: u64) -> ExpandSpec {
+    ExpandSpec { strategy, insertion, os_policy, seed }
+}
+
+/// Two progressive plans sharing a stage-0 trunk: 3 jobs (1 trunk +
+/// 2 tails), the smallest grid with any interleaving freedom.
+fn grid_progressive_pair() -> Result<Vec<RunPlan>> {
+    let sched = Schedule::Constant { peak: 0.5, warmup_frac: 0.25 };
+    let sp = spec(Strategy::Copying(CopyOrder::Inter), Insertion::Top, OsPolicy::Copy, 9);
+    let mut plans = Vec::new();
+    for seed in [1u64, 2] {
+        let plan = RunBuilder::progressive("mc-pair", "s", "t", 8, 24, sched, sp)
+            .eval_every(4)
+            .eval_batches(1)
+            .seed(seed)
+            .build()?;
+        plans.push(plan);
+    }
+    Ok(plans)
+}
+
+/// The acceptance-gate grid: a 3-round ladder pair sharing two rounds, a
+/// 2-round ladder sharing one, and a standalone run — 6 jobs (a depth-2
+/// trunk chain, three tails at different depths, one independent job),
+/// 48 completion orders, all enumerated.
+fn grid_ladder_3round() -> Result<Vec<RunPlan>> {
+    let sched = Schedule::Constant { peak: 0.5, warmup_frac: 0.25 };
+    let a = spec(Strategy::Zero, Insertion::Bottom, OsPolicy::Inherit, 3);
+    let b = spec(Strategy::Random, Insertion::Bottom, OsPolicy::Inherit, 5);
+    let c = spec(Strategy::Copying(CopyOrder::Stack), Insertion::Top, OsPolicy::Copy, 7);
+    let d = spec(Strategy::CopyingZeroL, Insertion::Top, OsPolicy::Reset, 11);
+    let e = spec(Strategy::Copying(CopyOrder::Last), Insertion::Top, OsPolicy::Inherit, 13);
+    let ladder = |name: &str, rounds: &[LadderRound]| -> Result<RunPlan> {
+        RunBuilder::ladder(name, "s", rounds, 32, sched)
+            .eval_every(4)
+            .eval_batches(1)
+            .seed(5)
+            .build()
+    };
+    let p1 = ladder(
+        "mc-l1",
+        &[
+            LadderRound::new("t", 8, a),
+            LadderRound::new("u", 16, b),
+            LadderRound::new("v", 24, c),
+        ],
+    )?;
+    let p2 = ladder(
+        "mc-l2",
+        &[
+            LadderRound::new("t", 8, a),
+            LadderRound::new("u", 16, b),
+            LadderRound::new("v", 24, d),
+        ],
+    )?;
+    let p3 = ladder("mc-l3", &[LadderRound::new("t", 8, a), LadderRound::new("u", 16, e)])?;
+    let sched_f = Schedule::Constant { peak: 0.5, warmup_frac: 0.25 };
+    let p4 = RunBuilder::fixed("mc-f", "s", 32, sched_f)
+        .eval_every(4)
+        .eval_batches(1)
+        .seed(99)
+        .build()?;
+    Ok(vec![p1, p2, p3, p4])
+}
+
+/// Four independent progressive pairs: 12 jobs whose interleaving count
+/// dwarfs any budget — exercises the budget cap + sampled path.
+fn grid_wide() -> Result<Vec<RunPlan>> {
+    let sched = Schedule::Constant { peak: 0.5, warmup_frac: 0.25 };
+    let mut plans = Vec::new();
+    for i in 0..4u64 {
+        let sp = spec(Strategy::Random, Insertion::Bottom, OsPolicy::Inherit, 21 + i);
+        for j in 0..2u64 {
+            let name = format!("mc-w{i}");
+            let plan = RunBuilder::progressive(&name, "s", "t", 8, 24, sched, sp)
+                .eval_every(4)
+                .eval_batches(1)
+                .seed(100 + 10 * i + j)
+                .build()?;
+            plans.push(plan);
+        }
+    }
+    Ok(plans)
+}
+
+/// Run the model checker over all built-in grids.
+pub fn run_model_check(budget: usize, sample: usize, seed: u64) -> Result<ModelCheckReport> {
+    let manifest = crate::audit::fixtures::manifest()?;
+    let grids: [(&'static str, Vec<RunPlan>); 3] = [
+        ("progressive-pair", grid_progressive_pair()?),
+        ("ladder-3round", grid_ladder_3round()?),
+        ("wide-grid", grid_wide()?),
+    ];
+    let mut report = ModelCheckReport::default();
+    for (idx, (name, plans)) in grids.into_iter().enumerate() {
+        let grid = check_grid(name, &manifest, &plans, budget, sample, seed, idx)
+            .with_context(|| format!("model-checking grid '{name}'"))?;
+        report.grids.push(grid);
+    }
+    Ok(report)
+}

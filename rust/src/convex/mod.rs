@@ -109,6 +109,7 @@ pub struct SimResult {
 
 /// Paper §4.1 bound for progressive training (specialized to the last-iterate
 /// form; the Defazio-style last-iterate correction term is included).
+// audit:allow(bare-allow): the paper's bound takes every schedule/geometry parameter explicitly
 #[allow(clippy::too_many_arguments)]
 pub fn progressive_bound(
     problem: &ConvexProblem,

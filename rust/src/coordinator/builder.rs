@@ -141,6 +141,7 @@ impl RunPlan {
         for st in self.stages.iter().skip(1).rev() {
             if step >= st.from_step {
                 if st.rewarm_steps > 0 && step < st.from_step + st.rewarm_steps {
+                    // audit:allow(f32-narrowing): re-warm ramp fraction; boundary steps remain exact integers
                     return base * (step - st.from_step + 1) as f32 / st.rewarm_steps as f32;
                 }
                 return base;

@@ -117,6 +117,7 @@ fn derive_outcome(
 
 /// Run the two probes serially (interleaved on the caller's engine) and
 /// derive τ for a `production_steps` horizon.
+// audit:allow(bare-allow): probe entry points take the full hyperparameter surface by design
 #[allow(clippy::too_many_arguments)]
 pub fn probe_mixing_time(
     trainer: &Trainer,
@@ -178,6 +179,7 @@ struct FixedTick {
 /// own engine, the progressive probe on this thread with another, and the
 /// early-stop check runs each round on exactly the partial curves the serial
 /// path would see — the outcome is identical to [`probe_mixing_time`].
+// audit:allow(bare-allow): probe entry points take the full hyperparameter surface by design
 #[allow(clippy::too_many_arguments)]
 pub fn probe_mixing_time_parallel(
     manifest: &Manifest,

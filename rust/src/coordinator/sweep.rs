@@ -35,7 +35,7 @@
 //! counts each shared trunk once (what was actually dispatched) — cached or
 //! not, since trunk costs are journaled bit-exactly.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
@@ -200,7 +200,7 @@ impl<'a> Sweep<'a> {
         let plans = graph.plans();
         let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
             plans.iter().map(|_| None).collect();
-        let mut trunk_flops: HashMap<JobId, f64> = HashMap::new();
+        let mut trunk_flops: BTreeMap<JobId, f64> = BTreeMap::new();
 
         // Cache pre-pass (same resolution rule as the pool scheduler):
         // every completed run is served up front, so the group walk below
@@ -236,7 +236,7 @@ impl<'a> Sweep<'a> {
         node: &GroupSpec,
         parent_snap: Option<&DriverSnapshot>,
         per_plan: &mut Vec<Option<(RunResult, Option<ModelState>)>>,
-        trunk_flops: &mut HashMap<JobId, f64>,
+        trunk_flops: &mut BTreeMap<JobId, f64>,
     ) -> Result<()> {
         let plans = graph.plans();
         let Some(trunk_id) = node.trunk else {

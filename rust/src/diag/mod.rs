@@ -258,6 +258,7 @@ impl TraceSink {
     }
 
     pub fn from_writer(w: Box<dyn Write + Send>) -> TraceSink {
+        // audit:allow(wall-clock): ts_us is observability-only -- never digested, never replayed
         TraceSink { out: Arc::new(Mutex::new(w)), start: Instant::now() }
     }
 

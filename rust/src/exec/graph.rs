@@ -188,6 +188,7 @@ impl JobGraph {
         }
         let mut children = Vec::with_capacity(child_sets.len());
         for (k, idxs) in child_sets {
+            // audit:allow(hot-path-panic): grouping by share_key_upto(depth+1) implies the boundary exists
             let next_fork = plans[idxs[0]]
                 .boundary_at(depth + 1)
                 .expect("share_key_upto(depth+1) implies a boundary at depth+1");

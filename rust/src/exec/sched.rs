@@ -15,7 +15,7 @@
 //! coordinator's journal the single commit point even when a worker dies
 //! mid-report.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -79,21 +79,21 @@ pub(crate) struct Scheduler<'g> {
     /// Run jobs also materialize final states when a store will persist them.
     persist: bool,
     per_plan: Vec<Option<(RunResult, Option<ModelState>)>>,
-    trunk_flops: HashMap<JobId, f64>,
+    trunk_flops: BTreeMap<JobId, f64>,
     /// Published fork snapshots, held until the last pending consumer — a
     /// tail, or a deeper ladder trunk resuming from it — has *completed*
     /// (in-flight `WorkItem`s keep their own Arcs); `trunk_flops` outlives
     /// them for the final accounting. Peak host memory therefore matches
     /// the serial sweep's one-group-at-a-time profile, not #groups.
-    snapshots: HashMap<JobId, Arc<DriverSnapshot>>,
+    snapshots: BTreeMap<JobId, Arc<DriverSnapshot>>,
     /// Trunk job → number of its consumers not yet completed.
-    pending_consumers: HashMap<JobId, usize>,
+    pending_consumers: BTreeMap<JobId, usize>,
     /// Trunks satisfied from the store whose snapshot is still on disk:
     /// digest + pending-consumer count. The snapshot itself is materialized
     /// lazily, when the first pending consumer is dispatched — eagerly
     /// loading every cached trunk up front would hold #groups full model
     /// states at once.
-    cached_trunks: HashMap<JobId, (String, usize)>,
+    cached_trunks: BTreeMap<JobId, (String, usize)>,
     /// Jobs satisfied by the store pre-pass (never dispatched).
     satisfied: Vec<bool>,
     /// Jobs whose output has landed (pre-pass hits included).
@@ -118,8 +118,8 @@ impl<'g> Scheduler<'g> {
         }
         let mut per_plan: Vec<Option<(RunResult, Option<ModelState>)>> =
             graph.plans().iter().map(|_| None).collect();
-        let mut trunk_flops = HashMap::new();
-        let mut cached_trunks = HashMap::new();
+        let mut trunk_flops = BTreeMap::new();
+        let mut cached_trunks = BTreeMap::new();
         let mut satisfied = vec![false; jobs.len()];
         if let Some(s) = store {
             prefill_from_store(
@@ -145,8 +145,8 @@ impl<'g> Scheduler<'g> {
                 persist,
                 per_plan,
                 trunk_flops,
-                snapshots: HashMap::new(),
-                pending_consumers: HashMap::new(),
+                snapshots: BTreeMap::new(),
+                pending_consumers: BTreeMap::new(),
                 cached_trunks,
                 completed: satisfied.clone(),
                 satisfied,
@@ -159,6 +159,15 @@ impl<'g> Scheduler<'g> {
 
     pub(crate) fn graph(&self) -> &'g JobGraph {
         self.graph
+    }
+
+    /// Number of published fork snapshots still held. The consumer
+    /// bookkeeping must release every snapshot by the time the last job
+    /// completes — `repro audit`'s order-permutation model checker asserts
+    /// this is zero for *every* completion interleaving, which is what
+    /// keeps peak host memory at the serial sweep's profile.
+    pub(crate) fn live_snapshots(&self) -> usize {
+        self.snapshots.len()
     }
 
     /// Every job has landed (store pre-pass included).
@@ -372,8 +381,8 @@ fn prefill_from_store(
     store: &RunStore,
     keep_states: bool,
     per_plan: &mut [Option<(RunResult, Option<ModelState>)>],
-    trunk_flops: &mut HashMap<JobId, f64>,
-    cached_trunks: &mut HashMap<JobId, (String, usize)>,
+    trunk_flops: &mut BTreeMap<JobId, f64>,
+    cached_trunks: &mut BTreeMap<JobId, (String, usize)>,
     satisfied: &mut [bool],
 ) -> Result<()> {
     let plans = graph.plans();
@@ -427,7 +436,7 @@ fn load_cached_trunk(
 fn make_item(
     graph: &JobGraph,
     job: JobId,
-    snapshots: &HashMap<JobId, Arc<DriverSnapshot>>,
+    snapshots: &BTreeMap<JobId, Arc<DriverSnapshot>>,
     keep_states: bool,
 ) -> Result<WorkItem> {
     let spec = &graph.jobs()[job];

@@ -45,3 +45,4 @@ pub mod scaling;
 pub mod checkpoint;
 pub mod bench;
 pub mod cli;
+pub mod audit;

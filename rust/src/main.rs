@@ -139,6 +139,10 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         switches: &[],
     };
     const LISTING: CommandSpec = CommandSpec { flags: &["artifacts"], switches: &[] };
+    const AUDIT: CommandSpec = CommandSpec {
+        flags: &["src-dir", "golden", "report", "budget", "sample", "seed"],
+        switches: &["lints", "codecs", "model-check", "fix-allows", "bless"],
+    };
     match cmd {
         "train" => Some(TRAIN),
         "progressive" => Some(PROGRESSIVE),
@@ -152,6 +156,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         "probe-mixing" => Some(PROBE),
         "convex" => Some(CONVEX),
         "expand-ckpt" => Some(EXPAND_CKPT),
+        "audit" => Some(AUDIT),
         "list" | "list-benches" | "inspect" => Some(LISTING),
         c if c.starts_with("bench-") => Some(BENCH),
         _ => None,
@@ -944,6 +949,50 @@ fn main() -> Result<()> {
             println!("expanded {src_id} -> {dst_id}");
             Ok(())
         }
+        "audit" => {
+            use deep_progressive::audit;
+            // Default paths work from both the repo root and `rust/`.
+            let in_repo_root = std::path::Path::new("rust/src").is_dir();
+            let src_dir = args.get("src-dir").map(std::path::PathBuf::from).unwrap_or_else(|| {
+                std::path::PathBuf::from(if in_repo_root { "rust/src" } else { "src" })
+            });
+            let golden_dir = args.get("golden").map(std::path::PathBuf::from).unwrap_or_else(|| {
+                std::path::PathBuf::from(if in_repo_root {
+                    "rust/tests/golden"
+                } else {
+                    "tests/golden"
+                })
+            });
+            if args.has("fix-allows") {
+                let rewritten = audit::lint::fix_allows_dir(&src_dir)?;
+                for (rel, n) in &rewritten {
+                    println!("annotated {n} bare allow(s) in {rel}");
+                }
+                println!("fix-allows: {} file(s) rewritten", rewritten.len());
+                return Ok(());
+            }
+            let any = args.has("lints") || args.has("codecs") || args.has("model-check");
+            let opts = audit::AuditOptions {
+                src_dir,
+                golden_dir,
+                lints: !any || args.has("lints"),
+                codecs: !any || args.has("codecs"),
+                model_check: !any || args.has("model-check"),
+                bless: args.has("bless"),
+                budget: args.get_usize("budget", 2000),
+                sample: args.get_usize("sample", 64),
+                seed: args.get_u64("seed", 17),
+            };
+            let report = audit::run(&opts)?;
+            print!("{}", report.render());
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, report.to_json().to_string() + "\n")?;
+            }
+            if !report.ok() {
+                anyhow::bail!("audit found contract violations (see report above)");
+            }
+            Ok(())
+        }
         cmd if cmd.starts_with("bench-") => {
             let workers = workers_from(&args)?;
             let store_dir = args.get("store-dir").map(std::path::PathBuf::from);
@@ -1022,6 +1071,15 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
                                         journaled ref sets; default 1)
   probe-mixing <small> <large>      derive τ from two early-stopped probes (§7);
         [--workers N]                   ≥2 workers run the pair as lockstep jobs
+  audit                             contract audit: determinism lints + codec
+        [--lints] [--codecs]            golden-vector drift detection + scheduler
+        [--model-check]                 order-permutation model check (no switch
+        [--bless]                       = all three); --bless re-writes the
+        [--fix-allows]                  golden fixtures after an intentional
+        [--report PATH]                 codec change; --fix-allows annotates
+        [--budget N] [--sample N]       bare #[allow]s; --report writes JSON;
+        [--src-dir D] [--golden D]      suppress lints only via inline
+                                        `// audit:allow(<lint>): <reason>`
   convex                            §4 convex-theory simulator
   expand-ckpt <src> <dst>           offline checkpoint depth expansion
   bench-fig1 .. bench-fig22         reproduce each paper figure

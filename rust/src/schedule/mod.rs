@@ -43,6 +43,7 @@ impl Schedule {
     /// LR at step `t` of `total` (t in [0, total)).
     pub fn lr(&self, t: usize, total: usize) -> f32 {
         debug_assert!(total > 0);
+        // audit:allow(f32-narrowing): LR evaluation is f32 by contract; tau/boundary math stays f64 upstream
         let total_f = total as f32;
         let x = t as f32 / total_f;
         let warm = |wf: f32, peak: f32| -> Option<f32> {
@@ -52,6 +53,7 @@ impl Schedule {
                 // can be < t + 1 (e.g. total=10, wf=0.02 gives 0.2), and the
                 // unclamped ramp would overshoot peak several-fold —
                 // violating the §4.2 schedule the bound analysis assumes.
+                // audit:allow(f32-narrowing): warmup ramp position, not a tau derivation
                 Some((peak * (t as f32 + 1.0) / (wf * total_f)).min(peak))
             } else {
                 None

@@ -53,7 +53,7 @@
 //! and [`crate::fabric`] (coordinator-side commit point + artifact serving);
 //! surfaced as `Sweep::store(dir)` / `repro ... --store-dir`.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write as _;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
@@ -149,12 +149,14 @@ pub struct GcReport {
 pub struct RunStore {
     dir: PathBuf,
     journal: File,
-    /// Journaled (committed) run digests → artifact manifests.
-    runs: HashMap<String, ArtifactManifest>,
+    /// Journaled (committed) run digests → artifact manifests. Ordered so
+    /// every iteration (GC candidate lists, journal compaction) is
+    /// deterministic — map order must never leak into output.
+    runs: BTreeMap<String, ArtifactManifest>,
     /// Journaled trunk digests → (the trunk snapshot's ledger total, kept in
     /// the journal line bit-exactly so FLOP assembly over a fully-cached
     /// group never has to read the snapshot file; artifact manifest).
-    trunks: HashMap<String, (f64, ArtifactManifest)>,
+    trunks: BTreeMap<String, (f64, ArtifactManifest)>,
     /// Replayed `refs` journal lines, oldest first (tags like `run:<d>`).
     refs: Vec<Vec<String>>,
     /// Context salt the store is pinned to, if any.
@@ -183,8 +185,8 @@ impl RunStore {
             .with_context(|| format!("creating run store {dir:?}"))?;
         std::fs::create_dir_all(dir.join("trunks"))?;
         let jpath = dir.join("journal.log");
-        let mut runs = HashMap::new();
-        let mut trunks = HashMap::new();
+        let mut runs = BTreeMap::new();
+        let mut trunks = BTreeMap::new();
         let mut refs: Vec<Vec<String>> = Vec::new();
         let mut journal_salt: Option<String> = None;
         let mut torn_tail = false;
@@ -582,8 +584,8 @@ impl RunStore {
         }
         let keep = keep.max(1);
         let start = self.refs.len().saturating_sub(keep);
-        let mut live_runs: HashSet<&str> = HashSet::new();
-        let mut live_trunks: HashSet<&str> = HashSet::new();
+        let mut live_runs: BTreeSet<&str> = BTreeSet::new();
+        let mut live_trunks: BTreeSet<&str> = BTreeSet::new();
         for tags in &self.refs[start..] {
             for t in tags {
                 if let Some(d) = t.strip_prefix("run:") {
@@ -593,18 +595,18 @@ impl RunStore {
                 }
             }
         }
+        // `runs`/`trunks` are BTreeMaps, so the candidate lists come out in
+        // sorted (deterministic) order without a post-hoc sort.
         report.collected_runs =
             self.runs.keys().filter(|d| !live_runs.contains(d.as_str())).cloned().collect();
         report.collected_trunks =
             self.trunks.keys().filter(|d| !live_trunks.contains(d.as_str())).cloned().collect();
-        report.collected_runs.sort();
-        report.collected_trunks.sort();
         report.live_runs = self.runs.len() - report.collected_runs.len();
         report.live_trunks = self.trunks.len() - report.collected_trunks.len();
         // Keep exactly the journaled-and-live files; everything else in the
         // cache directories (dead entries, unjournaled strays, leftover
         // temp files) is collectable.
-        let keep_files: [HashSet<String>; 2] = [
+        let keep_files: [BTreeSet<String>; 2] = [
             self.runs
                 .keys()
                 .filter(|d| live_runs.contains(d.as_str()))
@@ -657,14 +659,12 @@ impl RunStore {
         if let Some(s) = &self.salt {
             let _ = writeln!(text, "salt {s}");
         }
-        let mut runs: Vec<_> = self.runs.iter().collect();
-        runs.sort_by(|a, b| a.0.cmp(b.0));
-        for (d, m) in runs {
+        // BTreeMap iteration is already digest-sorted — the compacted
+        // journal is a canonical, deterministic rendering of store state.
+        for (d, m) in &self.runs {
             let _ = writeln!(text, "run {d} {} {}", m.len, m.digest);
         }
-        let mut trunks: Vec<_> = self.trunks.iter().collect();
-        trunks.sort_by(|a, b| a.0.cmp(b.0));
-        for (d, (fl, m)) in trunks {
+        for (d, (fl, m)) in &self.trunks {
             let _ = writeln!(text, "trunk {d} {:016x} {} {}", fl.to_bits(), m.len, m.digest);
         }
         for tags in &self.refs {

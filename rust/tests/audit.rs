@@ -1,0 +1,279 @@
+//! Integration tests for the contract-audit subsystem (`repro audit`).
+//!
+//! The codec tests deliberately bless into a scratch directory and check
+//! against those fresh bytes rather than the committed fixtures under
+//! `tests/golden/` — the committed vectors are enforced by the `repro
+//! audit` CI job, while these tests pin the *machinery*: blessing is
+//! idempotent, drift and missing fixtures fail with pointed diagnostics,
+//! and a seeded byte mutation is caught.
+
+use std::path::PathBuf;
+
+use deep_progressive::audit::{codecs, fixtures, lint, model_check};
+use deep_progressive::store::{digest_str, RunStore};
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpt_audit_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------------- codecs
+
+#[test]
+fn codecs_bless_then_check_is_clean() {
+    let dir = scratch("bless");
+    let blessed = codecs::run_codecs(&dir, true).unwrap();
+    assert!(blessed.ok(), "bless run failed:\n{:#?}", blessed.checks);
+    assert!(!blessed.blessed.is_empty());
+    let checked = codecs::run_codecs(&dir, false).unwrap();
+    assert!(
+        checked.ok(),
+        "freshly blessed fixtures should verify clean:\n{:#?}",
+        checked
+            .checks
+            .iter()
+            .filter(|c| !c.ok)
+            .collect::<Vec<_>>()
+    );
+    // Every registry record and every wire frame has a fixture check, plus
+    // per-record roundtrips and the version matrix.
+    assert!(checked.checks.iter().any(|c| c.name == "versions" && c.ok));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn codecs_detect_seeded_byte_mutation() {
+    let dir = scratch("drift");
+    codecs::run_codecs(&dir, true).unwrap();
+    // Seeded mutation: flip one byte in the middle of the plan fixture.
+    let path = dir.join("plans.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let rep = codecs::run_codecs(&dir, false).unwrap();
+    assert!(!rep.ok());
+    let bad = rep.checks.iter().find(|c| c.name == "plan").unwrap();
+    assert!(!bad.ok);
+    assert!(
+        bad.detail.contains(&format!("byte drift at offset {mid}")),
+        "diagnostic should carry the divergence offset: {}",
+        bad.detail
+    );
+    assert!(bad.detail.contains("version bump"), "diagnostic: {}", bad.detail);
+    // Only the mutated fixture fails; the other records still verify.
+    assert!(rep.checks.iter().any(|c| c.name == "snapshot" && c.ok));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn codecs_missing_fixture_points_at_bless() {
+    let dir = scratch("missing");
+    let rep = codecs::run_codecs(&dir, false).unwrap();
+    assert!(!rep.ok());
+    let miss = rep.checks.iter().find(|c| c.name == "digest").unwrap();
+    assert!(miss.detail.contains("--bless"), "diagnostic: {}", miss.detail);
+    // Roundtrip and version checks run on live bytes and stay green even
+    // with no fixtures on disk.
+    assert!(rep.checks.iter().any(|c| c.name == "plan/roundtrip" && c.ok));
+    assert!(rep.checks.iter().any(|c| c.name == "versions" && c.ok));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn committed_golden_dir_has_every_registry_fixture() {
+    // The committed tree must carry one file per registry record and per
+    // wire frame (byte equality itself is the CI audit job's assertion).
+    let golden = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    for file in [
+        "digest.txt",
+        "plans.bin",
+        "plan_desc.txt",
+        "probe.txt",
+        "snapshot.bin",
+        "run_entry.bin",
+        "journal.txt",
+        "trace.txt",
+        "wire_hello.bin",
+        "wire_assign_trunk.bin",
+        "wire_done_run.bin",
+        "wire_shutdown.bin",
+    ] {
+        assert!(golden.join(file).is_file(), "missing committed fixture {file}");
+    }
+}
+
+// -------------------------------------------------------------- lints
+
+#[test]
+fn lint_flags_hashmap_in_digest_path() {
+    let src = "use std::collections::HashMap;\nfn f() -> HashMap<String, u32> { todo!() }\n";
+    let (findings, _) = lint::scan_file_text("store/mod.rs", src);
+    assert!(
+        findings.iter().any(|f| f.lint == "map-iteration"),
+        "HashMap in a digest-path module must be flagged: {findings:?}"
+    );
+    // The same code outside the lint's module class is clean.
+    let (outside, _) = lint::scan_file_text("scaling/mod.rs", src);
+    assert!(outside.iter().all(|f| f.lint != "map-iteration"), "{outside:?}");
+}
+
+#[test]
+fn lint_allow_suppresses_and_is_inventoried() {
+    let src = "fn f(m: &std::collections::HashMap<u8, u8>) {} \
+               // audit:allow(map-iteration): type only, never iterated\n";
+    let (findings, allows) = lint::scan_file_text("store/mod.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(allows.len(), 1);
+    assert!(allows[0].used);
+    assert_eq!(allows[0].lint, "map-iteration");
+    assert_eq!(allows[0].reason, "type only, never iterated");
+}
+
+#[test]
+fn lint_requires_reason_and_known_name() {
+    let (findings, allows) =
+        lint::scan_file_text("store/mod.rs", "// audit:allow(map-iteration):\nfn f() {}\n");
+    assert!(allows.is_empty());
+    assert!(findings.iter().any(|f| f.lint == "empty-allow-reason"), "{findings:?}");
+    let (findings, _) =
+        lint::scan_file_text("store/mod.rs", "// audit:allow(made-up-lint): because\n");
+    assert!(findings.iter().any(|f| f.lint == "unknown-allow"), "{findings:?}");
+}
+
+#[test]
+fn lint_skips_test_modules_and_strings() {
+    let src = "fn live() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n    \
+                   fn t() { let m = std::collections::HashMap::<u8, u8>::new(); m.len(); }\n\
+               }\n";
+    let (findings, _) = lint::scan_file_text("store/mod.rs", src);
+    assert!(findings.is_empty(), "test modules are exempt: {findings:?}");
+    let (findings, _) =
+        lint::scan_file_text("store/mod.rs", "fn f() -> &'static str { \"HashMap\" }\n");
+    assert!(findings.is_empty(), "string content must not fire code lints: {findings:?}");
+}
+
+#[test]
+fn fix_allows_rewrites_bare_allows_idempotently() {
+    let src = "    #[allow(dead_code)]\n    fn unused() {}\n";
+    let (fixed, n) = lint::fix_allows_text(src);
+    assert_eq!(n, 1);
+    assert!(fixed.contains("// audit:allow(bare-allow):"), "{fixed}");
+    // The inserted annotation matches the allow's indentation.
+    assert!(fixed.starts_with("    // audit:allow(bare-allow):"), "{fixed}");
+    let (again, n2) = lint::fix_allows_text(&fixed);
+    assert_eq!(n2, 0, "fix must be idempotent");
+    assert_eq!(again, fixed);
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let rep = lint::scan_dir(&src).unwrap();
+    assert!(
+        rep.ok(),
+        "unsuppressed determinism-lint findings in the tree:\n{:#?}",
+        rep.findings
+    );
+    // Every committed audit:allow must actually suppress something —
+    // stale annotations are as misleading as missing ones.
+    let unused: Vec<_> = rep.allows.iter().filter(|a| !a.used).collect();
+    assert!(unused.is_empty(), "unused audit:allow annotations: {unused:#?}");
+}
+
+// ----------------------------------------- store ordering (regression)
+
+#[test]
+fn store_gc_and_compaction_emit_sorted_deterministic_order() {
+    // Regression for the HashMap → BTreeMap conversions in the store:
+    // whatever order entries are inserted, the dry-run GC report and the
+    // compacted journal must come out digest-sorted.
+    let dir = scratch("store_order");
+    let salt = digest_str("audit-test-salt");
+    let result = fixtures::fixture_result();
+    let keys: Vec<String> =
+        ["zeta", "alpha", "mid", "omega"].iter().map(|s| digest_str(s)).collect();
+    let kept = keys[0].clone();
+    {
+        let mut st = RunStore::open_salted(&dir, &salt).unwrap();
+        for k in &keys {
+            st.store_run(k, &result, None).unwrap();
+        }
+        // Only the first inserted key is referenced; the rest are garbage.
+        st.record_refs(std::iter::once(kept.as_str()), std::iter::empty()).unwrap();
+        let report = st.gc(true, 1).unwrap();
+        let mut expect: Vec<String> = keys.iter().filter(|k| **k != kept).cloned().collect();
+        expect.sort();
+        assert_eq!(report.collected_runs, expect, "dry-run GC must list digest-sorted");
+        let report = st.gc(false, 1).unwrap();
+        assert_eq!(report.collected_runs, expect);
+        assert_eq!(report.live_runs, 1);
+    }
+    let journal =
+        std::fs::read_to_string(dir.join(format!("ctx-{salt}")).join("journal.log")).unwrap();
+    let runs: Vec<&str> = journal
+        .lines()
+        .filter_map(|l| l.strip_prefix("run "))
+        .map(|l| l.split_whitespace().next().unwrap())
+        .collect();
+    assert_eq!(runs, vec![kept.as_str()], "only the referenced run survives compaction");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_compaction_orders_many_live_runs_by_digest() {
+    let dir = scratch("store_sorted");
+    let salt = digest_str("audit-test-salt-2");
+    let result = fixtures::fixture_result();
+    let keys: Vec<String> =
+        ["k3", "k1", "k4", "k2"].iter().map(|s| digest_str(s)).collect();
+    {
+        let mut st = RunStore::open_salted(&dir, &salt).unwrap();
+        for k in &keys {
+            st.store_run(k, &result, None).unwrap();
+        }
+        st.record_refs(keys.iter().map(String::as_str), std::iter::empty()).unwrap();
+        st.gc(false, 1).unwrap(); // compacts; everything is live
+    }
+    let journal =
+        std::fs::read_to_string(dir.join(format!("ctx-{salt}")).join("journal.log")).unwrap();
+    let runs: Vec<String> = journal
+        .lines()
+        .filter_map(|l| l.strip_prefix("run "))
+        .map(|l| l.split_whitespace().next().unwrap().to_string())
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(runs, sorted, "compacted journal must be digest-sorted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------- model check
+
+#[test]
+fn model_check_grids_are_order_insensitive() {
+    let rep = model_check::run_model_check(200, 8, 17).unwrap();
+    assert!(rep.ok(), "scheduler order-permutation check failed:\n{:#?}", rep.grids);
+    assert_eq!(rep.grids.len(), 3);
+    // The ladder grid is small enough to enumerate exhaustively; the wide
+    // grid must have hit the budget and fallen back to sampling.
+    assert!(rep.grids.iter().any(|g| g.exhaustive));
+    assert!(rep.grids.iter().any(|g| !g.exhaustive));
+    for g in &rep.grids {
+        assert!(g.explored >= 1);
+        assert!(!g.fingerprint.is_empty());
+    }
+}
+
+#[test]
+fn model_check_is_deterministic_across_invocations() {
+    let a = model_check::run_model_check(50, 4, 17).unwrap();
+    let b = model_check::run_model_check(50, 4, 17).unwrap();
+    let fa: Vec<&str> = a.grids.iter().map(|g| g.fingerprint.as_str()).collect();
+    let fb: Vec<&str> = b.grids.iter().map(|g| g.fingerprint.as_str()).collect();
+    assert_eq!(fa, fb, "model-check fingerprints must be reproducible");
+}
