@@ -20,6 +20,7 @@ pub mod codecs;
 pub mod fixtures;
 pub mod lint;
 pub mod model_check;
+pub mod vet;
 
 use std::fmt::Write as _;
 use std::path::PathBuf;

@@ -1,0 +1,1210 @@
+//! Static plan-contract verifier (`repro vet`): paper-law lints over
+//! [`RunPlan`]s and sweep grids, executed before any compute is spent.
+//!
+//! The paper's contributions are *rules* — LR-schedule shape (§4.2),
+//! expansion timing (Takeaway 6), new-layer initialization (Takeaways 1–2,
+//! Table 2), and hyperparameter transfer (CompleteP, arXiv:2505.01618) —
+//! and this module checks a plan set against them symbolically: no engine,
+//! no store, no socket. Four lint families:
+//!
+//! - **schedule**: shape sanity (fractions, peak, warmup/decay overlap),
+//!   monotone stable-phase decay, re-warm segments that fit their stage and
+//!   re-join the base schedule without a discontinuity;
+//! - **expansion timing**: boundaries strictly ordered inside the horizon
+//!   and the stable phase, eval-cadence collisions, probe-derived mixing
+//!   times when a [`crate::coordinator::recipe::LadderController`]
+//!   placement exists;
+//! - **init / HP-transfer**: Table-2 applicability, function-preservation
+//!   conformance for deep sources, grids mixing [`TransferRule`]s;
+//! - **grid coherence**: digest collisions and shared-prefix maximality
+//!   (wasted predicted FLOPs via the [`crate::flops`] ledger algebra).
+//!
+//! Findings carry a severity and a machine-readable location (plan, stage,
+//! step), mirroring the `repro audit` report shape. Every execution entry
+//! point calls [`gate`] before touching an engine, a store, or a socket:
+//! error findings block, warnings are `repro vet`'s surface. Waivers
+//! (`repro vet --waive <lint>`) are recorded in the report.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::builder::{PlanStage, RunPlan, TransferRule, Transition};
+use crate::expansion::{applicable, ExpandSpec, Strategy};
+use crate::flops::flops_per_step;
+use crate::runtime::Manifest;
+use crate::schedule::Schedule;
+use crate::util::json::Json;
+
+/// Finding severity: errors block execution at every [`gate`]d entry point;
+/// warnings surface through `repro vet` and the JSON report only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One catalog entry: lint name, default severity, and the paper rationale
+/// (rendered into `repro vet` output and DESIGN.md §13).
+pub struct LintSpec {
+    pub name: &'static str,
+    pub severity: Severity,
+    pub rationale: &'static str,
+}
+
+/// The vet lint catalog. Names are the `--waive` vocabulary; severities are
+/// fixed per lint (a waiver records intent, it does not reclassify).
+pub const CATALOG: &[LintSpec] = &[
+    LintSpec {
+        name: "schedule-shape",
+        severity: Severity::Error,
+        rationale: "peak must be finite and positive and the warmup/decay fractions must \
+                    fit inside the horizon without overlapping (WSD §4.2); a malformed \
+                    shape silently degrades every run in the grid",
+    },
+    LintSpec {
+        name: "stable-decay",
+        severity: Severity::Error,
+        rationale: "outside warmup and re-warm segments the LR must never rise above an \
+                    earlier value or exceed the peak — the stable phase is constant and \
+                    the decay monotone (WSD §4.2)",
+    },
+    LintSpec {
+        name: "rewarm-discontinuity",
+        severity: Severity::Error,
+        rationale: "a re-warm segment must end inside its stage and ramp exactly back to \
+                    the base schedule; a truncated ramp leaves an LR jump at the next \
+                    boundary (the loaded-plan mirror of the build-time check)",
+    },
+    LintSpec {
+        name: "rewarm-in-decay",
+        severity: Severity::Warning,
+        rationale: "a re-warm segment crossing into the decay phase multiplies a rising \
+                    ramp into a falling schedule; the re-warmed stage never sees the \
+                    stable-phase LR the placement assumed",
+    },
+    LintSpec {
+        name: "boundary-order",
+        severity: Severity::Error,
+        rationale: "stage 0 starts at step 0 and boundaries are strictly increasing \
+                    inside the horizon — the structural contract RunBuilder enforces, \
+                    re-checked for plans that arrived by other routes",
+    },
+    LintSpec {
+        name: "boundary-in-decay",
+        severity: Severity::Error,
+        rationale: "expansion must happen in the stable phase (Takeaway 6): a boundary \
+                    past stable_end gives the grown model only decaying LR and the \
+                    progressive advantage vanishes",
+    },
+    LintSpec {
+        name: "boundary-in-warmup",
+        severity: Severity::Warning,
+        rationale: "expanding during warmup discards the cheap small-model steps the \
+                    schedule reserves for it; place boundaries after warmup ends",
+    },
+    LintSpec {
+        name: "boundary-on-eval",
+        severity: Severity::Warning,
+        rationale: "a boundary landing exactly on the eval cadence conflates the \
+                    expansion loss spike with a cadence eval in curve comparisons",
+    },
+    LintSpec {
+        name: "tau-tmix",
+        severity: Severity::Warning,
+        rationale: "each stage needs at least its mixing time before the next expansion \
+                    or the decay phase (§7 probe recipe): a shorter stage has not mixed \
+                    when it is grown again",
+    },
+    LintSpec {
+        name: "init-applicability",
+        severity: Severity::Error,
+        rationale: "Table 2: Copying-family strategies replicate existing blocks and \
+                    need a source with at least one layer; expanding a zero-layer \
+                    source this way fails at run time",
+    },
+    LintSpec {
+        name: "zero-init",
+        severity: Severity::Warning,
+        rationale: "all-zero new layers are function-preserving at the boundary but \
+                    suppress new-layer feature learning (Takeaway 2); zero_n/zero_l \
+                    keep the preservation without the dead gradients",
+    },
+    LintSpec {
+        name: "deep-source-init",
+        severity: Severity::Warning,
+        rationale: "the paper validates non-function-preserving inits (random, copying) \
+                    for zero/one-layer sources (Takeaway 1); growing a deeper source \
+                    without function preservation risks a destructive loss spike",
+    },
+    LintSpec {
+        name: "transfer-mix",
+        severity: Severity::Error,
+        rationale: "a grid mixing hyperparameter-transfer rules (fixed vs CompleteP, \
+                    arXiv:2505.01618) compares runs under different effective LRs; \
+                    rung results would not be attributable to depth",
+    },
+    LintSpec {
+        name: "duplicate-plan",
+        severity: Severity::Error,
+        rationale: "distinct plans must have distinct digests: two differently-named \
+                    plans with one digest execute identical work and one of the grid \
+                    points is not measuring what its name claims",
+    },
+    LintSpec {
+        name: "missed-sharing",
+        severity: Severity::Warning,
+        rationale: "plans sharing a stage-0 prefix but forking at different steps \
+                    retrain the common segment once per boundary; aligning boundaries \
+                    lets the sweep train the trunk once (quantified in predicted FLOPs)",
+    },
+];
+
+pub fn lint_spec(name: &str) -> Option<&'static LintSpec> {
+    CATALOG.iter().find(|l| l.name == name)
+}
+
+/// One vet finding with its machine-readable location.
+#[derive(Debug, Clone)]
+pub struct VetFinding {
+    pub lint: &'static str,
+    pub severity: Severity,
+    /// Name of the plan the finding anchors to ("grid" for cross-plan
+    /// findings like transfer-mix).
+    pub plan: String,
+    /// Stage index inside the plan, when the finding is stage-local.
+    pub stage: Option<usize>,
+    /// Step the finding anchors to, when one exists.
+    pub step: Option<usize>,
+    pub message: String,
+    /// Set when the lint was waived via `--waive`; waived errors do not
+    /// fail the report but stay visible in it.
+    pub waived: bool,
+}
+
+/// Symbolic context for a vet pass. Everything is optional: with no
+/// manifest, per-config checks fall back to the `.l<N>` depth suffix
+/// convention and skip otherwise; with no probe placement, tau-tmix skips.
+#[derive(Default)]
+pub struct VetContext<'a> {
+    pub manifest: Option<&'a Manifest>,
+    /// Probe-derived mixing time per expansion round (steps), when a
+    /// `LadderController` placement exists; `None` entries skip that round.
+    pub t_mix_steps: Option<&'a [Option<usize>]>,
+    /// Lint names to waive (validated against the catalog).
+    pub waive: &'a [String],
+}
+
+/// Vet report: findings plus the waive list, mirroring the `repro audit`
+/// report surface (`ok` / `render` / `to_json`).
+#[derive(Debug, Default)]
+pub struct VetReport {
+    pub plans: usize,
+    pub findings: Vec<VetFinding>,
+    /// Lint names waived for this pass (recorded even when nothing matched).
+    pub waived: Vec<String>,
+    /// Whether a manifest backed the per-config checks.
+    pub manifest_checked: bool,
+}
+
+impl VetReport {
+    /// True when no un-waived error-severity finding exists.
+    pub fn ok(&self) -> bool {
+        !self.findings.iter().any(|f| f.severity == Severity::Error && !f.waived)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error && !f.waived)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    fn location(f: &VetFinding) -> String {
+        let mut loc = f.plan.clone();
+        if let Some(s) = f.stage {
+            loc.push_str(&format!(":stage{s}"));
+        }
+        if let Some(s) = f.step {
+            loc.push_str(&format!("@{s}"));
+        }
+        loc
+    }
+
+    /// Human-readable report, one line per finding (audit-report shape).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "== plan vet ==\n  {} plan(s), {} error(s), {} warning(s){}{}",
+            self.plans,
+            self.errors(),
+            self.warnings(),
+            if self.manifest_checked { "" } else { " (no manifest: per-config checks limited)" },
+            if self.waived.is_empty() {
+                String::new()
+            } else {
+                format!("; waived: {}", self.waived.join(","))
+            },
+        );
+        for f in &self.findings {
+            let status = match (f.severity, f.waived) {
+                (Severity::Error, false) => "FAIL",
+                (Severity::Error, true) => "waiv",
+                (Severity::Warning, _) => "warn",
+            };
+            let _ = writeln!(s, "  {status} {} [{}] {}", Self::location(f), f.lint, f.message);
+        }
+        let _ = writeln!(s, "vet: {}", if self.ok() { "PASS" } else { "FAIL" });
+        s
+    }
+
+    /// Machine-readable report (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("ok".to_string(), Json::Bool(self.ok()));
+        root.insert("plans".to_string(), Json::Num(self.plans as f64));
+        root.insert("manifest_checked".to_string(), Json::Bool(self.manifest_checked));
+        root.insert(
+            "waived".to_string(),
+            Json::Arr(self.waived.iter().map(|w| Json::Str(w.clone())).collect()),
+        );
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("lint".to_string(), Json::Str(f.lint.to_string()));
+                m.insert("severity".to_string(), Json::Str(f.severity.name().to_string()));
+                m.insert("plan".to_string(), Json::Str(f.plan.clone()));
+                m.insert(
+                    "stage".to_string(),
+                    f.stage.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+                );
+                m.insert(
+                    "step".to_string(),
+                    f.step.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+                );
+                m.insert("message".to_string(), Json::Str(f.message.clone()));
+                m.insert("waived".to_string(), Json::Bool(f.waived));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("findings".to_string(), Json::Arr(findings));
+        Json::Obj(root)
+    }
+}
+
+/// Relative tolerance for the numeric schedule checks: far looser than any
+/// real defect, far tighter than f32 noise over the sampled grid.
+const REL_EPS: f32 = 1e-4;
+
+struct Pass<'a> {
+    ctx: &'a VetContext<'a>,
+    findings: Vec<VetFinding>,
+}
+
+impl Pass<'_> {
+    fn emit(
+        &mut self,
+        lint: &'static str,
+        plan: &str,
+        stage: Option<usize>,
+        step: Option<usize>,
+        message: String,
+    ) {
+        let spec = lint_spec(lint).expect("emit() called with a lint missing from CATALOG");
+        self.findings.push(VetFinding {
+            lint,
+            severity: spec.severity,
+            plan: plan.to_string(),
+            stage,
+            step,
+            message,
+            waived: self.ctx.waive.iter().any(|w| w == lint),
+        });
+    }
+
+    /// Source depth entering stage `i` (the depth of stage `i-1`'s config):
+    /// manifest when available, else the `.l<N>` / `l<N>` cfg-id suffix
+    /// convention the bench grids use; `None` means unknown — skip.
+    fn depth_of(&self, cfg_id: &str) -> Option<usize> {
+        if let Some(m) = self.ctx.manifest {
+            if let Ok(entry) = m.get(cfg_id) {
+                return Some(entry.model.n_layer);
+            }
+        }
+        let last = cfg_id.rsplit('.').next().unwrap_or(cfg_id);
+        last.strip_prefix('l').and_then(|n| n.parse().ok())
+    }
+
+    // ------------------------------------------------------ schedule family
+
+    fn check_schedule_shape(&mut self, plan: &RunPlan) {
+        let name = plan.name();
+        let sched = plan.schedule();
+        let peak = sched.peak();
+        if !peak.is_finite() || peak <= 0.0 {
+            self.emit(
+                "schedule-shape",
+                name,
+                None,
+                None,
+                format!("schedule peak {peak} is not a finite positive LR"),
+            );
+        }
+        let warmup_frac = match sched {
+            Schedule::Wsd { warmup_frac, .. }
+            | Schedule::Cosine { warmup_frac, .. }
+            | Schedule::Constant { warmup_frac, .. }
+            | Schedule::Linear { warmup_frac, .. } => warmup_frac,
+        };
+        if !warmup_frac.is_finite() || !(0.0..=1.0).contains(&warmup_frac) {
+            self.emit(
+                "schedule-shape",
+                name,
+                None,
+                None,
+                format!("warmup fraction {warmup_frac} outside [0, 1]"),
+            );
+        }
+        if let Schedule::Wsd { decay_frac, .. } = sched {
+            if !decay_frac.is_finite() || !(0.0..=1.0).contains(&decay_frac) {
+                self.emit(
+                    "schedule-shape",
+                    name,
+                    None,
+                    None,
+                    format!("decay fraction {decay_frac} outside [0, 1]"),
+                );
+            } else if warmup_frac.is_finite() && warmup_frac + decay_frac > 1.0 {
+                self.emit(
+                    "schedule-shape",
+                    name,
+                    None,
+                    None,
+                    format!(
+                        "warmup ({warmup_frac}) and decay ({decay_frac}) fractions overlap: \
+                         no stable phase remains for expansion (WSD §4.2)"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Deterministic step sample: a bounded stride over the horizon plus
+    /// every boundary neighborhood (where the interesting transitions are).
+    fn sample_steps(plan: &RunPlan) -> Vec<usize> {
+        let total = plan.total_steps();
+        let mut steps: Vec<usize> = Vec::new();
+        let stride = (total / 512).max(1);
+        let mut t = 0;
+        while t < total {
+            steps.push(t);
+            t += stride;
+        }
+        for st in plan.stages().iter().skip(1) {
+            for d in [1usize, 0] {
+                steps.push(st.from_step.saturating_sub(d));
+                steps.push((st.from_step + st.rewarm_steps).saturating_sub(d));
+                steps.push(st.from_step + st.rewarm_steps);
+            }
+        }
+        steps.retain(|&s| s < total);
+        steps.sort_unstable();
+        steps.dedup();
+        steps
+    }
+
+    fn in_rewarm(plan: &RunPlan, step: usize) -> bool {
+        plan.stages()
+            .iter()
+            .skip(1)
+            .any(|st| st.rewarm_steps > 0 && (st.from_step..st.from_step + st.rewarm_steps).contains(&step))
+    }
+
+    fn check_stable_decay(&mut self, plan: &RunPlan) {
+        let sched = plan.schedule();
+        let peak = sched.peak();
+        if !peak.is_finite() || peak <= 0.0 {
+            return; // schedule-shape already fired; comparisons are meaningless
+        }
+        let total = plan.total_steps();
+        let warmup_frac = match sched {
+            Schedule::Wsd { warmup_frac, .. }
+            | Schedule::Cosine { warmup_frac, .. }
+            | Schedule::Constant { warmup_frac, .. }
+            | Schedule::Linear { warmup_frac, .. } => warmup_frac,
+        };
+        let warmup_end = (f64::from(warmup_frac.clamp(0.0, 1.0)) * total as f64) as usize;
+        let tol = peak * REL_EPS;
+        let mut prev: Option<(usize, f32)> = None;
+        for &step in &Self::sample_steps(plan) {
+            let lr = plan.lr_at(step);
+            if lr > peak + tol {
+                self.emit(
+                    "stable-decay",
+                    plan.name(),
+                    None,
+                    Some(step),
+                    format!("LR {lr} exceeds the schedule peak {peak}"),
+                );
+                return; // one finding per defect, not one per sample
+            }
+            if step < warmup_end || Self::in_rewarm(plan, step) {
+                prev = None; // ramps are allowed to rise
+                continue;
+            }
+            if let Some((pstep, plr)) = prev {
+                if lr > plr + tol {
+                    self.emit(
+                        "stable-decay",
+                        plan.name(),
+                        None,
+                        Some(step),
+                        format!(
+                            "LR rises from {plr} at step {pstep} to {lr} at step {step} \
+                             outside warmup/re-warm (stable-phase decay must be monotone)"
+                        ),
+                    );
+                    return;
+                }
+            }
+            prev = Some((step, lr));
+        }
+    }
+
+    fn check_rewarm(&mut self, plan: &RunPlan) {
+        let total = plan.total_steps();
+        let stable_end = plan.schedule().stable_end(total);
+        for (i, st) in plan.stages().iter().enumerate().skip(1) {
+            if st.rewarm_steps == 0 {
+                continue;
+            }
+            let stage_end =
+                plan.stages().get(i + 1).map(|n| n.from_step).unwrap_or(total);
+            if st.from_step + st.rewarm_steps > stage_end {
+                self.emit(
+                    "rewarm-discontinuity",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    format!(
+                        "re-warm segment ({} steps from step {}) runs past the end of its \
+                         stage at {stage_end}: the truncated ramp leaves an LR jump at the \
+                         next boundary",
+                        st.rewarm_steps, st.from_step
+                    ),
+                );
+                continue;
+            }
+            // Numeric re-join: the last ramp step must land on the base
+            // schedule (the ramp multiplier is exactly 1 there).
+            let last = st.from_step + st.rewarm_steps - 1;
+            if last < total {
+                let lr = plan.lr_at(last);
+                let base = plan.schedule().lr(last, total);
+                if (lr - base).abs() > base.abs() * REL_EPS + f32::EPSILON {
+                    self.emit(
+                        "rewarm-discontinuity",
+                        plan.name(),
+                        Some(i),
+                        Some(last),
+                        format!(
+                            "re-warm ramp ends at LR {lr} but the base schedule is {base} \
+                             at step {last}: the stage re-joins with a discontinuity"
+                        ),
+                    );
+                    continue;
+                }
+            }
+            if st.from_step + st.rewarm_steps > stable_end {
+                self.emit(
+                    "rewarm-in-decay",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    format!(
+                        "re-warm segment ({} steps from step {}) crosses the decay start \
+                         at {stable_end}",
+                        st.rewarm_steps, st.from_step
+                    ),
+                );
+            }
+        }
+    }
+
+    // ----------------------------------------------- expansion-timing family
+
+    /// Structural mirror of the RunBuilder checks for plans that arrived by
+    /// other routes (wire frames, raw fixtures). Returns false when the
+    /// structure is too broken for the timing lints to be meaningful.
+    fn check_boundary_order(&mut self, plan: &RunPlan) -> bool {
+        let name = plan.name();
+        let total = plan.total_steps();
+        let stages = plan.stages();
+        if total == 0 || stages.is_empty() {
+            self.emit(
+                "boundary-order",
+                name,
+                None,
+                None,
+                "plan has no stages or a zero-step horizon".to_string(),
+            );
+            return false;
+        }
+        if stages[0].from_step != 0 || !matches!(stages[0].transition, Transition::Init) {
+            self.emit(
+                "boundary-order",
+                name,
+                Some(0),
+                Some(stages[0].from_step),
+                "stage 0 must be an Init stage starting at step 0".to_string(),
+            );
+            return false;
+        }
+        let mut ok = true;
+        for (i, w) in stages.windows(2).enumerate() {
+            if w[1].from_step <= w[0].from_step {
+                self.emit(
+                    "boundary-order",
+                    name,
+                    Some(i + 1),
+                    Some(w[1].from_step),
+                    format!(
+                        "boundaries must be strictly increasing ({} then {})",
+                        w[0].from_step, w[1].from_step
+                    ),
+                );
+                ok = false;
+            }
+            if w[1].from_step >= total {
+                self.emit(
+                    "boundary-order",
+                    name,
+                    Some(i + 1),
+                    Some(w[1].from_step),
+                    format!("boundary at step {} is outside the {total}-step horizon", w[1].from_step),
+                );
+                ok = false;
+            }
+        }
+        ok
+    }
+
+    fn check_boundary_timing(&mut self, plan: &RunPlan) {
+        let total = plan.total_steps();
+        let sched = plan.schedule();
+        let stable_end = sched.stable_end(total);
+        let warmup_frac = match sched {
+            Schedule::Wsd { warmup_frac, .. }
+            | Schedule::Cosine { warmup_frac, .. }
+            | Schedule::Constant { warmup_frac, .. }
+            | Schedule::Linear { warmup_frac, .. } => warmup_frac,
+        };
+        let warmup_end = (f64::from(warmup_frac.clamp(0.0, 1.0)) * total as f64) as usize;
+        for (i, st) in plan.stages().iter().enumerate().skip(1) {
+            let step = st.from_step;
+            if step > stable_end {
+                self.emit(
+                    "boundary-in-decay",
+                    plan.name(),
+                    Some(i),
+                    Some(step),
+                    format!(
+                        "expansion at step {step} is past the stable-phase end at \
+                         {stable_end}: expansion must happen in the stable phase \
+                         (Takeaway 6)"
+                    ),
+                );
+            } else if step < warmup_end {
+                self.emit(
+                    "boundary-in-warmup",
+                    plan.name(),
+                    Some(i),
+                    Some(step),
+                    format!("expansion at step {step} is inside the warmup (ends at {warmup_end})"),
+                );
+            }
+            // eval_every == 1 evals every step; collision is unavoidable
+            // and the warning would be pure noise.
+            if plan.eval_every() > 1 && step % plan.eval_every() == 0 {
+                self.emit(
+                    "boundary-on-eval",
+                    plan.name(),
+                    Some(i),
+                    Some(step),
+                    format!(
+                        "boundary at step {step} collides with the eval cadence \
+                         (every {} steps): the expansion spike lands on a cadence eval",
+                        plan.eval_every()
+                    ),
+                );
+            }
+        }
+    }
+
+    fn check_tau_tmix(&mut self, plan: &RunPlan) {
+        let Some(t_mix) = self.ctx.t_mix_steps else { return };
+        let total = plan.total_steps();
+        let stable_end = plan.schedule().stable_end(total);
+        for (i, st) in plan.stages().iter().enumerate().skip(1) {
+            let Some(Some(t)) = t_mix.get(i - 1) else { continue };
+            let stage_end =
+                plan.stages().get(i + 1).map(|n| n.from_step).unwrap_or(total).min(stable_end);
+            let have = stage_end.saturating_sub(st.from_step);
+            if have < *t {
+                self.emit(
+                    "tau-tmix",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    format!(
+                        "stage has {have} stable step(s) after the boundary at {} but the \
+                         probe-derived mixing time is {t}: the rung will not have mixed \
+                         (§7 recipe)",
+                        st.from_step
+                    ),
+                );
+            }
+        }
+    }
+
+    // -------------------------------------------- init / HP-transfer family
+
+    fn strategy_desc(spec: &ExpandSpec) -> String {
+        format!("{:?}", spec.strategy)
+    }
+
+    fn check_init(&mut self, plan: &RunPlan) {
+        let stages = plan.stages();
+        for (i, st) in stages.iter().enumerate().skip(1) {
+            let Transition::Expand(spec) = &st.transition else { continue };
+            let src = &stages[i - 1].cfg_id;
+            let Some(n_src) = self.depth_of(src) else { continue };
+            if !applicable(spec.strategy, n_src) {
+                self.emit(
+                    "init-applicability",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    format!(
+                        "strategy {} cannot expand the {n_src}-layer source '{src}' \
+                         (Table 2: Copying-family strategies need at least one source \
+                         layer); the run would fail at the boundary",
+                        Self::strategy_desc(spec)
+                    ),
+                );
+                continue;
+            }
+            match spec.strategy {
+                Strategy::Zero => self.emit(
+                    "zero-init",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    "Zero init is function-preserving at the boundary but suppresses \
+                     new-layer feature learning (Takeaway 2); consider zero_n/zero_l"
+                        .to_string(),
+                ),
+                Strategy::Random | Strategy::Copying(_) if n_src >= 2 => self.emit(
+                    "deep-source-init",
+                    plan.name(),
+                    Some(i),
+                    Some(st.from_step),
+                    format!(
+                        "strategy {} is not function-preserving and the source '{src}' \
+                         has {n_src} layers; the paper validates this only for \
+                         zero/one-layer sources (Takeaway 1)",
+                        Self::strategy_desc(spec)
+                    ),
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    // ----------------------------------------------- grid-coherence family
+
+    fn check_transfer_mix(&mut self, plans: &[RunPlan]) {
+        let completep: Vec<&RunPlan> =
+            plans.iter().filter(|p| p.transfer() == TransferRule::CompleteP).collect();
+        if completep.is_empty() || completep.len() == plans.len() {
+            return;
+        }
+        self.emit(
+            "transfer-mix",
+            "grid",
+            None,
+            None,
+            format!(
+                "grid mixes HP-transfer rules: {} plan(s) use completep (first: '{}') \
+                 and {} use fixed; rung results would not be attributable to depth",
+                completep.len(),
+                completep[0].name(),
+                plans.len() - completep.len()
+            ),
+        );
+    }
+
+    fn check_duplicates(&mut self, plans: &[RunPlan]) {
+        let mut by_digest: BTreeMap<String, Vec<&RunPlan>> = BTreeMap::new();
+        for p in plans {
+            by_digest.entry(p.digest()).or_default().push(p);
+        }
+        for group in by_digest.values().filter(|g| g.len() > 1) {
+            let names: Vec<&str> = group.iter().map(|p| p.name()).collect();
+            if names.iter().all(|n| *n == names[0]) {
+                // The same plan added twice: the job graph deduplicates it,
+                // so this cannot be the distinct-plans error.
+                continue;
+            }
+            self.emit(
+                "duplicate-plan",
+                group[0].name(),
+                None,
+                None,
+                format!(
+                    "plans {names:?} share one digest: they execute identical work, so \
+                     the grid points differ in name only"
+                ),
+            );
+        }
+    }
+
+    fn check_missed_sharing(&mut self, plans: &[RunPlan]) {
+        let mut by_prefix: BTreeMap<String, Vec<&RunPlan>> = BTreeMap::new();
+        for p in plans {
+            by_prefix.entry(p.prefix_key()).or_default().push(p);
+        }
+        for group in by_prefix.values().filter(|g| g.len() > 1) {
+            let mut boundaries: Vec<usize> = group.iter().map(|p| p.first_boundary()).collect();
+            boundaries.sort_unstable();
+            boundaries.dedup();
+            if boundaries.len() < 2 {
+                continue; // equal boundaries: the sweep already shares the trunk
+            }
+            let min_b = boundaries[0];
+            if min_b == 0 {
+                continue;
+            }
+            // Predicted waste via the FLOP ledger algebra: the common
+            // segment [0, min_b) is retrained once per distinct boundary
+            // instead of once in total.
+            let wasted = self
+                .ctx
+                .manifest
+                .and_then(|m| m.get(&group[0].stages()[0].cfg_id).ok())
+                .map(|entry| flops_per_step(entry) * min_b as f64 * (boundaries.len() - 1) as f64);
+            let wasted_desc = match wasted {
+                Some(w) => format!("{w:.2e} predicted FLOPs"),
+                None => format!("{min_b} step(s) per extra boundary (no manifest to price them)"),
+            };
+            self.emit(
+                "missed-sharing",
+                group[0].name(),
+                None,
+                Some(min_b),
+                format!(
+                    "{} plan(s) share a stage-0 prefix but fork at {} distinct steps \
+                     {boundaries:?}: the common segment is retrained {} times, wasting \
+                     {wasted_desc}; aligning boundaries would share one trunk",
+                    group.len(),
+                    boundaries.len(),
+                    boundaries.len()
+                ),
+            );
+        }
+    }
+}
+
+/// Vet a plan set symbolically. Errors only on an invalid `--waive` name;
+/// contract violations are findings inside the returned report.
+pub fn vet_plans(plans: &[RunPlan], ctx: &VetContext) -> Result<VetReport> {
+    for w in ctx.waive {
+        if lint_spec(w).is_none() {
+            bail!(
+                "unknown vet lint '{w}' in --waive (known: {})",
+                CATALOG.iter().map(|l| l.name).collect::<Vec<_>>().join(", ")
+            );
+        }
+    }
+    let mut pass = Pass { ctx, findings: Vec::new() };
+    for plan in plans {
+        pass.check_schedule_shape(plan);
+        if pass.check_boundary_order(plan) {
+            pass.check_stable_decay(plan);
+            pass.check_rewarm(plan);
+            pass.check_boundary_timing(plan);
+            pass.check_tau_tmix(plan);
+            pass.check_init(plan);
+        }
+    }
+    pass.check_transfer_mix(plans);
+    pass.check_duplicates(plans);
+    pass.check_missed_sharing(plans);
+    Ok(VetReport {
+        plans: plans.len(),
+        findings: pass.findings,
+        waived: ctx.waive.to_vec(),
+        manifest_checked: ctx.manifest.is_some(),
+    })
+}
+
+/// Pre-flight gate shared by every execution entry point (`sweep`, `ladder`,
+/// `serve`, `diagnose`, `chaos`, all `bench-*` targets, and the sweep
+/// lowering itself): vet the plans and refuse to proceed on any
+/// error-severity finding — before any engine, store write, or socket
+/// exists. Warnings do not block; `repro vet` is their surface.
+pub fn gate(plans: &[RunPlan], manifest: Option<&Manifest>, what: &str) -> Result<()> {
+    let ctx = VetContext { manifest, t_mix_steps: None, waive: &[] };
+    gate_with(plans, &ctx, what)
+}
+
+/// [`gate`] with an explicit context (probe-derived mixing times, waivers).
+pub fn gate_with(plans: &[RunPlan], ctx: &VetContext, what: &str) -> Result<()> {
+    let report = vet_plans(plans, ctx)?;
+    if report.ok() {
+        return Ok(());
+    }
+    use std::fmt::Write as _;
+    let mut msg = format!(
+        "{what}: plan vet found {} contract error(s); nothing was executed \
+         (run `repro vet` for the full report, `--waive <lint>` to override):",
+        report.errors()
+    );
+    for f in report.findings.iter().filter(|f| f.severity == Severity::Error && !f.waived) {
+        let _ = write!(msg, "\n  {} [{}] {}", VetReport::location(f), f.lint, f.message);
+    }
+    bail!(msg);
+}
+
+/// One seeded violation fixture: a plan set planted with exactly one defect
+/// that must make `lint` fire exactly once.
+pub struct VetFixture {
+    pub lint: &'static str,
+    /// Mixing-time context for fixtures exercising the probe cross-check.
+    pub t_mix_steps: Option<Vec<Option<usize>>>,
+    pub plans: Vec<RunPlan>,
+}
+
+/// Seeded violation fixtures, one per demonstrable lint — the `repro vet
+/// --fixtures` corpus and the "fires exactly once per planted defect" test
+/// bed. Defects the builder would refuse are assembled through the raw
+/// constructor, mirroring how a corrupted or hand-edited plan would arrive.
+pub fn violation_fixtures() -> Vec<VetFixture> {
+    let wsd = Schedule::Wsd { peak: 0.01, warmup_frac: 0.1, decay_frac: 0.2 };
+    // 240-step horizon: warmup ends at 24, stable phase ends at 192.
+    let total = 240usize;
+    let spec = ExpandSpec::default();
+    let prog = |name: &str, tau: usize, sched: Schedule| {
+        crate::coordinator::RunBuilder::progressive(
+            name, "gpt2.l0", "gpt2.l2", tau, total, sched, spec,
+        )
+        .eval_every(20)
+        .build()
+        .expect("fixture plan must build")
+    };
+    let raw = |name: &str, stages: Vec<PlanStage>, sched: Schedule| {
+        RunPlan::from_raw_parts(name.to_string(), stages, total, sched, 20, 4, 17, false, TransferRule::Fixed)
+    };
+    let stage0 = || PlanStage {
+        cfg_id: "gpt2.l0".to_string(),
+        from_step: 0,
+        transition: Transition::Init,
+        rewarm_steps: 0,
+    };
+    let expand_stage = |cfg: &str, at: usize, rewarm: usize| PlanStage {
+        cfg_id: cfg.to_string(),
+        from_step: at,
+        transition: Transition::Expand(spec),
+        rewarm_steps: rewarm,
+    };
+    let fix = |lint: &'static str, plans: Vec<RunPlan>| VetFixture { lint, t_mix_steps: None, plans };
+
+    vec![
+        // Overlapping warmup + decay: no stable phase remains.
+        fix(
+            "schedule-shape",
+            vec![prog("bad-shape", 100, Schedule::Wsd { peak: 0.01, warmup_frac: 0.5, decay_frac: 0.8 })],
+        ),
+        // Re-warm segment longer than its (final) stage.
+        fix(
+            "rewarm-discontinuity",
+            vec![raw(
+                "bad-rewarm",
+                vec![stage0(), expand_stage("gpt2.l2", 100, 200)],
+                wsd,
+            )],
+        ),
+        // Re-warm crossing the decay start at 192.
+        fix(
+            "rewarm-in-decay",
+            vec![raw(
+                "rewarm-decay",
+                vec![stage0(), expand_stage("gpt2.l2", 180, 30)],
+                wsd,
+            )],
+        ),
+        // Non-increasing boundaries (builder-rejected, raw-assembled).
+        fix(
+            "boundary-order",
+            vec![raw(
+                "bad-order",
+                vec![stage0(), expand_stage("gpt2.l1", 80, 0), expand_stage("gpt2.l2", 60, 0)],
+                wsd,
+            )],
+        ),
+        // Boundary past the stable-phase end (Takeaway 6).
+        fix("boundary-in-decay", vec![prog("late-tau", 228, wsd)]),
+        // Boundary inside the warmup (ends at 24).
+        fix("boundary-in-warmup", vec![prog("early-tau", 12, wsd)]),
+        // Boundary on the eval cadence (eval_every 20, tau 100).
+        fix("boundary-on-eval", vec![prog("eval-tau", 100, wsd)]),
+        // Stage shorter than its probe-derived mixing time.
+        VetFixture {
+            lint: "tau-tmix",
+            t_mix_steps: Some(vec![Some(150)]),
+            plans: vec![prog("short-stage", 100, wsd)],
+        },
+        // Copying-family strategy from a zero-layer source (Table 2).
+        fix(
+            "init-applicability",
+            vec![crate::coordinator::RunBuilder::progressive(
+                "copy-from-l0",
+                "gpt2.l0",
+                "gpt2.l2",
+                100,
+                total,
+                wsd,
+                ExpandSpec { strategy: Strategy::Copying(crate::expansion::CopyOrder::Stack), ..spec },
+            )
+            .eval_every(20)
+            .build()
+            .expect("fixture plan must build")],
+        ),
+        // Pure Zero init (Takeaway 2).
+        fix(
+            "zero-init",
+            vec![crate::coordinator::RunBuilder::progressive(
+                "zero-into",
+                "gpt2.l0",
+                "gpt2.l2",
+                100,
+                total,
+                wsd,
+                ExpandSpec { strategy: Strategy::Zero, ..spec },
+            )
+            .eval_every(20)
+            .build()
+            .expect("fixture plan must build")],
+        ),
+        // Random growth of a 3-layer source (Takeaway 1 scope).
+        fix(
+            "deep-source-init",
+            vec![crate::coordinator::RunBuilder::progressive(
+                "deep-random",
+                "gpt2.l3",
+                "gpt2.l6",
+                100,
+                total,
+                wsd,
+                spec,
+            )
+            .eval_every(20)
+            .build()
+            .expect("fixture plan must build")],
+        ),
+        // Grid mixing HP-transfer rules.
+        fix(
+            "transfer-mix",
+            vec![
+                prog("rule-fixed", 100, wsd),
+                crate::coordinator::RunBuilder::progressive(
+                    "rule-completep",
+                    "gpt2.l0",
+                    "gpt2.l2",
+                    100,
+                    total,
+                    wsd,
+                    spec,
+                )
+                .eval_every(20)
+                .transfer(TransferRule::CompleteP)
+                .build()
+                .expect("fixture plan must build"),
+            ],
+        ),
+        // Two differently-named plans, one digest.
+        fix("duplicate-plan", vec![prog("twin-a", 100, wsd), prog("twin-b", 100, wsd)]),
+        // Shared prefix, unaligned boundaries.
+        fix("missed-sharing", vec![prog("fork-60", 60, wsd), prog("fork-120", 120, wsd)]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bare() -> VetContext<'static> {
+        VetContext::default()
+    }
+
+    #[test]
+    fn every_fixture_lint_fires_exactly_once() {
+        let fixtures = violation_fixtures();
+        assert!(fixtures.len() >= 8, "the catalog demands >= 8 demonstrated lints");
+        for f in &fixtures {
+            let ctx = VetContext {
+                manifest: None,
+                t_mix_steps: f.t_mix_steps.as_deref(),
+                waive: &[],
+            };
+            let report = vet_plans(&f.plans, &ctx).unwrap();
+            let hits =
+                report.findings.iter().filter(|x| x.lint == f.lint).count();
+            assert_eq!(
+                hits, 1,
+                "fixture for '{}' must fire exactly once, got {hits}:\n{}",
+                f.lint,
+                report.render()
+            );
+        }
+    }
+
+    #[test]
+    fn fixture_lints_cover_error_and_warning_severities_and_fail_the_set() {
+        let fixtures = violation_fixtures();
+        let demonstrated: Vec<&str> = fixtures.iter().map(|f| f.lint).collect();
+        for lint in &demonstrated {
+            assert!(lint_spec(lint).is_some(), "fixture lint '{lint}' missing from CATALOG");
+        }
+        assert!(demonstrated
+            .iter()
+            .any(|l| lint_spec(l).unwrap().severity == Severity::Error));
+        assert!(demonstrated
+            .iter()
+            .any(|l| lint_spec(l).unwrap().severity == Severity::Warning));
+        // The combined corpus (sans the tau-tmix context) must FAIL the set.
+        let all: Vec<RunPlan> =
+            fixtures.into_iter().flat_map(|f| f.plans).collect();
+        let report = vet_plans(&all, &bare()).unwrap();
+        assert!(!report.ok());
+        assert!(report.errors() >= 4, "{}", report.render());
+    }
+
+    #[test]
+    fn clean_plans_pass_and_gate_lets_them_through() {
+        let sched = Schedule::Wsd { peak: 0.01, warmup_frac: 0.02, decay_frac: 0.2 };
+        let plan = crate::coordinator::RunBuilder::progressive(
+            "clean",
+            "gpt2.l0",
+            "gpt2.l3",
+            90,
+            240,
+            sched,
+            ExpandSpec::default(),
+        )
+        .eval_every(7)
+        .build()
+        .unwrap();
+        let report = vet_plans(std::slice::from_ref(&plan), &bare()).unwrap();
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.errors(), 0);
+        gate(std::slice::from_ref(&plan), None, "test").unwrap();
+    }
+
+    #[test]
+    fn gate_blocks_errors_and_names_the_entry_point() {
+        let bad = violation_fixtures()
+            .into_iter()
+            .find(|f| f.lint == "boundary-in-decay")
+            .unwrap();
+        let err = gate(&bad.plans, None, "sweep").unwrap_err().to_string();
+        assert!(err.contains("sweep:"), "{err}");
+        assert!(err.contains("boundary-in-decay"), "{err}");
+        assert!(err.contains("nothing was executed"), "{err}");
+    }
+
+    #[test]
+    fn waivers_are_recorded_and_downgrade_errors() {
+        let bad = violation_fixtures()
+            .into_iter()
+            .find(|f| f.lint == "boundary-in-decay")
+            .unwrap();
+        let waive = vec!["boundary-in-decay".to_string()];
+        let ctx = VetContext { manifest: None, t_mix_steps: None, waive: &waive };
+        let report = vet_plans(&bad.plans, &ctx).unwrap();
+        assert!(report.ok(), "waived error must not fail the report");
+        assert!(report.findings.iter().any(|f| f.waived));
+        assert_eq!(report.waived, waive);
+        assert!(report.render().contains("waiv"));
+        // Unknown waive names are an error, not a silent no-op.
+        let bogus = vec!["not-a-lint".to_string()];
+        let ctx = VetContext { manifest: None, t_mix_steps: None, waive: &bogus };
+        assert!(vet_plans(&bad.plans, &ctx).is_err());
+    }
+
+    #[test]
+    fn report_json_mirrors_the_audit_shape() {
+        let bad = violation_fixtures()
+            .into_iter()
+            .find(|f| f.lint == "missed-sharing")
+            .unwrap();
+        let report = vet_plans(&bad.plans, &bare()).unwrap();
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"ok\""), "{json}");
+        assert!(json.contains("\"findings\""), "{json}");
+        assert!(json.contains("\"severity\""), "{json}");
+        assert!(json.contains("missed-sharing"), "{json}");
+        // Warnings alone keep the set green.
+        assert!(report.ok());
+        assert!(report.warnings() >= 1);
+    }
+
+    #[test]
+    fn rewarm_rejoin_is_checked_numerically() {
+        // A builder-valid plan whose ramp re-joins exactly: no finding.
+        let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.0 };
+        let rounds = vec![crate::coordinator::LadderRound::new(
+            "gpt2.l2",
+            100,
+            ExpandSpec::default(),
+        )
+        .rewarm(10)];
+        let plan = crate::coordinator::RunBuilder::ladder("rw", "gpt2.l0", &rounds, 400, sched)
+            .build()
+            .unwrap();
+        let report = vet_plans(std::slice::from_ref(&plan), &bare()).unwrap();
+        assert!(
+            report.findings.iter().all(|f| f.lint != "rewarm-discontinuity"),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn depth_parse_falls_back_to_cfg_id_suffix() {
+        let ctx = bare();
+        let pass = Pass { ctx: &ctx, findings: Vec::new() };
+        assert_eq!(pass.depth_of("gpt2.l0"), Some(0));
+        assert_eq!(pass.depth_of("deepseekv3.l4"), Some(4));
+        assert_eq!(pass.depth_of("l12"), Some(12));
+        assert_eq!(pass.depth_of("gpt2.l2.adamw"), None);
+        assert_eq!(pass.depth_of("resnet18"), None);
+    }
+}

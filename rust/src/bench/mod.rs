@@ -75,6 +75,11 @@ impl Ctx {
     pub fn run_logged(&self, target: &str, plan: RunPlan) -> Result<RunResult> {
         let t0 = std::time::Instant::now();
         let name = plan.name().to_string();
+        crate::audit::vet::gate(
+            std::slice::from_ref(&plan),
+            Some(&self.manifest),
+            target,
+        )?;
         let mut driver = RunDriver::new(self.trainer(), plan)?;
         driver.run_to_end()?;
         let res = driver.finish();
@@ -98,6 +103,9 @@ impl Ctx {
     pub fn sweep_logged(&self, target: &str, plans: Vec<RunPlan>) -> Result<SweepOutcome> {
         let t0 = std::time::Instant::now();
         let n = plans.len();
+        // Vet before the store opens: a rejected bench grid leaves zero
+        // store writes behind (DESIGN.md §13).
+        crate::audit::vet::gate(&plans, Some(&self.manifest), target)?;
         let mut sweep = Sweep::new(self.trainer());
         if let Some(dir) = &self.store_dir {
             sweep.store(dir)?;

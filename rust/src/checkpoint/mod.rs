@@ -105,7 +105,7 @@ pub fn load(path: &Path, entry: &ConfigEntry) -> Result<ModelState> {
 }
 
 fn read_state(f: &mut impl Read, entry: &ConfigEntry) -> Result<ModelState> {
-    let np = read_u64(f)? as usize;
+    let np = read_count(f)?;
     if np != entry.params.len() {
         bail!("checkpoint has {np} params, manifest wants {}", entry.params.len());
     }
@@ -117,7 +117,7 @@ fn read_state(f: &mut impl Read, entry: &ConfigEntry) -> Result<ModelState> {
         }
         params.push(t);
     }
-    let no = read_u64(f)? as usize;
+    let no = read_count(f)?;
     if no != entry.opt_state.len() {
         bail!("checkpoint has {no} opt tensors, manifest wants {}", entry.opt_state.len());
     }
@@ -234,8 +234,8 @@ pub fn read_snapshot_from(f: &mut impl Read, entry: &ConfigEntry) -> Result<Driv
     if cfg_id != entry.cfg_id {
         bail!("snapshot is for config '{cfg_id}', expected '{}'", entry.cfg_id);
     }
-    let step = read_u64(f)? as usize;
-    let stage_idx = read_u64(f)? as usize;
+    let step = read_count(f)?;
+    let stage_idx = read_count(f)?;
     let data_seed = read_u64(f)?;
     let train_windows = read_u64(f)?;
     let val_windows = read_u64(f)?;
@@ -282,13 +282,13 @@ pub(crate) fn write_ledger(f: &mut impl Write, ledger: &FlopLedger) -> Result<()
 
 pub(crate) fn read_ledger(f: &mut impl Read) -> Result<FlopLedger> {
     let mut ledger = FlopLedger { total: read_f64(f)?, tokens: read_u64(f)?, stages: Vec::new() };
-    let n_stages = read_u64(f)? as usize;
+    let n_stages = read_count(f)?;
     if n_stages > 1 << 16 {
         bail!("implausible ledger stage count {n_stages}");
     }
     for _ in 0..n_stages {
         let cfg = read_str(f)?;
-        let steps = read_u64(f)? as usize;
+        let steps = read_count(f)?;
         let flops = read_f64(f)?;
         ledger.stages.push((cfg, steps, flops));
     }
@@ -309,14 +309,14 @@ pub(crate) fn write_curve_points(f: &mut impl Write, points: &[CurvePoint]) -> R
 }
 
 pub(crate) fn read_curve_points(f: &mut impl Read) -> Result<Vec<CurvePoint>> {
-    let n_points = read_u64(f)? as usize;
+    let n_points = read_count(f)?;
     if n_points > 1 << 24 {
         bail!("implausible curve length {n_points}");
     }
     let mut points = Vec::with_capacity(n_points.min(1 << 16));
     for _ in 0..n_points {
         points.push(CurvePoint {
-            step: read_u64(f)? as usize,
+            step: read_count(f)?,
             tokens: read_u64(f)?,
             flops: read_f64(f)?,
             train_loss: read_f32(f)?,
@@ -337,13 +337,13 @@ pub(crate) fn write_boundaries(f: &mut impl Write, boundaries: &[(usize, String)
 }
 
 pub(crate) fn read_boundaries(f: &mut impl Read) -> Result<Vec<(usize, String)>> {
-    let n_bounds = read_u64(f)? as usize;
+    let n_bounds = read_count(f)?;
     if n_bounds > 1 << 16 {
         bail!("implausible boundary count {n_bounds}");
     }
     let mut boundaries = Vec::with_capacity(n_bounds);
     for _ in 0..n_bounds {
-        let step = read_u64(f)? as usize;
+        let step = read_count(f)?;
         boundaries.push((step, read_str(f)?));
     }
     Ok(boundaries)
@@ -364,16 +364,16 @@ pub(crate) fn write_layer_stats(f: &mut impl Write, rows: &[LayerStatsRow]) -> R
 }
 
 pub(crate) fn read_layer_stats(f: &mut impl Read) -> Result<Vec<LayerStatsRow>> {
-    let n_rows = read_u64(f)? as usize;
+    let n_rows = read_count(f)?;
     if n_rows > 1 << 24 {
         bail!("implausible layer-stats count {n_rows}");
     }
     let mut rows = Vec::with_capacity(n_rows.min(1 << 16));
     for _ in 0..n_rows {
         rows.push(LayerStatsRow {
-            step: read_u64(f)? as usize,
+            step: read_count(f)?,
             tokens: read_u64(f)?,
-            layer: read_u64(f)? as usize,
+            layer: read_count(f)?,
             rung: read_str(f)?,
             grad_norm: read_f32(f)?,
             act_rms: read_f32(f)?,
@@ -391,6 +391,15 @@ pub(crate) fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// Decode a u64 count (steps, lengths, indices) into `usize`, failing
+/// loudly when it does not fit the platform — a bare `as usize` on a
+/// 32-bit target truncates step arithmetic silently instead of erroring
+/// (enforced by the `as-truncation` audit lint).
+pub(crate) fn read_count(f: &mut impl Read) -> Result<usize> {
+    let v = read_u64(f)?;
+    usize::try_from(v).map_err(|_| anyhow!("count {v} does not fit usize on this platform"))
 }
 
 pub(crate) fn write_f32(f: &mut impl Write, v: f32) -> Result<()> {
@@ -419,7 +428,7 @@ pub(crate) fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
 }
 
 pub(crate) fn read_str(f: &mut impl Read) -> Result<String> {
-    let n = read_u64(f)? as usize;
+    let n = read_count(f)?;
     if n > 1 << 20 {
         bail!("implausible string length {n}");
     }
@@ -448,17 +457,18 @@ pub(crate) fn write_tensor(f: &mut impl Write, name: &str, t: &Tensor) -> Result
 
 pub(crate) fn read_tensor(f: &mut impl Read) -> Result<(String, Tensor)> {
     let name = read_str(f)?;
-    let rank = read_u64(f)? as usize;
+    let rank = read_count(f)?;
     if rank > 8 {
         bail!("implausible rank {rank}");
     }
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
         let d = read_u64(f)?;
-        if d as usize > MAX_TENSOR_ELEMS {
-            bail!("implausible tensor dim {d}");
-        }
-        shape.push(d as usize);
+        let d = usize::try_from(d)
+            .ok()
+            .filter(|&d| d <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| anyhow!("implausible tensor dim {d}"))?;
+        shape.push(d);
     }
     let n = shape
         .iter()

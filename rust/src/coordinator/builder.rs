@@ -12,6 +12,39 @@ use anyhow::{bail, Result};
 use crate::expansion::ExpandSpec;
 use crate::schedule::Schedule;
 
+/// Hyperparameter-transfer rule applied across a plan's depth changes.
+///
+/// `Fixed` is the paper's baseline: every stage reads the same base schedule
+/// (plus the per-stage re-warm ramp). `CompleteP` selects depth-scaled
+/// transfer à la CompleteP (arXiv:2505.01618), where per-layer learning
+/// rates rescale with the depth ratio at each expansion. The engine-side
+/// rescaling is a ROADMAP item; today the rule is plan metadata that the
+/// digest, the wire codec, and `repro vet` (which rejects grids mixing
+/// incompatible rules across rungs) all carry faithfully.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransferRule {
+    #[default]
+    Fixed,
+    CompleteP,
+}
+
+impl TransferRule {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferRule::Fixed => "fixed",
+            TransferRule::CompleteP => "completep",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<TransferRule> {
+        match name {
+            "fixed" => Ok(TransferRule::Fixed),
+            "completep" => Ok(TransferRule::CompleteP),
+            other => bail!("unknown transfer rule '{other}' (expected fixed|completep)"),
+        }
+    }
+}
+
 /// How a stage's initial state is produced from the previous stage.
 #[derive(Debug, Clone)]
 pub enum Transition {
@@ -78,6 +111,9 @@ pub struct RunPlan {
     /// trajectory — and the curve — is byte-identical either way; only the
     /// run's *outputs* differ, which is why the flag is part of the digest.
     diag: bool,
+    /// HP-transfer rule across depth changes (digest-relevant metadata;
+    /// see [`TransferRule`]).
+    transfer: TransferRule,
 }
 
 impl RunPlan {
@@ -112,6 +148,11 @@ impl RunPlan {
     /// Whether per-layer depth diagnostics are recorded (see [`crate::diag`]).
     pub fn diag(&self) -> bool {
         self.diag
+    }
+
+    /// HP-transfer rule across depth changes (see [`TransferRule`]).
+    pub fn transfer(&self) -> TransferRule {
+        self.transfer
     }
 
     /// First stage-boundary step, or the horizon if the plan is single-stage.
@@ -154,12 +195,14 @@ impl RunPlan {
     /// first boundary — the [`crate::coordinator::Sweep`] shares the stage-0
     /// segment across plans with equal prefix keys.
     pub fn prefix_key(&self) -> String {
-        // The diag tag is appended only when on, so every pre-diagnostics
-        // key (and the trunk digests derived from it) is unchanged. It must
-        // be part of the key: a diag-on tail forked from a diag-off trunk
-        // snapshot would be missing the trunk segment's layer-stats rows.
+        // The diag and transfer tags are appended only when non-default, so
+        // every pre-existing key (and the trunk digests derived from it) is
+        // unchanged. Both must be part of the key: a diag-on tail forked
+        // from a diag-off trunk snapshot would be missing the trunk
+        // segment's layer-stats rows, and a CompleteP run's stage-0 LRs
+        // diverge from a Fixed run's once the engine rescaling lands.
         format!(
-            "{}|{}|{}|{}|{}|{:?}{}",
+            "{}|{}|{}|{}|{}|{:?}{}{}",
             self.stages[0].cfg_id,
             self.total_steps,
             self.eval_every,
@@ -167,6 +210,7 @@ impl RunPlan {
             self.seed,
             self.schedule,
             if self.diag { "|diag" } else { "" },
+            if self.transfer == TransferRule::CompleteP { "|completep" } else { "" },
         )
     }
 
@@ -199,6 +243,11 @@ impl RunPlan {
             // never be confused with the plain run's.
             if self.diag { "|diag=on" } else { "" },
         );
+        if self.transfer == TransferRule::CompleteP {
+            // Same only-when-set convention as the diag tag: Fixed-rule
+            // plans keep every pre-CompleteP digest and store key.
+            s.push_str("|transfer=completep");
+        }
         for st in &self.stages {
             let _ = write!(
                 s,
@@ -319,7 +368,12 @@ impl RunPlan {
                 }
             }
         }
-        write_u64(f, self.diag as u64)?;
+        // Trailing flag word: bit 0 = diag, bit 1 = CompleteP transfer.
+        // Default-rule plans write the same bytes as before the transfer
+        // field existed, so old frames (and golden vectors) are unchanged.
+        let flags =
+            self.diag as u64 | (((self.transfer == TransferRule::CompleteP) as u64) << 1);
+        write_u64(f, flags)?;
         Ok(())
     }
 
@@ -362,12 +416,55 @@ impl RunPlan {
             };
             stages.push(PlanStage { cfg_id, from_step, transition, rewarm_steps });
         }
-        let diag = match read_u64(f)? {
-            0 => false,
-            1 => true,
-            other => bail!("unknown diag tag {other} in plan frame"),
-        };
-        Ok(RunPlan { name, stages, total_steps, schedule, eval_every, eval_batches, seed, diag })
+        let flags = read_u64(f)?;
+        if flags > 3 {
+            bail!("unknown plan flag word {flags} in plan frame");
+        }
+        let diag = flags & 1 != 0;
+        let transfer =
+            if flags & 2 != 0 { TransferRule::CompleteP } else { TransferRule::Fixed };
+        Ok(RunPlan {
+            name,
+            stages,
+            total_steps,
+            schedule,
+            eval_every,
+            eval_batches,
+            seed,
+            diag,
+            transfer,
+        })
+    }
+
+    /// Assemble a plan from raw parts, **bypassing build-time validation**.
+    ///
+    /// Exists so [`crate::audit::vet`] can hold deliberately malformed plans
+    /// (seeded violation fixtures, plans loaded from untrusted sources) that
+    /// [`RunBuilder::build`] would reject. Never feed such a plan to a
+    /// driver; execution entry points assume builder- or wire-validated
+    /// structure.
+    pub(crate) fn from_raw_parts(
+        name: String,
+        stages: Vec<PlanStage>,
+        total_steps: usize,
+        schedule: Schedule,
+        eval_every: usize,
+        eval_batches: usize,
+        seed: u64,
+        diag: bool,
+        transfer: TransferRule,
+    ) -> RunPlan {
+        RunPlan {
+            name,
+            stages,
+            total_steps,
+            schedule,
+            eval_every,
+            eval_batches,
+            seed,
+            diag,
+            transfer,
+        }
     }
 }
 
@@ -446,6 +543,7 @@ pub struct RunBuilder {
     eval_batches: usize,
     seed: u64,
     diag: bool,
+    transfer: TransferRule,
 }
 
 impl RunBuilder {
@@ -459,6 +557,7 @@ impl RunBuilder {
             eval_batches: 4,
             seed: 17,
             diag: false,
+            transfer: TransferRule::default(),
         }
     }
 
@@ -546,6 +645,12 @@ impl RunBuilder {
     /// Record per-layer depth diagnostics at every eval point (default off).
     pub fn diag(mut self, on: bool) -> RunBuilder {
         self.diag = on;
+        self
+    }
+
+    /// HP-transfer rule across depth changes (default [`TransferRule::Fixed`]).
+    pub fn transfer(mut self, rule: TransferRule) -> RunBuilder {
+        self.transfer = rule;
         self
     }
 
@@ -642,8 +747,12 @@ impl RunBuilder {
                 self.stages.get(i + 1).map(|n| n.from_step).unwrap_or(total_steps);
             if st.from_step + st.rewarm_steps > stage_end {
                 bail!(
-                    "run plan '{}': re-warm segment at step {} ({} steps) runs past the end of its stage at {stage_end}",
+                    "run plan '{}': round {} (into '{}'): re-warm segment at step {} ({} steps) \
+                     runs past the end of its stage at {stage_end} — shorten the round's \
+                     rewarm or move the next boundary",
                     self.name,
+                    i,
+                    st.cfg_id,
                     st.from_step,
                     st.rewarm_steps
                 );
@@ -665,6 +774,7 @@ impl RunBuilder {
             eval_batches: self.eval_batches,
             seed: self.seed,
             diag: self.diag,
+            transfer: self.transfer,
         })
     }
 }
@@ -983,6 +1093,55 @@ mod tests {
         let mut bytes = Vec::new();
         diag.write_to(&mut bytes).unwrap();
         assert!(RunPlan::read_from(&mut &bytes[..]).unwrap().diag());
+    }
+
+    #[test]
+    fn transfer_rule_splits_digests_but_leaves_fixed_plans_untouched() {
+        let fixed = RunBuilder::fixed("r", "l0", 100, sched()).build().unwrap();
+        assert_eq!(fixed.transfer(), TransferRule::Fixed, "transfer defaults to fixed");
+        let cp = RunBuilder::fixed("r", "l0", 100, sched())
+            .transfer(TransferRule::CompleteP)
+            .build()
+            .unwrap();
+        assert_eq!(cp.transfer(), TransferRule::CompleteP);
+        // The rule shapes per-stage LRs once the engine rescaling lands, so
+        // digests, prefix keys, and trunk digests must all split now.
+        assert_ne!(fixed.digest(), cp.digest());
+        assert_ne!(fixed.prefix_key(), cp.prefix_key());
+        assert_ne!(fixed.trunk_digest(), cp.trunk_digest());
+        // Fixed-rule plans are tag-free: every pre-CompleteP digest and
+        // store key is unchanged by this feature.
+        assert!(!fixed.canonical_desc().contains("transfer"));
+        assert!(!fixed.prefix_key().contains("completep"));
+        assert!(cp.canonical_desc().contains("|transfer=completep"));
+        // The rule survives the wire, and fixed-rule frames are
+        // byte-identical to the pre-transfer encoding (flag word 0/1).
+        let mut bytes = Vec::new();
+        cp.write_to(&mut bytes).unwrap();
+        let back = RunPlan::read_from(&mut &bytes[..]).unwrap();
+        assert_eq!(back.transfer(), TransferRule::CompleteP);
+        assert_eq!(back.digest(), cp.digest());
+        // Name round-trip for the rule's CLI surface.
+        assert_eq!(TransferRule::from_name("completep").unwrap(), TransferRule::CompleteP);
+        assert_eq!(TransferRule::from_name("fixed").unwrap(), TransferRule::Fixed);
+        assert!(TransferRule::from_name("mup").is_err());
+        assert_eq!(TransferRule::CompleteP.name(), "completep");
+    }
+
+    #[test]
+    fn overlong_rewarm_error_names_the_round_and_config() {
+        let rounds = vec![
+            LadderRound::new("l1", 40, ExpandSpec::default()),
+            LadderRound::new("l3", 80, ExpandSpec::default()).rewarm(200),
+        ];
+        let err = RunBuilder::ladder("lad", "l0", &rounds, 200, sched())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("round 2"), "error should name the round: {err}");
+        assert!(err.contains("'l3'"), "error should name the round's config: {err}");
+        assert!(err.contains("run plan 'lad'"), "error should name the plan: {err}");
+        assert!(err.contains("200 steps"), "error should carry the segment length: {err}");
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod observer;
 pub mod recipe;
 pub mod sweep;
 
-pub use builder::{LadderRound, PlanStage, RunBuilder, RunPlan, Transition};
+pub use builder::{LadderRound, PlanStage, RunBuilder, RunPlan, TransferRule, Transition};
 pub use driver::RunDriver;
 pub use observer::{
     BoundaryCheckpointer, BoundaryEvent, ChunkEvent, CurveLogger, EvalEvent, EvalKind,

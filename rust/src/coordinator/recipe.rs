@@ -30,7 +30,7 @@ use crate::metrics::{mixing_point, Curve};
 use crate::runtime::{Engine, Manifest};
 use crate::schedule::Schedule;
 
-use super::builder::{LadderRound, RunPlan};
+use super::builder::{LadderRound, RunPlan, TransferRule};
 use super::{RunBuilder, RunDriver, RunResult, Trainer};
 
 /// How a probe pair concluded. A *stall* — neither driver advancing while
@@ -448,6 +448,9 @@ pub struct LadderGridSpec<'a> {
     pub strategies: Option<Vec<String>>,
     /// Eval cadence override applied to every plan.
     pub eval_every: Option<usize>,
+    /// HP-transfer rule stamped on every plan (the vet rejects grids that
+    /// mix rules across rungs — arXiv:2505.01618).
+    pub transfer: TransferRule,
 }
 
 /// Build the ladder plan grid for `spec`: one plan per strategy variant,
@@ -497,7 +500,8 @@ pub fn ladder_grid(spec: &LadderGridSpec) -> Result<Vec<RunPlan>> {
         let (_, rounds) =
             rounds_from_taus(rungs, taus.clone(), spec.steps, vspec, spec.rewarm)?;
         let mut b = RunBuilder::ladder(vname.as_str(), rungs[0], &rounds, spec.steps, spec.sched)
-            .seed(spec.seed);
+            .seed(spec.seed)
+            .transfer(spec.transfer);
         if let Some(e) = spec.eval_every {
             b = b.eval_every(e);
         }

@@ -134,6 +134,10 @@ impl<'a> Sweep<'a> {
         if plans.is_empty() {
             bail!("sweep has no plans");
         }
+        // Last-line pre-flight (DESIGN.md §13): whatever entry point
+        // assembled these plans, contract errors must never reach an
+        // engine. Warnings are `repro vet`'s surface, not the sweep's.
+        crate::audit::vet::gate(&plans, Some(self.trainer.manifest), "sweep")?;
         JobGraph::lower(plans)
     }
 

@@ -46,7 +46,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::{self, read_str, read_u64, write_str, write_u64, DriverSnapshot};
+use crate::checkpoint::{self, read_count, read_str, read_u64, write_str, write_u64, DriverSnapshot};
 use crate::coordinator::{RunBuilder, RunPlan};
 use crate::exec::sched::{JobOutput, WorkItem};
 use crate::exec::JobId;
@@ -293,14 +293,14 @@ fn decode_item(f: &mut impl Read, manifest: &Manifest) -> Result<WireItem> {
         0 => {
             let job = read_u64(f)? as JobId;
             let plan = RunPlan::read_from(f)?;
-            let fork_step = read_u64(f)? as usize;
+            let fork_step = read_count(f)?;
             let result_key = read_str(f)?;
             let snap = read_wire_snap(f, manifest)?;
             WireItem::Trunk { job, plan, fork_step, result_key, snap }
         }
         1 => {
             let job = read_u64(f)? as JobId;
-            let plan_idx = read_u64(f)? as usize;
+            let plan_idx = read_count(f)?;
             let plan = RunPlan::read_from(f)?;
             let keep_state = match read_u64(f)? {
                 0 => false,
@@ -353,7 +353,7 @@ fn read_wire_snap(f: &mut impl Read, manifest: &Manifest) -> Result<WireSnap> {
         1 => {
             let key = read_str(f)?;
             let cfg_id = read_str(f)?;
-            let len = read_u64(f)? as usize;
+            let len = read_count(f)?;
             if len >= MAX_FRAME {
                 bail!("implausible inline snapshot length {len} in fabric frame");
             }
@@ -438,7 +438,7 @@ fn decode(kind: u8, payload: &[u8], manifest: &Manifest) -> Result<Msg> {
                 0 => Err(read_str(f)?),
                 1 => Ok(JobOutput::Snapshot(Box::new(read_snap(f, manifest)?))),
                 2 => {
-                    let plan_idx = read_u64(f)? as usize;
+                    let plan_idx = read_count(f)?;
                     let name = read_str(f)?;
                     let (result, state) = store::read_run_entry(f, &name, true)?;
                     Ok(JobOutput::Run {
@@ -491,6 +491,7 @@ pub(crate) fn send_msg(w: &mut impl Write, msg: &Msg, manifest: &Manifest) -> Re
     if payload.len() >= MAX_FRAME {
         bail!("fabric frame too large ({} bytes)", payload.len());
     }
+    // audit:allow(as-truncation): bounded by the MAX_FRAME guard above
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(&[msg.kind()])?;
     w.write_all(&payload)?;
@@ -517,7 +518,7 @@ fn read_exact_chunked(r: &mut impl Read, len: usize, what: &str) -> Result<Vec<u
 pub(crate) fn recv_msg(r: &mut impl Read, manifest: &Manifest) -> Result<Msg> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4).context("reading fabric frame header")?;
-    let len = u32::from_le_bytes(len4) as usize;
+    let len = u32::from_le_bytes(len4) as usize; // audit:allow(as-truncation): u32 to usize is widening on every supported target
     if len >= MAX_FRAME {
         bail!("implausible fabric frame length {len}");
     }

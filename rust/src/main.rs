@@ -39,7 +39,7 @@ use deep_progressive::cli::{Args, CommandSpec};
 use deep_progressive::convex::{simulate, ConvexProblem, Teleport};
 use deep_progressive::coordinator::{
     recipe, LossSpikeDetector, PeriodicCheckpointer, ProgressPrinter, ProgressSink, RunBuilder,
-    RunDriver, RunPlan, Sweep, Trainer,
+    RunDriver, RunPlan, Sweep, Trainer, TransferRule,
 };
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::diag;
@@ -82,7 +82,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
     const SWEEP: CommandSpec = CommandSpec {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
-            "strategies", "insertion", "os", "expand-seed", "workers", "store-dir",
+            "strategies", "insertion", "os", "expand-seed", "workers", "store-dir", "transfer",
         ],
         switches: &["progress"],
     };
@@ -97,7 +97,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
             "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
-            "workers", "store-dir", "probe-steps", "tol",
+            "workers", "store-dir", "probe-steps", "tol", "transfer",
         ],
         switches: &["progress", "probe"],
     };
@@ -105,7 +105,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &[
             "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
             "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
-            "workers", "store-dir", "listen", "heartbeat-timeout", "stats-json",
+            "workers", "store-dir", "listen", "heartbeat-timeout", "stats-json", "transfer",
         ],
         switches: &["progress", "resume"],
     };
@@ -119,6 +119,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &[
             "artifacts", "steps", "seed", "lr", "sched", "decay-frac", "eval-every", "taus",
             "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed", "timeout",
+            "transfer",
         ],
         switches: &[],
     };
@@ -143,6 +144,14 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         flags: &["src-dir", "golden", "report", "budget", "sample", "seed"],
         switches: &["lints", "codecs", "model-check", "fix-allows", "bless"],
     };
+    const VET: CommandSpec = CommandSpec {
+        flags: &[
+            "artifacts", "out", "steps", "seed", "lr", "sched", "decay-frac", "eval-every",
+            "taus", "rewarm", "strategy", "strategies", "insertion", "os", "expand-seed",
+            "transfer", "report", "waive",
+        ],
+        switches: &["fixtures"],
+    };
     match cmd {
         "train" => Some(TRAIN),
         "progressive" => Some(PROGRESSIVE),
@@ -157,6 +166,7 @@ fn spec_for(cmd: &str) -> Option<CommandSpec> {
         "convex" => Some(CONVEX),
         "expand-ckpt" => Some(EXPAND_CKPT),
         "audit" => Some(AUDIT),
+        "vet" => Some(VET),
         "list" | "list-benches" | "inspect" => Some(LISTING),
         c if c.starts_with("bench-") => Some(BENCH),
         _ => None,
@@ -184,6 +194,12 @@ fn expand_from(args: &Args) -> Result<ExpandSpec> {
         },
         seed: args.get_u64("expand-seed", 7),
     })
+}
+
+/// `--transfer`: HP-transfer rule metadata stamped on every plan in a grid
+/// (DESIGN.md §13; the vet's transfer-mix lint rejects grids mixing rules).
+fn transfer_from(args: &Args) -> Result<TransferRule> {
+    TransferRule::from_name(args.get_str("transfer", "fixed"))
 }
 
 fn apply_eval_every(mut b: RunBuilder, args: &Args) -> RunBuilder {
@@ -277,6 +293,7 @@ fn ladder_grid(
         sched,
         base: expand_from(args)?,
         rewarm: args.get_usize("rewarm", 0),
+        transfer: transfer_from(args)?,
         taus: args
             .get("taus")
             .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect()),
@@ -478,6 +495,12 @@ fn main() -> Result<()> {
                 &args,
             )
             .build()?;
+            // Pre-flight vet before any store exists (DESIGN.md §13).
+            deep_progressive::audit::vet::gate(
+                &[grown.clone(), scratch.clone()],
+                Some(&manifest),
+                "diagnose",
+            )?;
             let workers = workers_from(&args)?;
             let mut sweep = Sweep::new(trainer);
             if args.has("progress") {
@@ -573,17 +596,10 @@ fn main() -> Result<()> {
                 .collect();
             let strategies: Vec<&str> = args.get_str("strategies", "random,zero").split(',').collect();
             let base = expand_from(&args)?;
+            let transfer = transfer_from(&args)?;
             let workers = workers_from(&args)?;
-            let mut sweep = Sweep::new(trainer);
-            if args.has("progress") {
-                sweep.progress(ProgressSink::stderr());
-            }
-            if let Some(dir) = args.get("store-dir") {
-                // Durable sweep: completed runs + trunk snapshots persist in
-                // the store; an interrupted invocation resumes from it.
-                sweep.store(dir)?;
-            }
             let mut labels = Vec::new();
+            let mut plans = Vec::new();
             for &tau in &taus {
                 for sname in &strategies {
                     let plan = RunBuilder::progressive(
@@ -596,10 +612,26 @@ fn main() -> Result<()> {
                         ExpandSpec { strategy: strategy_from_name(sname)?, ..base },
                     )
                     .seed(seed)
+                    .transfer(transfer)
                     .build()?;
                     labels.push((tau, sname.to_string()));
-                    sweep.add(plan);
+                    plans.push(plan);
                 }
+            }
+            // Pre-flight vet before the store opens: a rejected grid leaves
+            // zero store writes behind (DESIGN.md §13).
+            deep_progressive::audit::vet::gate(&plans, Some(&manifest), "sweep")?;
+            let mut sweep = Sweep::new(trainer);
+            if args.has("progress") {
+                sweep.progress(ProgressSink::stderr());
+            }
+            if let Some(dir) = args.get("store-dir") {
+                // Durable sweep: completed runs + trunk snapshots persist in
+                // the store; an interrupted invocation resumes from it.
+                sweep.store(dir)?;
+            }
+            for plan in plans {
+                sweep.add(plan);
             }
             let outcome = sweep.run_parallel(workers)?;
             for ((tau, sname), res) in labels.iter().zip(&outcome.results) {
@@ -656,14 +688,28 @@ fn main() -> Result<()> {
                 }
                 // Re-apply the launcher's cadence/seed knobs to the
                 // controller's rounds (its plan keeps builder defaults).
-                vec![apply_eval_every(
+                let plans = vec![apply_eval_every(
                     RunBuilder::ladder(name.as_str(), rungs[0], &outcome.rounds, steps, sched)
-                        .seed(seed),
+                        .seed(seed)
+                        .transfer(transfer_from(&args)?),
                     &args,
                 )
-                .build()?]
+                .build()?];
+                // Probe-driven placement gets the stronger vet: each τ is
+                // cross-checked against its round's measured t_mix.
+                let t_mix: Vec<Option<usize>> =
+                    outcome.probes.iter().map(|p| p.t_mix_steps).collect();
+                let ctx = deep_progressive::audit::vet::VetContext {
+                    manifest: Some(&manifest),
+                    t_mix_steps: Some(&t_mix),
+                    waive: &[],
+                };
+                deep_progressive::audit::vet::gate_with(&plans, &ctx, "ladder")?;
+                plans
             } else {
-                ladder_grid(&args, &rungs, steps, seed, sched, USAGE)?
+                let plans = ladder_grid(&args, &rungs, steps, seed, sched, USAGE)?;
+                deep_progressive::audit::vet::gate(&plans, Some(&manifest), "ladder")?;
+                plans
             };
 
             // Run through the sweep machinery so --workers and --store-dir
@@ -717,6 +763,9 @@ fn main() -> Result<()> {
                 .get("listen")
                 .ok_or_else(|| anyhow::anyhow!("missing --listen ADDR — usage: {USAGE}"))?;
             let plans = ladder_grid(&args, &rungs, steps, seed, schedule_from(&args), USAGE)?;
+            // Vet before listening: an unvetted grid never binds a socket,
+            // opens a store, or dispatches a job (DESIGN.md §13).
+            deep_progressive::audit::vet::gate(&plans, Some(&manifest), "serve")?;
             let graph = JobGraph::lower(plans)?;
             let server = FabricServer::bind(listen)?;
             println!("fabric coordinator listening on {}", server.local_addr()?);
@@ -829,6 +878,7 @@ fn main() -> Result<()> {
                 anyhow::bail!("a ladder needs at least two configs — usage: {USAGE}");
             }
             let plans = ladder_grid(&args, &rungs, steps, seed, schedule_from(&args), USAGE)?;
+            deep_progressive::audit::vet::gate(&plans, Some(&manifest), "chaos")?;
             let timeout = Duration::from_secs(args.get_u64("timeout", 120));
             run_chaos(&manifest, &corpus, &plans, timeout)
         }
@@ -993,6 +1043,79 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        "vet" => {
+            use deep_progressive::audit::vet;
+            // Symbolic pre-flight over a plan grid: no engine, no store, no
+            // socket — the same checks every execution entry point gates on,
+            // plus warning-severity findings those gates stay silent about.
+            const USAGE: &str = "vet <cfg0> <cfg1> [<cfg2> ...] [--taus F,F,..] \
+                                 [--strategies a,b] [--transfer fixed|completep] \
+                                 [--report PATH] [--waive lint,lint] [--fixtures]";
+            if args.has("fixtures") {
+                // Seeded-violation corpus: every demonstrable lint planted
+                // once; always exits nonzero (CI proves the gate bites).
+                let fixtures = vet::violation_fixtures();
+                let mut planted = 0usize;
+                let mut broken = Vec::new();
+                for fx in &fixtures {
+                    let ctx = vet::VetContext {
+                        t_mix_steps: fx.t_mix_steps.as_deref(),
+                        ..Default::default()
+                    };
+                    let report = vet::vet_plans(&fx.plans, &ctx)?;
+                    let hits =
+                        report.findings.iter().filter(|f| f.lint == fx.lint).count();
+                    println!(
+                        "fixture {:<22} {} ({} finding(s) for its lint)",
+                        fx.lint,
+                        if hits == 1 { "fires" } else { "BROKEN" },
+                        hits,
+                    );
+                    if hits != 1 {
+                        broken.push(fx.lint);
+                    }
+                    planted += report.findings.len();
+                }
+                if !broken.is_empty() {
+                    anyhow::bail!(
+                        "vet --fixtures: lint(s) {broken:?} did not fire exactly once on \
+                         their planted defect"
+                    );
+                }
+                anyhow::bail!(
+                    "vet --fixtures: {} finding(s) across {} planted-defect grids — \
+                     nonzero exit by design",
+                    planted,
+                    fixtures.len(),
+                );
+            }
+            let rungs: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+            if rungs.len() < 2 {
+                anyhow::bail!("vet needs at least two configs — usage: {USAGE}");
+            }
+            let plans = ladder_grid(&args, &rungs, steps, seed, schedule_from(&args), USAGE)?;
+            // The manifest is optional here: vet is symbolic, so it degrades
+            // to depth-suffix parsing when no artifacts are on disk.
+            let manifest = Manifest::load(&artifacts).ok();
+            let waive: Vec<String> = args
+                .get("waive")
+                .map(|l| l.split(',').map(|s| s.trim().to_string()).collect())
+                .unwrap_or_default();
+            let ctx = vet::VetContext {
+                manifest: manifest.as_ref(),
+                t_mix_steps: None,
+                waive: &waive,
+            };
+            let report = vet::vet_plans(&plans, &ctx)?;
+            print!("{}", report.render());
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, report.to_json().to_string() + "\n")?;
+            }
+            if !report.ok() {
+                anyhow::bail!("plan vet found contract errors (see report above)");
+            }
+            Ok(())
+        }
         cmd if cmd.starts_with("bench-") => {
             let workers = workers_from(&args)?;
             let store_dir = args.get("store-dir").map(std::path::PathBuf::from);
@@ -1080,6 +1203,16 @@ USAGE: repro <command> [args]   (flags: --name value or --name=value)
         [--budget N] [--sample N]       bare #[allow]s; --report writes JSON;
         [--src-dir D] [--golden D]      suppress lints only via inline
                                         `// audit:allow(<lint>): <reason>`
+  vet <cfg0> <cfg1> [<cfg2> ..]     symbolic pre-flight over a ladder grid:
+        [--taus F,F] [--strategies a,b] schedule shape, expansion timing,
+        [--transfer fixed|completep]    init/HP-transfer conformance, grid
+        [--report PATH]                 coherence — no engine, store, or
+        [--waive lint,lint]             socket; every execution entry point
+        [--fixtures]                    gates on the error-severity subset;
+                                        --report writes JSON (CI artifact);
+                                        --waive downgrades named lints;
+                                        --fixtures runs the seeded-violation
+                                        corpus and exits nonzero by design
   convex                            §4 convex-theory simulator
   expand-ckpt <src> <dst>           offline checkpoint depth expansion
   bench-fig1 .. bench-fig22         reproduce each paper figure
@@ -1102,6 +1235,8 @@ COMMON FLAGS
   --strategy random|copying|copying_inter|copying_last|zero|zero_n|zero_l
   --insertion bottom|top   --os inherit|copy|reset
   --tau N | --tau-frac F   --seed N   --eval-every N   --progress
+  --transfer fixed|completep   HP-transfer rule stamped on grid plans
+                     (arXiv:2505.01618; vet rejects grids mixing rules)
   --workers N        pool size for sweep/bench grids (default: all cores)
   --store-dir D      durable run cache for sweep/bench grids (crash-safe
                      journal; repeated invocations skip completed work)
@@ -1155,6 +1290,30 @@ mod tests {
         assert!(Args::parse_for(argv, &spec).is_ok());
         let argv = "diagnose a b --trce t.jsonl".split_whitespace().map(String::from);
         assert!(Args::parse_for(argv, &spec).unwrap_err().contains("unknown flag --trce"));
+    }
+
+    #[test]
+    fn vet_has_a_flag_vocabulary_and_transfer_parses_everywhere() {
+        let spec = spec_for("vet").unwrap();
+        let argv = "vet a b --taus 0.3,0.6 --strategies random,zero --transfer completep \
+                    --report r.json --waive zero-init --fixtures"
+            .split_whitespace()
+            .map(String::from);
+        assert!(Args::parse_for(argv, &spec).is_ok());
+        let argv = "vet a b --wave zero-init".split_whitespace().map(String::from);
+        assert!(Args::parse_for(argv, &spec).unwrap_err().contains("unknown flag --wave"));
+        // `--transfer` is part of every grid-launching vocabulary.
+        for cmd in ["sweep", "ladder", "serve", "chaos"] {
+            let spec = spec_for(cmd).unwrap();
+            let argv = format!("{cmd} a b --transfer fixed");
+            assert!(
+                Args::parse_for(argv.split_whitespace().map(String::from), &spec).is_ok(),
+                "{cmd} rejects --transfer"
+            );
+        }
+        assert!(transfer_from(&parsed("vet a b --transfer completep")).is_ok());
+        let err = transfer_from(&parsed("vet a b --transfer nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown transfer rule"), "{err:#}");
     }
 
     #[test]

@@ -775,7 +775,7 @@ fn write_tensor_list(f: &mut impl Write, tensors: &[Tensor]) -> Result<()> {
 }
 
 fn read_tensor_list(f: &mut impl Read) -> Result<Vec<Tensor>> {
-    let n = checkpoint::read_u64(f)? as usize;
+    let n = checkpoint::read_count(f)?;
     if n > 1 << 16 {
         bail!("implausible tensor count {n}");
     }

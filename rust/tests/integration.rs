@@ -3,7 +3,7 @@
 //! These require `make artifacts` to have run (they are skipped with a clear
 //! message otherwise, so `cargo test` stays green on a fresh checkout).
 
-use deep_progressive::coordinator::{recipe, RunBuilder, RunDriver, Sweep, Trainer};
+use deep_progressive::coordinator::{recipe, RunBuilder, RunDriver, Sweep, Trainer, TransferRule};
 use deep_progressive::data::{Corpus, CorpusConfig};
 use deep_progressive::expansion::{expand, CopyOrder, ExpandSpec, OsPolicy, Strategy};
 use deep_progressive::flops::flops_per_step;
@@ -499,10 +499,12 @@ fn interrupted_sweep_resumes_bit_identical_from_store() {
     let corpus = small_corpus();
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     let (total, tau) = (120, 40);
+    // A 1-layer source: the grid includes a Copying variant, which is
+    // Table-2-inapplicable to a 0-layer source (the plan vet rejects it).
     let prog = |name: &str, strategy: Strategy| {
         RunBuilder::progressive(
             name,
-            "gpt2.l0",
+            "gpt2.l1",
             "gpt2.l3",
             tau,
             total,
@@ -891,6 +893,7 @@ fn sigkilled_coordinator_resumes_bit_identical_with_reconnecting_workers() {
         taus: Some(vec![0.25, 0.5]),
         strategies: Some(vec!["random".into(), "zero".into()]),
         eval_every: Some(20),
+        transfer: TransferRule::Fixed,
     };
     let plans = recipe::ladder_grid(&spec).unwrap();
 
@@ -1061,7 +1064,9 @@ fn chaos_drill_suite_passes_on_a_small_grid() {
     let corpus = Corpus::generate(CorpusConfig::default());
     let sched = Schedule::Constant { peak: 0.01, warmup_frac: 0.02 };
     let spec = recipe::LadderGridSpec {
-        rungs: &["gpt2.l0", "gpt2.l3"],
+        // 1-layer base rung: the strategy list includes `copying`, which is
+        // Table-2-inapplicable to a 0-layer source (the plan vet rejects it).
+        rungs: &["gpt2.l1", "gpt2.l3"],
         steps: 80,
         seed: 17,
         sched,
@@ -1070,6 +1075,7 @@ fn chaos_drill_suite_passes_on_a_small_grid() {
         taus: Some(vec![0.3]),
         strategies: Some(vec!["random".into(), "zero".into(), "copying".into()]),
         eval_every: Some(20),
+        transfer: TransferRule::Fixed,
     };
     let plans = recipe::ladder_grid(&spec).unwrap();
     run_chaos(&m, &corpus, &plans, std::time::Duration::from_secs(240)).unwrap();
@@ -1354,4 +1360,100 @@ fn diagnostics_leave_curves_byte_equal_and_replay_bit_identical() {
     );
     assert_eq!(cold.results[0].layer_stats, on.layer_stats);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn planted_violation_grids_are_rejected_before_any_store_write_or_dispatch() {
+    // Acceptance (plan vet, DESIGN.md §13): a grid with a planted contract
+    // violation — τ = 0.95 puts the expansion boundary inside the WSD decay
+    // phase (Takeaway 6) — must be refused by `repro sweep`, `repro ladder`,
+    // and `repro serve` with a nonzero exit, a vet error naming the lint,
+    // ZERO store writes (the store directory is never even created), and
+    // zero dispatches (`serve` never binds its socket). The same grid with
+    // a stable-phase τ sails through `repro vet`.
+    use std::process::{Command, Stdio};
+    let Some(_m) = manifest() else { return };
+    let artifacts_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let scratch = std::env::temp_dir().join(format!("dpt_vet_gate_{}", std::process::id()));
+    std::fs::remove_dir_all(&scratch).ok();
+    std::fs::create_dir_all(&scratch).unwrap();
+
+    let run = |argv: &[&str], store: &std::path::Path| -> (bool, String, String) {
+        let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(argv)
+            .arg("--artifacts")
+            .arg(&artifacts_root)
+            .arg("--store-dir")
+            .arg(store)
+            .arg("--out")
+            .arg(scratch.join("csv"))
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .output()
+            .expect("spawning repro");
+        (
+            out.status.success(),
+            String::from_utf8_lossy(&out.stdout).into_owned(),
+            String::from_utf8_lossy(&out.stderr).into_owned(),
+        )
+    };
+
+    for (label, argv) in [
+        ("sweep", vec!["sweep", "gpt2.l0", "gpt2.l2", "--taus", "0.95", "--steps", "240"]),
+        ("ladder", vec!["ladder", "gpt2.l0", "gpt2.l2", "--taus", "0.95", "--steps", "240"]),
+        (
+            "serve",
+            vec![
+                "serve", "gpt2.l0", "gpt2.l2", "--taus", "0.95", "--steps", "240",
+                "--listen", "127.0.0.1:0", "--workers", "1",
+            ],
+        ),
+    ] {
+        let store = scratch.join(format!("store-{label}"));
+        let (ok, stdout, stderr) = run(&argv, &store);
+        assert!(!ok, "{label}: a planted-violation grid must exit nonzero\n{stdout}{stderr}");
+        assert!(
+            stderr.contains("plan vet found") && stderr.contains("boundary-in-decay"),
+            "{label}: rejection must come from the vet gate and name the lint:\n{stderr}"
+        );
+        assert!(
+            !store.exists(),
+            "{label}: the store must never be created for an unvetted grid"
+        );
+        if label == "serve" {
+            assert!(
+                !stdout.contains("listening"),
+                "serve must reject the grid before binding its socket:\n{stdout}"
+            );
+        }
+    }
+
+    // `repro vet` itself: the planted grid fails loudly with a report…
+    let report = scratch.join("vet-report.json");
+    let bad = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["vet", "gpt2.l0", "gpt2.l2", "--taus", "0.95", "--steps", "240"])
+        .arg("--artifacts")
+        .arg(&artifacts_root)
+        .arg("--report")
+        .arg(&report)
+        .output()
+        .expect("spawning repro vet");
+    assert!(!bad.status.success(), "vet must exit nonzero on the planted grid");
+    let text = String::from_utf8_lossy(&bad.stdout);
+    assert!(text.contains("boundary-in-decay") && text.contains("vet: FAIL"), "{text}");
+    let json = std::fs::read_to_string(&report).expect("vet --report file");
+    assert!(json.contains("boundary-in-decay"), "report missing the finding: {json}");
+
+    // …and the stable-phase version of the very same grid passes clean.
+    let good = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["vet", "gpt2.l0", "gpt2.l2", "--taus", "0.5", "--steps", "240"])
+        .arg("--artifacts")
+        .arg(&artifacts_root)
+        .output()
+        .expect("spawning repro vet");
+    let text = String::from_utf8_lossy(&good.stdout);
+    assert!(good.status.success(), "a clean grid must pass vet: {text}");
+    assert!(text.contains("vet: PASS"), "{text}");
+
+    std::fs::remove_dir_all(&scratch).ok();
 }

@@ -3,7 +3,7 @@
 //! detector monotonicity, JSON round-trips. No PJRT needed — these run on
 //! any checkout.
 
-use deep_progressive::coordinator::{RunBuilder, RunPlan, RunResult};
+use deep_progressive::coordinator::{LadderRound, RunBuilder, RunPlan, RunResult};
 use deep_progressive::data::{Batcher, Corpus, CorpusConfig};
 use deep_progressive::exec::{GroupSpec, JobGraph, JobKind};
 use deep_progressive::flops::FlopLedger;
@@ -98,6 +98,98 @@ fn prop_builder_accepts_iff_boundaries_strictly_increasing_inside_horizon() {
             // The plan is immutable and self-consistent: first_boundary is
             // either the first declared boundary or the horizon.
             assert_eq!(plan.first_boundary(), steps.first().copied().unwrap_or(total));
+        }
+    });
+}
+
+#[test]
+fn prop_rewarm_ladders_keep_lr_bounded_and_discontinuity_free() {
+    // Arbitrary multi-round re-warm ladders: `lr_at` never exceeds the
+    // schedule peak, each ramp climbs monotonically, its last step re-joins
+    // the base schedule (no discontinuity at the ramp edge), and every step
+    // outside a ramp IS the untouched base schedule.
+    proptest(200, |g| {
+        let total = g.usize(100..2000);
+        let peak = g.f32(1e-4, 0.1);
+        let decay_frac = g.f32(0.05, 0.4);
+        let sched = *g.choose(&[
+            Schedule::Wsd { peak, warmup_frac: 0.02, decay_frac },
+            Schedule::Constant { peak, warmup_frac: 0.02 },
+        ]);
+        let n_rounds = g.usize(1..4);
+        let mut bounds = Vec::new();
+        let mut lo = 1usize;
+        for i in 0..n_rounds {
+            // Leave one-step slack per remaining round so the sequence can
+            // stay strictly increasing inside the horizon.
+            let slack = n_rounds - 1 - i;
+            if lo >= total - slack {
+                break;
+            }
+            let b = g.usize(lo..total - slack);
+            bounds.push(b);
+            lo = b + 1;
+        }
+        let mut rounds = Vec::new();
+        let mut rewarms = Vec::new();
+        for (i, &b) in bounds.iter().enumerate() {
+            let stage_end = bounds.get(i + 1).copied().unwrap_or(total);
+            // The builder rejects ramps past the stage end; stay inside.
+            let rewarm = g.usize(0..stage_end - b + 1);
+            rewarms.push(rewarm);
+            rounds.push(
+                LadderRound::new(format!("l{}", i + 1), b, ExpandSpec::default())
+                    .rewarm(rewarm),
+            );
+        }
+        let plan = RunBuilder::ladder("prop-rewarm", "l0", &rounds, total, sched)
+            .build()
+            .expect("in-bounds re-warm ladders must build");
+
+        let in_ramp =
+            |t: usize| bounds.iter().zip(&rewarms).any(|(&b, &r)| t >= b && t < b + r);
+        for t in (0..total).step_by((total / 257).max(1)).chain([total - 1]) {
+            let lr = plan.lr_at(t);
+            assert!(
+                (0.0..=peak * (1.0 + 1e-5)).contains(&lr),
+                "lr {lr} out of [0, {peak}] at {t}/{total}"
+            );
+            if !in_ramp(t) {
+                // Outside every ramp the plan is exactly the base schedule.
+                assert_eq!(lr, sched.lr(t, total), "off-ramp divergence at {t}");
+            }
+        }
+        for (&b, &r) in bounds.iter().zip(&rewarms) {
+            if r == 0 {
+                continue;
+            }
+            let mut prev_frac = 0.0f32;
+            for k in 0..r {
+                let base = sched.lr(b + k, total);
+                let lr = plan.lr_at(b + k);
+                let want = base * (k + 1) as f32 / r as f32;
+                assert!(
+                    (lr - want).abs() <= want.abs() * 1e-5 + 1e-12,
+                    "ramp step {k}/{r} at {}: lr {lr} != {want}",
+                    b + k
+                );
+                if base > 0.0 {
+                    let frac = lr / base;
+                    assert!(frac >= prev_frac - 1e-6, "ramp not monotone at {}", b + k);
+                    prev_frac = frac;
+                }
+            }
+            // The final ramp step is the base schedule again: re-entry is
+            // continuous, with no jump where the ramp hands back to base.
+            let rejoin = plan.lr_at(b + r - 1);
+            let base = sched.lr(b + r - 1, total);
+            assert!(
+                (rejoin - base).abs() <= base.abs() * 1e-5 + 1e-12,
+                "ramp at {b} re-joins {rejoin}, base is {base}"
+            );
+            if b + r < total {
+                assert_eq!(plan.lr_at(b + r), sched.lr(b + r, total));
+            }
         }
     });
 }
